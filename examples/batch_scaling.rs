@@ -1,0 +1,65 @@
+//! Batch-scaling study (paper Fig. 1 workload): throughput of the
+//! service at N = 4096 as a function of client batch size, next to the
+//! M1 cost model's GPU-vs-vDSP curves.
+//!
+//! Demonstrates the batcher's role: small requests coalesce into full
+//! tiles, so service throughput stays near-flat while per-request
+//! latency absorbs the queueing delay — the serving-side mirror of the
+//! paper's "GPU needs batch >= 64" finding.
+//!
+//! ```sh
+//! cargo run --release --example batch_scaling
+//! ```
+
+use applefft::bench::table::Table;
+use applefft::coordinator::{FftService, ServiceConfig};
+use applefft::fft::Direction;
+use applefft::sim::report;
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use applefft::util::{fft_flops, gflops};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let svc = FftService::start(ServiceConfig::default())?;
+    let n = 4096usize;
+    println!("batch scaling at N={n}, backend {:?}", svc.engine().backend());
+
+    let model = report::fig1(&report::fig1_batches());
+    let mut table = Table::new(
+        "Fig. 1 — batch scaling at N=4096 (M1 model + this-testbed measurement)",
+        &["batch", "model GPU GFLOPS", "model vDSP GFLOPS", "winner", "testbed us/FFT"],
+    );
+
+    for &(batch, gpu, vdsp) in &model {
+        // Measure the service at this batch size (cap the biggest runs).
+        let measured = if batch <= 256 {
+            let mut rng = Rng::new(batch as u64);
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            svc.fft(n, Direction::Forward, x.clone(), batch)?; // warm
+            let t0 = Instant::now();
+            let _ = svc.fft(n, Direction::Forward, x, batch)?;
+            let dt = t0.elapsed().as_secs_f64();
+            let _ = gflops(fft_flops(n) * batch as f64, dt);
+            format!("{:.1}", dt / batch as f64 * 1e6)
+        } else {
+            "-".to_string()
+        };
+        table.row(&[
+            batch.to_string(),
+            format!("{gpu:.1}"),
+            format!("{vdsp:.1}"),
+            if gpu > vdsp { "GPU" } else { "vDSP" }.to_string(),
+            measured,
+        ]);
+    }
+    table.note("paper: vDSP wins <= 64, GPU saturates ~128 at ~138 GFLOPS");
+    table.print();
+
+    // Assert the paper's two qualitative findings hold in the model.
+    let at = |b: usize| model.iter().find(|p| p.0 == b).unwrap();
+    assert!(at(16).1 < at(16).2, "vDSP must win at small batch");
+    assert!(at(128).1 > at(128).2, "GPU must win at 128");
+    println!("batch_scaling OK");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Multi-size sweep (paper Table VII workload): run every supported FFT
+//! size through the service, validate numerics, and print measured
+//! wallclock next to the cost model's M1 prediction and the paper's
+//! reported numbers.
+//!
+//! ```sh
+//! cargo run --release --example multisize_sweep [--lines 64]
+//! ```
+
+use applefft::bench::table::Table;
+use applefft::cli::Args;
+use applefft::coordinator::{FftService, ServiceConfig};
+use applefft::fft::plan::NativePlanner;
+use applefft::fft::Direction;
+use applefft::sim::report;
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let lines = args.get_usize("lines", 64)?;
+    let svc = FftService::start(ServiceConfig::default())?;
+    let planner = NativePlanner::new();
+    println!("multisize sweep: {lines} lines/size, backend {:?}", svc.engine().backend());
+
+    let model = report::table7(256);
+    let mut table = Table::new(
+        "Multi-size FFT (measured on this testbed + M1 model vs paper Table VII)",
+        &["N", "Decomposition", "us/line (measured)", "model GFLOPS (M1)", "paper GFLOPS", "rel err vs oracle"],
+    );
+
+    for (n, label, row) in &model {
+        let mut rng = Rng::new(*n as u64);
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        // Warm the plan/executable, then measure.
+        svc.fft(*n, Direction::Forward, x.clone(), lines)?;
+        let t0 = Instant::now();
+        let y = svc.fft(*n, Direction::Forward, x.clone(), lines)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let want = planner.fft_batch(&x, *n, lines, Direction::Forward)?;
+        let err = y.rel_l2_error(&want);
+        anyhow::ensure!(err < 5e-4, "N={n}: rel err {err}");
+        table.row(&[
+            n.to_string(),
+            label.to_string(),
+            format!("{:.1}", dt / lines as f64 * 1e6),
+            format!("{:.1}", row.gflops),
+            format!("{:.1}", row.paper_gflops),
+            format!("{err:.1e}"),
+        ]);
+    }
+    table.note("measured column is this CPU testbed (PJRT or native backend), not an M1");
+    table.note("model column is the calibrated M1 cost model (rust/src/sim)");
+    table.print();
+    println!("multisize_sweep OK");
+    Ok(())
+}

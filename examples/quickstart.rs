@@ -1,0 +1,51 @@
+//! Quickstart: start the FFT service, transform a batch, verify against
+//! the oracle, print metrics.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Uses the PJRT artifacts when `make artifacts` has run, otherwise the
+//! native backend — the API is identical.
+
+use applefft::coordinator::{FftService, ServiceConfig};
+use applefft::fft::dft::dft_batch;
+use applefft::fft::Direction;
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Start the service (Auto = PJRT artifacts if present).
+    let svc = FftService::start(ServiceConfig::default())?;
+    println!("backend: {:?}, batch tile: {}", svc.engine().backend(), svc.batch_tile());
+
+    // 2. Make a batch of 4096-point lines (the paper's headline size).
+    let (n, lines) = (4096usize, 8usize);
+    let mut rng = Rng::new(1);
+    let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+
+    // 3. Forward FFT through the service (batched + padded internally).
+    let y = svc.fft(n, Direction::Forward, x.clone(), lines)?;
+
+    // 4. Check one line against the O(N^2) oracle.
+    let want = dft_batch(&x.slice(0, n), n, 1, Direction::Forward);
+    let err = y.slice(0, n).rel_l2_error(&want);
+    println!("line 0 vs naive DFT: rel L2 error = {err:.2e}");
+    assert!(err < 2e-4);
+
+    // 5. Inverse round trip.
+    let z = svc.fft(n, Direction::Inverse, y, lines)?;
+    let rt = z.rel_l2_error(&x);
+    println!("roundtrip rel L2 error = {rt:.2e}");
+    assert!(rt < 1e-4);
+
+    // 6. Show the plan the coordinator used (paper §IV-D rules).
+    let plan = svc.planner().plan(n, Direction::Forward)?;
+    println!("plan for N={n}: {:?}, passes={}", plan.decomposition, plan.passes());
+    let plan16k = svc.planner().plan(16384, Direction::Forward)?;
+    println!("plan for N=16384: {:?} (four-step, paper Eq. 8)", plan16k.decomposition);
+
+    println!("\nservice metrics:\n{}", svc.metrics().render());
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas FFT kernels and the pure-jnp reference oracle.
+
+All kernels operate on split-complex f32 arrays (re, im) of shape
+(batch, N) — vDSP's DSPSplitComplex layout, which is also the tensor
+format at the PJRT boundary. Kernels are lowered with interpret=True
+(CPU PJRT cannot run Mosaic custom-calls); the *structure* of each
+kernel — what is resident per block, how stages exchange data — encodes
+the paper's two-tier memory discipline (DESIGN.md §Hardware-Adaptation).
+"""
+
+from . import ref  # noqa: F401
+from .stockham import (  # noqa: F401
+    make_fft_kernel,
+    radix_schedule,
+    stockham_stages,
+)
+from .mma import make_mma_fft_kernel  # noqa: F401
+from .shuffle import make_shuffle_fft_kernel  # noqa: F401

@@ -1,0 +1,114 @@
+"""simdgroup_matrix-style MMA FFT kernel (paper §V-C).
+
+The radix-8 butterfly is computed as an 8x8 *matrix product* instead of
+the split-radix adder tree: with F8[j,k] = W_8^{jk} split into real and
+imaginary parts, a complex mat-vec decomposes into 4 real MMAs
+(paper Eqs. 5-6):
+
+    Y_re = F_re · X_re - F_im · X_im
+    Y_im = F_re · X_im + F_im · X_re
+
+On Apple GPU this targets simdgroup_float8x8; on TPU the analogous
+hardware is the MXU systolic array, which ``jnp.dot`` maps to — the
+8-wide butterfly axis becomes the contraction dimension and the
+batch*m*s axis is the (large) free dimension, exactly the "batched
+execution" regime the paper identifies as where MMA pays off.
+
+The data marshaling the paper describes (Stockham layout <-> MMA tile
+layout) is the pair of transposes around each ``jnp.dot`` below; the
+cost model in ``rust/src/sim/mma.rs`` accounts for it.
+
+FLOP accounting (paper §VII-C): the 4 real 8x8 MMAs cost 4*(2*8*8*8) =
+4096 FLOPs per 8 butterflies = 512 FLOPs/butterfly, vs ~150 for the
+split-radix tree — the ~3.4x arithmetic inflation the paper reports.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .stockham import cmul, radix_schedule, twiddle_chain, _stage
+
+
+def f8_matrices():
+    """Real/imag parts of the 8x8 DFT matrix, built from iota *inside*
+    the trace (pallas kernels may not capture premade constant arrays).
+    XLA constant-folds this at compile time, so the AOT artifact still
+    carries F8 as an immediate — like the Metal kernel's constant tile.
+    """
+    j = jax.lax.broadcasted_iota(jnp.float32, (8, 8), 0)
+    k = jax.lax.broadcasted_iota(jnp.float32, (8, 8), 1)
+    theta = (-2.0 * math.pi / 8.0) * j * k
+    return jnp.cos(theta), jnp.sin(theta)
+
+
+def _mma_stage(re, im, n: int, s: int):
+    """One radix-8 Stockham stage via 4 real 8x8 matmuls."""
+    batch = re.shape[0]
+    m = n // 8
+    fr, fi = f8_matrices()
+
+    # Marshal: Stockham layout (batch, 8, m, s) -> MMA operand (8, B*m*s).
+    xr = re.reshape(batch, 8, m, s).transpose(1, 0, 2, 3).reshape(8, -1)
+    xi = im.reshape(batch, 8, m, s).transpose(1, 0, 2, 3).reshape(8, -1)
+
+    # 4 real MMAs (Eqs. 5-6). preferred_element_type pins f32 accumulate.
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    yr = dot(fr, xr) - dot(fi, xi)
+    yi = dot(fr, xi) + dot(fi, xr)
+
+    # Marshal back: (8, batch, m, s) -> (batch, m, 8, s), twiddle, flatten.
+    yr = yr.reshape(8, batch, m, s).transpose(1, 2, 0, 3)
+    yi = yi.reshape(8, batch, m, s).transpose(1, 2, 0, 3)
+    wr, wi = twiddle_chain(n, m, 8)  # (8, m)
+    twr = wr.T[None, :, :, None]  # (1, m, 8, 1)
+    twi = wi.T[None, :, :, None]
+    yr, yi = cmul(yr, yi, twr, twi)
+    return yr.reshape(batch, n * s), yi.reshape(batch, n * s)
+
+
+def mma_stages(re, im, n_total: int):
+    """All stages: MMA for each radix-8 stage, scalar tail for 4/2."""
+    radices = radix_schedule(n_total, 8)
+    n, s = n_total, 1
+    for r in radices:
+        if r == 8:
+            re, im = _mma_stage(re, im, n, s)
+        else:
+            re, im = _stage(re, im, n, s, r)
+        n //= r
+        s *= r
+    return re, im
+
+
+def make_mma_fft_kernel(n: int, batch: int, *, tile: int = 8, interpret: bool = True):
+    """Pallas kernel: whole FFT with MMA radix-8 butterflies."""
+    tile = min(tile, batch)
+    assert batch % tile == 0
+
+    def kernel(xr_ref, xi_ref, or_ref, oi_ref):
+        re, im = mma_stages(xr_ref[...], xi_ref[...], n)
+        or_ref[...] = re
+        oi_ref[...] = im
+
+    block = pl.BlockSpec((tile, n), lambda i: (i, 0))
+    call = pl.pallas_call(
+        kernel,
+        grid=(batch // tile,),
+        in_specs=[block, block],
+        out_specs=[block, block],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, n), jnp.float32),
+            jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+
+    def fft(re, im):
+        return tuple(call(re, im))
+
+    return fft

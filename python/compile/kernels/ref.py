@@ -1,0 +1,71 @@
+"""Pure-jnp correctness oracle for the Pallas FFT kernels.
+
+Two references:
+
+* ``dft_ref`` — naive O(N^2) DFT as an explicit matrix product in
+  float64, the ground truth (mirrors ``rust/src/fft/dft.rs``).
+* ``fft_ref`` — ``jnp.fft.fft`` on complex64, used for larger sizes
+  where the O(N^2) oracle is too slow.
+
+Everything works on split-complex (re, im) f32 pairs, batch-major.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def to_complex(re, im):
+    """Split (re, im) -> complex64 array."""
+    return jnp.asarray(re, jnp.float32) + 1j * jnp.asarray(im, jnp.float32)
+
+
+def from_complex(z):
+    """Complex array -> split (re, im) f32 pair."""
+    return jnp.real(z).astype(jnp.float32), jnp.imag(z).astype(jnp.float32)
+
+
+def dft_matrix(n: int, inverse: bool = False) -> np.ndarray:
+    """The N x N DFT matrix W[j,k] = exp(-2πi jk / N) in complex128."""
+    j = np.arange(n)[:, None]
+    k = np.arange(n)[None, :]
+    sign = 2.0 if inverse else -2.0
+    return np.exp(sign * 1j * np.pi * (j * k % n) / n)
+
+
+def dft_ref(re, im, inverse: bool = False):
+    """Naive DFT over the last axis, computed in float64. Ground truth."""
+    x = np.asarray(re, np.float64) + 1j * np.asarray(im, np.float64)
+    n = x.shape[-1]
+    w = dft_matrix(n, inverse)
+    y = x @ w.T
+    if inverse:
+        y = y / n
+    return (
+        jnp.asarray(y.real, jnp.float32),
+        jnp.asarray(y.imag, jnp.float32),
+    )
+
+
+def fft_ref(re, im, inverse: bool = False):
+    """jnp.fft reference over the last axis (complex64)."""
+    z = to_complex(re, im)
+    y = jnp.fft.ifft(z, axis=-1) if inverse else jnp.fft.fft(z, axis=-1)
+    return from_complex(y)
+
+
+def rel_l2_error(got, want) -> float:
+    """Relative L2 error between two split-complex pairs."""
+    gr, gi = np.asarray(got[0], np.float64), np.asarray(got[1], np.float64)
+    wr, wi = np.asarray(want[0], np.float64), np.asarray(want[1], np.float64)
+    num = np.sqrt(np.sum((gr - wr) ** 2 + (gi - wi) ** 2))
+    den = np.sqrt(np.sum(wr**2 + wi**2))
+    if den == 0.0:
+        return 0.0 if num == 0.0 else float("inf")
+    return float(num / den)
+
+
+def random_signal(rng: np.random.Generator, shape):
+    """Uniform [-1, 1) split-complex test signal."""
+    re = rng.uniform(-1.0, 1.0, size=shape).astype(np.float32)
+    im = rng.uniform(-1.0, 1.0, size=shape).astype(np.float32)
+    return re, im

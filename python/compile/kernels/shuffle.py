@@ -1,0 +1,95 @@
+"""SIMD-shuffle-style FFT variant (paper §V-E) — the *negative* result.
+
+The paper's shuffle experiment computed radix-32 sub-FFTs with
+simd_shuffle, which forced the inter-SIMD-group exchange stages into
+*scattered* threadgroup access and lost 56% of throughput despite using
+fewer barriers.
+
+This kernel reproduces the structure: radix-2 stages implemented with
+explicit index gathers (``jnp.take``) instead of the gather-free
+reshape/stack dataflow of ``stockham.py``. Numerically identical — the
+point is the access pattern, which the cost model
+(``rust/src/sim/kernel.rs``) prices with the 3.2x scattered-bandwidth
+penalty of paper Table II.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _gather_stage_indices(n_total: int, n: int, s: int):
+    """Per-output gather indices + twiddles for one radix-2 stage.
+
+    For output j = q + s*(2p + k): a-index = q + s*p, b-index =
+    q + s*(p+m), and the k=1 lane is twisted by w = W_n^p. Built from
+    iota *inside* the trace (pallas kernels may not capture premade
+    constant arrays); XLA folds it all to constants at compile time.
+    """
+    m = n // 2
+    j = jax.lax.iota(jnp.int32, n_total)
+    q = j % s
+    t = j // s
+    k = t % 2
+    p = t // 2
+    idx_a = q + s * p
+    idx_b = q + s * (p + m)
+    theta = (-2.0 * math.pi / n) * p.astype(jnp.float32)
+    k_is_1 = k.astype(jnp.float32)
+    # w = 1 for k=0 lanes; cos/sin only matter where k=1 (blended later).
+    wr = jnp.cos(theta)
+    wi = jnp.sin(theta)
+    return idx_a, idx_b, wr, wi, k_is_1
+
+
+def shuffle_stages(re, im, n_total: int):
+    """All radix-2 stages via gathers (scattered access pattern)."""
+    n, s = n_total, 1
+    while n >= 2:
+        idx_a, idx_b, wr, wi, k1 = _gather_stage_indices(n_total, n, s)
+        ar = jnp.take(re, idx_a, axis=1)
+        ai = jnp.take(im, idx_a, axis=1)
+        br = jnp.take(re, idx_b, axis=1)
+        bi = jnp.take(im, idx_b, axis=1)
+        # k=0 lanes: a+b. k=1 lanes: (a-b)*w. Blend by the k mask.
+        sum_r, sum_i = ar + br, ai + bi
+        dif_r, dif_i = ar - br, ai - bi
+        tw_r = dif_r * wr - dif_i * wi
+        tw_i = dif_r * wi + dif_i * wr
+        re = sum_r * (1.0 - k1) + tw_r * k1
+        im = sum_i * (1.0 - k1) + tw_i * k1
+        n //= 2
+        s *= 2
+    return re, im
+
+
+def make_shuffle_fft_kernel(n: int, batch: int, *, tile: int = 8, interpret: bool = True):
+    """Pallas kernel: FFT with gather-based (scattered) radix-2 stages."""
+    tile = min(tile, batch)
+    assert batch % tile == 0
+
+    def kernel(xr_ref, xi_ref, or_ref, oi_ref):
+        re, im = shuffle_stages(xr_ref[...], xi_ref[...], n)
+        or_ref[...] = re
+        oi_ref[...] = im
+
+    block = pl.BlockSpec((tile, n), lambda i: (i, 0))
+    call = pl.pallas_call(
+        kernel,
+        grid=(batch // tile,),
+        in_specs=[block, block],
+        out_specs=[block, block],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, n), jnp.float32),
+            jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+
+    def fft(re, im):
+        return tuple(call(re, im))
+
+    return fft

@@ -1,0 +1,234 @@
+"""Pallas Stockham FFT kernels: radix-4 (paper §V-A) and radix-8
+split-radix DIT (paper §V-B, the 138.45 GFLOPS kernel).
+
+Two-tier discipline (DESIGN.md §Hardware-Adaptation): one ``pallas_call``
+is one "threadgroup dispatch". The whole N-point line (per batch tile) is
+resident in the kernel's block for *all* stages — the Tier-1
+register-file role — and inter-stage exchange is a gather-free reshape
+(the Tier-2 exchange role, sequential access only). The grid runs over
+batch tiles, so HBM traffic is exactly one read of the input block and
+one write of the output block, mirroring the paper's device-memory
+bypass: no intermediate result ever leaves the "threadgroup".
+
+Stage algebra (DIF Stockham, invariant ``n * s = N``):
+
+    y[b, q + s*(r*p + k)] = (DFT_r x[b, q + s*(p + j*m)])_k * W_n^{p*k}
+
+with ``m = n/r``. On a (batch, n, s) view this is pure slicing +
+stacking; no gathers, no bit reversal. Twiddles use the paper's
+single-sincos chain: w1 from one cos/sin pair, w_k = w_{k-1} * w1.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SQRT1_2 = math.sqrt(0.5)
+
+# --------------------------------------------------------------------------
+# Complex helpers on split (re, im) pairs.
+# --------------------------------------------------------------------------
+
+
+def cmul(ar, ai, br, bi):
+    """(ar + i*ai) * (br + i*bi) -> split pair."""
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+def twiddle_chain(n: int, m: int, r: int, dtype=jnp.float32):
+    """Twiddles w^{p*k} for p in [0, m), k in [0, r): the paper's
+    single-sincos chain. Returns (wr, wi), each shape (r, m).
+
+    One cos/sin evaluation produces w1; higher powers come from repeated
+    complex multiplication (w2 = w1*w1, ..., w7 = w6*w1). Because n is
+    static, XLA constant-folds the whole chain at compile time — the AOT
+    artifact carries the twiddles as constants, like the fully-unrolled
+    Metal kernel carries them in immediates/registers.
+    """
+    p = jnp.arange(m, dtype=dtype)
+    theta = (-2.0 * math.pi / n) * p
+    w1r, w1i = jnp.cos(theta), jnp.sin(theta)
+    wr = [jnp.ones_like(w1r), w1r]
+    wi = [jnp.zeros_like(w1i), w1i]
+    for _ in range(2, r):
+        nr, ni = cmul(wr[-1], wi[-1], w1r, w1i)
+        wr.append(nr)
+        wi.append(ni)
+    return jnp.stack(wr[:r]), jnp.stack(wi[:r])
+
+
+# --------------------------------------------------------------------------
+# Butterflies (split-complex, arbitrary leading shape).
+# --------------------------------------------------------------------------
+
+
+def dft4(ar, ai, br, bi, cr, ci, dr, di):
+    """4-point DFT, additions and ±i rotations only. Returns X0..X3."""
+    apc_r, apc_i = ar + cr, ai + ci
+    amc_r, amc_i = ar - cr, ai - ci
+    bpd_r, bpd_i = br + dr, bi + di
+    bmd_r, bmd_i = br - dr, bi - di
+    x0 = (apc_r + bpd_r, apc_i + bpd_i)
+    # amc - i*bmd:  re + bmd_i, im - bmd_r
+    x1 = (amc_r + bmd_i, amc_i - bmd_r)
+    x2 = (apc_r - bpd_r, apc_i - bpd_i)
+    x3 = (amc_r - bmd_i, amc_i + bmd_r)
+    return x0, x1, x2, x3
+
+
+def butterfly8(xs):
+    """8-point split-radix DIT butterfly (paper Eq. 4):
+    DFT_8 = radix-2(DFT_4^even, DFT_4^odd · W_8).
+
+    `xs` is a list of 8 split pairs; returns 8 split pairs X0..X7.
+    ~52 real additions + 12 real multiplications, vs ~320 FLOPs for the
+    naive 8x8 complex mat-vec (paper §V-B).
+    """
+    (x0r, x0i), (x1r, x1i), (x2r, x2i), (x3r, x3i) = xs[0], xs[1], xs[2], xs[3]
+    (x4r, x4i), (x5r, x5i), (x6r, x6i), (x7r, x7i) = xs[4], xs[5], xs[6], xs[7]
+
+    # Radix-2 split: sums (even branch) and differences (odd branch).
+    e0r, e0i = x0r + x4r, x0i + x4i
+    e1r, e1i = x1r + x5r, x1i + x5i
+    e2r, e2i = x2r + x6r, x2i + x6i
+    e3r, e3i = x3r + x7r, x3i + x7i
+    o0r, o0i = x0r - x4r, x0i - x4i
+    o1r, o1i = x1r - x5r, x1i - x5i
+    o2r, o2i = x2r - x6r, x2i - x6i
+    o3r, o3i = x3r - x7r, x3i - x7i
+
+    # Twist odd branch by W8^j (j = 1..3): only W8^1/W8^3 cost multiplies.
+    # W8^1 = (1 - i)/sqrt2: (a+bi)(1-i)/sqrt2 = ((a+b) + (b-a)i)/sqrt2
+    t1r = (o1r + o1i) * SQRT1_2
+    t1i = (o1i - o1r) * SQRT1_2
+    # W8^2 = -i
+    t2r, t2i = o2i, -o2r
+    # W8^3 = -(1 + i)/sqrt2: ((b-a) - (a+b)i)/sqrt2
+    t3r = (o3i - o3r) * SQRT1_2
+    t3i = -(o3r + o3i) * SQRT1_2
+
+    # DFT4 over evens -> X0, X2, X4, X6; over twisted odds -> X1,X3,X5,X7.
+    ex0, ex1, ex2, ex3 = dft4(e0r, e0i, e1r, e1i, e2r, e2i, e3r, e3i)
+    ox0, ox1, ox2, ox3 = dft4(o0r, o0i, t1r, t1i, t2r, t2i, t3r, t3i)
+    return [ex0, ox0, ex1, ox1, ex2, ox2, ex3, ox3]
+
+
+# --------------------------------------------------------------------------
+# Stockham stages on (batch, N) arrays.
+# --------------------------------------------------------------------------
+
+
+def radix_schedule(n: int, max_radix: int):
+    """Greedy per-stage radices, matching rust/src/fft/stockham.rs."""
+    assert n & (n - 1) == 0 and n >= 2, f"{n} must be a power of two"
+    assert max_radix in (2, 4, 8)
+    out = []
+    rem = n
+    while rem % max_radix == 0 and rem >= max_radix:
+        out.append(max_radix)
+        rem //= max_radix
+    while rem % 4 == 0 and rem >= 4:
+        out.append(4)
+        rem //= 4
+    if rem == 2:
+        out.append(2)
+        rem = 1
+    assert rem == 1
+    return out
+
+
+def _stage(re, im, n: int, s: int, r: int):
+    """One radix-r DIF Stockham stage on (batch, N) split arrays."""
+    batch = re.shape[0]
+    m = n // r
+    # (batch, r, m, s) view: axis 1 = block j, axis 2 = p, axis 3 = q.
+    xr = re.reshape(batch, r, m, s)
+    xi = im.reshape(batch, r, m, s)
+    blocks = [(xr[:, j], xi[:, j]) for j in range(r)]
+
+    if r == 2:
+        (ar, ai), (br, bi) = blocks
+        outs = [(ar + br, ai + bi), (ar - br, ai - bi)]
+    elif r == 4:
+        (ar, ai), (br, bi), (cr, ci), (dr, di) = blocks
+        outs = list(dft4(ar, ai, br, bi, cr, ci, dr, di))
+    elif r == 8:
+        outs = butterfly8(blocks)
+    else:
+        raise ValueError(f"unsupported radix {r}")
+
+    wr, wi = twiddle_chain(n, m, r)  # (r, m)
+    yr = []
+    yi = []
+    for k, (or_, oi_) in enumerate(outs):
+        if k == 0:
+            yr.append(or_)
+            yi.append(oi_)
+        else:
+            tr, ti = cmul(or_, oi_, wr[k][None, :, None], wi[k][None, :, None])
+            yr.append(tr)
+            yi.append(ti)
+    # Output layout (batch, m, r, s) -> flatten back to (batch, n*s).
+    # Gather-free: stack + reshape only (the "sequential access" property).
+    yr = jnp.stack(yr, axis=2).reshape(batch, n * s)
+    yi = jnp.stack(yi, axis=2).reshape(batch, n * s)
+    return yr, yi
+
+
+def stockham_stages(re, im, n_total: int, radices):
+    """Run all Stockham stages over (batch, N) split arrays."""
+    n, s = n_total, 1
+    for r in radices:
+        re, im = _stage(re, im, n, s, r)
+        n //= r
+        s *= r
+    return re, im
+
+
+# --------------------------------------------------------------------------
+# Pallas kernel factory.
+# --------------------------------------------------------------------------
+
+
+def make_fft_kernel(n: int, batch: int, *, max_radix: int = 8, tile: int = 8,
+                    interpret: bool = True):
+    """Build the single-"threadgroup" FFT as a pallas_call.
+
+    Returns a function (re, im) -> (re, im) over (batch, n) f32 arrays.
+    The grid runs over batch tiles; each kernel instance holds its
+    (tile, n) block resident for all stages (Tier-1 role). ``tile`` is
+    sized so the block fits a VMEM-like budget: 8 lines x 4096 pts x
+    8 B = 256 KiB.
+    """
+    tile = min(tile, batch)
+    assert batch % tile == 0, f"batch {batch} must be a multiple of tile {tile}"
+    radices = radix_schedule(n, max_radix)
+
+    def kernel(xr_ref, xi_ref, or_ref, oi_ref):
+        re = xr_ref[...]
+        im = xi_ref[...]
+        re, im = stockham_stages(re, im, n, radices)
+        or_ref[...] = re
+        oi_ref[...] = im
+
+    block = pl.BlockSpec((tile, n), lambda i: (i, 0))
+    call = pl.pallas_call(
+        kernel,
+        grid=(batch // tile,),
+        in_specs=[block, block],
+        out_specs=[block, block],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, n), jnp.float32),
+            jax.ShapeDtypeStruct((batch, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+
+    @functools.wraps(kernel)
+    def fft(re, im):
+        return tuple(call(re, im))
+
+    return fft

@@ -1,0 +1,185 @@
+"""Layer-2 JAX compute graphs over the L1 Pallas kernels.
+
+Each public factory returns ``(fn, example_args)`` where ``fn`` maps
+split-complex f32 arrays to split-complex f32 arrays and is ready for
+``jax.jit(fn).lower(*example_args)`` in ``aot.py``.
+
+Graphs implement the paper's §IV-D synthesis rules:
+
+* ``N <= 4096`` — single-"threadgroup" dispatch: one Pallas kernel holds
+  the whole line for all stages (rule 1).
+* ``4096 < N <= 16384`` — four-step decomposition (rule 2, Eq. 3):
+  column DFT of length N1 + twiddle, row FFTs of length N2 = 4096 via
+  the single-threadgroup kernel, then the stride permutation. N1 = 2
+  for 8192 (paper Eq. 7), N1 = 4 for 16384 (Eq. 8).
+
+Inverse transforms use the conjugation identity
+``ifft(x) = conj(fft(conj(x))) / N`` so forward kernels are reused
+verbatim (one compiled butterfly path to validate, as in the paper
+where all kernels are forward DIT).
+
+The fused range-compression graph (FFT -> matched filter -> IFFT) is
+the paper's §VII-D radar workload and its "future work" kernel fusion.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    make_fft_kernel,
+    make_mma_fft_kernel,
+    make_shuffle_fft_kernel,
+)
+
+#: The paper's single-threadgroup limit: B_max = 32 KiB / 8 B = 4096.
+B_MAX = 4096
+
+#: Default batch tile compiled into each artifact (the L3 batcher
+#: aggregates requests into multiples of this).
+DEFAULT_BATCH = 32
+
+#: Pallas block tile (lines per kernel instance): 8 x 4096 x 8 B = 256 KiB
+#: working set, the Tier-1 "register-resident" budget of DESIGN.md.
+DEFAULT_TILE = 8
+
+
+def _kernel_factory(variant: str):
+    if variant == "radix8":
+        return lambda n, b, tile: make_fft_kernel(n, b, max_radix=8, tile=tile)
+    if variant == "radix4":
+        return lambda n, b, tile: make_fft_kernel(n, b, max_radix=4, tile=tile)
+    if variant == "mma":
+        return lambda n, b, tile: make_mma_fft_kernel(n, b, tile=tile)
+    if variant == "shuffle":
+        return lambda n, b, tile: make_shuffle_fft_kernel(n, b, tile=tile)
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def fourstep_split(n: int):
+    """Paper §IV-B: N = N1 * N2 with N2 = B_max."""
+    assert n > B_MAX and n % B_MAX == 0
+    return n // B_MAX, B_MAX
+
+
+def _fourstep_twiddle(n1: int, n2: int):
+    """W_N^{k1*j2} as split (re, im), shape (n1, n2)."""
+    n = n1 * n2
+    k1 = jnp.arange(n1, dtype=jnp.float32)[:, None]
+    j2 = jnp.arange(n2, dtype=jnp.float32)[None, :]
+    theta = (-2.0 * math.pi / n) * k1 * j2
+    return jnp.cos(theta), jnp.sin(theta)
+
+
+def _column_dft(re, im, n1: int):
+    """Step 1: DFT of length n1 (2 or 4) over axis 1 of (batch, n1, n2)."""
+    if n1 == 2:
+        a_r, a_i = re[:, 0], im[:, 0]
+        b_r, b_i = re[:, 1], im[:, 1]
+        out_r = [a_r + b_r, a_r - b_r]
+        out_i = [a_i + b_i, a_i - b_i]
+    elif n1 == 4:
+        a_r, a_i = re[:, 0], im[:, 0]
+        b_r, b_i = re[:, 1], im[:, 1]
+        c_r, c_i = re[:, 2], im[:, 2]
+        d_r, d_i = re[:, 3], im[:, 3]
+        apc_r, apc_i = a_r + c_r, a_i + c_i
+        amc_r, amc_i = a_r - c_r, a_i - c_i
+        bpd_r, bpd_i = b_r + d_r, b_i + d_i
+        bmd_r, bmd_i = b_r - d_r, b_i - d_i
+        out_r = [apc_r + bpd_r, amc_r + bmd_i, apc_r - bpd_r, amc_r - bmd_i]
+        out_i = [apc_i + bpd_i, amc_i - bmd_r, apc_i - bpd_i, amc_i + bmd_r]
+    else:
+        raise ValueError(f"four-step n1={n1} unsupported (paper uses 2, 4)")
+    return jnp.stack(out_r, axis=1), jnp.stack(out_i, axis=1)
+
+
+def _forward_fft(n: int, batch: int, variant: str, tile: int):
+    """Forward FFT graph (batch, n) -> (batch, n), composing kernels."""
+    make = _kernel_factory(variant)
+    if n <= B_MAX:
+        kernel = make(n, batch, tile)
+
+        def fn(re, im):
+            return kernel(re, im)
+
+        return fn
+
+    n1, n2 = fourstep_split(n)
+    row_kernel = make(n2, batch * n1, tile)
+    twr, twi = None, None  # built inside fn so they live in the trace
+
+    def fn(re, im):
+        # (batch, n) -> (batch, n1, n2) matrix view, row-major.
+        re3 = re.reshape(batch, n1, n2)
+        im3 = im.reshape(batch, n1, n2)
+        # Step 1: column DFTs (length n1).
+        re3, im3 = _column_dft(re3, im3, n1)
+        # Step 2: twiddle W_N^{k1*j2}.
+        wr, wi = _fourstep_twiddle(n1, n2)
+        tr = re3 * wr[None] - im3 * wi[None]
+        ti = re3 * wi[None] + im3 * wr[None]
+        # Step 3: length-n2 FFTs along rows via the single-TG kernel.
+        rr, ri = row_kernel(tr.reshape(batch * n1, n2), ti.reshape(batch * n1, n2))
+        # Step 4: stride permutation X[k1 + n1*k2] = Z[k1, k2].
+        rr = rr.reshape(batch, n1, n2).transpose(0, 2, 1).reshape(batch, n)
+        ri = ri.reshape(batch, n1, n2).transpose(0, 2, 1).reshape(batch, n)
+        return rr, ri
+
+    return fn
+
+
+def fft_model(
+    n: int,
+    batch: int = DEFAULT_BATCH,
+    variant: str = "radix8",
+    direction: str = "fwd",
+    tile: int = DEFAULT_TILE,
+):
+    """Build the FFT graph. Returns (fn, example_args)."""
+    fwd = _forward_fft(n, batch, variant, tile)
+
+    if direction == "fwd":
+        fn = fwd
+    elif direction == "inv":
+
+        def fn(re, im):
+            yr, yi = fwd(re, -im)
+            scale = 1.0 / n
+            return yr * scale, -yi * scale
+
+    else:
+        raise ValueError(f"direction must be fwd|inv, got {direction!r}")
+
+    spec = jax.ShapeDtypeStruct((batch, n), jnp.float32)
+    return fn, (spec, spec)
+
+
+def rangecomp_model(
+    n: int = 4096,
+    batch: int = DEFAULT_BATCH,
+    variant: str = "radix8",
+    tile: int = DEFAULT_TILE,
+):
+    """Fused SAR range compression: Y = IFFT(FFT(x) * H) (paper §VII-D).
+
+    H is the frequency-domain matched filter, shape (n,), shared across
+    the batch of range lines. Returns (fn, example_args) with inputs
+    (xr, xi, hr, hi).
+    """
+    fwd = _forward_fft(n, batch, variant, tile)
+
+    def fn(xr, xi, hr, hi):
+        sr, si = fwd(xr, xi)
+        # Pointwise matched-filter multiply.
+        pr = sr * hr[None, :] - si * hi[None, :]
+        pi = sr * hi[None, :] + si * hr[None, :]
+        # Inverse via conjugation around the same forward kernel.
+        yr, yi = fwd(pr, -pi)
+        scale = 1.0 / n
+        return yr * scale, -yi * scale
+
+    line = jax.ShapeDtypeStruct((batch, n), jnp.float32)
+    filt = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return fn, (line, line, filt, filt)

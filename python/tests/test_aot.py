@@ -1,0 +1,75 @@
+"""AOT pipeline tests: lowering produces parseable HLO text and a
+manifest the Rust side can read."""
+
+import os
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_produces_hlo_module():
+    fn, args = model.fft_model(256, 8)
+    import jax
+
+    lowered = jax.jit(fn).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[8,256]" in text
+    # return_tuple=True: the root must be a tuple of the two outputs.
+    assert "(f32[8,256]" in text
+
+
+def test_artifact_list_covers_paper_sizes():
+    arts = aot.artifact_list(32)
+    names = [a[0] for a in arts]
+    for n in [256, 512, 1024, 2048, 4096, 8192, 16384]:
+        assert f"fft{n}_fwd" in names
+        assert f"fft{n}_inv" in names
+    for v in ["radix4", "mma", "shuffle"]:
+        assert f"fft4096_fwd_{v}" in names
+    assert "rangecomp4096" in names
+    assert len(arts) == 18
+
+
+def test_main_writes_selected_artifact_and_skips_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        aot.main(["--out", d, "--batch", "8", "--only", "fft256_fwd"])
+        assert os.path.exists(os.path.join(d, "fft256_fwd.hlo.txt"))
+        # --only must not clobber the manifest.
+        assert not os.path.exists(os.path.join(d, "manifest.txt"))
+
+
+def test_full_manifest_format():
+    """Emit two artifacts and check the manifest is in the line format
+    rust/src/config.rs parses."""
+    with tempfile.TemporaryDirectory() as d:
+        # Monkeypatch the artifact list down to two entries for speed.
+        full = aot.artifact_list(8)
+        small = [a for a in full if a[0] in ("fft256_fwd", "fft256_inv")]
+        orig = aot.artifact_list
+        aot.artifact_list = lambda batch: small
+        try:
+            aot.main(["--out", d, "--batch", "8"])
+        finally:
+            aot.artifact_list = orig
+        manifest = open(os.path.join(d, "manifest.txt")).read()
+        assert "version = 1" in manifest
+        assert "batch_tile = 8" in manifest
+        assert "[fft256_fwd]" in manifest
+        assert "direction = fwd" in manifest
+        assert "file = fft256_fwd.hlo.txt" in manifest
+
+
+@pytest.mark.parametrize("name", ["fft4096_fwd_mma", "fft4096_fwd_shuffle"])
+def test_variant_artifacts_lower(name):
+    arts = {a[0]: a for a in aot.artifact_list(8)}
+    _, build, meta = arts[name]
+    import jax
+
+    fn, args = build()
+    lowered = jax.jit(fn).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert meta["n"] == 4096

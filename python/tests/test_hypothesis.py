@@ -1,0 +1,80 @@
+"""Hypothesis sweeps over the Pallas kernels' shape/seed space
+(deliverable (c): hypothesis sweeps shapes/dtypes against ref)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import make_fft_kernel, ref
+from compile.kernels.stockham import radix_schedule, stockham_stages
+
+SIZES = st.sampled_from([16, 64, 128, 256, 512, 1024])
+MAX_RADIX = st.sampled_from([2, 4, 8])
+
+
+@settings(max_examples=20, deadline=None)
+@given(log2n=st.integers(4, 10), seed=st.integers(0, 2**31), mr=MAX_RADIX)
+def test_stage_algebra_matches_fft(log2n, seed, mr):
+    """The vectorized Stockham stage algebra (outside pallas, so it's
+    fast) over random sizes/radix mixes/seeds."""
+    n = 1 << log2n
+    rng = np.random.default_rng(seed)
+    re, im = ref.random_signal(rng, (2, n))
+    got = stockham_stages(re, im, n, radix_schedule(n, mr))
+    want = ref.fft_ref(re, im)
+    assert ref.rel_l2_error(got, want) < 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=SIZES, seed=st.integers(0, 2**31), mr=st.sampled_from([4, 8]))
+def test_pallas_kernel_random_shapes(n, seed, mr):
+    """Full pallas_call path over random sizes and seeds."""
+    rng = np.random.default_rng(seed)
+    batch = 8
+    re, im = ref.random_signal(rng, (batch, n))
+    got = make_fft_kernel(n, batch, max_radix=mr)(re, im)
+    want = ref.fft_ref(re, im)
+    assert ref.rel_l2_error(got, want) < 2e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31),
+    scale=st.floats(1e-3, 1e3),
+    n=st.sampled_from([64, 256]),
+)
+def test_kernel_scale_invariance(seed, scale, n):
+    """FFT(c*x) == c*FFT(x) across magnitudes (numerical robustness)."""
+    rng = np.random.default_rng(seed)
+    batch = 8
+    re, im = ref.random_signal(rng, (batch, n))
+    k = make_fft_kernel(n, batch)
+    yr, yi = k(re, im)
+    sr, si = k(re * np.float32(scale), im * np.float32(scale))
+    got = (np.asarray(sr) / scale, np.asarray(si) / scale)
+    assert ref.rel_l2_error(got, (yr, yi)) < 2e-4
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_kernel_handles_structured_signals(seed):
+    """Impulses, constants, and tones — degenerate inputs that expose
+    indexing bugs random noise can mask."""
+    n, batch = 256, 8
+    k = make_fft_kernel(n, batch)
+    rng = np.random.default_rng(seed)
+    re = np.zeros((batch, n), np.float32)
+    im = np.zeros((batch, n), np.float32)
+    # Row 0: impulse at random position; row 1: DC; row 2: pure tone.
+    pos = int(rng.integers(0, n))
+    tone = int(rng.integers(0, n))
+    re[0, pos] = 1.0
+    re[1, :] = 1.0
+    t = np.arange(n)
+    re[2] = np.cos(2 * np.pi * tone * t / n).astype(np.float32)
+    im[2] = np.sin(2 * np.pi * tone * t / n).astype(np.float32)
+    got = k(re, im)
+    want = ref.fft_ref(re, im)
+    assert ref.rel_l2_error(got, want) < 2e-4
+    # Tone concentrates in its bin.
+    mag = np.hypot(np.asarray(got[0][2]), np.asarray(got[1][2]))
+    assert np.argmax(mag) == tone

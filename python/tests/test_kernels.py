@@ -1,0 +1,138 @@
+"""L1 Pallas kernels vs the reference oracle — the core correctness
+signal of the build path ("all kernels are validated against vDSP
+reference outputs"; here the oracle plays vDSP's role)."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import (
+    make_fft_kernel,
+    make_mma_fft_kernel,
+    make_shuffle_fft_kernel,
+    radix_schedule,
+    ref,
+)
+from compile.kernels.stockham import stockham_stages, twiddle_chain
+
+SIZES = [16, 64, 256, 512, 1024, 2048, 4096]
+
+
+def _check(kernel_fn, n, batch, seed=0, tol=5e-4):
+    rng = np.random.default_rng(seed)
+    re, im = ref.random_signal(rng, (batch, n))
+    got = kernel_fn(re, im)
+    want = ref.fft_ref(re, im)
+    err = ref.rel_l2_error(got, want)
+    assert err < tol, f"n={n}: rel err {err}"
+    # Output must be two f32 arrays of the input shape.
+    assert got[0].shape == (batch, n) and str(got[0].dtype) == "float32"
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_radix8_kernel(n):
+    _check(make_fft_kernel(n, 8, max_radix=8), n, 8)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_radix4_kernel(n):
+    _check(make_fft_kernel(n, 8, max_radix=4), n, 8)
+
+
+@pytest.mark.parametrize("n", [64, 512, 4096])
+def test_mma_kernel(n):
+    _check(make_mma_fft_kernel(n, 8), n, 8)
+
+
+@pytest.mark.parametrize("n", [64, 256, 1024, 4096])
+def test_shuffle_kernel(n):
+    _check(make_shuffle_fft_kernel(n, 8), n, 8)
+
+
+def test_variants_agree_exactly_structured():
+    """All four variants compute the same transform (within fp noise)."""
+    n, batch = 512, 8
+    rng = np.random.default_rng(3)
+    re, im = ref.random_signal(rng, (batch, n))
+    outs = [
+        make_fft_kernel(n, batch, max_radix=8)(re, im),
+        make_fft_kernel(n, batch, max_radix=4)(re, im),
+        make_mma_fft_kernel(n, batch)(re, im),
+        make_shuffle_fft_kernel(n, batch)(re, im),
+    ]
+    for other in outs[1:]:
+        assert ref.rel_l2_error(other, outs[0]) < 1e-4
+
+
+def test_kernel_against_naive_dft():
+    """Direct check against the O(N^2) float64 ground truth."""
+    n, batch = 256, 4
+    rng = np.random.default_rng(4)
+    re, im = ref.random_signal(rng, (batch, n))
+    got = make_fft_kernel(n, batch)(re, im)
+    want = ref.dft_ref(re, im)
+    assert ref.rel_l2_error(got, want) < 1e-5
+
+
+def test_linearity():
+    n, batch = 128, 4
+    rng = np.random.default_rng(5)
+    k = make_fft_kernel(n, batch)
+    xr, xi = ref.random_signal(rng, (batch, n))
+    yr, yi = ref.random_signal(rng, (batch, n))
+    sum_out = k(xr + yr, xi + yi)
+    xa = k(xr, xi)
+    ya = k(yr, yi)
+    combined = (np.asarray(xa[0]) + np.asarray(ya[0]), np.asarray(xa[1]) + np.asarray(ya[1]))
+    assert ref.rel_l2_error(sum_out, combined) < 1e-5
+
+
+def test_batch_lines_independent():
+    """Each batch line transforms independently (no cross-tile leakage)."""
+    n, batch = 256, 16  # two grid tiles at tile=8
+    rng = np.random.default_rng(6)
+    re, im = ref.random_signal(rng, (batch, n))
+    k = make_fft_kernel(n, batch)
+    full = k(re, im)
+    k1 = make_fft_kernel(n, 8)
+    for half in range(2):
+        sl = slice(half * 8, (half + 1) * 8)
+        part = k1(re[sl], im[sl])
+        assert ref.rel_l2_error(part, (full[0][sl], full[1][sl])) < 1e-6
+
+
+def test_radix_schedule_properties():
+    for n in [2, 8, 64, 256, 4096]:
+        for mr in (2, 4, 8):
+            sched = radix_schedule(n, mr)
+            prod = 1
+            for r in sched:
+                prod *= r
+            assert prod == n
+            assert all(r in (2, 4, 8) for r in sched)
+    assert radix_schedule(4096, 8) == [8, 8, 8, 8]  # the paper's 4 passes
+    assert radix_schedule(4096, 4) == [4, 4, 4, 4, 4, 4]  # 6 passes
+
+
+def test_twiddle_chain_matches_direct():
+    n, m, r = 64, 8, 8
+    wr, wi = twiddle_chain(n, m, r)
+    p = np.arange(m)
+    for k in range(r):
+        want = np.exp(-2j * np.pi * p * k / n)
+        np.testing.assert_allclose(np.asarray(wr[k]), want.real, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(wi[k]), want.imag, atol=1e-5)
+
+
+def test_stockham_stages_outside_pallas():
+    """The stage algebra is kernel-independent; check it standalone."""
+    n, batch = 512, 2
+    rng = np.random.default_rng(8)
+    re, im = ref.random_signal(rng, (batch, n))
+    got = stockham_stages(re, im, n, radix_schedule(n, 8))
+    want = ref.fft_ref(re, im)
+    assert ref.rel_l2_error(got, want) < 1e-5
+
+
+def test_bad_batch_tile_rejected():
+    with pytest.raises(AssertionError):
+        make_fft_kernel(256, 12, tile=8)  # 12 % 8 != 0

@@ -1,0 +1,88 @@
+"""L2 graph tests: four-step composition, inverse, range compression."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("n", [8192, 16384])
+def test_fourstep_matches_fft(n):
+    rng = np.random.default_rng(n)
+    batch = 8
+    fn, _ = model.fft_model(n, batch)
+    re, im = ref.random_signal(rng, (batch, n))
+    got = fn(re, im)
+    want = ref.fft_ref(re, im)
+    assert ref.rel_l2_error(got, want) < 5e-4
+
+
+def test_fourstep_split_matches_paper():
+    assert model.fourstep_split(8192) == (2, 4096)  # paper Eq. 7
+    assert model.fourstep_split(16384) == (4, 4096)  # paper Eq. 8
+
+
+@pytest.mark.parametrize("n", [512, 4096, 8192])
+def test_inverse_roundtrip(n):
+    rng = np.random.default_rng(n + 1)
+    batch = 8
+    fwd, _ = model.fft_model(n, batch, direction="fwd")
+    inv, _ = model.fft_model(n, batch, direction="inv")
+    re, im = ref.random_signal(rng, (batch, n))
+    rr, ri = inv(*fwd(re, im))
+    assert ref.rel_l2_error((rr, ri), (re, im)) < 5e-4
+
+
+def test_inverse_matches_jnp_ifft():
+    rng = np.random.default_rng(3)
+    n, batch = 1024, 8
+    inv, _ = model.fft_model(n, batch, direction="inv")
+    re, im = ref.random_signal(rng, (batch, n))
+    got = inv(re, im)
+    want = ref.fft_ref(re, im, inverse=True)
+    assert ref.rel_l2_error(got, want) < 5e-4
+
+
+@pytest.mark.parametrize("variant", ["radix8", "radix4", "mma", "shuffle"])
+def test_all_variants_through_model(variant):
+    rng = np.random.default_rng(hash(variant) % 2**32)
+    n, batch = 1024, 8
+    fn, _ = model.fft_model(n, batch, variant=variant)
+    re, im = ref.random_signal(rng, (batch, n))
+    got = fn(re, im)
+    want = ref.fft_ref(re, im)
+    assert ref.rel_l2_error(got, want) < 5e-4
+
+
+def test_rangecomp_matches_explicit_composition():
+    rng = np.random.default_rng(5)
+    n, batch = 4096, 8
+    fn, _ = model.rangecomp_model(n, batch)
+    xr, xi = ref.random_signal(rng, (batch, n))
+    hr, hi = ref.random_signal(rng, (n,))
+    got = fn(xr, xi, hr, hi)
+    x = np.asarray(ref.to_complex(xr, xi))
+    h = np.asarray(ref.to_complex(hr, hi))
+    want_c = np.fft.ifft(np.fft.fft(x, axis=-1) * h[None, :], axis=-1)
+    want = (want_c.real.astype(np.float32), want_c.imag.astype(np.float32))
+    assert ref.rel_l2_error(got, want) < 5e-4
+
+
+def test_rangecomp_impulse_filter_is_identity_fft_pair():
+    # H = 1 -> rangecomp(x) == x.
+    rng = np.random.default_rng(6)
+    n, batch = 512, 8
+    fn, _ = model.rangecomp_model(n, batch)
+    xr, xi = ref.random_signal(rng, (batch, n))
+    hr = np.ones(n, np.float32)
+    hi = np.zeros(n, np.float32)
+    got = fn(xr, xi, hr, hi)
+    assert ref.rel_l2_error(got, (xr, xi)) < 5e-4
+
+
+def test_model_rejects_bad_args():
+    with pytest.raises(ValueError):
+        model.fft_model(1024, 8, direction="sideways")
+    with pytest.raises(ValueError):
+        model.fft_model(1024, 8, variant="radix7")

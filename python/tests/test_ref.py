@@ -1,0 +1,51 @@
+"""Sanity checks on the reference oracle itself."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+
+
+def test_dft_impulse():
+    re = np.zeros((1, 16), np.float32)
+    im = np.zeros((1, 16), np.float32)
+    re[0, 0] = 1.0
+    yr, yi = ref.dft_ref(re, im)
+    np.testing.assert_allclose(np.asarray(yr), np.ones((1, 16)), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(yi), np.zeros((1, 16)), atol=1e-6)
+
+
+def test_dft_single_tone():
+    n = 64
+    t = np.arange(n)
+    z = np.exp(2j * np.pi * 5 * t / n)
+    yr, yi = ref.dft_ref(z.real[None].astype(np.float32), z.imag[None].astype(np.float32))
+    mag = np.hypot(np.asarray(yr), np.asarray(yi))[0]
+    assert mag[5] == pytest.approx(n, rel=1e-5)
+    assert np.max(np.delete(mag, 5)) < 1e-3
+
+
+@pytest.mark.parametrize("n", [8, 64, 256])
+def test_dft_matches_jnp_fft(n):
+    rng = np.random.default_rng(n)
+    re, im = ref.random_signal(rng, (4, n))
+    a = ref.dft_ref(re, im)
+    b = ref.fft_ref(re, im)
+    assert ref.rel_l2_error(a, b) < 1e-5
+
+
+@pytest.mark.parametrize("inverse", [False, True])
+def test_dft_inverse_flag(inverse):
+    rng = np.random.default_rng(7)
+    re, im = ref.random_signal(rng, (2, 32))
+    y = ref.dft_ref(re, im, inverse=inverse)
+    z = ref.dft_ref(*y, inverse=not inverse)
+    assert ref.rel_l2_error(z, (re, im)) < 1e-5
+
+
+def test_rel_l2_error_edges():
+    z = (np.zeros((1, 4), np.float32), np.zeros((1, 4), np.float32))
+    assert ref.rel_l2_error(z, z) == 0.0
+    o = (np.ones((1, 4), np.float32), np.zeros((1, 4), np.float32))
+    assert ref.rel_l2_error(o, z) == float("inf")
+    assert ref.rel_l2_error(o, o) == 0.0

@@ -1,0 +1,78 @@
+//! Regenerates paper Fig. 1 — performance scaling with batch size at
+//! N=4096 — as an ASCII plot from the M1 model, and sweeps the real
+//! serving stack's throughput over client batch sizes on this testbed.
+
+use applefft::bench::table::Table;
+use applefft::bench::Benchmark;
+use applefft::coordinator::{FftService, ServiceConfig};
+use applefft::fft::Direction;
+use applefft::sim::report;
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use applefft::util::{fft_flops, gflops};
+
+fn ascii_plot(points: &[(usize, f64, f64)]) -> String {
+    let max = points
+        .iter()
+        .map(|p| p.1.max(p.2))
+        .fold(0.0f64, f64::max);
+    let width = 52usize;
+    let mut out = String::new();
+    out.push_str("  batch | GPU ('#') vs vDSP ('|')                        GFLOPS\n");
+    for &(b, gpu, vdsp) in points {
+        let g = ((gpu / max) * width as f64).round() as usize;
+        let v = ((vdsp / max) * width as f64).round() as usize;
+        let mut bar = vec![' '; width + 1];
+        for c in bar.iter_mut().take(g) {
+            *c = '#';
+        }
+        if v <= width {
+            bar[v] = '|';
+        }
+        out.push_str(&format!(
+            "  {:>5} | {} {:.1} (vDSP {:.1})\n",
+            b,
+            bar.iter().collect::<String>(),
+            gpu,
+            vdsp
+        ));
+    }
+    out
+}
+
+fn main() {
+    // ---- Model curve (paper-comparable). ----
+    let pts = report::fig1(&report::fig1_batches());
+    println!("\n== Fig. 1 — batch scaling at N=4096 (M1 model) ==");
+    println!("{}", ascii_plot(&pts));
+    let cross = pts.iter().find(|p| p.1 > p.2).map(|p| p.0).unwrap();
+    println!("  model crossover: GPU first beats vDSP at batch {cross} (paper: >64)");
+    let sat = pts.iter().find(|p| p.1 > 0.95 * pts.last().unwrap().1).map(|p| p.0).unwrap();
+    println!("  model saturation: within 5% of asymptote at batch {sat} (paper: ~128)\n");
+    assert!(cross > 64 && cross <= 128);
+    assert!(sat <= 256);
+
+    // ---- Live serving-stack sweep. ----
+    let svc = FftService::start(ServiceConfig::default()).expect("service");
+    let b = Benchmark::new("fig1");
+    let n = 4096usize;
+    let mut t = Table::new("Serving-stack batch sweep (this testbed)", &[
+        "client batch", "us/FFT", "GFLOPS (testbed)",
+    ]);
+    for batch in [1usize, 4, 16, 64, 256] {
+        let mut rng = Rng::new(batch as u64);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        svc.fft(n, Direction::Forward, x.clone(), batch).unwrap(); // warm
+        let m = b.run(&format!("batch {batch}"), || {
+            svc.fft(n, Direction::Forward, x.clone(), batch).unwrap()
+        });
+        t.row(&[
+            batch.to_string(),
+            format!("{:.1}", m.median_secs() / batch as f64 * 1e6),
+            format!("{:.2}", gflops(fft_flops(n) * batch as f64, m.median_secs())),
+        ]);
+    }
+    t.note("larger client batches amortize tile padding + dispatch, mirroring Fig. 1's shape");
+    t.print();
+    println!("fig1_batch bench OK");
+}

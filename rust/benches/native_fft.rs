@@ -1,0 +1,87 @@
+//! Native FFT library performance (the vDSP stand-in's own bench) plus
+//! the twiddle ablation: precomputed stage tables vs the paper's
+//! single-sincos chain — quantifying §V-A optimization 1 on CPU.
+//!
+//! Also the perf-pass workhorse: run with
+//! `cargo bench --bench native_fft` before/after hot-path changes.
+
+use applefft::bench::table::Table;
+use applefft::bench::Benchmark;
+use applefft::fft::plan::{NativePlan, NativePlanner, Variant};
+use applefft::fft::Direction;
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use applefft::util::{fft_flops, gflops};
+
+fn main() {
+    let b = Benchmark::new("native_fft");
+    let planner = NativePlanner::new();
+    let batch = 16usize;
+
+    // ---- Size sweep. ----
+    let mut t = Table::new("Native FFT (vDSP stand-in) — size sweep, batch 16", &[
+        "N", "us/FFT", "GFLOPS", "MFLOPs exec/fft",
+    ]);
+    for n in [256usize, 1024, 4096, 16384] {
+        let mut rng = Rng::new(n as u64);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let plan = planner.plan(n, Variant::Radix8).unwrap();
+        let m = b.run(&format!("radix8 n={n}"), || {
+            plan.execute_batch(&x, batch, Direction::Forward).unwrap()
+        });
+        t.row(&[
+            n.to_string(),
+            format!("{:.1}", m.median_secs() / batch as f64 * 1e6),
+            format!("{:.2}", gflops(fft_flops(n) * batch as f64, m.median_secs())),
+            format!("{:.3}", fft_flops(n) / 1e6),
+        ]);
+    }
+    t.print();
+
+    // ---- Ablation: twiddle tables vs sincos chain (paper §V-A opt 1). ----
+    let n = 4096usize;
+    let mut rng = Rng::new(99);
+    let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+    let with_tables = NativePlan::new(n, Variant::Radix8).unwrap();
+    let chain = NativePlan::new(n, Variant::Radix8).unwrap().without_tables();
+    let mt = b.run("twiddle tables", || {
+        with_tables.execute_batch(&x, batch, Direction::Forward).unwrap()
+    });
+    let mc = b.run("sincos chain", || {
+        chain.execute_batch(&x, batch, Direction::Forward).unwrap()
+    });
+
+    let mut t2 = Table::new("Ablation — twiddle strategy at N=4096 (this testbed)", &[
+        "strategy", "us/FFT", "speedup",
+    ]);
+    t2.row(&[
+        "precomputed stage tables".into(),
+        format!("{:.1}", mt.median_secs() / batch as f64 * 1e6),
+        format!("{:.2}x", mc.median_secs() / mt.median_secs()),
+    ]);
+    t2.row(&[
+        "single-sincos chain (paper §V-A)".into(),
+        format!("{:.1}", mc.median_secs() / batch as f64 * 1e6),
+        "1.00x".into(),
+    ]);
+    t2.note("the paper's chain trick targets GPU transcendental cost; on CPU, tables win");
+    t2.print();
+
+    // ---- Radix ablation. ----
+    let mut t3 = Table::new("Ablation — radix schedule at N=4096 (this testbed)", &[
+        "variant", "passes", "us/FFT",
+    ]);
+    for (variant, passes) in [(Variant::Radix4, 6), (Variant::Radix8, 4)] {
+        let plan = planner.plan(n, variant).unwrap();
+        let m = b.run(&format!("{variant:?}"), || {
+            plan.execute_batch(&x, batch, Direction::Forward).unwrap()
+        });
+        t3.row(&[
+            format!("{variant:?}"),
+            passes.to_string(),
+            format!("{:.1}", m.median_secs() / batch as f64 * 1e6),
+        ]);
+    }
+    t3.print();
+    println!("native_fft bench OK");
+}

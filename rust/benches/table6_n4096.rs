@@ -1,0 +1,103 @@
+//! Regenerates paper Table VI — the headline comparison at N=4096,
+//! batch 256 — from the calibrated M1 model, and *executes* all four
+//! kernel variants (radix-4/radix-8/MMA/shuffle artifacts + the native
+//! vDSP stand-in) on this testbed to verify they compute identical
+//! transforms while the model prices their M1 performance.
+
+use applefft::bench::table::Table;
+use applefft::bench::Benchmark;
+use applefft::fft::plan::NativePlanner;
+use applefft::fft::Direction;
+use applefft::runtime::{engine::artifacts_dir, Backend, Engine};
+use applefft::sim::{mma, report};
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use applefft::util::{fft_flops, gflops};
+
+fn main() {
+    let batch = 256;
+
+    // ---- The model table (paper-comparable numbers). ----
+    let mut t = Table::new("Table VI — Performance at N=4096, batch 256 (M1 model vs paper)", &[
+        "kernel", "GFLOPS", "us/FFT", "vs vDSP", "paper GFLOPS", "delta",
+    ]);
+    for r in report::table6(batch) {
+        let delta = (r.gflops - r.paper_gflops) / r.paper_gflops * 100.0;
+        t.row(&[
+            r.name.clone(),
+            format!("{:.2}", r.gflops),
+            format!("{:.2}", r.us_per_fft),
+            format!("{:.2}x", r.vs_vdsp),
+            format!("{:.2}", r.paper_gflops),
+            format!("{delta:+.1}%"),
+        ]);
+    }
+    t.note("calibration constants fitted on radix-4/radix-8 rows; the rest are predictions");
+    t.print();
+
+    let a = mma::analyze(&applefft::sim::config::M1, &applefft::sim::config::CalibConstants::default());
+    let mut tm = Table::new("§V-C — simdgroup_matrix MMA analysis", &["metric", "value", "paper"]);
+    tm.row_str(&["complex-via-real-MMA FLOP inflation", &format!("{:.1}x", a.flop_inflation), "~3.4x"]);
+    tm.row_str(&["MMA ALU-rate advantage", &format!("{:.2}x", a.rate_advantage), "~4x"]);
+    tm.row_str(&["net compute speedup", &format!("{:.2}x", a.net_compute_speedup), "~1.2x"]);
+    tm.row_str(&["single-FFT GFLOPS (marshaling)", &format!("{:.1}", a.single_fft_gflops), "loses to scalar"]);
+    tm.row_str(&["batched GFLOPS (no marshaling)", &format!("{:.1}", a.batched_gflops), "future work"]);
+    tm.print();
+
+    // ---- Real execution of every variant on this testbed. ----
+    let b = Benchmark::new("table6");
+    let (n, exec_batch) = (4096usize, 32usize);
+    let mut rng = Rng::new(6);
+    let x = SplitComplex { re: rng.signal(n * exec_batch), im: rng.signal(n * exec_batch) };
+    let planner = NativePlanner::new();
+
+    let mut t2 = Table::new("Variant execution on this testbed (correctness + wallclock)", &[
+        "path", "us/FFT", "GFLOPS (testbed)", "rel err vs oracle",
+    ]);
+    let want = planner.fft_batch(&x, n, exec_batch, Direction::Forward).unwrap();
+
+    // Native vDSP stand-in.
+    let m = b.run("native radix-8", || {
+        planner.fft_batch(&x, n, exec_batch, Direction::Forward).unwrap()
+    });
+    t2.row(&[
+        "native (vDSP stand-in)".into(),
+        format!("{:.1}", m.median_secs() / exec_batch as f64 * 1e6),
+        format!("{:.2}", gflops(fft_flops(n) * exec_batch as f64, m.median_secs())),
+        "0 (is oracle)".into(),
+    ]);
+
+    // PJRT artifacts, if built.
+    if artifacts_dir().join("manifest.txt").exists() {
+        let engine = Engine::start(Backend::Pjrt).expect("pjrt engine");
+        for (label, artifact) in [
+            ("PJRT radix-8 (fft4096_fwd)", "fft4096_fwd".to_string()),
+            ("PJRT radix-4", "fft4096_fwd_radix4".to_string()),
+            ("PJRT MMA", "fft4096_fwd_mma".to_string()),
+            ("PJRT shuffle", "fft4096_fwd_shuffle".to_string()),
+        ] {
+            let dims = vec![vec![exec_batch, n], vec![exec_batch, n]];
+            let run = || {
+                engine
+                    .execute_raw(&artifact, vec![x.re.clone(), x.im.clone()], dims.clone())
+                    .unwrap()
+            };
+            let out = run();
+            let got = SplitComplex { re: out[0].clone(), im: out[1].clone() };
+            let err = got.rel_l2_error(&want);
+            assert!(err < 5e-4, "{artifact}: {err}");
+            let m = b.run(label, run);
+            t2.row(&[
+                label.into(),
+                format!("{:.1}", m.median_secs() / exec_batch as f64 * 1e6),
+                format!("{:.2}", gflops(fft_flops(n) * exec_batch as f64, m.median_secs())),
+                format!("{err:.1e}"),
+            ]);
+        }
+    } else {
+        t2.note("PJRT rows skipped: run `make artifacts` first");
+    }
+    t2.note("testbed wallclock is a CPU; M1 performance is the model table above");
+    t2.print();
+    println!("table6_n4096 bench OK");
+}

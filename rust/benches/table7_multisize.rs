@@ -1,0 +1,69 @@
+//! Regenerates paper Table VII (multi-size performance) and Table V
+//! (multi-size kernel configuration), model + live execution of every
+//! size through the serving stack.
+
+use applefft::bench::table::Table;
+use applefft::bench::Benchmark;
+use applefft::coordinator::{FftService, Planner, ServiceConfig};
+use applefft::fft::Direction;
+use applefft::sim::report;
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use applefft::util::{fft_flops, gflops};
+
+fn main() {
+    // ---- Table V: kernel configurations. ----
+    let mut t5 = Table::new("Table V — Multi-size kernel configuration (radix-4 family)", &[
+        "N", "threads", "passes (radix-4)", "threadgroup mem",
+    ]);
+    for (n, threads, passes, tg) in Planner::table5() {
+        t5.row(&[
+            n.to_string(),
+            threads.to_string(),
+            passes,
+            applefft::util::human_bytes(tg),
+        ]);
+    }
+    t5.print();
+
+    // ---- Table VII: model vs paper. ----
+    let mut t7 = Table::new("Table VII — Multi-size results (M1 model vs paper, batch 256)", &[
+        "N", "decomposition", "GFLOPS", "us/FFT", "paper GFLOPS", "delta",
+    ]);
+    for (n, label, r) in report::table7(256) {
+        let delta = (r.gflops - r.paper_gflops) / r.paper_gflops * 100.0;
+        t7.row(&[
+            n.to_string(),
+            label.to_string(),
+            format!("{:.1}", r.gflops),
+            format!("{:.2}", r.us_per_fft),
+            format!("{:.1}", r.paper_gflops),
+            format!("{delta:+.1}%"),
+        ]);
+    }
+    t7.note("paper's own GFLOPS and us/FFT columns are mutually inconsistent at some sizes; we match GFLOPS (see EXPERIMENTS.md)");
+    t7.print();
+
+    // ---- Live multi-size sweep through the service. ----
+    let svc = FftService::start(ServiceConfig::default()).expect("service");
+    let b = Benchmark::new("table7");
+    let lines = 32usize;
+    let mut t = Table::new("Live sweep through the serving stack (this testbed)", &[
+        "N", "us/line", "GFLOPS (testbed)",
+    ]);
+    for n in [256usize, 512, 1024, 2048, 4096, 8192, 16384] {
+        let mut rng = Rng::new(n as u64);
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        svc.fft(n, Direction::Forward, x.clone(), lines).unwrap(); // warm
+        let m = b.run(&format!("fft{n}"), || {
+            svc.fft(n, Direction::Forward, x.clone(), lines).unwrap()
+        });
+        t.row(&[
+            n.to_string(),
+            format!("{:.1}", m.median_secs() / lines as f64 * 1e6),
+            format!("{:.2}", gflops(fft_flops(n) * lines as f64, m.median_secs())),
+        ]);
+    }
+    t.print();
+    println!("table7_multisize bench OK");
+}

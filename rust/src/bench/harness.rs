@@ -1,0 +1,122 @@
+//! Timed-iteration harness with paper-faithful defaults: 100 warmup and
+//! 1000 measured iterations (§VI-A), scaled down automatically for slow
+//! benchmarks so the full suite stays tractable on CPU.
+
+use crate::util::timer::{sample, Stats};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warmup iterations (paper: 100).
+    pub warmup: usize,
+    /// Measured iterations (paper: 1000).
+    pub iters: usize,
+    /// Budget in seconds; iterations are reduced to fit (min 10).
+    pub budget_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 100, iters: 1000, budget_secs: 2.0 }
+    }
+}
+
+impl BenchConfig {
+    /// Quick config for CI-style smoke runs.
+    pub fn quick() -> Self {
+        BenchConfig { warmup: 3, iters: 20, budget_secs: 0.5 }
+    }
+
+    /// Honour `APPLEFFT_BENCH_QUICK=1` for fast smoke runs of the whole
+    /// bench suite.
+    pub fn from_env() -> Self {
+        if std::env::var("APPLEFFT_BENCH_QUICK").ok().as_deref() == Some("1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    pub stats: Stats,
+    /// Iterations actually run after budget scaling.
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn median_secs(&self) -> f64 {
+        self.stats.median
+    }
+}
+
+/// A named group of benchmark cases.
+pub struct Benchmark {
+    name: String,
+    config: BenchConfig,
+}
+
+impl Benchmark {
+    pub fn new(name: &str) -> Self {
+        Benchmark { name: name.to_string(), config: BenchConfig::from_env() }
+    }
+
+    pub fn with_config(name: &str, config: BenchConfig) -> Self {
+        Benchmark { name: name.to_string(), config }
+    }
+
+    pub fn config(&self) -> BenchConfig {
+        self.config
+    }
+
+    /// Measure a closure: calibrate cost with one probe run, scale the
+    /// iteration count to the budget, then sample and report.
+    pub fn run<T>(&self, case: &str, mut f: impl FnMut() -> T) -> Measurement {
+        // Probe to estimate per-iteration cost.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let probe = t0.elapsed().as_secs_f64().max(1e-9);
+
+        let max_iters = (self.config.budget_secs / probe) as usize;
+        let iters = self.config.iters.min(max_iters).max(10);
+        let warmup = self.config.warmup.min(iters / 2).max(1);
+
+        let samples = sample(warmup, iters, &mut f);
+        let stats = Stats::from_sorted(&samples);
+        eprintln!(
+            "  [{}] {case}: median {:.3} us  p95 {:.3} us  (n={})",
+            self.name,
+            stats.median * 1e6,
+            stats.p95 * 1e6,
+            iters
+        );
+        Measurement { stats, iters }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_scaling_reduces_iters() {
+        let b = Benchmark::with_config(
+            "t",
+            BenchConfig { warmup: 100, iters: 1000, budget_secs: 0.05 },
+        );
+        let m = b.run("sleepy", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(m.iters < 1000, "iters={}", m.iters);
+        assert!(m.iters >= 10);
+    }
+
+    #[test]
+    fn fast_case_runs_full_iters() {
+        let b = Benchmark::with_config(
+            "t",
+            BenchConfig { warmup: 5, iters: 50, budget_secs: 5.0 },
+        );
+        let m = b.run("fast", || std::hint::black_box(1 + 1));
+        assert_eq!(m.iters, 50);
+    }
+}

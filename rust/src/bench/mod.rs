@@ -1,0 +1,12 @@
+//! Benchmark harness (criterion substitute for the offline environment).
+//!
+//! Mirrors the paper's methodology (§VI-A): each benchmark runs a warmup
+//! phase then many timed iterations and reports the **median**. Results
+//! are printed as aligned tables so each `rust/benches/*.rs` regenerates
+//! the corresponding paper table/figure.
+
+pub mod harness;
+pub mod table;
+
+pub use harness::{BenchConfig, Benchmark, Measurement};
+pub use table::Table;

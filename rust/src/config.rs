@@ -1,0 +1,170 @@
+//! Line-based configuration / manifest format (the offline environment
+//! has no `serde`). Format:
+//!
+//! ```text
+//! # comment
+//! [section]
+//! key = value
+//! ```
+//!
+//! Used for service config files and for the artifact manifest emitted by
+//! `python/compile/aot.py` (`artifacts/manifest.txt`), where each section
+//! describes one compiled executable.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One `[section]` with its key/value pairs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Section {
+    pub name: String,
+    pub entries: BTreeMap<String, String>,
+}
+
+impl Section {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .with_context(|| format!("section [{}] missing key {key:?}", self.name))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.require(key)?
+            .parse()
+            .with_context(|| format!("[{}] {key} not an integer", self.name))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        self.require(key)?
+            .parse()
+            .with_context(|| format!("[{}] {key} not a float", self.name))
+    }
+}
+
+/// Parsed config document: preamble (keys before any section) + sections
+/// in file order.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    pub preamble: Section,
+    pub sections: Vec<Section>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Document> {
+        let mut doc = Document::default();
+        let mut current: Option<Section> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                if let Some(sec) = current.take() {
+                    doc.sections.push(sec);
+                }
+                current = Some(Section { name: name.trim().to_string(), entries: BTreeMap::new() });
+            } else if let Some((k, v)) = line.split_once('=') {
+                let (k, v) = (k.trim().to_string(), v.trim().to_string());
+                match &mut current {
+                    Some(sec) => sec.entries.insert(k, v),
+                    None => doc.preamble.entries.insert(k, v),
+                };
+            } else {
+                bail!("line {}: expected `key = value` or `[section]`, got {line:?}", lineno + 1);
+            }
+        }
+        if let Some(sec) = current.take() {
+            doc.sections.push(sec);
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &Path) -> Result<Document> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.iter().find(|s| s.name == name)
+    }
+
+    /// Serialise back to text (round-trip formatting).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.preamble.entries {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        for sec in &self.sections {
+            out.push_str(&format!("\n[{}]\n", sec.name));
+            for (k, v) in &sec.entries {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# artifact manifest
+version = 1
+
+[fft4096_fwd]
+n = 4096
+batch_tile = 32
+variant = radix8
+file = fft4096_fwd.hlo.txt
+
+[fft8192_fwd]
+n = 8192
+batch_tile = 32
+variant = fourstep
+file = fft8192_fwd.hlo.txt
+";
+
+    #[test]
+    fn parse_sample() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        assert_eq!(doc.preamble.get("version"), Some("1"));
+        assert_eq!(doc.sections.len(), 2);
+        let s = doc.section("fft4096_fwd").unwrap();
+        assert_eq!(s.get_usize("n").unwrap(), 4096);
+        assert_eq!(s.get("variant"), Some("radix8"));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        let doc2 = Document::parse(&doc.to_text()).unwrap();
+        assert_eq!(doc, doc2);
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        assert!(doc.section("fft4096_fwd").unwrap().require("nope").is_err());
+    }
+
+    #[test]
+    fn bad_line_is_error() {
+        assert!(Document::parse("not a kv line").is_err());
+        assert!(Document::parse("[unterminated").is_err());
+    }
+
+    #[test]
+    fn empty_ok() {
+        let doc = Document::parse("\n# only comments\n").unwrap();
+        assert!(doc.sections.is_empty());
+    }
+}

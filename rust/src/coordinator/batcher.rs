@@ -1,0 +1,459 @@
+//! Dynamic batcher: aggregates request lines into artifact-sized tiles.
+//!
+//! The paper's Fig. 1 is the policy rationale: the GPU needs batch >= 64
+//! in flight to beat vDSP, so the service trades a bounded queueing
+//! delay (`max_wait`) for tile occupancy. Tiles are always exactly
+//! `batch_tile` lines (the shape the HLO artifact was specialised for);
+//! partial tiles are zero-padded and the padding is stripped on reply.
+//!
+//! A request's lines may span several tiles; an [`Accumulator`] gathers
+//! the transformed lines and replies exactly once, when complete.
+
+use super::metrics::Metrics;
+use super::request::{FftRequest, FftResponse};
+use crate::fft::Direction;
+use crate::runtime::Registry;
+use crate::util::complex::SplitComplex;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-request response accumulator, shared by all tiles that carry a
+/// piece of the request.
+pub struct Accumulator {
+    inner: Mutex<AccumulatorInner>,
+}
+
+struct AccumulatorInner {
+    id: u64,
+    n: usize,
+    total_lines: usize,
+    filled_lines: usize,
+    out: SplitComplex,
+    reply: std::sync::mpsc::Sender<FftResponse>,
+    submitted_at: Instant,
+    first_dispatch: Option<Instant>,
+    exec_secs: f64,
+    failed: Option<String>,
+    responded: bool,
+}
+
+impl Accumulator {
+    pub fn new(req: &FftRequest) -> Arc<Accumulator> {
+        Arc::new(Accumulator {
+            inner: Mutex::new(AccumulatorInner {
+                id: req.id,
+                n: req.n,
+                total_lines: req.lines,
+                filled_lines: 0,
+                out: SplitComplex::zeros(req.n * req.lines),
+                reply: req.reply.clone(),
+                submitted_at: req.submitted_at,
+                first_dispatch: None,
+                exec_secs: 0.0,
+                failed: None,
+                responded: false,
+            }),
+        })
+    }
+
+    /// Record `count` transformed lines starting at request line
+    /// `dst_line`, taken from `src` starting at line `src_line`.
+    /// Sends the response if the request is now complete.
+    pub fn fill(
+        &self,
+        src: &SplitComplex,
+        src_line: usize,
+        dst_line: usize,
+        count: usize,
+        exec_secs: f64,
+    ) {
+        let mut a = self.inner.lock().unwrap();
+        let n = a.n;
+        for l in 0..count {
+            let s = (src_line + l) * n;
+            let d = (dst_line + l) * n;
+            a.out.re[d..d + n].copy_from_slice(&src.re[s..s + n]);
+            a.out.im[d..d + n].copy_from_slice(&src.im[s..s + n]);
+        }
+        a.filled_lines += count;
+        a.exec_secs = a.exec_secs.max(exec_secs);
+        a.maybe_respond();
+    }
+
+    /// Mark the dispatch instant (queue latency endpoint).
+    pub fn dispatched(&self) {
+        let mut a = self.inner.lock().unwrap();
+        if a.first_dispatch.is_none() {
+            a.first_dispatch = Some(Instant::now());
+        }
+    }
+
+    /// Fail the whole request (engine error on any carrying tile).
+    pub fn fail(&self, message: &str) {
+        let mut a = self.inner.lock().unwrap();
+        a.failed = Some(message.to_string());
+        a.filled_lines = a.total_lines;
+        a.maybe_respond();
+    }
+
+    pub fn queue_secs(&self) -> f64 {
+        let a = self.inner.lock().unwrap();
+        match a.first_dispatch {
+            Some(t) => (t - a.submitted_at).as_secs_f64(),
+            None => 0.0,
+        }
+    }
+}
+
+impl AccumulatorInner {
+    fn maybe_respond(&mut self) {
+        if self.responded || self.filled_lines < self.total_lines {
+            return;
+        }
+        self.responded = true;
+        let queue_secs = self
+            .first_dispatch
+            .map(|t| (t - self.submitted_at).as_secs_f64())
+            .unwrap_or(0.0);
+        let result = match self.failed.take() {
+            Some(msg) => Err(msg),
+            None => Ok(std::mem::take(&mut self.out)),
+        };
+        // Receiver may have hung up; that's the client's business.
+        let _ = self.reply.send(FftResponse {
+            id: self.id,
+            result,
+            queue_secs,
+            exec_secs: self.exec_secs,
+        });
+    }
+}
+
+/// A slice of a tile belonging to one request.
+pub struct Segment {
+    pub acc: Arc<Accumulator>,
+    /// Line offset within the tile.
+    pub tile_line: usize,
+    /// Line offset within the request.
+    pub request_line: usize,
+    pub count: usize,
+}
+
+/// A dispatch-ready unit: exactly `batch_tile` lines for one artifact.
+pub struct Tile {
+    pub artifact: String,
+    pub n: usize,
+    pub direction: Direction,
+    pub batch: usize,
+    pub data: SplitComplex,
+    pub segments: Vec<Segment>,
+    pub padded_lines: usize,
+}
+
+/// A queued request fragment waiting to be tiled.
+struct Pending {
+    acc: Arc<Accumulator>,
+    data: SplitComplex,
+    /// Next unconsumed line within `data`.
+    cursor: usize,
+    lines: usize,
+    enqueued_at: Instant,
+}
+
+/// Per-(n, direction) line queue with tile assembly.
+pub struct Queue {
+    n: usize,
+    direction: Direction,
+    batch_tile: usize,
+    pending: Vec<Pending>,
+    queued_lines: usize,
+}
+
+impl Queue {
+    pub fn new(n: usize, direction: Direction, batch_tile: usize) -> Queue {
+        Queue { n, direction, batch_tile, pending: Vec::new(), queued_lines: 0 }
+    }
+
+    pub fn push(&mut self, req: &FftRequest, acc: Arc<Accumulator>) {
+        debug_assert_eq!(req.n, self.n);
+        self.queued_lines += req.lines;
+        self.pending.push(Pending {
+            acc,
+            data: req.data.clone(),
+            cursor: 0,
+            lines: req.lines,
+            enqueued_at: req.submitted_at,
+        });
+    }
+
+    pub fn queued_lines(&self) -> usize {
+        self.queued_lines
+    }
+
+    /// Instant of the oldest queued fragment (deadline basis).
+    pub fn oldest(&self) -> Option<Instant> {
+        self.pending.first().map(|p| p.enqueued_at)
+    }
+
+    /// Build one tile if the policy says so: `force` (deadline expired)
+    /// or a full tile's worth of lines queued.
+    pub fn pop_tile(&mut self, force: bool) -> Option<Tile> {
+        if self.queued_lines == 0 {
+            return None;
+        }
+        if !force && self.queued_lines < self.batch_tile {
+            return None;
+        }
+        let n = self.n;
+        let mut data = SplitComplex::zeros(self.batch_tile * n);
+        let mut segments = Vec::new();
+        let mut tile_line = 0;
+
+        while tile_line < self.batch_tile && !self.pending.is_empty() {
+            let p = &mut self.pending[0];
+            let take = (p.lines - p.cursor).min(self.batch_tile - tile_line);
+            let src = p.cursor * n;
+            let dst = tile_line * n;
+            data.re[dst..dst + take * n].copy_from_slice(&p.data.re[src..src + take * n]);
+            data.im[dst..dst + take * n].copy_from_slice(&p.data.im[src..src + take * n]);
+            segments.push(Segment {
+                acc: p.acc.clone(),
+                tile_line,
+                request_line: p.cursor,
+                count: take,
+            });
+            p.cursor += take;
+            tile_line += take;
+            self.queued_lines -= take;
+            if p.cursor == p.lines {
+                self.pending.remove(0);
+            }
+        }
+
+        let padded = self.batch_tile - tile_line;
+        for seg in &segments {
+            seg.acc.dispatched();
+        }
+        Some(Tile {
+            artifact: Registry::fft_name(n, self.direction),
+            n,
+            direction: self.direction,
+            batch: self.batch_tile,
+            data,
+            segments,
+            padded_lines: padded,
+        })
+    }
+}
+
+/// The batcher thread state: one [`Queue`] per (n, direction).
+pub struct Batcher {
+    queues: HashMap<(usize, Direction), Queue>,
+    batch_tile: usize,
+    max_wait: Duration,
+    metrics: Arc<Metrics>,
+}
+
+impl Batcher {
+    pub fn new(batch_tile: usize, max_wait: Duration, metrics: Arc<Metrics>) -> Batcher {
+        Batcher { queues: HashMap::new(), batch_tile, max_wait, metrics }
+    }
+
+    /// Admit a request; returns tiles that became ready (full tiles
+    /// flush eagerly).
+    pub fn admit(&mut self, req: &FftRequest) -> Vec<Tile> {
+        let acc = Accumulator::new(req);
+        let key = (req.n, req.direction);
+        let queue = self
+            .queues
+            .entry(key)
+            .or_insert_with(|| Queue::new(req.n, req.direction, self.batch_tile));
+        queue.push(req, acc);
+        self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics
+            .lines_in
+            .fetch_add(req.lines as u64, std::sync::atomic::Ordering::Relaxed);
+        let mut tiles = Vec::new();
+        while let Some(t) = queue.pop_tile(false) {
+            tiles.push(t);
+        }
+        tiles
+    }
+
+    /// Flush queues whose oldest entry exceeded `max_wait` (or all, when
+    /// `drain` is set). Returns tiles to dispatch.
+    pub fn flush_expired(&mut self, drain: bool) -> Vec<Tile> {
+        let now = Instant::now();
+        let mut tiles = Vec::new();
+        for queue in self.queues.values_mut() {
+            let expired = queue
+                .oldest()
+                .map(|t| now.duration_since(t) >= self.max_wait)
+                .unwrap_or(false);
+            if drain || expired {
+                while let Some(t) = queue.pop_tile(true) {
+                    tiles.push(t);
+                }
+            }
+        }
+        tiles
+    }
+
+    /// Soonest deadline across queues, for the event-loop timeout.
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.oldest())
+            .min()
+            .map(|t| t + self.max_wait)
+    }
+
+    pub fn queued_lines(&self) -> usize {
+        self.queues.values().map(|q| q.queued_lines()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn request(
+        id: u64,
+        n: usize,
+        lines: usize,
+        seed: u64,
+    ) -> (FftRequest, mpsc::Receiver<FftResponse>) {
+        let (tx, rx) = mpsc::channel();
+        let mut rng = crate::util::rng::Rng::new(seed);
+        (
+            FftRequest {
+                id,
+                n,
+                direction: Direction::Forward,
+                data: SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) },
+                lines,
+                submitted_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    fn batcher(tile: usize) -> Batcher {
+        Batcher::new(tile, Duration::from_millis(1), Arc::new(Metrics::default()))
+    }
+
+    #[test]
+    fn full_tile_flushes_eagerly() {
+        let mut b = batcher(8);
+        let (req, _rx) = request(1, 256, 8, 1);
+        let tiles = b.admit(&req);
+        assert_eq!(tiles.len(), 1);
+        assert_eq!(tiles[0].padded_lines, 0);
+        assert_eq!(b.queued_lines(), 0);
+    }
+
+    #[test]
+    fn partial_waits_then_pads() {
+        let mut b = batcher(8);
+        let (req, _rx) = request(1, 256, 5, 2);
+        assert!(b.admit(&req).is_empty());
+        assert_eq!(b.queued_lines(), 5);
+        let tiles = b.flush_expired(true);
+        assert_eq!(tiles.len(), 1);
+        assert_eq!(tiles[0].padded_lines, 3);
+        // Padding is zero-filled.
+        let t = &tiles[0];
+        for i in 5 * 256..8 * 256 {
+            assert_eq!(t.data.re[i], 0.0);
+            assert_eq!(t.data.im[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn large_request_spans_tiles() {
+        let mut b = batcher(8);
+        let (req, _rx) = request(1, 256, 20, 3);
+        let tiles = b.admit(&req);
+        assert_eq!(tiles.len(), 2, "two full tiles immediately");
+        assert_eq!(b.queued_lines(), 4);
+        let rest = b.flush_expired(true);
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].padded_lines, 4);
+    }
+
+    #[test]
+    fn coalesces_multiple_requests() {
+        let mut b = batcher(8);
+        let (r1, _rx1) = request(1, 256, 3, 4);
+        let (r2, _rx2) = request(2, 256, 5, 5);
+        assert!(b.admit(&r1).is_empty());
+        let tiles = b.admit(&r2);
+        assert_eq!(tiles.len(), 1);
+        let t = &tiles[0];
+        assert_eq!(t.segments.len(), 2);
+        assert_eq!(t.segments[0].count, 3);
+        assert_eq!(t.segments[1].tile_line, 3);
+        assert_eq!(t.segments[1].count, 5);
+        // Data placed in admission order.
+        assert_eq!(&t.data.re[..3 * 256], &r1.data.re[..]);
+        assert_eq!(&t.data.re[3 * 256..8 * 256], &r2.data.re[..]);
+    }
+
+    #[test]
+    fn different_sizes_do_not_mix() {
+        let mut b = batcher(4);
+        let (r1, _rx1) = request(1, 256, 2, 6);
+        let (r2, _rx2) = request(2, 512, 2, 7);
+        assert!(b.admit(&r1).is_empty());
+        assert!(b.admit(&r2).is_empty());
+        let tiles = b.flush_expired(true);
+        assert_eq!(tiles.len(), 2);
+        let arts: Vec<_> = tiles.iter().map(|t| t.artifact.as_str()).collect();
+        assert!(arts.contains(&"fft256_fwd"));
+        assert!(arts.contains(&"fft512_fwd"));
+    }
+
+    #[test]
+    fn accumulator_responds_once_complete() {
+        let (req, rx) = request(7, 256, 4, 8);
+        let acc = Accumulator::new(&req);
+        let fake = SplitComplex { re: vec![1.0; 4 * 256], im: vec![2.0; 4 * 256] };
+        acc.dispatched();
+        acc.fill(&fake, 0, 0, 2, 0.001);
+        assert!(rx.try_recv().is_err(), "incomplete: no response yet");
+        acc.fill(&fake, 2, 2, 2, 0.002);
+        let resp = rx.try_recv().expect("complete: response sent");
+        assert_eq!(resp.id, 7);
+        let out = resp.result.unwrap();
+        assert!(out.re.iter().all(|&v| v == 1.0));
+        assert!((resp.exec_secs - 0.002).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accumulator_failure_path() {
+        let (req, rx) = request(9, 256, 4, 9);
+        let acc = Accumulator::new(&req);
+        acc.fail("engine exploded");
+        let resp = rx.try_recv().unwrap();
+        assert!(resp.result.is_err());
+        assert!(resp.result.unwrap_err().contains("exploded"));
+    }
+
+    #[test]
+    fn deadline_bookkeeping() {
+        let mut b = batcher(8);
+        assert!(b.next_deadline().is_none());
+        let (req, _rx) = request(1, 256, 1, 10);
+        b.admit(&req);
+        let d = b.next_deadline().unwrap();
+        assert!(d > Instant::now() - Duration::from_millis(1));
+        // Nothing expires immediately with a 1 ms window...
+        assert!(b.flush_expired(false).is_empty());
+        std::thread::sleep(Duration::from_millis(2));
+        // ...but does after it.
+        assert_eq!(b.flush_expired(false).len(), 1);
+    }
+}

@@ -1,0 +1,159 @@
+//! Service metrics: lock-free counters + a fixed-bucket latency
+//! histogram (no external metrics crate in the offline environment).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log-scale latency histogram: bucket i covers [2^i, 2^{i+1}) us.
+const BUCKETS: usize = 24;
+
+#[derive(Default)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_us: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Histogram {
+    pub fn record_secs(&self, secs: f64) {
+        let us = (secs * 1e6).max(0.0);
+        let bucket = (us.max(1.0).log2() as usize).min(BUCKETS - 1);
+        self.counts[bucket].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate percentile from bucket upper bounds.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (total as f64 * p).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        (1u64 << BUCKETS) as f64
+    }
+}
+
+/// Aggregate service metrics; shared as `Arc<Metrics>`.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub lines_in: AtomicU64,
+    pub tiles_dispatched: AtomicU64,
+    pub lines_padded: AtomicU64,
+    pub failures: AtomicU64,
+    pub queue_latency: Histogram,
+    pub exec_latency: Histogram,
+}
+
+impl Metrics {
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            lines_in: self.lines_in.load(Ordering::Relaxed),
+            tiles_dispatched: self.tiles_dispatched.load(Ordering::Relaxed),
+            lines_padded: self.lines_padded.load(Ordering::Relaxed),
+            failures: self.failures.load(Ordering::Relaxed),
+            queue_mean_us: self.queue_latency.mean_us(),
+            queue_p95_us: self.queue_latency.percentile_us(0.95),
+            exec_mean_us: self.exec_latency.mean_us(),
+            exec_p95_us: self.exec_latency.percentile_us(0.95),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub lines_in: u64,
+    pub tiles_dispatched: u64,
+    pub lines_padded: u64,
+    pub failures: u64,
+    pub queue_mean_us: f64,
+    pub queue_p95_us: f64,
+    pub exec_mean_us: f64,
+    pub exec_p95_us: f64,
+}
+
+impl MetricsSnapshot {
+    /// Padding overhead: padded lines / dispatched lines.
+    pub fn padding_ratio(&self) -> f64 {
+        let dispatched = self.lines_in + self.lines_padded;
+        if dispatched == 0 {
+            return 0.0;
+        }
+        self.lines_padded as f64 / dispatched as f64
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} lines={} tiles={} padded={} ({:.1}%) failures={}\n\
+             queue: mean {:.0} us, p95 {:.0} us | exec: mean {:.0} us, p95 {:.0} us",
+            self.requests,
+            self.lines_in,
+            self.tiles_dispatched,
+            self.lines_padded,
+            self.padding_ratio() * 100.0,
+            self.failures,
+            self.queue_mean_us,
+            self.queue_p95_us,
+            self.exec_mean_us,
+            self.exec_p95_us,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_percentile() {
+        let h = Histogram::default();
+        for _ in 0..90 {
+            h.record_secs(10e-6); // 10 us -> bucket 3
+        }
+        for _ in 0..10 {
+            h.record_secs(1000e-6); // 1000 us -> bucket 9
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean_us() - 109.0).abs() < 2.0, "{}", h.mean_us());
+        assert!(h.percentile_us(0.5) <= 16.0);
+        assert!(h.percentile_us(0.99) >= 1024.0);
+    }
+
+    #[test]
+    fn padding_ratio() {
+        let s = MetricsSnapshot { lines_in: 96, lines_padded: 32, ..Default::default() };
+        assert!((s.padding_ratio() - 0.25).abs() < 1e-9);
+        let z = MetricsSnapshot::default();
+        assert_eq!(z.padding_ratio(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_render_contains_fields() {
+        let m = Metrics::default();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.queue_latency.record_secs(5e-6);
+        let r = m.snapshot().render();
+        assert!(r.contains("requests=3"));
+    }
+}

@@ -1,0 +1,32 @@
+//! L3 coordinator — the serving layer (substrate S7).
+//!
+//! The paper's host side is "dispatch batches of FFTs at the GPU"; this
+//! module generalises it into the batched-FFT service its SAR use case
+//! (§VII-D) actually needs:
+//!
+//! ```text
+//!  clients ──submit──▶ router ──▶ per-(N, dir) dynamic batcher ──tile──▶
+//!      worker pool ──job──▶ runtime::Engine (device thread) ──▶ replies
+//! ```
+//!
+//! * [`planner`] — the paper's §IV-D synthesis rules + Table V kernel
+//!   configurations: which artifact, which decomposition, how many
+//!   threads/how much threadgroup memory the Metal kernel would use.
+//! * [`batcher`] — aggregates request lines into artifact-sized tiles
+//!   (the GPU needs batch >= 64 to beat vDSP — Fig. 1 — so batching IS
+//!   the serving policy), padding the final partial tile.
+//! * [`worker`] — a small pool draining tiles into the engine.
+//! * [`service`] — the public facade.
+//! * [`metrics`] — queue/execute latency and padding-overhead counters.
+
+pub mod batcher;
+pub mod metrics;
+pub mod planner;
+pub mod replay;
+pub mod request;
+pub mod service;
+pub mod worker;
+
+pub use planner::{Decomposition, Plan, Planner};
+pub use request::{FftRequest, FftResponse, RequestId};
+pub use service::{FftService, ServiceConfig};

@@ -1,0 +1,199 @@
+//! The decomposition planner: paper §IV-D synthesis rules + Table V
+//! kernel configurations, as executable policy.
+//!
+//! Rule 1 — single threadgroup for N <= B_max = 4096 (Eq. 2).
+//! Rule 2 — four-step N = N1 x N2, N2 <= 4096, for 4096 < N <= 2^14.
+//! Rule 3 — multi-level four-step beyond 2^14 (planned, rejected here
+//!          with a clear error since no artifact exists; the paper also
+//!          stops at 16384).
+
+use crate::fft::stockham::radix_schedule;
+use crate::fft::Direction;
+use crate::runtime::Registry;
+use crate::sim::occupancy;
+use anyhow::{bail, Result};
+
+/// How a size is executed (the paper's Table V/VI configurations).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Decomposition {
+    /// One threadgroup dispatch; `radices` per pass.
+    SingleTg { radices: Vec<usize>, threads: usize, tg_bytes: usize },
+    /// Two dispatches + stride permutation through device memory.
+    FourStep { n1: usize, n2: usize },
+}
+
+/// An executable plan for one (size, direction).
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub n: usize,
+    pub direction: Direction,
+    pub decomposition: Decomposition,
+    /// Artifact the runtime executes (the four-step composition is
+    /// already fused inside the artifact's L2 graph).
+    pub artifact: String,
+    /// Lines per dispatch the artifact was compiled for.
+    pub batch_tile: usize,
+}
+
+impl Plan {
+    /// Stockham passes a Metal implementation would run (Table V).
+    pub fn passes(&self) -> usize {
+        match &self.decomposition {
+            Decomposition::SingleTg { radices, .. } => radices.len(),
+            Decomposition::FourStep { n2, .. } => 1 + radix_schedule(*n2, 8).len(),
+        }
+    }
+}
+
+/// Planner: resolves sizes against the artifact registry.
+#[derive(Clone, Debug)]
+pub struct Planner {
+    batch_tile: usize,
+    /// Max radix for single-TG kernels (8 = production, paper §V-B).
+    max_radix: usize,
+}
+
+/// The paper's B_max (Eq. 2): 32 KiB / 8 bytes.
+pub const B_MAX: usize = 4096;
+
+impl Planner {
+    pub fn new(batch_tile: usize) -> Planner {
+        Planner { batch_tile, max_radix: 8 }
+    }
+
+    /// Radix-4 planner (the paper's §V-A baseline configuration).
+    pub fn radix4(batch_tile: usize) -> Planner {
+        Planner { batch_tile, max_radix: 4 }
+    }
+
+    pub fn plan(&self, n: usize, direction: Direction) -> Result<Plan> {
+        if !n.is_power_of_two() {
+            bail!("FFT size {n} is not a power of two");
+        }
+        if !(256..=16384).contains(&n) {
+            bail!("FFT size {n} outside the supported range 256..16384");
+        }
+        let decomposition = if n <= B_MAX {
+            let radices = radix_schedule(n, self.max_radix);
+            Decomposition::SingleTg {
+                radices,
+                threads: occupancy::optimal_threads(&crate::sim::config::M1, n, self.max_radix),
+                tg_bytes: n * 8,
+            }
+        } else {
+            let (n1, n2) = crate::fft::fourstep::split(n);
+            Decomposition::FourStep { n1, n2 }
+        };
+        Ok(Plan {
+            n,
+            direction,
+            decomposition,
+            artifact: Registry::fft_name(n, direction),
+            batch_tile: self.batch_tile,
+        })
+    }
+
+    /// Paper Table V: (N, threads, passes description, tg bytes) for the
+    /// radix-4 multi-size kernels.
+    pub fn table5() -> Vec<(usize, usize, String, usize)> {
+        let p = Planner::radix4(32);
+        [256usize, 512, 1024, 2048, 4096]
+            .iter()
+            .map(|&n| {
+                let plan = p.plan(n, Direction::Forward).unwrap();
+                let Decomposition::SingleTg { radices, threads, tg_bytes } =
+                    plan.decomposition.clone()
+                else {
+                    unreachable!()
+                };
+                let r4 = radices.iter().filter(|&&r| r == 4).count();
+                let r2 = radices.iter().filter(|&&r| r == 2).count();
+                let desc = if r2 > 0 {
+                    format!("{r4} + {r2} (radix-2)")
+                } else {
+                    format!("{r4}")
+                };
+                (n, threads, desc, tg_bytes)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule1_single_tg_up_to_4096() {
+        let p = Planner::new(32);
+        for n in [256, 512, 1024, 2048, 4096] {
+            let plan = p.plan(n, Direction::Forward).unwrap();
+            assert!(
+                matches!(plan.decomposition, Decomposition::SingleTg { .. }),
+                "N={n} must be single-TG"
+            );
+        }
+    }
+
+    #[test]
+    fn rule2_four_step_above() {
+        let p = Planner::new(32);
+        let plan8 = p.plan(8192, Direction::Forward).unwrap();
+        assert_eq!(
+            plan8.decomposition,
+            Decomposition::FourStep { n1: 2, n2: 4096 } // paper Eq. 7
+        );
+        let plan16 = p.plan(16384, Direction::Inverse).unwrap();
+        assert_eq!(
+            plan16.decomposition,
+            Decomposition::FourStep { n1: 4, n2: 4096 } // paper Eq. 8
+        );
+        assert_eq!(plan16.artifact, "fft16384_inv");
+    }
+
+    #[test]
+    fn table5_matches_paper() {
+        // Paper Table V: N / threads / passes (radix-4) / tg mem.
+        let t = Planner::table5();
+        let want = [
+            (256, 64, "4", 2 * 1024),
+            (512, 128, "4 + 1 (radix-2)", 4 * 1024),
+            (1024, 256, "5", 8 * 1024),
+            (2048, 512, "5 + 1 (radix-2)", 16 * 1024),
+            (4096, 1024, "6", 32 * 1024),
+        ];
+        for ((n, threads, desc, tg), w) in t.iter().zip(want) {
+            assert_eq!(*n, w.0);
+            assert_eq!(*threads, w.1, "N={n} threads");
+            assert_eq!(desc, w.2, "N={n} passes");
+            assert_eq!(*tg, w.3, "N={n} tg bytes");
+        }
+    }
+
+    #[test]
+    fn production_radix8_passes() {
+        let p = Planner::new(32);
+        // Paper §V-B: 4 passes, 512 threads at N=4096.
+        let plan = p.plan(4096, Direction::Forward).unwrap();
+        assert_eq!(plan.passes(), 4);
+        let Decomposition::SingleTg { threads, .. } = plan.decomposition else {
+            unreachable!()
+        };
+        assert_eq!(threads, 512);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let p = Planner::new(32);
+        assert!(p.plan(128, Direction::Forward).is_err());
+        assert!(p.plan(32768, Direction::Forward).is_err());
+        assert!(p.plan(1000, Direction::Forward).is_err());
+    }
+
+    #[test]
+    fn fourstep_passes_counted() {
+        let p = Planner::new(32);
+        // 1 column pass + 4 radix-8 row passes.
+        assert_eq!(p.plan(8192, Direction::Forward).unwrap().passes(), 5);
+    }
+}

@@ -1,0 +1,233 @@
+//! Trace-driven workload replay: generate or load a request trace
+//! (arrival time, size, lines, direction) and replay it against the
+//! service with open-loop timing, reporting latency percentiles and
+//! throughput — the standard serving-system evaluation the coordinator
+//! deserves (and `applefft serve --trace` exposes).
+//!
+//! Trace file format (one request per line):
+//! `<arrival_us> <n> <lines> <fwd|inv>`
+
+use super::request::FftResponse;
+use super::service::FftService;
+use crate::fft::Direction;
+use crate::util::complex::SplitComplex;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One trace entry.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEntry {
+    /// Arrival offset from replay start.
+    pub arrival_us: u64,
+    pub n: usize,
+    pub lines: usize,
+    pub direction: Direction,
+}
+
+/// A workload trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub entries: Vec<TraceEntry>,
+}
+
+impl Trace {
+    /// Poisson-ish arrivals at `rate_hz` over `duration`, sizes drawn
+    /// from the SAR mix (heavy at 4096, tails at other sizes).
+    pub fn synthetic(rate_hz: f64, duration: Duration, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut entries = Vec::new();
+        let mut t_us = 0.0f64;
+        let end_us = duration.as_micros() as f64;
+        while t_us < end_us {
+            // Exponential inter-arrival.
+            let u = rng.f32().max(1e-6) as f64;
+            t_us += -u.ln() * 1e6 / rate_hz;
+            if t_us >= end_us {
+                break;
+            }
+            let n = match rng.below(10) {
+                0 => 256,
+                1 => 512,
+                2 => 1024,
+                3 => 2048,
+                4..=7 => 4096, // range-compression dominates
+                8 => 8192,
+                _ => 16384,
+            };
+            let lines = rng.between(1, 8);
+            let direction = if rng.below(3) == 0 { Direction::Inverse } else { Direction::Forward };
+            entries.push(TraceEntry { arrival_us: t_us as u64, n, lines, direction });
+        }
+        Trace { entries }
+    }
+
+    /// Parse the line format.
+    pub fn parse(text: &str) -> Result<Trace> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let ctx = || format!("trace line {}", i + 1);
+            let arrival_us: u64 = it.next().with_context(ctx)?.parse().with_context(ctx)?;
+            let n: usize = it.next().with_context(ctx)?.parse().with_context(ctx)?;
+            let lines: usize = it.next().with_context(ctx)?.parse().with_context(ctx)?;
+            let direction: Direction = it.next().with_context(ctx)?.parse()?;
+            entries.push(TraceEntry { arrival_us, n, lines, direction });
+        }
+        Ok(Trace { entries })
+    }
+
+    pub fn to_text(&self) -> String {
+        let mut out = String::from("# arrival_us n lines direction\n");
+        for e in &self.entries {
+            out.push_str(&format!(
+                "{} {} {} {}\n",
+                e.arrival_us,
+                e.n,
+                e.lines,
+                e.direction.tag()
+            ));
+        }
+        out
+    }
+}
+
+/// Replay outcome.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    pub requests: usize,
+    pub lines: usize,
+    pub wall_secs: f64,
+    pub lines_per_sec: f64,
+    pub nominal_gflops: f64,
+    /// End-to-end request latency percentiles, microseconds.
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    pub failures: usize,
+}
+
+/// Open-loop replay: requests are injected at their trace arrival times
+/// regardless of completion (backpressure shows up as latency).
+pub fn replay(svc: &FftService, trace: &Trace, seed: u64) -> Result<ReplayReport> {
+    let mut rng = Rng::new(seed);
+    let start = Instant::now();
+    let mut inflight: Vec<(Instant, mpsc::Receiver<FftResponse>)> = Vec::new();
+    let mut lines = 0usize;
+    let mut flops = 0f64;
+
+    for e in &trace.entries {
+        // Open-loop pacing.
+        let target = Duration::from_micros(e.arrival_us);
+        let now = start.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let x = SplitComplex {
+            re: rng.signal(e.n * e.lines),
+            im: rng.signal(e.n * e.lines),
+        };
+        let sent = Instant::now();
+        let (_, rx) = svc.submit(e.n, e.direction, x, e.lines)?;
+        inflight.push((sent, rx));
+        lines += e.lines;
+        flops += crate::util::fft_flops(e.n) * e.lines as f64;
+    }
+
+    // Collect.
+    let mut latencies_us: Vec<f64> = Vec::with_capacity(inflight.len());
+    let mut failures = 0usize;
+    for (sent, rx) in inflight {
+        match rx.recv_timeout(Duration::from_secs(60)) {
+            Ok(resp) => {
+                if resp.result.is_err() {
+                    failures += 1;
+                }
+                latencies_us.push(sent.elapsed().as_secs_f64() * 1e6);
+            }
+            Err(_) => failures += 1,
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+    latencies_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        if latencies_us.is_empty() {
+            return 0.0;
+        }
+        latencies_us[((latencies_us.len() - 1) as f64 * p).round() as usize]
+    };
+    Ok(ReplayReport {
+        requests: trace.entries.len(),
+        lines,
+        wall_secs: wall,
+        lines_per_sec: lines as f64 / wall,
+        nominal_gflops: flops / wall / 1e9,
+        p50_us: pct(0.50),
+        p95_us: pct(0.95),
+        p99_us: pct(0.99),
+        max_us: latencies_us.last().copied().unwrap_or(0.0),
+        failures,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServiceConfig;
+    use crate::runtime::Backend;
+
+    #[test]
+    fn synthetic_trace_shape() {
+        let t = Trace::synthetic(1000.0, Duration::from_millis(100), 1);
+        assert!(t.entries.len() > 50, "{}", t.entries.len());
+        assert!(t.entries.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+        assert!(t.entries.iter().all(|e| e.n.is_power_of_two()));
+    }
+
+    #[test]
+    fn trace_text_roundtrip() {
+        let t = Trace::synthetic(500.0, Duration::from_millis(50), 2);
+        let parsed = Trace::parse(&t.to_text()).unwrap();
+        assert_eq!(parsed.entries, t.entries);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Trace::parse("12 4096").is_err());
+        assert!(Trace::parse("x y z w").is_err());
+        assert!(Trace::parse("# comment only\n").unwrap().entries.is_empty());
+    }
+
+    #[test]
+    fn replay_completes_with_latency_stats() {
+        let svc = FftService::start(ServiceConfig {
+            backend: Backend::Native,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+        warm: false,
+        })
+        .unwrap();
+        let trace = Trace {
+            entries: (0..20)
+                .map(|i| TraceEntry {
+                    arrival_us: i * 500,
+                    n: 256,
+                    lines: 3,
+                    direction: Direction::Forward,
+                })
+                .collect(),
+        };
+        let report = replay(&svc, &trace, 3).unwrap();
+        assert_eq!(report.requests, 20);
+        assert_eq!(report.failures, 0);
+        assert_eq!(report.lines, 60);
+        assert!(report.p50_us > 0.0);
+        assert!(report.p99_us >= report.p50_us);
+    }
+}

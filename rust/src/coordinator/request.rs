@@ -1,0 +1,92 @@
+//! Request/response types of the FFT service.
+
+use crate::fft::Direction;
+use crate::util::complex::SplitComplex;
+use std::sync::mpsc;
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// A client request: `lines` independent `n`-point transforms.
+#[derive(Debug)]
+pub struct FftRequest {
+    pub id: RequestId,
+    pub n: usize,
+    pub direction: Direction,
+    /// `(lines, n)` row-major split-complex payload.
+    pub data: SplitComplex,
+    pub lines: usize,
+    /// Set by the service at admission; used for queue-latency metrics.
+    pub submitted_at: Instant,
+    /// Where the response goes.
+    pub reply: mpsc::Sender<FftResponse>,
+}
+
+impl FftRequest {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.lines > 0, "request {} has zero lines", self.id);
+        anyhow::ensure!(
+            self.data.len() == self.n * self.lines,
+            "request {}: payload {} != n({}) x lines({})",
+            self.id,
+            self.data.len(),
+            self.n,
+            self.lines
+        );
+        anyhow::ensure!(
+            self.n.is_power_of_two() && (256..=16384).contains(&self.n),
+            "request {}: unsupported size {} (supported: 256..16384 pow2)",
+            self.id,
+            self.n
+        );
+        Ok(())
+    }
+}
+
+/// The service's answer: transformed lines (same shape as the request)
+/// or an error string (kept `String` so responses stay `Send` + clonable).
+#[derive(Debug)]
+pub struct FftResponse {
+    pub id: RequestId,
+    pub result: Result<SplitComplex, String>,
+    /// Time spent queued before the tile dispatched.
+    pub queue_secs: f64,
+    /// Time spent executing the tile on the engine.
+    pub exec_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(n: usize, lines: usize, payload: usize) -> (FftRequest, mpsc::Receiver<FftResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            FftRequest {
+                id: 1,
+                n,
+                direction: Direction::Forward,
+                data: SplitComplex::zeros(payload),
+                lines,
+                submitted_at: Instant::now(),
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn validate_accepts_good() {
+        let (r, _rx) = req(256, 3, 768);
+        assert!(r.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        assert!(req(256, 3, 700).0.validate().is_err()); // wrong payload
+        assert!(req(256, 0, 0).0.validate().is_err()); // zero lines
+        assert!(req(300, 1, 300).0.validate().is_err()); // not pow2
+        assert!(req(128, 1, 128).0.validate().is_err()); // below range
+        assert!(req(32768, 1, 32768).0.validate().is_err()); // above range
+    }
+}

@@ -1,0 +1,269 @@
+//! The public facade: an always-on batched-FFT service.
+//!
+//! One batcher thread owns admission + deadline flushing; tiles flow to
+//! the worker pool; workers execute on the engine's device thread and
+//! reply through per-request channels.
+
+use super::batcher::Batcher;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::planner::Planner;
+use super::request::{FftRequest, FftResponse, RequestId};
+use super::worker::WorkerPool;
+use crate::fft::Direction;
+use crate::runtime::{Backend, Engine};
+use crate::util::complex::SplitComplex;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub backend: Backend,
+    /// Max time a partial tile may wait before padding + dispatch.
+    pub max_wait: Duration,
+    /// Worker threads draining tiles.
+    pub workers: usize,
+    /// Eagerly compile every artifact at startup (trades ~10 s startup
+    /// for no first-request compile spike; see EXPERIMENTS.md §Perf).
+    pub warm: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            backend: Backend::Auto,
+            max_wait: Duration::from_millis(2),
+            workers: 2,
+            warm: false,
+        }
+    }
+}
+
+enum Op {
+    Submit(FftRequest),
+    Drain(mpsc::Sender<()>),
+}
+
+/// Handle to a running service. Cheap to clone.
+#[derive(Clone)]
+pub struct FftService {
+    admit_tx: mpsc::Sender<Op>,
+    engine: Engine,
+    metrics: Arc<Metrics>,
+    planner: Planner,
+    next_id: Arc<AtomicU64>,
+}
+
+impl FftService {
+    pub fn start(config: ServiceConfig) -> Result<FftService> {
+        let engine = Engine::start(config.backend).context("starting runtime engine")?;
+        if config.warm {
+            engine.warm_all().context("warming artifacts")?;
+        }
+        let metrics = Arc::new(Metrics::default());
+        let planner = Planner::new(engine.batch_tile());
+        let pool = WorkerPool::start(engine.clone(), metrics.clone(), config.workers);
+        let (admit_tx, admit_rx) = mpsc::channel::<Op>();
+
+        let batch_tile = engine.batch_tile();
+        let max_wait = config.max_wait;
+        let metrics_b = metrics.clone();
+        std::thread::Builder::new()
+            .name("applefft-batcher".to_string())
+            .spawn(move || {
+                let mut batcher = Batcher::new(batch_tile, max_wait, metrics_b);
+                loop {
+                    // Sleep until the next deadline (or idle-block).
+                    let op = match batcher.next_deadline() {
+                        None => match admit_rx.recv() {
+                            Ok(op) => Some(op),
+                            Err(_) => break,
+                        },
+                        Some(deadline) => {
+                            let now = Instant::now();
+                            let timeout = deadline.saturating_duration_since(now);
+                            match admit_rx.recv_timeout(timeout) {
+                                Ok(op) => Some(op),
+                                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                            }
+                        }
+                    };
+                    match op {
+                        Some(Op::Submit(req)) => {
+                            for tile in batcher.admit(&req) {
+                                let _ = pool.submit(tile);
+                            }
+                        }
+                        Some(Op::Drain(done)) => {
+                            for tile in batcher.flush_expired(true) {
+                                let _ = pool.submit(tile);
+                            }
+                            let _ = done.send(());
+                        }
+                        None => {}
+                    }
+                    for tile in batcher.flush_expired(false) {
+                        let _ = pool.submit(tile);
+                    }
+                }
+                // Admission closed: drain what's left, then stop workers.
+                for tile in batcher.flush_expired(true) {
+                    let _ = pool.submit(tile);
+                }
+                pool.shutdown();
+            })
+            .context("spawning batcher thread")?;
+
+        Ok(FftService {
+            admit_tx,
+            engine,
+            metrics,
+            planner,
+            next_id: Arc::new(AtomicU64::new(1)),
+        })
+    }
+
+    /// Async submission: returns the receiver for the response.
+    pub fn submit(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        // Planner enforces the synthesis rules (supported sizes).
+        self.planner.plan(n, direction)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let req = FftRequest {
+            id,
+            n,
+            direction,
+            data,
+            lines,
+            submitted_at: Instant::now(),
+            reply: tx,
+        };
+        req.validate()?;
+        self.admit_tx
+            .send(Op::Submit(req))
+            .map_err(|_| anyhow::anyhow!("service has shut down"))?;
+        Ok((id, rx))
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn fft(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<SplitComplex> {
+        let (_, rx) = self.submit(n, direction, data, lines)?;
+        let resp = rx.recv().context("service dropped the request")?;
+        resp.result.map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Force-flush all partial tiles (used by batch drivers before
+    /// measuring, and by shutdown paths).
+    pub fn drain(&self) -> Result<()> {
+        let (tx, rx) = mpsc::channel();
+        self.admit_tx
+            .send(Op::Drain(tx))
+            .map_err(|_| anyhow::anyhow!("service has shut down"))?;
+        rx.recv().context("batcher dropped drain ack")?;
+        Ok(())
+    }
+
+    /// Fused range compression straight through the engine (bypasses the
+    /// FFT batcher: it is its own fused artifact).
+    pub fn range_compress(
+        &self,
+        x: &SplitComplex,
+        h: &SplitComplex,
+        n: usize,
+        batch: usize,
+    ) -> Result<SplitComplex> {
+        self.engine.range_compress(x, h, n, batch)
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    pub fn batch_tile(&self) -> usize {
+        self.engine.batch_tile()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native_service() -> FftService {
+        FftService::start(ServiceConfig {
+            backend: Backend::Native,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+        warm: false,
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn blocking_fft_roundtrip() {
+        let svc = native_service();
+        let mut rng = crate::util::rng::Rng::new(70);
+        let (n, lines) = (256, 5);
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        let y = svc.fft(n, Direction::Forward, x.clone(), lines).unwrap();
+        let z = svc.fft(n, Direction::Inverse, y, lines).unwrap();
+        assert!(z.rel_l2_error(&x) < 1e-4);
+        let m = svc.metrics();
+        assert_eq!(m.requests, 2);
+        assert!(m.lines_padded > 0, "partial tiles must be padded");
+    }
+
+    #[test]
+    fn rejects_unsupported_sizes() {
+        let svc = native_service();
+        let x = SplitComplex::zeros(100);
+        assert!(svc.fft(100, Direction::Forward, x, 1).is_err());
+        let x = SplitComplex::zeros(128);
+        assert!(svc.fft(128, Direction::Forward, x, 1).is_err());
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let svc = native_service();
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(100 + t);
+                for i in 0..5 {
+                    let n = *rng.choose(&[256usize, 512, 1024]);
+                    let lines = rng.between(1, 6);
+                    let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+                    let y = svc.fft(n, Direction::Forward, x, lines).unwrap();
+                    assert_eq!(y.len(), n * lines, "client {t} iter {i}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(svc.metrics().requests, 20);
+        assert_eq!(svc.metrics().failures, 0);
+    }
+}

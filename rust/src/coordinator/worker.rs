@@ -1,0 +1,177 @@
+//! Worker pool: drains ready tiles into the runtime engine and routes
+//! transformed lines back to the per-request accumulators.
+
+use super::batcher::Tile;
+use super::metrics::Metrics;
+use crate::runtime::Engine;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Execute one tile synchronously and distribute results.
+pub fn run_tile(engine: &Engine, metrics: &Metrics, tile: Tile) {
+    let t0 = Instant::now();
+    let result = engine.fft_batch(&tile.data, tile.n, tile.batch, tile.direction);
+    let exec_secs = t0.elapsed().as_secs_f64();
+    metrics.tiles_dispatched.fetch_add(1, Ordering::Relaxed);
+    metrics.lines_padded.fetch_add(tile.padded_lines as u64, Ordering::Relaxed);
+    metrics.exec_latency.record_secs(exec_secs);
+
+    match result {
+        Ok(out) => {
+            for seg in &tile.segments {
+                seg.acc.fill(&out, seg.tile_line, seg.request_line, seg.count, exec_secs);
+                metrics.queue_latency.record_secs(seg.acc.queue_secs());
+            }
+        }
+        Err(e) => {
+            metrics.failures.fetch_add(1, Ordering::Relaxed);
+            let msg = format!("tile {} failed: {e:#}", tile.artifact);
+            for seg in &tile.segments {
+                seg.acc.fail(&msg);
+            }
+        }
+    }
+}
+
+/// A shared-queue worker pool. Tiles are pulled from a single channel
+/// guarded by a mutex (contention is negligible next to execute time).
+pub struct WorkerPool {
+    tx: mpsc::Sender<Tile>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn start(engine: Engine, metrics: Arc<Metrics>, workers: usize) -> WorkerPool {
+        let (tx, rx) = mpsc::channel::<Tile>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let rx = rx.clone();
+                let engine = engine.clone();
+                let metrics = metrics.clone();
+                std::thread::Builder::new()
+                    .name(format!("applefft-worker-{i}"))
+                    .spawn(move || loop {
+                        let tile = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match tile {
+                            Ok(t) => run_tile(&engine, &metrics, t),
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawning worker")
+            })
+            .collect();
+        WorkerPool { tx, handles }
+    }
+
+    pub fn submit(&self, tile: Tile) -> anyhow::Result<()> {
+        self.tx
+            .send(tile)
+            .map_err(|_| anyhow::anyhow!("worker pool has shut down"))
+    }
+
+    /// Close the queue and join the workers (drains in-flight tiles).
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::{Accumulator, Segment};
+    use crate::coordinator::request::{FftRequest, FftResponse};
+    use crate::fft::Direction;
+    use crate::runtime::Backend;
+    use crate::util::complex::SplitComplex;
+    use crate::util::rng::Rng;
+
+    fn tile_for(
+        n: usize,
+        lines: usize,
+        batch: usize,
+    ) -> (Tile, mpsc::Receiver<FftResponse>, SplitComplex) {
+        let (tx, rx) = mpsc::channel();
+        let mut rng = Rng::new(42);
+        let data = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        let req = FftRequest {
+            id: 11,
+            n,
+            direction: Direction::Forward,
+            data: data.clone(),
+            lines,
+            submitted_at: Instant::now(),
+            reply: tx,
+        };
+        let acc = Accumulator::new(&req);
+        acc.dispatched();
+        let mut tile_data = SplitComplex::zeros(n * batch);
+        tile_data.re[..n * lines].copy_from_slice(&data.re);
+        tile_data.im[..n * lines].copy_from_slice(&data.im);
+        let tile = Tile {
+            artifact: format!("fft{n}_fwd"),
+            n,
+            direction: Direction::Forward,
+            batch,
+            data: tile_data,
+            segments: vec![Segment { acc, tile_line: 0, request_line: 0, count: lines }],
+            padded_lines: batch - lines,
+        };
+        (tile, rx, data)
+    }
+
+    #[test]
+    fn run_tile_executes_and_replies() {
+        let engine = Engine::start(Backend::Native).unwrap();
+        let metrics = Metrics::default();
+        let (tile, rx, input) = tile_for(256, 3, 32);
+        run_tile(&engine, &metrics, tile);
+        let resp = rx.recv().unwrap();
+        let out = resp.result.unwrap();
+        assert_eq!(out.len(), 3 * 256);
+        // Validate against the oracle.
+        let want = crate::fft::dft::dft_batch(&input, 256, 3, Direction::Forward);
+        assert!(out.rel_l2_error(&want) < 2e-4);
+        assert_eq!(metrics.tiles_dispatched.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.lines_padded.load(Ordering::Relaxed), 29);
+    }
+
+    #[test]
+    fn pool_processes_many_tiles() {
+        let engine = Engine::start(Backend::Native).unwrap();
+        let metrics = Arc::new(Metrics::default());
+        let pool = WorkerPool::start(engine, metrics.clone(), 3);
+        let mut receivers = Vec::new();
+        for _ in 0..10 {
+            let (tile, rx, _) = tile_for(256, 2, 32);
+            pool.submit(tile).unwrap();
+            receivers.push(rx);
+        }
+        for rx in receivers {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        pool.shutdown();
+        assert_eq!(metrics.tiles_dispatched.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn engine_failure_propagates() {
+        let engine = Engine::start(Backend::Native).unwrap();
+        let metrics = Metrics::default();
+        let (mut tile, rx, _) = tile_for(256, 1, 32);
+        tile.artifact = "fft_bogus".to_string();
+        tile.n = 257; // unknown artifact name -> engine error
+        run_tile(&engine, &metrics, tile);
+        let resp = rx.recv().unwrap();
+        assert!(resp.result.is_err());
+        assert_eq!(metrics.failures.load(Ordering::Relaxed), 1);
+    }
+}

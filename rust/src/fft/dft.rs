@@ -1,0 +1,131 @@
+//! Naive O(N^2) DFT oracle, accumulated in f64.
+//!
+//! This is the ground truth everything else is checked against. It is
+//! deliberately simple and slow; tests use it up to N = 4096 directly and
+//! validate larger sizes transitively (four-step vs radix-8 Stockham).
+
+use super::Direction;
+use crate::util::complex::SplitComplex;
+
+/// Direct DFT of one line. `X[k] = sum_n x[n] e^{-2πi nk/N}` (forward);
+/// inverse adds the conjugate kernel and 1/N normalisation.
+pub fn dft(input: &SplitComplex, dir: Direction) -> SplitComplex {
+    let n = input.len();
+    let mut out = SplitComplex::zeros(n);
+    let sign = match dir {
+        Direction::Forward => -1.0f64,
+        Direction::Inverse => 1.0f64,
+    };
+    let norm = match dir {
+        Direction::Forward => 1.0f64,
+        Direction::Inverse => 1.0 / n as f64,
+    };
+    let w0 = sign * 2.0 * std::f64::consts::PI / n as f64;
+    for k in 0..n {
+        let mut acc_re = 0.0f64;
+        let mut acc_im = 0.0f64;
+        for j in 0..n {
+            // Reduce the phase index mod n before the trig call to keep
+            // accuracy at large N*k products.
+            let idx = (j * k) % n;
+            let theta = w0 * idx as f64;
+            let (s, c) = theta.sin_cos();
+            let (re, im) = (input.re[j] as f64, input.im[j] as f64);
+            acc_re += re * c - im * s;
+            acc_im += re * s + im * c;
+        }
+        out.re[k] = (acc_re * norm) as f32;
+        out.im[k] = (acc_im * norm) as f32;
+    }
+    out
+}
+
+/// Batched direct DFT over `batch` rows of length `n` (row-major).
+pub fn dft_batch(input: &SplitComplex, n: usize, batch: usize, dir: Direction) -> SplitComplex {
+    assert_eq!(input.len(), n * batch);
+    let mut out = SplitComplex::zeros(n * batch);
+    for b in 0..batch {
+        let line = input.slice(b * n, n);
+        let y = dft(&line, dir);
+        out.re[b * n..(b + 1) * n].copy_from_slice(&y.re);
+        out.im[b * n..(b + 1) * n].copy_from_slice(&y.im);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::assert_close;
+    use crate::util::complex::C32;
+
+    #[test]
+    fn impulse_has_flat_spectrum() {
+        let mut x = SplitComplex::zeros(8);
+        x.re[0] = 1.0;
+        let y = dft(&x, Direction::Forward);
+        assert_close(&y.re, &[1.0; 8], 1e-6, 0.0, "impulse re");
+        assert_close(&y.im, &[0.0; 8], 1e-6, 0.0, "impulse im");
+    }
+
+    #[test]
+    fn dc_concentrates_in_bin_zero() {
+        let x = SplitComplex { re: vec![1.0; 16], im: vec![0.0; 16] };
+        let y = dft(&x, Direction::Forward);
+        assert!((y.re[0] - 16.0).abs() < 1e-4);
+        for k in 1..16 {
+            assert!(y.get(k).abs() < 1e-4, "bin {k}");
+        }
+    }
+
+    #[test]
+    fn single_tone_lands_in_its_bin() {
+        // x[n] = e^{2πi * 3n/32} -> X[3] = 32, everything else 0.
+        let n = 32;
+        let mut x = SplitComplex::zeros(n);
+        for j in 0..n {
+            let th = 2.0 * std::f32::consts::PI * 3.0 * j as f32 / n as f32;
+            x.set(j, C32::cis(th));
+        }
+        let y = dft(&x, Direction::Forward);
+        assert!((y.re[3] - n as f32).abs() < 1e-3);
+        for k in 0..n {
+            if k != 3 {
+                assert!(y.get(k).abs() < 1e-3, "bin {k} = {:?}", y.get(k));
+            }
+        }
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let n = 64;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let y = dft(&x, Direction::Forward);
+        let z = dft(&y, Direction::Inverse);
+        assert!(z.rel_l2_error(&x) < 1e-5);
+    }
+
+    #[test]
+    fn parseval() {
+        let mut rng = crate::util::rng::Rng::new(6);
+        let n = 128;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let y = dft(&x, Direction::Forward);
+        let ex: f64 = (0..n).map(|i| x.get(i).norm_sqr() as f64).sum();
+        let ey: f64 = (0..n).map(|i| y.get(i).norm_sqr() as f64).sum();
+        assert!((ey / (n as f64) - ex).abs() / ex < 1e-5, "{ey} vs {ex}");
+    }
+
+    #[test]
+    fn batch_matches_per_line() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        let (n, batch) = (16, 3);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let y = dft_batch(&x, n, batch, Direction::Forward);
+        for b in 0..batch {
+            let line = dft(&x.slice(b * n, n), Direction::Forward);
+            assert_eq!(y.slice(b * n, n), line);
+        }
+    }
+}

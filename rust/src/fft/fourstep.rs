@@ -1,0 +1,301 @@
+//! Four-step FFT decomposition (paper §IV-B, Eq. 3) for sizes exceeding
+//! the single-"threadgroup" limit B = 4096.
+//!
+//! For `N = N1 * N2` with `N2 <= 4096` (paper: N1 = 2 for N = 8192,
+//! N1 = 4 for N = 16384), viewing the line as an `(N1, N2)` row-major
+//! matrix:
+//!
+//! 1. DFT of length N1 down the columns (N1 is 2 or 4 — plain butterflies),
+//! 2. pointwise twiddle `W_N^{k1*n2}` (applied "during the transpose" in
+//!    the paper; here fused into step 1's output write),
+//! 3. length-N2 Stockham FFT along the rows (the single-threadgroup
+//!    kernel of §V-B),
+//! 4. transpose `(N1, N2) -> (N2, N1)` so `X[k1 + N1*k2] = Z[k1][k2]`.
+
+use super::stockham::{radix_schedule, transform_line};
+use super::twiddle::{fourstep_twiddles, PlanTables};
+use crate::util::complex::{SplitComplex, C32};
+
+// (multilevel_line below also uses transform_line / radix_schedule.)
+
+/// Factor `n` for the four-step split per the paper's rule: `n2 = 4096`
+/// (= B_max), `n1 = n / n2`. For the paper's range (N <= 2^14) this
+/// gives n1 in {2, 4}; rule 3 (multi-level, N > 2^14) recursively
+/// four-steps the *columns* instead — see [`multilevel_line`].
+pub fn split(n: usize) -> (usize, usize) {
+    assert!(n.is_power_of_two() && n > 4096, "four-step is for N > 4096");
+    let n2 = 4096;
+    (n / n2, n2)
+}
+
+/// Paper §IV-D rule 3: multi-level four-step for N > 2^14, with
+/// SLC-resident intermediates. Split `N = n1 * n2` with `n2 = 4096`
+/// rows done by the single-threadgroup kernel and the length-`n1`
+/// column DFTs (n1 > 4) done by recursive application of the same
+/// machinery (here: the Stockham driver, since n1 <= 4096 for any
+/// practical N).
+pub fn multilevel_line(x: &SplitComplex) -> SplitComplex {
+    let n = x.len();
+    assert!(n.is_power_of_two() && n > 1 << 14, "rule 3 is for N > 2^14");
+    let (n1, n2) = split(n);
+    assert!(n1 <= 4096, "N beyond 2^24 would need a third level");
+
+    // Step 1: length-n1 FFTs down the columns. Gather each column
+    // (stride n2), transform with the Stockham driver, scatter back.
+    let mut y = SplitComplex::zeros(n);
+    let radices1 = radix_schedule(n1, 8);
+    let mut col = SplitComplex::zeros(n1);
+    let mut sre = vec![0.0f32; n1];
+    let mut sim = vec![0.0f32; n1];
+    for j2 in 0..n2 {
+        for j1 in 0..n1 {
+            col.re[j1] = x.re[j1 * n2 + j2];
+            col.im[j1] = x.im[j1 * n2 + j2];
+        }
+        transform_line(&mut col.re, &mut col.im, &mut sre, &mut sim, &radices1, None);
+        for k1 in 0..n1 {
+            y.re[k1 * n2 + j2] = col.re[k1];
+            y.im[k1 * n2 + j2] = col.im[k1];
+        }
+    }
+
+    // Step 2: twiddle W_N^{k1 * j2}.
+    for k1 in 0..n1 {
+        for j2 in 0..n2 {
+            let idx = (k1 * j2) % n;
+            let theta = -2.0 * std::f64::consts::PI * idx as f64 / n as f64;
+            let w = C32::new(theta.cos() as f32, theta.sin() as f32);
+            let v = y.get(k1 * n2 + j2) * w;
+            y.set(k1 * n2 + j2, v);
+        }
+    }
+
+    // Step 3: length-n2 row FFTs (the "single-threadgroup kernel").
+    let radices2 = radix_schedule(n2, 8);
+    let mut sre2 = vec![0.0f32; n2];
+    let mut sim2 = vec![0.0f32; n2];
+    for k1 in 0..n1 {
+        let at = k1 * n2;
+        transform_line(
+            &mut y.re[at..at + n2],
+            &mut y.im[at..at + n2],
+            &mut sre2,
+            &mut sim2,
+            &radices2,
+            None,
+        );
+    }
+
+    // Step 4: stride permutation.
+    let mut out = SplitComplex::zeros(n);
+    for k1 in 0..n1 {
+        for k2 in 0..n2 {
+            out.set(k1 + n1 * k2, y.get(k1 * n2 + k2));
+        }
+    }
+    out
+}
+
+/// Reusable scratch for [`fourstep_line_with`] — one allocation per
+/// batch instead of four per line (perf pass, EXPERIMENTS.md §Perf).
+pub struct FourStepScratch {
+    y: SplitComplex,
+    sre: Vec<f32>,
+    sim: Vec<f32>,
+}
+
+impl FourStepScratch {
+    pub fn new(n1: usize, n2: usize) -> FourStepScratch {
+        FourStepScratch {
+            y: SplitComplex::zeros(n1 * n2),
+            sre: vec![0.0; n2],
+            sim: vec![0.0; n2],
+        }
+    }
+}
+
+/// Four-step FFT of a single line of length `n1*n2`. `radices` is the
+/// Stockham schedule for the length-`n2` row FFTs.
+pub fn fourstep_line(
+    x: &SplitComplex,
+    n1: usize,
+    n2: usize,
+    radices: &[usize],
+    tables: Option<&PlanTables>,
+    twiddles: &[C32],
+) -> SplitComplex {
+    let mut scratch = FourStepScratch::new(n1, n2);
+    let mut out = SplitComplex::zeros(n1 * n2);
+    fourstep_line_with(x, &mut out, n1, n2, radices, tables, twiddles, &mut scratch);
+    out
+}
+
+/// Allocation-free four-step: writes into `out`, using `scratch`.
+#[allow(clippy::too_many_arguments)]
+pub fn fourstep_line_with(
+    x: &SplitComplex,
+    out: &mut SplitComplex,
+    n1: usize,
+    n2: usize,
+    radices: &[usize],
+    tables: Option<&PlanTables>,
+    twiddles: &[C32],
+    scratch: &mut FourStepScratch,
+) {
+    let n = n1 * n2;
+    assert_eq!(x.len(), n);
+    assert_eq!(out.len(), n);
+    assert_eq!(twiddles.len(), n);
+
+    // Steps 1+2: column DFT of length n1, fused with the twiddle.
+    let FourStepScratch { y, sre, sim } = scratch;
+    match n1 {
+        2 => {
+            for j2 in 0..n2 {
+                let a = x.get(j2);
+                let b = x.get(n2 + j2);
+                y.set(j2, (a + b) * twiddles[j2]);
+                y.set(n2 + j2, (a - b) * twiddles[n2 + j2]);
+            }
+        }
+        4 => {
+            for j2 in 0..n2 {
+                let a = x.get(j2);
+                let b = x.get(n2 + j2);
+                let c = x.get(2 * n2 + j2);
+                let d = x.get(3 * n2 + j2);
+                let apc = a + c;
+                let amc = a - c;
+                let bpd = b + d;
+                let bmd = b - d;
+                y.set(j2, (apc + bpd) * twiddles[j2]);
+                y.set(n2 + j2, (amc - bmd.mul_i()) * twiddles[n2 + j2]);
+                y.set(2 * n2 + j2, (apc - bpd) * twiddles[2 * n2 + j2]);
+                y.set(3 * n2 + j2, (amc + bmd.mul_i()) * twiddles[3 * n2 + j2]);
+            }
+        }
+        other => panic!("four-step n1={other} not supported (paper uses 2 and 4)"),
+    }
+
+    // Step 3: length-n2 FFT along each of the n1 rows.
+    for k1 in 0..n1 {
+        let row = k1 * n2;
+        transform_line(&mut y.re[row..row + n2], &mut y.im[row..row + n2], sre, sim, radices, tables);
+    }
+
+    // Step 4: transpose (n1, n2) -> output index k1 + n1*k2.
+    for k1 in 0..n1 {
+        for k2 in 0..n2 {
+            out.re[k1 + n1 * k2] = y.re[k1 * n2 + k2];
+            out.im[k1 + n1 * k2] = y.im[k1 * n2 + k2];
+        }
+    }
+}
+
+/// Convenience: build twiddles + schedule and run one line forward.
+pub fn fourstep_forward(x: &SplitComplex) -> SplitComplex {
+    let n = x.len();
+    let (n1, n2) = split(n);
+    let radices = radix_schedule(n2, 8);
+    let tw = fourstep_twiddles(n1, n2, false);
+    fourstep_line(x, n1, n2, &radices, None, &tw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::stockham::radix_schedule;
+    use crate::fft::Direction;
+    use crate::util::rng::Rng;
+
+    /// Reference for large N: direct Stockham on the whole line (already
+    /// validated against the naive DFT for N <= 4096; radix structure is
+    /// size-independent).
+    fn stockham_reference(x: &SplitComplex) -> SplitComplex {
+        let n = x.len();
+        let radices = radix_schedule(n, 8);
+        let mut out = x.clone();
+        let (mut sre, mut sim) = (vec![0.0; n], vec![0.0; n]);
+        transform_line(&mut out.re, &mut out.im, &mut sre, &mut sim, &radices, None);
+        out
+    }
+
+    #[test]
+    fn split_matches_paper() {
+        assert_eq!(split(8192), (2, 4096)); // paper Eq. 7
+        assert_eq!(split(16384), (4, 4096)); // paper Eq. 8
+    }
+
+    #[test]
+    fn fourstep_8192_matches_direct() {
+        let mut rng = Rng::new(20);
+        let n = 8192;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let want = stockham_reference(&x);
+        let got = fourstep_forward(&x);
+        let err = got.rel_l2_error(&want);
+        assert!(err < 2e-4, "rel err {err}");
+    }
+
+    #[test]
+    fn fourstep_16384_matches_direct() {
+        let mut rng = Rng::new(21);
+        let n = 16384;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let want = stockham_reference(&x);
+        let got = fourstep_forward(&x);
+        let err = got.rel_l2_error(&want);
+        assert!(err < 2e-4, "rel err {err}");
+    }
+
+    #[test]
+    fn fourstep_small_split_matches_dft() {
+        // Use a small artificial split (n1=4, n2=8 -> N=32) so we can
+        // check directly against the naive DFT oracle.
+        let mut rng = Rng::new(22);
+        let (n1, n2) = (4, 8);
+        let n = n1 * n2;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let want = crate::fft::dft::dft(&x, Direction::Forward);
+        let radices = radix_schedule(n2, 8);
+        let tw = fourstep_twiddles(n1, n2, false);
+        let got = fourstep_line(&x, n1, n2, &radices, None, &tw);
+        let err = got.rel_l2_error(&want);
+        assert!(err < 1e-4, "rel err {err}");
+    }
+
+    #[test]
+    fn multilevel_32768_matches_direct() {
+        // Paper rule 3: N > 2^14. 32768 = 8 x 4096.
+        let mut rng = Rng::new(24);
+        let n = 32768;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let want = stockham_reference(&x);
+        let got = multilevel_line(&x);
+        let err = got.rel_l2_error(&want);
+        assert!(err < 3e-4, "rel err {err}");
+    }
+
+    #[test]
+    fn multilevel_65536_matches_direct() {
+        let mut rng = Rng::new(25);
+        let n = 65536;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let want = stockham_reference(&x);
+        let got = multilevel_line(&x);
+        assert!(got.rel_l2_error(&want) < 3e-4);
+    }
+
+    #[test]
+    fn fourstep_n1_2_small_matches_dft() {
+        let mut rng = Rng::new(23);
+        let (n1, n2) = (2, 16);
+        let n = n1 * n2;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let want = crate::fft::dft::dft(&x, Direction::Forward);
+        let radices = radix_schedule(n2, 8);
+        let tw = fourstep_twiddles(n1, n2, false);
+        let got = fourstep_line(&x, n1, n2, &radices, None, &tw);
+        assert!(got.rel_l2_error(&want) < 1e-4);
+    }
+}

@@ -1,0 +1,52 @@
+//! Native split-complex FFT library — the vDSP/Accelerate stand-in.
+//!
+//! This is substrate S1 of DESIGN.md: a complete CPU FFT implementation
+//! playing the two roles vDSP plays in the paper:
+//!
+//! 1. **Numerical reference** — every GPU/PJRT path is validated against
+//!    it ("All kernels are validated against vDSP reference outputs").
+//! 2. **Performance baseline** — the executable CPU comparator in the
+//!    benchmark harness (the AMX *throughput model* for the paper-shape
+//!    comparison lives in [`crate::sim::baseline`]).
+//!
+//! Algorithms: naive O(N^2) DFT oracle ([`dft`]), radix-2/radix-4
+//! Stockham autosort ([`stockham`]), the paper's radix-8 split-radix DIT
+//! butterfly ([`radix8`]), and the four-step decomposition for N > 4096
+//! ([`fourstep`]). [`plan`] exposes the planned, batched public API.
+
+pub mod convolve;
+pub mod dft;
+pub mod fourstep;
+pub mod plan;
+pub mod radix8;
+pub mod real;
+pub mod stockham;
+pub mod twiddle;
+
+/// Transform direction. Inverse is normalised by 1/N (vDSP convention is
+/// unnormalised; we follow numpy/jnp so artifacts and oracle agree).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Direction {
+    Forward,
+    Inverse,
+}
+
+impl Direction {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Direction::Forward => "fwd",
+            Direction::Inverse => "inv",
+        }
+    }
+}
+
+impl std::str::FromStr for Direction {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "fwd" | "forward" => Ok(Direction::Forward),
+            "inv" | "inverse" => Ok(Direction::Inverse),
+            other => anyhow::bail!("unknown direction {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Real-input FFT via the pack-complex trick — the transform radar
+//! front-ends actually need (ADC samples are real), and the API vDSP
+//! exposes as `vDSP_fft_zrop`.
+//!
+//! An N-point real FFT is computed as an N/2-point complex FFT of the
+//! even/odd-packed sequence plus an O(N) untangling pass:
+//!
+//! ```text
+//! z[m]   = x[2m] + i x[2m+1]            (pack)
+//! Z      = FFT_{N/2}(z)
+//! X[k]   = E[k] + e^{-2πik/N} O[k]      (untangle + combine)
+//! E[k]   = (Z[k] + conj(Z[N/2-k])) / 2
+//! O[k]   = (Z[k] - conj(Z[N/2-k])) / -2i
+//! ```
+//!
+//! Returns the non-redundant half-spectrum `X[0..=N/2]` (N/2 + 1 bins);
+//! the rest follows from conjugate symmetry `X[N-k] = conj(X[k])`.
+
+use super::plan::{NativePlanner, Variant};
+use super::Direction;
+use crate::util::complex::{SplitComplex, C32};
+use anyhow::{ensure, Result};
+
+/// Forward real FFT of one line. `x.len()` = N (power of two, >= 4);
+/// output length N/2 + 1 (split complex).
+pub fn rfft(planner: &NativePlanner, x: &[f32]) -> Result<SplitComplex> {
+    let n = x.len();
+    ensure!(n.is_power_of_two() && n >= 4, "rfft size {n} must be a power of two >= 4");
+    let half = n / 2;
+
+    // Pack even samples into re, odd into im.
+    let mut z = SplitComplex::zeros(half);
+    for m in 0..half {
+        z.re[m] = x[2 * m];
+        z.im[m] = x[2 * m + 1];
+    }
+    let zf = planner
+        .plan(half, Variant::Radix8)?
+        .execute_batch(&z, 1, Direction::Forward)?;
+
+    // Untangle.
+    let mut out = SplitComplex::zeros(half + 1);
+    for k in 0..=half {
+        let zk = if k == half { zf.get(0) } else { zf.get(k) };
+        let zn = if k == 0 { zf.get(0) } else { zf.get(half - k) };
+        let e = (zk + zn.conj()).scale(0.5);
+        // O[k] = (Z[k] - conj(Z[half-k])) / (2i)  ==  (..)*(-i)/2
+        let o = (zk - zn.conj()).mul_neg_i().scale(0.5);
+        let theta = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        let w = C32::new(theta.cos() as f32, theta.sin() as f32);
+        out.set(k, e + w * o);
+    }
+    Ok(out)
+}
+
+/// Inverse of [`rfft`]: half-spectrum (N/2 + 1 bins) -> N real samples.
+pub fn irfft(planner: &NativePlanner, spectrum: &SplitComplex, n: usize) -> Result<Vec<f32>> {
+    ensure!(n.is_power_of_two() && n >= 4, "irfft size {n}");
+    ensure!(spectrum.len() == n / 2 + 1, "spectrum must have N/2+1 bins");
+    let half = n / 2;
+
+    // Re-tangle: Z[k] = E[k] + i * W^{-k} O[k] ... inverted relations:
+    //   E[k] = (X[k] + conj(X[half-k])) / 2
+    //   O[k] = (X[k] - conj(X[half-k])) / 2 * e^{+2πik/N}
+    //   Z[k] = E[k] + i O[k]
+    let mut z = SplitComplex::zeros(half);
+    for k in 0..half {
+        let xk = spectrum.get(k);
+        let xn = spectrum.get(half - k);
+        let e = (xk + xn.conj()).scale(0.5);
+        let mut o = (xk - xn.conj()).scale(0.5);
+        let theta = 2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        o = o * C32::new(theta.cos() as f32, theta.sin() as f32);
+        z.set(k, e + o.mul_i());
+    }
+    let zt = planner
+        .plan(half, Variant::Radix8)?
+        .execute_batch(&z, 1, Direction::Inverse)?;
+
+    let mut out = vec![0.0f32; n];
+    for m in 0..half {
+        out[2 * m] = zt.re[m];
+        out[2 * m + 1] = zt.im[m];
+    }
+    Ok(out)
+}
+
+/// Batched forward real FFT over rows.
+pub fn rfft_batch(
+    planner: &NativePlanner,
+    x: &[f32],
+    n: usize,
+    batch: usize,
+) -> Result<SplitComplex> {
+    ensure!(x.len() == n * batch);
+    let mut out = SplitComplex::zeros((n / 2 + 1) * batch);
+    for b in 0..batch {
+        let line = rfft(planner, &x[b * n..(b + 1) * n])?;
+        let at = b * (n / 2 + 1);
+        out.re[at..at + line.len()].copy_from_slice(&line.re);
+        out.im[at..at + line.len()].copy_from_slice(&line.im);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft;
+    use crate::util::rng::Rng;
+
+    fn real_dft_reference(x: &[f32]) -> SplitComplex {
+        let n = x.len();
+        let full = dft(
+            &SplitComplex { re: x.to_vec(), im: vec![0.0; n] },
+            Direction::Forward,
+        );
+        full.slice(0, n / 2 + 1)
+    }
+
+    #[test]
+    fn rfft_matches_full_dft() {
+        let planner = NativePlanner::new();
+        let mut rng = Rng::new(40);
+        for &n in &[8usize, 64, 256, 1024] {
+            let x = rng.signal(n);
+            let got = rfft(&planner, &x).unwrap();
+            let want = real_dft_reference(&x);
+            let err = got.rel_l2_error(&want);
+            assert!(err < 2e-4, "n={n}: {err}");
+        }
+    }
+
+    #[test]
+    fn rfft_dc_and_nyquist_are_real() {
+        let planner = NativePlanner::new();
+        let mut rng = Rng::new(41);
+        let x = rng.signal(128);
+        let s = rfft(&planner, &x).unwrap();
+        assert!(s.im[0].abs() < 1e-4, "DC bin must be real");
+        assert!(s.im[64].abs() < 1e-4, "Nyquist bin must be real");
+    }
+
+    #[test]
+    fn irfft_roundtrip() {
+        let planner = NativePlanner::new();
+        let mut rng = Rng::new(42);
+        for &n in &[8usize, 256, 2048] {
+            let x = rng.signal(n);
+            let s = rfft(&planner, &x).unwrap();
+            let y = irfft(&planner, &s, n).unwrap();
+            let max: f32 = x
+                .iter()
+                .zip(&y)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f32::max);
+            assert!(max < 1e-4, "n={n}: max diff {max}");
+        }
+    }
+
+    #[test]
+    fn rfft_batch_matches_per_line() {
+        let planner = NativePlanner::new();
+        let mut rng = Rng::new(43);
+        let (n, batch) = (64usize, 3usize);
+        let x = rng.signal(n * batch);
+        let all = rfft_batch(&planner, &x, n, batch).unwrap();
+        for b in 0..batch {
+            let one = rfft(&planner, &x[b * n..(b + 1) * n]).unwrap();
+            let at = b * (n / 2 + 1);
+            assert_eq!(all.slice(at, n / 2 + 1), one);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        let planner = NativePlanner::new();
+        assert!(rfft(&planner, &[0.0; 3]).is_err());
+        let s = SplitComplex::zeros(5);
+        assert!(irfft(&planner, &s, 16).is_err());
+    }
+}

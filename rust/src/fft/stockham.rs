@@ -1,0 +1,250 @@
+//! Stockham autosort FFT stages (radix-2 and radix-4) and the generic
+//! multi-stage driver.
+//!
+//! The Stockham formulation (paper §II-B) reads from one buffer and
+//! writes to another with permuted indices each stage, producing ordered
+//! output with no bit-reversal pass. All index arithmetic below walks
+//! *contiguous* runs of length `s` — the "sequential access" property the
+//! paper identifies as the real performance lever on Apple GPUs.
+//!
+//! Stage invariant: sub-transform length `n` starts at N with stride
+//! `s = 1`; each radix-r stage maps `(n, s) -> (n/r, s*r)`, keeping
+//! `n * s = N`.
+
+use super::twiddle::{chain, PlanTables, StageTable};
+use crate::util::complex::C32;
+
+/// `1/sqrt(2)`, the W8 twist constant used by the radix-8 butterfly.
+pub const FRAC_1_SQRT_2: f32 = std::f32::consts::FRAC_1_SQRT_2;
+
+/// Split-complex view of one line used by the stage kernels.
+pub struct Line<'a> {
+    pub re: &'a [f32],
+    pub im: &'a [f32],
+}
+
+pub struct LineMut<'a> {
+    pub re: &'a mut [f32],
+    pub im: &'a mut [f32],
+}
+
+#[inline(always)]
+fn ld(x: &Line, i: usize) -> C32 {
+    C32::new(x.re[i], x.im[i])
+}
+
+#[inline(always)]
+fn st(y: &mut LineMut, i: usize, v: C32) {
+    y.re[i] = v.re;
+    y.im[i] = v.im;
+}
+
+/// One radix-2 DIF Stockham stage: `y[q + s(2p+k)] = DFT2(x)_k * w^{pk}`.
+pub fn radix2_stage(x: &Line, y: &mut LineMut, n: usize, s: usize, table: Option<&StageTable>) {
+    let m = n / 2;
+    for p in 0..m {
+        let w1 = match table {
+            Some(t) => t.get(p, 1),
+            None => chain::<2>(p, n)[1],
+        };
+        let (xa, xb) = (s * p, s * (p + m));
+        let (ya, yb) = (s * 2 * p, s * (2 * p + 1));
+        for q in 0..s {
+            let a = ld(x, xa + q);
+            let b = ld(x, xb + q);
+            st(y, ya + q, a + b);
+            st(y, yb + q, (a - b) * w1);
+        }
+    }
+}
+
+/// One radix-4 DIF Stockham stage. The DFT4 butterfly uses only
+/// additions and `±i` rotations; output k is twisted by `w^{pk}` with the
+/// twiddle chain `w2 = w1^2`, `w3 = w1^2 * w1` (paper §V-A opt. 1).
+pub fn radix4_stage(x: &Line, y: &mut LineMut, n: usize, s: usize, table: Option<&StageTable>) {
+    let m = n / 4;
+    for p in 0..m {
+        let [_, w1, w2, w3] = match table {
+            Some(t) => [t.get(p, 0), t.get(p, 1), t.get(p, 2), t.get(p, 3)],
+            None => chain::<4>(p, n),
+        };
+        let base_in = s * p;
+        let base_out = s * 4 * p;
+        for q in 0..s {
+            let a = ld(x, base_in + q);
+            let b = ld(x, base_in + s * m + q);
+            let c = ld(x, base_in + 2 * s * m + q);
+            let d = ld(x, base_in + 3 * s * m + q);
+            let apc = a + c;
+            let amc = a - c;
+            let bpd = b + d;
+            let bmd = b - d;
+            st(y, base_out + q, apc + bpd);
+            st(y, base_out + s + q, (amc - bmd.mul_i()) * w1);
+            st(y, base_out + 2 * s + q, (apc - bpd) * w2);
+            st(y, base_out + 3 * s + q, (amc + bmd.mul_i()) * w3);
+        }
+    }
+}
+
+/// Radix schedule for a transform of size `n` preferring the given
+/// maximum radix (8 -> paper's radix-8 kernel, 4 -> radix-4 baseline).
+/// Greedy: as many max-radix stages as possible, then 4s, then a final 2
+/// (paper Table V: N=512 is "4+1 radix-2", N=2048 "5+1 radix-2").
+pub fn radix_schedule(n: usize, max_radix: usize) -> Vec<usize> {
+    assert!(n.is_power_of_two() && n >= 2);
+    assert!(matches!(max_radix, 2 | 4 | 8));
+    let mut out = Vec::new();
+    let mut rem = n;
+    while rem >= max_radix && rem % max_radix == 0 {
+        out.push(max_radix);
+        rem /= max_radix;
+    }
+    while rem >= 4 && rem % 4 == 0 {
+        out.push(4);
+        rem /= 4;
+    }
+    if rem == 2 {
+        out.push(2);
+        rem = 1;
+    }
+    assert_eq!(rem, 1, "schedule must consume n");
+    out
+}
+
+/// Multi-stage Stockham driver for one line. `radices` in execution
+/// order; `tables` (if given) must match. The result is left in
+/// `(re, im)`; `(sre, sim)` is scratch of the same length.
+#[allow(clippy::too_many_arguments)]
+pub fn transform_line(
+    re: &mut [f32],
+    im: &mut [f32],
+    sre: &mut [f32],
+    sim: &mut [f32],
+    radices: &[usize],
+    tables: Option<&PlanTables>,
+) {
+    let n_total = re.len();
+    let levels = radices.len();
+    // Ping-pong: with an odd stage count, start from scratch so the final
+    // write lands back in (re, im).
+    let mut src_is_main = levels % 2 == 0;
+    if !src_is_main {
+        sre.copy_from_slice(re);
+        sim.copy_from_slice(im);
+    }
+    let mut n = n_total;
+    let mut s = 1usize;
+    for (li, &r) in radices.iter().enumerate() {
+        let table = tables.map(|t| &t.stages[li]);
+        // Split borrows between main and scratch according to direction.
+        if src_is_main {
+            let x = Line { re, im };
+            let mut y = LineMut { re: sre, im: sim };
+            dispatch_stage(&x, &mut y, r, n, s, table);
+        } else {
+            let x = Line { re: sre, im: sim };
+            let mut y = LineMut { re, im };
+            dispatch_stage(&x, &mut y, r, n, s, table);
+        }
+        src_is_main = !src_is_main;
+        n /= r;
+        s *= r;
+    }
+    debug_assert!(src_is_main, "result must end in the main buffer");
+}
+
+fn dispatch_stage(
+    x: &Line,
+    y: &mut LineMut,
+    radix: usize,
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+) {
+    match radix {
+        2 => radix2_stage(x, y, n, s, table),
+        4 => radix4_stage(x, y, n, s, table),
+        8 => super::radix8::radix8_stage(x, y, n, s, table),
+        other => panic!("unsupported radix {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft;
+    use crate::fft::Direction;
+    use crate::util::complex::SplitComplex;
+    use crate::util::rng::Rng;
+
+    fn run_stockham(x: &SplitComplex, max_radix: usize, tables: bool) -> SplitComplex {
+        let n = x.len();
+        let radices = radix_schedule(n, max_radix);
+        let pt = tables.then(|| PlanTables::for_radices(n, &radices));
+        let mut out = x.clone();
+        let mut sre = vec![0.0; n];
+        let mut sim = vec![0.0; n];
+        transform_line(&mut out.re, &mut out.im, &mut sre, &mut sim, &radices, pt.as_ref());
+        out
+    }
+
+    #[test]
+    fn schedules() {
+        assert_eq!(radix_schedule(4096, 8), vec![8, 8, 8, 8]);
+        assert_eq!(radix_schedule(2048, 8), vec![8, 8, 8, 4]);
+        assert_eq!(radix_schedule(1024, 8), vec![8, 8, 8, 2]);
+        assert_eq!(radix_schedule(512, 4), vec![4, 4, 4, 4, 2]);
+        assert_eq!(radix_schedule(4096, 4), vec![4, 4, 4, 4, 4, 4]);
+        assert_eq!(radix_schedule(2, 8), vec![2]);
+        assert_eq!(radix_schedule(8, 8), vec![8]);
+    }
+
+    #[test]
+    fn radix2_only_matches_dft() {
+        let mut rng = Rng::new(1);
+        for log2n in 1..=9 {
+            let n = 1 << log2n;
+            let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let want = dft(&x, Direction::Forward);
+            let radices = vec![2; log2n];
+            let mut got = x.clone();
+            let (mut sre, mut sim) = (vec![0.0; n], vec![0.0; n]);
+            transform_line(&mut got.re, &mut got.im, &mut sre, &mut sim, &radices, None);
+            assert!(got.rel_l2_error(&want) < 1e-4, "n={n}: {}", got.rel_l2_error(&want));
+        }
+    }
+
+    #[test]
+    fn radix4_matches_dft() {
+        let mut rng = Rng::new(2);
+        for &n in &[4usize, 16, 64, 256, 1024, 4096] {
+            let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let want = dft(&x, Direction::Forward);
+            let got = run_stockham(&x, 4, false);
+            assert!(got.rel_l2_error(&want) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn mixed_radix_sizes_match_dft() {
+        let mut rng = Rng::new(3);
+        for &n in &[8usize, 32, 128, 512, 2048] {
+            let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let want = dft(&x, Direction::Forward);
+            let got = run_stockham(&x, 4, false);
+            assert!(got.rel_l2_error(&want) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn tables_match_chain_path() {
+        let mut rng = Rng::new(4);
+        for &n in &[64usize, 512, 4096] {
+            let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let a = run_stockham(&x, 4, false);
+            let b = run_stockham(&x, 4, true);
+            assert!(a.rel_l2_error(&b) < 1e-5, "n={n}");
+        }
+    }
+}

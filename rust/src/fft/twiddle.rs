@@ -1,0 +1,155 @@
+//! Twiddle factor generation.
+//!
+//! Two strategies, mirroring the paper's §V-A optimization 1:
+//!
+//! * [`chain`] — "single sincos per butterfly": compute `w1` with one
+//!   sincos, derive `w2..w_{r-1}` by successive complex multiplication.
+//!   This is what the paper's Metal kernels do (3x fewer transcendental
+//!   evaluations for radix-4, 7x for radix-8).
+//! * [`Table`] — fully precomputed per-stage tables (the classic CPU
+//!   approach; used by the performance-optimized native path and matching
+//!   what the AOT artifacts do, where twiddles are traced to constants).
+//!
+//! Both are kept so the ablation bench can measure the difference.
+
+use crate::util::complex::C32;
+
+/// Compute `[w^0, w^1, ..., w^{r-1}]` for `w = e^{-2πi p/n}` using one
+/// sincos plus `r-2` complex multiplies (the paper's chain trick).
+pub fn chain<const R: usize>(p: usize, n: usize) -> [C32; R] {
+    let theta = -2.0 * std::f64::consts::PI * (p as f64) / (n as f64);
+    let w1 = C32::new(theta.cos() as f32, theta.sin() as f32);
+    let mut out = [C32::ONE; R];
+    if R > 1 {
+        out[1] = w1;
+        for k in 2..R {
+            out[k] = out[k - 1] * w1;
+        }
+    }
+    out
+}
+
+/// Precomputed twiddles for one Stockham stage: for stage parameter `n`
+/// (current sub-transform length) and radix `r`, stores `w^{p*k}` for
+/// `p in 0..n/r`, `k in 0..r`, flattened as `[p][k]`.
+#[derive(Debug, Clone)]
+pub struct StageTable {
+    pub n: usize,
+    pub radix: usize,
+    /// len = (n/radix) * radix
+    pub w: Vec<C32>,
+}
+
+impl StageTable {
+    pub fn new(n: usize, radix: usize) -> StageTable {
+        let m = n / radix;
+        let mut w = Vec::with_capacity(m * radix);
+        for p in 0..m {
+            let theta0 = -2.0 * std::f64::consts::PI * (p as f64) / (n as f64);
+            for k in 0..radix {
+                let th = theta0 * k as f64;
+                w.push(C32::new(th.cos() as f32, th.sin() as f32));
+            }
+        }
+        StageTable { n, radix, w }
+    }
+
+    #[inline(always)]
+    pub fn get(&self, p: usize, k: usize) -> C32 {
+        self.w[p * self.radix + k]
+    }
+}
+
+/// Twiddle tables for a whole plan: one [`StageTable`] per stage, in
+/// execution order.
+#[derive(Debug, Clone, Default)]
+pub struct PlanTables {
+    pub stages: Vec<StageTable>,
+}
+
+impl PlanTables {
+    /// Tables for a Stockham run of total size `n_total` with the given
+    /// per-stage radices (product must equal `n_total`).
+    pub fn for_radices(n_total: usize, radices: &[usize]) -> PlanTables {
+        assert_eq!(radices.iter().product::<usize>(), n_total);
+        let mut stages = Vec::new();
+        let mut n = n_total;
+        for &r in radices {
+            stages.push(StageTable::new(n, r));
+            n /= r;
+        }
+        PlanTables { stages }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.stages.iter().map(|s| s.w.len() * 8).sum()
+    }
+}
+
+/// Twiddle matrix for the four-step decomposition: `W_N^{n2*k1}` for the
+/// `(N1, N2)` split, stored as `[k1][n2]` row-major, with direction sign.
+pub fn fourstep_twiddles(n1: usize, n2: usize, inverse: bool) -> Vec<C32> {
+    let n = n1 * n2;
+    let sign = if inverse { 2.0 } else { -2.0 };
+    let mut out = Vec::with_capacity(n);
+    for k1 in 0..n1 {
+        for j2 in 0..n2 {
+            let idx = (k1 * j2) % n;
+            let theta = sign * std::f64::consts::PI * (idx as f64) / (n as f64);
+            out.push(C32::new(theta.cos() as f32, theta.sin() as f32));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_matches_direct() {
+        let (p, n) = (5, 64);
+        let ws: [C32; 8] = chain(p, n);
+        for (k, w) in ws.iter().enumerate() {
+            let theta = -2.0 * std::f64::consts::PI * (p * k) as f64 / n as f64;
+            let direct = C32::new(theta.cos() as f32, theta.sin() as f32);
+            assert!((*w - direct).abs() < 1e-5, "k={k}: {w:?} vs {direct:?}");
+        }
+    }
+
+    #[test]
+    fn chain_radix1_is_identity() {
+        let ws: [C32; 1] = chain(3, 8);
+        assert_eq!(ws[0], C32::ONE);
+    }
+
+    #[test]
+    fn table_matches_chain() {
+        let t = StageTable::new(64, 8);
+        for p in 0..8 {
+            let ws: [C32; 8] = chain(p, 64);
+            for k in 0..8 {
+                assert!((t.get(p, k) - ws[k]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_tables_sizes() {
+        let pt = PlanTables::for_radices(4096, &[8, 8, 8, 8]);
+        assert_eq!(pt.stages.len(), 4);
+        assert_eq!(pt.stages[0].n, 4096);
+        assert_eq!(pt.stages[3].n, 8);
+        assert!(pt.bytes() > 0);
+    }
+
+    #[test]
+    fn fourstep_twiddle_symmetry() {
+        // Forward and inverse twiddles are conjugates.
+        let f = fourstep_twiddles(4, 16, false);
+        let i = fourstep_twiddles(4, 16, true);
+        for (a, b) in f.iter().zip(&i) {
+            assert!((*a - b.conj()).abs() < 1e-6);
+        }
+    }
+}

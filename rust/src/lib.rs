@@ -1,0 +1,32 @@
+//! # applefft — "Beating vDSP" reproduction
+//!
+//! Three-layer reproduction of Bergach's radix-8 Stockham FFT system for
+//! Apple Silicon (CS.DC 2026):
+//!
+//! * **L1/L2** live in `python/compile/` (Pallas kernels + JAX graphs),
+//!   AOT-lowered to HLO text artifacts at build time.
+//! * **L3** is this crate: a batched-FFT serving coordinator
+//!   ([`coordinator`]) executing the artifacts through the PJRT CPU client
+//!   ([`runtime`]), with a native split-complex FFT library ([`fft`]) as
+//!   the vDSP stand-in / numerical oracle, an Apple-M1-GPU cost-model
+//!   simulator ([`sim`]) that regenerates every performance table and
+//!   figure in the paper, and a synthetic SAR workload generator ([`sar`])
+//!   for the paper's motivating radar application.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod fft;
+pub mod runtime;
+pub mod sar;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+
+pub use coordinator::service::{FftService, ServiceConfig};
+pub use fft::plan::NativePlanner;
+pub use util::complex::SplitComplex;

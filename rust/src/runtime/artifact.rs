@@ -1,0 +1,202 @@
+//! Artifact manifest: metadata for every AOT-compiled executable.
+//!
+//! Parsed from `artifacts/manifest.txt` (the line-based format of
+//! [`crate::config`], emitted by `python/compile/aot.py`). When no
+//! artifacts directory exists, [`Registry::default_set`] synthesises the
+//! standard artifact list so the native fallback backend can serve the
+//! same names.
+
+use crate::config::Document;
+use crate::fft::Direction;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// What computation an artifact performs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Batched FFT: inputs (re, im), outputs (re, im), shape (batch, n).
+    Fft,
+    /// Fused range compression: inputs (xr, xi, hr, hi), outputs (re, im).
+    RangeComp,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fft" => Ok(ArtifactKind::Fft),
+            "rangecomp" => Ok(ArtifactKind::RangeComp),
+            other => bail!("unknown artifact kind {other:?}"),
+        }
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        match self {
+            ArtifactKind::Fft => 2,
+            ArtifactKind::RangeComp => 4,
+        }
+    }
+}
+
+/// Metadata for one compiled executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// FFT length.
+    pub n: usize,
+    /// Batch tile the HLO was specialised for.
+    pub batch: usize,
+    /// Kernel variant tag: radix8 | radix4 | mma | shuffle.
+    pub variant: String,
+    pub direction: Direction,
+    /// HLO text path (absent for synthesised native-fallback entries).
+    pub file: Option<PathBuf>,
+}
+
+/// The set of available artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    pub batch_tile: usize,
+    artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Registry {
+    /// Load from `dir/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let manifest = dir.join("manifest.txt");
+        let doc = Document::load(&manifest)?;
+        let batch_tile = doc
+            .preamble
+            .get("batch_tile")
+            .unwrap_or("32")
+            .parse()
+            .context("batch_tile")?;
+        let mut artifacts = BTreeMap::new();
+        for sec in &doc.sections {
+            let meta = ArtifactMeta {
+                name: sec.name.clone(),
+                kind: ArtifactKind::parse(sec.require("kind")?)?,
+                n: sec.get_usize("n")?,
+                batch: sec.get_usize("batch")?,
+                variant: sec.require("variant")?.to_string(),
+                direction: sec.require("direction")?.parse()?,
+                file: Some(dir.join(sec.require("file")?)),
+            };
+            if let Some(f) = &meta.file {
+                if !f.exists() {
+                    bail!("manifest entry [{}] points at missing file {}", meta.name, f.display());
+                }
+            }
+            artifacts.insert(sec.name.clone(), meta);
+        }
+        if artifacts.is_empty() {
+            bail!("manifest {} lists no artifacts", manifest.display());
+        }
+        Ok(Registry { batch_tile, artifacts })
+    }
+
+    /// The standard artifact set with no backing files (for the native
+    /// fallback backend). Mirrors `python/compile/aot.py::artifact_list`.
+    pub fn default_set(batch_tile: usize) -> Registry {
+        let mut artifacts = BTreeMap::new();
+        let mut add = |name: String, kind, n, variant: &str, direction| {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name,
+                    kind,
+                    n,
+                    batch: batch_tile,
+                    variant: variant.to_string(),
+                    direction,
+                    file: None,
+                },
+            );
+        };
+        for n in [256usize, 512, 1024, 2048, 4096, 8192, 16384] {
+            add(format!("fft{n}_fwd"), ArtifactKind::Fft, n, "radix8", Direction::Forward);
+            add(format!("fft{n}_inv"), ArtifactKind::Fft, n, "radix8", Direction::Inverse);
+        }
+        for variant in ["radix4", "mma", "shuffle"] {
+            add(
+                format!("fft4096_fwd_{variant}"),
+                ArtifactKind::Fft,
+                4096,
+                variant,
+                Direction::Forward,
+            );
+        }
+        add("rangecomp4096".to_string(), ArtifactKind::RangeComp, 4096, "radix8", Direction::Forward);
+        Registry { batch_tile, artifacts }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?} (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// Canonical artifact name for a batched FFT of size `n`.
+    pub fn fft_name(n: usize, direction: Direction) -> String {
+        format!("fft{n}_{}", direction.tag())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.artifacts.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_set_has_standard_names() {
+        let r = Registry::default_set(32);
+        assert_eq!(r.batch_tile, 32);
+        assert_eq!(r.len(), 18);
+        assert!(r.get("fft4096_fwd").is_ok());
+        assert!(r.get("fft16384_inv").is_ok());
+        assert!(r.get("fft4096_fwd_mma").is_ok());
+        assert!(r.get("rangecomp4096").is_ok());
+        assert!(r.get("fft999_fwd").is_err());
+    }
+
+    #[test]
+    fn fft_name_roundtrip() {
+        assert_eq!(Registry::fft_name(4096, Direction::Forward), "fft4096_fwd");
+        assert_eq!(Registry::fft_name(512, Direction::Inverse), "fft512_inv");
+    }
+
+    #[test]
+    fn load_rejects_missing_dir() {
+        assert!(Registry::load(Path::new("/nonexistent/dir")).is_err());
+    }
+
+    #[test]
+    fn load_real_manifest_if_present() {
+        // Integration-style: only meaningful after `make artifacts`.
+        let dir = crate::runtime::engine::artifacts_dir();
+        if dir.join("manifest.txt").exists() {
+            let r = Registry::load(&dir).unwrap();
+            assert!(r.len() >= 18, "expected >= 18 artifacts, got {}", r.len());
+            let meta = r.get("fft4096_fwd").unwrap();
+            assert_eq!(meta.n, 4096);
+            assert_eq!(meta.kind, ArtifactKind::Fft);
+            assert!(meta.file.as_ref().unwrap().exists());
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! The device thread: owns the (non-`Send`) PJRT client and every
+//! compiled executable, and services execution jobs from a channel —
+//! the analog of a Metal command queue.
+
+use super::artifact::{ArtifactMeta, Registry};
+use super::fallback::NativeExec;
+use crate::util::complex::SplitComplex;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+/// One execution request: artifact name + input tensors, each a
+/// `(batch, n)` or `(n,)` split-complex-half f32 buffer (the artifact's
+/// input arity and shapes are defined by its manifest entry).
+pub struct Job {
+    pub artifact: String,
+    /// Flat f32 input tensors in artifact order (e.g. re, im).
+    pub inputs: Vec<Vec<f32>>,
+    /// Dims for each input tensor.
+    pub dims: Vec<Vec<usize>>,
+    pub reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+}
+
+/// Backend selection for the device thread.
+pub enum DeviceBackend {
+    /// Real PJRT CPU client executing AOT HLO artifacts.
+    Pjrt,
+    /// Native Rust FFT library (no artifacts needed).
+    Native,
+}
+
+/// Device-thread main loop. Consumes jobs until the channel closes.
+pub fn run_device(registry: Registry, backend: DeviceBackend, rx: mpsc::Receiver<Job>) {
+    match backend {
+        DeviceBackend::Pjrt => match PjrtDevice::new(registry) {
+            Ok(mut dev) => {
+                while let Ok(job) = rx.recv() {
+                    let result = dev.execute(&job);
+                    let _ = job.reply.send(result);
+                }
+            }
+            Err(e) => {
+                // Fail every job with the startup error.
+                let msg = format!("PJRT device failed to start: {e:#}");
+                while let Ok(job) = rx.recv() {
+                    let _ = job.reply.send(Err(anyhow!("{msg}")));
+                }
+            }
+        },
+        DeviceBackend::Native => {
+            let dev = NativeExec::new(registry);
+            while let Ok(job) = rx.recv() {
+                let result = dev.execute(&job);
+                let _ = job.reply.send(result);
+            }
+        }
+    }
+}
+
+/// PJRT-backed device: compiles artifacts lazily and caches executables.
+struct PjrtDevice {
+    client: xla::PjRtClient,
+    registry: Registry,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtDevice {
+    fn new(registry: Registry) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtDevice { client, registry, executables: HashMap::new() })
+    }
+
+    fn load(&mut self, meta: &ArtifactMeta) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(&meta.name) {
+            let path = meta
+                .file
+                .as_ref()
+                .with_context(|| format!("artifact {} has no HLO file", meta.name))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", meta.name))?;
+            self.executables.insert(meta.name.clone(), exe);
+        }
+        Ok(&self.executables[&meta.name])
+    }
+
+    fn execute(&mut self, job: &Job) -> Result<Vec<Vec<f32>>> {
+        let meta = self.registry.get(&job.artifact)?.clone();
+        ensure!(
+            job.inputs.len() == meta.kind.num_inputs(),
+            "artifact {} expects {} inputs, got {}",
+            meta.name,
+            meta.kind.num_inputs(),
+            job.inputs.len()
+        );
+        let exe = self.load(&meta)?;
+        let literals: Vec<xla::Literal> = job
+            .inputs
+            .iter()
+            .zip(&job.dims)
+            .map(|(data, dims)| {
+                let lit = xla::Literal::vec1(data);
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64)
+                    .map_err(|e| anyhow!("reshaping input to {dims:?}: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}: {e}", meta.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", meta.name))?;
+        // aot.py lowers with return_tuple=True: always a tuple literal.
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling: {e}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("reading output: {e}")))
+            .collect()
+    }
+}
+
+/// Helper for jobs: split-complex pair -> the two flat input tensors.
+pub fn split_inputs(x: &SplitComplex, batch: usize, n: usize) -> (Vec<Vec<f32>>, Vec<Vec<usize>>) {
+    (
+        vec![x.re.clone(), x.im.clone()],
+        vec![vec![batch, n], vec![batch, n]],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_inputs_shapes() {
+        let x = SplitComplex::zeros(8);
+        let (inputs, dims) = split_inputs(&x, 2, 4);
+        assert_eq!(inputs.len(), 2);
+        assert_eq!(dims, vec![vec![2, 4], vec![2, 4]]);
+    }
+}

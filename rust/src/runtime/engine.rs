@@ -1,0 +1,226 @@
+//! [`Engine`] — the thread-safe handle to the device thread.
+
+use super::artifact::Registry;
+use super::device::{run_device, DeviceBackend, Job};
+use crate::fft::Direction;
+use crate::util::complex::SplitComplex;
+use anyhow::{anyhow, Context, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Which execution backend to start.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// AOT HLO artifacts on the PJRT CPU client (requires `make artifacts`).
+    Pjrt,
+    /// Native Rust FFT library (always available).
+    Native,
+    /// Pjrt if the artifacts directory exists, else Native.
+    Auto,
+}
+
+/// Default artifacts directory: `$APPLEFFT_ARTIFACTS` or `<repo>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("APPLEFFT_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    // CARGO_MANIFEST_DIR is compiled in, so tests and binaries agree.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Cloneable handle; the device thread exits when every handle (and its
+/// job sender) is dropped.
+#[derive(Clone)]
+pub struct Engine {
+    tx: mpsc::Sender<Job>,
+    registry: Registry,
+    backend_used: Backend,
+    /// Keeps the device join handle alive for diagnostics.
+    _device: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
+}
+
+impl Engine {
+    /// Start an engine with the default artifacts directory.
+    pub fn start(backend: Backend) -> Result<Engine> {
+        Self::start_with_dir(backend, &artifacts_dir())
+    }
+
+    pub fn start_with_dir(backend: Backend, dir: &std::path::Path) -> Result<Engine> {
+        let (resolved, registry) = match backend {
+            Backend::Pjrt => (Backend::Pjrt, Registry::load(dir)?),
+            Backend::Native => (Backend::Native, Registry::default_set(32)),
+            Backend::Auto => {
+                if dir.join("manifest.txt").exists() {
+                    (Backend::Pjrt, Registry::load(dir)?)
+                } else {
+                    (Backend::Native, Registry::default_set(32))
+                }
+            }
+        };
+        let device_backend = match resolved {
+            Backend::Pjrt => DeviceBackend::Pjrt,
+            _ => DeviceBackend::Native,
+        };
+        let (tx, rx) = mpsc::channel();
+        let reg_clone = registry.clone();
+        let handle = std::thread::Builder::new()
+            .name("applefft-device".to_string())
+            .spawn(move || run_device(reg_clone, device_backend, rx))
+            .context("spawning device thread")?;
+        Ok(Engine {
+            tx,
+            registry,
+            backend_used: resolved,
+            _device: Arc::new(Mutex::new(Some(handle))),
+        })
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend_used
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn batch_tile(&self) -> usize {
+        self.registry.batch_tile
+    }
+
+    /// Eagerly compile every FFT artifact by executing a zero batch
+    /// through each, removing the first-request compile spike (0.5-2 s
+    /// per artifact on this testbed — see EXPERIMENTS.md §Perf).
+    /// No-op on the native backend.
+    pub fn warm_all(&self) -> Result<()> {
+        if self.backend_used != Backend::Pjrt {
+            return Ok(());
+        }
+        let metas: Vec<_> = self
+            .registry
+            .iter()
+            .filter(|m| m.kind == super::artifact::ArtifactKind::Fft)
+            .map(|m| (m.name.clone(), m.n, m.batch))
+            .collect();
+        for (name, n, batch) in metas {
+            let zeros = vec![0.0f32; n * batch];
+            self.execute_raw(
+                &name,
+                vec![zeros.clone(), zeros],
+                vec![vec![batch, n], vec![batch, n]],
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Raw execution: artifact name + flat input tensors with dims.
+    pub fn execute_raw(
+        &self,
+        artifact: &str,
+        inputs: Vec<Vec<f32>>,
+        dims: Vec<Vec<usize>>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job { artifact: artifact.to_string(), inputs, dims, reply })
+            .map_err(|_| anyhow!("device thread has exited"))?;
+        rx.recv().map_err(|_| anyhow!("device thread dropped the job"))?
+    }
+
+    /// Batched FFT through the artifact for size `n`. `x` is `(batch, n)`
+    /// row-major split-complex; `batch` must equal the artifact's batch
+    /// tile (the coordinator's batcher guarantees this on the hot path).
+    pub fn fft_batch(
+        &self,
+        x: &SplitComplex,
+        n: usize,
+        batch: usize,
+        direction: Direction,
+    ) -> Result<SplitComplex> {
+        let name = Registry::fft_name(n, direction);
+        let meta = self.registry.get(&name)?;
+        anyhow::ensure!(
+            batch == meta.batch,
+            "artifact {name} is specialised for batch {}, got {batch}",
+            meta.batch
+        );
+        let out = self.execute_raw(
+            &name,
+            vec![x.re.clone(), x.im.clone()],
+            vec![vec![batch, n], vec![batch, n]],
+        )?;
+        Ok(SplitComplex { re: out[0].clone(), im: out[1].clone() })
+    }
+
+    /// Fused range compression (batch, n) with filter (n,).
+    pub fn range_compress(
+        &self,
+        x: &SplitComplex,
+        h: &SplitComplex,
+        n: usize,
+        batch: usize,
+    ) -> Result<SplitComplex> {
+        let name = format!("rangecomp{n}");
+        let out = self.execute_raw(
+            &name,
+            vec![x.re.clone(), x.im.clone(), h.re.clone(), h.im.clone()],
+            vec![vec![batch, n], vec![batch, n], vec![n], vec![n]],
+        )?;
+        Ok(SplitComplex { re: out[0].clone(), im: out[1].clone() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft_batch;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_engine_round_trip() {
+        let engine = Engine::start(Backend::Native).unwrap();
+        assert_eq!(engine.backend(), Backend::Native);
+        let mut rng = Rng::new(60);
+        let (n, batch) = (256, 32);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let y = engine.fft_batch(&x, n, batch, Direction::Forward).unwrap();
+        let z = engine.fft_batch(&y, n, batch, Direction::Inverse).unwrap();
+        assert!(z.rel_l2_error(&x) < 1e-4);
+    }
+
+    #[test]
+    fn native_engine_matches_oracle_small() {
+        let engine = Engine::start(Backend::Native).unwrap();
+        let mut rng = Rng::new(61);
+        let (n, batch) = (512, 32);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let y = engine.fft_batch(&x, n, batch, Direction::Forward).unwrap();
+        let want = dft_batch(&x, n, batch, Direction::Forward);
+        assert!(y.rel_l2_error(&want) < 2e-4);
+    }
+
+    #[test]
+    fn engine_is_clone_and_shareable() {
+        let engine = Engine::start(Backend::Native).unwrap();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let e = engine.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                let (n, batch) = (256, 32);
+                let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+                e.fft_batch(&x, n, batch, Direction::Forward).unwrap().len()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 256 * 32);
+        }
+    }
+
+    #[test]
+    fn wrong_batch_is_rejected() {
+        let engine = Engine::start(Backend::Native).unwrap();
+        let x = SplitComplex::zeros(256 * 7);
+        assert!(engine.fft_batch(&x, 256, 7, Direction::Forward).is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Native-FFT execution backend: serves the same artifact names as the
+//! PJRT device from the S1 library, so the full coordinator stack (and
+//! `cargo test`) works before/without `make artifacts`, and so every
+//! PJRT result has an in-process oracle to diff against.
+
+use super::artifact::{ArtifactKind, Registry};
+use super::device::Job;
+use crate::fft::plan::{NativePlanner, Variant};
+use crate::util::complex::{SplitComplex, C32};
+use anyhow::{ensure, Result};
+
+pub struct NativeExec {
+    registry: Registry,
+    planner: NativePlanner,
+}
+
+impl NativeExec {
+    pub fn new(registry: Registry) -> Self {
+        NativeExec { registry, planner: NativePlanner::new() }
+    }
+
+    pub fn execute(&self, job: &Job) -> Result<Vec<Vec<f32>>> {
+        let meta = self.registry.get(&job.artifact)?;
+        ensure!(
+            job.inputs.len() == meta.kind.num_inputs(),
+            "artifact {} expects {} inputs, got {}",
+            meta.name,
+            meta.kind.num_inputs(),
+            job.inputs.len()
+        );
+        let (n, batch) = (meta.n, meta.batch);
+        // All artifact variants compute the same transform; the native
+        // library distinguishes only the radix schedule.
+        let variant = if meta.variant == "radix4" { Variant::Radix4 } else { Variant::Radix8 };
+        match meta.kind {
+            ArtifactKind::Fft => {
+                ensure!(job.inputs[0].len() == n * batch, "input size mismatch");
+                let x = SplitComplex { re: job.inputs[0].clone(), im: job.inputs[1].clone() };
+                let y = self.planner.plan(n, variant)?.execute_batch(&x, batch, meta.direction)?;
+                Ok(vec![y.re, y.im])
+            }
+            ArtifactKind::RangeComp => {
+                ensure!(job.inputs[0].len() == n * batch, "line size mismatch");
+                ensure!(job.inputs[2].len() == n, "filter size mismatch");
+                let x = SplitComplex { re: job.inputs[0].clone(), im: job.inputs[1].clone() };
+                let h = SplitComplex { re: job.inputs[2].clone(), im: job.inputs[3].clone() };
+                let plan = self.planner.plan(n, variant)?;
+                let mut s = plan.execute_batch(&x, batch, crate::fft::Direction::Forward)?;
+                for b in 0..batch {
+                    for i in 0..n {
+                        let v = s.get(b * n + i) * C32::new(h.re[i], h.im[i]);
+                        s.set(b * n + i, v);
+                    }
+                }
+                let y = plan.execute_batch(&s, batch, crate::fft::Direction::Inverse)?;
+                Ok(vec![y.re, y.im])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft_batch;
+    use crate::fft::Direction;
+    use crate::util::rng::Rng;
+    use std::sync::mpsc;
+
+    fn make_job(artifact: &str, inputs: Vec<Vec<f32>>, dims: Vec<Vec<usize>>) -> (Job, mpsc::Receiver<Result<Vec<Vec<f32>>>>) {
+        let (tx, rx) = mpsc::channel();
+        (Job { artifact: artifact.into(), inputs, dims, reply: tx }, rx)
+    }
+
+    #[test]
+    fn native_exec_fft_matches_oracle() {
+        let reg = Registry::default_set(4);
+        let exec = NativeExec::new(reg);
+        let mut rng = Rng::new(50);
+        let (n, batch) = (256, 4);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let (job, _rx) = make_job(
+            "fft256_fwd",
+            vec![x.re.clone(), x.im.clone()],
+            vec![vec![batch, n], vec![batch, n]],
+        );
+        let out = exec.execute(&job).unwrap();
+        let got = SplitComplex { re: out[0].clone(), im: out[1].clone() };
+        let want = dft_batch(&x, n, batch, Direction::Forward);
+        assert!(got.rel_l2_error(&want) < 2e-4);
+    }
+
+    #[test]
+    fn native_exec_rangecomp_runs() {
+        let reg = Registry::default_set(2);
+        let exec = NativeExec::new(reg);
+        let mut rng = Rng::new(51);
+        let (n, batch) = (4096, 2);
+        let (job, _rx) = make_job(
+            "rangecomp4096",
+            vec![rng.signal(n * batch), rng.signal(n * batch), rng.signal(n), rng.signal(n)],
+            vec![vec![batch, n], vec![batch, n], vec![n], vec![n]],
+        );
+        let out = exec.execute(&job).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].len(), n * batch);
+        assert!(out[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn native_exec_rejects_bad_arity() {
+        let reg = Registry::default_set(4);
+        let exec = NativeExec::new(reg);
+        let (job, _rx) = make_job("fft256_fwd", vec![vec![0.0; 1024]], vec![vec![4, 256]]);
+        assert!(exec.execute(&job).is_err());
+    }
+
+    #[test]
+    fn native_exec_unknown_artifact() {
+        let reg = Registry::default_set(4);
+        let exec = NativeExec::new(reg);
+        let (job, _rx) = make_job("nope", vec![], vec![]);
+        assert!(exec.execute(&job).is_err());
+    }
+}

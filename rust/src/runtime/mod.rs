@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! and executes them from the L3 request path. Python is never involved
+//! at runtime — the interchange is HLO text + the manifest.
+//!
+//! Threading model: the `xla` crate's `PjRtClient` wraps an `Rc` and is
+//! not `Send`, so a dedicated **device thread** owns the client and all
+//! compiled executables — an accurate analog of the single Metal command
+//! queue the paper's Swift host dispatches into. [`Engine`] is the
+//! cloneable, thread-safe handle; jobs flow over an mpsc channel and
+//! results return over per-job reply channels.
+//!
+//! A [`Backend::Native`] engine serves the same interface from the
+//! native Rust FFT library (S1), so the whole coordinator stack works —
+//! and `cargo test` is meaningful — before `make artifacts` has run.
+
+pub mod artifact;
+pub mod device;
+pub mod engine;
+pub mod fallback;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, Registry};
+pub use engine::{Backend, Engine};

@@ -1,0 +1,124 @@
+//! Linear FM (chirp) waveform generation and its matched filter.
+
+use crate::util::complex::{SplitComplex, C32};
+
+/// A baseband linear-FM chirp: `s(t) = exp(i pi K t^2)` over the pulse
+/// duration, sampled at `fs`.
+#[derive(Clone, Copy, Debug)]
+pub struct Chirp {
+    /// Sample rate, Hz.
+    pub fs: f64,
+    /// Pulse length in samples.
+    pub samples: usize,
+    /// Chirp rate K, Hz/s.
+    pub rate: f64,
+}
+
+impl Chirp {
+    /// A chirp with the given time-bandwidth product occupying
+    /// `bandwidth_frac` of the sampling bandwidth.
+    pub fn new(fs: f64, samples: usize, bandwidth_frac: f64) -> Chirp {
+        assert!(samples > 0);
+        assert!((0.0..=1.0).contains(&bandwidth_frac));
+        let t_pulse = samples as f64 / fs;
+        let bandwidth = bandwidth_frac * fs;
+        Chirp { fs, samples, rate: bandwidth / t_pulse }
+    }
+
+    /// Complex baseband samples of the transmitted pulse (centred time
+    /// axis so the spectrum is symmetric).
+    pub fn samples_split(&self) -> SplitComplex {
+        let mut out = SplitComplex::zeros(self.samples);
+        let t0 = self.samples as f64 / 2.0;
+        for i in 0..self.samples {
+            let t = (i as f64 - t0) / self.fs;
+            let phase = std::f64::consts::PI * self.rate * t * t;
+            out.set(i, C32::new(phase.cos() as f32, phase.sin() as f32));
+        }
+        out
+    }
+
+    /// Time-bandwidth product (= compression gain).
+    pub fn tbp(&self) -> f64 {
+        let t_pulse = self.samples as f64 / self.fs;
+        self.rate * t_pulse * t_pulse
+    }
+
+    /// Matched filter in the frequency domain for an `n`-point range
+    /// line: conj(FFT(s)) with the pulse zero-padded to `n`, optionally
+    /// windowed (sidelobe control).
+    pub fn matched_filter(
+        &self,
+        n: usize,
+        window: Option<&dyn Fn(usize, usize) -> f32>,
+    ) -> SplitComplex {
+        assert!(n >= self.samples, "range line shorter than the pulse");
+        let pulse = self.samples_split();
+        let mut padded = SplitComplex::zeros(n);
+        for i in 0..self.samples {
+            let w = window.map(|f| f(i, self.samples)).unwrap_or(1.0);
+            padded.set(i, pulse.get(i).scale(w));
+        }
+        let planner = crate::fft::plan::NativePlanner::new();
+        let spec = planner
+            .fft_batch(&padded, n, 1, crate::fft::Direction::Forward)
+            .expect("pulse FFT");
+        let mut h = SplitComplex::zeros(n);
+        for i in 0..n {
+            h.set(i, spec.get(i).conj());
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_magnitude_samples() {
+        let c = Chirp::new(100e6, 512, 0.8);
+        let s = c.samples_split();
+        for i in 0..s.len() {
+            assert!((s.get(i).abs() - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn tbp_is_compression_gain() {
+        // 512 samples at 100 MHz, 80% bandwidth: TBP = B*T = 0.8*512 ~ 410.
+        let c = Chirp::new(100e6, 512, 0.8);
+        assert!((c.tbp() - 409.6).abs() < 0.5, "{}", c.tbp());
+    }
+
+    #[test]
+    fn matched_filter_focuses_pulse() {
+        // Correlating the pulse with its own matched filter must produce
+        // a peak of height ~samples at the pulse start bin.
+        let c = Chirp::new(100e6, 256, 0.7);
+        let n = 1024;
+        let h = c.matched_filter(n, None);
+        let mut line = SplitComplex::zeros(n);
+        let pulse = c.samples_split();
+        for i in 0..c.samples {
+            line.set(i, pulse.get(i));
+        }
+        let planner = crate::fft::plan::NativePlanner::new();
+        let spec = planner.fft_batch(&line, n, 1, crate::fft::Direction::Forward).unwrap();
+        let mut prod = SplitComplex::zeros(n);
+        for i in 0..n {
+            prod.set(i, spec.get(i) * h.get(i));
+        }
+        let out = planner.fft_batch(&prod, n, 1, crate::fft::Direction::Inverse).unwrap();
+        let (mut best, mut best_i) = (0.0f32, 0usize);
+        for i in 0..n {
+            let m = out.get(i).abs();
+            if m > best {
+                best = m;
+                best_i = i;
+            }
+        }
+        assert_eq!(best_i, 0, "autocorrelation peaks at lag 0");
+        assert!(best > 0.8 * c.samples as f32, "peak {best}");
+    }
+}

@@ -1,0 +1,23 @@
+//! SAR (Synthetic Aperture Radar) substrate — the paper's motivating
+//! workload (§I, §II-D, §VII-D).
+//!
+//! The paper frames everything around batched range compression: each
+//! received echo line is correlated with the transmitted chirp by
+//! FFT -> matched-filter multiply -> IFFT, across hundreds of azimuth
+//! lines per block. We have no radar, so [`scene`] synthesises point
+//! -target echo trains (the standard SAR testbench) and [`range`] runs
+//! compression through the FFT service, checking that targets focus at
+//! their true range bins — a full-loop correctness *and* throughput
+//! driver (`examples/sar_range_compression.rs`).
+
+pub mod azimuth;
+pub mod chirp;
+pub mod image;
+pub mod range;
+pub mod scene;
+pub mod window;
+
+pub use chirp::Chirp;
+pub use image::{ImageFormation, Scene2d, Target2d};
+pub use range::{RangeCompressor, RangeReport};
+pub use scene::{Scene, Target};

@@ -1,0 +1,67 @@
+//! Window functions for sidelobe control in the matched filter.
+
+use std::f32::consts::PI;
+
+/// Rectangular (no taper).
+pub fn rect(_i: usize, _n: usize) -> f32 {
+    1.0
+}
+
+/// Hann window.
+pub fn hann(i: usize, n: usize) -> f32 {
+    if n <= 1 {
+        return 1.0;
+    }
+    let x = i as f32 / (n - 1) as f32;
+    0.5 - 0.5 * (2.0 * PI * x).cos()
+}
+
+/// Hamming window (the classic SAR taper).
+pub fn hamming(i: usize, n: usize) -> f32 {
+    if n <= 1 {
+        return 1.0;
+    }
+    let x = i as f32 / (n - 1) as f32;
+    0.54 - 0.46 * (2.0 * PI * x).cos()
+}
+
+/// Blackman window.
+pub fn blackman(i: usize, n: usize) -> f32 {
+    if n <= 1 {
+        return 1.0;
+    }
+    let x = i as f32 / (n - 1) as f32;
+    0.42 - 0.5 * (2.0 * PI * x).cos() + 0.08 * (4.0 * PI * x).cos()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints_and_symmetry() {
+        let n = 64;
+        for w in [hann as fn(usize, usize) -> f32, hamming, blackman] {
+            // Symmetric.
+            for i in 0..n {
+                assert!((w(i, n) - w(n - 1 - i, n)).abs() < 1e-5);
+            }
+            // Peak at centre.
+            assert!(w(n / 2, n) > w(0, n));
+        }
+        assert!(hann(0, n).abs() < 1e-6);
+        assert!((hamming(0, n) - 0.08).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rect_is_one() {
+        assert_eq!(rect(0, 8), 1.0);
+        assert_eq!(rect(7, 8), 1.0);
+    }
+
+    #[test]
+    fn degenerate_lengths() {
+        assert_eq!(hann(0, 1), 1.0);
+        assert_eq!(hamming(0, 0), 1.0);
+    }
+}

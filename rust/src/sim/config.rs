@@ -1,0 +1,187 @@
+//! Microarchitectural parameters (paper Tables I and III) and the
+//! model's calibration constants.
+
+/// GPU compute/memory parameters. `M1` is paper Table I; `INTEL_EU` is
+/// the 2015-thesis hardware column of paper Table III.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuConfig {
+    pub name: &'static str,
+    pub cores: usize,
+    pub alus_per_core: usize,
+    /// FP32 FLOPs/cycle/core counting FMA as 2 (paper: 256 = 128 FMA).
+    pub fp32_flops_per_cycle_core: usize,
+    pub simd_width: usize,
+    pub max_threads_per_tg: usize,
+    /// 32-bit GPRs per thread before the occupancy cliff.
+    pub gprs_per_thread: usize,
+    /// Register file per threadgroup, bytes (Tier 1). 208 KiB on M1.
+    pub regfile_bytes: usize,
+    /// Threadgroup/shared memory, bytes (Tier 2). 32 KiB on M1.
+    pub tg_mem_bytes: usize,
+    /// Unified/discrete DRAM bandwidth, bytes/s.
+    pub dram_bw: f64,
+    /// System Level Cache capacity, bytes (0 = none modelled).
+    pub slc_bytes: usize,
+    /// SLC bandwidth, bytes/s (used by four-step intermediates).
+    pub slc_bw: f64,
+    pub clock_hz: f64,
+    /// Discrete memory model: host<->device transfer bandwidth that
+    /// batched FFT data must additionally cross (0 = unified, free).
+    pub transfer_bw: f64,
+}
+
+/// Paper Table I: Apple M1 GPU.
+pub const M1: GpuConfig = GpuConfig {
+    name: "Apple M1 GPU",
+    cores: 8,
+    alus_per_core: 128,
+    fp32_flops_per_cycle_core: 256,
+    simd_width: 32,
+    max_threads_per_tg: 1024,
+    gprs_per_thread: 128,
+    regfile_bytes: 208 * 1024,
+    tg_mem_bytes: 32 * 1024,
+    dram_bw: 68.0e9,
+    slc_bytes: 8 * 1024 * 1024,
+    slc_bw: 150.0e9,
+    clock_hz: 1.278e9,
+    transfer_bw: 0.0,
+};
+
+/// Paper Table III: Intel IvyBridge EU (2015 thesis hardware).
+pub const INTEL_EU: GpuConfig = GpuConfig {
+    name: "Intel IvyBridge GPU (2015)",
+    cores: 16, // EUs
+    alus_per_core: 8,
+    fp32_flops_per_cycle_core: 16,
+    simd_width: 8,
+    max_threads_per_tg: 512,
+    gprs_per_thread: 128,
+    regfile_bytes: 2 * 1024,
+    tg_mem_bytes: 2 * 1024,
+    dram_bw: 25.6e9,
+    slc_bytes: 0,
+    slc_bw: 0.0,
+    clock_hz: 1.15e9,
+    // Discrete model: PCIe-era shared-memory staging the thesis
+    // identified as the dominant cost.
+    transfer_bw: 6.0e9,
+};
+
+impl GpuConfig {
+    /// Peak FP32 throughput, FLOP/s.
+    pub fn peak_flops(&self) -> f64 {
+        self.cores as f64 * self.fp32_flops_per_cycle_core as f64 * self.clock_hz
+    }
+
+    /// The paper's B_max (Eq. 2): largest single-threadgroup FFT in
+    /// complex float32 with the register-tiled Stockham buffer.
+    pub fn max_local_fft(&self) -> usize {
+        let b = self.tg_mem_bytes / 8;
+        // Round down to a power of two.
+        1usize << (usize::BITS - 1 - b.leading_zeros())
+    }
+
+    pub fn seconds_per_cycle(&self) -> f64 {
+        1.0 / self.clock_hz
+    }
+}
+
+/// Calibration constants of the cost model (DESIGN.md §6). Fitted ONCE
+/// against paper Table VI rows 2-3 (radix-4 113.6 / radix-8 138.45
+/// GFLOPS); everything else is prediction.
+#[derive(Clone, Copy, Debug)]
+pub struct CalibConstants {
+    /// Fraction of FMA-peak the FFT instruction mix sustains (the
+    /// butterfly is addition-heavy: ~52 adds vs 12 muls per radix-8
+    /// butterfly, so ~0.5 of the 2-FLOP/FMA peak).
+    pub alu_issue_eff: f64,
+    /// Effective aggregate threadgroup-memory bandwidth for butterfly
+    /// load/store cycles, bytes/s. Derived from the Table VI radix-4 vs
+    /// radix-8 gap; sits 0.83x below the measured 414 GB/s
+    /// register<->threadgroup copy bandwidth (Table II), i.e. copies
+    /// with butterfly work in between don't quite hit streaming rate.
+    pub tg_bw_eff: f64,
+    /// Fraction of nominal DRAM bandwidth batched streaming achieves.
+    pub dram_eff: f64,
+    /// Per-command-buffer dispatch overhead, seconds (Metal dispatch +
+    /// timestamp plumbing; why vDSP wins at small batch, Fig. 1).
+    pub dispatch_s: f64,
+    /// Pipeline fill/drain cycles per threadgroup.
+    pub tg_overhead_cycles: f64,
+    /// Barrier cost in cycles (the paper's ~2-cycle finding).
+    pub barrier_cycles: f64,
+    /// Concurrent threadgroups at which the GPU saturates (Fig. 1:
+    /// 16 TGs/core x 8 cores).
+    pub sat_tgs: f64,
+    /// Parallel slots available to a single threadgroup (one core plus
+    /// latency-hiding headroom): slots(b) = min(sat, base + slope*b).
+    pub base_slots: f64,
+    pub slots_per_tg: f64,
+}
+
+impl Default for CalibConstants {
+    fn default() -> Self {
+        CalibConstants {
+            alu_issue_eff: 0.5,
+            tg_bw_eff: 345.0e9,
+            dram_eff: 1.0,
+            dispatch_s: 15.0e-6,
+            tg_overhead_cycles: 300.0,
+            barrier_cycles: 2.0,
+            sat_tgs: 128.0,
+            base_slots: 8.0,
+            slots_per_tg: 0.9375,
+        }
+    }
+}
+
+impl CalibConstants {
+    /// Effective parallel slots at a given in-flight threadgroup count.
+    pub fn slots(&self, tgs_in_flight: f64) -> f64 {
+        (self.base_slots + self.slots_per_tg * tgs_in_flight).min(self.sat_tgs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn m1_peak_matches_paper() {
+        // 256 FLOP/cycle/core x 8 cores x 1.278 GHz ~ 2.617 TFLOPS
+        // (paper §VI-B: "2048 FLOPs/cycle peak").
+        let p = M1.peak_flops();
+        assert!((p / 1e12 - 2.617).abs() < 0.01, "{p}");
+    }
+
+    #[test]
+    fn max_local_fft_is_4096_on_m1() {
+        // Paper Eq. 2: B_max = 32768 / 8 = 4096.
+        assert_eq!(M1.max_local_fft(), 4096);
+    }
+
+    #[test]
+    fn max_local_fft_is_256_on_intel() {
+        // 2 KiB / 8 B = 256 local points for the EU *shared* tier; the
+        // thesis reached 2^10 by spilling to registers + L3, which its
+        // own table credits as "local memory ~2 KiB". Our model uses the
+        // strict shared-memory bound for the comparison table.
+        assert_eq!(INTEL_EU.max_local_fft(), 256);
+    }
+
+    #[test]
+    fn slots_saturate() {
+        let c = CalibConstants::default();
+        assert!((c.slots(128.0) - 128.0).abs() < 1e-9);
+        assert!((c.slots(1024.0) - 128.0).abs() < 1e-9);
+        assert!(c.slots(1.0) < 10.0);
+        assert!(c.slots(1.0) >= 8.0);
+    }
+
+    #[test]
+    fn unified_vs_discrete_transfer() {
+        assert_eq!(M1.transfer_bw, 0.0); // unified: zero transfer term
+        assert!(INTEL_EU.transfer_bw > 0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Future-work projections (paper §IX-A): mixed-precision FP16 FFT,
+//! larger Apple Silicon (M4 Max), and batched-MMA — modelled with the
+//! same cost machinery so the paper's forward-looking claims become
+//! checkable numbers.
+
+use super::config::{CalibConstants, GpuConfig, M1};
+use super::kernel::KernelSpec;
+use super::memory::{self, AccessPattern};
+use super::radix;
+use crate::fft::stockham::radix_schedule;
+use crate::util::fft_flops;
+
+/// M4 Max GPU per the paper's §IX-A sketch: 40 cores, 546 GB/s.
+pub const M4_MAX: GpuConfig = GpuConfig {
+    name: "Apple M4 Max GPU",
+    cores: 40,
+    alus_per_core: 128,
+    fp32_flops_per_cycle_core: 256,
+    simd_width: 32,
+    max_threads_per_tg: 1024,
+    gprs_per_thread: 128,
+    regfile_bytes: 208 * 1024,
+    tg_mem_bytes: 32 * 1024,
+    dram_bw: 546.0e9,
+    slc_bytes: 48 * 1024 * 1024,
+    slc_bw: 600.0e9,
+    clock_hz: 1.578e9,
+    transfer_bw: 0.0,
+};
+
+/// FP16 element size halves every byte term and doubles ALU throughput
+/// (paper Table I: FP16 = 512 FLOPs/cycle/core; §IX-A: "2x throughput,
+/// free conversion"; B_max doubles to 2^13).
+#[derive(Clone, Copy, Debug)]
+pub struct Fp16Projection {
+    pub b_max: usize,
+    pub gflops_4096_batch256: f64,
+    pub speedup_vs_fp32: f64,
+}
+
+/// Price the radix-8 N=4096 kernel in FP16 on `gpu`.
+pub fn fp16_projection(gpu: &GpuConfig, calib: &CalibConstants) -> Fp16Projection {
+    let (n, batch) = (4096usize, 256usize);
+    let radices = radix_schedule(n, 8);
+    let b = batch as f64;
+    let pf = calib.sat_tgs / calib.slots(b);
+    // Bytes halve; ALU rate doubles.
+    let line_bytes = (n * 4) as f64; // complex fp16 = 4 B
+    let peak = gpu.peak_flops() * 2.0 * calib.alu_issue_eff;
+    let dram_s = b * 2.0 * line_bytes / (gpu.dram_bw * calib.dram_eff);
+    let tg_s = b * (memory::stockham_tg_bytes(n, radices.len()) / 2) as f64
+        / memory::model_bw(AccessPattern::RegTgCopy, calib)
+        * pf;
+    let compute_s = b * radix::executed_flops(n, &radices) as f64 / peak * pf;
+    let overhead = b * calib.tg_overhead_cycles / (gpu.cores as f64 * gpu.clock_hz) * pf
+        + calib.dispatch_s;
+    let total = dram_s + tg_s + compute_s + overhead;
+    let gflops = fft_flops(n) * b / total / 1e9;
+    let fp32 = KernelSpec::single_tg(n, 8).cost(gpu, calib, batch).gflops();
+    Fp16Projection {
+        // 32 KiB / 4 B per complex fp16 element.
+        b_max: gpu.tg_mem_bytes / 4,
+        gflops_4096_batch256: gflops,
+        speedup_vs_fp32: gflops / fp32,
+    }
+}
+
+/// The paper's M4 Max claim: "should scale roughly proportional to core
+/// count ... potentially exceeding 500 GFLOPS for batched N=4096".
+pub fn m4_max_projection(calib: &CalibConstants) -> (f64, f64) {
+    // Saturation scales with core count: 16 TGs/core.
+    let mut big = *calib;
+    big.sat_tgs = 16.0 * M4_MAX.cores as f64;
+    big.base_slots = M4_MAX.cores as f64;
+    big.slots_per_tg = (big.sat_tgs - big.base_slots) / big.sat_tgs;
+    // TG bandwidth scales with core count (it's per-core tile memory).
+    big.tg_bw_eff = calib.tg_bw_eff * M4_MAX.cores as f64 / M1.cores as f64;
+    let batch = 4096; // enough to saturate 640 TGs
+    let g = KernelSpec::single_tg(4096, 8).cost(&M4_MAX, &big, batch).gflops();
+    let m1 = KernelSpec::single_tg(4096, 8).cost(&M1, calib, 256).gflops();
+    (g, g / m1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp16_doubles_local_fft_size() {
+        // Paper §IX-A: "local FFTs up to 2^13 at FP16".
+        let p = fp16_projection(&M1, &CalibConstants::default());
+        assert_eq!(p.b_max, 8192);
+    }
+
+    #[test]
+    fn fp16_speedup_between_1_and_2() {
+        // Not all terms halve (dispatch, overhead), so the speedup is
+        // meaningfully above 1 but below the 2x ALU headline.
+        let p = fp16_projection(&M1, &CalibConstants::default());
+        assert!(p.speedup_vs_fp32 > 1.3, "{}", p.speedup_vs_fp32);
+        assert!(p.speedup_vs_fp32 < 2.0, "{}", p.speedup_vs_fp32);
+    }
+
+    #[test]
+    fn m4_max_exceeds_500_gflops() {
+        // Paper §IX-A: "potentially exceeding 500 GFLOPS".
+        let (g, scale) = m4_max_projection(&CalibConstants::default());
+        assert!(g > 500.0, "M4 Max projection {g}");
+        // Not super-linear vs the 5x core / 8x bandwidth scaling.
+        assert!(scale < 8.0, "{scale}");
+    }
+}

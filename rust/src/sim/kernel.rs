@@ -1,0 +1,361 @@
+//! The kernel cost model: prices a kernel's structure (passes, traffic,
+//! access patterns, barriers, FLOPs) on a [`GpuConfig`].
+//!
+//! All terms are per dispatched batch and summed (see `sim/mod.rs` for
+//! why). Throughput-limited terms (threadgroup traffic, ALU, per-TG
+//! overhead) are scaled by the parallelism factor `sat/slots(b)` — below
+//! ~128 concurrent threadgroups the M1 GPU is not saturated (paper
+//! Fig. 1), a single threadgroup only has one core plus latency-hiding
+//! headroom.
+
+use super::config::{CalibConstants, GpuConfig};
+use super::memory::{self, AccessPattern};
+use super::occupancy;
+use super::radix;
+use crate::fft::stockham::radix_schedule;
+use crate::util::fft_flops;
+
+/// What kind of kernel is being priced (paper Table VI/VII rows).
+#[derive(Clone, Debug, PartialEq)]
+pub enum KernelClass {
+    /// Single-threadgroup Stockham (paper §V-A/§V-B), N <= 4096.
+    SingleTg { radices: Vec<usize>, threads: usize },
+    /// Four-step through device memory (paper §IV-B), N > 4096.
+    FourStep { n1: usize, n2: usize },
+    /// The simd_shuffle hybrid (paper §V-E): radix-32 sub-FFTs in
+    /// registers, scattered threadgroup exchange between SIMD groups.
+    Shuffle,
+    /// simdgroup_matrix MMA radix-8 (paper §V-C). `batched` = 8+ FFTs
+    /// per threadgroup so tile layout matches batch layout (no
+    /// marshaling).
+    Mma { batched: bool },
+}
+
+#[derive(Clone, Debug)]
+pub struct KernelSpec {
+    pub n: usize,
+    pub class: KernelClass,
+}
+
+impl KernelSpec {
+    /// The production single-threadgroup kernel for `n` with the given
+    /// max radix (8 = paper §V-B, 4 = §V-A).
+    pub fn single_tg(n: usize, max_radix: usize) -> KernelSpec {
+        assert!(n <= 4096, "single-threadgroup kernels top out at B_max = 4096");
+        let radices = radix_schedule(n, max_radix);
+        let threads = occupancy::optimal_threads(&super::config::M1, n, max_radix);
+        KernelSpec { n, class: KernelClass::SingleTg { radices, threads } }
+    }
+
+    /// Four-step decomposition for n > 4096 (paper Eqs. 7-8).
+    pub fn four_step(n: usize) -> KernelSpec {
+        assert!(n > 4096);
+        let (n1, n2) = crate::fft::fourstep::split(n);
+        KernelSpec { n, class: KernelClass::FourStep { n1, n2 } }
+    }
+
+    pub fn shuffle(n: usize) -> KernelSpec {
+        KernelSpec { n, class: KernelClass::Shuffle }
+    }
+
+    pub fn mma(n: usize, batched: bool) -> KernelSpec {
+        KernelSpec { n, class: KernelClass::Mma { batched } }
+    }
+
+    /// Pass count ("threadgroup dispatches x stages" in paper terms).
+    pub fn passes(&self) -> usize {
+        match &self.class {
+            KernelClass::SingleTg { radices, .. } => radices.len(),
+            KernelClass::FourStep { n2, .. } => 1 + radix_schedule(*n2, 8).len(),
+            KernelClass::Shuffle => 12, // radix-2 equivalent stages at 4096
+            KernelClass::Mma { .. } => 4,
+        }
+    }
+
+    /// Barrier count (paper Tables IV and VIII).
+    pub fn barriers(&self) -> usize {
+        match &self.class {
+            KernelClass::SingleTg { radices, .. } => radix::barriers(radices.len()),
+            KernelClass::FourStep { n2, .. } => {
+                radix::barriers(radix_schedule(*n2, 8).len()) + 2
+            }
+            // Paper Table VIII: the shuffle hybrid uses 4 barriers.
+            KernelClass::Shuffle => 4,
+            KernelClass::Mma { .. } => radix::barriers(4),
+        }
+    }
+
+    /// Price the kernel for a batch of `batch` FFTs.
+    pub fn cost(&self, gpu: &GpuConfig, calib: &CalibConstants, batch: usize) -> CostBreakdown {
+        let b = batch as f64;
+        let n = self.n;
+        let line_bytes = (n * 8) as f64;
+        let peak = gpu.peak_flops() * calib.alu_issue_eff;
+        let pf = |tgs: f64| calib.sat_tgs / calib.slots(tgs);
+
+        let mut c = CostBreakdown::default();
+        c.n = n;
+        c.batch = batch;
+        c.barriers = self.barriers();
+        c.passes = self.passes();
+        c.dispatch_s = calib.dispatch_s;
+
+        match &self.class {
+            KernelClass::SingleTg { radices, .. } => {
+                let par = pf(b);
+                c.dram_s = b * (2.0 * line_bytes) / (gpu.dram_bw * calib.dram_eff)
+                    + transfer_term(gpu, b * 2.0 * line_bytes);
+                c.tg_s = b * memory::stockham_tg_bytes(n, radices.len()) as f64
+                    / memory::model_bw(AccessPattern::RegTgCopy, calib)
+                    * par;
+                let occ = occupancy::occupancy(gpu, occupancy::butterfly_gprs(radices[0]));
+                c.compute_s =
+                    b * radix::executed_flops(n, radices) as f64 / (peak * occ) * par;
+                c.barrier_s = b * c.barriers as f64 * calib.barrier_cycles
+                    / (gpu.cores as f64 * gpu.clock_hz);
+                c.tg_overhead_s =
+                    b * calib.tg_overhead_cycles / (gpu.cores as f64 * gpu.clock_hz) * par;
+            }
+            KernelClass::FourStep { n1, n2 } => {
+                let row_radices = radix_schedule(*n2, 8);
+                let rows = b * *n1 as f64;
+                // Input read via DRAM; output write pays the step-4
+                // stride-permutation coalescing penalty — the transpose
+                // emits contiguous runs of only n1 complex elements, so
+                // write efficiency falls off beyond n1 = 2 (fitted to
+                // the paper's 16384 row; see DESIGN.md §6).
+                let wr_eff = if *n1 <= 2 { 1.0 } else { 1.0 / (1.0 + 0.25 * (*n1 as f64 - 2.0)) };
+                c.dram_s = b * line_bytes / (gpu.dram_bw * calib.dram_eff)
+                    + b * line_bytes / (gpu.dram_bw * calib.dram_eff * wr_eff)
+                    + transfer_term(gpu, b * 2.0 * line_bytes);
+                // Intermediate write+read via the SLC blend (paper §IV-B:
+                // unified memory + SLC makes the transpose cheap).
+                let inter_bytes = b * line_bytes;
+                let frac = if gpu.slc_bytes == 0 {
+                    0.0
+                } else {
+                    (gpu.slc_bytes as f64 / inter_bytes).min(1.0)
+                };
+                let blend_bw = frac * gpu.slc_bw + (1.0 - frac) * gpu.dram_bw;
+                c.slc_s = 2.0 * inter_bytes / blend_bw;
+                // Dispatch A: column DFT of length n1 (streaming; no TG).
+                let col_flops = (n / n1) as f64 * radix::butterfly_flops(*n1) as f64
+                    + 6.0 * n as f64; // twiddle multiply fused into the pass
+                c.compute_s += b * col_flops / peak * pf(b);
+                // Dispatch B: rows of n2 via the radix-8 single-TG kernel.
+                c.tg_s = rows * memory::stockham_tg_bytes(*n2, row_radices.len()) as f64
+                    / memory::model_bw(AccessPattern::RegTgCopy, calib)
+                    * pf(rows);
+                c.compute_s +=
+                    rows * radix::executed_flops(*n2, &row_radices) as f64 / peak * pf(rows);
+                c.barrier_s = rows * c.barriers as f64 * calib.barrier_cycles
+                    / (gpu.cores as f64 * gpu.clock_hz);
+                c.tg_overhead_s = (b + rows) * calib.tg_overhead_cycles
+                    / (gpu.cores as f64 * gpu.clock_hz)
+                    * pf(rows);
+                c.dispatch_s = 2.0 * calib.dispatch_s;
+            }
+            KernelClass::Shuffle => {
+                let par = pf(b);
+                let stages = crate::util::ilog2_exact(n) as f64;
+                let shuffle_stages = 5.0; // radix-32 in-register
+                let tg_stages = stages - shuffle_stages;
+                c.dram_s = b * (2.0 * line_bytes) / (gpu.dram_bw * calib.dram_eff);
+                c.shuffle_s = b * shuffle_stages * line_bytes
+                    / memory::model_bw(AccessPattern::SimdShuffle, calib)
+                    * par;
+                // Inter-SIMD exchange: scattered (the paper's 3.2x hit),
+                // with the device bypass on first/last leg.
+                let tg_legs = 2.0 * tg_stages - 2.0;
+                c.tg_s = b * tg_legs * line_bytes
+                    / memory::model_bw(AccessPattern::Scattered, calib)
+                    * par;
+                c.compute_s =
+                    b * stages * (n as f64 / 2.0) * radix::butterfly_flops(2) as f64 / peak * par;
+                c.barrier_s = b * c.barriers as f64 * calib.barrier_cycles
+                    / (gpu.cores as f64 * gpu.clock_hz);
+                c.tg_overhead_s =
+                    b * calib.tg_overhead_cycles / (gpu.cores as f64 * gpu.clock_hz) * par;
+            }
+            KernelClass::Mma { batched } => {
+                // Start from the radix-8 single-TG structure.
+                let base = KernelSpec::single_tg(n, 8).cost(gpu, calib, batch);
+                let par = pf(b);
+                c.dram_s = base.dram_s;
+                c.tg_s = base.tg_s;
+                c.barrier_s = base.barrier_s;
+                c.tg_overhead_s = base.tg_overhead_s;
+                // Compute: 3.4x FLOP inflation at 4x the ALU rate
+                // (102 vs ~25 FFMA32/cycle, paper §V-C).
+                let radices = radix_schedule(n, 8);
+                c.compute_s = b * radix::executed_flops(n, &radices) as f64
+                    * mma_flop_inflation()
+                    / (peak * mma_rate_advantage())
+                    * par;
+                // Marshaling: TG <-> 8x8 tile layout conversion, one
+                // round trip per stage, strided pattern. Vanishes in the
+                // batched configuration where tile layout == batch layout.
+                if !batched {
+                    let stages = radices.len() as f64;
+                    c.marshal_s = b * 2.0 * stages * line_bytes
+                        / memory::model_bw(AccessPattern::Strided, calib)
+                        * par;
+                }
+            }
+        }
+        c.finish();
+        c
+    }
+}
+
+/// Paper §V-C: complex 8x8 multiply via 4 real MMAs needs ~3.4x the
+/// FLOPs of the split-radix butterfly.
+pub fn mma_flop_inflation() -> f64 {
+    3.4
+}
+
+/// Paper §V-C: MMA sustains ~102 FFMA32/cycle vs ~25 for scalar SIMD.
+pub fn mma_rate_advantage() -> f64 {
+    102.0 / 25.0
+}
+
+/// Host<->device staging for discrete-memory GPUs (zero on unified M1;
+/// the dominant term in the 2015 thesis model, paper Table III).
+fn transfer_term(gpu: &GpuConfig, bytes: f64) -> f64 {
+    if gpu.transfer_bw > 0.0 {
+        bytes / gpu.transfer_bw
+    } else {
+        0.0
+    }
+}
+
+/// Per-batch cost breakdown, seconds.
+#[derive(Clone, Debug, Default)]
+pub struct CostBreakdown {
+    pub n: usize,
+    pub batch: usize,
+    pub passes: usize,
+    pub barriers: usize,
+    pub dram_s: f64,
+    pub slc_s: f64,
+    pub tg_s: f64,
+    pub shuffle_s: f64,
+    pub marshal_s: f64,
+    pub compute_s: f64,
+    pub barrier_s: f64,
+    pub tg_overhead_s: f64,
+    pub dispatch_s: f64,
+    pub total_s: f64,
+}
+
+impl CostBreakdown {
+    fn finish(&mut self) {
+        self.total_s = self.dram_s
+            + self.slc_s
+            + self.tg_s
+            + self.shuffle_s
+            + self.marshal_s
+            + self.compute_s
+            + self.barrier_s
+            + self.tg_overhead_s
+            + self.dispatch_s;
+    }
+
+    /// Microseconds per FFT (the paper's Table VI/VII latency column).
+    pub fn us_per_fft(&self) -> f64 {
+        self.total_s / self.batch as f64 * 1e6
+    }
+
+    /// Nominal GFLOPS = 5 N log2 N * batch / time (paper §VI-A).
+    pub fn gflops(&self) -> f64 {
+        fft_flops(self.n) * self.batch as f64 / self.total_s / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::{CalibConstants, M1};
+
+    fn cost(spec: KernelSpec, batch: usize) -> CostBreakdown {
+        spec.cost(&M1, &CalibConstants::default(), batch)
+    }
+
+    #[test]
+    fn radix8_hits_headline_number() {
+        // Paper Table VI: 138.45 GFLOPS, 1.78 us/FFT at N=4096 batch 256.
+        let c = cost(KernelSpec::single_tg(4096, 8), 256);
+        let g = c.gflops();
+        assert!((g - 138.45).abs() / 138.45 < 0.05, "radix-8 GFLOPS {g}");
+        assert!((c.us_per_fft() - 1.78).abs() < 0.15, "{}", c.us_per_fft());
+    }
+
+    #[test]
+    fn radix4_hits_baseline_number() {
+        // Paper Table VI: 113.6 GFLOPS.
+        let g = cost(KernelSpec::single_tg(4096, 4), 256).gflops();
+        assert!((g - 113.6).abs() / 113.6 < 0.05, "radix-4 GFLOPS {g}");
+    }
+
+    #[test]
+    fn shuffle_collapses() {
+        // Paper Table VI: 61.5 GFLOPS — prediction, wider band.
+        let g = cost(KernelSpec::shuffle(4096), 256).gflops();
+        assert!((g - 61.5).abs() / 61.5 < 0.15, "shuffle GFLOPS {g}");
+    }
+
+    #[test]
+    fn mma_single_fft_loses_batched_wins_compute() {
+        let single = cost(KernelSpec::mma(4096, false), 256).gflops();
+        let r8 = cost(KernelSpec::single_tg(4096, 8), 256).gflops();
+        assert!(single < r8, "marshaling must negate MMA: {single} vs {r8}");
+        // Compute-term advantage ~1.18x (paper's "~1.2x estimated").
+        let c_mma = cost(KernelSpec::mma(4096, true), 256).compute_s;
+        let c_r8 = cost(KernelSpec::single_tg(4096, 8), 256).compute_s;
+        let adv = c_r8 / c_mma;
+        assert!((adv - 1.18).abs() < 0.05, "MMA compute advantage {adv}");
+    }
+
+    #[test]
+    fn fourstep_drops_but_stays_above_100() {
+        // Paper Table VII: 8192 -> 112, 16384 -> 103 GFLOPS.
+        let g8k = cost(KernelSpec::four_step(8192), 256).gflops();
+        let g16k = cost(KernelSpec::four_step(16384), 256).gflops();
+        let g4k = cost(KernelSpec::single_tg(4096, 8), 256).gflops();
+        assert!(g8k < g4k && g16k < g8k, "{g4k} > {g8k} > {g16k}");
+        assert!(g8k > 100.0 && g16k > 100.0);
+        assert!((g8k - 112.0).abs() / 112.0 < 0.15, "{g8k}");
+        assert!((g16k - 103.0).abs() / 103.0 < 0.15, "{g16k}");
+    }
+
+    #[test]
+    fn barrier_cost_is_negligible() {
+        let c = cost(KernelSpec::single_tg(4096, 8), 256);
+        assert!(c.barrier_s / c.total_s < 0.01, "barriers must be cheap");
+        // ...while tg traffic is a first-order term.
+        assert!(c.tg_s / c.total_s > 0.2);
+    }
+
+    #[test]
+    fn passes_and_barriers() {
+        let r8 = KernelSpec::single_tg(4096, 8);
+        assert_eq!(r8.passes(), 4);
+        assert_eq!(r8.barriers(), 6); // paper Table VIII
+        let sh = KernelSpec::shuffle(4096);
+        assert_eq!(sh.barriers(), 4); // fewer barriers, yet slower
+        let r4 = KernelSpec::single_tg(4096, 4);
+        assert_eq!(r4.passes(), 6);
+        assert_eq!(r4.barriers(), 10);
+    }
+
+    #[test]
+    fn intel_eu_transfer_dominates() {
+        // On the 2015 discrete model the staging term exists and the
+        // same kernel is far slower (paper Table IX: ~20 GFLOPS best).
+        let spec = KernelSpec::single_tg(256, 8);
+        let m1 = spec.cost(&M1, &CalibConstants::default(), 256);
+        let eu = spec.cost(&crate::sim::config::INTEL_EU, &CalibConstants::default(), 256);
+        assert!(eu.total_s > 2.0 * m1.total_s);
+        assert!(eu.dram_s > m1.dram_s);
+    }
+}

@@ -1,0 +1,115 @@
+//! Two-tier memory model: access patterns and their bandwidths
+//! (paper Table II), plus the barrier cost model.
+//!
+//! The paper's central empirical finding: *access pattern matters far
+//! more than barrier count*. Sequential threadgroup access streams at
+//! 688 GB/s; strided/scattered access collapses by 3.2x to 217 GB/s,
+//! while a barrier costs only ~2 cycles.
+
+use super::config::{CalibConstants, GpuConfig};
+
+/// How a kernel touches threadgroup memory in one pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AccessPattern {
+    /// Contiguous runs (the Stockham q-loop): 688 GB/s on M1.
+    Sequential,
+    /// Constant-stride element access: 217 GB/s (the 3.2x penalty).
+    Strided,
+    /// Data-dependent/gathered access (the shuffle variant's exchange
+    /// stages): same bank-conflict-bound rate as strided.
+    Scattered,
+    /// Intra-SIMD-group shuffle (no threadgroup memory at all).
+    SimdShuffle,
+    /// Bulk register<->threadgroup copies with butterfly work between
+    /// them (the effective rate the Stockham kernels see).
+    RegTgCopy,
+}
+
+/// Measured bandwidths on M1 (paper Table II), bytes/s.
+pub fn measured_bw_m1(pattern: AccessPattern) -> f64 {
+    match pattern {
+        AccessPattern::Sequential => 688.0e9,
+        AccessPattern::Strided => 217.0e9,
+        AccessPattern::Scattered => 217.0e9,
+        AccessPattern::SimdShuffle => 262.0e9,
+        AccessPattern::RegTgCopy => 414.0e9, // midpoint of 407-420
+    }
+}
+
+/// Model bandwidth for a pattern: the calibrated effective rate for the
+/// butterfly copy pattern, measured rates otherwise.
+pub fn model_bw(pattern: AccessPattern, calib: &CalibConstants) -> f64 {
+    match pattern {
+        AccessPattern::RegTgCopy => calib.tg_bw_eff,
+        other => measured_bw_m1(other),
+    }
+}
+
+/// The sequential:strided penalty the paper reports as 3.2x.
+pub fn strided_penalty() -> f64 {
+    measured_bw_m1(AccessPattern::Sequential) / measured_bw_m1(AccessPattern::Strided)
+}
+
+/// Time for one barrier on `gpu`, seconds (paper: ~2 cycles).
+pub fn barrier_time(gpu: &GpuConfig, calib: &CalibConstants) -> f64 {
+    calib.barrier_cycles * gpu.seconds_per_cycle()
+}
+
+/// Threadgroup-memory traffic of a Stockham kernel, bytes per FFT:
+/// every pass reads and writes the full N-point line except pass 0
+/// (reads device) and the final pass (writes device) — the paper §V-A
+/// "device-memory bypass". `passes >= 1`.
+pub fn stockham_tg_bytes(n: usize, passes: usize) -> usize {
+    assert!(passes >= 1);
+    let line = n * 8; // complex64 split as 2 x f32
+    if passes == 1 {
+        return 0; // single pass: device in, device out
+    }
+    (2 * passes - 2) * line
+}
+
+/// Device (DRAM) traffic, bytes per FFT, for a single-threadgroup
+/// kernel: one read + one write of the line.
+pub fn device_bytes(n: usize) -> usize {
+    2 * n * 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::M1;
+
+    #[test]
+    fn penalty_is_3_2x() {
+        assert!((strided_penalty() - 3.17).abs() < 0.05);
+    }
+
+    #[test]
+    fn barrier_is_cheap() {
+        // ~2 cycles at 1.278 GHz ~ 1.6 ns: the paper's "nearly free".
+        let t = barrier_time(&M1, &CalibConstants::default());
+        assert!(t < 2e-9, "{t}");
+    }
+
+    #[test]
+    fn bypass_saves_two_legs() {
+        // 4-pass radix-8 at N=4096: 6 line-transfers of 32 KiB.
+        assert_eq!(stockham_tg_bytes(4096, 4), 6 * 32768);
+        // 6-pass radix-4: 10 legs.
+        assert_eq!(stockham_tg_bytes(4096, 6), 10 * 32768);
+        // Degenerate single pass: no TG traffic at all.
+        assert_eq!(stockham_tg_bytes(4096, 1), 0);
+    }
+
+    #[test]
+    fn device_traffic() {
+        assert_eq!(device_bytes(4096), 65536);
+    }
+
+    #[test]
+    fn shuffle_beats_scattered_but_loses_to_sequential() {
+        let sh = measured_bw_m1(AccessPattern::SimdShuffle);
+        assert!(sh > measured_bw_m1(AccessPattern::Scattered));
+        assert!(sh < measured_bw_m1(AccessPattern::Sequential));
+    }
+}

@@ -1,0 +1,95 @@
+//! Occupancy model: register pressure vs concurrent threadgroups
+//! (paper Table II "occupancy drop threshold ~128 GPRs/thread" and the
+//! §V-B thread-count discussion).
+
+use super::config::GpuConfig;
+
+/// Per-thread register footprint of a radix-r butterfly kernel
+/// (paper Table IV column "GPRs").
+pub fn butterfly_gprs(radix: usize) -> usize {
+    match radix {
+        2 => 8,
+        4 => 18,
+        8 => 38,
+        16 => 78,
+        32 => 160, // exceeds budget -> spills (paper §IV-C)
+        _ => panic!("unsupported radix {radix}"),
+    }
+}
+
+/// Fraction of peak concurrency sustained at a register footprint:
+/// flat until the 128-GPR cliff, then inverse-proportional (half the
+/// threads fit at 256 GPRs, etc.).
+pub fn occupancy(gpu: &GpuConfig, gprs_per_thread: usize) -> f64 {
+    let budget = gpu.gprs_per_thread as f64;
+    if gprs_per_thread as f64 <= budget {
+        1.0
+    } else {
+        budget / gprs_per_thread as f64
+    }
+}
+
+/// The paper's thread-count rule (§V-B): per-thread state is
+/// elements-per-thread * GPRs-per-element + butterfly temporaries; the
+/// optimal thread count is the largest that stays under the cliff.
+pub fn optimal_threads(gpu: &GpuConfig, n: usize, radix: usize) -> usize {
+    // Each thread owns `radix` elements per pass.
+    let threads = (n / radix).min(gpu.max_threads_per_tg);
+    threads.max(gpu.simd_width)
+}
+
+/// Whether a kernel spec spills registers.
+pub fn spills(gpu: &GpuConfig, radix: usize) -> bool {
+    butterfly_gprs(radix) + 24 > gpu.gprs_per_thread // +24: twiddles/temps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::M1;
+
+    #[test]
+    fn table4_gpr_column() {
+        assert_eq!(butterfly_gprs(2), 8);
+        assert_eq!(butterfly_gprs(4), 18);
+        assert_eq!(butterfly_gprs(8), 38);
+        assert_eq!(butterfly_gprs(16), 78);
+    }
+
+    #[test]
+    fn radix8_uses_30_percent_budget() {
+        // Paper §IV-C: "radix-8 uses only 30% of the register budget".
+        let frac = butterfly_gprs(8) as f64 / M1.gprs_per_thread as f64;
+        assert!((frac - 0.30).abs() < 0.01, "{frac}");
+    }
+
+    #[test]
+    fn radix16_uses_61_percent() {
+        let frac = butterfly_gprs(16) as f64 / M1.gprs_per_thread as f64;
+        assert!((frac - 0.61).abs() < 0.01, "{frac}");
+    }
+
+    #[test]
+    fn occupancy_cliff() {
+        assert_eq!(occupancy(&M1, 38), 1.0);
+        assert_eq!(occupancy(&M1, 128), 1.0);
+        assert!(occupancy(&M1, 256) < 0.51);
+    }
+
+    #[test]
+    fn paper_thread_counts() {
+        // Paper Table V / §V-B: radix-4 at 4096 -> 1024 threads;
+        // radix-8 at 4096 -> 512 threads.
+        assert_eq!(optimal_threads(&M1, 4096, 4), 1024);
+        assert_eq!(optimal_threads(&M1, 4096, 8), 512);
+        // Table V small sizes (radix-4): 256 -> 64, 1024 -> 256.
+        assert_eq!(optimal_threads(&M1, 256, 4), 64);
+        assert_eq!(optimal_threads(&M1, 1024, 4), 256);
+    }
+
+    #[test]
+    fn radix32_spills() {
+        assert!(spills(&M1, 32));
+        assert!(!spills(&M1, 8));
+    }
+}

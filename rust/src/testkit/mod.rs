@@ -1,0 +1,136 @@
+//! Seeded property-testing helper (proptest substitute for the offline
+//! environment).
+//!
+//! `check` runs a property over many deterministically generated cases;
+//! on failure it reports the failing case index and seed so the exact
+//! case can be replayed with `Rng::new(seed)`.
+//!
+//! ```no_run
+//! // (no_run: this environment's doctest runner lacks the rpath to
+//! // libxla_extension's bundled libstdc++; the same code is exercised
+//! // by the unit tests below.)
+//! use applefft::testkit::{check, Gen};
+//! check("addition commutes", 256, |g| {
+//!     let a = g.rng.below(1000) as i64;
+//!     let b = g.rng.below(1000) as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Per-case generator context.
+pub struct Gen {
+    pub rng: Rng,
+    /// Case index within the run (0-based).
+    pub case: usize,
+    /// The seed this case's RNG was constructed from.
+    pub seed: u64,
+}
+
+impl Gen {
+    /// A power-of-two FFT size in `[min_log2, max_log2]`.
+    pub fn pow2_size(&mut self, min_log2: u32, max_log2: u32) -> usize {
+        1usize << self.rng.between(min_log2 as usize, max_log2 as usize)
+    }
+
+    /// A random complex signal of length `n` as (re, im) in [-1, 1).
+    pub fn signal(&mut self, n: usize) -> (Vec<f32>, Vec<f32>) {
+        (self.rng.signal(n), self.rng.signal(n))
+    }
+}
+
+/// Base seed: fixed by default for reproducible CI, overridable with
+/// `APPLEFFT_PROP_SEED` for exploration.
+fn base_seed() -> u64 {
+    std::env::var("APPLEFFT_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA11CE_F00D)
+}
+
+/// Number of cases, overridable with `APPLEFFT_PROP_CASES`.
+fn case_count(default_cases: usize) -> usize {
+    std::env::var("APPLEFFT_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_cases)
+}
+
+/// Run `prop` over `cases` deterministic cases. Panics (with replay info)
+/// on the first failing case. The property signals failure by panicking
+/// (use `assert!` family inside).
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let base = base_seed();
+    let cases = case_count(cases);
+    for case in 0..cases {
+        let seed = base ^ ((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen { rng: Rng::new(seed), case, seed };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property {name:?} failed at case {case}/{cases} (seed {seed:#x}):\n  {msg}\n\
+                 replay: Rng::new({seed:#x})"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(actual: &[f32], expected: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(actual.len(), expected.len(), "{what}: length mismatch");
+    for (i, (&a, &e)) in actual.iter().zip(expected).enumerate() {
+        let tol = atol + rtol * e.abs();
+        assert!(
+            (a - e).abs() <= tol,
+            "{what}: index {i}: actual {a} vs expected {e} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("xor involution", 64, |g| {
+            let x = g.rng.next_u64();
+            assert_eq!(x ^ 0xFF ^ 0xFF, x);
+        });
+    }
+
+    #[test]
+    fn check_reports_failure_with_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("always fails", 4, |_| panic!("boom"));
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn gen_pow2_in_range() {
+        check("pow2 sizes", 64, |g| {
+            let n = g.pow2_size(8, 14);
+            assert!(n.is_power_of_two());
+            assert!((256..=16384).contains(&n));
+        });
+    }
+
+    #[test]
+    fn assert_close_tolerances() {
+        assert_close(&[1.0, 2.0], &[1.0005, 2.0], 1e-3, 0.0, "ok");
+        let r = std::panic::catch_unwind(|| {
+            assert_close(&[1.0], &[1.1], 1e-3, 0.0, "fail");
+        });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Split-complex buffers and scalar complex arithmetic.
+//!
+//! The whole stack uses vDSP's split-complex layout (`DSPSplitComplex`):
+//! separate `f32` arrays for real and imaginary parts. This is also the
+//! format at the PJRT boundary (two `f32` tensors), avoiding complex
+//! dtypes in HLO interchange.
+
+use std::fmt;
+
+/// A scalar complex number in `f32`, with the handful of operations the
+/// FFT kernels need. Deliberately minimal (no external num crate facade).
+#[derive(Clone, Copy, PartialEq, Default)]
+pub struct C32 {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl C32 {
+    pub const ZERO: C32 = C32 { re: 0.0, im: 0.0 };
+    pub const ONE: C32 = C32 { re: 1.0, im: 0.0 };
+
+    #[inline(always)]
+    pub fn new(re: f32, im: f32) -> Self {
+        C32 { re, im }
+    }
+
+    /// `e^{i theta}`.
+    #[inline]
+    pub fn cis(theta: f32) -> Self {
+        C32 { re: theta.cos(), im: theta.sin() }
+    }
+
+    #[inline(always)]
+    pub fn conj(self) -> Self {
+        C32 { re: self.re, im: -self.im }
+    }
+
+    #[inline(always)]
+    pub fn scale(self, s: f32) -> Self {
+        C32 { re: self.re * s, im: self.im * s }
+    }
+
+    /// Multiply by `i` (90 degree rotation), free of multiplications.
+    #[inline(always)]
+    pub fn mul_i(self) -> Self {
+        C32 { re: -self.im, im: self.re }
+    }
+
+    /// Multiply by `-i`.
+    #[inline(always)]
+    pub fn mul_neg_i(self) -> Self {
+        C32 { re: self.im, im: -self.re }
+    }
+
+    #[inline(always)]
+    pub fn norm_sqr(self) -> f32 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f32 {
+        self.norm_sqr().sqrt()
+    }
+}
+
+impl std::ops::Add for C32 {
+    type Output = C32;
+    #[inline(always)]
+    fn add(self, o: C32) -> C32 {
+        C32 { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl std::ops::Sub for C32 {
+    type Output = C32;
+    #[inline(always)]
+    fn sub(self, o: C32) -> C32 {
+        C32 { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl std::ops::Mul for C32 {
+    type Output = C32;
+    #[inline(always)]
+    fn mul(self, o: C32) -> C32 {
+        C32 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl std::ops::Neg for C32 {
+    type Output = C32;
+    #[inline(always)]
+    fn neg(self) -> C32 {
+        C32 { re: -self.re, im: -self.im }
+    }
+}
+
+impl fmt::Debug for C32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({:+.6}{:+.6}i)", self.re, self.im)
+    }
+}
+
+/// An owned split-complex vector: `re[i] + i*im[i]`, the layout vDSP calls
+/// `DSPSplitComplex` and the layout every artifact input/output uses.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct SplitComplex {
+    pub re: Vec<f32>,
+    pub im: Vec<f32>,
+}
+
+impl SplitComplex {
+    pub fn zeros(n: usize) -> Self {
+        SplitComplex { re: vec![0.0; n], im: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        debug_assert_eq!(self.re.len(), self.im.len());
+        self.re.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+
+    pub fn from_interleaved(v: &[C32]) -> Self {
+        SplitComplex {
+            re: v.iter().map(|c| c.re).collect(),
+            im: v.iter().map(|c| c.im).collect(),
+        }
+    }
+
+    pub fn to_interleaved(&self) -> Vec<C32> {
+        self.re
+            .iter()
+            .zip(&self.im)
+            .map(|(&re, &im)| C32 { re, im })
+            .collect()
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> C32 {
+        C32 { re: self.re[i], im: self.im[i] }
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, c: C32) {
+        self.re[i] = c.re;
+        self.im[i] = c.im;
+    }
+
+    /// Append another split-complex vector.
+    pub fn extend_from(&mut self, o: &SplitComplex) {
+        self.re.extend_from_slice(&o.re);
+        self.im.extend_from_slice(&o.im);
+    }
+
+    /// Sub-range copy `[start, start+len)`.
+    pub fn slice(&self, start: usize, len: usize) -> SplitComplex {
+        SplitComplex {
+            re: self.re[start..start + len].to_vec(),
+            im: self.im[start..start + len].to_vec(),
+        }
+    }
+
+    /// Max |a-b| over elements, as a complex modulus.
+    pub fn max_abs_diff(&self, o: &SplitComplex) -> f32 {
+        assert_eq!(self.len(), o.len());
+        let mut m = 0.0f32;
+        for i in 0..self.len() {
+            m = m.max((self.get(i) - o.get(i)).abs());
+        }
+        m
+    }
+
+    /// Relative L2 error `||a-b|| / ||b||`.
+    pub fn rel_l2_error(&self, reference: &SplitComplex) -> f32 {
+        assert_eq!(self.len(), reference.len());
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..self.len() {
+            num += (self.get(i) - reference.get(i)).norm_sqr() as f64;
+            den += reference.get(i).norm_sqr() as f64;
+        }
+        if den == 0.0 {
+            return if num == 0.0 { 0.0 } else { f32::INFINITY };
+        }
+        (num / den).sqrt() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complex_mul_matches_definition() {
+        let a = C32::new(1.0, 2.0);
+        let b = C32::new(3.0, -4.0);
+        let p = a * b;
+        assert_eq!(p, C32::new(11.0, 2.0));
+    }
+
+    #[test]
+    fn cis_unit_circle() {
+        let w = C32::cis(std::f32::consts::FRAC_PI_2);
+        assert!((w.re - 0.0).abs() < 1e-6);
+        assert!((w.im - 1.0).abs() < 1e-6);
+        // cis(a) * cis(b) == cis(a+b)
+        let a = C32::cis(0.3);
+        let b = C32::cis(0.5);
+        let ab = C32::cis(0.8);
+        assert!(((a * b) - ab).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mul_i_is_rotation() {
+        let a = C32::new(2.0, 3.0);
+        assert_eq!(a.mul_i(), a * C32::new(0.0, 1.0));
+        assert_eq!(a.mul_neg_i(), a * C32::new(0.0, -1.0));
+    }
+
+    #[test]
+    fn split_roundtrip() {
+        let v = vec![C32::new(1.0, -1.0), C32::new(0.5, 2.0), C32::ZERO];
+        let s = SplitComplex::from_interleaved(&v);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.to_interleaved(), v);
+    }
+
+    #[test]
+    fn rel_error_zero_for_equal() {
+        let s = SplitComplex { re: vec![1.0, 2.0], im: vec![3.0, 4.0] };
+        assert_eq!(s.rel_l2_error(&s), 0.0);
+        assert_eq!(s.max_abs_diff(&s), 0.0);
+    }
+
+    #[test]
+    fn slice_and_extend() {
+        let mut a = SplitComplex::zeros(2);
+        let b = SplitComplex { re: vec![1.0, 2.0], im: vec![3.0, 4.0] };
+        a.extend_from(&b);
+        assert_eq!(a.len(), 4);
+        let s = a.slice(2, 2);
+        assert_eq!(s, b);
+    }
+}

@@ -1,0 +1,90 @@
+//! Small self-contained utilities built from scratch for the offline
+//! environment (no `rand`, `serde`, or `clap` available): split-complex
+//! buffers, PRNG, wall-clock timing helpers.
+
+pub mod complex;
+pub mod rng;
+pub mod timer;
+
+/// Round `x` up to the next multiple of `m` (`m > 0`).
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Integer log2 of a power of two. Panics if `n` is not a power of two.
+pub fn ilog2_exact(n: usize) -> u32 {
+    assert!(n.is_power_of_two(), "{n} is not a power of two");
+    n.trailing_zeros()
+}
+
+/// Human-readable byte count (KiB/MiB).
+pub fn human_bytes(b: usize) -> String {
+    if b >= 1 << 20 {
+        format!("{:.1} MiB", b as f64 / (1 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1} KiB", b as f64 / (1 << 10) as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Nominal FFT FLOP count used throughout the paper: `5 N log2 N`.
+pub fn fft_flops(n: usize) -> f64 {
+    5.0 * n as f64 * (ilog2_exact(n) as f64)
+}
+
+/// GFLOPS given nominal FLOPs for a whole batch and elapsed seconds.
+pub fn gflops(flops: f64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return f64::INFINITY;
+    }
+    flops / seconds / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(250, 32), 256);
+    }
+
+    #[test]
+    fn ilog2_powers() {
+        assert_eq!(ilog2_exact(1), 0);
+        assert_eq!(ilog2_exact(4096), 12);
+        assert_eq!(ilog2_exact(16384), 14);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ilog2_rejects_non_pow2() {
+        ilog2_exact(12);
+    }
+
+    #[test]
+    fn fft_flops_matches_paper() {
+        // Paper §VI-A: 5 N log2 N. At N=4096: 5*4096*12 = 245760.
+        assert_eq!(fft_flops(4096), 245_760.0);
+    }
+
+    #[test]
+    fn gflops_sane() {
+        // 245760 FLOPs in 1.78 us ≈ 138 GFLOPS (paper Table VI row 3).
+        let g = gflops(fft_flops(4096), 1.78e-6);
+        assert!((g - 138.0).abs() < 1.0, "{g}");
+    }
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(32 * 1024), "32.0 KiB");
+        assert_eq!(human_bytes(3 << 20), "3.0 MiB");
+    }
+}

@@ -1,0 +1,130 @@
+//! Wall-clock timing helpers shared by the bench harness and the service
+//! metrics. Mirrors the paper's methodology (§VI-A): median over many
+//! iterations after a warmup phase.
+
+use std::time::{Duration, Instant};
+
+/// Time a closure once, returning (result, elapsed seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` for `warmup` iterations, then `iters` timed iterations, and
+/// return per-iteration seconds (sorted ascending).
+pub fn sample<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples
+}
+
+/// Summary statistics over sorted samples.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Stats {
+    pub min: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub n: usize,
+}
+
+impl Stats {
+    pub fn from_sorted(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len();
+        let pct = |p: f64| samples[(((n - 1) as f64) * p).round() as usize];
+        Stats {
+            min: samples[0],
+            median: pct(0.5),
+            p95: pct(0.95),
+            max: samples[n - 1],
+            mean: samples.iter().sum::<f64>() / n as f64,
+            n,
+        }
+    }
+}
+
+/// A simple stopwatch accumulating named phases (used by the coordinator
+/// metrics to split queueing / dispatch / execute time).
+#[derive(Debug, Default)]
+pub struct PhaseTimer {
+    phases: Vec<(String, Duration)>,
+    current: Option<(String, Instant)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// End any running phase and start a new one.
+    pub fn phase(&mut self, name: &str) {
+        self.stop();
+        self.current = Some((name.to_string(), Instant::now()));
+    }
+
+    /// End the running phase, if any.
+    pub fn stop(&mut self) {
+        if let Some((name, t0)) = self.current.take() {
+            self.phases.push((name, t0.elapsed()));
+        }
+    }
+
+    /// (name, seconds) pairs in phase order.
+    pub fn report(&self) -> Vec<(String, f64)> {
+        self.phases
+            .iter()
+            .map(|(n, d)| (n.clone(), d.as_secs_f64()))
+            .collect()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.phases.iter().map(|(_, d)| d.as_secs_f64()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_known_samples() {
+        let s = Stats::from_sorted(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn sample_returns_sorted() {
+        let s = sample(2, 10, || std::hint::black_box(3 * 7));
+        assert_eq!(s.len(), 10);
+        assert!(s.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.phase("a");
+        std::thread::sleep(Duration::from_millis(1));
+        t.phase("b");
+        std::thread::sleep(Duration::from_millis(1));
+        t.stop();
+        let rep = t.report();
+        assert_eq!(rep.len(), 2);
+        assert_eq!(rep[0].0, "a");
+        assert!(t.total() >= 0.002);
+    }
+}

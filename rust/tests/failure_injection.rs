@@ -1,0 +1,160 @@
+//! Failure-injection tests: malformed manifests, corrupt artifacts,
+//! pathological inputs — the service must degrade with errors, never
+//! hang, crash, or serve wrong answers silently.
+
+use applefft::coordinator::{FftService, ServiceConfig};
+use applefft::fft::Direction;
+use applefft::runtime::{Backend, Engine, Registry};
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use std::time::Duration;
+
+fn write(dir: &std::path::Path, name: &str, content: &str) {
+    std::fs::write(dir.join(name), content).unwrap();
+}
+
+#[test]
+fn manifest_missing_file_is_startup_error() {
+    let dir = std::env::temp_dir().join(format!("applefft-fi-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    write(
+        &dir,
+        "manifest.txt",
+        "version = 1\nbatch_tile = 32\n\n[fft256_fwd]\nkind = fft\nn = 256\nbatch = 32\nvariant = radix8\ndirection = fwd\nfile = missing.hlo.txt\n",
+    );
+    let err = Registry::load(&dir).unwrap_err();
+    assert!(format!("{err:#}").contains("missing"), "{err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_manifest_is_error() {
+    let dir = std::env::temp_dir().join(format!("applefft-fi2-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    write(&dir, "manifest.txt", "this is not a manifest\n");
+    assert!(Registry::load(&dir).is_err());
+    // Empty manifest (no sections) is also rejected.
+    write(&dir, "manifest.txt", "version = 1\n");
+    assert!(Registry::load(&dir).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_hlo_fails_request_but_not_service() {
+    let dir = std::env::temp_dir().join(format!("applefft-fi3-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    write(&dir, "bad.hlo.txt", "HloModule utter_garbage ~~~ not hlo ~~~");
+    write(
+        &dir,
+        "manifest.txt",
+        "version = 1\nbatch_tile = 4\n\n[fft256_fwd]\nkind = fft\nn = 256\nbatch = 4\nvariant = radix8\ndirection = fwd\nfile = bad.hlo.txt\n",
+    );
+    let engine = Engine::start_with_dir(Backend::Pjrt, &dir).unwrap();
+    let x = SplitComplex::zeros(256 * 4);
+    // The request must fail with a parse/compile error...
+    let err = engine.fft_batch(&x, 256, 4, Direction::Forward).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad.hlo.txt") || msg.contains("parsing") || msg.contains("compil"), "{msg}");
+    // ...and the device thread must survive to fail the next one too.
+    assert!(engine.fft_batch(&x, 256, 4, Direction::Forward).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pjrt_backend_without_artifacts_is_error() {
+    let dir = std::env::temp_dir().join("applefft-definitely-not-here");
+    assert!(Engine::start_with_dir(Backend::Pjrt, &dir).is_err());
+    // Auto falls back to native instead.
+    let engine = Engine::start_with_dir(Backend::Auto, &dir).unwrap();
+    assert_eq!(engine.backend(), Backend::Native);
+}
+
+#[test]
+fn nan_and_inf_inputs_do_not_crash() {
+    let svc = FftService::start(ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_millis(1),
+        workers: 1,
+        warm: false,
+    })
+    .unwrap();
+    let n = 256;
+    let mut x = SplitComplex::zeros(n);
+    x.re[0] = f32::NAN;
+    x.re[1] = f32::INFINITY;
+    x.im[2] = f32::NEG_INFINITY;
+    // FFT of non-finite data is non-finite, but the service must return
+    // it rather than hang or panic.
+    let y = svc.fft(n, Direction::Forward, x, 1).unwrap();
+    assert_eq!(y.len(), n);
+    assert!(y.re.iter().any(|v| !v.is_finite()));
+}
+
+#[test]
+fn zero_input_gives_zero_spectrum() {
+    let svc = FftService::start(ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_millis(1),
+        workers: 1,
+        warm: false,
+    })
+    .unwrap();
+    let y = svc.fft(512, Direction::Forward, SplitComplex::zeros(512), 1).unwrap();
+    assert!(y.re.iter().chain(&y.im).all(|&v| v == 0.0));
+}
+
+#[test]
+fn drain_on_idle_service_is_noop() {
+    let svc = FftService::start(ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_secs(3600),
+        workers: 1,
+        warm: false,
+    })
+    .unwrap();
+    svc.drain().unwrap();
+    svc.drain().unwrap(); // idempotent
+    assert_eq!(svc.metrics().tiles_dispatched, 0);
+}
+
+#[test]
+fn responses_survive_dropped_receivers() {
+    // A client that hangs up must not poison the tile for co-batched
+    // requests.
+    let svc = FftService::start(ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_millis(1),
+        workers: 1,
+        warm: false,
+    })
+    .unwrap();
+    let mut rng = Rng::new(600);
+    let n = 256;
+    let x1 = SplitComplex { re: rng.signal(n * 2), im: rng.signal(n * 2) };
+    let x2 = SplitComplex { re: rng.signal(n * 3), im: rng.signal(n * 3) };
+    let (_, rx1) = svc.submit(n, Direction::Forward, x1, 2).unwrap();
+    drop(rx1); // client 1 hangs up immediately
+    let (_, rx2) = svc.submit(n, Direction::Forward, x2, 3).unwrap();
+    let resp = rx2.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert!(resp.result.is_ok(), "surviving client must still be served");
+    assert_eq!(svc.metrics().failures, 0);
+}
+
+#[test]
+fn oversize_line_count_still_correct() {
+    // A single request far larger than one tile (stress segmentation).
+    let svc = FftService::start(ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_millis(1),
+        workers: 2,
+        warm: false,
+    })
+    .unwrap();
+    let planner = applefft::fft::plan::NativePlanner::new();
+    let mut rng = Rng::new(601);
+    let (n, lines) = (256, 200); // > 6 tiles
+    let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+    let got = svc.fft(n, Direction::Forward, x.clone(), lines).unwrap();
+    let want = planner.fft_batch(&x, n, lines, Direction::Forward).unwrap();
+    assert!(got.rel_l2_error(&want) < 5e-4);
+}

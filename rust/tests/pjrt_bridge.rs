@@ -1,0 +1,108 @@
+//! Integration tests for the python-AOT -> rust-PJRT bridge.
+//!
+//! These require `make artifacts` to have run; they skip (with a note)
+//! when the artifacts directory is absent so `cargo test` stays green on
+//! a fresh checkout.
+
+use applefft::fft::dft::dft_batch;
+use applefft::fft::plan::{NativePlanner, Variant};
+use applefft::fft::Direction;
+use applefft::runtime::{engine::artifacts_dir, Backend, Engine};
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+
+fn pjrt_engine() -> Option<Engine> {
+    if !artifacts_dir().join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::start(Backend::Pjrt).expect("starting PJRT engine"))
+}
+
+#[test]
+fn pjrt_fft4096_matches_naive_dft() {
+    let Some(engine) = pjrt_engine() else { return };
+    let mut rng = Rng::new(100);
+    let (n, batch) = (4096, engine.batch_tile());
+    let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+    let got = engine.fft_batch(&x, n, batch, Direction::Forward).unwrap();
+    // Naive oracle is O(N^2): check the first two lines only.
+    let head = x.slice(0, 2 * n);
+    let want = dft_batch(&head, n, 2, Direction::Forward);
+    let got_head = got.slice(0, 2 * n);
+    let err = got_head.rel_l2_error(&want);
+    assert!(err < 2e-4, "PJRT vs naive DFT rel err {err}");
+}
+
+#[test]
+fn pjrt_matches_native_all_sizes() {
+    let Some(engine) = pjrt_engine() else { return };
+    let planner = NativePlanner::new();
+    let batch = engine.batch_tile();
+    for n in [256usize, 512, 1024, 2048, 4096, 8192, 16384] {
+        let mut rng = Rng::new(n as u64);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        for dir in [Direction::Forward, Direction::Inverse] {
+            let got = engine.fft_batch(&x, n, batch, dir).unwrap();
+            let want = planner.fft_batch(&x, n, batch, dir).unwrap();
+            let err = got.rel_l2_error(&want);
+            assert!(err < 5e-4, "n={n} {dir:?}: PJRT vs native rel err {err}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_variant_artifacts_agree() {
+    let Some(engine) = pjrt_engine() else { return };
+    let mut rng = Rng::new(101);
+    let (n, batch) = (4096, engine.batch_tile());
+    let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+    let dims = vec![vec![batch, n], vec![batch, n]];
+    let base = engine
+        .execute_raw("fft4096_fwd", vec![x.re.clone(), x.im.clone()], dims.clone())
+        .unwrap();
+    for variant in ["radix4", "mma", "shuffle"] {
+        let out = engine
+            .execute_raw(
+                &format!("fft4096_fwd_{variant}"),
+                vec![x.re.clone(), x.im.clone()],
+                dims.clone(),
+            )
+            .unwrap();
+        let a = SplitComplex { re: out[0].clone(), im: out[1].clone() };
+        let b = SplitComplex { re: base[0].clone(), im: base[1].clone() };
+        let err = a.rel_l2_error(&b);
+        assert!(err < 1e-4, "variant {variant} vs radix8: rel err {err}");
+    }
+}
+
+#[test]
+fn pjrt_rangecomp_matches_native_composition() {
+    let Some(engine) = pjrt_engine() else { return };
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(102);
+    let (n, batch) = (4096, engine.batch_tile());
+    let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+    let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+    let got = engine.range_compress(&x, &h, n, batch).unwrap();
+
+    // Native composition: IFFT(FFT(x) .* H).
+    let plan = planner.plan(n, Variant::Radix8).unwrap();
+    let mut s = plan.execute_batch(&x, batch, Direction::Forward).unwrap();
+    for b in 0..batch {
+        for i in 0..n {
+            let v = s.get(b * n + i) * h.get(i);
+            s.set(b * n + i, v);
+        }
+    }
+    let want = plan.execute_batch(&s, batch, Direction::Inverse).unwrap();
+    let err = got.rel_l2_error(&want);
+    assert!(err < 5e-4, "rangecomp rel err {err}");
+}
+
+#[test]
+fn pjrt_registry_lists_all_artifacts() {
+    let Some(engine) = pjrt_engine() else { return };
+    assert!(engine.registry().len() >= 18);
+    assert_eq!(engine.batch_tile(), 32);
+}

@@ -1,0 +1,186 @@
+//! Property-based tests (via the in-repo testkit) on the coordinator
+//! invariants and the FFT algebra — the DESIGN.md §8 checklist.
+
+use applefft::coordinator::{Decomposition, FftService, Planner, ServiceConfig};
+use applefft::fft::plan::{NativePlanner, Variant};
+use applefft::fft::stockham::radix_schedule;
+use applefft::fft::Direction;
+use applefft::runtime::Backend;
+use applefft::testkit::check;
+use applefft::util::complex::{SplitComplex, C32};
+use std::time::Duration;
+
+#[test]
+fn prop_planner_synthesis_rules() {
+    let planner = Planner::new(32);
+    check("synthesis rules", 200, |g| {
+        let n = g.pow2_size(8, 14);
+        let plan = planner.plan(n, Direction::Forward).unwrap();
+        match plan.decomposition {
+            Decomposition::SingleTg { ref radices, tg_bytes, .. } => {
+                assert!(n <= 4096, "rule 1 bound");
+                assert_eq!(radices.iter().product::<usize>(), n);
+                assert_eq!(tg_bytes, n * 8);
+                assert!(tg_bytes <= 32 * 1024, "32 KiB threadgroup limit");
+            }
+            Decomposition::FourStep { n1, n2 } => {
+                assert!(n > 4096, "rule 2 bound");
+                assert_eq!(n1 * n2, n, "factorisation");
+                assert!(n2 <= 4096, "N2 <= B_max");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_radix_schedule_invariants() {
+    check("radix schedules", 300, |g| {
+        let n = g.pow2_size(1, 14);
+        let max_radix = *g.rng.choose(&[2usize, 4, 8]);
+        let sched = radix_schedule(n, max_radix);
+        assert_eq!(sched.iter().product::<usize>(), n, "consumes n exactly");
+        assert!(sched.iter().all(|r| [2, 4, 8].contains(r)));
+        assert!(sched.iter().all(|&r| r <= max_radix.max(2)));
+        // For radix-4/8 schedules, radix-2 appears at most once (the
+        // tail fix-up); a pure radix-2 schedule is all 2s by definition.
+        if max_radix > 2 {
+            assert!(sched.iter().filter(|&&r| r == 2).count() <= 1);
+        }
+    });
+}
+
+#[test]
+fn prop_fft_linearity_and_parseval() {
+    let planner = NativePlanner::new();
+    check("fft algebra", 24, |g| {
+        let n = g.pow2_size(5, 10);
+        let (re1, im1) = g.signal(n);
+        let (re2, im2) = g.signal(n);
+        let a = SplitComplex { re: re1, im: im1 };
+        let b = SplitComplex { re: re2, im: im2 };
+        // Linearity: FFT(a + b) = FFT(a) + FFT(b).
+        let mut sum = SplitComplex::zeros(n);
+        for i in 0..n {
+            sum.set(i, a.get(i) + b.get(i));
+        }
+        let fa = planner.fft_batch(&a, n, 1, Direction::Forward).unwrap();
+        let fb = planner.fft_batch(&b, n, 1, Direction::Forward).unwrap();
+        let fsum = planner.fft_batch(&sum, n, 1, Direction::Forward).unwrap();
+        let mut fafb = SplitComplex::zeros(n);
+        for i in 0..n {
+            fafb.set(i, fa.get(i) + fb.get(i));
+        }
+        assert!(fsum.rel_l2_error(&fafb) < 1e-4);
+        // Parseval: ||X||^2 = N ||x||^2.
+        let ex: f64 = (0..n).map(|i| a.get(i).norm_sqr() as f64).sum();
+        let ef: f64 = (0..n).map(|i| fa.get(i).norm_sqr() as f64).sum();
+        assert!((ef / n as f64 - ex).abs() / ex < 1e-3, "parseval {ef} vs {ex}");
+    });
+}
+
+#[test]
+fn prop_time_shift_is_phase_ramp() {
+    let planner = NativePlanner::new();
+    check("shift theorem", 16, |g| {
+        let n = g.pow2_size(5, 9);
+        let (re, im) = g.signal(n);
+        let x = SplitComplex { re, im };
+        let shift = g.rng.below(n);
+        // y[t] = x[(t - shift) mod n]  =>  Y[k] = X[k] e^{-2πi k shift/n}
+        let mut y = SplitComplex::zeros(n);
+        for t in 0..n {
+            y.set((t + shift) % n, x.get(t));
+        }
+        let fx = planner.fft_batch(&x, n, 1, Direction::Forward).unwrap();
+        let fy = planner.fft_batch(&y, n, 1, Direction::Forward).unwrap();
+        let mut expect = SplitComplex::zeros(n);
+        for k in 0..n {
+            let theta = -2.0 * std::f32::consts::PI * ((k * shift) % n) as f32 / n as f32;
+            expect.set(k, fx.get(k) * C32::cis(theta));
+        }
+        assert!(fy.rel_l2_error(&expect) < 2e-4);
+    });
+}
+
+#[test]
+fn prop_variants_agree() {
+    let planner = NativePlanner::new();
+    check("radix4 == radix8 transform", 20, |g| {
+        let n = g.pow2_size(8, 13);
+        let (re, im) = g.signal(n);
+        let x = SplitComplex { re, im };
+        let a = planner
+            .plan(n, Variant::Radix4)
+            .unwrap()
+            .execute_batch(&x, 1, Direction::Forward)
+            .unwrap();
+        let b = planner
+            .plan(n, Variant::Radix8)
+            .unwrap()
+            .execute_batch(&x, 1, Direction::Forward)
+            .unwrap();
+        assert!(a.rel_l2_error(&b) < 1e-4);
+    });
+}
+
+#[test]
+fn prop_service_never_drops_or_corrupts() {
+    // The big one: random request streams through the full service; every
+    // response arrives exactly once, with the right shape and numerics.
+    let svc = FftService::start(ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_millis(1),
+        workers: 3,
+        warm: false,
+    })
+    .unwrap();
+    let planner = NativePlanner::new();
+    check("service integrity", 12, |g| {
+        let count = g.rng.between(3, 8);
+        let mut pending = Vec::new();
+        for _ in 0..count {
+            let n = *g.rng.choose(&[256usize, 512, 1024]);
+            let lines = g.rng.between(1, 40); // spans multiple tiles
+            let (re, im) = g.signal(n * lines);
+            let x = SplitComplex { re, im };
+            let (id, rx) = svc.submit(n, Direction::Forward, x.clone(), lines).unwrap();
+            pending.push((id, rx, x, n, lines));
+        }
+        for (id, rx, x, n, lines) in pending {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("response must arrive");
+            assert_eq!(resp.id, id, "response routed to the right request");
+            let got = resp.result.expect("no failures");
+            assert_eq!(got.len(), n * lines, "shape preserved");
+            let want = planner.fft_batch(&x, n, lines, Direction::Forward).unwrap();
+            let err = got.rel_l2_error(&want);
+            assert!(err < 5e-4, "numerics intact: {err}");
+            // Exactly once: a second receive must find the channel empty.
+            assert!(rx.try_recv().is_err(), "no duplicate responses");
+        }
+    });
+    assert_eq!(svc.metrics().failures, 0);
+}
+
+#[test]
+fn prop_padding_is_invisible() {
+    // Whatever the line count, padding must never leak into responses.
+    let svc = FftService::start(ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_micros(200),
+        workers: 2,
+        warm: false,
+    })
+    .unwrap();
+    let planner = NativePlanner::new();
+    check("padding invisibility", 24, |g| {
+        let n = 256;
+        let lines = g.rng.between(1, 33); // all paddings incl. 0 and 31
+        let (re, im) = g.signal(n * lines);
+        let x = SplitComplex { re, im };
+        let got = svc.fft(n, Direction::Forward, x.clone(), lines).unwrap();
+        let want = planner.fft_batch(&x, n, lines, Direction::Forward).unwrap();
+        assert!(got.rel_l2_error(&want) < 5e-4);
+    });
+    let m = svc.metrics();
+    assert!(m.lines_padded > 0, "padding must actually have occurred");
+}

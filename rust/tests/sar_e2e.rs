@@ -1,0 +1,89 @@
+//! End-to-end SAR pipeline test: scene -> echoes -> batched range
+//! compression through the service -> target detection. This is the
+//! integration-test twin of `examples/sar_range_compression.rs`.
+
+use applefft::coordinator::{FftService, ServiceConfig};
+use applefft::runtime::{engine::artifacts_dir, Backend};
+use applefft::sar::range::{run_scene, RangeCompressor};
+use applefft::sar::{Chirp, Scene};
+use applefft::testkit::check;
+use applefft::util::rng::Rng;
+use std::time::Duration;
+
+fn service(backend: Backend) -> FftService {
+    FftService::start(ServiceConfig {
+        backend,
+        max_wait: Duration::from_millis(1),
+        workers: 2,
+        warm: false,
+    })
+    .unwrap()
+}
+
+#[test]
+fn all_targets_focus_at_true_bins() {
+    let svc = service(Backend::Native);
+    let mut rng = Rng::new(300);
+    let n = 4096;
+    let chirp = Chirp::new(100e6, 256, 0.8);
+    let scene = Scene::random(n, 6, chirp.samples, &mut rng);
+    let lines = 16;
+    let echoes = scene.echoes(&chirp, lines, &mut rng);
+    let comp = RangeCompressor::new(chirp, n);
+    let report = run_scene(&svc, &comp, &scene, &echoes, lines, false).unwrap();
+    assert_eq!(report.detection_hits, 6, "{report:?}");
+    assert!(report.gflops > 0.0);
+}
+
+#[test]
+fn fused_and_composed_agree_end_to_end() {
+    let svc = service(Backend::Native);
+    let mut rng = Rng::new(301);
+    let n = 4096;
+    let chirp = Chirp::new(100e6, 256, 0.8);
+    let scene = Scene::random(n, 4, chirp.samples, &mut rng);
+    let lines = 40; // exceeds one tile: exercises fused-path chunking
+    let echoes = scene.echoes(&chirp, lines, &mut rng);
+    let comp = RangeCompressor::new(chirp, n);
+    let a = comp.compress_composed(&svc, &echoes, lines).unwrap();
+    let b = comp.compress_fused(&svc, &echoes, lines).unwrap();
+    let err = a.rel_l2_error(&b);
+    assert!(err < 5e-4, "fused vs composed: {err}");
+}
+
+#[test]
+fn prop_random_scenes_always_recover_targets() {
+    let svc = service(Backend::Native);
+    check("sar recovery", 8, |g| {
+        let n = 2048;
+        let chirp = Chirp::new(100e6, 128, 0.8);
+        let k = g.rng.between(1, 4);
+        let scene = Scene::random(n, k, chirp.samples, &mut g.rng);
+        let lines = g.rng.between(1, 6);
+        let echoes = scene.echoes(&chirp, lines, &mut g.rng);
+        let comp = RangeCompressor::new(chirp, n);
+        let report = run_scene(&svc, &comp, &scene, &echoes, lines, false).unwrap();
+        assert_eq!(report.detection_hits, k, "case {}: {report:?}", g.case);
+    });
+}
+
+#[test]
+fn pjrt_sar_pipeline() {
+    if !artifacts_dir().join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let svc = service(Backend::Pjrt);
+    let mut rng = Rng::new(302);
+    let n = 4096;
+    let chirp = Chirp::new(100e6, 256, 0.8);
+    let scene = Scene::random(n, 5, chirp.samples, &mut rng);
+    let lines = 32;
+    let echoes = scene.echoes(&chirp, lines, &mut rng);
+    let comp = RangeCompressor::new(chirp, n);
+    // Composed through the batched service AND the fused artifact.
+    let composed = run_scene(&svc, &comp, &scene, &echoes, lines, false).unwrap();
+    assert_eq!(composed.detection_hits, 5, "{composed:?}");
+    let fused = run_scene(&svc, &comp, &scene, &echoes, lines, true).unwrap();
+    assert_eq!(fused.detection_hits, 5, "{fused:?}");
+}

@@ -1,0 +1,142 @@
+//! Integration tests over the full L3 stack (service -> batcher ->
+//! workers -> engine), on the native backend so they run pre-artifacts;
+//! a final test upgrades to PJRT when artifacts exist.
+
+use applefft::coordinator::{FftService, ServiceConfig};
+use applefft::fft::plan::NativePlanner;
+use applefft::fft::Direction;
+use applefft::runtime::{engine::artifacts_dir, Backend};
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use std::time::Duration;
+
+fn service(backend: Backend) -> FftService {
+    FftService::start(ServiceConfig {
+        backend,
+        max_wait: Duration::from_millis(1),
+        workers: 2,
+        warm: false,
+    })
+    .unwrap()
+}
+
+#[test]
+fn mixed_size_request_storm_all_correct() {
+    let svc = service(Backend::Native);
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(200);
+    for i in 0..40 {
+        let n = *rng.choose(&[256usize, 512, 1024, 2048, 4096]);
+        let lines = rng.between(1, 10);
+        let dir = if i % 3 == 0 { Direction::Inverse } else { Direction::Forward };
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        let got = svc.fft(n, dir, x.clone(), lines).unwrap();
+        let want = planner.fft_batch(&x, n, lines, dir).unwrap();
+        let err = got.rel_l2_error(&want);
+        assert!(err < 5e-4, "iter {i} n={n} lines={lines}: {err}");
+    }
+    let m = svc.metrics();
+    assert_eq!(m.requests, 40);
+    assert_eq!(m.failures, 0);
+    assert!(m.tiles_dispatched > 0);
+}
+
+#[test]
+fn async_submissions_coalesce_into_tiles() {
+    // Long deadline so coalescing is deterministic (debug builds are
+    // slow enough for a millisecond deadline to fire mid-submission);
+    // the tile flushes the moment 32 lines accumulate.
+    let svc = FftService::start(ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_secs(3600),
+        workers: 2,
+        warm: false,
+    })
+    .unwrap();
+    let mut rng = Rng::new(201);
+    let n = 512;
+    // 16 x 2-line requests = 32 lines = exactly one tile if coalesced.
+    let mut pending = Vec::new();
+    let mut inputs = Vec::new();
+    for _ in 0..16 {
+        let x = SplitComplex { re: rng.signal(n * 2), im: rng.signal(n * 2) };
+        let (_, rx) = svc.submit(n, Direction::Forward, x.clone(), 2).unwrap();
+        inputs.push(x);
+        pending.push(rx);
+    }
+    svc.drain().unwrap();
+    let planner = NativePlanner::new();
+    for (rx, x) in pending.into_iter().zip(inputs) {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let got = resp.result.unwrap();
+        let want = planner.fft_batch(&x, n, 2, Direction::Forward).unwrap();
+        assert!(got.rel_l2_error(&want) < 5e-4);
+    }
+    let m = svc.metrics();
+    // 32 lines fit one 32-line tile; allow a race split into two.
+    assert!(m.tiles_dispatched <= 2, "tiles = {}", m.tiles_dispatched);
+    assert!(m.padding_ratio() < 0.5);
+}
+
+#[test]
+fn latency_metrics_populate() {
+    let svc = service(Backend::Native);
+    let mut rng = Rng::new(202);
+    let x = SplitComplex { re: rng.signal(256 * 3), im: rng.signal(256 * 3) };
+    svc.fft(256, Direction::Forward, x, 3).unwrap();
+    let m = svc.metrics();
+    assert!(m.exec_mean_us > 0.0);
+    assert!(m.queue_p95_us > 0.0, "partial tile must record queue wait");
+}
+
+#[test]
+fn drain_flushes_partials_immediately() {
+    let svc = FftService::start(ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_secs(3600), // never auto-flush
+        workers: 1,
+        warm: false,
+    })
+    .unwrap();
+    let mut rng = Rng::new(203);
+    let x = SplitComplex { re: rng.signal(256 * 2), im: rng.signal(256 * 2) };
+    let (_, rx) = svc.submit(256, Direction::Forward, x, 2).unwrap();
+    // Without drain, this would wait an hour.
+    svc.drain().unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert!(resp.result.is_ok());
+}
+
+#[test]
+fn four_step_sizes_through_service() {
+    let svc = service(Backend::Native);
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(204);
+    for n in [8192usize, 16384] {
+        let lines = 2;
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        let got = svc.fft(n, Direction::Forward, x.clone(), lines).unwrap();
+        let want = planner.fft_batch(&x, n, lines, Direction::Forward).unwrap();
+        assert!(got.rel_l2_error(&want) < 5e-4, "n={n}");
+    }
+}
+
+#[test]
+fn pjrt_service_end_to_end() {
+    if !artifacts_dir().join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let svc = service(Backend::Pjrt);
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(205);
+    for n in [256usize, 4096, 8192] {
+        let lines = 5;
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        let got = svc.fft(n, Direction::Forward, x.clone(), lines).unwrap();
+        let want = planner.fft_batch(&x, n, lines, Direction::Forward).unwrap();
+        let err = got.rel_l2_error(&want);
+        assert!(err < 5e-4, "PJRT service n={n}: {err}");
+    }
+    assert_eq!(svc.metrics().failures, 0);
+}
