@@ -67,6 +67,44 @@ fn main() {
     t2.note("the paper's chain trick targets GPU transcendental cost; on CPU, tables win");
     t2.print();
 
+    // ---- Two-tier executor: serial codelets vs batch-parallel, the
+    // acceptance workload (N=4096, batch 64). Both rows run the same
+    // register-tier codelets with pooled workspaces; the parallel row
+    // adds the batch-occupancy tier (lines striped over workers). ----
+    let batch64 = 64usize;
+    let mut rng64 = Rng::new(64);
+    let x64 = SplitComplex { re: rng64.signal(n * batch64), im: rng64.signal(n * batch64) };
+    let ex = planner.executor(n, Variant::Radix8).unwrap();
+    let ms = b.run("executor serial n=4096 b=64", || {
+        let mut d = x64.clone();
+        ex.execute_batch_into(&mut d, batch64, Direction::Forward).unwrap();
+        d
+    });
+    let mp = b.run("executor batch-par n=4096 b=64", || {
+        let mut d = x64.clone();
+        ex.execute_batch_par_into(&mut d, batch64, Direction::Forward).unwrap();
+        d
+    });
+    let mut te = Table::new(
+        "Two-tier executor — N=4096, batch 64 (this testbed)",
+        &["path", "us/FFT", "GFLOPS", "speedup"],
+    );
+    te.row(&[
+        "executor serial (pooled codelets)".into(),
+        format!("{:.1}", ms.median_secs() / batch64 as f64 * 1e6),
+        format!("{:.2}", gflops(fft_flops(n) * batch64 as f64, ms.median_secs())),
+        "1.00x".into(),
+    ]);
+    te.row(&[
+        format!("executor batch-par ({} threads)", ex.threads()),
+        format!("{:.1}", mp.median_secs() / batch64 as f64 * 1e6),
+        format!("{:.2}", gflops(fft_flops(n) * batch64 as f64, mp.median_secs())),
+        format!("{:.2}x", ms.median_secs() / mp.median_secs()),
+    ]);
+    te.note("GFLOPS is the paper's nominal 5*N*log2 N metric (§VI-A)");
+    te.note("both rows include the input memcpy (out-of-place semantics)");
+    te.print();
+
     // ---- Radix ablation. ----
     let mut t3 = Table::new("Ablation — radix schedule at N=4096 (this testbed)", &[
         "variant", "passes", "us/FFT",

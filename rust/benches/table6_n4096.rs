@@ -56,7 +56,7 @@ fn main() {
     ]);
     let want = planner.fft_batch(&x, n, exec_batch, Direction::Forward).unwrap();
 
-    // Native vDSP stand-in.
+    // Native vDSP stand-in (serial executor path).
     let m = b.run("native radix-8", || {
         planner.fft_batch(&x, n, exec_batch, Direction::Forward).unwrap()
     });
@@ -65,6 +65,22 @@ fn main() {
         format!("{:.1}", m.median_secs() / exec_batch as f64 * 1e6),
         format!("{:.2}", gflops(fft_flops(n) * exec_batch as f64, m.median_secs())),
         "0 (is oracle)".into(),
+    ]);
+
+    // Two-tier executor with batch parallelism (the serving tile path).
+    let ex = planner
+        .executor(n, applefft::fft::plan::Variant::Radix8)
+        .expect("executor");
+    let got_par = ex.execute_batch_par(&x, exec_batch, Direction::Forward).unwrap();
+    let err_par = got_par.rel_l2_error(&want);
+    let mpar = b.run("native executor batch-par", || {
+        ex.execute_batch_par(&x, exec_batch, Direction::Forward).unwrap()
+    });
+    t2.row(&[
+        format!("native executor batch-par ({} threads)", ex.threads()),
+        format!("{:.1}", mpar.median_secs() / exec_batch as f64 * 1e6),
+        format!("{:.2}", gflops(fft_flops(n) * exec_batch as f64, mpar.median_secs())),
+        format!("{err_par:.1e}"),
     ]);
 
     // PJRT artifacts, if built.

@@ -1,5 +1,10 @@
 //! Service metrics: lock-free counters + a fixed-bucket latency
 //! histogram (no external metrics crate in the offline environment).
+//!
+//! Alongside the latency histograms the service tracks nominal FLOPs
+//! (the paper's `5·N·log2 N` per line, §VI-A) for every dispatched
+//! tile, so [`MetricsSnapshot::gflops`] reports executor throughput in
+//! the same unit as the paper's tables.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -26,12 +31,17 @@ impl Histogram {
         self.n.load(Ordering::Relaxed)
     }
 
+    /// Sum of all recorded values, microseconds.
+    pub fn total_us(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64
+    }
+
     pub fn mean_us(&self) -> f64 {
         let n = self.count();
         if n == 0 {
             return 0.0;
         }
-        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        self.total_us() / n as f64
     }
 
     /// Approximate percentile from bucket upper bounds.
@@ -60,18 +70,31 @@ pub struct Metrics {
     pub tiles_dispatched: AtomicU64,
     pub lines_padded: AtomicU64,
     pub failures: AtomicU64,
+    /// Nominal FLOPs executed (5·N·log2 N per tile line, padding
+    /// included — the executor transforms padded lines too).
+    pub flops: AtomicU64,
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
 }
 
 impl Metrics {
-    pub fn snapshot(&self) -> MetricsSnapshot {
+    /// Build a snapshot. `exec_busy_ns` is the device thread's pure
+    /// execution time (from [`crate::runtime::Engine::device_busy_ns`]):
+    /// it is measured at the executor, not at the workers, so tiles
+    /// queued behind the serialized device thread are not double-billed
+    /// into the GFLOPS denominator. It is also nanosecond-accurate —
+    /// [`Histogram::record_secs`] truncates to whole microseconds, which
+    /// is fine for latency percentiles but would zero out
+    /// sub-microsecond tiles.
+    pub fn snapshot(&self, exec_busy_ns: u64) -> MetricsSnapshot {
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             lines_in: self.lines_in.load(Ordering::Relaxed),
             tiles_dispatched: self.tiles_dispatched.load(Ordering::Relaxed),
             lines_padded: self.lines_padded.load(Ordering::Relaxed),
             failures: self.failures.load(Ordering::Relaxed),
+            nominal_flops: self.flops.load(Ordering::Relaxed),
+            exec_total_us: exec_busy_ns as f64 / 1e3,
             queue_mean_us: self.queue_latency.mean_us(),
             queue_p95_us: self.queue_latency.percentile_us(0.95),
             exec_mean_us: self.exec_latency.mean_us(),
@@ -87,6 +110,10 @@ pub struct MetricsSnapshot {
     pub tiles_dispatched: u64,
     pub lines_padded: u64,
     pub failures: u64,
+    /// Nominal FLOPs executed across all dispatched tiles.
+    pub nominal_flops: u64,
+    /// Total busy time of the executor across workers, microseconds.
+    pub exec_total_us: f64,
     pub queue_mean_us: f64,
     pub queue_p95_us: f64,
     pub exec_mean_us: f64,
@@ -103,10 +130,22 @@ impl MetricsSnapshot {
         self.lines_padded as f64 / dispatched as f64
     }
 
+    /// Executor throughput in the paper's metric: nominal FLOPs
+    /// (`5·N·log2 N` per line) divided by the device thread's pure
+    /// execution time. Queueing behind the device is excluded, so this
+    /// measures the executor itself, not end-to-end wall clock.
+    pub fn gflops(&self) -> f64 {
+        if self.exec_total_us <= 0.0 {
+            return 0.0;
+        }
+        self.nominal_flops as f64 / (self.exec_total_us * 1e-6) / 1e9
+    }
+
     pub fn render(&self) -> String {
         format!(
             "requests={} lines={} tiles={} padded={} ({:.1}%) failures={}\n\
-             queue: mean {:.0} us, p95 {:.0} us | exec: mean {:.0} us, p95 {:.0} us",
+             queue: mean {:.0} us, p95 {:.0} us | exec: mean {:.0} us, p95 {:.0} us\n\
+             executor: {:.2} GFLOPS nominal (5*N*log2 N / busy time)",
             self.requests,
             self.lines_in,
             self.tiles_dispatched,
@@ -117,6 +156,7 @@ impl MetricsSnapshot {
             self.queue_p95_us,
             self.exec_mean_us,
             self.exec_p95_us,
+            self.gflops(),
         )
     }
 }
@@ -149,11 +189,29 @@ mod tests {
     }
 
     #[test]
+    fn gflops_from_flops_and_busy_time() {
+        // 245760 nominal FLOPs (one N=4096 line) in 1.78 us ~ 138 GFLOPS
+        // (the paper's headline number).
+        let s = MetricsSnapshot {
+            nominal_flops: 245_760,
+            exec_total_us: 1.78,
+            ..Default::default()
+        };
+        assert!((s.gflops() - 138.0).abs() < 1.0, "{}", s.gflops());
+        assert_eq!(MetricsSnapshot::default().gflops(), 0.0);
+    }
+
+    #[test]
     fn snapshot_render_contains_fields() {
         let m = Metrics::default();
         m.requests.fetch_add(3, Ordering::Relaxed);
         m.queue_latency.record_secs(5e-6);
-        let r = m.snapshot().render();
+        m.flops.fetch_add(245_760, Ordering::Relaxed);
+        m.exec_latency.record_secs(2e-6);
+        let r = m.snapshot(2_000).render();
         assert!(r.contains("requests=3"));
+        assert!(r.contains("GFLOPS"));
+        assert!(m.snapshot(2_000).gflops() > 0.0);
+        assert_eq!(m.snapshot(0).gflops(), 0.0);
     }
 }

@@ -6,8 +6,18 @@
 //!
 //! ```text
 //!  clients ──submit──▶ router ──▶ per-(N, dir) dynamic batcher ──tile──▶
-//!      worker pool ──job──▶ runtime::Engine (device thread) ──▶ replies
+//!      worker pool ──job──▶ runtime::Engine (device thread) ──▶
+//!          two-tier BatchExecutor (pooled workspaces + stage codelets)
+//!              ──▶ replies
 //! ```
+//!
+//! Execution end-to-end mirrors the paper's two-tier model: tiles reach
+//! the native backend's pooled [`crate::fft::exec::BatchExecutor`]s,
+//! which keep butterflies in the register tier (split re/im codelets,
+//! fused inverse conjugate/scale) and touch the exchange tier only
+//! through reused pooled workspaces — so steady-state tile dispatch
+//! performs zero scratch allocations, and large tiles stripe their lines
+//! over worker threads for batch-level occupancy (Fig. 1).
 //!
 //! * [`planner`] — the paper's §IV-D synthesis rules + Table V kernel
 //!   configurations: which artifact, which decomposition, how many
@@ -15,9 +25,12 @@
 //! * [`batcher`] — aggregates request lines into artifact-sized tiles
 //!   (the GPU needs batch >= 64 to beat vDSP — Fig. 1 — so batching IS
 //!   the serving policy), padding the final partial tile.
-//! * [`worker`] — a small pool draining tiles into the engine.
-//! * [`service`] — the public facade.
-//! * [`metrics`] — queue/execute latency and padding-overhead counters.
+//! * [`worker`] — a small pool draining tiles into the engine, recording
+//!   per-tile latency and nominal FLOPs (5·N·log2 N per line).
+//! * [`service`] — the public facade; `drain()` returns the final
+//!   metrics snapshot including executor GFLOPS.
+//! * [`metrics`] — queue/execute latency, padding overhead, and
+//!   executor throughput in the paper's GFLOPS metric.
 
 pub mod batcher;
 pub mod metrics;

@@ -210,7 +210,7 @@ mod tests {
             backend: Backend::Native,
             max_wait: Duration::from_millis(1),
             workers: 2,
-        warm: false,
+            warm: false,
         })
         .unwrap();
         let trace = Trace {

@@ -167,14 +167,16 @@ impl FftService {
     }
 
     /// Force-flush all partial tiles (used by batch drivers before
-    /// measuring, and by shutdown paths).
-    pub fn drain(&self) -> Result<()> {
+    /// measuring, and by shutdown paths). Returns the post-drain metrics
+    /// snapshot so callers get the final counters — including executor
+    /// GFLOPS — without a second call.
+    pub fn drain(&self) -> Result<MetricsSnapshot> {
         let (tx, rx) = mpsc::channel();
         self.admit_tx
             .send(Op::Drain(tx))
             .map_err(|_| anyhow::anyhow!("service has shut down"))?;
         rx.recv().context("batcher dropped drain ack")?;
-        Ok(())
+        Ok(self.metrics())
     }
 
     /// Fused range compression straight through the engine (bypasses the
@@ -190,7 +192,7 @@ impl FftService {
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        self.metrics.snapshot(self.engine.device_busy_ns())
     }
 
     pub fn engine(&self) -> &Engine {
@@ -215,7 +217,7 @@ mod tests {
             backend: Backend::Native,
             max_wait: Duration::from_millis(1),
             workers: 2,
-        warm: false,
+            warm: false,
         })
         .unwrap()
     }
@@ -232,6 +234,15 @@ mod tests {
         let m = svc.metrics();
         assert_eq!(m.requests, 2);
         assert!(m.lines_padded > 0, "partial tiles must be padded");
+        assert!(m.nominal_flops > 0, "tile FLOPs must accumulate");
+        assert!(m.gflops() > 0.0, "throughput must be reportable");
+    }
+
+    #[test]
+    fn drain_returns_snapshot() {
+        let svc = native_service();
+        let m = svc.drain().unwrap();
+        assert_eq!(m.tiles_dispatched, 0, "idle drain dispatches nothing");
     }
 
     #[test]

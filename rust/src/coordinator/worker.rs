@@ -20,6 +20,13 @@ pub fn run_tile(engine: &Engine, metrics: &Metrics, tile: Tile) {
 
     match result {
         Ok(out) => {
+            // Nominal work actually executed: the paper's 5*N*log2 N per
+            // line, for every line in the tile (padding included). The
+            // matching busy time is tracked by the device thread itself
+            // (Engine::device_busy_ns), not here: worker-side wall time
+            // would double-count when workers queue behind the device.
+            let tile_flops = crate::util::fft_flops(tile.n) * tile.batch as f64;
+            metrics.flops.fetch_add(tile_flops as u64, Ordering::Relaxed);
             for seg in &tile.segments {
                 seg.acc.fill(&out, seg.tile_line, seg.request_line, seg.count, exec_secs);
                 metrics.queue_latency.record_secs(seg.acc.queue_secs());

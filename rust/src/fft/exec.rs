@@ -1,0 +1,382 @@
+//! The two-tier batch executor: pooled workspaces (the exchange tier)
+//! feeding the register-tier stage codelets.
+//!
+//! The paper's performance model is a two-tier memory decomposition:
+//! butterflies happen in registers, and the slower tier (threadgroup
+//! memory) is touched only for the inter-stage exchanges. The CPU analog
+//! implemented here keeps the same shape:
+//!
+//! * **Register tier** — the `radix{2,4,8}_stage` codelets in
+//!   [`super::stockham`] / [`super::radix8`]: split re/im loads into
+//!   locals, straight-line butterfly math, split stores, with the
+//!   inverse conjugate/scale fused into the first/last stage.
+//! * **Exchange tier** — a [`Workspace`]: the Stockham ping-pong buffer
+//!   plus the four-step staging matrix, allocated once and pooled in a
+//!   [`WorkspacePool`] so steady-state execution performs **zero** heap
+//!   allocations of scratch per batch.
+//!
+//! [`BatchExecutor`] binds a [`NativePlan`] to a pool and adds batch-level
+//! parallelism (`execute_batch_par_*`): batch lines are striped over
+//! scoped worker threads, one pooled workspace per worker — the CPU
+//! mirror of the paper's Fig. 1 occupancy story (throughput comes from
+//! independent lines in flight, not from a faster single line).
+//!
+//! Every layer above (plan convenience calls, the runtime's native
+//! backend, the coordinator's tile path, the benches) executes through
+//! this type; later backends (PJRT tiles, `std::simd` codelets,
+//! half-precision) plug in underneath the same interface.
+
+use super::plan::NativePlan;
+use super::Direction;
+use crate::util::complex::SplitComplex;
+use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Reusable scratch for one in-flight line-set: the exchange tier.
+/// Buffers grow on demand and are then reused verbatim; [`grow_events`]
+/// counts actual (re)allocations so tests can assert the pool reaches a
+/// steady state.
+///
+/// [`grow_events`]: Workspace::grow_events
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Stockham ping-pong scratch (length >= the stage size in use).
+    pub(crate) sre: Vec<f32>,
+    pub(crate) sim: Vec<f32>,
+    /// Four-step `(n1, n2)` staging matrix (length >= N for N > 4096).
+    pub(crate) yre: Vec<f32>,
+    pub(crate) yim: Vec<f32>,
+    grows: usize,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Make sure the ping-pong scratch holds `stage_len` floats and the
+    /// four-step staging `y_len` floats (0 = not needed).
+    pub(crate) fn ensure(&mut self, stage_len: usize, y_len: usize) {
+        if self.sre.len() < stage_len {
+            self.sre.resize(stage_len, 0.0);
+            self.sim.resize(stage_len, 0.0);
+            self.grows += 1;
+        }
+        if self.yre.len() < y_len {
+            self.yre.resize(y_len, 0.0);
+            self.yim.resize(y_len, 0.0);
+            self.grows += 1;
+        }
+    }
+
+    /// Number of buffer (re)allocations this workspace has performed.
+    pub fn grow_events(&self) -> usize {
+        self.grows
+    }
+}
+
+/// A lock-protected free list of [`Workspace`]s with a creation counter.
+/// `acquire` pops a pooled workspace (or builds a fresh one), `release`
+/// returns it; after warmup the created count stops moving — the
+/// coordinator's per-tile scratch-allocation-free guarantee.
+#[derive(Debug, Default)]
+pub struct WorkspacePool {
+    free: Mutex<Vec<Workspace>>,
+    created: AtomicUsize,
+}
+
+impl WorkspacePool {
+    pub fn new() -> WorkspacePool {
+        WorkspacePool::default()
+    }
+
+    pub fn acquire(&self) -> Workspace {
+        if let Some(ws) = self.free.lock().unwrap().pop() {
+            return ws;
+        }
+        self.created.fetch_add(1, Ordering::Relaxed);
+        Workspace::new()
+    }
+
+    pub fn release(&self, ws: Workspace) {
+        self.free.lock().unwrap().push(ws);
+    }
+
+    /// Workspaces ever created by this pool.
+    pub fn created(&self) -> usize {
+        self.created.load(Ordering::Relaxed)
+    }
+
+    /// Workspaces currently parked in the free list.
+    pub fn available(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+
+    /// Total buffer (re)allocations across the parked workspaces.
+    pub fn grow_events(&self) -> usize {
+        self.free.lock().unwrap().iter().map(|w| w.grow_events()).sum()
+    }
+}
+
+/// Minimum batch*N before [`BatchExecutor::execute_batch_auto_into`]
+/// reaches for worker threads: below this the spawn cost dominates the
+/// transform itself.
+const PAR_MIN_ELEMS: usize = 1 << 14;
+
+/// Minimum lines per worker; finer striping just burns spawn overhead.
+const PAR_MIN_LINES: usize = 4;
+
+/// A plan bound to a workspace pool and a thread budget: the executor
+/// every layer above dispatches batches through.
+#[derive(Debug)]
+pub struct BatchExecutor {
+    plan: Arc<NativePlan>,
+    pool: WorkspacePool,
+    threads: usize,
+}
+
+impl BatchExecutor {
+    /// Executor with the machine's available parallelism as the thread
+    /// budget (overridable with the `APPLEFFT_THREADS` env var).
+    pub fn new(plan: Arc<NativePlan>) -> BatchExecutor {
+        Self::with_threads(plan, default_threads())
+    }
+
+    pub fn with_threads(plan: Arc<NativePlan>, threads: usize) -> BatchExecutor {
+        BatchExecutor { plan, pool: WorkspacePool::new(), threads: threads.max(1) }
+    }
+
+    pub fn plan(&self) -> &NativePlan {
+        &self.plan
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Pool telemetry: `(workspaces created, workspaces parked)`.
+    pub fn pool_stats(&self) -> (usize, usize) {
+        (self.pool.created(), self.pool.available())
+    }
+
+    /// Total scratch (re)allocations across parked workspaces — constant
+    /// across repeated same-shape batches once warmed up.
+    pub fn pool_grow_events(&self) -> usize {
+        self.pool.grow_events()
+    }
+
+    fn check(&self, len: usize, batch: usize) -> Result<()> {
+        ensure!(
+            len == self.plan.n * batch,
+            "input length {} != n({}) * batch({})",
+            len,
+            self.plan.n,
+            batch
+        );
+        Ok(())
+    }
+
+    /// Serial out-of-place execution (allocates only the output clone).
+    pub fn execute_batch(
+        &self,
+        input: &SplitComplex,
+        batch: usize,
+        dir: Direction,
+    ) -> Result<SplitComplex> {
+        let mut data = input.clone();
+        self.execute_batch_into(&mut data, batch, dir)?;
+        Ok(data)
+    }
+
+    /// Serial in-place execution with pooled scratch: zero heap
+    /// allocations after the pool has warmed up.
+    pub fn execute_batch_into(
+        &self,
+        data: &mut SplitComplex,
+        batch: usize,
+        dir: Direction,
+    ) -> Result<()> {
+        self.check(data.len(), batch)?;
+        let mut ws = self.pool.acquire();
+        self.plan.run_lines(&mut data.re, &mut data.im, batch, dir, &mut ws);
+        self.pool.release(ws);
+        Ok(())
+    }
+
+    /// Batch-parallel out-of-place execution.
+    pub fn execute_batch_par(
+        &self,
+        input: &SplitComplex,
+        batch: usize,
+        dir: Direction,
+    ) -> Result<SplitComplex> {
+        let mut data = input.clone();
+        self.execute_batch_par_into(&mut data, batch, dir)?;
+        Ok(data)
+    }
+
+    /// Batch-parallel in-place execution: lines are striped over scoped
+    /// worker threads, each with its own pooled workspace. Falls back to
+    /// the serial path for a single worker.
+    pub fn execute_batch_par_into(
+        &self,
+        data: &mut SplitComplex,
+        batch: usize,
+        dir: Direction,
+    ) -> Result<()> {
+        self.check(data.len(), batch)?;
+        let workers = self.threads.min(batch.div_ceil(PAR_MIN_LINES)).max(1);
+        if workers == 1 {
+            let mut ws = self.pool.acquire();
+            self.plan.run_lines(&mut data.re, &mut data.im, batch, dir, &mut ws);
+            self.pool.release(ws);
+            return Ok(());
+        }
+        let n = self.plan.n;
+        let chunk_lines = batch.div_ceil(workers);
+        let chunk = chunk_lines * n;
+        let chunks = batch.div_ceil(chunk_lines);
+        // Acquire every worker's workspace up front, on this thread:
+        // pool growth is then a deterministic function of the chunk
+        // count, never of acquire/release interleaving across workers.
+        let wss: Vec<Workspace> = (0..chunks).map(|_| self.pool.acquire()).collect();
+        let plan = self.plan.as_ref();
+        let pool = &self.pool;
+        std::thread::scope(|scope| {
+            for ((cre, cim), mut ws) in
+                data.re.chunks_mut(chunk).zip(data.im.chunks_mut(chunk)).zip(wss)
+            {
+                scope.spawn(move || {
+                    plan.run_lines(cre, cim, cre.len() / n, dir, &mut ws);
+                    pool.release(ws);
+                });
+            }
+        });
+        Ok(())
+    }
+
+    /// Policy entry point for the serving path: parallel when the batch
+    /// is big enough to amortise thread spawns, serial otherwise.
+    pub fn execute_batch_auto_into(
+        &self,
+        data: &mut SplitComplex,
+        batch: usize,
+        dir: Direction,
+    ) -> Result<()> {
+        if self.threads > 1 && batch >= 2 * PAR_MIN_LINES && self.plan.n * batch >= PAR_MIN_ELEMS {
+            self.execute_batch_par_into(data, batch, dir)
+        } else {
+            self.execute_batch_into(data, batch, dir)
+        }
+    }
+}
+
+/// Thread budget: `APPLEFFT_THREADS` env override, else available
+/// parallelism, else 1.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("APPLEFFT_THREADS") {
+        if let Ok(t) = v.parse::<usize>() {
+            return t.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::dft::dft_batch;
+    use crate::fft::plan::Variant;
+    use crate::util::rng::Rng;
+
+    fn executor(n: usize, variant: Variant, threads: usize) -> BatchExecutor {
+        BatchExecutor::with_threads(Arc::new(NativePlan::new(n, variant).unwrap()), threads)
+    }
+
+    #[test]
+    fn serial_matches_oracle() {
+        let mut rng = Rng::new(80);
+        let (n, batch) = (256, 3);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let ex = executor(n, Variant::Radix8, 1);
+        let got = ex.execute_batch(&x, batch, Direction::Forward).unwrap();
+        let want = dft_batch(&x, n, batch, Direction::Forward);
+        assert!(got.rel_l2_error(&want) < 2e-4);
+    }
+
+    #[test]
+    fn par_matches_serial_exactly() {
+        let mut rng = Rng::new(81);
+        for &(n, batch) in &[(256usize, 1usize), (256, 3), (1024, 64), (4096, 17), (8192, 6)] {
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let ex = executor(n, Variant::Radix8, 4);
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let serial = ex.execute_batch(&x, batch, dir).unwrap();
+                let par = ex.execute_batch_par(&x, batch, dir).unwrap();
+                // Same codelets in the same order per line: bitwise equal.
+                assert_eq!(serial.re, par.re, "n={n} batch={batch} {dir:?}");
+                assert_eq!(serial.im, par.im, "n={n} batch={batch} {dir:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip_through_executor() {
+        let mut rng = Rng::new(82);
+        for &n in &[512usize, 4096, 8192] {
+            let batch = 5;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let ex = executor(n, Variant::Radix8, 3);
+            let y = ex.execute_batch_par(&x, batch, Direction::Forward).unwrap();
+            let z = ex.execute_batch_par(&y, batch, Direction::Inverse).unwrap();
+            assert!(z.rel_l2_error(&x) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn pool_reaches_steady_state() {
+        let mut rng = Rng::new(83);
+        let (n, batch) = (1024, 16);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let ex = executor(n, Variant::Radix8, 4);
+        // Warmup: creates the per-worker workspaces and grows them.
+        let mut d = x.clone();
+        ex.execute_batch_auto_into(&mut d, batch, Direction::Forward).unwrap();
+        let created = ex.pool_stats().0;
+        let grows = ex.pool_grow_events();
+        assert!(created >= 1);
+        // Steady state: no new workspaces, no new buffer growth.
+        for _ in 0..10 {
+            let mut d = x.clone();
+            ex.execute_batch_auto_into(&mut d, batch, Direction::Forward).unwrap();
+        }
+        assert_eq!(ex.pool_stats().0, created, "workspace count must not grow");
+        assert_eq!(ex.pool_grow_events(), grows, "scratch buffers must not reallocate");
+        assert_eq!(ex.pool_stats().1, created, "all workspaces parked when idle");
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let ex = executor(256, Variant::Radix8, 2);
+        let x = SplitComplex::zeros(100);
+        assert!(ex.execute_batch(&x, 1, Direction::Forward).is_err());
+        let mut d = SplitComplex::zeros(256);
+        assert!(ex.execute_batch_par_into(&mut d, 2, Direction::Forward).is_err());
+    }
+
+    #[test]
+    fn fourstep_sizes_use_pooled_staging() {
+        let mut rng = Rng::new(84);
+        let (n, batch) = (8192, 4);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let ex = executor(n, Variant::Radix8, 2);
+        let mut d = x.clone();
+        ex.execute_batch_into(&mut d, batch, Direction::Forward).unwrap();
+        let grows = ex.pool_grow_events();
+        let mut d2 = x.clone();
+        ex.execute_batch_into(&mut d2, batch, Direction::Forward).unwrap();
+        assert_eq!(ex.pool_grow_events(), grows);
+        assert_eq!(d.re, d2.re);
+    }
+}

@@ -11,12 +11,16 @@
 //! 3. length-N2 Stockham FFT along the rows (the single-threadgroup
 //!    kernel of §V-B),
 //! 4. transpose `(N1, N2) -> (N2, N1)` so `X[k1 + N1*k2] = Z[k1][k2]`.
+//!
+//! [`fourstep_line_fused`] is the executor's entry point: it runs in
+//! place on one line using caller-owned scratch (the workspace exchange
+//! tier), and fuses the inverse direction's conjugate into step 1's
+//! column loads and the `1/N` conjugate-scale into step 4's transpose
+//! stores — the same first/last-pass fusion the Stockham driver does.
 
 use super::stockham::{radix_schedule, transform_line};
 use super::twiddle::{fourstep_twiddles, PlanTables};
 use crate::util::complex::{SplitComplex, C32};
-
-// (multilevel_line below also uses transform_line / radix_schedule.)
 
 /// Factor `n` for the four-step split per the paper's rule: `n2 = 4096`
 /// (= B_max), `n1 = n / n2`. For the paper's range (N <= 2^14) this
@@ -96,8 +100,9 @@ pub fn multilevel_line(x: &SplitComplex) -> SplitComplex {
     out
 }
 
-/// Reusable scratch for [`fourstep_line_with`] — one allocation per
-/// batch instead of four per line (perf pass, EXPERIMENTS.md §Perf).
+/// Reusable scratch for the four-step path: the `(n1, n2)` staging
+/// matrix plus the length-`n2` Stockham ping-pong buffers. Owned by
+/// [`crate::fft::exec::Workspace`] on the pooled executor path.
 pub struct FourStepScratch {
     y: SplitComplex,
     sre: Vec<f32>,
@@ -115,7 +120,9 @@ impl FourStepScratch {
 }
 
 /// Four-step FFT of a single line of length `n1*n2`. `radices` is the
-/// Stockham schedule for the length-`n2` row FFTs.
+/// Stockham schedule for the length-`n2` row FFTs. Convenience wrapper
+/// allocating its own scratch; the executor path uses
+/// [`fourstep_line_fused`] with pooled scratch instead.
 pub fn fourstep_line(
     x: &SplitComplex,
     n1: usize,
@@ -125,53 +132,95 @@ pub fn fourstep_line(
     twiddles: &[C32],
 ) -> SplitComplex {
     let mut scratch = FourStepScratch::new(n1, n2);
-    let mut out = SplitComplex::zeros(n1 * n2);
-    fourstep_line_with(x, &mut out, n1, n2, radices, tables, twiddles, &mut scratch);
+    let mut out = x.clone();
+    fourstep_line_fused(
+        &mut out.re,
+        &mut out.im,
+        n1,
+        n2,
+        radices,
+        tables,
+        twiddles,
+        &mut scratch.y.re,
+        &mut scratch.y.im,
+        &mut scratch.sre,
+        &mut scratch.sim,
+        false,
+    );
     out
 }
 
-/// Allocation-free four-step: writes into `out`, using `scratch`.
+/// Allocation-free four-step on one line, in place. `(re, im)` hold the
+/// input on entry and the transform on exit; `(yre, yim)` is the
+/// `(n1, n2)` staging matrix (>= `n1*n2` long) and `(sre, sim)` the
+/// length-`n2` (or longer) Stockham scratch.
+///
+/// When `inverse` is set, the conjugation of `ifft(x) =
+/// conj(fft(conj(x)))/N` is fused into step 1's column loads and the
+/// conjugate + `1/N` scale into step 4's transpose stores, so the
+/// inverse makes exactly the same number of memory passes as the
+/// forward transform. `twiddles` are always the *forward* four-step
+/// twiddles (the conjugation identity takes care of the direction).
 #[allow(clippy::too_many_arguments)]
-pub fn fourstep_line_with(
-    x: &SplitComplex,
-    out: &mut SplitComplex,
+pub fn fourstep_line_fused(
+    re: &mut [f32],
+    im: &mut [f32],
     n1: usize,
     n2: usize,
     radices: &[usize],
     tables: Option<&PlanTables>,
     twiddles: &[C32],
-    scratch: &mut FourStepScratch,
+    yre: &mut [f32],
+    yim: &mut [f32],
+    sre: &mut [f32],
+    sim: &mut [f32],
+    inverse: bool,
 ) {
     let n = n1 * n2;
-    assert_eq!(x.len(), n);
-    assert_eq!(out.len(), n);
+    assert_eq!(re.len(), n);
+    assert_eq!(im.len(), n);
     assert_eq!(twiddles.len(), n);
+    let yre = &mut yre[..n];
+    let yim = &mut yim[..n];
+    let in_sign = if inverse { -1.0f32 } else { 1.0f32 };
 
-    // Steps 1+2: column DFT of length n1, fused with the twiddle.
-    let FourStepScratch { y, sre, sim } = scratch;
+    // Steps 1+2: length-n1 DFT down the columns, fused with the twiddle
+    // (and with the inverse input conjugation via `in_sign`).
     match n1 {
         2 => {
             for j2 in 0..n2 {
-                let a = x.get(j2);
-                let b = x.get(n2 + j2);
-                y.set(j2, (a + b) * twiddles[j2]);
-                y.set(n2 + j2, (a - b) * twiddles[n2 + j2]);
+                let a = C32::new(re[j2], in_sign * im[j2]);
+                let b = C32::new(re[n2 + j2], in_sign * im[n2 + j2]);
+                let t0 = (a + b) * twiddles[j2];
+                let t1 = (a - b) * twiddles[n2 + j2];
+                yre[j2] = t0.re;
+                yim[j2] = t0.im;
+                yre[n2 + j2] = t1.re;
+                yim[n2 + j2] = t1.im;
             }
         }
         4 => {
             for j2 in 0..n2 {
-                let a = x.get(j2);
-                let b = x.get(n2 + j2);
-                let c = x.get(2 * n2 + j2);
-                let d = x.get(3 * n2 + j2);
+                let a = C32::new(re[j2], in_sign * im[j2]);
+                let b = C32::new(re[n2 + j2], in_sign * im[n2 + j2]);
+                let c = C32::new(re[2 * n2 + j2], in_sign * im[2 * n2 + j2]);
+                let d = C32::new(re[3 * n2 + j2], in_sign * im[3 * n2 + j2]);
                 let apc = a + c;
                 let amc = a - c;
                 let bpd = b + d;
                 let bmd = b - d;
-                y.set(j2, (apc + bpd) * twiddles[j2]);
-                y.set(n2 + j2, (amc - bmd.mul_i()) * twiddles[n2 + j2]);
-                y.set(2 * n2 + j2, (apc - bpd) * twiddles[2 * n2 + j2]);
-                y.set(3 * n2 + j2, (amc + bmd.mul_i()) * twiddles[3 * n2 + j2]);
+                let t0 = (apc + bpd) * twiddles[j2];
+                let t1 = (amc - bmd.mul_i()) * twiddles[n2 + j2];
+                let t2 = (apc - bpd) * twiddles[2 * n2 + j2];
+                let t3 = (amc + bmd.mul_i()) * twiddles[3 * n2 + j2];
+                yre[j2] = t0.re;
+                yim[j2] = t0.im;
+                yre[n2 + j2] = t1.re;
+                yim[n2 + j2] = t1.im;
+                yre[2 * n2 + j2] = t2.re;
+                yim[2 * n2 + j2] = t2.im;
+                yre[3 * n2 + j2] = t3.re;
+                yim[3 * n2 + j2] = t3.im;
             }
         }
         other => panic!("four-step n1={other} not supported (paper uses 2 and 4)"),
@@ -180,14 +229,25 @@ pub fn fourstep_line_with(
     // Step 3: length-n2 FFT along each of the n1 rows.
     for k1 in 0..n1 {
         let row = k1 * n2;
-        transform_line(&mut y.re[row..row + n2], &mut y.im[row..row + n2], sre, sim, radices, tables);
+        transform_line(&mut yre[row..row + n2], &mut yim[row..row + n2], sre, sim, radices, tables);
     }
 
-    // Step 4: transpose (n1, n2) -> output index k1 + n1*k2.
-    for k1 in 0..n1 {
-        for k2 in 0..n2 {
-            out.re[k1 + n1 * k2] = y.re[k1 * n2 + k2];
-            out.im[k1 + n1 * k2] = y.im[k1 * n2 + k2];
+    // Step 4: transpose (n1, n2) back into (re, im) at index k1 + n1*k2,
+    // fusing the inverse conjugate + 1/N scale into the store.
+    if inverse {
+        let k = 1.0 / n as f32;
+        for k1 in 0..n1 {
+            for k2 in 0..n2 {
+                re[k1 + n1 * k2] = yre[k1 * n2 + k2] * k;
+                im[k1 + n1 * k2] = -(yim[k1 * n2 + k2] * k);
+            }
+        }
+    } else {
+        for k1 in 0..n1 {
+            for k2 in 0..n2 {
+                re[k1 + n1 * k2] = yre[k1 * n2 + k2];
+                im[k1 + n1 * k2] = yim[k1 * n2 + k2];
+            }
         }
     }
 }
@@ -262,6 +322,36 @@ mod tests {
         let got = fourstep_line(&x, n1, n2, &radices, None, &tw);
         let err = got.rel_l2_error(&want);
         assert!(err < 1e-4, "rel err {err}");
+    }
+
+    #[test]
+    fn fused_inverse_roundtrips_through_fourstep() {
+        // Small split so the oracle stays cheap: forward then fused
+        // inverse must reproduce the input.
+        let mut rng = Rng::new(26);
+        let (n1, n2) = (4, 16);
+        let n = n1 * n2;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let radices = radix_schedule(n2, 8);
+        let tw = fourstep_twiddles(n1, n2, false);
+        let mut y = fourstep_line(&x, n1, n2, &radices, None, &tw);
+        let mut scratch = FourStepScratch::new(n1, n2);
+        fourstep_line_fused(
+            &mut y.re,
+            &mut y.im,
+            n1,
+            n2,
+            &radices,
+            None,
+            &tw,
+            &mut scratch.y.re,
+            &mut scratch.y.im,
+            &mut scratch.sre,
+            &mut scratch.sim,
+            true,
+        );
+        let err = y.rel_l2_error(&x);
+        assert!(err < 1e-4, "roundtrip err {err}");
     }
 
     #[test]

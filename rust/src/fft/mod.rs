@@ -1,7 +1,9 @@
-//! Native split-complex FFT library — the vDSP/Accelerate stand-in.
+//! Native split-complex FFT library — the vDSP/Accelerate stand-in,
+//! organised as a CPU rendition of the paper's **two-tier memory
+//! decomposition**.
 //!
-//! This is substrate S1 of DESIGN.md: a complete CPU FFT implementation
-//! playing the two roles vDSP plays in the paper:
+//! This is substrate S1 of DESIGN.md, playing the two roles vDSP plays
+//! in the paper:
 //!
 //! 1. **Numerical reference** — every GPU/PJRT path is validated against
 //!    it ("All kernels are validated against vDSP reference outputs").
@@ -9,13 +11,32 @@
 //!    benchmark harness (the AMX *throughput model* for the paper-shape
 //!    comparison lives in [`crate::sim::baseline`]).
 //!
+//! The execution model mirrors the paper's register/threadgroup split:
+//!
+//! * **Register tier** — the radix-2/4/8 stage codelets
+//!   ([`stockham`], [`radix8`]): butterflies run as straight-line f32
+//!   arithmetic on values loaded from split re/im q-runs, in fixed
+//!   8-lane chunks the autovectoriser maps onto SIMD, with the inverse
+//!   direction's conjugate and `1/N` scale fused into the first/last
+//!   stage instead of separate whole-buffer passes.
+//! * **Exchange tier** — pooled [`exec::Workspace`]s: the Stockham
+//!   ping-pong buffer and four-step staging matrix are allocated once
+//!   per worker and reused, so steady-state batch execution performs
+//!   zero scratch allocations.
+//! * **Batch occupancy** — [`exec::BatchExecutor`] stripes batch lines
+//!   over scoped worker threads (one pooled workspace each), the CPU
+//!   analog of the paper's Fig. 1 "throughput needs batch >= 64 in
+//!   flight" finding.
+//!
 //! Algorithms: naive O(N^2) DFT oracle ([`dft`]), radix-2/radix-4
 //! Stockham autosort ([`stockham`]), the paper's radix-8 split-radix DIT
 //! butterfly ([`radix8`]), and the four-step decomposition for N > 4096
-//! ([`fourstep`]). [`plan`] exposes the planned, batched public API.
+//! ([`fourstep`]). [`plan`] exposes the planned, batched public API and
+//! caches the pooled executors every layer above shares.
 
 pub mod convolve;
 pub mod dft;
+pub mod exec;
 pub mod fourstep;
 pub mod plan;
 pub mod radix8;

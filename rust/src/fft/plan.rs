@@ -2,12 +2,20 @@
 //!
 //! Mirrors vDSP's setup/execute split (`vDSP_create_fftsetup` /
 //! `vDSP_fft_zop`): a [`NativePlan`] precomputes the radix schedule and
-//! twiddle tables once; execution is allocation-free per line apart from
-//! one scratch buffer per call. [`NativePlanner`] caches plans by size
-//! and variant.
+//! twiddle tables once and knows how to run lines through the stage
+//! codelets; [`NativePlanner`] caches plans *and* their pooled
+//! [`BatchExecutor`]s by size and variant, so every caller shares the
+//! same workspace pools.
+//!
+//! The inverse direction is fully fused: `ifft(x) = conj(fft(conj(x)))/N`
+//! is realised by conjugating in the first stage's loads and
+//! conjugate-scaling in the last stage's stores (see
+//! [`super::stockham::transform_line_fused`]), not by separate
+//! whole-buffer passes.
 
+use super::exec::{default_threads, BatchExecutor, Workspace};
 use super::fourstep;
-use super::stockham::{radix_schedule, transform_line};
+use super::stockham::{radix_schedule, transform_line_fused};
 use super::twiddle::{fourstep_twiddles, PlanTables};
 use super::Direction;
 use crate::util::complex::{SplitComplex, C32};
@@ -110,7 +118,67 @@ impl NativePlan {
         }
     }
 
+    /// Run `lines` rows of length `n` held in `(re, im)` in place, using
+    /// `ws` for all scratch. This is the executor's per-worker kernel:
+    /// it never allocates once `ws` has grown to shape, and the inverse
+    /// direction is fused into the first/last stage of each line.
+    pub(crate) fn run_lines(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        lines: usize,
+        dir: Direction,
+        ws: &mut Workspace,
+    ) {
+        let n = self.n;
+        debug_assert_eq!(re.len(), n * lines);
+        debug_assert_eq!(im.len(), n * lines);
+        let inverse = dir == Direction::Inverse;
+        match &self.decomp {
+            Decomposition::Single { radices, tables } => {
+                ws.ensure(n, 0);
+                let tables = self.use_tables.then_some(tables);
+                for b in 0..lines {
+                    let at = b * n;
+                    transform_line_fused(
+                        &mut re[at..at + n],
+                        &mut im[at..at + n],
+                        &mut ws.sre,
+                        &mut ws.sim,
+                        radices,
+                        tables,
+                        inverse,
+                    );
+                }
+            }
+            Decomposition::FourStep { n1, n2, radices, tables, tw_fwd } => {
+                ws.ensure(*n2, n);
+                let tables = self.use_tables.then_some(tables);
+                for b in 0..lines {
+                    let at = b * n;
+                    fourstep::fourstep_line_fused(
+                        &mut re[at..at + n],
+                        &mut im[at..at + n],
+                        *n1,
+                        *n2,
+                        radices,
+                        tables,
+                        tw_fwd,
+                        &mut ws.yre,
+                        &mut ws.yim,
+                        &mut ws.sre,
+                        &mut ws.sim,
+                        inverse,
+                    );
+                }
+            }
+        }
+    }
+
     /// Transform `batch` rows of length `n` (row-major), out-of-place.
+    /// One-shot convenience with local scratch; batch callers should go
+    /// through [`NativePlanner::executor`] for pooled workspaces and
+    /// batch parallelism.
     pub fn execute_batch(
         &self,
         input: &SplitComplex,
@@ -124,73 +192,18 @@ impl NativePlan {
             self.n,
             batch
         );
-        // ifft(x) = conj(fft(conj(x))) / N. The input conjugation is
-        // fused into the initial copy and the output conjugation into
-        // the 1/N scale, so the inverse costs two fused passes instead
-        // of three (perf pass, EXPERIMENTS.md §Perf).
-        let mut data = match dir {
-            Direction::Forward => input.clone(),
-            Direction::Inverse => SplitComplex {
-                re: input.re.clone(),
-                im: input.im.iter().map(|v| -v).collect(),
-            },
-        };
-        self.forward_in_place(&mut data, batch)?;
-        if dir == Direction::Inverse {
-            let scale = 1.0 / self.n as f32;
-            for v in data.re.iter_mut() {
-                *v *= scale;
-            }
-            for v in data.im.iter_mut() {
-                *v *= -scale;
-            }
-        }
+        let mut data = input.clone();
+        let mut ws = Workspace::new();
+        self.run_lines(&mut data.re, &mut data.im, batch, dir, &mut ws);
         Ok(data)
-    }
-
-    fn forward_in_place(&self, data: &mut SplitComplex, batch: usize) -> Result<()> {
-        let n = self.n;
-        match &self.decomp {
-            Decomposition::Single { radices, tables } => {
-                let tables = self.use_tables.then_some(tables);
-                let mut sre = vec![0.0f32; n];
-                let mut sim = vec![0.0f32; n];
-                for b in 0..batch {
-                    let at = b * n;
-                    transform_line(
-                        &mut data.re[at..at + n],
-                        &mut data.im[at..at + n],
-                        &mut sre,
-                        &mut sim,
-                        radices,
-                        tables,
-                    );
-                }
-            }
-            Decomposition::FourStep { n1, n2, radices, tables, tw_fwd, .. } => {
-                let tables = self.use_tables.then_some(tables);
-                // Scratch reused across the whole batch (perf pass:
-                // one allocation set per call instead of four per line).
-                let mut scratch = fourstep::FourStepScratch::new(*n1, *n2);
-                let mut out = SplitComplex::zeros(n);
-                for b in 0..batch {
-                    let line = data.slice(b * n, n);
-                    fourstep::fourstep_line_with(
-                        &line, &mut out, *n1, *n2, radices, tables, tw_fwd, &mut scratch,
-                    );
-                    data.re[b * n..(b + 1) * n].copy_from_slice(&out.re);
-                    data.im[b * n..(b + 1) * n].copy_from_slice(&out.im);
-                }
-            }
-        }
-        Ok(())
     }
 }
 
-/// Plan cache keyed by (size, variant), shared across threads.
+/// Plan + executor cache keyed by (size, variant), shared across threads.
 #[derive(Default)]
 pub struct NativePlanner {
-    cache: Mutex<HashMap<(usize, Variant), Arc<NativePlan>>>,
+    plans: Mutex<HashMap<(usize, Variant), Arc<NativePlan>>>,
+    executors: Mutex<HashMap<(usize, Variant), Arc<BatchExecutor>>>,
 }
 
 impl NativePlanner {
@@ -199,7 +212,7 @@ impl NativePlanner {
     }
 
     pub fn plan(&self, n: usize, variant: Variant) -> Result<Arc<NativePlan>> {
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = self.plans.lock().unwrap();
         if let Some(p) = cache.get(&(n, variant)) {
             return Ok(p.clone());
         }
@@ -208,8 +221,25 @@ impl NativePlanner {
         Ok(plan)
     }
 
+    /// The pooled batch executor for (n, variant); created on first use
+    /// and shared by every subsequent caller, so workspace pools warm up
+    /// once per shape.
+    pub fn executor(&self, n: usize, variant: Variant) -> Result<Arc<BatchExecutor>> {
+        // Hold the lock across lookup + build: `plan()` uses a different
+        // mutex (no deadlock), and this keeps executor construction
+        // single-flight so racing first users share one pool.
+        let mut cache = self.executors.lock().unwrap();
+        if let Some(e) = cache.get(&(n, variant)) {
+            return Ok(e.clone());
+        }
+        let plan = self.plan(n, variant)?;
+        let exec = Arc::new(BatchExecutor::with_threads(plan, default_threads()));
+        cache.insert((n, variant), exec.clone());
+        Ok(exec)
+    }
+
     /// Convenience one-shot batched FFT with the paper's default variant
-    /// (radix-8).
+    /// (radix-8), through the pooled executor.
     pub fn fft_batch(
         &self,
         input: &SplitComplex,
@@ -217,11 +247,21 @@ impl NativePlanner {
         batch: usize,
         dir: Direction,
     ) -> Result<SplitComplex> {
-        self.plan(n, Variant::Radix8)?.execute_batch(input, batch, dir)
+        self.executor(n, Variant::Radix8)?.execute_batch(input, batch, dir)
     }
 
     pub fn cached_plans(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.plans.lock().unwrap().len()
+    }
+
+    /// Aggregate workspace-pool telemetry across all cached executors:
+    /// `(workspaces created, buffer grow events)`. Used by the serving
+    /// layer's allocation-free-steady-state test.
+    pub fn workspace_stats(&self) -> (usize, usize) {
+        let cache = self.executors.lock().unwrap();
+        let created = cache.values().map(|e| e.pool_stats().0).sum();
+        let grows = cache.values().map(|e| e.pool_grow_events()).sum();
+        (created, grows)
     }
 }
 
@@ -265,6 +305,28 @@ mod tests {
     }
 
     #[test]
+    fn inverse_matches_oracle_directly() {
+        // The fused inverse (conj/scale inside first/last stages) against
+        // the O(N^2) inverse DFT.
+        let mut rng = Rng::new(34);
+        let planner = NativePlanner::new();
+        for &n in &[256usize, 1024] {
+            let batch = 2;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let want = dft_batch(&x, n, batch, Direction::Inverse);
+            for variant in [Variant::Radix4, Variant::Radix8] {
+                let got = planner
+                    .plan(n, variant)
+                    .unwrap()
+                    .execute_batch(&x, batch, Direction::Inverse)
+                    .unwrap();
+                let err = got.rel_l2_error(&want);
+                assert!(err < 2e-4, "n={n} {variant:?}: rel err {err}");
+            }
+        }
+    }
+
+    #[test]
     fn variants_agree_at_large_n() {
         let mut rng = Rng::new(32);
         let planner = NativePlanner::new();
@@ -291,6 +353,9 @@ mod tests {
         let b = planner.plan(1024, Variant::Radix8).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(planner.cached_plans(), 1);
+        let ea = planner.executor(1024, Variant::Radix8).unwrap();
+        let eb = planner.executor(1024, Variant::Radix8).unwrap();
+        assert!(Arc::ptr_eq(&ea, &eb));
     }
 
     #[test]

@@ -8,16 +8,26 @@
 //! ~320 FLOPs (naive 8x8 complex mat-vec) down to ~52 real additions and
 //! 12 real multiplications, the count the paper reports.
 //!
+//! The stage codelet is the register tier of the two-tier executor: each
+//! q-run is pre-sliced into split re/im arrays, the eight branch values
+//! are gathered into per-lane registers, the whole butterfly happens in
+//! registers, and the eight outputs scatter back to contiguous runs. The
+//! q-loop is chunked [`LANES`](super::stockham::LANES) wide for the
+//! autovectoriser, with the inverse-direction conjugate/scale fused into
+//! the loads/stores via the `CONJ_IN`/`FUSE_OUT` flags.
+//!
 //! Output k is twisted by `w^{pk}` generated with the single-sincos chain
 //! (`w2 = w1*w1`, ..., `w7 = w6*w1`) exactly as §V-B describes, or from a
 //! precomputed stage table on the optimized path.
 
-use super::stockham::{Line, LineMut, FRAC_1_SQRT_2};
+use super::stockham::{FRAC_1_SQRT_2, LANES};
 use super::twiddle::{chain, StageTable};
 use crate::util::complex::C32;
 
 /// Apply the 8-point split-radix butterfly to `x0..x7`, returning the
-/// DFT8 outputs in natural order `X0..X7`.
+/// DFT8 outputs in natural order `X0..X7`. Kept on the interleaved `C32`
+/// representation for the oracle tests; the stage codelet below runs the
+/// same dataflow on split re/im registers.
 #[inline(always)]
 pub fn butterfly8(x: [C32; 8]) -> [C32; 8] {
     // Radix-2 split: evens get sums, odds get differences.
@@ -61,33 +71,140 @@ pub fn butterfly8(x: [C32; 8]) -> [C32; 8] {
     [x0, x1, x2, x3, x4, x5, x6, x7]
 }
 
+/// The same split-radix dataflow on split re/im scalars: one lane of the
+/// stage codelet. Returns the twisted outputs `(re, im)` per bin.
+#[inline(always)]
+fn butterfly8_lane<const FUSE_OUT: bool>(
+    xr: [f32; 8],
+    xi: [f32; 8],
+    w: &[C32; 8],
+    scale: f32,
+) -> ([f32; 8], [f32; 8]) {
+    // Radix-2 split.
+    let (e0r, e0i) = (xr[0] + xr[4], xi[0] + xi[4]);
+    let (e1r, e1i) = (xr[1] + xr[5], xi[1] + xi[5]);
+    let (e2r, e2i) = (xr[2] + xr[6], xi[2] + xi[6]);
+    let (e3r, e3i) = (xr[3] + xr[7], xi[3] + xi[7]);
+    let (o0r, o0i) = (xr[0] - xr[4], xi[0] - xi[4]);
+    let (o1r, o1i) = (xr[1] - xr[5], xi[1] - xi[5]);
+    let (o2r, o2i) = (xr[2] - xr[6], xi[2] - xi[6]);
+    let (o3r, o3i) = (xr[3] - xr[7], xi[3] - xi[7]);
+
+    // W8 twists on the difference branch.
+    let (t1r, t1i) = ((o1r + o1i) * FRAC_1_SQRT_2, (o1i - o1r) * FRAC_1_SQRT_2);
+    let (t2r, t2i) = (o2i, -o2r);
+    let (t3r, t3i) = ((o3i - o3r) * FRAC_1_SQRT_2, -(o3r + o3i) * FRAC_1_SQRT_2);
+
+    // DFT4 over the even branch -> bins 0, 2, 4, 6.
+    let (apc_r, apc_i) = (e0r + e2r, e0i + e2i);
+    let (amc_r, amc_i) = (e0r - e2r, e0i - e2i);
+    let (bpd_r, bpd_i) = (e1r + e3r, e1i + e3i);
+    let (bmd_r, bmd_i) = (e1r - e3r, e1i - e3i);
+    let (b0r, b0i) = (apc_r + bpd_r, apc_i + bpd_i);
+    let (b2r, b2i) = (amc_r + bmd_i, amc_i - bmd_r);
+    let (b4r, b4i) = (apc_r - bpd_r, apc_i - bpd_i);
+    let (b6r, b6i) = (amc_r - bmd_i, amc_i + bmd_r);
+
+    // DFT4 over the twisted odd branch -> bins 1, 3, 5, 7.
+    let (apc_r, apc_i) = (o0r + t2r, o0i + t2i);
+    let (amc_r, amc_i) = (o0r - t2r, o0i - t2i);
+    let (bpd_r, bpd_i) = (t1r + t3r, t1i + t3i);
+    let (bmd_r, bmd_i) = (t1r - t3r, t1i - t3i);
+    let (b1r, b1i) = (apc_r + bpd_r, apc_i + bpd_i);
+    let (b3r, b3i) = (amc_r + bmd_i, amc_i - bmd_r);
+    let (b5r, b5i) = (apc_r - bpd_r, apc_i - bpd_i);
+    let (b7r, b7i) = (amc_r - bmd_i, amc_i + bmd_r);
+
+    let br = [b0r, b1r, b2r, b3r, b4r, b5r, b6r, b7r];
+    let bi = [b0i, b1i, b2i, b3i, b4i, b5i, b6i, b7i];
+
+    // Twist by w^{pk}, optionally fusing the inverse conjugate + scale.
+    let mut or = [0.0f32; 8];
+    let mut oi = [0.0f32; 8];
+    for k in 0..8 {
+        let tr = br[k] * w[k].re - bi[k] * w[k].im;
+        let ti = br[k] * w[k].im + bi[k] * w[k].re;
+        if FUSE_OUT {
+            or[k] = tr * scale;
+            oi[k] = -(ti * scale);
+        } else {
+            or[k] = tr;
+            oi[k] = ti;
+        }
+    }
+    (or, oi)
+}
+
 /// One radix-8 DIF Stockham stage using the split-radix butterfly:
 /// `y[q + s(8p+k)] = DFT8(x_j)_k * w^{pk}`.
-pub fn radix8_stage(x: &Line, y: &mut LineMut, n: usize, s: usize, table: Option<&StageTable>) {
+#[allow(clippy::too_many_arguments)]
+pub fn radix8_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    scale: f32,
+) {
     let m = n / 8;
     for p in 0..m {
         let w: [C32; 8] = match table {
-            Some(t) => core::array::from_fn(|k| t.get(p, k)),
+            Some(t) => t.row(p).try_into().expect("radix-8 table row"),
             None => chain::<8>(p, n),
         };
         let base_in = s * p;
-        let base_out = s * 8 * p;
         // Pre-slice the 8 input and output runs so the q-loop is free of
-        // bounds checks and the compiler can vectorise it (perf pass).
-        let xin: [(&[f32], &[f32]); 8] = core::array::from_fn(|j| {
+        // bounds checks and the compiler can vectorise it.
+        let xin_re: [&[f32]; 8] = core::array::from_fn(|j| {
             let at = base_in + j * s * m;
-            (&x.re[at..at + s], &x.im[at..at + s])
+            &xre[at..at + s]
         });
-        for q in 0..s {
-            let inp: [C32; 8] = core::array::from_fn(|j| C32::new(xin[j].0[q], xin[j].1[q]));
-            let out = butterfly8(inp);
-            for (k, v) in out.iter().enumerate() {
-                let t = *v * w[k];
-                y.re[base_out + k * s + q] = t.re;
-                y.im[base_out + k * s + q] = t.im;
+        let xin_im: [&[f32]; 8] = core::array::from_fn(|j| {
+            let at = base_in + j * s * m;
+            &xim[at..at + s]
+        });
+        let base_out = 8 * s * p;
+        let mut yout_re = split8_mut(&mut yre[base_out..base_out + 8 * s], s);
+        let mut yout_im = split8_mut(&mut yim[base_out..base_out + 8 * s], s);
+
+        let lane = |i: usize, yr: &mut [&mut [f32]; 8], yi: &mut [&mut [f32]; 8]| {
+            let xr: [f32; 8] = core::array::from_fn(|j| xin_re[j][i]);
+            let xi: [f32; 8] = if CONJ_IN {
+                core::array::from_fn(|j| -xin_im[j][i])
+            } else {
+                core::array::from_fn(|j| xin_im[j][i])
+            };
+            let (or, oi) = butterfly8_lane::<FUSE_OUT>(xr, xi, &w, scale);
+            for k in 0..8 {
+                yr[k][i] = or[k];
+                yi[k][i] = oi[k];
             }
+        };
+        let mut q = 0;
+        while q + LANES <= s {
+            for l in 0..LANES {
+                lane(q + l, &mut yout_re, &mut yout_im);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            lane(i, &mut yout_re, &mut yout_im);
         }
     }
+}
+
+/// Split a `8*s`-long buffer into eight `s`-long mutable runs.
+fn split8_mut(buf: &mut [f32], s: usize) -> [&mut [f32]; 8] {
+    let (a0, r) = buf.split_at_mut(s);
+    let (a1, r) = r.split_at_mut(s);
+    let (a2, r) = r.split_at_mut(s);
+    let (a3, r) = r.split_at_mut(s);
+    let (a4, r) = r.split_at_mut(s);
+    let (a5, r) = r.split_at_mut(s);
+    let (a6, a7) = r.split_at_mut(s);
+    [a0, a1, a2, a3, a4, a5, a6, a7]
 }
 
 #[cfg(test)]
@@ -115,6 +232,23 @@ mod tests {
                     got[k],
                     want.get(k)
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn butterfly8_lane_matches_interleaved() {
+        let mut rng = Rng::new(14);
+        for _ in 0..32 {
+            let xr: [f32; 8] = core::array::from_fn(|_| rng.range_f32(-1.0, 1.0));
+            let xi: [f32; 8] = core::array::from_fn(|_| rng.range_f32(-1.0, 1.0));
+            let w: [C32; 8] = crate::fft::twiddle::chain(3, 64);
+            let inp: [C32; 8] = core::array::from_fn(|j| C32::new(xr[j], xi[j]));
+            let want: Vec<C32> = butterfly8(inp).iter().zip(&w).map(|(v, wk)| *v * *wk).collect();
+            let (or, oi) = butterfly8_lane::<false>(xr, xi, &w, 1.0);
+            for k in 0..8 {
+                assert!((or[k] - want[k].re).abs() < 1e-5, "bin {k} re");
+                assert!((oi[k] - want[k].im).abs() < 1e-5, "bin {k} im");
             }
         }
     }

@@ -1,11 +1,25 @@
-//! Stockham autosort FFT stages (radix-2 and radix-4) and the generic
-//! multi-stage driver.
+//! Stockham autosort stage codelets (radix-2 and radix-4) and the
+//! multi-stage driver — the register tier of the two-tier executor.
 //!
 //! The Stockham formulation (paper §II-B) reads from one buffer and
 //! writes to another with permuted indices each stage, producing ordered
 //! output with no bit-reversal pass. All index arithmetic below walks
 //! *contiguous* runs of length `s` — the "sequential access" property the
-//! paper identifies as the real performance lever on Apple GPUs.
+//! paper identifies as the real performance lever on Apple GPUs, and the
+//! lever the CPU codelets exploit for autovectorisation: every q-run is
+//! pre-sliced into split re/im arrays and processed in fixed
+//! [`LANES`]-wide chunks with a scalar tail, so the butterfly maths is
+//! straight-line f32 arithmetic over same-index loads (no per-element
+//! complex round-trips through memory, no bounds checks in the hot loop).
+//!
+//! Each codelet is monomorphised over two fusion flags, the CPU analog of
+//! the paper's "do work while the data is already in registers" rule:
+//!
+//! * `CONJ_IN` — conjugate inputs while loading (first stage of an
+//!   inverse transform, `ifft(x) = conj(fft(conj(x)))/N`).
+//! * `FUSE_OUT` — conjugate and `1/N`-scale outputs while storing (last
+//!   stage of an inverse transform), replacing the separate whole-buffer
+//!   passes the plan layer used to run.
 //!
 //! Stage invariant: sub-transform length `n` starts at N with stride
 //! `s = 1`; each radix-r stage maps `(n, s) -> (n/r, s*r)`, keeping
@@ -17,43 +31,67 @@ use crate::util::complex::C32;
 /// `1/sqrt(2)`, the W8 twist constant used by the radix-8 butterfly.
 pub const FRAC_1_SQRT_2: f32 = std::f32::consts::FRAC_1_SQRT_2;
 
-/// Split-complex view of one line used by the stage kernels.
-pub struct Line<'a> {
-    pub re: &'a [f32],
-    pub im: &'a [f32],
-}
-
-pub struct LineMut<'a> {
-    pub re: &'a mut [f32],
-    pub im: &'a mut [f32],
-}
+/// Chunk width of the manual unroll in every stage codelet. Eight f32
+/// lanes = one 256-bit vector (or two NEON quads); the fixed-trip inner
+/// loops below are written so the autovectoriser maps them directly.
+pub const LANES: usize = 8;
 
 #[inline(always)]
-fn ld(x: &Line, i: usize) -> C32 {
-    C32::new(x.re[i], x.im[i])
-}
-
-#[inline(always)]
-fn st(y: &mut LineMut, i: usize, v: C32) {
-    y.re[i] = v.re;
-    y.im[i] = v.im;
+fn run_at<'a>(re: &'a [f32], im: &'a [f32], at: usize, s: usize) -> (&'a [f32], &'a [f32]) {
+    (&re[at..at + s], &im[at..at + s])
 }
 
 /// One radix-2 DIF Stockham stage: `y[q + s(2p+k)] = DFT2(x)_k * w^{pk}`.
-pub fn radix2_stage(x: &Line, y: &mut LineMut, n: usize, s: usize, table: Option<&StageTable>) {
+#[allow(clippy::too_many_arguments)]
+pub fn radix2_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    scale: f32,
+) {
     let m = n / 2;
     for p in 0..m {
-        let w1 = match table {
+        let w = match table {
             Some(t) => t.get(p, 1),
             None => chain::<2>(p, n)[1],
         };
-        let (xa, xb) = (s * p, s * (p + m));
-        let (ya, yb) = (s * 2 * p, s * (2 * p + 1));
-        for q in 0..s {
-            let a = ld(x, xa + q);
-            let b = ld(x, xb + q);
-            st(y, ya + q, a + b);
-            st(y, yb + q, (a - b) * w1);
+        let (ar, ai) = run_at(xre, xim, s * p, s);
+        let (br, bi) = run_at(xre, xim, s * (p + m), s);
+        let (y0r, y1r) = yre[2 * s * p..2 * s * p + 2 * s].split_at_mut(s);
+        let (y0i, y1i) = yim[2 * s * p..2 * s * p + 2 * s].split_at_mut(s);
+
+        let bf = |i: usize, y0r: &mut [f32], y0i: &mut [f32], y1r: &mut [f32], y1i: &mut [f32]| {
+            let (are, aim) = (ar[i], if CONJ_IN { -ai[i] } else { ai[i] });
+            let (bre, bim) = (br[i], if CONJ_IN { -bi[i] } else { bi[i] });
+            let (sr, si) = (are + bre, aim + bim);
+            let (dr, di) = (are - bre, aim - bim);
+            let (tr, ti) = (dr * w.re - di * w.im, dr * w.im + di * w.re);
+            if FUSE_OUT {
+                y0r[i] = sr * scale;
+                y0i[i] = -(si * scale);
+                y1r[i] = tr * scale;
+                y1i[i] = -(ti * scale);
+            } else {
+                y0r[i] = sr;
+                y0i[i] = si;
+                y1r[i] = tr;
+                y1i[i] = ti;
+            }
+        };
+
+        let mut q = 0;
+        while q + LANES <= s {
+            for l in 0..LANES {
+                bf(q + l, &mut *y0r, &mut *y0i, &mut *y1r, &mut *y1i);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            bf(i, &mut *y0r, &mut *y0i, &mut *y1r, &mut *y1i);
         }
     }
 }
@@ -61,28 +99,114 @@ pub fn radix2_stage(x: &Line, y: &mut LineMut, n: usize, s: usize, table: Option
 /// One radix-4 DIF Stockham stage. The DFT4 butterfly uses only
 /// additions and `±i` rotations; output k is twisted by `w^{pk}` with the
 /// twiddle chain `w2 = w1^2`, `w3 = w1^2 * w1` (paper §V-A opt. 1).
-pub fn radix4_stage(x: &Line, y: &mut LineMut, n: usize, s: usize, table: Option<&StageTable>) {
+#[allow(clippy::too_many_arguments)]
+pub fn radix4_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    scale: f32,
+) {
     let m = n / 4;
     for p in 0..m {
         let [_, w1, w2, w3] = match table {
-            Some(t) => [t.get(p, 0), t.get(p, 1), t.get(p, 2), t.get(p, 3)],
+            Some(t) => [C32::ONE, t.get(p, 1), t.get(p, 2), t.get(p, 3)],
             None => chain::<4>(p, n),
         };
-        let base_in = s * p;
-        let base_out = s * 4 * p;
-        for q in 0..s {
-            let a = ld(x, base_in + q);
-            let b = ld(x, base_in + s * m + q);
-            let c = ld(x, base_in + 2 * s * m + q);
-            let d = ld(x, base_in + 3 * s * m + q);
-            let apc = a + c;
-            let amc = a - c;
-            let bpd = b + d;
-            let bmd = b - d;
-            st(y, base_out + q, apc + bpd);
-            st(y, base_out + s + q, (amc - bmd.mul_i()) * w1);
-            st(y, base_out + 2 * s + q, (apc - bpd) * w2);
-            st(y, base_out + 3 * s + q, (amc + bmd.mul_i()) * w3);
+        let base = s * p;
+        let step = s * m;
+        let (ar, ai) = run_at(xre, xim, base, s);
+        let (br, bi) = run_at(xre, xim, base + step, s);
+        let (cr, ci) = run_at(xre, xim, base + 2 * step, s);
+        let (dr, di) = run_at(xre, xim, base + 3 * step, s);
+        let out = &mut yre[4 * base..4 * base + 4 * s];
+        let (y0r, rest) = out.split_at_mut(s);
+        let (y1r, rest) = rest.split_at_mut(s);
+        let (y2r, y3r) = rest.split_at_mut(s);
+        let out = &mut yim[4 * base..4 * base + 4 * s];
+        let (y0i, rest) = out.split_at_mut(s);
+        let (y1i, rest) = rest.split_at_mut(s);
+        let (y2i, y3i) = rest.split_at_mut(s);
+
+        let bf = |i: usize,
+                  y0r: &mut [f32],
+                  y0i: &mut [f32],
+                  y1r: &mut [f32],
+                  y1i: &mut [f32],
+                  y2r: &mut [f32],
+                  y2i: &mut [f32],
+                  y3r: &mut [f32],
+                  y3i: &mut [f32]| {
+            let (x0r, x0i) = (ar[i], if CONJ_IN { -ai[i] } else { ai[i] });
+            let (x1r, x1i) = (br[i], if CONJ_IN { -bi[i] } else { bi[i] });
+            let (x2r, x2i) = (cr[i], if CONJ_IN { -ci[i] } else { ci[i] });
+            let (x3r, x3i) = (dr[i], if CONJ_IN { -di[i] } else { di[i] });
+            let (apc_r, apc_i) = (x0r + x2r, x0i + x2i);
+            let (amc_r, amc_i) = (x0r - x2r, x0i - x2i);
+            let (bpd_r, bpd_i) = (x1r + x3r, x1i + x3i);
+            let (bmd_r, bmd_i) = (x1r - x3r, x1i - x3i);
+            // k=0: no twiddle. k=1: (amc - i*bmd)*w1. k=2: (apc - bpd)*w2.
+            // k=3: (amc + i*bmd)*w3.
+            let (o0r, o0i) = (apc_r + bpd_r, apc_i + bpd_i);
+            let (t1r, t1i) = (amc_r + bmd_i, amc_i - bmd_r);
+            let (o1r, o1i) = (t1r * w1.re - t1i * w1.im, t1r * w1.im + t1i * w1.re);
+            let (t2r, t2i) = (apc_r - bpd_r, apc_i - bpd_i);
+            let (o2r, o2i) = (t2r * w2.re - t2i * w2.im, t2r * w2.im + t2i * w2.re);
+            let (t3r, t3i) = (amc_r - bmd_i, amc_i + bmd_r);
+            let (o3r, o3i) = (t3r * w3.re - t3i * w3.im, t3r * w3.im + t3i * w3.re);
+            if FUSE_OUT {
+                y0r[i] = o0r * scale;
+                y0i[i] = -(o0i * scale);
+                y1r[i] = o1r * scale;
+                y1i[i] = -(o1i * scale);
+                y2r[i] = o2r * scale;
+                y2i[i] = -(o2i * scale);
+                y3r[i] = o3r * scale;
+                y3i[i] = -(o3i * scale);
+            } else {
+                y0r[i] = o0r;
+                y0i[i] = o0i;
+                y1r[i] = o1r;
+                y1i[i] = o1i;
+                y2r[i] = o2r;
+                y2i[i] = o2i;
+                y3r[i] = o3r;
+                y3i[i] = o3i;
+            }
+        };
+
+        let mut q = 0;
+        while q + LANES <= s {
+            for l in 0..LANES {
+                bf(
+                    q + l,
+                    &mut *y0r,
+                    &mut *y0i,
+                    &mut *y1r,
+                    &mut *y1i,
+                    &mut *y2r,
+                    &mut *y2i,
+                    &mut *y3r,
+                    &mut *y3i,
+                );
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            bf(
+                i,
+                &mut *y0r,
+                &mut *y0i,
+                &mut *y1r,
+                &mut *y1i,
+                &mut *y2r,
+                &mut *y2i,
+                &mut *y3r,
+                &mut *y3i,
+            );
         }
     }
 }
@@ -112,10 +236,55 @@ pub fn radix_schedule(n: usize, max_radix: usize) -> Vec<usize> {
     out
 }
 
-/// Multi-stage Stockham driver for one line. `radices` in execution
-/// order; `tables` (if given) must match. The result is left in
-/// `(re, im)`; `(sre, sim)` is scratch of the same length.
 #[allow(clippy::too_many_arguments)]
+fn stage_mono<const CONJ_IN: bool, const FUSE_OUT: bool>(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    radix: usize,
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    scale: f32,
+) {
+    match radix {
+        2 => radix2_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale),
+        4 => radix4_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale),
+        8 => super::radix8::radix8_stage::<CONJ_IN, FUSE_OUT>(
+            xre, xim, yre, yim, n, s, table, scale,
+        ),
+        other => panic!("unsupported radix {other}"),
+    }
+}
+
+/// Dispatch one stage, monomorphising the fusion flags so the common
+/// (unfused) path carries zero per-element overhead.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_stage(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    radix: usize,
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    conj_in: bool,
+    fuse_out: bool,
+    scale: f32,
+) {
+    match (conj_in, fuse_out) {
+        (false, false) => stage_mono::<false, false>(xre, xim, yre, yim, radix, n, s, table, scale),
+        (true, false) => stage_mono::<true, false>(xre, xim, yre, yim, radix, n, s, table, scale),
+        (false, true) => stage_mono::<false, true>(xre, xim, yre, yim, radix, n, s, table, scale),
+        (true, true) => stage_mono::<true, true>(xre, xim, yre, yim, radix, n, s, table, scale),
+    }
+}
+
+/// Multi-stage Stockham driver for one line, forward direction. `radices`
+/// in execution order; `tables` (if given) must match. The result is left
+/// in `(re, im)`; `(sre, sim)` is scratch of at least the same length.
 pub fn transform_line(
     re: &mut [f32],
     im: &mut [f32],
@@ -124,10 +293,33 @@ pub fn transform_line(
     radices: &[usize],
     tables: Option<&PlanTables>,
 ) {
+    transform_line_fused(re, im, sre, sim, radices, tables, false);
+}
+
+/// Multi-stage Stockham driver with the inverse direction fused into the
+/// first and last stages: when `inverse` is set, stage 0 conjugates on
+/// load and the final stage conjugates + `1/N`-scales on store, so the
+/// inverse costs exactly the same number of memory passes as the forward
+/// transform (no separate conjugate or scale sweeps).
+#[allow(clippy::too_many_arguments)]
+pub fn transform_line_fused(
+    re: &mut [f32],
+    im: &mut [f32],
+    sre: &mut [f32],
+    sim: &mut [f32],
+    radices: &[usize],
+    tables: Option<&PlanTables>,
+    inverse: bool,
+) {
     let n_total = re.len();
+    debug_assert_eq!(im.len(), n_total);
+    let sre = &mut sre[..n_total];
+    let sim = &mut sim[..n_total];
     let levels = radices.len();
+    let scale = if inverse { 1.0 / n_total as f32 } else { 1.0 };
     // Ping-pong: with an odd stage count, start from scratch so the final
-    // write lands back in (re, im).
+    // write lands back in (re, im). The fused input conjugation is always
+    // applied at the first stage's *loads*, so the staging copy is plain.
     let mut src_is_main = levels % 2 == 0;
     if !src_is_main {
         sre.copy_from_slice(re);
@@ -137,37 +329,18 @@ pub fn transform_line(
     let mut s = 1usize;
     for (li, &r) in radices.iter().enumerate() {
         let table = tables.map(|t| &t.stages[li]);
-        // Split borrows between main and scratch according to direction.
+        let conj_in = inverse && li == 0;
+        let fuse_out = inverse && li == levels - 1;
         if src_is_main {
-            let x = Line { re, im };
-            let mut y = LineMut { re: sre, im: sim };
-            dispatch_stage(&x, &mut y, r, n, s, table);
+            dispatch_stage(re, im, sre, sim, r, n, s, table, conj_in, fuse_out, scale);
         } else {
-            let x = Line { re: sre, im: sim };
-            let mut y = LineMut { re, im };
-            dispatch_stage(&x, &mut y, r, n, s, table);
+            dispatch_stage(sre, sim, re, im, r, n, s, table, conj_in, fuse_out, scale);
         }
         src_is_main = !src_is_main;
         n /= r;
         s *= r;
     }
     debug_assert!(src_is_main, "result must end in the main buffer");
-}
-
-fn dispatch_stage(
-    x: &Line,
-    y: &mut LineMut,
-    radix: usize,
-    n: usize,
-    s: usize,
-    table: Option<&StageTable>,
-) {
-    match radix {
-        2 => radix2_stage(x, y, n, s, table),
-        4 => radix4_stage(x, y, n, s, table),
-        8 => super::radix8::radix8_stage(x, y, n, s, table),
-        other => panic!("unsupported radix {other}"),
-    }
 }
 
 #[cfg(test)]
@@ -246,5 +419,71 @@ mod tests {
             let b = run_stockham(&x, 4, true);
             assert!(a.rel_l2_error(&b) < 1e-5, "n={n}");
         }
+    }
+
+    #[test]
+    fn fused_inverse_matches_conjugate_identity() {
+        // The fused first/last-stage conj+scale must equal the explicit
+        // three-pass formulation ifft(x) = conj(fft(conj(x))) / N.
+        let mut rng = Rng::new(5);
+        for &max_radix in &[2usize, 4, 8] {
+            for &n in &[8usize, 64, 512, 2048, 4096] {
+                let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+                let radices = radix_schedule(n, max_radix);
+                let (mut sre, mut sim) = (vec![0.0; n], vec![0.0; n]);
+
+                // Fused path.
+                let mut got = x.clone();
+                transform_line_fused(
+                    &mut got.re, &mut got.im, &mut sre, &mut sim, &radices, None, true,
+                );
+
+                // Explicit path.
+                let mut want = SplitComplex {
+                    re: x.re.clone(),
+                    im: x.im.iter().map(|v| -v).collect(),
+                };
+                transform_line(&mut want.re, &mut want.im, &mut sre, &mut sim, &radices, None);
+                let k = 1.0 / n as f32;
+                for v in want.re.iter_mut() {
+                    *v *= k;
+                }
+                for v in want.im.iter_mut() {
+                    *v *= -k;
+                }
+
+                let err = got.rel_l2_error(&want);
+                assert!(err < 1e-6, "n={n} max_radix={max_radix}: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_inverse_roundtrips() {
+        let mut rng = Rng::new(6);
+        for &n in &[256usize, 1024, 4096] {
+            let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let radices = radix_schedule(n, 8);
+            let (mut sre, mut sim) = (vec![0.0; n], vec![0.0; n]);
+            let mut y = x.clone();
+            transform_line(&mut y.re, &mut y.im, &mut sre, &mut sim, &radices, None);
+            transform_line_fused(&mut y.re, &mut y.im, &mut sre, &mut sim, &radices, None, true);
+            assert!(y.rel_l2_error(&x) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn oversized_scratch_is_fine() {
+        // Pooled workspaces hand stages scratch that may be longer than
+        // the line; the driver must slice it down rather than panic.
+        let mut rng = Rng::new(7);
+        let n = 256;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let want = dft(&x, Direction::Forward);
+        let radices = radix_schedule(n, 8);
+        let mut got = x.clone();
+        let (mut sre, mut sim) = (vec![0.0; 4 * n], vec![0.0; 4 * n]);
+        transform_line(&mut got.re, &mut got.im, &mut sre, &mut sim, &radices, None);
+        assert!(got.rel_l2_error(&want) < 1e-4);
     }
 }

@@ -58,6 +58,14 @@ impl StageTable {
     pub fn get(&self, p: usize, k: usize) -> C32 {
         self.w[p * self.radix + k]
     }
+
+    /// All `radix` twiddles for butterfly `p` as one contiguous row —
+    /// lets the stage codelets hoist the whole set with a single bounds
+    /// check before entering the q-loop.
+    #[inline(always)]
+    pub fn row(&self, p: usize) -> &[C32] {
+        &self.w[p * self.radix..(p + 1) * self.radix]
+    }
 }
 
 /// Twiddle tables for a whole plan: one [`StageTable`] per stage, in
@@ -121,6 +129,18 @@ mod tests {
     fn chain_radix1_is_identity() {
         let ws: [C32; 1] = chain(3, 8);
         assert_eq!(ws[0], C32::ONE);
+    }
+
+    #[test]
+    fn row_matches_get() {
+        let t = StageTable::new(64, 8);
+        for p in 0..8 {
+            let row = t.row(p);
+            assert_eq!(row.len(), 8);
+            for k in 0..8 {
+                assert_eq!(row[k], t.get(p, k));
+            }
+        }
     }
 
     #[test]

@@ -95,7 +95,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             "latency: p50 {:.0} us, p95 {:.0} us, p99 {:.0} us, max {:.0} us, failures {}",
             report.p50_us, report.p95_us, report.p99_us, report.max_us, report.failures
         );
-        println!("\nmetrics:\n{}", svc.metrics().render());
+        let m = svc.drain()?;
+        println!("\nmetrics:\n{}", m.render());
         return Ok(());
     }
     println!(
@@ -134,13 +135,14 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         total_flops += f;
     }
     let dt = t0.elapsed().as_secs_f64();
+    let m = svc.drain()?;
     println!(
-        "\ndone: {total_lines} lines in {:.2}s = {:.0} lines/s, {:.2} GFLOPS (nominal, this testbed)",
+        "\ndone: {total_lines} lines in {:.2}s = {:.0} lines/s, {:.2} GFLOPS offered (nominal, this testbed)",
         dt,
         total_lines as f64 / dt,
         total_flops / dt / 1e9
     );
-    println!("\nmetrics:\n{}", svc.metrics().render());
+    println!("\nmetrics:\n{}", m.render());
     Ok(())
 }
 

@@ -2,12 +2,30 @@
 //! compiled executable, and services execution jobs from a channel —
 //! the analog of a Metal command queue.
 
-use super::artifact::{ArtifactMeta, Registry};
+// The real PJRT device below needs the external `xla` bindings crate,
+// which the offline build environment cannot fetch and does not vendor.
+// Fail fast with an actionable message rather than an unresolved-crate
+// error if someone enables the feature (e.g. via --all-features).
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature requires the external `xla` bindings crate: vendor it, \
+     add `xla = { path = ..., optional = true }` + `pjrt = [\"dep:xla\"]` to \
+     rust/Cargo.toml, and remove this guard (rust/src/runtime/device.rs)"
+);
+
+use super::artifact::Registry;
+#[cfg(feature = "pjrt")]
+use super::artifact::ArtifactMeta;
 use super::fallback::NativeExec;
 use crate::util::complex::SplitComplex;
-use anyhow::{anyhow, ensure, Context, Result};
+use anyhow::{anyhow, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{ensure, Context};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 /// One execution request: artifact name + input tensors, each a
 /// `(batch, n)` or `(n,)` split-complex-half f32 buffer (the artifact's
@@ -30,12 +48,24 @@ pub enum DeviceBackend {
 }
 
 /// Device-thread main loop. Consumes jobs until the channel closes.
-pub fn run_device(registry: Registry, backend: DeviceBackend, rx: mpsc::Receiver<Job>) {
+/// `busy_ns` accumulates the thread's pure execution time (excluding
+/// channel queueing), which is the denominator of the coordinator's
+/// executor-GFLOPS metric — measured here because worker-side wall time
+/// would double-count whenever several workers queue behind this one
+/// serialized thread.
+pub fn run_device(
+    registry: Registry,
+    backend: DeviceBackend,
+    rx: mpsc::Receiver<Job>,
+    busy_ns: Arc<AtomicU64>,
+) {
     match backend {
         DeviceBackend::Pjrt => match PjrtDevice::new(registry) {
             Ok(mut dev) => {
-                while let Ok(job) = rx.recv() {
-                    let result = dev.execute(&job);
+                while let Ok(mut job) = rx.recv() {
+                    let t0 = Instant::now();
+                    let result = dev.execute(&mut job);
+                    busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     let _ = job.reply.send(result);
                 }
             }
@@ -49,8 +79,10 @@ pub fn run_device(registry: Registry, backend: DeviceBackend, rx: mpsc::Receiver
         },
         DeviceBackend::Native => {
             let dev = NativeExec::new(registry);
-            while let Ok(job) = rx.recv() {
-                let result = dev.execute(&job);
+            while let Ok(mut job) = rx.recv() {
+                let t0 = Instant::now();
+                let result = dev.execute(&mut job);
+                busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 let _ = job.reply.send(result);
             }
         }
@@ -58,12 +90,36 @@ pub fn run_device(registry: Registry, backend: DeviceBackend, rx: mpsc::Receiver
 }
 
 /// PJRT-backed device: compiles artifacts lazily and caches executables.
+/// Requires the `pjrt` crate feature (and the external `xla` bindings);
+/// the default offline build replaces it with a stub whose startup fails,
+/// which `run_device` turns into per-job errors.
+#[cfg(feature = "pjrt")]
 struct PjrtDevice {
     client: xla::PjRtClient,
     registry: Registry,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(not(feature = "pjrt"))]
+struct PjrtDevice {
+    _registry: Registry,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtDevice {
+    fn new(_registry: Registry) -> Result<Self> {
+        anyhow::bail!(
+            "this build has no PJRT support (crate feature `pjrt` is disabled): \
+             HLO artifacts cannot be parsed or compiled here; use the native backend"
+        )
+    }
+
+    fn execute(&mut self, _job: &mut Job) -> Result<Vec<Vec<f32>>> {
+        unreachable!("stub PjrtDevice cannot be constructed")
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl PjrtDevice {
     fn new(registry: Registry) -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
@@ -88,7 +144,7 @@ impl PjrtDevice {
         Ok(&self.executables[&meta.name])
     }
 
-    fn execute(&mut self, job: &Job) -> Result<Vec<Vec<f32>>> {
+    fn execute(&mut self, job: &mut Job) -> Result<Vec<Vec<f32>>> {
         let meta = self.registry.get(&job.artifact)?.clone();
         ensure!(
             job.inputs.len() == meta.kind.num_inputs(),

@@ -1,4 +1,9 @@
 //! [`Engine`] — the thread-safe handle to the device thread.
+//!
+//! On the native backend the device thread executes through the pooled
+//! two-tier [`BatchExecutor`](crate::fft::exec::BatchExecutor)s owned by
+//! its `NativeExec`, so tile execution is scratch-allocation-free after
+//! warmup and large tiles are batch-parallel across worker threads.
 
 use super::artifact::Registry;
 use super::device::{run_device, DeviceBackend, Job};
@@ -6,6 +11,7 @@ use crate::fft::Direction;
 use crate::util::complex::SplitComplex;
 use anyhow::{anyhow, Context, Result};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -36,6 +42,9 @@ pub struct Engine {
     tx: mpsc::Sender<Job>,
     registry: Registry,
     backend_used: Backend,
+    /// Pure execution time accumulated by the device thread, ns
+    /// (excludes channel queueing — see [`run_device`]).
+    busy_ns: Arc<AtomicU64>,
     /// Keeps the device join handle alive for diagnostics.
     _device: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
 }
@@ -64,20 +73,31 @@ impl Engine {
         };
         let (tx, rx) = mpsc::channel();
         let reg_clone = registry.clone();
+        let busy_ns = Arc::new(AtomicU64::new(0));
+        let busy_clone = busy_ns.clone();
         let handle = std::thread::Builder::new()
             .name("applefft-device".to_string())
-            .spawn(move || run_device(reg_clone, device_backend, rx))
+            .spawn(move || run_device(reg_clone, device_backend, rx, busy_clone))
             .context("spawning device thread")?;
         Ok(Engine {
             tx,
             registry,
             backend_used: resolved,
+            busy_ns,
             _device: Arc::new(Mutex::new(Some(handle))),
         })
     }
 
     pub fn backend(&self) -> Backend {
         self.backend_used
+    }
+
+    /// Device-thread execution time so far, nanoseconds. The executor
+    /// GFLOPS denominator: queueing behind the device thread is not
+    /// counted, so concurrent workers don't double-bill the same tile
+    /// execution.
+    pub fn device_busy_ns(&self) -> u64 {
+        self.busy_ns.load(Ordering::Relaxed)
     }
 
     pub fn registry(&self) -> &Registry {
@@ -88,14 +108,13 @@ impl Engine {
         self.registry.batch_tile
     }
 
-    /// Eagerly compile every FFT artifact by executing a zero batch
-    /// through each, removing the first-request compile spike (0.5-2 s
-    /// per artifact on this testbed — see EXPERIMENTS.md §Perf).
-    /// No-op on the native backend.
+    /// Eagerly warm every FFT artifact by executing a zero batch through
+    /// each. On PJRT this removes the first-request compile spike (0.5-2 s
+    /// per artifact on this testbed — see EXPERIMENTS.md §Perf); on the
+    /// native backend it pre-builds the plans, twiddle tables, and pooled
+    /// executor workspaces, so the very first real tile is already
+    /// allocation-free.
     pub fn warm_all(&self) -> Result<()> {
-        if self.backend_used != Backend::Pjrt {
-            return Ok(());
-        }
         let metas: Vec<_> = self
             .registry
             .iter()

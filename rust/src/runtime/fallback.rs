@@ -1,12 +1,22 @@
 //! Native-FFT execution backend: serves the same artifact names as the
-//! PJRT device from the S1 library, so the full coordinator stack (and
-//! `cargo test`) works before/without `make artifacts`, and so every
-//! PJRT result has an in-process oracle to diff against.
+//! PJRT device, so the full coordinator stack (and `cargo test`) works
+//! before/without `make artifacts`, and so every PJRT result has an
+//! in-process oracle to diff against.
+//!
+//! All execution flows through the pooled [`BatchExecutor`]s cached in
+//! the shared [`NativePlanner`]: tiles are transformed in place with
+//! pooled workspace scratch (zero allocations per tile after warmup) and
+//! big tiles are striped over worker threads
+//! ([`BatchExecutor::execute_batch_auto_into`]).
+//!
+//! [`BatchExecutor`]: crate::fft::exec::BatchExecutor
+//! [`BatchExecutor::execute_batch_auto_into`]:
+//!     crate::fft::exec::BatchExecutor::execute_batch_auto_into
 
 use super::artifact::{ArtifactKind, Registry};
 use super::device::Job;
 use crate::fft::plan::{NativePlanner, Variant};
-use crate::util::complex::{SplitComplex, C32};
+use crate::util::complex::SplitComplex;
 use anyhow::{ensure, Result};
 
 pub struct NativeExec {
@@ -19,7 +29,14 @@ impl NativeExec {
         NativeExec { registry, planner: NativePlanner::new() }
     }
 
-    pub fn execute(&self, job: &Job) -> Result<Vec<Vec<f32>>> {
+    /// Aggregate workspace-pool telemetry: `(workspaces created, buffer
+    /// grow events)`. Constant across repeated same-shape tiles once the
+    /// executors are warm.
+    pub fn workspace_stats(&self) -> (usize, usize) {
+        self.planner.workspace_stats()
+    }
+
+    pub fn execute(&self, job: &mut Job) -> Result<Vec<Vec<f32>>> {
         let meta = self.registry.get(&job.artifact)?;
         ensure!(
             job.inputs.len() == meta.kind.num_inputs(),
@@ -32,28 +49,42 @@ impl NativeExec {
         // All artifact variants compute the same transform; the native
         // library distinguishes only the radix schedule.
         let variant = if meta.variant == "radix4" { Variant::Radix4 } else { Variant::Radix8 };
+        let exec = self.planner.executor(n, variant)?;
         match meta.kind {
             ArtifactKind::Fft => {
                 ensure!(job.inputs[0].len() == n * batch, "input size mismatch");
-                let x = SplitComplex { re: job.inputs[0].clone(), im: job.inputs[1].clone() };
-                let y = self.planner.plan(n, variant)?.execute_batch(&x, batch, meta.direction)?;
-                Ok(vec![y.re, y.im])
+                // Take the job's owned input buffers (the device thread
+                // drops the job right after this call) and transform them
+                // in place: no input copy, no scratch beyond the pool.
+                let mut x = SplitComplex {
+                    re: std::mem::take(&mut job.inputs[0]),
+                    im: std::mem::take(&mut job.inputs[1]),
+                };
+                exec.execute_batch_auto_into(&mut x, batch, meta.direction)?;
+                Ok(vec![x.re, x.im])
             }
             ArtifactKind::RangeComp => {
                 ensure!(job.inputs[0].len() == n * batch, "line size mismatch");
                 ensure!(job.inputs[2].len() == n, "filter size mismatch");
-                let x = SplitComplex { re: job.inputs[0].clone(), im: job.inputs[1].clone() };
-                let h = SplitComplex { re: job.inputs[2].clone(), im: job.inputs[3].clone() };
-                let plan = self.planner.plan(n, variant)?;
-                let mut s = plan.execute_batch(&x, batch, crate::fft::Direction::Forward)?;
+                let mut s = SplitComplex {
+                    re: std::mem::take(&mut job.inputs[0]),
+                    im: std::mem::take(&mut job.inputs[1]),
+                };
+                exec.execute_batch_auto_into(&mut s, batch, crate::fft::Direction::Forward)?;
+                // Pointwise matched-filter multiply, in place on the
+                // split arrays (no interleave round-trip).
+                let (hre, him) = (&job.inputs[2], &job.inputs[3]);
                 for b in 0..batch {
+                    let at = b * n;
+                    let (sre, sim) = (&mut s.re[at..at + n], &mut s.im[at..at + n]);
                     for i in 0..n {
-                        let v = s.get(b * n + i) * C32::new(h.re[i], h.im[i]);
-                        s.set(b * n + i, v);
+                        let (xr, xi) = (sre[i], sim[i]);
+                        sre[i] = xr * hre[i] - xi * him[i];
+                        sim[i] = xr * him[i] + xi * hre[i];
                     }
                 }
-                let y = plan.execute_batch(&s, batch, crate::fft::Direction::Inverse)?;
-                Ok(vec![y.re, y.im])
+                exec.execute_batch_auto_into(&mut s, batch, crate::fft::Direction::Inverse)?;
+                Ok(vec![s.re, s.im])
             }
         }
     }
@@ -67,7 +98,11 @@ mod tests {
     use crate::util::rng::Rng;
     use std::sync::mpsc;
 
-    fn make_job(artifact: &str, inputs: Vec<Vec<f32>>, dims: Vec<Vec<usize>>) -> (Job, mpsc::Receiver<Result<Vec<Vec<f32>>>>) {
+    fn make_job(
+        artifact: &str,
+        inputs: Vec<Vec<f32>>,
+        dims: Vec<Vec<usize>>,
+    ) -> (Job, mpsc::Receiver<Result<Vec<Vec<f32>>>>) {
         let (tx, rx) = mpsc::channel();
         (Job { artifact: artifact.into(), inputs, dims, reply: tx }, rx)
     }
@@ -79,12 +114,12 @@ mod tests {
         let mut rng = Rng::new(50);
         let (n, batch) = (256, 4);
         let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
-        let (job, _rx) = make_job(
+        let (mut job, _rx) = make_job(
             "fft256_fwd",
             vec![x.re.clone(), x.im.clone()],
             vec![vec![batch, n], vec![batch, n]],
         );
-        let out = exec.execute(&job).unwrap();
+        let out = exec.execute(&mut job).unwrap();
         let got = SplitComplex { re: out[0].clone(), im: out[1].clone() };
         let want = dft_batch(&x, n, batch, Direction::Forward);
         assert!(got.rel_l2_error(&want) < 2e-4);
@@ -96,30 +131,60 @@ mod tests {
         let exec = NativeExec::new(reg);
         let mut rng = Rng::new(51);
         let (n, batch) = (4096, 2);
-        let (job, _rx) = make_job(
+        let (mut job, _rx) = make_job(
             "rangecomp4096",
             vec![rng.signal(n * batch), rng.signal(n * batch), rng.signal(n), rng.signal(n)],
             vec![vec![batch, n], vec![batch, n], vec![n], vec![n]],
         );
-        let out = exec.execute(&job).unwrap();
+        let out = exec.execute(&mut job).unwrap();
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].len(), n * batch);
         assert!(out[0].iter().all(|v| v.is_finite()));
     }
 
     #[test]
+    fn repeated_tiles_allocate_no_new_scratch() {
+        // The coordinator's zero-scratch-per-tile guarantee: after the
+        // first (warmup) tile per shape, the executor pools stop growing.
+        let reg = Registry::default_set(32);
+        let exec = NativeExec::new(reg);
+        let mut rng = Rng::new(52);
+        let (n, batch) = (4096, 32);
+        let mk = |rng: &mut Rng| {
+            make_job(
+                "fft4096_fwd",
+                vec![rng.signal(n * batch), rng.signal(n * batch)],
+                vec![vec![batch, n], vec![batch, n]],
+            )
+        };
+        let (mut job, _rx) = mk(&mut rng);
+        exec.execute(&mut job).unwrap();
+        let (created, grows) = exec.workspace_stats();
+        assert!(created >= 1, "warmup must have created workspaces");
+        for _ in 0..8 {
+            let (mut job, _rx) = mk(&mut rng);
+            exec.execute(&mut job).unwrap();
+        }
+        assert_eq!(
+            exec.workspace_stats(),
+            (created, grows),
+            "workspace pool must not grow across repeated tiles"
+        );
+    }
+
+    #[test]
     fn native_exec_rejects_bad_arity() {
         let reg = Registry::default_set(4);
         let exec = NativeExec::new(reg);
-        let (job, _rx) = make_job("fft256_fwd", vec![vec![0.0; 1024]], vec![vec![4, 256]]);
-        assert!(exec.execute(&job).is_err());
+        let (mut job, _rx) = make_job("fft256_fwd", vec![vec![0.0; 1024]], vec![vec![4, 256]]);
+        assert!(exec.execute(&mut job).is_err());
     }
 
     #[test]
     fn native_exec_unknown_artifact() {
         let reg = Registry::default_set(4);
         let exec = NativeExec::new(reg);
-        let (job, _rx) = make_job("nope", vec![], vec![]);
-        assert!(exec.execute(&job).is_err());
+        let (mut job, _rx) = make_job("nope", vec![], vec![]);
+        assert!(exec.execute(&mut job).is_err());
     }
 }

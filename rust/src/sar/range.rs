@@ -153,7 +153,7 @@ mod tests {
             backend: Backend::Native,
             max_wait: std::time::Duration::from_millis(1),
             workers: 2,
-        warm: false,
+            warm: false,
         })
         .unwrap()
     }

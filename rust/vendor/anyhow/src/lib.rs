@@ -1,0 +1,228 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access to crates.io, so this
+//! vendored shim provides the subset of `anyhow` the workspace uses:
+//!
+//! * [`Error`] — a context-chain error type (`Display` prints the
+//!   outermost message, `{:#}` prints the whole chain, `Debug` prints
+//!   an anyhow-style "Caused by" listing).
+//! * [`Result<T>`] — alias with `Error` as the default error type.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   and `Option`.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and therefore `?` on
+//! `io::Error`, parse errors, channel errors, ...) coherent.
+
+use std::fmt::{self, Debug, Display};
+
+/// A context-chain error. `chain[0]` is the outermost (most recent)
+/// message; later entries are the causes, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a single message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, colon-separated (anyhow's format).
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string, or wrap any `Display`
+/// value (mirrors the real crate's three arms, so `anyhow!(some_string)`
+/// works alongside `anyhow!("x = {x}")` and `anyhow!("{} {}", a, b)`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+/// Attach context to the error arm of a `Result`, or turn a `None` into
+/// an error carrying the context message.
+pub trait Context<T> {
+    fn context<C: Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("loading config");
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: file missing");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<i32> {
+            let v: i32 = "not a number".parse()?;
+            Ok(v)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        let x = 3;
+        assert_eq!(anyhow!("inline {x}").to_string(), "inline 3");
+        let s = String::from("wrapped");
+        assert_eq!(anyhow!(s).to_string(), "wrapped");
+
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert_eq!(f(-1).unwrap_err().to_string(), "x must be positive, got -1");
+        assert_eq!(f(200).unwrap_err().to_string(), "too big");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f(x: i32) -> Result<()> {
+            ensure!(x == 0);
+            Ok(())
+        }
+        assert!(f(0).is_ok());
+        assert!(f(1).unwrap_err().to_string().contains("x == 0"));
+    }
+
+    #[test]
+    fn context_on_option() {
+        let some: Option<i32> = Some(3);
+        let none: Option<i32> = None;
+        assert_eq!(some.context("missing").unwrap(), 3);
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        let none2: Option<i32> = None;
+        assert_eq!(none2.with_context(|| format!("k {}", 9)).unwrap_err().to_string(), "k 9");
+    }
+
+    #[test]
+    fn context_stacks() {
+        let e: Error = Error::msg("root").context("mid").context("outer");
+        assert_eq!(e.root_cause(), "root");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["outer", "mid", "root"]);
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+    }
+}
