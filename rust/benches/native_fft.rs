@@ -7,6 +7,7 @@
 
 use applefft::bench::table::Table;
 use applefft::bench::Benchmark;
+use applefft::fft::codelet::CodeletBackend;
 use applefft::fft::plan::{NativePlan, NativePlanner, Variant};
 use applefft::fft::Direction;
 use applefft::util::complex::SplitComplex;
@@ -67,42 +68,54 @@ fn main() {
     t2.note("the paper's chain trick targets GPU transcendental cost; on CPU, tables win");
     t2.print();
 
-    // ---- Two-tier executor: serial codelets vs batch-parallel, the
-    // acceptance workload (N=4096, batch 64). Both rows run the same
-    // register-tier codelets with pooled workspaces; the parallel row
-    // adds the batch-occupancy tier (lines striped over workers). ----
+    // ---- Two-tier executor: serial vs batch-parallel × scalar vs simd
+    // codelets, the acceptance workload (N=4096, batch 64). The codelet
+    // axis is the register tier (explicit f32x8 vs autovectorised
+    // scalar loops); the path axis is the batch-occupancy tier (lines
+    // striped over workers). The simd-vs-scalar speedup column is the
+    // "explicit SIMD beats hoping the autovectoriser cooperates" proof
+    // row — run with `--features simd` on nightly to populate it. ----
     let batch64 = 64usize;
     let mut rng64 = Rng::new(64);
     let x64 = SplitComplex { re: rng64.signal(n * batch64), im: rng64.signal(n * batch64) };
-    let ex = planner.executor(n, Variant::Radix8).unwrap();
-    let ms = b.run("executor serial n=4096 b=64", || {
-        let mut d = x64.clone();
-        ex.execute_batch_into(&mut d, batch64, Direction::Forward).unwrap();
-        d
-    });
-    let mp = b.run("executor batch-par n=4096 b=64", || {
-        let mut d = x64.clone();
-        ex.execute_batch_par_into(&mut d, batch64, Direction::Forward).unwrap();
-        d
-    });
     let mut te = Table::new(
-        "Two-tier executor — N=4096, batch 64 (this testbed)",
-        &["path", "us/FFT", "GFLOPS", "speedup"],
+        "Two-tier executor — serial vs parallel x scalar vs simd, N=4096 batch 64",
+        &["path", "codelets", "us/FFT", "GFLOPS", "vs scalar serial"],
     );
-    te.row(&[
-        "executor serial (pooled codelets)".into(),
-        format!("{:.1}", ms.median_secs() / batch64 as f64 * 1e6),
-        format!("{:.2}", gflops(fft_flops(n) * batch64 as f64, ms.median_secs())),
-        "1.00x".into(),
-    ]);
-    te.row(&[
-        format!("executor batch-par ({} threads)", ex.threads()),
-        format!("{:.1}", mp.median_secs() / batch64 as f64 * 1e6),
-        format!("{:.2}", gflops(fft_flops(n) * batch64 as f64, mp.median_secs())),
-        format!("{:.2}x", ms.median_secs() / mp.median_secs()),
-    ]);
+    let mut scalar_serial_secs = None;
+    for &backend in CodeletBackend::compiled() {
+        let ex = planner.executor_with(n, Variant::Radix8, backend).unwrap();
+        let ms = b.run(&format!("executor serial {} n=4096 b=64", backend.tag()), || {
+            let mut d = x64.clone();
+            ex.execute_batch_into(&mut d, batch64, Direction::Forward).unwrap();
+            d
+        });
+        let mp = b.run(&format!("executor batch-par {} n=4096 b=64", backend.tag()), || {
+            let mut d = x64.clone();
+            ex.execute_batch_par_into(&mut d, batch64, Direction::Forward).unwrap();
+            d
+        });
+        let base = *scalar_serial_secs.get_or_insert(ms.median_secs());
+        te.row(&[
+            "executor serial".into(),
+            backend.tag().into(),
+            format!("{:.1}", ms.median_secs() / batch64 as f64 * 1e6),
+            format!("{:.2}", gflops(fft_flops(n) * batch64 as f64, ms.median_secs())),
+            format!("{:.2}x", base / ms.median_secs()),
+        ]);
+        te.row(&[
+            format!("executor batch-par ({} threads)", ex.threads()),
+            backend.tag().into(),
+            format!("{:.1}", mp.median_secs() / batch64 as f64 * 1e6),
+            format!("{:.2}", gflops(fft_flops(n) * batch64 as f64, mp.median_secs())),
+            format!("{:.2}x", base / mp.median_secs()),
+        ]);
+    }
     te.note("GFLOPS is the paper's nominal 5*N*log2 N metric (§VI-A)");
-    te.note("both rows include the input memcpy (out-of-place semantics)");
+    te.note("all rows include the input memcpy (out-of-place semantics)");
+    if !CodeletBackend::Simd.is_compiled() {
+        te.note("simd rows absent: rebuild with `--features simd` on nightly");
+    }
     te.print();
 
     // ---- Radix ablation. ----

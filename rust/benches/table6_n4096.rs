@@ -35,13 +35,20 @@ fn main() {
     t.note("calibration constants fitted on radix-4/radix-8 rows; the rest are predictions");
     t.print();
 
-    let a = mma::analyze(&applefft::sim::config::M1, &applefft::sim::config::CalibConstants::default());
+    let a = mma::analyze(
+        &applefft::sim::config::M1,
+        &applefft::sim::config::CalibConstants::default(),
+    );
     let mut tm = Table::new("§V-C — simdgroup_matrix MMA analysis", &["metric", "value", "paper"]);
-    tm.row_str(&["complex-via-real-MMA FLOP inflation", &format!("{:.1}x", a.flop_inflation), "~3.4x"]);
+    let inflation = format!("{:.1}x", a.flop_inflation);
+    tm.row_str(&["complex-via-real-MMA FLOP inflation", &inflation, "~3.4x"]);
     tm.row_str(&["MMA ALU-rate advantage", &format!("{:.2}x", a.rate_advantage), "~4x"]);
-    tm.row_str(&["net compute speedup", &format!("{:.2}x", a.net_compute_speedup), "~1.2x"]);
-    tm.row_str(&["single-FFT GFLOPS (marshaling)", &format!("{:.1}", a.single_fft_gflops), "loses to scalar"]);
-    tm.row_str(&["batched GFLOPS (no marshaling)", &format!("{:.1}", a.batched_gflops), "future work"]);
+    let net = format!("{:.2}x", a.net_compute_speedup);
+    tm.row_str(&["net compute speedup", &net, "~1.2x"]);
+    let single = format!("{:.1}", a.single_fft_gflops);
+    tm.row_str(&["single-FFT GFLOPS (marshaling)", &single, "loses to scalar"]);
+    let batched = format!("{:.1}", a.batched_gflops);
+    tm.row_str(&["batched GFLOPS (no marshaling)", &batched, "future work"]);
     tm.print();
 
     // ---- Real execution of every variant on this testbed. ----
@@ -67,21 +74,29 @@ fn main() {
         "0 (is oracle)".into(),
     ]);
 
-    // Two-tier executor with batch parallelism (the serving tile path).
-    let ex = planner
-        .executor(n, applefft::fft::plan::Variant::Radix8)
-        .expect("executor");
-    let got_par = ex.execute_batch_par(&x, exec_batch, Direction::Forward).unwrap();
-    let err_par = got_par.rel_l2_error(&want);
-    let mpar = b.run("native executor batch-par", || {
-        ex.execute_batch_par(&x, exec_batch, Direction::Forward).unwrap()
-    });
-    t2.row(&[
-        format!("native executor batch-par ({} threads)", ex.threads()),
-        format!("{:.1}", mpar.median_secs() / exec_batch as f64 * 1e6),
-        format!("{:.2}", gflops(fft_flops(n) * exec_batch as f64, mpar.median_secs())),
-        format!("{err_par:.1e}"),
-    ]);
+    // Two-tier executor with batch parallelism (the serving tile path),
+    // once per compiled codelet backend (scalar always; simd with
+    // `--features simd` on nightly).
+    for &backend in applefft::fft::codelet::CodeletBackend::compiled() {
+        let ex = planner
+            .executor_with(n, applefft::fft::plan::Variant::Radix8, backend)
+            .expect("executor");
+        let got_par = ex.execute_batch_par(&x, exec_batch, Direction::Forward).unwrap();
+        let err_par = got_par.rel_l2_error(&want);
+        let mpar = b.run(&format!("native executor batch-par {}", backend.tag()), || {
+            ex.execute_batch_par(&x, exec_batch, Direction::Forward).unwrap()
+        });
+        t2.row(&[
+            format!(
+                "native executor batch-par ({} threads, {} codelets)",
+                ex.threads(),
+                ex.codelet().tag()
+            ),
+            format!("{:.1}", mpar.median_secs() / exec_batch as f64 * 1e6),
+            format!("{:.2}", gflops(fft_flops(n) * exec_batch as f64, mpar.median_secs())),
+            format!("{err_par:.1e}"),
+        ]);
+    }
 
     // PJRT artifacts, if built.
     if artifacts_dir().join("manifest.txt").exists() {

@@ -88,6 +88,7 @@ impl Metrics {
     /// sub-microsecond tiles.
     pub fn snapshot(&self, exec_busy_ns: u64) -> MetricsSnapshot {
         MetricsSnapshot {
+            codelet: crate::fft::codelet::select().tag(),
             requests: self.requests.load(Ordering::Relaxed),
             lines_in: self.lines_in.load(Ordering::Relaxed),
             tiles_dispatched: self.tiles_dispatched.load(Ordering::Relaxed),
@@ -105,6 +106,9 @@ impl Metrics {
 
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MetricsSnapshot {
+    /// Stage-codelet backend the native executors dispatch through
+    /// ("scalar" or "simd"); empty only for `Default` snapshots.
+    pub codelet: &'static str,
     pub requests: u64,
     pub lines_in: u64,
     pub tiles_dispatched: u64,
@@ -145,7 +149,7 @@ impl MetricsSnapshot {
         format!(
             "requests={} lines={} tiles={} padded={} ({:.1}%) failures={}\n\
              queue: mean {:.0} us, p95 {:.0} us | exec: mean {:.0} us, p95 {:.0} us\n\
-             executor: {:.2} GFLOPS nominal (5*N*log2 N / busy time)",
+             executor: {:.2} GFLOPS nominal (5*N*log2 N / busy time), {} codelets",
             self.requests,
             self.lines_in,
             self.tiles_dispatched,
@@ -157,6 +161,7 @@ impl MetricsSnapshot {
             self.exec_mean_us,
             self.exec_p95_us,
             self.gflops(),
+            self.codelet,
         )
     }
 }
@@ -211,6 +216,9 @@ mod tests {
         let r = m.snapshot(2_000).render();
         assert!(r.contains("requests=3"));
         assert!(r.contains("GFLOPS"));
+        let codelet = m.snapshot(2_000).codelet;
+        assert!(codelet == "scalar" || codelet == "simd", "{codelet:?}");
+        assert!(r.contains("codelets"), "{r}");
         assert!(m.snapshot(2_000).gflops() > 0.0);
         assert_eq!(m.snapshot(0).gflops(), 0.0);
     }

@@ -1,0 +1,421 @@
+//! The codelet dispatch layer: one table of stage-codelet function
+//! pointers that every executor path routes through.
+//!
+//! The paper's 138 GFLOPS hinge on keeping butterfly data resident in
+//! the *register tier* and touching the exchange tier only at stage
+//! boundaries. On CPU the analogous lever is explicit SIMD registers:
+//! the scalar codelets in [`super::stockham`]/[`super::radix8`] are
+//! written so the autovectoriser *usually* keeps the 8-lane q-loops
+//! vectorised, but nothing guarantees it across compiler versions. The
+//! `simd` cargo feature (nightly, `std::simd`) adds explicit
+//! [`f32x8`](std::simd::f32x8) implementations of the same dataflow in
+//! [`super::simd`], and this module is where the two meet:
+//!
+//! * [`CodeletSet`] — a backend supplies monomorphised stage codelets
+//!   for every `(radix, CONJ_IN, FUSE_OUT)` combination. Two impls:
+//!   [`ScalarCodelets`] (stable, always available) and `SimdCodelets`
+//!   (behind `--features simd`).
+//! * [`CodeletTable`] — the `CodeletSet` flattened into plain function
+//!   pointers, one per `(radix, conj_in, fuse_out)`, so the Stockham
+//!   driver dispatches a stage with a single indexed load instead of
+//!   nested matches, and so plans can carry "which codelets" as data.
+//! * [`CodeletBackend`] + [`select`] — plan-build-time selection:
+//!   `APPLEFFT_CODELET=scalar|simd` overrides, otherwise the SIMD
+//!   backend wins whenever it was compiled in.
+//!
+//! Both backends execute the *identical* sequence of IEEE f32
+//! operations per output element (the SIMD q-loop is the scalar lane
+//! body with each local widened to 8 lanes, plus the same scalar tail),
+//! so results are bitwise equal across backends — which is exactly what
+//! `tests/codelet_conformance.rs` and the proptest equivalence property
+//! pin down.
+
+// Stage codelets share one wide signature by design (it *is* the
+// dispatch ABI), so the 8-argument lint is noise here.
+#![allow(clippy::too_many_arguments)]
+
+use super::twiddle::StageTable;
+
+/// Which stage-codelet implementation a plan executes with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CodeletBackend {
+    /// Split re/im scalar loops in fixed 8-lane chunks, written for the
+    /// autovectoriser (the stable fallback; always available).
+    Scalar,
+    /// Explicit `std::simd` `f32x8` codelets (`--features simd`,
+    /// nightly). Selecting this without the feature compiled in falls
+    /// back to the scalar table.
+    Simd,
+}
+
+impl CodeletBackend {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            CodeletBackend::Scalar => "scalar",
+            CodeletBackend::Simd => "simd",
+        }
+    }
+
+    /// Whether this backend's codelets were compiled into the binary.
+    pub fn is_compiled(self) -> bool {
+        match self {
+            CodeletBackend::Scalar => true,
+            CodeletBackend::Simd => cfg!(feature = "simd"),
+        }
+    }
+
+    /// The backend that will actually execute if this one is requested:
+    /// itself when compiled in, otherwise the scalar fallback. Plans
+    /// store (and telemetry reports) the *resolved* backend, so a
+    /// `Simd` request on a stable build is labelled `scalar`, never
+    /// attributed to codelets that didn't run.
+    pub fn resolve(self) -> CodeletBackend {
+        if self.is_compiled() {
+            self
+        } else {
+            CodeletBackend::Scalar
+        }
+    }
+
+    /// Every backend compiled into this binary, scalar first.
+    pub fn compiled() -> &'static [CodeletBackend] {
+        #[cfg(feature = "simd")]
+        {
+            &[CodeletBackend::Scalar, CodeletBackend::Simd]
+        }
+        #[cfg(not(feature = "simd"))]
+        {
+            &[CodeletBackend::Scalar]
+        }
+    }
+}
+
+/// The default backend for new plans: `APPLEFFT_CODELET=scalar|simd`
+/// overrides; otherwise SIMD when compiled in, else scalar. Resolved
+/// once per process (plan caches key on it).
+pub fn select() -> CodeletBackend {
+    use std::sync::OnceLock;
+    static SELECTED: OnceLock<CodeletBackend> = OnceLock::new();
+    *SELECTED.get_or_init(|| match std::env::var("APPLEFFT_CODELET").ok().as_deref() {
+        Some("scalar") => CodeletBackend::Scalar,
+        Some("simd") if CodeletBackend::Simd.is_compiled() => CodeletBackend::Simd,
+        _ => {
+            if CodeletBackend::Simd.is_compiled() {
+                CodeletBackend::Simd
+            } else {
+                CodeletBackend::Scalar
+            }
+        }
+    })
+}
+
+/// Signature every stage codelet shares: one radix-r DIF Stockham stage
+/// `(xre, xim) -> (yre, yim)` with sub-transform length `n`, run stride
+/// `s`, optional precomputed twiddle table, and the `FUSE_OUT` scale.
+pub type StageFn =
+    fn(&[f32], &[f32], &mut [f32], &mut [f32], usize, usize, Option<&StageTable>, f32);
+
+/// A backend's full set of stage codelets, monomorphised over the two
+/// fusion flags (`CONJ_IN` conjugates loads — first stage of an inverse
+/// transform; `FUSE_OUT` conjugate-scales stores — last stage).
+pub trait CodeletSet {
+    const BACKEND: CodeletBackend;
+
+    #[allow(clippy::too_many_arguments)]
+    fn radix2<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    );
+
+    #[allow(clippy::too_many_arguments)]
+    fn radix4<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    );
+
+    #[allow(clippy::too_many_arguments)]
+    fn radix8<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    );
+}
+
+/// The stable backend: the autovectoriser-friendly scalar codelets.
+pub struct ScalarCodelets;
+
+impl CodeletSet for ScalarCodelets {
+    const BACKEND: CodeletBackend = CodeletBackend::Scalar;
+
+    fn radix2<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    ) {
+        super::stockham::radix2_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
+    }
+
+    fn radix4<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    ) {
+        super::stockham::radix4_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
+    }
+
+    fn radix8<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    ) {
+        super::radix8::radix8_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
+    }
+}
+
+/// The explicit `std::simd` backend (`--features simd`, nightly).
+#[cfg(feature = "simd")]
+pub struct SimdCodelets;
+
+#[cfg(feature = "simd")]
+impl CodeletSet for SimdCodelets {
+    const BACKEND: CodeletBackend = CodeletBackend::Simd;
+
+    fn radix2<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    ) {
+        super::simd::radix2_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
+    }
+
+    fn radix4<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    ) {
+        super::simd::radix4_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
+    }
+
+    fn radix8<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    ) {
+        super::simd::radix8_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
+    }
+}
+
+/// A [`CodeletSet`] flattened into function pointers: one per
+/// `(radix, conj_in, fuse_out)`. This is what plans hold and what the
+/// Stockham driver dispatches through — picking a backend is picking a
+/// table, once, at plan-build time.
+pub struct CodeletTable {
+    backend: CodeletBackend,
+    /// Indexed `[conj_in as usize | (fuse_out as usize) << 1]`.
+    r2: [StageFn; 4],
+    r4: [StageFn; 4],
+    r8: [StageFn; 4],
+}
+
+impl CodeletTable {
+    /// Flatten a codelet set into its dispatch table.
+    pub fn of<C: CodeletSet>() -> CodeletTable {
+        CodeletTable {
+            backend: C::BACKEND,
+            r2: [
+                C::radix2::<false, false>,
+                C::radix2::<true, false>,
+                C::radix2::<false, true>,
+                C::radix2::<true, true>,
+            ],
+            r4: [
+                C::radix4::<false, false>,
+                C::radix4::<true, false>,
+                C::radix4::<false, true>,
+                C::radix4::<true, true>,
+            ],
+            r8: [
+                C::radix8::<false, false>,
+                C::radix8::<true, false>,
+                C::radix8::<false, true>,
+                C::radix8::<true, true>,
+            ],
+        }
+    }
+
+    pub fn backend(&self) -> CodeletBackend {
+        self.backend
+    }
+
+    /// The stage codelet for one `(radix, conj_in, fuse_out)` variant.
+    #[inline]
+    pub fn stage(&self, radix: usize, conj_in: bool, fuse_out: bool) -> StageFn {
+        let idx = conj_in as usize | (fuse_out as usize) << 1;
+        match radix {
+            2 => self.r2[idx],
+            4 => self.r4[idx],
+            8 => self.r8[idx],
+            other => panic!("unsupported radix {other}"),
+        }
+    }
+}
+
+/// The process-wide table for a backend. A [`CodeletBackend::Simd`]
+/// request in a binary compiled without `--features simd`
+/// [`resolve`](CodeletBackend::resolve)s to the scalar table (the
+/// documented stable fallback), so callers can name either backend
+/// unconditionally.
+pub fn table(backend: CodeletBackend) -> &'static CodeletTable {
+    use std::sync::OnceLock;
+    static SCALAR: OnceLock<CodeletTable> = OnceLock::new();
+    let scalar = || SCALAR.get_or_init(CodeletTable::of::<ScalarCodelets>);
+    match backend.resolve() {
+        CodeletBackend::Scalar => scalar(),
+        CodeletBackend::Simd => {
+            #[cfg(feature = "simd")]
+            {
+                static SIMD: OnceLock<CodeletTable> = OnceLock::new();
+                SIMD.get_or_init(CodeletTable::of::<SimdCodelets>)
+            }
+            #[cfg(not(feature = "simd"))]
+            {
+                scalar()
+            }
+        }
+    }
+}
+
+/// Shorthand for the always-available scalar table (the reference path
+/// used by oracle-style helpers like [`super::stockham::transform_line`]).
+pub fn scalar_table() -> &'static CodeletTable {
+    table(CodeletBackend::Scalar)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scalar_always_compiled_and_listed_first() {
+        assert!(CodeletBackend::Scalar.is_compiled());
+        assert_eq!(CodeletBackend::compiled()[0], CodeletBackend::Scalar);
+        assert_eq!(CodeletBackend::Scalar.tag(), "scalar");
+        assert_eq!(CodeletBackend::Simd.tag(), "simd");
+    }
+
+    #[test]
+    fn simd_compiled_iff_feature() {
+        assert_eq!(CodeletBackend::Simd.is_compiled(), cfg!(feature = "simd"));
+        assert_eq!(CodeletBackend::compiled().len(), 1 + cfg!(feature = "simd") as usize);
+    }
+
+    #[test]
+    fn table_backend_roundtrip() {
+        assert_eq!(table(CodeletBackend::Scalar).backend(), CodeletBackend::Scalar);
+        // Simd resolves to the simd table when compiled, scalar fallback
+        // otherwise.
+        let want = if cfg!(feature = "simd") {
+            CodeletBackend::Simd
+        } else {
+            CodeletBackend::Scalar
+        };
+        assert_eq!(table(CodeletBackend::Simd).backend(), want);
+    }
+
+    #[test]
+    fn select_is_a_compiled_backend() {
+        assert!(select().is_compiled());
+    }
+
+    #[test]
+    fn resolve_is_truthful() {
+        assert_eq!(CodeletBackend::Scalar.resolve(), CodeletBackend::Scalar);
+        let want = if cfg!(feature = "simd") {
+            CodeletBackend::Simd
+        } else {
+            CodeletBackend::Scalar
+        };
+        assert_eq!(CodeletBackend::Simd.resolve(), want);
+        // The table always agrees with the resolved label.
+        assert_eq!(table(CodeletBackend::Simd).backend(), CodeletBackend::Simd.resolve());
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_unknown_radix() {
+        scalar_table().stage(3, false, false);
+    }
+
+    #[test]
+    fn every_stage_variant_dispatches() {
+        // Smoke: each (radix, conj_in, fuse_out, backend) entry runs one
+        // stage of the right shape without panicking; numerics are pinned
+        // by tests/codelet_conformance.rs.
+        let mut rng = Rng::new(70);
+        for &backend in CodeletBackend::compiled() {
+            let t = table(backend);
+            for radix in [2usize, 4, 8] {
+                let (n, s) = (radix * 2, 3usize);
+                let xre = rng.signal(n * s);
+                let xim = rng.signal(n * s);
+                let mut yre = vec![0.0f32; n * s];
+                let mut yim = vec![0.0f32; n * s];
+                for conj_in in [false, true] {
+                    for fuse_out in [false, true] {
+                        let f = t.stage(radix, conj_in, fuse_out);
+                        f(&xre, &xim, &mut yre, &mut yim, n, s, None, 0.5);
+                        assert!(yre.iter().chain(yim.iter()).all(|v| v.is_finite()));
+                    }
+                }
+            }
+        }
+    }
+}

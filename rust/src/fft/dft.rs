@@ -1,8 +1,12 @@
 //! Naive O(N^2) DFT oracle, accumulated in f64.
 //!
 //! This is the ground truth everything else is checked against. It is
-//! deliberately simple and slow; tests use it up to N = 4096 directly and
-//! validate larger sizes transitively (four-step vs radix-8 Stockham).
+//! deliberately simple and slow; tests use it up to N = 4096 directly
+//! and validate larger sizes transitively (four-step vs radix-8
+//! Stockham), with one exception: the codelet conformance harness
+//! (`tests/codelet_conformance.rs`) also runs it forward-only at
+//! N = 8192/16384, single line, to mirror the paper's all-sizes vDSP
+//! validation tables.
 
 use super::Direction;
 use crate::util::complex::SplitComplex;

@@ -23,7 +23,10 @@
 //!
 //! Every layer above (plan convenience calls, the runtime's native
 //! backend, the coordinator's tile path, the benches) executes through
-//! this type; later backends (PJRT tiles, `std::simd` codelets,
+//! this type. Which register-tier implementation runs the butterflies
+//! is the bound plan's [`codelet`](super::codelet) table — scalar
+//! autovectorised loops or explicit `std::simd` — so swapping backends
+//! never touches this layer; later executor backends (PJRT tiles,
 //! half-precision) plug in underneath the same interface.
 
 use super::plan::NativePlan;
@@ -149,6 +152,12 @@ impl BatchExecutor {
 
     pub fn plan(&self) -> &NativePlan {
         &self.plan
+    }
+
+    /// Which stage-codelet backend this executor's plan dispatches
+    /// through (surfaced in bench tables and metrics).
+    pub fn codelet(&self) -> super::codelet::CodeletBackend {
+        self.plan.codelet
     }
 
     pub fn threads(&self) -> usize {

@@ -18,7 +18,8 @@
 //! column loads and the `1/N` conjugate-scale into step 4's transpose
 //! stores — the same first/last-pass fusion the Stockham driver does.
 
-use super::stockham::{radix_schedule, transform_line};
+use super::codelet::{self, CodeletTable};
+use super::stockham::{radix_schedule, transform_line, transform_line_with};
 use super::twiddle::{fourstep_twiddles, PlanTables};
 use crate::util::complex::{SplitComplex, C32};
 
@@ -134,6 +135,7 @@ pub fn fourstep_line(
     let mut scratch = FourStepScratch::new(n1, n2);
     let mut out = x.clone();
     fourstep_line_fused(
+        codelet::scalar_table(),
         &mut out.re,
         &mut out.im,
         n1,
@@ -153,7 +155,9 @@ pub fn fourstep_line(
 /// Allocation-free four-step on one line, in place. `(re, im)` hold the
 /// input on entry and the transform on exit; `(yre, yim)` is the
 /// `(n1, n2)` staging matrix (>= `n1*n2` long) and `(sre, sim)` the
-/// length-`n2` (or longer) Stockham scratch.
+/// length-`n2` (or longer) Stockham scratch. The step-3 row FFTs
+/// dispatch through `codelets`, so the four-step path runs whichever
+/// backend the owning plan selected.
 ///
 /// When `inverse` is set, the conjugation of `ifft(x) =
 /// conj(fft(conj(x)))/N` is fused into step 1's column loads and the
@@ -163,6 +167,7 @@ pub fn fourstep_line(
 /// twiddles (the conjugation identity takes care of the direction).
 #[allow(clippy::too_many_arguments)]
 pub fn fourstep_line_fused(
+    codelets: &CodeletTable,
     re: &mut [f32],
     im: &mut [f32],
     n1: usize,
@@ -226,10 +231,20 @@ pub fn fourstep_line_fused(
         other => panic!("four-step n1={other} not supported (paper uses 2 and 4)"),
     }
 
-    // Step 3: length-n2 FFT along each of the n1 rows.
+    // Step 3: length-n2 FFT along each of the n1 rows, on the selected
+    // codelet backend.
     for k1 in 0..n1 {
         let row = k1 * n2;
-        transform_line(&mut yre[row..row + n2], &mut yim[row..row + n2], sre, sim, radices, tables);
+        transform_line_with(
+            codelets,
+            &mut yre[row..row + n2],
+            &mut yim[row..row + n2],
+            sre,
+            sim,
+            radices,
+            tables,
+            false,
+        );
     }
 
     // Step 4: transpose (n1, n2) back into (re, im) at index k1 + n1*k2,
@@ -337,6 +352,7 @@ mod tests {
         let mut y = fourstep_line(&x, n1, n2, &radices, None, &tw);
         let mut scratch = FourStepScratch::new(n1, n2);
         fourstep_line_fused(
+            codelet::scalar_table(),
             &mut y.re,
             &mut y.im,
             n1,

@@ -14,11 +14,22 @@
 //! The execution model mirrors the paper's register/threadgroup split:
 //!
 //! * **Register tier** — the radix-2/4/8 stage codelets
-//!   ([`stockham`], [`radix8`]): butterflies run as straight-line f32
-//!   arithmetic on values loaded from split re/im q-runs, in fixed
-//!   8-lane chunks the autovectoriser maps onto SIMD, with the inverse
-//!   direction's conjugate and `1/N` scale fused into the first/last
-//!   stage instead of separate whole-buffer passes.
+//!   ([`stockham`], [`radix8`], and with `--features simd` the explicit
+//!   `std::simd` versions in the `simd` module): butterflies run as
+//!   straight-line f32 arithmetic on values loaded from split re/im
+//!   q-runs, in fixed 8-lane chunks, with the inverse direction's
+//!   conjugate and `1/N` scale fused into the first/last stage instead
+//!   of separate whole-buffer passes.
+//! * **Codelet dispatch** — [`codelet`]: the register tier is reached
+//!   only through a [`codelet::CodeletTable`] of stage function
+//!   pointers, selected at plan-build time. The paper keeps butterfly
+//!   data in GPU registers and touches threadgroup memory only at
+//!   stage boundaries; the CPU analog of "registers" is SIMD lanes,
+//!   and the table is where we choose between *hoping* the
+//!   autovectoriser keeps the scalar 8-lane loops in vector registers
+//!   (the stable `Scalar` backend) and *guaranteeing* it with
+//!   `std::simd` `f32x8` codelets (the nightly `Simd` backend;
+//!   `APPLEFFT_CODELET=scalar|simd` overrides the default).
 //! * **Exchange tier** — pooled [`exec::Workspace`]s: the Stockham
 //!   ping-pong buffer and four-step staging matrix are allocated once
 //!   per worker and reused, so steady-state batch execution performs
@@ -28,12 +39,20 @@
 //!   analog of the paper's Fig. 1 "throughput needs batch >= 64 in
 //!   flight" finding.
 //!
+//! Both codelet backends execute the identical IEEE op sequence per
+//! element, so their outputs are bitwise equal — pinned down by
+//! `tests/codelet_conformance.rs` (stage-by-stage and whole-transform
+//! against the [`dft`] oracle, with per-size max-ulp reporting that
+//! mirrors the paper's vDSP validation tables) and by the proptest
+//! equivalence property.
+//!
 //! Algorithms: naive O(N^2) DFT oracle ([`dft`]), radix-2/radix-4
 //! Stockham autosort ([`stockham`]), the paper's radix-8 split-radix DIT
 //! butterfly ([`radix8`]), and the four-step decomposition for N > 4096
 //! ([`fourstep`]). [`plan`] exposes the planned, batched public API and
 //! caches the pooled executors every layer above shares.
 
+pub mod codelet;
 pub mod convolve;
 pub mod dft;
 pub mod exec;
@@ -41,6 +60,8 @@ pub mod fourstep;
 pub mod plan;
 pub mod radix8;
 pub mod real;
+#[cfg(feature = "simd")]
+pub mod simd;
 pub mod stockham;
 pub mod twiddle;
 

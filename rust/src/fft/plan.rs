@@ -2,10 +2,12 @@
 //!
 //! Mirrors vDSP's setup/execute split (`vDSP_create_fftsetup` /
 //! `vDSP_fft_zop`): a [`NativePlan`] precomputes the radix schedule and
-//! twiddle tables once and knows how to run lines through the stage
-//! codelets; [`NativePlanner`] caches plans *and* their pooled
-//! [`BatchExecutor`]s by size and variant, so every caller shares the
-//! same workspace pools.
+//! twiddle tables once, fixes which stage-codelet backend it executes
+//! with (scalar vs `std::simd`; see [`crate::fft::codelet`]), and knows
+//! how to run lines through that codelet table; [`NativePlanner`]
+//! caches plans *and* their pooled [`BatchExecutor`]s by
+//! (size, variant, codelet backend), so every caller shares the same
+//! workspace pools.
 //!
 //! The inverse direction is fully fused: `ifft(x) = conj(fft(conj(x)))/N`
 //! is realised by conjugating in the first stage's loads and
@@ -13,9 +15,10 @@
 //! [`super::stockham::transform_line_fused`]), not by separate
 //! whole-buffer passes.
 
+use super::codelet::{self, CodeletBackend};
 use super::exec::{default_threads, BatchExecutor, Workspace};
 use super::fourstep;
-use super::stockham::{radix_schedule, transform_line_fused};
+use super::stockham::{radix_schedule, transform_line_with};
 use super::twiddle::{fourstep_twiddles, PlanTables};
 use super::Direction;
 use crate::util::complex::{SplitComplex, C32};
@@ -69,6 +72,10 @@ pub struct NativePlan {
     pub n: usize,
     pub variant: Variant,
     decomp: Decomposition,
+    /// Which stage-codelet backend `run_lines` dispatches through
+    /// (scalar autovectorised loops vs explicit `std::simd`), fixed at
+    /// plan-build time. See [`crate::fft::codelet`].
+    pub codelet: CodeletBackend,
     /// If false, skip precomputed tables and use the sincos chain
     /// (ablation knob; see benches/native_fft.rs).
     pub use_tables: bool,
@@ -95,12 +102,23 @@ impl NativePlan {
                 tw_fwd: fourstep_twiddles(n1, n2, false),
             }
         };
-        Ok(NativePlan { n, variant, decomp, use_tables: true })
+        Ok(NativePlan { n, variant, decomp, codelet: codelet::select(), use_tables: true })
     }
 
     /// Disable twiddle tables (use the on-the-fly sincos chain).
     pub fn without_tables(mut self) -> Self {
         self.use_tables = false;
+        self
+    }
+
+    /// Pin the stage-codelet backend (default: [`codelet::select`]'s
+    /// process-wide choice). The request is
+    /// [`resolve`](CodeletBackend::resolve)d first, so a `Simd` request
+    /// in a binary built without `--features simd` both executes on
+    /// *and is labelled as* the scalar fallback — `self.codelet` never
+    /// claims codelets that didn't run.
+    pub fn with_codelet(mut self, backend: CodeletBackend) -> Self {
+        self.codelet = backend.resolve();
         self
     }
 
@@ -134,13 +152,15 @@ impl NativePlan {
         debug_assert_eq!(re.len(), n * lines);
         debug_assert_eq!(im.len(), n * lines);
         let inverse = dir == Direction::Inverse;
+        let codelets = codelet::table(self.codelet);
         match &self.decomp {
             Decomposition::Single { radices, tables } => {
                 ws.ensure(n, 0);
                 let tables = self.use_tables.then_some(tables);
                 for b in 0..lines {
                     let at = b * n;
-                    transform_line_fused(
+                    transform_line_with(
+                        codelets,
                         &mut re[at..at + n],
                         &mut im[at..at + n],
                         &mut ws.sre,
@@ -157,6 +177,7 @@ impl NativePlan {
                 for b in 0..lines {
                     let at = b * n;
                     fourstep::fourstep_line_fused(
+                        codelets,
                         &mut re[at..at + n],
                         &mut im[at..at + n],
                         *n1,
@@ -199,11 +220,14 @@ impl NativePlan {
     }
 }
 
-/// Plan + executor cache keyed by (size, variant), shared across threads.
+/// Plan + executor cache keyed by (size, variant, codelet backend),
+/// shared across threads. The backend is part of the key so pinned
+/// scalar/simd plans (tests, benches, ablation) never alias the
+/// default-selected executors or their workspace pools.
 #[derive(Default)]
 pub struct NativePlanner {
-    plans: Mutex<HashMap<(usize, Variant), Arc<NativePlan>>>,
-    executors: Mutex<HashMap<(usize, Variant), Arc<BatchExecutor>>>,
+    plans: Mutex<HashMap<(usize, Variant, CodeletBackend), Arc<NativePlan>>>,
+    executors: Mutex<HashMap<(usize, Variant, CodeletBackend), Arc<BatchExecutor>>>,
 }
 
 impl NativePlanner {
@@ -211,30 +235,59 @@ impl NativePlanner {
         Self::default()
     }
 
+    /// The plan for `(n, variant)` on the process-selected codelet
+    /// backend ([`codelet::select`]).
     pub fn plan(&self, n: usize, variant: Variant) -> Result<Arc<NativePlan>> {
+        self.plan_with(n, variant, codelet::select())
+    }
+
+    /// The plan for `(n, variant)` pinned to a codelet backend. The
+    /// backend is [`resolve`](CodeletBackend::resolve)d before keying
+    /// the cache, so an uncompiled `Simd` request shares the scalar
+    /// entry instead of duplicating it under an untruthful label.
+    pub fn plan_with(
+        &self,
+        n: usize,
+        variant: Variant,
+        backend: CodeletBackend,
+    ) -> Result<Arc<NativePlan>> {
+        let backend = backend.resolve();
         let mut cache = self.plans.lock().unwrap();
-        if let Some(p) = cache.get(&(n, variant)) {
+        if let Some(p) = cache.get(&(n, variant, backend)) {
             return Ok(p.clone());
         }
-        let plan = Arc::new(NativePlan::new(n, variant)?);
-        cache.insert((n, variant), plan.clone());
+        let plan = Arc::new(NativePlan::new(n, variant)?.with_codelet(backend));
+        cache.insert((n, variant, backend), plan.clone());
         Ok(plan)
     }
 
-    /// The pooled batch executor for (n, variant); created on first use
-    /// and shared by every subsequent caller, so workspace pools warm up
-    /// once per shape.
+    /// The pooled batch executor for (n, variant) on the selected
+    /// codelet backend; created on first use and shared by every
+    /// subsequent caller, so workspace pools warm up once per shape.
     pub fn executor(&self, n: usize, variant: Variant) -> Result<Arc<BatchExecutor>> {
-        // Hold the lock across lookup + build: `plan()` uses a different
-        // mutex (no deadlock), and this keeps executor construction
-        // single-flight so racing first users share one pool.
+        self.executor_with(n, variant, codelet::select())
+    }
+
+    /// The pooled batch executor for (n, variant) pinned to a codelet
+    /// backend (bench/test knob; serving uses [`Self::executor`]).
+    pub fn executor_with(
+        &self,
+        n: usize,
+        variant: Variant,
+        backend: CodeletBackend,
+    ) -> Result<Arc<BatchExecutor>> {
+        let backend = backend.resolve();
+        // Hold the lock across lookup + build: `plan_with()` uses a
+        // different mutex (no deadlock), and this keeps executor
+        // construction single-flight so racing first users share one
+        // pool.
         let mut cache = self.executors.lock().unwrap();
-        if let Some(e) = cache.get(&(n, variant)) {
+        if let Some(e) = cache.get(&(n, variant, backend)) {
             return Ok(e.clone());
         }
-        let plan = self.plan(n, variant)?;
+        let plan = self.plan_with(n, variant, backend)?;
         let exec = Arc::new(BatchExecutor::with_threads(plan, default_threads()));
-        cache.insert((n, variant), exec.clone());
+        cache.insert((n, variant, backend), exec.clone());
         Ok(exec)
     }
 
@@ -356,6 +409,58 @@ mod tests {
         let ea = planner.executor(1024, Variant::Radix8).unwrap();
         let eb = planner.executor(1024, Variant::Radix8).unwrap();
         assert!(Arc::ptr_eq(&ea, &eb));
+    }
+
+    #[test]
+    fn planner_keys_on_resolved_codelet_backend() {
+        let planner = NativePlanner::new();
+        let scalar = planner.plan_with(1024, Variant::Radix8, CodeletBackend::Scalar).unwrap();
+        let simd = planner.plan_with(1024, Variant::Radix8, CodeletBackend::Simd).unwrap();
+        assert_eq!(scalar.codelet, CodeletBackend::Scalar);
+        // The plan's label is always the backend that actually runs.
+        assert_eq!(simd.codelet, CodeletBackend::Simd.resolve());
+        if CodeletBackend::Simd.is_compiled() {
+            assert!(!Arc::ptr_eq(&scalar, &simd), "distinct backends must not alias");
+            assert_eq!(planner.cached_plans(), 2);
+        } else {
+            // Uncompiled simd resolves to scalar: one shared, truthfully
+            // labelled cache entry.
+            assert!(Arc::ptr_eq(&scalar, &simd));
+            assert_eq!(planner.cached_plans(), 1);
+        }
+        // The default entry points resolve to the process selection.
+        assert_eq!(planner.plan(1024, Variant::Radix8).unwrap().codelet, codelet::select());
+        assert_eq!(planner.executor(1024, Variant::Radix8).unwrap().codelet(), codelet::select());
+    }
+
+    #[test]
+    fn codelet_backends_bitwise_agree() {
+        // Scalar and simd codelets run the identical IEEE op sequence
+        // per element, so plans differing only in backend are bitwise
+        // equal (trivially so when `simd` is not compiled in — the simd
+        // plan then runs the scalar fallback table).
+        let mut rng = Rng::new(35);
+        let planner = NativePlanner::new();
+        for &n in &[512usize, 4096, 8192] {
+            let batch = 2;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            for variant in [Variant::Radix4, Variant::Radix8] {
+                for dir in [Direction::Forward, Direction::Inverse] {
+                    let a = planner
+                        .plan_with(n, variant, CodeletBackend::Scalar)
+                        .unwrap()
+                        .execute_batch(&x, batch, dir)
+                        .unwrap();
+                    let b = planner
+                        .plan_with(n, variant, CodeletBackend::Simd)
+                        .unwrap()
+                        .execute_batch(&x, batch, dir)
+                        .unwrap();
+                    assert_eq!(a.re, b.re, "re: n={n} {variant:?} {dir:?}");
+                    assert_eq!(a.im, b.im, "im: n={n} {variant:?} {dir:?}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -72,9 +72,10 @@ pub fn butterfly8(x: [C32; 8]) -> [C32; 8] {
 }
 
 /// The same split-radix dataflow on split re/im scalars: one lane of the
-/// stage codelet. Returns the twisted outputs `(re, im)` per bin.
+/// stage codelet. Returns the twisted outputs `(re, im)` per bin. Shared
+/// with the `std::simd` backend, whose scalar tail runs this verbatim.
 #[inline(always)]
-fn butterfly8_lane<const FUSE_OUT: bool>(
+pub(crate) fn butterfly8_lane<const FUSE_OUT: bool>(
     xr: [f32; 8],
     xi: [f32; 8],
     w: &[C32; 8],
@@ -195,8 +196,9 @@ pub fn radix8_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
     }
 }
 
-/// Split a `8*s`-long buffer into eight `s`-long mutable runs.
-fn split8_mut(buf: &mut [f32], s: usize) -> [&mut [f32]; 8] {
+/// Split a `8*s`-long buffer into eight `s`-long mutable runs. Shared
+/// with the `std::simd` backend's radix-8 stage.
+pub(crate) fn split8_mut(buf: &mut [f32], s: usize) -> [&mut [f32]; 8] {
     let (a0, r) = buf.split_at_mut(s);
     let (a1, r) = r.split_at_mut(s);
     let (a2, r) = r.split_at_mut(s);

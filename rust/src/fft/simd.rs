@@ -1,0 +1,355 @@
+//! Explicit `std::simd` stage codelets (`--features simd`, nightly).
+//!
+//! These are the CPU rendition of the paper's register tier done with
+//! *guaranteed* vector registers instead of hoping the autovectoriser
+//! keeps the scalar 8-lane q-loops in [`super::stockham`] /
+//! [`super::radix8`] vectorised: each codelet widens the scalar lane
+//! body to one [`f32x8`] vector per local, so a whole
+//! [`LANES`](super::stockham::LANES)-wide chunk of the q-run moves
+//! through the butterfly as eight-lane register values, with the same
+//! split re/im loads, the same `CONJ_IN`/`FUSE_OUT` fusion, and the
+//! same contiguous stores.
+//!
+//! **Bitwise contract:** every arithmetic step here is the scalar
+//! codelet's step applied lanewise — same operations, same order, same
+//! IEEE f32 rounding (`std::simd` lane ops round exactly like their
+//! scalar counterparts, and Rust never contracts `a*b + c` into an
+//! fma). The scalar tails (`q_tail..s`) *call the scalar backend's
+//! shared lane functions* (`radix2_lane`/`radix4_lane`/
+//! `butterfly8_lane`) rather than copying them, so an edit to the
+//! scalar math cannot drift away silently.
+//! `tests/codelet_conformance.rs` and the proptest equivalence
+//! property assert bitwise equality against the scalar backend, so any
+//! drift in the vector bodies is a test failure, not a tolerance.
+
+use super::stockham::{FRAC_1_SQRT_2, LANES};
+use super::twiddle::{chain, StageTable};
+use crate::util::complex::C32;
+use std::simd::f32x8;
+
+// The q-loops chunk by the scalar path's LANES but load/store f32x8
+// vectors; retuning one without the other would silently corrupt
+// outputs, so tie them at compile time.
+const _: () = assert!(LANES == f32x8::LEN);
+
+/// Load 8 lanes from `src[q..]`, conjugating (negating im) on load when
+/// `CONJ` is set — the fused first-stage inverse conjugation.
+#[inline(always)]
+fn load<const CONJ: bool>(src: &[f32], q: usize) -> f32x8 {
+    let v = f32x8::from_slice(&src[q..]);
+    if CONJ {
+        -v
+    } else {
+        v
+    }
+}
+
+/// One radix-2 DIF Stockham stage on explicit `f32x8` registers; the
+/// vector twin of [`super::stockham::radix2_stage`].
+#[allow(clippy::too_many_arguments)]
+pub fn radix2_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    scale: f32,
+) {
+    let m = n / 2;
+    let scale_v = f32x8::splat(scale);
+    for p in 0..m {
+        let w = match table {
+            Some(t) => t.get(p, 1),
+            None => chain::<2>(p, n)[1],
+        };
+        let (wre, wim) = (f32x8::splat(w.re), f32x8::splat(w.im));
+        let (ar, ai) = (&xre[s * p..s * p + s], &xim[s * p..s * p + s]);
+        let (br, bi) = (&xre[s * (p + m)..s * (p + m) + s], &xim[s * (p + m)..s * (p + m) + s]);
+        let (y0r, y1r) = yre[2 * s * p..2 * s * p + 2 * s].split_at_mut(s);
+        let (y0i, y1i) = yim[2 * s * p..2 * s * p + 2 * s].split_at_mut(s);
+
+        let mut q = 0;
+        while q + LANES <= s {
+            let are = f32x8::from_slice(&ar[q..]);
+            let aim = load::<CONJ_IN>(ai, q);
+            let bre = f32x8::from_slice(&br[q..]);
+            let bim = load::<CONJ_IN>(bi, q);
+            let sr = are + bre;
+            let si = aim + bim;
+            let dr = are - bre;
+            let di = aim - bim;
+            let tr = dr * wre - di * wim;
+            let ti = dr * wim + di * wre;
+            if FUSE_OUT {
+                (sr * scale_v).copy_to_slice(&mut y0r[q..q + LANES]);
+                (-(si * scale_v)).copy_to_slice(&mut y0i[q..q + LANES]);
+                (tr * scale_v).copy_to_slice(&mut y1r[q..q + LANES]);
+                (-(ti * scale_v)).copy_to_slice(&mut y1i[q..q + LANES]);
+            } else {
+                sr.copy_to_slice(&mut y0r[q..q + LANES]);
+                si.copy_to_slice(&mut y0i[q..q + LANES]);
+                tr.copy_to_slice(&mut y1r[q..q + LANES]);
+                ti.copy_to_slice(&mut y1i[q..q + LANES]);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            // Scalar tail: the shared scalar lane from stockham.rs.
+            let xr = [ar[i], br[i]];
+            let xi = if CONJ_IN { [-ai[i], -bi[i]] } else { [ai[i], bi[i]] };
+            let (or, oi) = super::stockham::radix2_lane::<FUSE_OUT>(xr, xi, w, scale);
+            y0r[i] = or[0];
+            y0i[i] = oi[0];
+            y1r[i] = or[1];
+            y1i[i] = oi[1];
+        }
+    }
+}
+
+/// One radix-4 DIF Stockham stage on explicit `f32x8` registers; the
+/// vector twin of [`super::stockham::radix4_stage`].
+#[allow(clippy::too_many_arguments)]
+pub fn radix4_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    scale: f32,
+) {
+    let m = n / 4;
+    let scale_v = f32x8::splat(scale);
+    for p in 0..m {
+        let [_, w1, w2, w3] = match table {
+            Some(t) => [C32::ONE, t.get(p, 1), t.get(p, 2), t.get(p, 3)],
+            None => chain::<4>(p, n),
+        };
+        let base = s * p;
+        let step = s * m;
+        let (ar, ai) = (&xre[base..base + s], &xim[base..base + s]);
+        let b0 = base + step;
+        let (br, bi) = (&xre[b0..b0 + s], &xim[b0..b0 + s]);
+        let c0 = base + 2 * step;
+        let (cr, ci) = (&xre[c0..c0 + s], &xim[c0..c0 + s]);
+        let d0 = base + 3 * step;
+        let (dr, di) = (&xre[d0..d0 + s], &xim[d0..d0 + s]);
+        let out = &mut yre[4 * base..4 * base + 4 * s];
+        let (y0r, rest) = out.split_at_mut(s);
+        let (y1r, rest) = rest.split_at_mut(s);
+        let (y2r, y3r) = rest.split_at_mut(s);
+        let out = &mut yim[4 * base..4 * base + 4 * s];
+        let (y0i, rest) = out.split_at_mut(s);
+        let (y1i, rest) = rest.split_at_mut(s);
+        let (y2i, y3i) = rest.split_at_mut(s);
+
+        let (w1re, w1im) = (f32x8::splat(w1.re), f32x8::splat(w1.im));
+        let (w2re, w2im) = (f32x8::splat(w2.re), f32x8::splat(w2.im));
+        let (w3re, w3im) = (f32x8::splat(w3.re), f32x8::splat(w3.im));
+
+        let mut q = 0;
+        while q + LANES <= s {
+            let x0r = f32x8::from_slice(&ar[q..]);
+            let x0i = load::<CONJ_IN>(ai, q);
+            let x1r = f32x8::from_slice(&br[q..]);
+            let x1i = load::<CONJ_IN>(bi, q);
+            let x2r = f32x8::from_slice(&cr[q..]);
+            let x2i = load::<CONJ_IN>(ci, q);
+            let x3r = f32x8::from_slice(&dr[q..]);
+            let x3i = load::<CONJ_IN>(di, q);
+            let apc_r = x0r + x2r;
+            let apc_i = x0i + x2i;
+            let amc_r = x0r - x2r;
+            let amc_i = x0i - x2i;
+            let bpd_r = x1r + x3r;
+            let bpd_i = x1i + x3i;
+            let bmd_r = x1r - x3r;
+            let bmd_i = x1i - x3i;
+            let o0r = apc_r + bpd_r;
+            let o0i = apc_i + bpd_i;
+            let t1r = amc_r + bmd_i;
+            let t1i = amc_i - bmd_r;
+            let o1r = t1r * w1re - t1i * w1im;
+            let o1i = t1r * w1im + t1i * w1re;
+            let t2r = apc_r - bpd_r;
+            let t2i = apc_i - bpd_i;
+            let o2r = t2r * w2re - t2i * w2im;
+            let o2i = t2r * w2im + t2i * w2re;
+            let t3r = amc_r - bmd_i;
+            let t3i = amc_i + bmd_r;
+            let o3r = t3r * w3re - t3i * w3im;
+            let o3i = t3r * w3im + t3i * w3re;
+            if FUSE_OUT {
+                (o0r * scale_v).copy_to_slice(&mut y0r[q..q + LANES]);
+                (-(o0i * scale_v)).copy_to_slice(&mut y0i[q..q + LANES]);
+                (o1r * scale_v).copy_to_slice(&mut y1r[q..q + LANES]);
+                (-(o1i * scale_v)).copy_to_slice(&mut y1i[q..q + LANES]);
+                (o2r * scale_v).copy_to_slice(&mut y2r[q..q + LANES]);
+                (-(o2i * scale_v)).copy_to_slice(&mut y2i[q..q + LANES]);
+                (o3r * scale_v).copy_to_slice(&mut y3r[q..q + LANES]);
+                (-(o3i * scale_v)).copy_to_slice(&mut y3i[q..q + LANES]);
+            } else {
+                o0r.copy_to_slice(&mut y0r[q..q + LANES]);
+                o0i.copy_to_slice(&mut y0i[q..q + LANES]);
+                o1r.copy_to_slice(&mut y1r[q..q + LANES]);
+                o1i.copy_to_slice(&mut y1i[q..q + LANES]);
+                o2r.copy_to_slice(&mut y2r[q..q + LANES]);
+                o2i.copy_to_slice(&mut y2i[q..q + LANES]);
+                o3r.copy_to_slice(&mut y3r[q..q + LANES]);
+                o3i.copy_to_slice(&mut y3i[q..q + LANES]);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            // Scalar tail: the shared scalar lane from stockham.rs.
+            let xr = [ar[i], br[i], cr[i], dr[i]];
+            let xi = if CONJ_IN {
+                [-ai[i], -bi[i], -ci[i], -di[i]]
+            } else {
+                [ai[i], bi[i], ci[i], di[i]]
+            };
+            let (or, oi) =
+                super::stockham::radix4_lane::<FUSE_OUT>(xr, xi, w1, w2, w3, scale);
+            y0r[i] = or[0];
+            y0i[i] = oi[0];
+            y1r[i] = or[1];
+            y1i[i] = oi[1];
+            y2r[i] = or[2];
+            y2i[i] = oi[2];
+            y3r[i] = or[3];
+            y3i[i] = oi[3];
+        }
+    }
+}
+
+/// The split-radix DFT8 butterfly on eight-lane registers: the vector
+/// twin of `radix8::butterfly8_lane`, returning the `w^{pk}`-twisted
+/// outputs per bin.
+#[inline(always)]
+fn butterfly8_vec<const FUSE_OUT: bool>(
+    xr: [f32x8; 8],
+    xi: [f32x8; 8],
+    w: &[C32; 8],
+    scale_v: f32x8,
+) -> ([f32x8; 8], [f32x8; 8]) {
+    let frac = f32x8::splat(FRAC_1_SQRT_2);
+    // Radix-2 split.
+    let (e0r, e0i) = (xr[0] + xr[4], xi[0] + xi[4]);
+    let (e1r, e1i) = (xr[1] + xr[5], xi[1] + xi[5]);
+    let (e2r, e2i) = (xr[2] + xr[6], xi[2] + xi[6]);
+    let (e3r, e3i) = (xr[3] + xr[7], xi[3] + xi[7]);
+    let (o0r, o0i) = (xr[0] - xr[4], xi[0] - xi[4]);
+    let (o1r, o1i) = (xr[1] - xr[5], xi[1] - xi[5]);
+    let (o2r, o2i) = (xr[2] - xr[6], xi[2] - xi[6]);
+    let (o3r, o3i) = (xr[3] - xr[7], xi[3] - xi[7]);
+
+    // W8 twists on the difference branch.
+    let (t1r, t1i) = ((o1r + o1i) * frac, (o1i - o1r) * frac);
+    let (t2r, t2i) = (o2i, -o2r);
+    let (t3r, t3i) = ((o3i - o3r) * frac, (-(o3r + o3i)) * frac);
+
+    // DFT4 over the even branch -> bins 0, 2, 4, 6.
+    let (apc_r, apc_i) = (e0r + e2r, e0i + e2i);
+    let (amc_r, amc_i) = (e0r - e2r, e0i - e2i);
+    let (bpd_r, bpd_i) = (e1r + e3r, e1i + e3i);
+    let (bmd_r, bmd_i) = (e1r - e3r, e1i - e3i);
+    let (b0r, b0i) = (apc_r + bpd_r, apc_i + bpd_i);
+    let (b2r, b2i) = (amc_r + bmd_i, amc_i - bmd_r);
+    let (b4r, b4i) = (apc_r - bpd_r, apc_i - bpd_i);
+    let (b6r, b6i) = (amc_r - bmd_i, amc_i + bmd_r);
+
+    // DFT4 over the twisted odd branch -> bins 1, 3, 5, 7.
+    let (apc_r, apc_i) = (o0r + t2r, o0i + t2i);
+    let (amc_r, amc_i) = (o0r - t2r, o0i - t2i);
+    let (bpd_r, bpd_i) = (t1r + t3r, t1i + t3i);
+    let (bmd_r, bmd_i) = (t1r - t3r, t1i - t3i);
+    let (b1r, b1i) = (apc_r + bpd_r, apc_i + bpd_i);
+    let (b3r, b3i) = (amc_r + bmd_i, amc_i - bmd_r);
+    let (b5r, b5i) = (apc_r - bpd_r, apc_i - bpd_i);
+    let (b7r, b7i) = (amc_r - bmd_i, amc_i + bmd_r);
+
+    let br = [b0r, b1r, b2r, b3r, b4r, b5r, b6r, b7r];
+    let bi = [b0i, b1i, b2i, b3i, b4i, b5i, b6i, b7i];
+
+    // Twist by w^{pk}, optionally fusing the inverse conjugate + scale.
+    let mut or = [f32x8::splat(0.0); 8];
+    let mut oi = [f32x8::splat(0.0); 8];
+    for k in 0..8 {
+        let wre = f32x8::splat(w[k].re);
+        let wim = f32x8::splat(w[k].im);
+        let tr = br[k] * wre - bi[k] * wim;
+        let ti = br[k] * wim + bi[k] * wre;
+        if FUSE_OUT {
+            or[k] = tr * scale_v;
+            oi[k] = -(ti * scale_v);
+        } else {
+            or[k] = tr;
+            oi[k] = ti;
+        }
+    }
+    (or, oi)
+}
+
+/// One radix-8 DIF Stockham stage on explicit `f32x8` registers; the
+/// vector twin of [`super::radix8::radix8_stage`].
+#[allow(clippy::too_many_arguments)]
+pub fn radix8_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    scale: f32,
+) {
+    let m = n / 8;
+    let scale_v = f32x8::splat(scale);
+    for p in 0..m {
+        let w: [C32; 8] = match table {
+            Some(t) => t.row(p).try_into().expect("radix-8 table row"),
+            None => chain::<8>(p, n),
+        };
+        let base_in = s * p;
+        let xin_re: [&[f32]; 8] = core::array::from_fn(|j| {
+            let at = base_in + j * s * m;
+            &xre[at..at + s]
+        });
+        let xin_im: [&[f32]; 8] = core::array::from_fn(|j| {
+            let at = base_in + j * s * m;
+            &xim[at..at + s]
+        });
+        let base_out = 8 * s * p;
+        let mut yout_re = super::radix8::split8_mut(&mut yre[base_out..base_out + 8 * s], s);
+        let mut yout_im = super::radix8::split8_mut(&mut yim[base_out..base_out + 8 * s], s);
+
+        let mut q = 0;
+        while q + LANES <= s {
+            let xr: [f32x8; 8] = core::array::from_fn(|j| f32x8::from_slice(&xin_re[j][q..]));
+            let xi: [f32x8; 8] = core::array::from_fn(|j| load::<CONJ_IN>(xin_im[j], q));
+            let (or, oi) = butterfly8_vec::<FUSE_OUT>(xr, xi, &w, scale_v);
+            for k in 0..8 {
+                or[k].copy_to_slice(&mut yout_re[k][q..q + LANES]);
+                oi[k].copy_to_slice(&mut yout_im[k][q..q + LANES]);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            // Scalar tail: the shared scalar lane body from radix8.rs.
+            let xr: [f32; 8] = core::array::from_fn(|j| xin_re[j][i]);
+            let xi: [f32; 8] = if CONJ_IN {
+                core::array::from_fn(|j| -xin_im[j][i])
+            } else {
+                core::array::from_fn(|j| xin_im[j][i])
+            };
+            let (or, oi) = super::radix8::butterfly8_lane::<FUSE_OUT>(xr, xi, &w, scale);
+            for k in 0..8 {
+                yout_re[k][i] = or[k];
+                yout_im[k][i] = oi[k];
+            }
+        }
+    }
+}

@@ -25,6 +25,7 @@
 //! `s = 1`; each radix-r stage maps `(n, s) -> (n/r, s*r)`, keeping
 //! `n * s = N`.
 
+use super::codelet::{self, CodeletTable};
 use super::twiddle::{chain, PlanTables, StageTable};
 use crate::util::complex::C32;
 
@@ -39,6 +40,28 @@ pub const LANES: usize = 8;
 #[inline(always)]
 fn run_at<'a>(re: &'a [f32], im: &'a [f32], at: usize, s: usize) -> (&'a [f32], &'a [f32]) {
     (&re[at..at + s], &im[at..at + s])
+}
+
+/// One scalar lane of the radix-2 butterfly on split re/im values
+/// (inputs already `CONJ_IN`-conjugated by the caller, mirroring
+/// [`super::radix8::butterfly8_lane`]). Shared verbatim by the scalar
+/// stage codelet and the `std::simd` backend's scalar tail, so the two
+/// backends cannot drift apart.
+#[inline(always)]
+pub(crate) fn radix2_lane<const FUSE_OUT: bool>(
+    xr: [f32; 2],
+    xi: [f32; 2],
+    w: C32,
+    scale: f32,
+) -> ([f32; 2], [f32; 2]) {
+    let (sr, si) = (xr[0] + xr[1], xi[0] + xi[1]);
+    let (dr, di) = (xr[0] - xr[1], xi[0] - xi[1]);
+    let (tr, ti) = (dr * w.re - di * w.im, dr * w.im + di * w.re);
+    if FUSE_OUT {
+        ([sr * scale, tr * scale], [-(si * scale), -(ti * scale)])
+    } else {
+        ([sr, tr], [si, ti])
+    }
 }
 
 /// One radix-2 DIF Stockham stage: `y[q + s(2p+k)] = DFT2(x)_k * w^{pk}`.
@@ -65,22 +88,13 @@ pub fn radix2_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
         let (y0i, y1i) = yim[2 * s * p..2 * s * p + 2 * s].split_at_mut(s);
 
         let bf = |i: usize, y0r: &mut [f32], y0i: &mut [f32], y1r: &mut [f32], y1i: &mut [f32]| {
-            let (are, aim) = (ar[i], if CONJ_IN { -ai[i] } else { ai[i] });
-            let (bre, bim) = (br[i], if CONJ_IN { -bi[i] } else { bi[i] });
-            let (sr, si) = (are + bre, aim + bim);
-            let (dr, di) = (are - bre, aim - bim);
-            let (tr, ti) = (dr * w.re - di * w.im, dr * w.im + di * w.re);
-            if FUSE_OUT {
-                y0r[i] = sr * scale;
-                y0i[i] = -(si * scale);
-                y1r[i] = tr * scale;
-                y1i[i] = -(ti * scale);
-            } else {
-                y0r[i] = sr;
-                y0i[i] = si;
-                y1r[i] = tr;
-                y1i[i] = ti;
-            }
+            let xr = [ar[i], br[i]];
+            let xi = if CONJ_IN { [-ai[i], -bi[i]] } else { [ai[i], bi[i]] };
+            let (or, oi) = radix2_lane::<FUSE_OUT>(xr, xi, w, scale);
+            y0r[i] = or[0];
+            y0i[i] = oi[0];
+            y1r[i] = or[1];
+            y1i[i] = oi[1];
         };
 
         let mut q = 0;
@@ -93,6 +107,41 @@ pub fn radix2_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
         for i in q..s {
             bf(i, &mut *y0r, &mut *y0i, &mut *y1r, &mut *y1i);
         }
+    }
+}
+
+/// One scalar lane of the radix-4 butterfly (inputs already
+/// `CONJ_IN`-conjugated by the caller). Shared verbatim by the scalar
+/// stage codelet and the `std::simd` backend's scalar tail.
+#[inline(always)]
+pub(crate) fn radix4_lane<const FUSE_OUT: bool>(
+    xr: [f32; 4],
+    xi: [f32; 4],
+    w1: C32,
+    w2: C32,
+    w3: C32,
+    scale: f32,
+) -> ([f32; 4], [f32; 4]) {
+    let (apc_r, apc_i) = (xr[0] + xr[2], xi[0] + xi[2]);
+    let (amc_r, amc_i) = (xr[0] - xr[2], xi[0] - xi[2]);
+    let (bpd_r, bpd_i) = (xr[1] + xr[3], xi[1] + xi[3]);
+    let (bmd_r, bmd_i) = (xr[1] - xr[3], xi[1] - xi[3]);
+    // k=0: no twiddle. k=1: (amc - i*bmd)*w1. k=2: (apc - bpd)*w2.
+    // k=3: (amc + i*bmd)*w3.
+    let (o0r, o0i) = (apc_r + bpd_r, apc_i + bpd_i);
+    let (t1r, t1i) = (amc_r + bmd_i, amc_i - bmd_r);
+    let (o1r, o1i) = (t1r * w1.re - t1i * w1.im, t1r * w1.im + t1i * w1.re);
+    let (t2r, t2i) = (apc_r - bpd_r, apc_i - bpd_i);
+    let (o2r, o2i) = (t2r * w2.re - t2i * w2.im, t2r * w2.im + t2i * w2.re);
+    let (t3r, t3i) = (amc_r - bmd_i, amc_i + bmd_r);
+    let (o3r, o3i) = (t3r * w3.re - t3i * w3.im, t3r * w3.im + t3i * w3.re);
+    if FUSE_OUT {
+        (
+            [o0r * scale, o1r * scale, o2r * scale, o3r * scale],
+            [-(o0i * scale), -(o1i * scale), -(o2i * scale), -(o3i * scale)],
+        )
+    } else {
+        ([o0r, o1r, o2r, o3r], [o0i, o1i, o2i, o3i])
     }
 }
 
@@ -140,42 +189,21 @@ pub fn radix4_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
                   y2i: &mut [f32],
                   y3r: &mut [f32],
                   y3i: &mut [f32]| {
-            let (x0r, x0i) = (ar[i], if CONJ_IN { -ai[i] } else { ai[i] });
-            let (x1r, x1i) = (br[i], if CONJ_IN { -bi[i] } else { bi[i] });
-            let (x2r, x2i) = (cr[i], if CONJ_IN { -ci[i] } else { ci[i] });
-            let (x3r, x3i) = (dr[i], if CONJ_IN { -di[i] } else { di[i] });
-            let (apc_r, apc_i) = (x0r + x2r, x0i + x2i);
-            let (amc_r, amc_i) = (x0r - x2r, x0i - x2i);
-            let (bpd_r, bpd_i) = (x1r + x3r, x1i + x3i);
-            let (bmd_r, bmd_i) = (x1r - x3r, x1i - x3i);
-            // k=0: no twiddle. k=1: (amc - i*bmd)*w1. k=2: (apc - bpd)*w2.
-            // k=3: (amc + i*bmd)*w3.
-            let (o0r, o0i) = (apc_r + bpd_r, apc_i + bpd_i);
-            let (t1r, t1i) = (amc_r + bmd_i, amc_i - bmd_r);
-            let (o1r, o1i) = (t1r * w1.re - t1i * w1.im, t1r * w1.im + t1i * w1.re);
-            let (t2r, t2i) = (apc_r - bpd_r, apc_i - bpd_i);
-            let (o2r, o2i) = (t2r * w2.re - t2i * w2.im, t2r * w2.im + t2i * w2.re);
-            let (t3r, t3i) = (amc_r - bmd_i, amc_i + bmd_r);
-            let (o3r, o3i) = (t3r * w3.re - t3i * w3.im, t3r * w3.im + t3i * w3.re);
-            if FUSE_OUT {
-                y0r[i] = o0r * scale;
-                y0i[i] = -(o0i * scale);
-                y1r[i] = o1r * scale;
-                y1i[i] = -(o1i * scale);
-                y2r[i] = o2r * scale;
-                y2i[i] = -(o2i * scale);
-                y3r[i] = o3r * scale;
-                y3i[i] = -(o3i * scale);
+            let xr = [ar[i], br[i], cr[i], dr[i]];
+            let xi = if CONJ_IN {
+                [-ai[i], -bi[i], -ci[i], -di[i]]
             } else {
-                y0r[i] = o0r;
-                y0i[i] = o0i;
-                y1r[i] = o1r;
-                y1i[i] = o1i;
-                y2r[i] = o2r;
-                y2i[i] = o2i;
-                y3r[i] = o3r;
-                y3i[i] = o3i;
-            }
+                [ai[i], bi[i], ci[i], di[i]]
+            };
+            let (or, oi) = radix4_lane::<FUSE_OUT>(xr, xi, w1, w2, w3, scale);
+            y0r[i] = or[0];
+            y0i[i] = oi[0];
+            y1r[i] = or[1];
+            y1i[i] = oi[1];
+            y2r[i] = or[2];
+            y2i[i] = oi[2];
+            y3r[i] = or[3];
+            y3i[i] = oi[3];
         };
 
         let mut q = 0;
@@ -236,55 +264,11 @@ pub fn radix_schedule(n: usize, max_radix: usize) -> Vec<usize> {
     out
 }
 
-#[allow(clippy::too_many_arguments)]
-fn stage_mono<const CONJ_IN: bool, const FUSE_OUT: bool>(
-    xre: &[f32],
-    xim: &[f32],
-    yre: &mut [f32],
-    yim: &mut [f32],
-    radix: usize,
-    n: usize,
-    s: usize,
-    table: Option<&StageTable>,
-    scale: f32,
-) {
-    match radix {
-        2 => radix2_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale),
-        4 => radix4_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale),
-        8 => super::radix8::radix8_stage::<CONJ_IN, FUSE_OUT>(
-            xre, xim, yre, yim, n, s, table, scale,
-        ),
-        other => panic!("unsupported radix {other}"),
-    }
-}
-
-/// Dispatch one stage, monomorphising the fusion flags so the common
-/// (unfused) path carries zero per-element overhead.
-#[allow(clippy::too_many_arguments)]
-fn dispatch_stage(
-    xre: &[f32],
-    xim: &[f32],
-    yre: &mut [f32],
-    yim: &mut [f32],
-    radix: usize,
-    n: usize,
-    s: usize,
-    table: Option<&StageTable>,
-    conj_in: bool,
-    fuse_out: bool,
-    scale: f32,
-) {
-    match (conj_in, fuse_out) {
-        (false, false) => stage_mono::<false, false>(xre, xim, yre, yim, radix, n, s, table, scale),
-        (true, false) => stage_mono::<true, false>(xre, xim, yre, yim, radix, n, s, table, scale),
-        (false, true) => stage_mono::<false, true>(xre, xim, yre, yim, radix, n, s, table, scale),
-        (true, true) => stage_mono::<true, true>(xre, xim, yre, yim, radix, n, s, table, scale),
-    }
-}
-
-/// Multi-stage Stockham driver for one line, forward direction. `radices`
-/// in execution order; `tables` (if given) must match. The result is left
-/// in `(re, im)`; `(sre, sim)` is scratch of at least the same length.
+/// Multi-stage Stockham driver for one line, forward direction, on the
+/// always-available scalar codelets (the reference path the oracle-style
+/// tests pin everything else against). `radices` in execution order;
+/// `tables` (if given) must match. The result is left in `(re, im)`;
+/// `(sre, sim)` is scratch of at least the same length.
 pub fn transform_line(
     re: &mut [f32],
     im: &mut [f32],
@@ -296,13 +280,34 @@ pub fn transform_line(
     transform_line_fused(re, im, sre, sim, radices, tables, false);
 }
 
-/// Multi-stage Stockham driver with the inverse direction fused into the
+/// Scalar-codelet driver with the inverse direction fused into the
 /// first and last stages: when `inverse` is set, stage 0 conjugates on
 /// load and the final stage conjugates + `1/N`-scales on store, so the
-/// inverse costs exactly the same number of memory passes as the forward
-/// transform (no separate conjugate or scale sweeps).
+/// inverse costs exactly the same number of memory passes as the
+/// forward transform (no separate conjugate or scale sweeps). Backend
+/// selection lives in [`transform_line_with`].
 #[allow(clippy::too_many_arguments)]
 pub fn transform_line_fused(
+    re: &mut [f32],
+    im: &mut [f32],
+    sre: &mut [f32],
+    sim: &mut [f32],
+    radices: &[usize],
+    tables: Option<&PlanTables>,
+    inverse: bool,
+) {
+    transform_line_with(codelet::scalar_table(), re, im, sre, sim, radices, tables, inverse);
+}
+
+/// Multi-stage Stockham driver dispatching every stage through a
+/// [`CodeletTable`] — the one entry point all executor layers
+/// ([`super::plan::NativePlan::run_lines`], the four-step row pass, and
+/// therefore [`super::exec::BatchExecutor`] and the runtime fallback)
+/// funnel into. Which backend runs the butterflies is purely a property
+/// of the table handed in.
+#[allow(clippy::too_many_arguments)]
+pub fn transform_line_with(
+    codelets: &CodeletTable,
     re: &mut [f32],
     im: &mut [f32],
     sre: &mut [f32],
@@ -331,10 +336,11 @@ pub fn transform_line_fused(
         let table = tables.map(|t| &t.stages[li]);
         let conj_in = inverse && li == 0;
         let fuse_out = inverse && li == levels - 1;
+        let stage = codelets.stage(r, conj_in, fuse_out);
         if src_is_main {
-            dispatch_stage(re, im, sre, sim, r, n, s, table, conj_in, fuse_out, scale);
+            stage(re, im, sre, sim, n, s, table, scale);
         } else {
-            dispatch_stage(sre, sim, re, im, r, n, s, table, conj_in, fuse_out, scale);
+            stage(sre, sim, re, im, n, s, table, scale);
         }
         src_is_main = !src_is_main;
         n /= r;

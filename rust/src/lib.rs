@@ -1,3 +1,8 @@
+// Portable SIMD (std::simd) is nightly-only; the `simd` feature gates
+// the explicit-vector codelet backend (fft::simd) behind it, with the
+// scalar codelets as the stable default.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # applefft — "Beating vDSP" reproduction
 //!
 //! Three-layer reproduction of Bergach's radix-8 Stockham FFT system for

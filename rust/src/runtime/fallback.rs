@@ -7,7 +7,12 @@
 //! the shared [`NativePlanner`]: tiles are transformed in place with
 //! pooled workspace scratch (zero allocations per tile after warmup) and
 //! big tiles are striped over worker threads
-//! ([`BatchExecutor::execute_batch_auto_into`]).
+//! ([`BatchExecutor::execute_batch_auto_into`]). The stage codelets the
+//! executors dispatch through (scalar vs `std::simd`) are fixed once at
+//! backend construction from [`codelet::select`], so every tile this
+//! process serves runs the same codelet table.
+//!
+//! [`codelet::select`]: crate::fft::codelet::select
 //!
 //! [`BatchExecutor`]: crate::fft::exec::BatchExecutor
 //! [`BatchExecutor::execute_batch_auto_into`]:
@@ -15,6 +20,7 @@
 
 use super::artifact::{ArtifactKind, Registry};
 use super::device::Job;
+use crate::fft::codelet::{self, CodeletBackend};
 use crate::fft::plan::{NativePlanner, Variant};
 use crate::util::complex::SplitComplex;
 use anyhow::{ensure, Result};
@@ -22,11 +28,19 @@ use anyhow::{ensure, Result};
 pub struct NativeExec {
     registry: Registry,
     planner: NativePlanner,
+    /// Stage-codelet backend every executor this backend builds runs on.
+    codelet: CodeletBackend,
 }
 
 impl NativeExec {
     pub fn new(registry: Registry) -> Self {
-        NativeExec { registry, planner: NativePlanner::new() }
+        NativeExec { registry, planner: NativePlanner::new(), codelet: codelet::select() }
+    }
+
+    /// The stage-codelet backend this backend's executors dispatch
+    /// through.
+    pub fn codelet(&self) -> CodeletBackend {
+        self.codelet
     }
 
     /// Aggregate workspace-pool telemetry: `(workspaces created, buffer
@@ -49,7 +63,7 @@ impl NativeExec {
         // All artifact variants compute the same transform; the native
         // library distinguishes only the radix schedule.
         let variant = if meta.variant == "radix4" { Variant::Radix4 } else { Variant::Radix8 };
-        let exec = self.planner.executor(n, variant)?;
+        let exec = self.planner.executor_with(n, variant, self.codelet)?;
         match meta.kind {
             ArtifactKind::Fft => {
                 ensure!(job.inputs[0].len() == n * batch, "input size mismatch");
@@ -170,6 +184,13 @@ mod tests {
             (created, grows),
             "workspace pool must not grow across repeated tiles"
         );
+    }
+
+    #[test]
+    fn native_exec_uses_selected_codelet_backend() {
+        let exec = NativeExec::new(Registry::default_set(4));
+        assert!(exec.codelet().is_compiled());
+        assert_eq!(exec.codelet(), codelet::select());
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Codelet conformance + accuracy harness (mirrors the paper's vDSP
+//! validation tables).
+//!
+//! Three layers of evidence that the codelet dispatch table is safe to
+//! swap backends under:
+//!
+//! 1. **Stage level** — every `(radix, CONJ_IN, FUSE_OUT, backend)`
+//!    stage variant, on both twiddle paths (precomputed table and
+//!    sincos chain), against a from-the-definition f64 oracle of one
+//!    DIF Stockham stage.
+//! 2. **Transform level** — every paper size N=256..16384, both
+//!    directions, both kernel variants, every compiled backend, against
+//!    the naive O(N^2) `dft.rs` oracle, with per-size max-ulp reported
+//!    the way the paper reports vDSP deltas; plus the round-trip
+//!    `ifft(fft(x)) ≈ x` with max-ulp per size.
+//! 3. **Cross-backend** — scalar and simd outputs are asserted *bitwise*
+//!    equal (the backends run the identical IEEE op sequence per
+//!    element; with `--features simd` absent the simd table falls back
+//!    to scalar and the assertion is trivially true).
+
+use applefft::fft::codelet::{table, CodeletBackend};
+use applefft::fft::dft::dft;
+use applefft::fft::plan::{NativePlanner, Variant};
+use applefft::fft::twiddle::StageTable;
+use applefft::fft::Direction;
+use applefft::testkit::assert_close;
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+
+/// The sizes the paper validates against vDSP (Tables V-VII).
+const PAPER_SIZES: [usize; 7] = [256, 512, 1024, 2048, 4096, 8192, 16384];
+
+/// ULP distance between two f32s (sign-magnitude order mapping, exact).
+fn ulp_dist(a: f32, b: f32) -> u64 {
+    fn key(x: f32) -> i64 {
+        let i = x.to_bits() as i32 as i64;
+        if i < 0 {
+            (i32::MIN as i64) - i
+        } else {
+            i
+        }
+    }
+    (key(a) - key(b)).unsigned_abs()
+}
+
+/// Max ULP distance over bins whose reference magnitude is at least
+/// `floor` (ULPs are meaningless for near-cancelled bins — their
+/// absolute error is what the rel-L2 assertions bound).
+fn max_ulp_above(got: &SplitComplex, want: &SplitComplex, floor: f32) -> u64 {
+    let mut worst = 0u64;
+    for i in 0..want.len() {
+        if want.re[i].abs() >= floor {
+            worst = worst.max(ulp_dist(got.re[i], want.re[i]));
+        }
+        if want.im[i].abs() >= floor {
+            worst = worst.max(ulp_dist(got.im[i], want.im[i]));
+        }
+    }
+    worst
+}
+
+/// Root-mean-square magnitude of a reference spectrum, the scale the
+/// ULP floor is set from.
+fn rms(x: &SplitComplex) -> f32 {
+    let sum: f64 = (0..x.len()).map(|i| x.get(i).norm_sqr() as f64).sum();
+    ((sum / x.len() as f64).sqrt()) as f32
+}
+
+/// One radix-r DIF Stockham stage straight from the definition,
+/// accumulated in f64: `y[q + s(rp+k)] = (sum_j x[q + s(p+jm)]
+/// W_r^{jk}) * w^{pk}` with `m = n/r`, `w = e^{-2πi p/n}`, input
+/// conjugation (`conj_in`) and fused output conjugate-scale
+/// (`fuse_out`) applied exactly as the codelets define them.
+#[allow(clippy::too_many_arguments)]
+fn stage_oracle(
+    xre: &[f32],
+    xim: &[f32],
+    n: usize,
+    s: usize,
+    radix: usize,
+    conj_in: bool,
+    fuse_out: bool,
+    scale: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let m = n / radix;
+    let mut yre = vec![0.0f32; n * s];
+    let mut yim = vec![0.0f32; n * s];
+    for p in 0..m {
+        for k in 0..radix {
+            for q in 0..s {
+                let mut acc_re = 0.0f64;
+                let mut acc_im = 0.0f64;
+                for j in 0..radix {
+                    let at = q + s * (p + j * m);
+                    let re = xre[at] as f64;
+                    let im = if conj_in { -xim[at] } else { xim[at] } as f64;
+                    let th = -2.0 * std::f64::consts::PI * (j * k) as f64 / radix as f64;
+                    let (sin, cos) = th.sin_cos();
+                    acc_re += re * cos - im * sin;
+                    acc_im += re * sin + im * cos;
+                }
+                let tw = -2.0 * std::f64::consts::PI * (p * k) as f64 / n as f64;
+                let (sin, cos) = tw.sin_cos();
+                let out_re = acc_re * cos - acc_im * sin;
+                let out_im = acc_re * sin + acc_im * cos;
+                let at = q + s * (radix * p + k);
+                if fuse_out {
+                    yre[at] = (out_re * scale as f64) as f32;
+                    yim[at] = (-(out_im * scale as f64)) as f32;
+                } else {
+                    yre[at] = out_re as f32;
+                    yim[at] = out_im as f32;
+                }
+            }
+        }
+    }
+    (yre, yim)
+}
+
+/// Layer 1: every (radix, CONJ_IN, FUSE_OUT, backend) stage variant, on
+/// both twiddle paths, against the f64 stage oracle. The `s` values
+/// cover the pure-vector path (s % 8 == 0), the mixed vector + scalar
+/// tail (s = 11), and the pure scalar tail (s = 3).
+#[test]
+fn stage_variants_match_naive_oracle() {
+    let mut rng = Rng::new(0xC0DE);
+    let scale = 0.0625f32;
+    for &backend in CodeletBackend::compiled() {
+        let codelets = table(backend);
+        for radix in [2usize, 4, 8] {
+            for (n_mult, s) in [(1usize, 8usize), (2, 11), (4, 3), (2, 16)] {
+                let n = radix * n_mult;
+                let xre = rng.signal(n * s);
+                let xim = rng.signal(n * s);
+                let stage_table = StageTable::new(n, radix);
+                for conj_in in [false, true] {
+                    for fuse_out in [false, true] {
+                        let (wre, wim) =
+                            stage_oracle(&xre, &xim, n, s, radix, conj_in, fuse_out, scale);
+                        let stage = codelets.stage(radix, conj_in, fuse_out);
+                        for tables in [None, Some(&stage_table)] {
+                            let mut yre = vec![0.0f32; n * s];
+                            let mut yim = vec![0.0f32; n * s];
+                            stage(&xre, &xim, &mut yre, &mut yim, n, s, tables, scale);
+                            let what = format!(
+                                "backend={} radix={radix} n={n} s={s} conj_in={conj_in} \
+                                 fuse_out={fuse_out} tables={}",
+                                backend.tag(),
+                                tables.is_some(),
+                            );
+                            assert_close(&yre, &wre, 1e-4, 1e-4, &format!("{what} re"));
+                            assert_close(&yim, &wim, 1e-4, 1e-4, &format!("{what} im"));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Layer 2a: full transforms at every paper size, both kernel variants,
+/// every compiled backend, against the O(N^2) f64 DFT oracle — with the
+/// per-size max-ulp table the assertions key off. Both directions are
+/// oracle-checked up to N=4096; above that the quadratic oracle runs
+/// forward-only (~3.3e8 sincos for 8192+16384 already) and the inverse
+/// is covered by the round-trip layer below plus the fused-inverse
+/// oracle checks at the smaller sizes — the same transitive-validation
+/// convention `dft.rs` documents.
+#[test]
+fn full_transforms_match_dft_oracle_all_paper_sizes() {
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(0xFACADE);
+    println!("codelet conformance vs dft oracle (max ulp over bins >= rms/4):");
+    println!(
+        "{:>7} {:>4} {:>7} {:>8} {:>10} {:>9}",
+        "N", "dir", "variant", "backend", "rel_l2", "max_ulp"
+    );
+    for &n in &PAPER_SIZES {
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let dirs: &[Direction] = if n <= 4096 {
+            &[Direction::Forward, Direction::Inverse]
+        } else {
+            &[Direction::Forward]
+        };
+        for &dir in dirs {
+            // The O(N^2) oracle is the expensive part: compute it once
+            // per (size, direction) and reuse across variants/backends.
+            let want = dft(&x, dir);
+            let floor = rms(&want) / 4.0;
+            for variant in [Variant::Radix4, Variant::Radix8] {
+                let mut per_backend: Vec<SplitComplex> = Vec::new();
+                for &backend in CodeletBackend::compiled() {
+                    let got = planner
+                        .plan_with(n, variant, backend)
+                        .unwrap()
+                        .execute_batch(&x, 1, dir)
+                        .unwrap();
+                    let err = got.rel_l2_error(&want);
+                    let ulp = max_ulp_above(&got, &want, floor);
+                    println!(
+                        "{:>7} {:>4} {:>7} {:>8} {:>10.2e} {:>9}",
+                        n,
+                        dir.tag(),
+                        variant.tag(),
+                        backend.tag(),
+                        err,
+                        ulp
+                    );
+                    assert!(err < 3e-4, "n={n} {dir:?} {variant:?} {}: rel {err}", backend.tag());
+                    assert!(
+                        ulp < 1 << 16,
+                        "n={n} {dir:?} {variant:?} {}: {ulp} ulps",
+                        backend.tag()
+                    );
+                    per_backend.push(got);
+                }
+                // Layer 3: backends agree bitwise.
+                for other in &per_backend[1..] {
+                    assert_eq!(per_backend[0].re, other.re, "n={n} {dir:?} {variant:?} re");
+                    assert_eq!(per_backend[0].im, other.im, "n={n} {dir:?} {variant:?} im");
+                }
+            }
+        }
+    }
+}
+
+/// Layer 2b: round-trip accuracy `ifft(fft(x)) ≈ x` per paper size and
+/// backend, max-ulp reported against the (exactly known) input.
+#[test]
+fn roundtrip_max_ulp_within_bounds_per_size() {
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(0x0707);
+    println!("round-trip ifft(fft(x)) vs x (max ulp over bins with |x| >= 0.25):");
+    println!("{:>7} {:>8} {:>10} {:>9}", "N", "backend", "rel_l2", "max_ulp");
+    for &n in &PAPER_SIZES {
+        let batch = 2usize;
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        for &backend in CodeletBackend::compiled() {
+            let plan = planner.plan_with(n, Variant::Radix8, backend).unwrap();
+            let y = plan.execute_batch(&x, batch, Direction::Forward).unwrap();
+            let z = plan.execute_batch(&y, batch, Direction::Inverse).unwrap();
+            let err = z.rel_l2_error(&x);
+            let ulp = max_ulp_above(&z, &x, 0.25);
+            println!("{:>7} {:>8} {:>10.2e} {:>9}", n, backend.tag(), err, ulp);
+            assert!(err < 1e-4, "n={n} {}: roundtrip rel {err}", backend.tag());
+            assert!(ulp < 1 << 14, "n={n} {}: roundtrip {ulp} ulps", backend.tag());
+        }
+    }
+}
+
+/// Batched execution through the pooled executors must conform too (the
+/// serving path): spot-check a multi-line batch per backend against the
+/// oracle at one representative single-threadgroup size and one
+/// four-step size.
+#[test]
+fn batched_executor_path_conforms() {
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(0xBA7C);
+    for &(n, batch) in &[(1024usize, 5usize), (8192, 3)] {
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        for &backend in CodeletBackend::compiled() {
+            let ex = planner.executor_with(n, Variant::Radix8, backend).unwrap();
+            let got = ex.execute_batch(&x, batch, Direction::Forward).unwrap();
+            // Reference: the per-plan (serial, oracle-validated) path.
+            let want = planner
+                .plan_with(n, Variant::Radix8, backend)
+                .unwrap()
+                .execute_batch(&x, batch, Direction::Forward)
+                .unwrap();
+            assert_eq!(got.re, want.re, "n={n} batch={batch} {}", backend.tag());
+            assert_eq!(got.im, want.im, "n={n} batch={batch} {}", backend.tag());
+            let head = dft(&x.slice(0, n), Direction::Forward);
+            let err = got.slice(0, n).rel_l2_error(&head);
+            assert!(err < 3e-4, "n={n} {}: {err}", backend.tag());
+        }
+    }
+}
