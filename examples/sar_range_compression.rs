@@ -2,7 +2,8 @@
 //! SAR scene, run batched range compression through the full stack
 //! (coordinator -> batcher -> PJRT artifacts), verify every point target
 //! focuses at its true range bin, and report throughput in the paper's
-//! metric (GFLOPS = 5 N log2 N x 2 FFTs x lines / time).
+//! metric (GFLOPS = (2 x 5 N log2 N + 6 N) x lines / time — two FFTs
+//! plus the fused matched-filter multiply per line).
 //!
 //! This is the workload the paper motivates in §I/§VII-D: N_r = 4096
 //! range bins, 256-line azimuth blocks.
@@ -13,7 +14,7 @@
 
 use applefft::cli::Args;
 use applefft::coordinator::{FftService, ServiceConfig};
-use applefft::sar::range::{run_scene, RangeCompressor};
+use applefft::sar::range::{run_scene, RangeCompressor, RangePath};
 use applefft::sar::{Chirp, Scene};
 use applefft::util::rng::Rng;
 
@@ -38,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     let compressor = RangeCompressor::new(chirp, n);
 
     // Composed pipeline: FFT -> matched filter -> IFFT via the batcher.
-    let composed = run_scene(&svc, &compressor, &scene, &echoes, lines, false)?;
+    let composed = run_scene(&svc, &compressor, &scene, &echoes, lines, RangePath::Composed)?;
     println!(
         "\n[composed] {:.1} ms total, {:.2} us/line, {:.1} GFLOPS (nominal)",
         composed.elapsed_s * 1e3,
@@ -54,9 +55,26 @@ fn main() -> anyhow::Result<()> {
         "all targets must focus at their true range bins"
     );
 
+    // Fused MatchedFilter service path: one round trip, the multiply
+    // fused into the executor's forward pass (see fft::pipeline).
+    let matched = run_scene(&svc, &compressor, &scene, &echoes, lines, RangePath::Matched)?;
+    println!(
+        "\n[matched]  {:.1} ms total, {:.2} us/line, {:.1} GFLOPS (nominal)",
+        matched.elapsed_s * 1e3,
+        matched.us_per_line,
+        matched.gflops
+    );
+    println!(
+        "[matched]  targets: {}/{} focused; vs composed: {:.2}x",
+        matched.detection_hits,
+        matched.targets_expected,
+        composed.elapsed_s / matched.elapsed_s
+    );
+    assert_eq!(matched.detection_hits, matched.targets_expected);
+
     // Fused artifact (the paper's future-work kernel fusion), 4096 only.
     if n == 4096 {
-        let fused = run_scene(&svc, &compressor, &scene, &echoes, lines, true)?;
+        let fused = run_scene(&svc, &compressor, &scene, &echoes, lines, RangePath::FusedArtifact)?;
         println!(
             "\n[fused]    {:.1} ms total, {:.2} us/line, {:.1} GFLOPS (nominal)",
             fused.elapsed_s * 1e3,

@@ -5,17 +5,18 @@
 //! Also the perf-pass workhorse: run with
 //! `cargo bench --bench native_fft` before/after hot-path changes.
 
-use applefft::bench::table::Table;
+use applefft::bench::table::{BenchJson, Table};
 use applefft::bench::Benchmark;
 use applefft::fft::codelet::CodeletBackend;
 use applefft::fft::plan::{NativePlan, NativePlanner, Variant};
 use applefft::fft::Direction;
 use applefft::util::complex::SplitComplex;
 use applefft::util::rng::Rng;
-use applefft::util::{fft_flops, gflops};
+use applefft::util::{fft_flops, gflops, pipeline_flops};
 
 fn main() {
     let b = Benchmark::new("native_fft");
+    let mut json = BenchJson::new("native_fft");
     let planner = NativePlanner::new();
     let batch = 16usize;
 
@@ -118,6 +119,54 @@ fn main() {
     }
     te.print();
 
+    // ---- Fused spectral pipeline: serial vs batch-parallel × scalar
+    // vs simd, N=4096 batch 64. Each line is the full matched-filter
+    // chain (forward FFT with the multiply fused into the last stage +
+    // fused inverse); GFLOPS credits 2 FFTs + the 6N multiply per line
+    // (util::pipeline_flops). The acceptance row for the paper's
+    // motivating workload (§VII-D range compression). ----
+    let mut rngh = Rng::new(4097);
+    let h64 = SplitComplex { re: rngh.signal(n), im: rngh.signal(n) };
+    let mut tp = Table::new(
+        "Fused spectral pipeline — serial vs parallel x scalar vs simd, N=4096 batch 64",
+        &["path", "codelets", "us/line", "GFLOPS", "vs scalar serial"],
+    );
+    let mut pipe_scalar_serial = None;
+    for &backend in CodeletBackend::compiled() {
+        let ex = planner.executor_with(n, Variant::Radix8, backend).unwrap();
+        let ms = b.run(&format!("pipeline serial {} n=4096 b=64", backend.tag()), || {
+            let mut d = x64.clone();
+            ex.execute_pipeline_into(&mut d, batch64, &h64).unwrap();
+            d
+        });
+        let mp = b.run(&format!("pipeline batch-par {} n=4096 b=64", backend.tag()), || {
+            let mut d = x64.clone();
+            ex.execute_pipeline_par_into(&mut d, batch64, &h64).unwrap();
+            d
+        });
+        let base = *pipe_scalar_serial.get_or_insert(ms.median_secs());
+        tp.row(&[
+            "pipeline serial".into(),
+            backend.tag().into(),
+            format!("{:.1}", ms.median_secs() / batch64 as f64 * 1e6),
+            format!("{:.2}", gflops(pipeline_flops(n) * batch64 as f64, ms.median_secs())),
+            format!("{:.2}x", base / ms.median_secs()),
+        ]);
+        tp.row(&[
+            format!("pipeline batch-par ({} threads)", ex.threads()),
+            backend.tag().into(),
+            format!("{:.1}", mp.median_secs() / batch64 as f64 * 1e6),
+            format!("{:.2}", gflops(pipeline_flops(n) * batch64 as f64, mp.median_secs())),
+            format!("{:.2}x", base / mp.median_secs()),
+        ]);
+    }
+    tp.note("GFLOPS credits 2 FFTs + the 6N matched-filter multiply per line");
+    tp.note("no standalone multiply pass: the product is fused into the forward last stage");
+    if !CodeletBackend::Simd.is_compiled() {
+        tp.note("simd rows absent: rebuild with `--features simd` on nightly");
+    }
+    tp.print();
+
     // ---- Radix ablation. ----
     let mut t3 = Table::new("Ablation — radix schedule at N=4096 (this testbed)", &[
         "variant", "passes", "us/FFT",
@@ -134,5 +183,13 @@ fn main() {
         ]);
     }
     t3.print();
+
+    // Machine-readable twin of everything printed above, for the CI
+    // perf-trajectory artifact.
+    json.add(&t).add(&t2).add(&te).add(&tp).add(&t3);
+    match json.write_repo_root() {
+        Ok(path) => println!("bench json: {}", path.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
     println!("native_fft bench OK");
 }

@@ -4,7 +4,7 @@
 //! vDSP stand-in) on this testbed to verify they compute identical
 //! transforms while the model prices their M1 performance.
 
-use applefft::bench::table::Table;
+use applefft::bench::table::{BenchJson, Table};
 use applefft::bench::Benchmark;
 use applefft::fft::plan::NativePlanner;
 use applefft::fft::Direction;
@@ -130,5 +130,12 @@ fn main() {
     }
     t2.note("testbed wallclock is a CPU; M1 performance is the model table above");
     t2.print();
+
+    let mut json = BenchJson::new("table6_n4096");
+    json.add(&t).add(&tm).add(&t2);
+    match json.write_repo_root() {
+        Ok(path) => println!("bench json: {}", path.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
     println!("table6_n4096 bench OK");
 }

@@ -2,6 +2,11 @@
 //!
 //! Every bench binary builds one of these and prints it, so the output of
 //! `cargo bench` is a set of tables directly comparable with the paper.
+//!
+//! [`BenchJson`] is the machine-readable twin: bench binaries collect
+//! their tables into one JSON document and write `BENCH_<name>.json` at
+//! the repository root, which CI uploads as an artifact — the perf
+//! trajectory across commits without scraping aligned text.
 
 #[derive(Debug, Clone)]
 pub struct Table {
@@ -85,6 +90,90 @@ impl Table {
     pub fn cell(&self, row: usize, col: usize) -> &str {
         &self.rows[row][col]
     }
+
+    /// This table as one JSON object
+    /// `{"title":…,"header":[…],"rows":[[…]],"notes":[…]}` (cells stay
+    /// strings — they are already formatted for display; consumers parse
+    /// the numeric columns they care about).
+    pub fn to_json(&self) -> String {
+        let arr = |items: &[String]| -> String {
+            let quoted: Vec<String> = items.iter().map(|s| json_string(s)).collect();
+            format!("[{}]", quoted.join(","))
+        };
+        let rows: Vec<String> = self.rows.iter().map(|r| arr(r)).collect();
+        format!(
+            "{{\"title\":{},\"header\":{},\"rows\":[{}],\"notes\":{}}}",
+            json_string(&self.title),
+            arr(&self.header),
+            rows.join(","),
+            arr(&self.notes),
+        )
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars) —
+/// no serde in the offline environment.
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Machine-readable bench report: the bench binary's tables, serialised
+/// as one JSON document and written to `BENCH_<name>.json` at the
+/// repository root (one directory above the `rust/` crate).
+#[derive(Debug, Clone)]
+pub struct BenchJson {
+    name: String,
+    tables: Vec<Table>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> BenchJson {
+        BenchJson { name: name.to_string(), tables: Vec::new() }
+    }
+
+    /// Record a table (call right after printing it).
+    pub fn add(&mut self, table: &Table) -> &mut Self {
+        self.tables.push(table.clone());
+        self
+    }
+
+    pub fn n_tables(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// The whole report as a JSON document.
+    pub fn to_json(&self) -> String {
+        let tables: Vec<String> = self.tables.iter().map(|t| t.to_json()).collect();
+        format!(
+            "{{\"bench\":{},\"schema\":1,\"tables\":[{}]}}\n",
+            json_string(&self.name),
+            tables.join(",")
+        )
+    }
+
+    /// Write `BENCH_<name>.json` at the repository root; returns the
+    /// path written.
+    pub fn write_repo_root(&self) -> std::io::Result<std::path::PathBuf> {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
 }
 
 /// Format helpers shared by bench binaries.
@@ -131,5 +220,55 @@ mod tests {
         assert_eq!(fmt_gflops(138.452), "138.45");
         assert_eq!(fmt_us(1.78e-6), "1.78");
         assert_eq!(fmt_ratio(1.294), "1.29x");
+    }
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_string("plain"), "\"plain\"");
+        assert_eq!(json_string("a\"b"), "\"a\\\"b\"");
+        assert_eq!(json_string("a\\b"), "\"a\\\\b\"");
+        assert_eq!(json_string("a\nb"), "\"a\\nb\"");
+        assert_eq!(json_string("\u{1}"), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn table_to_json_shape() {
+        let mut t = Table::new("Demo \"quoted\"", &["Kernel", "GFLOPS"]);
+        t.row_str(&["radix-8", "138.45"]);
+        t.note("paper Table VI");
+        let j = t.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        assert!(j.contains("\"title\":\"Demo \\\"quoted\\\"\""), "{j}");
+        assert!(j.contains("\"header\":[\"Kernel\",\"GFLOPS\"]"), "{j}");
+        assert!(j.contains("\"rows\":[[\"radix-8\",\"138.45\"]]"), "{j}");
+        assert!(j.contains("\"notes\":[\"paper Table VI\"]"), "{j}");
+    }
+
+    #[test]
+    fn bench_json_collects_tables() {
+        let mut t1 = Table::new("A", &["x"]);
+        t1.row_str(&["1"]);
+        let mut t2 = Table::new("B", &["y"]);
+        t2.row_str(&["2"]);
+        let mut b = BenchJson::new("native_fft");
+        b.add(&t1).add(&t2);
+        assert_eq!(b.n_tables(), 2);
+        let j = b.to_json();
+        assert!(j.starts_with("{\"bench\":\"native_fft\",\"schema\":1,"), "{j}");
+        assert!(j.contains("\"title\":\"A\"") && j.contains("\"title\":\"B\""), "{j}");
+        assert!(j.ends_with("]}\n"), "{j:?}");
+    }
+
+    #[test]
+    fn bench_json_writes_at_repo_root() {
+        let mut t = Table::new("T", &["c"]);
+        t.row_str(&["v"]);
+        let mut b = BenchJson::new("tabletest_tmp");
+        b.add(&t);
+        let path = b.write_repo_root().unwrap();
+        assert!(path.ends_with("BENCH_tabletest_tmp.json"), "{path:?}");
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body, b.to_json());
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -8,9 +8,14 @@
 //!
 //! A request's lines may span several tiles; an [`Accumulator`] gathers
 //! the transformed lines and replies exactly once, when complete.
+//!
+//! Queues are keyed by [`QueueKey`]: plain FFT traffic per (n,
+//! direction) as before, matched-filter traffic per (n, filter id) — so
+//! lines multiplying by the same registered spectrum coalesce into
+//! shared `rangecomp*` tiles and distinct filters never mix.
 
 use super::metrics::Metrics;
-use super::request::{FftRequest, FftResponse};
+use super::request::{FftRequest, FftResponse, RequestKind};
 use crate::fft::Direction;
 use crate::runtime::Registry;
 use crate::util::complex::SplitComplex;
@@ -130,6 +135,40 @@ impl AccumulatorInner {
     }
 }
 
+/// What a dispatch-ready tile executes.
+#[derive(Clone, Debug)]
+pub enum TileKind {
+    /// Plain batched FFT.
+    Fft(Direction),
+    /// Fused matched filtering against the shared spectrum (the
+    /// `rangecomp{n}` artifact; native backend runs the fused pipeline).
+    MatchedFilter(Arc<SplitComplex>),
+}
+
+/// Batching-queue key (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QueueKey {
+    Fft(Direction),
+    Filter(u64),
+}
+
+impl RequestKind {
+    /// The queue this request's lines accumulate in.
+    pub fn queue_key(&self) -> QueueKey {
+        match self {
+            RequestKind::Fft(d) => QueueKey::Fft(*d),
+            RequestKind::MatchedFilter(spec) => QueueKey::Filter(spec.id),
+        }
+    }
+
+    fn tile_kind(&self) -> TileKind {
+        match self {
+            RequestKind::Fft(d) => TileKind::Fft(*d),
+            RequestKind::MatchedFilter(spec) => TileKind::MatchedFilter(spec.spectrum.clone()),
+        }
+    }
+}
+
 /// A slice of a tile belonging to one request.
 pub struct Segment {
     pub acc: Arc<Accumulator>,
@@ -144,7 +183,7 @@ pub struct Segment {
 pub struct Tile {
     pub artifact: String,
     pub n: usize,
-    pub direction: Direction,
+    pub kind: TileKind,
     pub batch: usize,
     pub data: SplitComplex,
     pub segments: Vec<Segment>,
@@ -161,22 +200,42 @@ struct Pending {
     enqueued_at: Instant,
 }
 
-/// Per-(n, direction) line queue with tile assembly.
+/// Per-[`QueueKey`] line queue with tile assembly.
 pub struct Queue {
     n: usize,
-    direction: Direction,
+    /// Tile kind every tile popped from this queue executes (queues are
+    /// keyed so all entries share it).
+    kind: TileKind,
     batch_tile: usize,
     pending: Vec<Pending>,
     queued_lines: usize,
 }
 
 impl Queue {
-    pub fn new(n: usize, direction: Direction, batch_tile: usize) -> Queue {
-        Queue { n, direction, batch_tile, pending: Vec::new(), queued_lines: 0 }
+    pub fn new(n: usize, kind: TileKind, batch_tile: usize) -> Queue {
+        Queue { n, kind, batch_tile, pending: Vec::new(), queued_lines: 0 }
+    }
+
+    /// Whether this queue may accept `req`: same size, and for matched
+    /// filters the *same spectrum instance* — the queue's tiles multiply
+    /// by the spectrum captured at queue creation, so an id collision
+    /// (only constructible by hand-building a `FilterSpec`; registered
+    /// ids are process-unique) must be rejected, never silently served
+    /// with the wrong filter.
+    pub fn accepts(&self, req: &FftRequest) -> bool {
+        if req.n != self.n {
+            return false;
+        }
+        match (&req.kind, &self.kind) {
+            (RequestKind::MatchedFilter(spec), TileKind::MatchedFilter(h)) => {
+                Arc::ptr_eq(&spec.spectrum, h)
+            }
+            _ => true,
+        }
     }
 
     pub fn push(&mut self, req: &FftRequest, acc: Arc<Accumulator>) {
-        debug_assert_eq!(req.n, self.n);
+        debug_assert!(self.accepts(req), "batcher routed a request to the wrong queue");
         self.queued_lines += req.lines;
         self.pending.push(Pending {
             acc,
@@ -235,10 +294,14 @@ impl Queue {
         for seg in &segments {
             seg.acc.dispatched();
         }
+        let artifact = match &self.kind {
+            TileKind::Fft(d) => Registry::fft_name(n, *d),
+            TileKind::MatchedFilter(_) => Registry::rangecomp_name(n),
+        };
         Some(Tile {
-            artifact: Registry::fft_name(n, self.direction),
+            artifact,
             n,
-            direction: self.direction,
+            kind: self.kind.clone(),
             batch: self.batch_tile,
             data,
             segments,
@@ -247,9 +310,9 @@ impl Queue {
     }
 }
 
-/// The batcher thread state: one [`Queue`] per (n, direction).
+/// The batcher thread state: one [`Queue`] per [`QueueKey`].
 pub struct Batcher {
-    queues: HashMap<(usize, Direction), Queue>,
+    queues: HashMap<(usize, QueueKey), Queue>,
     batch_tile: usize,
     max_wait: Duration,
     metrics: Arc<Metrics>,
@@ -264,13 +327,22 @@ impl Batcher {
     /// flush eagerly).
     pub fn admit(&mut self, req: &FftRequest) -> Vec<Tile> {
         let acc = Accumulator::new(req);
-        let key = (req.n, req.direction);
+        let key = (req.n, req.kind.queue_key());
         let queue = self
             .queues
             .entry(key)
-            .or_insert_with(|| Queue::new(req.n, req.direction, self.batch_tile));
-        queue.push(req, acc);
+            .or_insert_with(|| Queue::new(req.n, req.kind.tile_kind(), self.batch_tile));
         self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if !queue.accepts(req) {
+            // Same filter id, different spectrum: only possible with a
+            // hand-built FilterSpec (registered ids are process-unique).
+            // Fail the request instead of filtering with the wrong
+            // spectrum.
+            self.metrics.failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            acc.fail("filter id collision: spectrum does not match the queue's registration");
+            return Vec::new();
+        }
+        queue.push(req, acc);
         self.metrics
             .lines_in
             .fetch_add(req.lines as u64, std::sync::atomic::Ordering::Relaxed);
@@ -278,6 +350,7 @@ impl Batcher {
         while let Some(t) = queue.pop_tile(false) {
             tiles.push(t);
         }
+        self.evict_idle_filter_queues();
         tiles
     }
 
@@ -297,7 +370,25 @@ impl Batcher {
                 }
             }
         }
+        self.evict_idle_filter_queues();
         tiles
+    }
+
+    /// Drop matched-filter queues that have gone idle. Filter ids are
+    /// ephemeral registrations (ad-hoc callers mint one per request), so
+    /// keeping an empty queue would leak it — and its Arc'd spectrum —
+    /// for the life of the service. FFT queues are keyed by the bounded
+    /// (size, direction) set and stay resident. A queue evicted here is
+    /// transparently rebuilt from the request's own `FilterSpec` if the
+    /// same handle submits again.
+    fn evict_idle_filter_queues(&mut self) {
+        self.queues
+            .retain(|(_, key), q| q.queued_lines() > 0 || matches!(key, QueueKey::Fft(_)));
+    }
+
+    /// Number of live queues (tests: filter queues must not accumulate).
+    pub fn queue_count(&self) -> usize {
+        self.queues.len()
     }
 
     /// Soonest deadline across queues, for the event-loop timeout.
@@ -317,13 +408,15 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::FilterSpec;
     use std::sync::mpsc;
 
-    fn request(
+    fn request_kind(
         id: u64,
         n: usize,
         lines: usize,
         seed: u64,
+        kind: RequestKind,
     ) -> (FftRequest, mpsc::Receiver<FftResponse>) {
         let (tx, rx) = mpsc::channel();
         let mut rng = crate::util::rng::Rng::new(seed);
@@ -331,7 +424,7 @@ mod tests {
             FftRequest {
                 id,
                 n,
-                direction: Direction::Forward,
+                kind,
                 data: SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) },
                 lines,
                 submitted_at: Instant::now(),
@@ -339,6 +432,22 @@ mod tests {
             },
             rx,
         )
+    }
+
+    fn request(
+        id: u64,
+        n: usize,
+        lines: usize,
+        seed: u64,
+    ) -> (FftRequest, mpsc::Receiver<FftResponse>) {
+        request_kind(id, n, lines, seed, RequestKind::Fft(Direction::Forward))
+    }
+
+    fn matched_kind(filter_id: u64, n: usize) -> RequestKind {
+        RequestKind::MatchedFilter(FilterSpec {
+            id: filter_id,
+            spectrum: Arc::new(SplitComplex::zeros(n)),
+        })
     }
 
     fn batcher(tile: usize) -> Batcher {
@@ -414,6 +523,91 @@ mod tests {
         let arts: Vec<_> = tiles.iter().map(|t| t.artifact.as_str()).collect();
         assert!(arts.contains(&"fft256_fwd"));
         assert!(arts.contains(&"fft512_fwd"));
+    }
+
+    #[test]
+    fn matched_filter_queues_key_on_filter_id() {
+        let mut b = batcher(4);
+        // Same filter id: coalesces into one tile.
+        let (r1, _rx1) = request_kind(1, 256, 2, 20, matched_kind(7, 256));
+        let (r2, _rx2) = request_kind(2, 256, 2, 21, matched_kind(7, 256));
+        assert!(b.admit(&r1).is_empty());
+        let tiles = b.admit(&r2);
+        assert_eq!(tiles.len(), 1, "same filter id must coalesce");
+        assert_eq!(tiles[0].artifact, "rangecomp256");
+        assert!(matches!(tiles[0].kind, TileKind::MatchedFilter(_)));
+        assert_eq!(tiles[0].segments.len(), 2);
+
+        // Different filter ids (and plain FFTs) never mix.
+        let (r3, _rx3) = request_kind(3, 256, 2, 22, matched_kind(8, 256));
+        let (r4, _rx4) = request(4, 256, 2, 23);
+        assert!(b.admit(&r3).is_empty());
+        assert!(b.admit(&r4).is_empty(), "fft and filter queues are distinct");
+        let tiles = b.flush_expired(true);
+        assert_eq!(tiles.len(), 2);
+        let arts: Vec<_> = tiles.iter().map(|t| t.artifact.as_str()).collect();
+        assert!(arts.contains(&"rangecomp256"));
+        assert!(arts.contains(&"fft256_fwd"));
+    }
+
+    #[test]
+    fn filter_id_collision_fails_request_instead_of_mismatching() {
+        // Two hand-built FilterSpecs sharing an id but not a spectrum:
+        // the second request must be failed, not filtered with the
+        // first spectrum.
+        let mut b = batcher(8);
+        let (r1, _rx1) = request_kind(1, 256, 2, 40, matched_kind(5, 256));
+        assert!(b.admit(&r1).is_empty());
+        let kind2 = RequestKind::MatchedFilter(FilterSpec {
+            id: 5, // same id...
+            spectrum: Arc::new(SplitComplex::zeros(256)), // ...different Arc
+        });
+        let (r2, rx2) = request_kind(2, 256, 2, 41, kind2);
+        assert!(b.admit(&r2).is_empty());
+        let resp = rx2.try_recv().expect("collision must be answered immediately");
+        assert!(resp.result.is_err());
+        assert!(resp.result.unwrap_err().contains("collision"));
+        // The original queue is untouched (still 2 pending lines).
+        assert_eq!(b.queued_lines(), 2);
+    }
+
+    #[test]
+    fn idle_filter_queues_are_evicted() {
+        // Ad-hoc registrations mint a fresh id per request: once a
+        // filter queue drains, its map entry (and spectrum) must go.
+        let mut b = batcher(2);
+        for id in 0..50u64 {
+            let (r, _rx) = request_kind(id, 256, 2, 30 + id, matched_kind(id, 256));
+            let tiles = b.admit(&r);
+            assert_eq!(tiles.len(), 1, "full tile flushes");
+        }
+        assert_eq!(b.queue_count(), 0, "drained filter queues must not accumulate");
+        // Partial matched request: queue lives while lines are pending...
+        let (r, _rx) = request_kind(99, 256, 1, 99, matched_kind(99, 256));
+        assert!(b.admit(&r).is_empty());
+        assert_eq!(b.queue_count(), 1);
+        // ...and is evicted once force-flushed.
+        assert_eq!(b.flush_expired(true).len(), 1);
+        assert_eq!(b.queue_count(), 0);
+        // Plain FFT queues stay resident (bounded key space).
+        let (r, _rx) = request(100, 256, 1, 100);
+        assert!(b.admit(&r).is_empty());
+        b.flush_expired(true);
+        assert_eq!(b.queue_count(), 1, "fft queues are kept");
+    }
+
+    #[test]
+    fn matched_filter_tile_carries_spectrum() {
+        let mut b = batcher(2);
+        let spec = Arc::new(SplitComplex { re: vec![2.0; 256], im: vec![0.5; 256] });
+        let kind = RequestKind::MatchedFilter(FilterSpec { id: 9, spectrum: spec.clone() });
+        let (r, _rx) = request_kind(1, 256, 2, 24, kind);
+        let tiles = b.admit(&r);
+        assert_eq!(tiles.len(), 1);
+        let TileKind::MatchedFilter(h) = &tiles[0].kind else {
+            panic!("expected matched-filter tile");
+        };
+        assert!(Arc::ptr_eq(h, &spec), "tile must share the registered spectrum");
     }
 
     #[test]

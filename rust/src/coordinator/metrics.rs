@@ -70,9 +70,15 @@ pub struct Metrics {
     pub tiles_dispatched: AtomicU64,
     pub lines_padded: AtomicU64,
     pub failures: AtomicU64,
-    /// Nominal FLOPs executed (5·N·log2 N per tile line, padding
-    /// included — the executor transforms padded lines too).
+    /// Nominal FLOPs executed (5·N·log2 N per plain FFT tile line, the
+    /// pipeline count for matched-filter lines; padding included — the
+    /// executor transforms padded lines too).
     pub flops: AtomicU64,
+    /// Matched-filter (fused spectral pipeline) tiles dispatched.
+    pub mf_tiles: AtomicU64,
+    /// Nominal pipeline FLOPs (`2·5·N·log2 N + 6·N` per line) across
+    /// matched-filter tiles — the matched-filter share of `flops`.
+    pub mf_flops: AtomicU64,
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
 }
@@ -95,6 +101,8 @@ impl Metrics {
             lines_padded: self.lines_padded.load(Ordering::Relaxed),
             failures: self.failures.load(Ordering::Relaxed),
             nominal_flops: self.flops.load(Ordering::Relaxed),
+            mf_tiles: self.mf_tiles.load(Ordering::Relaxed),
+            mf_nominal_flops: self.mf_flops.load(Ordering::Relaxed),
             exec_total_us: exec_busy_ns as f64 / 1e3,
             queue_mean_us: self.queue_latency.mean_us(),
             queue_p95_us: self.queue_latency.percentile_us(0.95),
@@ -116,6 +124,11 @@ pub struct MetricsSnapshot {
     pub failures: u64,
     /// Nominal FLOPs executed across all dispatched tiles.
     pub nominal_flops: u64,
+    /// Matched-filter (fused pipeline) tiles dispatched.
+    pub mf_tiles: u64,
+    /// Pipeline FLOPs (2 FFTs + 6N multiply per line) across
+    /// matched-filter tiles; included in `nominal_flops`.
+    pub mf_nominal_flops: u64,
     /// Total busy time of the executor across workers, microseconds.
     pub exec_total_us: f64,
     pub queue_mean_us: f64,
@@ -145,11 +158,20 @@ impl MetricsSnapshot {
         self.nominal_flops as f64 / (self.exec_total_us * 1e-6) / 1e9
     }
 
+    /// Matched-filter (spectral pipeline) share of the nominal FLOPs.
+    pub fn matched_share(&self) -> f64 {
+        if self.nominal_flops == 0 {
+            return 0.0;
+        }
+        self.mf_nominal_flops as f64 / self.nominal_flops as f64
+    }
+
     pub fn render(&self) -> String {
         format!(
             "requests={} lines={} tiles={} padded={} ({:.1}%) failures={}\n\
              queue: mean {:.0} us, p95 {:.0} us | exec: mean {:.0} us, p95 {:.0} us\n\
-             executor: {:.2} GFLOPS nominal (5*N*log2 N / busy time), {} codelets",
+             executor: {:.2} GFLOPS nominal (5*N*log2 N / busy time), {} codelets\n\
+             matched-filter: {} tiles, {:.1}% of nominal FLOPs (2 FFTs + 6N per line)",
             self.requests,
             self.lines_in,
             self.tiles_dispatched,
@@ -162,6 +184,8 @@ impl MetricsSnapshot {
             self.exec_p95_us,
             self.gflops(),
             self.codelet,
+            self.mf_tiles,
+            self.matched_share() * 100.0,
         )
     }
 }
@@ -219,7 +243,21 @@ mod tests {
         let codelet = m.snapshot(2_000).codelet;
         assert!(codelet == "scalar" || codelet == "simd", "{codelet:?}");
         assert!(r.contains("codelets"), "{r}");
+        assert!(r.contains("matched-filter"), "{r}");
         assert!(m.snapshot(2_000).gflops() > 0.0);
         assert_eq!(m.snapshot(0).gflops(), 0.0);
+    }
+
+    #[test]
+    fn matched_share_tracks_pipeline_flops() {
+        let m = Metrics::default();
+        m.flops.fetch_add(1_000, Ordering::Relaxed);
+        m.mf_flops.fetch_add(250, Ordering::Relaxed);
+        m.mf_tiles.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot(1_000);
+        assert_eq!(s.mf_tiles, 2);
+        assert_eq!(s.mf_nominal_flops, 250);
+        assert!((s.matched_share() - 0.25).abs() < 1e-9);
+        assert_eq!(MetricsSnapshot::default().matched_share(), 0.0);
     }
 }

@@ -24,9 +24,13 @@
 //!   threads/how much threadgroup memory the Metal kernel would use.
 //! * [`batcher`] — aggregates request lines into artifact-sized tiles
 //!   (the GPU needs batch >= 64 to beat vDSP — Fig. 1 — so batching IS
-//!   the serving policy), padding the final partial tile.
+//!   the serving policy), padding the final partial tile. Plain FFT
+//!   queues key on (n, direction); matched-filter queues key on the
+//!   registered filter id, so convolution traffic sharing a spectrum
+//!   coalesces into fused `rangecomp*` tiles.
 //! * [`worker`] — a small pool draining tiles into the engine, recording
-//!   per-tile latency and nominal FLOPs (5·N·log2 N per line).
+//!   per-tile latency and nominal FLOPs (5·N·log2 N per FFT line, the
+//!   pipeline count — 2 FFTs + 6N — per matched-filter line).
 //! * [`service`] — the public facade; `drain()` returns the final
 //!   metrics snapshot including executor GFLOPS.
 //! * [`metrics`] — queue/execute latency, padding overhead, and
@@ -41,5 +45,5 @@ pub mod service;
 pub mod worker;
 
 pub use planner::{Decomposition, Plan, Planner};
-pub use request::{FftRequest, FftResponse, RequestId};
-pub use service::{FftService, ServiceConfig};
+pub use request::{FftRequest, FftResponse, FilterSpec, RequestId, RequestKind};
+pub use service::{FftService, FilterHandle, ServiceConfig};

@@ -3,16 +3,53 @@
 use crate::fft::Direction;
 use crate::util::complex::SplitComplex;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::Instant;
 
 pub type RequestId = u64;
 
-/// A client request: `lines` independent `n`-point transforms.
+/// A frequency-domain filter registered with the service
+/// ([`crate::coordinator::FftService::register_filter`]). The `id` keys
+/// the batching queue: lines from different requests that multiply by
+/// the *same* registered spectrum coalesce into shared matched-filter
+/// tiles; distinct filters never mix.
+#[derive(Clone, Debug)]
+pub struct FilterSpec {
+    pub id: u64,
+    /// Length-`n` frequency response, shared by every tile that carries
+    /// a piece of the request.
+    pub spectrum: Arc<SplitComplex>,
+}
+
+/// What computation a request asks of the service.
+#[derive(Clone, Debug)]
+pub enum RequestKind {
+    /// Plain batched FFT in one direction.
+    Fft(Direction),
+    /// Matched filtering: forward FFT, pointwise multiply by the
+    /// registered spectrum, inverse FFT — served as one fused pipeline
+    /// pass per line on the native backend
+    /// ([`crate::fft::pipeline`]), batch-parallel through the
+    /// `rangecomp*` artifacts.
+    MatchedFilter(FilterSpec),
+}
+
+impl RequestKind {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            RequestKind::Fft(d) => d.tag(),
+            RequestKind::MatchedFilter(_) => "matched",
+        }
+    }
+}
+
+/// A client request: `lines` independent `n`-point transforms (or
+/// matched-filter passes).
 #[derive(Debug)]
 pub struct FftRequest {
     pub id: RequestId,
     pub n: usize,
-    pub direction: Direction,
+    pub kind: RequestKind,
     /// `(lines, n)` row-major split-complex payload.
     pub data: SplitComplex,
     pub lines: usize,
@@ -39,6 +76,15 @@ impl FftRequest {
             self.id,
             self.n
         );
+        if let RequestKind::MatchedFilter(spec) = &self.kind {
+            anyhow::ensure!(
+                spec.spectrum.len() == self.n,
+                "request {}: filter spectrum {} != n({})",
+                self.id,
+                spec.spectrum.len(),
+                self.n
+            );
+        }
         Ok(())
     }
 }
@@ -65,7 +111,7 @@ mod tests {
             FftRequest {
                 id: 1,
                 n,
-                direction: Direction::Forward,
+                kind: RequestKind::Fft(Direction::Forward),
                 data: SplitComplex::zeros(payload),
                 lines,
                 submitted_at: Instant::now(),
@@ -88,5 +134,22 @@ mod tests {
         assert!(req(300, 1, 300).0.validate().is_err()); // not pow2
         assert!(req(128, 1, 128).0.validate().is_err()); // below range
         assert!(req(32768, 1, 32768).0.validate().is_err()); // above range
+    }
+
+    #[test]
+    fn validate_checks_matched_filter_spectrum() {
+        let (mut r, _rx) = req(256, 1, 256);
+        r.kind = RequestKind::MatchedFilter(FilterSpec {
+            id: 1,
+            spectrum: Arc::new(SplitComplex::zeros(256)),
+        });
+        assert!(r.validate().is_ok());
+        r.kind = RequestKind::MatchedFilter(FilterSpec {
+            id: 2,
+            spectrum: Arc::new(SplitComplex::zeros(100)), // wrong length
+        });
+        assert!(r.validate().is_err());
+        assert_eq!(r.kind.tag(), "matched");
+        assert_eq!(RequestKind::Fft(Direction::Inverse).tag(), "inv");
     }
 }

@@ -7,7 +7,7 @@
 use super::batcher::Batcher;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::planner::Planner;
-use super::request::{FftRequest, FftResponse, RequestId};
+use super::request::{FftRequest, FftResponse, FilterSpec, RequestId, RequestKind};
 use super::worker::WorkerPool;
 use crate::fft::Direction;
 use crate::runtime::{Backend, Engine};
@@ -16,6 +16,29 @@ use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
+
+/// A frequency-domain filter registered with [`FftService::register_filter`].
+/// Submitting matched-filter requests through the same handle lets the
+/// batcher coalesce lines from different requests into shared fused
+/// tiles (the filter id keys the queue); the spectrum itself is shared
+/// by reference, never copied per tile.
+#[derive(Clone, Debug)]
+pub struct FilterHandle {
+    n: usize,
+    spec: FilterSpec,
+}
+
+impl FilterHandle {
+    /// Transform size the filter was registered for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// The batching-queue id of this registration.
+    pub fn id(&self) -> u64 {
+        self.spec.id
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
@@ -54,6 +77,13 @@ pub struct FftService {
     planner: Planner,
     next_id: Arc<AtomicU64>,
 }
+
+/// Filter ids are **process-global**, not per-service: a handle
+/// accidentally submitted to a different service then creates its own
+/// (correct) queue there instead of silently coalescing with an
+/// unrelated registration that happens to share a per-service counter
+/// value.
+static NEXT_FILTER_ID: AtomicU64 = AtomicU64::new(1);
 
 impl FftService {
     pub fn start(config: ServiceConfig) -> Result<FftService> {
@@ -125,22 +155,19 @@ impl FftService {
         })
     }
 
-    /// Async submission: returns the receiver for the response.
-    pub fn submit(
+    fn submit_request(
         &self,
         n: usize,
-        direction: Direction,
+        kind: RequestKind,
         data: SplitComplex,
         lines: usize,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
-        // Planner enforces the synthesis rules (supported sizes).
-        self.planner.plan(n, direction)?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
         let req = FftRequest {
             id,
             n,
-            direction,
+            kind,
             data,
             lines,
             submitted_at: Instant::now(),
@@ -153,6 +180,19 @@ impl FftService {
         Ok((id, rx))
     }
 
+    /// Async submission: returns the receiver for the response.
+    pub fn submit(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        // Planner enforces the synthesis rules (supported sizes).
+        self.planner.plan(n, direction)?;
+        self.submit_request(n, RequestKind::Fft(direction), data, lines)
+    }
+
     /// Blocking convenience: submit and wait.
     pub fn fft(
         &self,
@@ -162,6 +202,54 @@ impl FftService {
         lines: usize,
     ) -> Result<SplitComplex> {
         let (_, rx) = self.submit(n, direction, data, lines)?;
+        let resp = rx.recv().context("service dropped the request")?;
+        resp.result.map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Register a length-`n` frequency response for matched filtering.
+    /// Requests submitted through the returned handle coalesce with
+    /// every other request using the same handle — the SAR pattern (one
+    /// chirp filter, thousands of range lines, many clients) shares one
+    /// registration.
+    pub fn register_filter(&self, n: usize, spectrum: SplitComplex) -> Result<FilterHandle> {
+        // Matched filtering runs a forward and an inverse transform:
+        // the planner must support the size (synthesis rules).
+        self.planner.plan(n, Direction::Forward)?;
+        anyhow::ensure!(
+            spectrum.len() == n,
+            "filter spectrum length {} != n({n})",
+            spectrum.len()
+        );
+        let id = NEXT_FILTER_ID.fetch_add(1, Ordering::Relaxed);
+        Ok(FilterHandle { n, spec: FilterSpec { id, spectrum: Arc::new(spectrum) } })
+    }
+
+    /// Async matched-filter submission: `lines` rows of length `n` are
+    /// each pushed through the fused FFT -> multiply -> IFFT pipeline
+    /// against the registered filter, batch-parallel through the
+    /// executor tiles.
+    pub fn submit_matched(
+        &self,
+        filter: &FilterHandle,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.submit_request(
+            filter.n,
+            RequestKind::MatchedFilter(filter.spec.clone()),
+            data,
+            lines,
+        )
+    }
+
+    /// Blocking matched-filter convenience: submit and wait.
+    pub fn matched_filter(
+        &self,
+        filter: &FilterHandle,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<SplitComplex> {
+        let (_, rx) = self.submit_matched(filter, data, lines)?;
         let resp = rx.recv().context("service dropped the request")?;
         resp.result.map_err(|e| anyhow::anyhow!(e))
     }
@@ -252,6 +340,66 @@ mod tests {
         assert!(svc.fft(100, Direction::Forward, x, 1).is_err());
         let x = SplitComplex::zeros(128);
         assert!(svc.fft(128, Direction::Forward, x, 1).is_err());
+    }
+
+    #[test]
+    fn matched_filter_round_trip() {
+        let svc = native_service();
+        let mut rng = crate::util::rng::Rng::new(71);
+        let (n, lines) = (512usize, 5usize);
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        // Identity filter: matched filtering must return the input.
+        let ones = SplitComplex { re: vec![1.0; n], im: vec![0.0; n] };
+        let h = svc.register_filter(n, ones).unwrap();
+        assert_eq!(h.n(), n);
+        let y = svc.matched_filter(&h, x.clone(), lines).unwrap();
+        assert!(y.rel_l2_error(&x) < 1e-4, "{}", y.rel_l2_error(&x));
+        let m = svc.drain().unwrap();
+        assert!(m.mf_tiles > 0, "matched tiles must be recorded");
+        assert!(m.mf_nominal_flops > 0);
+        assert!(m.matched_share() > 0.0);
+    }
+
+    #[test]
+    fn matched_filter_agrees_with_composed_requests() {
+        // Service-level fused vs composed: same executor, same codelets,
+        // same multiply order -> tight agreement.
+        let svc = native_service();
+        let mut rng = crate::util::rng::Rng::new(72);
+        let (n, lines) = (1024usize, 40usize); // spans multiple tiles
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        let spec = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        // Composed: three service round trips with a host multiply.
+        let f = svc.fft(n, Direction::Forward, x.clone(), lines).unwrap();
+        let mut prod = SplitComplex::zeros(n * lines);
+        for l in 0..lines {
+            for i in 0..n {
+                prod.set(l * n + i, f.get(l * n + i) * spec.get(i));
+            }
+        }
+        let want = svc.fft(n, Direction::Inverse, prod, lines).unwrap();
+        // Fused: one matched-filter request.
+        let h = svc.register_filter(n, spec).unwrap();
+        let got = svc.matched_filter(&h, x, lines).unwrap();
+        assert_eq!(got.re, want.re, "fused vs composed must be bitwise equal");
+        assert_eq!(got.im, want.im);
+    }
+
+    #[test]
+    fn register_filter_validates() {
+        let svc = native_service();
+        assert!(svc.register_filter(100, SplitComplex::zeros(100)).is_err()); // bad size
+        assert!(svc.register_filter(512, SplitComplex::zeros(100)).is_err()); // bad length
+        // Distinct registrations get distinct queue ids.
+        let a = svc.register_filter(512, SplitComplex::zeros(512)).unwrap();
+        let b = svc.register_filter(512, SplitComplex::zeros(512)).unwrap();
+        assert_ne!(a.id(), b.id());
+        // Ids are process-global: handles from *different* services can
+        // never alias each other's batching queues.
+        let svc2 = native_service();
+        let c = svc2.register_filter(512, SplitComplex::zeros(512)).unwrap();
+        assert_ne!(a.id(), c.id());
+        assert_ne!(b.id(), c.id());
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Worker pool: drains ready tiles into the runtime engine and routes
 //! transformed lines back to the per-request accumulators.
 
-use super::batcher::Tile;
+use super::batcher::{Tile, TileKind};
 use super::metrics::Metrics;
 use crate::runtime::Engine;
 use std::sync::atomic::Ordering;
@@ -10,9 +10,19 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Execute one tile synchronously and distribute results.
-pub fn run_tile(engine: &Engine, metrics: &Metrics, tile: Tile) {
+pub fn run_tile(engine: &Engine, metrics: &Metrics, mut tile: Tile) {
     let t0 = Instant::now();
-    let result = engine.fft_batch(&tile.data, tile.n, tile.batch, tile.direction);
+    let result = match &tile.kind {
+        TileKind::Fft(dir) => engine.fft_batch(&tile.data, tile.n, tile.batch, *dir),
+        // Fused matched filtering: the native backend executes the whole
+        // FFT -> multiply -> IFFT pipeline per line inside the executor.
+        // The tile's data moves into the job and the registered spectrum
+        // travels as its Arc — no per-tile copy of either.
+        TileKind::MatchedFilter(h) => {
+            let data = std::mem::take(&mut tile.data);
+            engine.range_compress_shared(data, h, tile.n, tile.batch)
+        }
+    };
     let exec_secs = t0.elapsed().as_secs_f64();
     metrics.tiles_dispatched.fetch_add(1, Ordering::Relaxed);
     metrics.lines_padded.fetch_add(tile.padded_lines as u64, Ordering::Relaxed);
@@ -20,12 +30,23 @@ pub fn run_tile(engine: &Engine, metrics: &Metrics, tile: Tile) {
 
     match result {
         Ok(out) => {
-            // Nominal work actually executed: the paper's 5*N*log2 N per
-            // line, for every line in the tile (padding included). The
-            // matching busy time is tracked by the device thread itself
-            // (Engine::device_busy_ns), not here: worker-side wall time
-            // would double-count when workers queue behind the device.
-            let tile_flops = crate::util::fft_flops(tile.n) * tile.batch as f64;
+            // Nominal work actually executed, for every line in the tile
+            // (padding included): 5*N*log2 N per plain FFT line, and the
+            // pipeline count (2 FFTs + the 6N multiply) per matched
+            // -filter line. The matching busy time is tracked by the
+            // device thread itself (Engine::device_busy_ns), not here:
+            // worker-side wall time would double-count when workers
+            // queue behind the device.
+            let tile_flops = match &tile.kind {
+                TileKind::Fft(_) => crate::util::fft_flops(tile.n) * tile.batch as f64,
+                TileKind::MatchedFilter(_) => {
+                    crate::util::pipeline_flops(tile.n) * tile.batch as f64
+                }
+            };
+            if matches!(tile.kind, TileKind::MatchedFilter(_)) {
+                metrics.mf_tiles.fetch_add(1, Ordering::Relaxed);
+                metrics.mf_flops.fetch_add(tile_flops as u64, Ordering::Relaxed);
+            }
             metrics.flops.fetch_add(tile_flops as u64, Ordering::Relaxed);
             for seg in &tile.segments {
                 seg.acc.fill(&out, seg.tile_line, seg.request_line, seg.count, exec_secs);
@@ -95,16 +116,17 @@ impl WorkerPool {
 mod tests {
     use super::*;
     use crate::coordinator::batcher::{Accumulator, Segment};
-    use crate::coordinator::request::{FftRequest, FftResponse};
+    use crate::coordinator::request::{FftRequest, FftResponse, RequestKind};
     use crate::fft::Direction;
     use crate::runtime::Backend;
     use crate::util::complex::SplitComplex;
     use crate::util::rng::Rng;
 
-    fn tile_for(
+    fn tile_kind_for(
         n: usize,
         lines: usize,
         batch: usize,
+        kind: TileKind,
     ) -> (Tile, mpsc::Receiver<FftResponse>, SplitComplex) {
         let (tx, rx) = mpsc::channel();
         let mut rng = Rng::new(42);
@@ -112,7 +134,7 @@ mod tests {
         let req = FftRequest {
             id: 11,
             n,
-            direction: Direction::Forward,
+            kind: RequestKind::Fft(Direction::Forward),
             data: data.clone(),
             lines,
             submitted_at: Instant::now(),
@@ -123,16 +145,28 @@ mod tests {
         let mut tile_data = SplitComplex::zeros(n * batch);
         tile_data.re[..n * lines].copy_from_slice(&data.re);
         tile_data.im[..n * lines].copy_from_slice(&data.im);
+        let artifact = match &kind {
+            TileKind::Fft(d) => format!("fft{n}_{}", d.tag()),
+            TileKind::MatchedFilter(_) => format!("rangecomp{n}"),
+        };
         let tile = Tile {
-            artifact: format!("fft{n}_fwd"),
+            artifact,
             n,
-            direction: Direction::Forward,
+            kind,
             batch,
             data: tile_data,
             segments: vec![Segment { acc, tile_line: 0, request_line: 0, count: lines }],
             padded_lines: batch - lines,
         };
         (tile, rx, data)
+    }
+
+    fn tile_for(
+        n: usize,
+        lines: usize,
+        batch: usize,
+    ) -> (Tile, mpsc::Receiver<FftResponse>, SplitComplex) {
+        tile_kind_for(n, lines, batch, TileKind::Fft(Direction::Forward))
     }
 
     #[test]
@@ -167,6 +201,27 @@ mod tests {
         }
         pool.shutdown();
         assert_eq!(metrics.tiles_dispatched.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn matched_filter_tile_runs_fused_pipeline() {
+        use std::sync::Arc as StdArc;
+        let engine = Engine::start(Backend::Native).unwrap();
+        let metrics = Metrics::default();
+        let (n, lines, batch) = (256usize, 2usize, 32usize);
+        // Identity filter: the fused pipeline must return the input.
+        let ones = SplitComplex { re: vec![1.0; n], im: vec![0.0; n] };
+        let (tile, rx, input) =
+            tile_kind_for(n, lines, batch, TileKind::MatchedFilter(StdArc::new(ones)));
+        run_tile(&engine, &metrics, tile);
+        let resp = rx.recv().unwrap();
+        let out = resp.result.unwrap();
+        assert!(out.rel_l2_error(&input) < 1e-4);
+        // Pipeline FLOPs (2 FFTs + 6N multiply) recorded per tile line.
+        assert_eq!(metrics.mf_tiles.load(Ordering::Relaxed), 1);
+        let want_flops = (crate::util::pipeline_flops(n) * batch as f64) as u64;
+        assert_eq!(metrics.mf_flops.load(Ordering::Relaxed), want_flops);
+        assert_eq!(metrics.flops.load(Ordering::Relaxed), want_flops);
     }
 
     #[test]

@@ -115,6 +115,15 @@ pub fn select() -> CodeletBackend {
 pub type StageFn =
     fn(&[f32], &[f32], &mut [f32], &mut [f32], usize, usize, Option<&StageTable>, f32);
 
+/// Signature of the MUL_SPECTRUM stage codelets: one forward radix-r
+/// stage whose stores are multiplied by the filter spectrum `(hre, him)`
+/// at the same output index — the last-stage fusion the matched-filter
+/// pipeline ([`crate::fft::pipeline`]) is built on. The `scale`
+/// parameter of [`StageFn`] is replaced by the two filter slices (the
+/// forward direction never scales).
+pub type MulStageFn =
+    fn(&[f32], &[f32], &mut [f32], &mut [f32], usize, usize, Option<&StageTable>, &[f32], &[f32]);
+
 /// A backend's full set of stage codelets, monomorphised over the two
 /// fusion flags (`CONJ_IN` conjugates loads — first stage of an inverse
 /// transform; `FUSE_OUT` conjugate-scales stores — last stage).
@@ -155,6 +164,48 @@ pub trait CodeletSet {
         s: usize,
         table: Option<&StageTable>,
         scale: f32,
+    );
+
+    /// MUL_SPECTRUM variants: the forward stage with the filter multiply
+    /// fused into the stores (used only as the last stage of a forward
+    /// transform, so no `CONJ_IN`/`FUSE_OUT` monomorphisation is needed).
+    #[allow(clippy::too_many_arguments)]
+    fn radix2_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    );
+
+    #[allow(clippy::too_many_arguments)]
+    fn radix4_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    );
+
+    #[allow(clippy::too_many_arguments)]
+    fn radix8_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
     );
 }
 
@@ -201,6 +252,48 @@ impl CodeletSet for ScalarCodelets {
         scale: f32,
     ) {
         super::radix8::radix8_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
+    }
+
+    fn radix2_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    ) {
+        super::stockham::radix2_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
+    }
+
+    fn radix4_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    ) {
+        super::stockham::radix4_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
+    }
+
+    fn radix8_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    ) {
+        super::radix8::radix8_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
     }
 }
 
@@ -250,6 +343,48 @@ impl CodeletSet for SimdCodelets {
     ) {
         super::simd::radix8_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
     }
+
+    fn radix2_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    ) {
+        super::simd::radix2_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
+    }
+
+    fn radix4_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    ) {
+        super::simd::radix4_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
+    }
+
+    fn radix8_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    ) {
+        super::simd::radix8_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
+    }
 }
 
 /// A [`CodeletSet`] flattened into function pointers: one per
@@ -262,6 +397,11 @@ pub struct CodeletTable {
     r2: [StageFn; 4],
     r4: [StageFn; 4],
     r8: [StageFn; 4],
+    /// MUL_SPECTRUM variants (forward last stage with the fused filter
+    /// multiply), one per radix.
+    r2_mul: MulStageFn,
+    r4_mul: MulStageFn,
+    r8_mul: MulStageFn,
 }
 
 impl CodeletTable {
@@ -287,6 +427,9 @@ impl CodeletTable {
                 C::radix8::<false, true>,
                 C::radix8::<true, true>,
             ],
+            r2_mul: C::radix2_mul,
+            r4_mul: C::radix4_mul,
+            r8_mul: C::radix8_mul,
         }
     }
 
@@ -302,6 +445,18 @@ impl CodeletTable {
             2 => self.r2[idx],
             4 => self.r4[idx],
             8 => self.r8[idx],
+            other => panic!("unsupported radix {other}"),
+        }
+    }
+
+    /// The MUL_SPECTRUM stage codelet for one radix (the fused
+    /// last-stage filter multiply of the spectral pipeline).
+    #[inline]
+    pub fn stage_mul(&self, radix: usize) -> MulStageFn {
+        match radix {
+            2 => self.r2_mul,
+            4 => self.r4_mul,
+            8 => self.r8_mul,
             other => panic!("unsupported radix {other}"),
         }
     }
@@ -392,6 +547,34 @@ mod tests {
     #[should_panic]
     fn table_rejects_unknown_radix() {
         scalar_table().stage(3, false, false);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mul_table_rejects_unknown_radix() {
+        scalar_table().stage_mul(3);
+    }
+
+    #[test]
+    fn every_mul_stage_variant_dispatches() {
+        // Smoke for the MUL_SPECTRUM entries; numerics are pinned by the
+        // pipeline conformance tests.
+        let mut rng = Rng::new(71);
+        for &backend in CodeletBackend::compiled() {
+            let t = table(backend);
+            for radix in [2usize, 4, 8] {
+                let (n, s) = (radix, 24usize);
+                let xre = rng.signal(n * s);
+                let xim = rng.signal(n * s);
+                let hre = rng.signal(n * s);
+                let him = rng.signal(n * s);
+                let mut yre = vec![0.0f32; n * s];
+                let mut yim = vec![0.0f32; n * s];
+                let f = t.stage_mul(radix);
+                f(&xre, &xim, &mut yre, &mut yim, n, s, None, &hre, &him);
+                assert!(yre.iter().chain(yim.iter()).all(|v| v.is_finite()));
+            }
+        }
     }
 
     #[test]

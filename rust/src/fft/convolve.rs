@@ -3,47 +3,50 @@
 //! correlation", paper ref. [9]), and the core of the matched filtering
 //! the SAR pipeline does.
 //!
-//! Two paths:
+//! Both paths execute through the fused [`SpectralPipeline`]: the
+//! kernel's spectrum is cached once, the per-block multiply rides the
+//! last forward FFT stage in the register tier, and the fused inverse
+//! consumes the product in place — one executor pass per block, zero
+//! intermediate allocations, no standalone multiply pass (see
+//! [`super::pipeline`]).
+//!
 //! * [`circular_convolve`] — single-block circular convolution.
 //! * [`OverlapSave`] — streaming linear convolution of arbitrary-length
 //!   signals against a fixed kernel, in FFT blocks (the production
-//!   radar/front-end structure: one plan, many blocks).
+//!   radar/front-end structure: one plan, many blocks), with a reused
+//!   block buffer so steady-state streaming allocates nothing per block.
 
-use super::plan::{NativePlan, NativePlanner, Variant};
-use super::Direction;
+use super::pipeline::SpectralPipeline;
+use super::plan::NativePlanner;
 use crate::util::complex::{SplitComplex, C32};
 use anyhow::{ensure, Result};
-use std::sync::Arc;
 
-/// Circular convolution of two length-N sequences via FFT.
+/// Circular convolution of two length-N sequences via the fused
+/// pipeline: `FFT(b)` is cached as the filter spectrum, then `a` makes a
+/// single forward-multiply-inverse pass.
 pub fn circular_convolve(
     planner: &NativePlanner,
     a: &SplitComplex,
     b: &SplitComplex,
 ) -> Result<SplitComplex> {
     ensure!(a.len() == b.len(), "lengths must match");
-    let n = a.len();
-    let plan = planner.plan(n, Variant::Radix8)?;
-    let fa = plan.execute_batch(a, 1, Direction::Forward)?;
-    let fb = plan.execute_batch(b, 1, Direction::Forward)?;
-    let mut prod = SplitComplex::zeros(n);
-    for i in 0..n {
-        prod.set(i, fa.get(i) * fb.get(i));
-    }
-    plan.execute_batch(&prod, 1, Direction::Inverse)
+    let pipe = SpectralPipeline::new(planner, b, a.len())?;
+    pipe.process(a, 1)
 }
 
 /// Streaming overlap-save convolver: linear convolution with a fixed
 /// kernel of length `k`, processed in FFT blocks of size `n` (so each
-/// block yields `n - k + 1` fresh output samples).
+/// block yields `n - k + 1` fresh output samples). Each block is one
+/// fused pipeline pass over the reused block buffer.
 pub struct OverlapSave {
-    plan: Arc<NativePlan>,
-    /// Frequency response of the kernel, length n.
-    h: SplitComplex,
+    pipe: SpectralPipeline,
     n: usize,
     k: usize,
     /// Trailing k-1 input samples carried between blocks.
     tail: SplitComplex,
+    /// Reused per-block staging buffer (assembled input, transformed in
+    /// place) — no per-block allocation once constructed.
+    block: SplitComplex,
 }
 
 impl OverlapSave {
@@ -51,18 +54,25 @@ impl OverlapSave {
         let k = kernel.len();
         ensure!(k >= 1, "empty kernel");
         ensure!(n.is_power_of_two() && n >= 2 * k, "block {n} must be a power of two >= 2k");
-        let plan = planner.plan(n, Variant::Radix8)?;
-        let mut padded = SplitComplex::zeros(n);
-        for i in 0..k {
-            padded.set(i, kernel.get(i));
-        }
-        let h = plan.execute_batch(&padded, 1, Direction::Forward)?;
-        Ok(OverlapSave { plan, h, n, k, tail: SplitComplex::zeros(k.saturating_sub(1)) })
+        let pipe = SpectralPipeline::new(planner, kernel, n)?;
+        Ok(OverlapSave {
+            pipe,
+            n,
+            k,
+            tail: SplitComplex::zeros(k.saturating_sub(1)),
+            block: SplitComplex::zeros(n),
+        })
     }
 
     /// Valid output samples per block.
     pub fn block_output(&self) -> usize {
         self.n - self.k + 1
+    }
+
+    /// Workspace-pool telemetry of the underlying pipeline — flat across
+    /// blocks once warm (the zero-per-block-allocations guarantee).
+    pub fn workspace_stats(&self) -> (usize, usize) {
+        self.pipe.workspace_stats()
     }
 
     /// Feed `input`; returns the linear-convolution output produced so
@@ -76,39 +86,32 @@ impl OverlapSave {
         let mut consumed = 0usize;
 
         while produced < input.len() {
-            // Assemble a block: tail + next chunk of input (zero-pad the
-            // final partial block).
-            let mut block = SplitComplex::zeros(self.n);
-            for i in 0..overlap {
-                block.set(i, self.tail.get(i));
-            }
+            // Assemble a block in the reused buffer: tail + next chunk
+            // of input (zero-pad the final partial block).
             let take = step.min(input.len() - consumed);
-            for i in 0..take {
-                block.set(overlap + i, input.get(consumed + i));
+            self.block.re[..overlap].copy_from_slice(&self.tail.re);
+            self.block.im[..overlap].copy_from_slice(&self.tail.im);
+            self.block.re[overlap..overlap + take]
+                .copy_from_slice(&input.re[consumed..consumed + take]);
+            self.block.im[overlap..overlap + take]
+                .copy_from_slice(&input.im[consumed..consumed + take]);
+            self.block.re[overlap + take..].fill(0.0);
+            self.block.im[overlap + take..].fill(0.0);
+
+            // Slide the tail now — the pipeline transforms the block in
+            // place, so the last k-1 *input* samples must be saved first.
+            for i in 0..overlap {
+                self.tail.set(i, self.block.get(take + i));
             }
-            // Convolve in frequency domain.
-            let f = self.plan.execute_batch(&block, 1, Direction::Forward)?;
-            let mut prod = SplitComplex::zeros(self.n);
-            for i in 0..self.n {
-                prod.set(i, f.get(i) * self.h.get(i));
-            }
-            let y = self.plan.execute_batch(&prod, 1, Direction::Inverse)?;
+
+            // One fused forward-multiply-inverse pass, in place.
+            self.pipe.process_into(&mut self.block, 1)?;
+
             // Discard the first k-1 (aliased) samples; keep the valid run.
             let emit = take.min(input.len() - produced);
             for i in 0..emit {
-                out.set(produced + i, y.get(overlap + i));
+                out.set(produced + i, self.block.get(overlap + i));
             }
-            // Slide the tail: last k-1 samples of (tail + consumed chunk).
-            let mut new_tail = SplitComplex::zeros(overlap);
-            for i in 0..overlap {
-                // Position from the end of the assembled block input.
-                let pos = overlap + take;
-                let idx = pos.saturating_sub(overlap) + i;
-                if idx < pos {
-                    new_tail.set(i, block.get(idx));
-                }
-            }
-            self.tail = new_tail;
             produced += emit;
             consumed += take;
         }
@@ -132,6 +135,7 @@ pub fn direct_convolve(x: &SplitComplex, k: &SplitComplex) -> SplitComplex {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fft::Direction;
     use crate::util::rng::Rng;
 
     #[test]
@@ -152,6 +156,30 @@ mod tests {
             want.set(i, acc);
         }
         assert!(got.rel_l2_error(&want) < 2e-4, "{}", got.rel_l2_error(&want));
+    }
+
+    #[test]
+    fn circular_convolve_is_bitwise_three_dispatch() {
+        // The pipeline rewrite must reproduce the original composed
+        // formulation exactly: fft(a), fft(b), elementwise product,
+        // ifft — all on the same executor.
+        let planner = NativePlanner::new();
+        let mut rng = Rng::new(703);
+        for &n in &[64usize, 256, 1024] {
+            let a = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let b = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let got = circular_convolve(&planner, &a, &b).unwrap();
+            let exec = planner.executor_auto(n).unwrap();
+            let fa = exec.execute_batch(&a, 1, Direction::Forward).unwrap();
+            let fb = exec.execute_batch(&b, 1, Direction::Forward).unwrap();
+            let mut prod = SplitComplex::zeros(n);
+            for i in 0..n {
+                prod.set(i, fa.get(i) * fb.get(i));
+            }
+            exec.execute_batch_into(&mut prod, 1, Direction::Inverse).unwrap();
+            assert_eq!(got.re, prod.re, "re: n={n}");
+            assert_eq!(got.im, prod.im, "im: n={n}");
+        }
     }
 
     #[test]
@@ -187,6 +215,25 @@ mod tests {
         let want = direct_convolve(&x, &kernel);
         let err = got.rel_l2_error(&want);
         assert!(err < 5e-4, "rel err {err}");
+    }
+
+    #[test]
+    fn overlap_save_steady_state_allocates_nothing_per_block() {
+        let planner = NativePlanner::new();
+        let mut rng = Rng::new(704);
+        let kernel = SplitComplex { re: rng.signal(9), im: rng.signal(9) };
+        let mut os = OverlapSave::new(&planner, &kernel, 64).unwrap();
+        // Warmup: the first blocks grow the pooled workspace to shape.
+        let x = SplitComplex { re: rng.signal(300), im: rng.signal(300) };
+        os.process(&x).unwrap();
+        let warm = os.workspace_stats();
+        assert!(warm.0 >= 1);
+        // Steady state: many more blocks, no pool growth.
+        for _ in 0..6 {
+            let x = SplitComplex { re: rng.signal(300), im: rng.signal(300) };
+            os.process(&x).unwrap();
+        }
+        assert_eq!(os.workspace_stats(), warm, "overlap-save allocated per block");
     }
 
     #[test]

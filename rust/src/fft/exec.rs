@@ -273,11 +273,110 @@ impl BatchExecutor {
         batch: usize,
         dir: Direction,
     ) -> Result<()> {
-        if self.threads > 1 && batch >= 2 * PAR_MIN_LINES && self.plan.n * batch >= PAR_MIN_ELEMS {
+        if self.par_worthwhile(batch) {
             self.execute_batch_par_into(data, batch, dir)
         } else {
             self.execute_batch_into(data, batch, dir)
         }
+    }
+
+    fn par_worthwhile(&self, batch: usize) -> bool {
+        self.threads > 1 && batch >= 2 * PAR_MIN_LINES && self.plan.n * batch >= PAR_MIN_ELEMS
+    }
+
+    fn check_filter(&self, filter: &SplitComplex) -> Result<()> {
+        ensure!(
+            filter.len() == self.plan.n,
+            "filter length {} != n({})",
+            filter.len(),
+            self.plan.n
+        );
+        Ok(())
+    }
+
+    /// Serial fused spectral pipeline, in place: per line, forward FFT
+    /// with the `filter` multiply fused into the last stage, then the
+    /// fused inverse — matched filtering with zero intermediate
+    /// allocations and no standalone multiply pass (see
+    /// [`crate::fft::pipeline`]).
+    pub fn execute_pipeline_into(
+        &self,
+        data: &mut SplitComplex,
+        batch: usize,
+        filter: &SplitComplex,
+    ) -> Result<()> {
+        self.check(data.len(), batch)?;
+        self.check_filter(filter)?;
+        let mut ws = self.pool.acquire();
+        self.plan.run_lines_pipeline(&mut data.re, &mut data.im, batch, filter, &mut ws);
+        self.pool.release(ws);
+        Ok(())
+    }
+
+    /// Batch-parallel fused pipeline: lines striped over scoped worker
+    /// threads exactly like [`Self::execute_batch_par_into`], each
+    /// worker running the full forward-multiply-inverse chain per line
+    /// on its own pooled workspace.
+    pub fn execute_pipeline_par_into(
+        &self,
+        data: &mut SplitComplex,
+        batch: usize,
+        filter: &SplitComplex,
+    ) -> Result<()> {
+        self.check(data.len(), batch)?;
+        self.check_filter(filter)?;
+        let workers = self.threads.min(batch.div_ceil(PAR_MIN_LINES)).max(1);
+        if workers == 1 {
+            let mut ws = self.pool.acquire();
+            self.plan.run_lines_pipeline(&mut data.re, &mut data.im, batch, filter, &mut ws);
+            self.pool.release(ws);
+            return Ok(());
+        }
+        let n = self.plan.n;
+        let chunk_lines = batch.div_ceil(workers);
+        let chunk = chunk_lines * n;
+        let chunks = batch.div_ceil(chunk_lines);
+        let wss: Vec<Workspace> = (0..chunks).map(|_| self.pool.acquire()).collect();
+        let plan = self.plan.as_ref();
+        let pool = &self.pool;
+        std::thread::scope(|scope| {
+            for ((cre, cim), mut ws) in
+                data.re.chunks_mut(chunk).zip(data.im.chunks_mut(chunk)).zip(wss)
+            {
+                scope.spawn(move || {
+                    plan.run_lines_pipeline(cre, cim, cre.len() / n, filter, &mut ws);
+                    pool.release(ws);
+                });
+            }
+        });
+        Ok(())
+    }
+
+    /// Pipeline policy entry point mirroring
+    /// [`Self::execute_batch_auto_into`].
+    pub fn execute_pipeline_auto_into(
+        &self,
+        data: &mut SplitComplex,
+        batch: usize,
+        filter: &SplitComplex,
+    ) -> Result<()> {
+        if self.par_worthwhile(batch) {
+            self.execute_pipeline_par_into(data, batch, filter)
+        } else {
+            self.execute_pipeline_into(data, batch, filter)
+        }
+    }
+
+    /// Out-of-place pipeline convenience (tests and benches).
+    pub fn execute_pipeline(
+        &self,
+        input: &SplitComplex,
+        batch: usize,
+        filter: &SplitComplex,
+    ) -> Result<SplitComplex> {
+        let mut data = input.clone();
+        self.execute_pipeline_auto_into(&mut data, batch, filter)?;
+        Ok(data)
     }
 }
 
@@ -372,6 +471,65 @@ mod tests {
         assert!(ex.execute_batch(&x, 1, Direction::Forward).is_err());
         let mut d = SplitComplex::zeros(256);
         assert!(ex.execute_batch_par_into(&mut d, 2, Direction::Forward).is_err());
+        // Pipeline shape checks: wrong filter length and wrong data length.
+        assert!(ex.execute_pipeline_into(&mut d, 1, &SplitComplex::zeros(128)).is_err());
+        let mut short = SplitComplex::zeros(100);
+        assert!(ex
+            .execute_pipeline_into(&mut short, 1, &SplitComplex::zeros(256))
+            .is_err());
+    }
+
+    #[test]
+    fn pipeline_par_matches_serial_exactly() {
+        let mut rng = Rng::new(85);
+        for &(n, batch) in &[(256usize, 3usize), (1024, 64), (8192, 6)] {
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let ex = executor(n, Variant::Radix8, 4);
+            let mut serial = x.clone();
+            ex.execute_pipeline_into(&mut serial, batch, &h).unwrap();
+            let mut par = x.clone();
+            ex.execute_pipeline_par_into(&mut par, batch, &h).unwrap();
+            assert_eq!(serial.re, par.re, "n={n} batch={batch}");
+            assert_eq!(serial.im, par.im, "n={n} batch={batch}");
+        }
+    }
+
+    #[test]
+    fn pipeline_identity_filter_roundtrips() {
+        // filter = all-ones spectrum: ifft(fft(x) * 1) must reproduce x.
+        let mut rng = Rng::new(86);
+        let (n, batch) = (1024, 5);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let ones = SplitComplex { re: vec![1.0; n], im: vec![0.0; n] };
+        let ex = executor(n, Variant::Radix8, 2);
+        let y = ex.execute_pipeline(&x, batch, &ones).unwrap();
+        assert!(y.rel_l2_error(&x) < 1e-4, "{}", y.rel_l2_error(&x));
+    }
+
+    #[test]
+    fn pipeline_pool_reaches_steady_state() {
+        // The fused pipeline must inherit the executor's zero-allocation
+        // steady state: repeated same-shape batches reuse the pooled
+        // workspaces with no new buffer growth.
+        let mut rng = Rng::new(87);
+        for &(n, batch) in &[(1024usize, 16usize), (8192, 4)] {
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let ex = executor(n, Variant::Radix8, 4);
+            let mut d = x.clone();
+            ex.execute_pipeline_auto_into(&mut d, batch, &h).unwrap();
+            let created = ex.pool_stats().0;
+            let grows = ex.pool_grow_events();
+            assert!(created >= 1);
+            for _ in 0..8 {
+                let mut d = x.clone();
+                ex.execute_pipeline_auto_into(&mut d, batch, &h).unwrap();
+            }
+            assert_eq!(ex.pool_stats().0, created, "n={n}: workspace count grew");
+            assert_eq!(ex.pool_grow_events(), grows, "n={n}: scratch reallocated");
+            assert_eq!(ex.pool_stats().1, created, "n={n}: workspaces parked");
+        }
     }
 
     #[test]

@@ -182,11 +182,103 @@ pub fn fourstep_line_fused(
     inverse: bool,
 ) {
     let n = n1 * n2;
+    let yre = &mut yre[..n];
+    let yim = &mut yim[..n];
+    fourstep_steps123(
+        codelets, re, im, n1, n2, radices, tables, twiddles, yre, yim, sre, sim, inverse,
+    );
+
+    // Step 4: transpose (n1, n2) back into (re, im) at index k1 + n1*k2,
+    // fusing the inverse conjugate + 1/N scale into the store.
+    if inverse {
+        let k = 1.0 / n as f32;
+        for k1 in 0..n1 {
+            for k2 in 0..n2 {
+                re[k1 + n1 * k2] = yre[k1 * n2 + k2] * k;
+                im[k1 + n1 * k2] = -(yim[k1 * n2 + k2] * k);
+            }
+        }
+    } else {
+        for k1 in 0..n1 {
+            for k2 in 0..n2 {
+                re[k1 + n1 * k2] = yre[k1 * n2 + k2];
+                im[k1 + n1 * k2] = yim[k1 * n2 + k2];
+            }
+        }
+    }
+}
+
+/// Four-step **forward** transform with the spectral pipeline's fused
+/// filter multiply: identical to the forward path of
+/// [`fourstep_line_fused`] except that step 4's transpose store
+/// multiplies each output bin by `h[bin]` (same op order as the
+/// standalone multiply pass it replaces, so the result is bitwise equal
+/// to transform-then-multiply). The four-step analog of
+/// [`super::stockham::transform_line_mul_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn fourstep_line_mul(
+    codelets: &CodeletTable,
+    re: &mut [f32],
+    im: &mut [f32],
+    n1: usize,
+    n2: usize,
+    radices: &[usize],
+    tables: Option<&PlanTables>,
+    twiddles: &[C32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    sre: &mut [f32],
+    sim: &mut [f32],
+    hre: &[f32],
+    him: &[f32],
+) {
+    let n = n1 * n2;
+    assert!(hre.len() >= n && him.len() >= n);
+    let yre = &mut yre[..n];
+    let yim = &mut yim[..n];
+    fourstep_steps123(
+        codelets, re, im, n1, n2, radices, tables, twiddles, yre, yim, sre, sim, false,
+    );
+
+    // Step 4: transpose with the filter multiply fused into the store,
+    // while the row-FFT output is still hot.
+    for k1 in 0..n1 {
+        for k2 in 0..n2 {
+            let idx = k1 + n1 * k2;
+            let (tr, ti) = (yre[k1 * n2 + k2], yim[k1 * n2 + k2]);
+            re[idx] = tr * hre[idx] - ti * him[idx];
+            im[idx] = tr * him[idx] + ti * hre[idx];
+        }
+    }
+}
+
+/// Steps 1-3 of the four-step decomposition, shared by the plain, fused
+/// -inverse, and fused-multiply step-4 variants: column DFT + twiddle
+/// (with the inverse input conjugation folded in via `inverse`), then
+/// the length-`n2` row FFTs. The result is left in the `(yre, yim)`
+/// staging matrix.
+#[allow(clippy::too_many_arguments)]
+fn fourstep_steps123(
+    codelets: &CodeletTable,
+    re: &[f32],
+    im: &[f32],
+    n1: usize,
+    n2: usize,
+    radices: &[usize],
+    tables: Option<&PlanTables>,
+    twiddles: &[C32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    sre: &mut [f32],
+    sim: &mut [f32],
+    inverse: bool,
+) {
+    let n = n1 * n2;
     assert_eq!(re.len(), n);
     assert_eq!(im.len(), n);
     assert_eq!(twiddles.len(), n);
-    let yre = &mut yre[..n];
-    let yim = &mut yim[..n];
+    debug_assert_eq!(yre.len(), n);
+    debug_assert_eq!(yim.len(), n);
     let in_sign = if inverse { -1.0f32 } else { 1.0f32 };
 
     // Steps 1+2: length-n1 DFT down the columns, fused with the twiddle
@@ -245,25 +337,6 @@ pub fn fourstep_line_fused(
             tables,
             false,
         );
-    }
-
-    // Step 4: transpose (n1, n2) back into (re, im) at index k1 + n1*k2,
-    // fusing the inverse conjugate + 1/N scale into the store.
-    if inverse {
-        let k = 1.0 / n as f32;
-        for k1 in 0..n1 {
-            for k2 in 0..n2 {
-                re[k1 + n1 * k2] = yre[k1 * n2 + k2] * k;
-                im[k1 + n1 * k2] = -(yim[k1 * n2 + k2] * k);
-            }
-        }
-    } else {
-        for k1 in 0..n1 {
-            for k2 in 0..n2 {
-                re[k1 + n1 * k2] = yre[k1 * n2 + k2];
-                im[k1 + n1 * k2] = yim[k1 * n2 + k2];
-            }
-        }
     }
 }
 
@@ -368,6 +441,48 @@ mod tests {
         );
         let err = y.rel_l2_error(&x);
         assert!(err < 1e-4, "roundtrip err {err}");
+    }
+
+    #[test]
+    fn fourstep_mul_is_bitwise_transform_then_multiply() {
+        // Small splits for both n1 values: the fused step-4 multiply
+        // must equal forward four-step followed by the standalone
+        // elementwise product, bit for bit.
+        let mut rng = Rng::new(27);
+        for &(n1, n2) in &[(2usize, 16usize), (4, 8)] {
+            let n = n1 * n2;
+            let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let radices = radix_schedule(n2, 8);
+            let tw = fourstep_twiddles(n1, n2, false);
+            // Reference: plain four-step, then multiply.
+            let mut want = fourstep_line(&x, n1, n2, &radices, None, &tw);
+            for i in 0..n {
+                let v = want.get(i) * h.get(i);
+                want.set(i, v);
+            }
+            // Fused.
+            let mut got = x.clone();
+            let mut scratch = FourStepScratch::new(n1, n2);
+            fourstep_line_mul(
+                codelet::scalar_table(),
+                &mut got.re,
+                &mut got.im,
+                n1,
+                n2,
+                &radices,
+                None,
+                &tw,
+                &mut scratch.y.re,
+                &mut scratch.y.im,
+                &mut scratch.sre,
+                &mut scratch.sim,
+                &h.re,
+                &h.im,
+            );
+            assert_eq!(got.re, want.re, "n1={n1} n2={n2} re");
+            assert_eq!(got.im, want.im, "n1={n1} n2={n2} im");
+        }
     }
 
     #[test]

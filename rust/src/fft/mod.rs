@@ -38,6 +38,20 @@
 //!   over scoped worker threads (one pooled workspace each), the CPU
 //!   analog of the paper's Fig. 1 "throughput needs batch >= 64 in
 //!   flight" finding.
+//! * **Spectral pipeline** — [`pipeline::SpectralPipeline`]: the
+//!   paper's motivating workload (matched filtering, §II-D/§VII-D) as a
+//!   single fused pass per line. The filter multiply rides the *last
+//!   forward stage* (the codelet table's MUL_SPECTRUM variants, or the
+//!   four-step transpose store), so each spectrum bin is multiplied by
+//!   `H[bin]` in the same registers that computed it, and the fused
+//!   inverse consumes the product in place — the unfiltered spectrum
+//!   and the product never make a standalone trip through the exchange
+//!   tier, and there is no separate multiply pass at all. Convolution
+//!   ([`convolve`]), real-FFT filtering ([`real`]), SAR range
+//!   compression, and the coordinator's `MatchedFilter` traffic all
+//!   execute through it. Fused output is bitwise equal to the
+//!   three-dispatch composition (same IEEE op sequence), which the
+//!   conformance tests assert per size and backend.
 //!
 //! Both codelet backends execute the identical IEEE op sequence per
 //! element, so their outputs are bitwise equal — pinned down by
@@ -57,6 +71,7 @@ pub mod convolve;
 pub mod dft;
 pub mod exec;
 pub mod fourstep;
+pub mod pipeline;
 pub mod plan;
 pub mod radix8;
 pub mod real;

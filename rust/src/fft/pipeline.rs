@@ -1,0 +1,242 @@
+//! The fused spectral pipeline — batched matched filtering
+//! (FFT -> spectrum multiply -> IFFT) as **one** executor pass per line.
+//!
+//! This is the paper's motivating workload (§I, §II-D, §VII-D: radar
+//! range compression) executed by its own rule: do work while the data
+//! is already in the register tier. The three-dispatch formulation
+//!
+//! ```text
+//! spec = fft(x); prod = spec .* H; y = ifft(prod)
+//! ```
+//!
+//! stores the whole spectrum to the exchange tier, re-reads it for a
+//! standalone multiply pass, stores the product, and re-reads it again
+//! for the inverse — three full round trips that exist only because the
+//! steps were phrased as separate dispatches. [`SpectralPipeline`]
+//! removes them:
+//!
+//! * the filter multiply is fused into the **last forward stage** via
+//!   the codelet table's MUL_SPECTRUM variants
+//!   ([`CodeletTable::stage_mul`](super::codelet::CodeletTable::stage_mul),
+//!   or the four-step transpose store for N > 4096), so each spectrum
+//!   bin is multiplied by `H[bin]` in the same registers that computed
+//!   it;
+//! * the inverse transform's fused `CONJ_IN` first stage then consumes
+//!   the product in place — the product is never materialised as a
+//!   separate buffer at all;
+//! * all scratch comes from the executor's pooled workspaces, so
+//!   steady-state processing performs **zero** heap allocations per
+//!   block, and batches stripe over worker threads like any other
+//!   executor traffic.
+//!
+//! Because the fused stages run the identical IEEE op sequence on
+//! identical values (the multiply uses the exact
+//! [`C32`](crate::util::complex::C32) product order of the standalone
+//! pass), the pipeline's output is **bitwise equal** to the
+//! three-dispatch composition on the same plan — pinned down by
+//! `tests/codelet_conformance.rs` across sizes and codelet backends.
+//!
+//! Everything convolution-shaped routes through here:
+//! [`super::convolve::circular_convolve`], the streaming
+//! [`super::convolve::OverlapSave`], SAR range compression
+//! ([`crate::sar::range`]), and the coordinator's `MatchedFilter`
+//! request kind (the native backend's `rangecomp*` artifacts execute
+//! [`BatchExecutor::execute_pipeline_auto_into`] directly).
+
+use super::exec::BatchExecutor;
+use super::plan::NativePlanner;
+use super::Direction;
+use crate::util::complex::SplitComplex;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// A cached matched-filter pipeline for one transform size: the plan
+/// pair (forward + inverse share one [`NativePlan`](super::plan::NativePlan)
+/// and its pooled executor), the filter's frequency response, and the
+/// workspace pool behind the executor.
+#[derive(Debug)]
+pub struct SpectralPipeline {
+    exec: Arc<BatchExecutor>,
+    /// Cached length-`n` frequency response the pipeline multiplies by.
+    filter: SplitComplex,
+}
+
+impl SpectralPipeline {
+    /// Pipeline for a **time-domain** kernel: zero-pads `kernel` to `n`
+    /// and caches its spectrum, computed through the very executor the
+    /// pipeline will run on (so the cached spectrum is bitwise the one
+    /// the three-dispatch formulation would have used).
+    pub fn new(
+        planner: &NativePlanner,
+        kernel: &SplitComplex,
+        n: usize,
+    ) -> Result<SpectralPipeline> {
+        ensure!(!kernel.is_empty(), "empty kernel");
+        ensure!(
+            kernel.len() <= n,
+            "kernel length {} exceeds block size {n}",
+            kernel.len()
+        );
+        let exec = planner.executor_auto(n)?;
+        let mut padded = SplitComplex::zeros(n);
+        padded.re[..kernel.len()].copy_from_slice(&kernel.re);
+        padded.im[..kernel.len()].copy_from_slice(&kernel.im);
+        exec.execute_batch_into(&mut padded, 1, Direction::Forward)?;
+        Ok(SpectralPipeline { exec, filter: padded })
+    }
+
+    /// Pipeline for an already-computed length-`n` frequency response
+    /// (e.g. a chirp matched filter `conj(FFT(pulse))`).
+    pub fn from_spectrum(
+        planner: &NativePlanner,
+        spectrum: SplitComplex,
+    ) -> Result<SpectralPipeline> {
+        let exec = planner.executor_auto(spectrum.len())?;
+        Ok(SpectralPipeline { exec, filter: spectrum })
+    }
+
+    /// Pipeline on an explicit executor (pinned variant/backend — the
+    /// bench and conformance knob; [`Self::from_spectrum`] picks the
+    /// preferred variant for the size).
+    pub fn with_executor(
+        exec: Arc<BatchExecutor>,
+        spectrum: SplitComplex,
+    ) -> Result<SpectralPipeline> {
+        ensure!(
+            spectrum.len() == exec.plan().n,
+            "spectrum length {} != executor size {}",
+            spectrum.len(),
+            exec.plan().n
+        );
+        Ok(SpectralPipeline { exec, filter: spectrum })
+    }
+
+    /// Transform size (block length) of the pipeline.
+    pub fn n(&self) -> usize {
+        self.exec.plan().n
+    }
+
+    /// The cached frequency response.
+    pub fn filter(&self) -> &SplitComplex {
+        &self.filter
+    }
+
+    /// The pooled executor the pipeline dispatches through.
+    pub fn executor(&self) -> &BatchExecutor {
+        &self.exec
+    }
+
+    /// Workspace-pool telemetry `(workspaces created, buffer grow
+    /// events)` — flat across repeated same-shape blocks once warm (the
+    /// zero-allocations-per-block guarantee the tests pin).
+    pub fn workspace_stats(&self) -> (usize, usize) {
+        (self.exec.pool_stats().0, self.exec.pool_grow_events())
+    }
+
+    /// Matched-filter `lines` rows of length `n` in place (auto
+    /// serial/parallel policy, pooled scratch, fused multiply).
+    pub fn process_into(&self, data: &mut SplitComplex, lines: usize) -> Result<()> {
+        self.exec.execute_pipeline_auto_into(data, lines, &self.filter)
+    }
+
+    /// Out-of-place convenience over [`Self::process_into`].
+    pub fn process(&self, data: &SplitComplex, lines: usize) -> Result<SplitComplex> {
+        let mut out = data.clone();
+        self.process_into(&mut out, lines)?;
+        Ok(out)
+    }
+
+    /// Nominal pipeline FLOPs for `lines` blocks (2 FFTs + the 6N
+    /// multiply per line — the GFLOPS numerator benches and metrics use).
+    pub fn nominal_flops(&self, lines: usize) -> f64 {
+        crate::util::pipeline_flops(self.n()) * lines as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::plan::Variant;
+    use crate::util::complex::C32;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pipeline_matches_three_dispatch_composition() {
+        // SpectralPipeline vs explicit fft -> multiply -> ifft on the
+        // same executor: bitwise equal (identical op sequence).
+        let planner = NativePlanner::new();
+        let mut rng = Rng::new(500);
+        for &(n, lines) in &[(256usize, 3usize), (1024, 2), (8192, 1)] {
+            let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+            let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let pipe = SpectralPipeline::from_spectrum(&planner, h.clone()).unwrap();
+            let exec = planner.executor_auto(n).unwrap();
+            let f = exec.execute_batch(&x, lines, Direction::Forward).unwrap();
+            let mut prod = SplitComplex::zeros(n * lines);
+            for l in 0..lines {
+                for i in 0..n {
+                    prod.set(l * n + i, f.get(l * n + i) * h.get(i));
+                }
+            }
+            let mut want = prod;
+            exec.execute_batch_into(&mut want, lines, Direction::Inverse).unwrap();
+            let got = pipe.process(&x, lines).unwrap();
+            assert_eq!(got.re, want.re, "re: n={n}");
+            assert_eq!(got.im, want.im, "im: n={n}");
+        }
+    }
+
+    #[test]
+    fn time_domain_kernel_constructor_pads_and_transforms() {
+        let planner = NativePlanner::new();
+        let n = 256;
+        // delta kernel -> all-ones spectrum -> identity pipeline.
+        let mut delta = SplitComplex::zeros(3);
+        delta.set(0, C32::ONE);
+        let pipe = SpectralPipeline::new(&planner, &delta, n).unwrap();
+        assert_eq!(pipe.n(), n);
+        let mut rng = Rng::new(501);
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let y = pipe.process(&x, 1).unwrap();
+        assert!(y.rel_l2_error(&x) < 1e-4);
+    }
+
+    #[test]
+    fn steady_state_has_zero_per_block_allocations() {
+        let planner = NativePlanner::new();
+        let n = 512;
+        let mut rng = Rng::new(502);
+        let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let pipe = SpectralPipeline::from_spectrum(&planner, h).unwrap();
+        let mut block = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        pipe.process_into(&mut block, 1).unwrap(); // warmup
+        let warm = pipe.workspace_stats();
+        for _ in 0..16 {
+            pipe.process_into(&mut block, 1).unwrap();
+        }
+        assert_eq!(pipe.workspace_stats(), warm, "pipeline allocated past warmup");
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let planner = NativePlanner::new();
+        assert!(SpectralPipeline::new(&planner, &SplitComplex::zeros(0), 64).is_err());
+        assert!(SpectralPipeline::new(&planner, &SplitComplex::zeros(100), 64).is_err());
+        assert!(SpectralPipeline::from_spectrum(&planner, SplitComplex::zeros(100)).is_err());
+        let exec = planner.executor(256, Variant::Radix8).unwrap();
+        assert!(SpectralPipeline::with_executor(exec, SplitComplex::zeros(100)).is_err());
+        let pipe = SpectralPipeline::from_spectrum(&planner, SplitComplex::zeros(256)).unwrap();
+        let mut wrong = SplitComplex::zeros(100);
+        assert!(pipe.process_into(&mut wrong, 1).is_err());
+    }
+
+    #[test]
+    fn nominal_flops_counts_both_ffts_and_multiply() {
+        let planner = NativePlanner::new();
+        let pipe =
+            SpectralPipeline::from_spectrum(&planner, SplitComplex::zeros(4096)).unwrap();
+        // 2 * 5*4096*12 + 6*4096 = 516096 per line.
+        assert_eq!(pipe.nominal_flops(1), 516_096.0);
+        assert_eq!(pipe.nominal_flops(3), 3.0 * 516_096.0);
+    }
+}

@@ -18,7 +18,7 @@
 use super::codelet::{self, CodeletBackend};
 use super::exec::{default_threads, BatchExecutor, Workspace};
 use super::fourstep;
-use super::stockham::{radix_schedule, transform_line_with};
+use super::stockham::{self, radix_schedule, transform_line_with};
 use super::twiddle::{fourstep_twiddles, PlanTables};
 use super::Direction;
 use crate::util::complex::{SplitComplex, C32};
@@ -47,6 +47,30 @@ impl Variant {
         match self {
             Variant::Radix4 => "radix4",
             Variant::Radix8 => "radix8",
+        }
+    }
+
+    /// The planner's per-size default variant. Radix-8 is the paper's
+    /// headline kernel, but its greedy schedule needs a radix-2 fix-up
+    /// stage whenever `log2 n % 3 == 1` (e.g. 16, 128, 1024) — and when
+    /// `log2 n` is *even* the radix-4 schedule covers the same size with
+    /// no radix-2 stage at all, which beats trading an 8 for a 2. Sizes
+    /// that don't hit the paper's artifact list (e.g. the `N/2`
+    /// sub-transforms of [`crate::fft::real::rfft`], or convolution
+    /// block sizes) route through this instead of a hardcoded
+    /// `Radix8`. Above the single-threadgroup limit the four-step row
+    /// size is 4096 (= 8^4), so radix-8 always wins there.
+    pub fn preferred(n: usize) -> Variant {
+        assert!(n.is_power_of_two() && n >= 2, "size {n} must be a power of two >= 2");
+        if n > 4096 {
+            return Variant::Radix8;
+        }
+        let r8 = radix_schedule(n, 8);
+        let r4 = radix_schedule(n, 4);
+        if r8.contains(&2) && !r4.contains(&2) {
+            Variant::Radix4
+        } else {
+            Variant::Radix8
         }
     }
 }
@@ -196,6 +220,99 @@ impl NativePlan {
         }
     }
 
+    /// Run the fused spectral pipeline over `lines` rows in place:
+    /// forward FFT with the filter multiply fused into the last stage
+    /// (MUL_SPECTRUM codelet / four-step transpose store), then the
+    /// fused inverse FFT consuming the product directly — per line, with
+    /// no standalone multiply pass and no scratch beyond `ws`. `filter`
+    /// is the length-`n` frequency response. Bitwise equal to
+    /// `ifft(fft(x) .* filter)` done as three dispatches, because every
+    /// fused op runs the identical IEEE sequence on identical values.
+    pub(crate) fn run_lines_pipeline(
+        &self,
+        re: &mut [f32],
+        im: &mut [f32],
+        lines: usize,
+        filter: &SplitComplex,
+        ws: &mut Workspace,
+    ) {
+        let n = self.n;
+        debug_assert_eq!(re.len(), n * lines);
+        debug_assert_eq!(im.len(), n * lines);
+        debug_assert_eq!(filter.len(), n);
+        let codelets = codelet::table(self.codelet);
+        match &self.decomp {
+            Decomposition::Single { radices, tables } => {
+                ws.ensure(n, 0);
+                let tables = self.use_tables.then_some(tables);
+                for b in 0..lines {
+                    let at = b * n;
+                    let (lre, lim) = (&mut re[at..at + n], &mut im[at..at + n]);
+                    stockham::transform_line_mul_with(
+                        codelets,
+                        lre,
+                        lim,
+                        &mut ws.sre,
+                        &mut ws.sim,
+                        radices,
+                        tables,
+                        &filter.re,
+                        &filter.im,
+                    );
+                    transform_line_with(
+                        codelets,
+                        lre,
+                        lim,
+                        &mut ws.sre,
+                        &mut ws.sim,
+                        radices,
+                        tables,
+                        true,
+                    );
+                }
+            }
+            Decomposition::FourStep { n1, n2, radices, tables, tw_fwd } => {
+                ws.ensure(*n2, n);
+                let tables = self.use_tables.then_some(tables);
+                for b in 0..lines {
+                    let at = b * n;
+                    let (lre, lim) = (&mut re[at..at + n], &mut im[at..at + n]);
+                    fourstep::fourstep_line_mul(
+                        codelets,
+                        lre,
+                        lim,
+                        *n1,
+                        *n2,
+                        radices,
+                        tables,
+                        tw_fwd,
+                        &mut ws.yre,
+                        &mut ws.yim,
+                        &mut ws.sre,
+                        &mut ws.sim,
+                        &filter.re,
+                        &filter.im,
+                    );
+                    fourstep::fourstep_line_fused(
+                        codelets,
+                        lre,
+                        lim,
+                        *n1,
+                        *n2,
+                        radices,
+                        tables,
+                        tw_fwd,
+                        &mut ws.yre,
+                        &mut ws.yim,
+                        &mut ws.sre,
+                        &mut ws.sim,
+                        true,
+                    );
+                }
+            }
+        }
+    }
+
     /// Transform `batch` rows of length `n` (row-major), out-of-place.
     /// One-shot convenience with local scratch; batch callers should go
     /// through [`NativePlanner::executor`] for pooled workspaces and
@@ -239,6 +356,22 @@ impl NativePlanner {
     /// backend ([`codelet::select`]).
     pub fn plan(&self, n: usize, variant: Variant) -> Result<Arc<NativePlan>> {
         self.plan_with(n, variant, codelet::select())
+    }
+
+    /// The plan for `n` on the planner's per-size preferred variant
+    /// ([`Variant::preferred`]) — what size-agnostic callers (real FFT,
+    /// convolution, the spectral pipeline) should use instead of
+    /// hardcoding a variant.
+    pub fn plan_auto(&self, n: usize) -> Result<Arc<NativePlan>> {
+        ensure!(n.is_power_of_two() && n >= 2, "FFT size {n} must be a power of two >= 2");
+        self.plan(n, Variant::preferred(n))
+    }
+
+    /// The pooled executor for `n` on the preferred variant (see
+    /// [`Self::plan_auto`]).
+    pub fn executor_auto(&self, n: usize) -> Result<Arc<BatchExecutor>> {
+        ensure!(n.is_power_of_two() && n >= 2, "FFT size {n} must be a power of two >= 2");
+        self.executor(n, Variant::preferred(n))
     }
 
     /// The plan for `(n, variant)` pinned to a codelet backend. The
@@ -473,6 +606,69 @@ mod tests {
         }
         // Radix-8 at 4096: the paper's 4-pass kernel.
         assert_eq!(NativePlan::new(4096, Variant::Radix8).unwrap().passes(), 4);
+    }
+
+    #[test]
+    fn preferred_variant_avoids_radix2_tails() {
+        // log2 n % 3 == 1 with even log2 n: radix-8 would need a radix-2
+        // fix-up that radix-4 avoids.
+        for n in [16usize, 1024] {
+            assert_eq!(Variant::preferred(n), Variant::Radix4, "n={n}");
+        }
+        // Radix-8 schedules cleanly (or ties): stay on the headline kernel.
+        for n in [8usize, 32, 64, 128, 256, 512, 2048, 4096] {
+            assert_eq!(Variant::preferred(n), Variant::Radix8, "n={n}");
+        }
+        // Four-step rows are 4096 = 8^4: always radix-8 above the limit.
+        for n in [8192usize, 16384] {
+            assert_eq!(Variant::preferred(n), Variant::Radix8, "n={n}");
+        }
+        // The policy in schedule terms: preferred never has a radix-2
+        // stage unless both variants would.
+        for log2n in 1..=12 {
+            let n = 1usize << log2n;
+            let sched = radix_schedule(n, Variant::preferred(n).max_radix());
+            if !sched.contains(&2) {
+                continue;
+            }
+            assert!(
+                radix_schedule(n, 4).contains(&2) && radix_schedule(n, 8).contains(&2),
+                "n={n}: preferred kept a radix-2 tail another variant avoids"
+            );
+        }
+    }
+
+    #[test]
+    fn pipeline_lines_match_three_dispatch_bitwise() {
+        // run_lines_pipeline (fused MUL_SPECTRUM + fused inverse) vs the
+        // explicit fft -> multiply -> ifft composition on the same plan:
+        // identical op sequence, so identical bits. Covers a single-stage
+        // size, both variants, and the four-step path.
+        let mut rng = Rng::new(36);
+        let planner = NativePlanner::new();
+        for &n in &[64usize, 1024, 4096, 8192] {
+            let batch = 2;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            for variant in [Variant::Radix4, Variant::Radix8] {
+                let plan = planner.plan(n, variant).unwrap();
+                // Reference: three dispatches.
+                let f = plan.execute_batch(&x, batch, Direction::Forward).unwrap();
+                let mut prod = SplitComplex::zeros(n * batch);
+                for b in 0..batch {
+                    for i in 0..n {
+                        prod.set(b * n + i, f.get(b * n + i) * h.get(i));
+                    }
+                }
+                let want = plan.execute_batch(&prod, batch, Direction::Inverse).unwrap();
+                // Fused pipeline.
+                let mut got = x.clone();
+                let mut ws = crate::fft::exec::Workspace::new();
+                plan.run_lines_pipeline(&mut got.re, &mut got.im, batch, &h, &mut ws);
+                assert_eq!(got.re, want.re, "re: n={n} {variant:?}");
+                assert_eq!(got.im, want.im, "im: n={n} {variant:?}");
+            }
+        }
     }
 
     #[test]

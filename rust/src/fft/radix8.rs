@@ -196,6 +196,72 @@ pub fn radix8_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
     }
 }
 
+/// The MUL_SPECTRUM variant of [`radix8_stage`]: the forward butterfly
+/// with the filter multiply fused into the stores (see
+/// [`super::stockham::radix2_stage_mul`] for the contract — only valid
+/// as the last stage of a forward transform, where output indices are
+/// spectrum bins).
+#[allow(clippy::too_many_arguments)]
+pub fn radix8_stage_mul(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    hre: &[f32],
+    him: &[f32],
+) {
+    let m = n / 8;
+    for p in 0..m {
+        let w: [C32; 8] = match table {
+            Some(t) => t.row(p).try_into().expect("radix-8 table row"),
+            None => chain::<8>(p, n),
+        };
+        let base_in = s * p;
+        let xin_re: [&[f32]; 8] = core::array::from_fn(|j| {
+            let at = base_in + j * s * m;
+            &xre[at..at + s]
+        });
+        let xin_im: [&[f32]; 8] = core::array::from_fn(|j| {
+            let at = base_in + j * s * m;
+            &xim[at..at + s]
+        });
+        let base_out = 8 * s * p;
+        let mut yout_re = split8_mut(&mut yre[base_out..base_out + 8 * s], s);
+        let mut yout_im = split8_mut(&mut yim[base_out..base_out + 8 * s], s);
+        let h_re = split8(&hre[base_out..base_out + 8 * s], s);
+        let h_im = split8(&him[base_out..base_out + 8 * s], s);
+
+        let lane = |i: usize, yr: &mut [&mut [f32]; 8], yi: &mut [&mut [f32]; 8]| {
+            let xr: [f32; 8] = core::array::from_fn(|j| xin_re[j][i]);
+            let xi: [f32; 8] = core::array::from_fn(|j| xin_im[j][i]);
+            let (or, oi) = butterfly8_lane::<false>(xr, xi, &w, 1.0);
+            for k in 0..8 {
+                (yr[k][i], yi[k][i]) =
+                    super::stockham::mul_spectrum_lane(or[k], oi[k], h_re[k][i], h_im[k][i]);
+            }
+        };
+        let mut q = 0;
+        while q + LANES <= s {
+            for l in 0..LANES {
+                lane(q + l, &mut yout_re, &mut yout_im);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            lane(i, &mut yout_re, &mut yout_im);
+        }
+    }
+}
+
+/// Split an `8*s`-long shared buffer into eight `s`-long runs (the
+/// filter-side twin of [`split8_mut`]).
+pub(crate) fn split8(buf: &[f32], s: usize) -> [&[f32]; 8] {
+    core::array::from_fn(|k| &buf[k * s..(k + 1) * s])
+}
+
 /// Split a `8*s`-long buffer into eight `s`-long mutable runs. Shared
 /// with the `std::simd` backend's radix-8 stage.
 pub(crate) fn split8_mut(buf: &mut [f32], s: usize) -> [&mut [f32]; 8] {

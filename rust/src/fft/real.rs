@@ -15,90 +15,164 @@
 //!
 //! Returns the non-redundant half-spectrum `X[0..=N/2]` (N/2 + 1 bins);
 //! the rest follows from conjugate symmetry `X[N-k] = conj(X[k])`.
+//!
+//! The `N/2` sub-transform runs on the planner's *preferred* variant
+//! for that size ([`Variant::preferred`](super::plan::Variant::preferred)
+//! — half-sizes routinely fall outside the radix-8-friendly set), and
+//! the batched entry points ([`rfft_batch`]/[`irfft_batch`]) pack every
+//! line into **one** pooled-executor dispatch (serial or batch-parallel
+//! by the executor's policy) with a shared untangle twiddle table,
+//! instead of a per-line plan call with per-line sincos.
 
-use super::plan::{NativePlanner, Variant};
+use super::plan::NativePlanner;
 use super::Direction;
 use crate::util::complex::{SplitComplex, C32};
 use anyhow::{ensure, Result};
 
-/// Forward real FFT of one line. `x.len()` = N (power of two, >= 4);
-/// output length N/2 + 1 (split complex).
-pub fn rfft(planner: &NativePlanner, x: &[f32]) -> Result<SplitComplex> {
-    let n = x.len();
-    ensure!(n.is_power_of_two() && n >= 4, "rfft size {n} must be a power of two >= 4");
-    let half = n / 2;
+/// Untangle twiddles `e^{-2πik/N}` for `k in 0..=N/2`, computed once
+/// per (batched) call and shared across lines. The values are produced
+/// by exactly the f64 sincos the per-line path used, so batched and
+/// per-line results stay bitwise equal.
+fn untangle_twiddles(n: usize) -> Vec<C32> {
+    (0..=n / 2)
+        .map(|k| {
+            let theta = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            C32::new(theta.cos() as f32, theta.sin() as f32)
+        })
+        .collect()
+}
 
-    // Pack even samples into re, odd into im.
-    let mut z = SplitComplex::zeros(half);
-    for m in 0..half {
-        z.re[m] = x[2 * m];
-        z.im[m] = x[2 * m + 1];
-    }
-    let zf = planner
-        .plan(half, Variant::Radix8)?
-        .execute_batch(&z, 1, Direction::Forward)?;
-
-    // Untangle.
-    let mut out = SplitComplex::zeros(half + 1);
+/// Untangle one transformed packed line `zf` (length N/2) into the
+/// half-spectrum (length N/2 + 1). `w` is the [`untangle_twiddles`]
+/// table for N.
+fn untangle_line(zf_re: &[f32], zf_im: &[f32], w: &[C32], out: &mut SplitComplex, at: usize) {
+    let half = zf_re.len();
     for k in 0..=half {
-        let zk = if k == half { zf.get(0) } else { zf.get(k) };
-        let zn = if k == 0 { zf.get(0) } else { zf.get(half - k) };
+        let zk = if k == half {
+            C32::new(zf_re[0], zf_im[0])
+        } else {
+            C32::new(zf_re[k], zf_im[k])
+        };
+        let zn = if k == 0 {
+            C32::new(zf_re[0], zf_im[0])
+        } else {
+            C32::new(zf_re[half - k], zf_im[half - k])
+        };
         let e = (zk + zn.conj()).scale(0.5);
         // O[k] = (Z[k] - conj(Z[half-k])) / (2i)  ==  (..)*(-i)/2
         let o = (zk - zn.conj()).mul_neg_i().scale(0.5);
-        let theta = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
-        let w = C32::new(theta.cos() as f32, theta.sin() as f32);
-        out.set(k, e + w * o);
+        out.set(at + k, e + w[k] * o);
     }
-    Ok(out)
+}
+
+/// Re-tangle one half-spectrum line (length N/2 + 1) into the packed
+/// sequence `Z` (length N/2) ready for the inverse complex FFT. `w` here
+/// is the *conjugate* direction (`e^{+2πik/N}`), derived from the shared
+/// table.
+fn retangle_line(spec: &SplitComplex, at: usize, w: &[C32], z: &mut SplitComplex, z_at: usize) {
+    let half = w.len() - 1;
+    for k in 0..half {
+        let xk = spec.get(at + k);
+        let xn = spec.get(at + half - k);
+        let e = (xk + xn.conj()).scale(0.5);
+        let mut o = (xk - xn.conj()).scale(0.5);
+        o = o * w[k].conj();
+        z.set(z_at + k, e + o.mul_i());
+    }
+}
+
+/// Forward real FFT of one line. `x.len()` = N (power of two, >= 4);
+/// output length N/2 + 1 (split complex).
+pub fn rfft(planner: &NativePlanner, x: &[f32]) -> Result<SplitComplex> {
+    rfft_batch(planner, x, x.len(), 1)
 }
 
 /// Inverse of [`rfft`]: half-spectrum (N/2 + 1 bins) -> N real samples.
 pub fn irfft(planner: &NativePlanner, spectrum: &SplitComplex, n: usize) -> Result<Vec<f32>> {
-    ensure!(n.is_power_of_two() && n >= 4, "irfft size {n}");
-    ensure!(spectrum.len() == n / 2 + 1, "spectrum must have N/2+1 bins");
-    let half = n / 2;
-
-    // Re-tangle: Z[k] = E[k] + i * W^{-k} O[k] ... inverted relations:
-    //   E[k] = (X[k] + conj(X[half-k])) / 2
-    //   O[k] = (X[k] - conj(X[half-k])) / 2 * e^{+2πik/N}
-    //   Z[k] = E[k] + i O[k]
-    let mut z = SplitComplex::zeros(half);
-    for k in 0..half {
-        let xk = spectrum.get(k);
-        let xn = spectrum.get(half - k);
-        let e = (xk + xn.conj()).scale(0.5);
-        let mut o = (xk - xn.conj()).scale(0.5);
-        let theta = 2.0 * std::f64::consts::PI * k as f64 / n as f64;
-        o = o * C32::new(theta.cos() as f32, theta.sin() as f32);
-        z.set(k, e + o.mul_i());
-    }
-    let zt = planner
-        .plan(half, Variant::Radix8)?
-        .execute_batch(&z, 1, Direction::Inverse)?;
-
-    let mut out = vec![0.0f32; n];
-    for m in 0..half {
-        out[2 * m] = zt.re[m];
-        out[2 * m + 1] = zt.im[m];
-    }
-    Ok(out)
+    irfft_batch(planner, spectrum, n, 1)
 }
 
-/// Batched forward real FFT over rows.
+/// Batched forward real FFT over rows: all lines are packed into a
+/// single (batch, N/2) buffer and transformed in **one** executor
+/// dispatch on the preferred variant, then untangled with a shared
+/// twiddle table.
 pub fn rfft_batch(
     planner: &NativePlanner,
     x: &[f32],
     n: usize,
     batch: usize,
 ) -> Result<SplitComplex> {
-    ensure!(x.len() == n * batch);
-    let mut out = SplitComplex::zeros((n / 2 + 1) * batch);
+    ensure!(n.is_power_of_two() && n >= 4, "rfft size {n} must be a power of two >= 4");
+    ensure!(batch >= 1, "rfft batch must be >= 1");
+    ensure!(x.len() == n * batch, "input length {} != n({n}) x batch({batch})", x.len());
+    let half = n / 2;
+
+    // Pack even samples into re, odd into im — all lines at once.
+    let mut z = SplitComplex::zeros(half * batch);
     for b in 0..batch {
-        let line = rfft(planner, &x[b * n..(b + 1) * n])?;
-        let at = b * (n / 2 + 1);
-        out.re[at..at + line.len()].copy_from_slice(&line.re);
-        out.im[at..at + line.len()].copy_from_slice(&line.im);
+        let line = &x[b * n..(b + 1) * n];
+        let at = b * half;
+        for m in 0..half {
+            z.re[at + m] = line[2 * m];
+            z.im[at + m] = line[2 * m + 1];
+        }
+    }
+    planner.executor_auto(half)?.execute_batch_auto_into(&mut z, batch, Direction::Forward)?;
+
+    // Untangle every line against the shared twiddle table.
+    let w = untangle_twiddles(n);
+    let mut out = SplitComplex::zeros((half + 1) * batch);
+    for b in 0..batch {
+        let at = b * half;
+        untangle_line(
+            &z.re[at..at + half],
+            &z.im[at..at + half],
+            &w,
+            &mut out,
+            b * (half + 1),
+        );
+    }
+    Ok(out)
+}
+
+/// Batched inverse of [`rfft_batch`]: `batch` half-spectra of N/2 + 1
+/// bins each -> `batch` rows of N real samples, through one inverse
+/// executor dispatch.
+pub fn irfft_batch(
+    planner: &NativePlanner,
+    spectrum: &SplitComplex,
+    n: usize,
+    batch: usize,
+) -> Result<Vec<f32>> {
+    ensure!(n.is_power_of_two() && n >= 4, "irfft size {n}");
+    ensure!(batch >= 1, "irfft batch must be >= 1");
+    ensure!(
+        spectrum.len() == (n / 2 + 1) * batch,
+        "spectrum length {} != (N/2+1)({}) x batch({batch})",
+        spectrum.len(),
+        n / 2 + 1
+    );
+    let half = n / 2;
+
+    // Re-tangle: Z[k] = E[k] + i * W^{-k} O[k] ... inverted relations:
+    //   E[k] = (X[k] + conj(X[half-k])) / 2
+    //   O[k] = (X[k] - conj(X[half-k])) / 2 * e^{+2πik/N}
+    //   Z[k] = E[k] + i O[k]
+    let w = untangle_twiddles(n);
+    let mut z = SplitComplex::zeros(half * batch);
+    for b in 0..batch {
+        retangle_line(spectrum, b * (half + 1), &w, &mut z, b * half);
+    }
+    planner.executor_auto(half)?.execute_batch_auto_into(&mut z, batch, Direction::Inverse)?;
+
+    let mut out = vec![0.0f32; n * batch];
+    for b in 0..batch {
+        let line = &mut out[b * n..(b + 1) * n];
+        let at = b * half;
+        for m in 0..half {
+            line[2 * m] = z.re[at + m];
+            line[2 * m + 1] = z.im[at + m];
+        }
     }
     Ok(out)
 }
@@ -173,10 +247,39 @@ mod tests {
     }
 
     #[test]
+    fn irfft_batch_matches_per_line() {
+        let planner = NativePlanner::new();
+        let mut rng = Rng::new(44);
+        let (n, batch) = (128usize, 4usize);
+        let x = rng.signal(n * batch);
+        let spec = rfft_batch(&planner, &x, n, batch).unwrap();
+        let all = irfft_batch(&planner, &spec, n, batch).unwrap();
+        let bins = n / 2 + 1;
+        for b in 0..batch {
+            let one = irfft(&planner, &spec.slice(b * bins, bins), n).unwrap();
+            assert_eq!(&all[b * n..(b + 1) * n], &one[..], "line {b}");
+        }
+    }
+
+    #[test]
+    fn rfft_irfft_batch_roundtrip() {
+        let planner = NativePlanner::new();
+        let mut rng = Rng::new(45);
+        let (n, batch) = (512usize, 5usize);
+        let x = rng.signal(n * batch);
+        let spec = rfft_batch(&planner, &x, n, batch).unwrap();
+        let y = irfft_batch(&planner, &spec, n, batch).unwrap();
+        let max: f32 = x.iter().zip(&y).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        assert!(max < 1e-4, "max diff {max}");
+    }
+
+    #[test]
     fn rejects_bad_sizes() {
         let planner = NativePlanner::new();
         assert!(rfft(&planner, &[0.0; 3]).is_err());
         let s = SplitComplex::zeros(5);
         assert!(irfft(&planner, &s, 16).is_err());
+        assert!(rfft_batch(&planner, &[0.0; 12], 8, 2).is_err()); // wrong payload
+        assert!(irfft_batch(&planner, &SplitComplex::zeros(10), 16, 2).is_err());
     }
 }

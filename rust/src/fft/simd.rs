@@ -108,6 +108,70 @@ pub fn radix2_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
     }
 }
 
+/// MUL_SPECTRUM twin of [`radix2_stage`]: the same vector body with the
+/// filter multiply applied while the outputs are still in `f32x8`
+/// registers — lanewise the scalar backend's exact op sequence, so
+/// outputs stay bitwise equal across backends. Scalar tails go through
+/// the shared scalar lane + `mul_spectrum_lane`.
+#[allow(clippy::too_many_arguments)]
+pub fn radix2_stage_mul(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    hre: &[f32],
+    him: &[f32],
+) {
+    let m = n / 2;
+    for p in 0..m {
+        let w = match table {
+            Some(t) => t.get(p, 1),
+            None => chain::<2>(p, n)[1],
+        };
+        let (wre, wim) = (f32x8::splat(w.re), f32x8::splat(w.im));
+        let (ar, ai) = (&xre[s * p..s * p + s], &xim[s * p..s * p + s]);
+        let (br, bi) = (&xre[s * (p + m)..s * (p + m) + s], &xim[s * (p + m)..s * (p + m) + s]);
+        let base = 2 * s * p;
+        let (y0r, y1r) = yre[base..base + 2 * s].split_at_mut(s);
+        let (y0i, y1i) = yim[base..base + 2 * s].split_at_mut(s);
+        let (h0r, h0i) = (&hre[base..base + s], &him[base..base + s]);
+        let (h1r, h1i) = (&hre[base + s..base + 2 * s], &him[base + s..base + 2 * s]);
+
+        let mut q = 0;
+        while q + LANES <= s {
+            let are = f32x8::from_slice(&ar[q..]);
+            let aim = f32x8::from_slice(&ai[q..]);
+            let bre = f32x8::from_slice(&br[q..]);
+            let bim = f32x8::from_slice(&bi[q..]);
+            let sr = are + bre;
+            let si = aim + bim;
+            let dr = are - bre;
+            let di = aim - bim;
+            let tr = dr * wre - di * wim;
+            let ti = dr * wim + di * wre;
+            let g0r = f32x8::from_slice(&h0r[q..]);
+            let g0i = f32x8::from_slice(&h0i[q..]);
+            let g1r = f32x8::from_slice(&h1r[q..]);
+            let g1i = f32x8::from_slice(&h1i[q..]);
+            (sr * g0r - si * g0i).copy_to_slice(&mut y0r[q..q + LANES]);
+            (sr * g0i + si * g0r).copy_to_slice(&mut y0i[q..q + LANES]);
+            (tr * g1r - ti * g1i).copy_to_slice(&mut y1r[q..q + LANES]);
+            (tr * g1i + ti * g1r).copy_to_slice(&mut y1i[q..q + LANES]);
+            q += LANES;
+        }
+        for i in q..s {
+            let xr = [ar[i], br[i]];
+            let xi = [ai[i], bi[i]];
+            let (or, oi) = super::stockham::radix2_lane::<false>(xr, xi, w, 1.0);
+            (y0r[i], y0i[i]) = super::stockham::mul_spectrum_lane(or[0], oi[0], h0r[i], h0i[i]);
+            (y1r[i], y1i[i]) = super::stockham::mul_spectrum_lane(or[1], oi[1], h1r[i], h1i[i]);
+        }
+    }
+}
+
 /// One radix-4 DIF Stockham stage on explicit `f32x8` registers; the
 /// vector twin of [`super::stockham::radix4_stage`].
 #[allow(clippy::too_many_arguments)]
@@ -221,6 +285,112 @@ pub fn radix4_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
             y2i[i] = oi[2];
             y3r[i] = or[3];
             y3i[i] = oi[3];
+        }
+    }
+}
+
+/// MUL_SPECTRUM twin of [`radix4_stage`] (see [`radix2_stage_mul`]).
+#[allow(clippy::too_many_arguments)]
+pub fn radix4_stage_mul(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    hre: &[f32],
+    him: &[f32],
+) {
+    let m = n / 4;
+    for p in 0..m {
+        let [_, w1, w2, w3] = match table {
+            Some(t) => [C32::ONE, t.get(p, 1), t.get(p, 2), t.get(p, 3)],
+            None => chain::<4>(p, n),
+        };
+        let base = s * p;
+        let step = s * m;
+        let (ar, ai) = (&xre[base..base + s], &xim[base..base + s]);
+        let b0 = base + step;
+        let (br, bi) = (&xre[b0..b0 + s], &xim[b0..b0 + s]);
+        let c0 = base + 2 * step;
+        let (cr, ci) = (&xre[c0..c0 + s], &xim[c0..c0 + s]);
+        let d0 = base + 3 * step;
+        let (dr, di) = (&xre[d0..d0 + s], &xim[d0..d0 + s]);
+        let out = &mut yre[4 * base..4 * base + 4 * s];
+        let (y0r, rest) = out.split_at_mut(s);
+        let (y1r, rest) = rest.split_at_mut(s);
+        let (y2r, y3r) = rest.split_at_mut(s);
+        let out = &mut yim[4 * base..4 * base + 4 * s];
+        let (y0i, rest) = out.split_at_mut(s);
+        let (y1i, rest) = rest.split_at_mut(s);
+        let (y2i, y3i) = rest.split_at_mut(s);
+        let h: [(&[f32], &[f32]); 4] = core::array::from_fn(|k| {
+            let at = 4 * base + k * s;
+            (&hre[at..at + s], &him[at..at + s])
+        });
+
+        let (w1re, w1im) = (f32x8::splat(w1.re), f32x8::splat(w1.im));
+        let (w2re, w2im) = (f32x8::splat(w2.re), f32x8::splat(w2.im));
+        let (w3re, w3im) = (f32x8::splat(w3.re), f32x8::splat(w3.im));
+
+        let mut q = 0;
+        while q + LANES <= s {
+            let x0r = f32x8::from_slice(&ar[q..]);
+            let x0i = f32x8::from_slice(&ai[q..]);
+            let x1r = f32x8::from_slice(&br[q..]);
+            let x1i = f32x8::from_slice(&bi[q..]);
+            let x2r = f32x8::from_slice(&cr[q..]);
+            let x2i = f32x8::from_slice(&ci[q..]);
+            let x3r = f32x8::from_slice(&dr[q..]);
+            let x3i = f32x8::from_slice(&di[q..]);
+            let apc_r = x0r + x2r;
+            let apc_i = x0i + x2i;
+            let amc_r = x0r - x2r;
+            let amc_i = x0i - x2i;
+            let bpd_r = x1r + x3r;
+            let bpd_i = x1i + x3i;
+            let bmd_r = x1r - x3r;
+            let bmd_i = x1i - x3i;
+            let o0r = apc_r + bpd_r;
+            let o0i = apc_i + bpd_i;
+            let t1r = amc_r + bmd_i;
+            let t1i = amc_i - bmd_r;
+            let o1r = t1r * w1re - t1i * w1im;
+            let o1i = t1r * w1im + t1i * w1re;
+            let t2r = apc_r - bpd_r;
+            let t2i = apc_i - bpd_i;
+            let o2r = t2r * w2re - t2i * w2im;
+            let o2i = t2r * w2im + t2i * w2re;
+            let t3r = amc_r - bmd_i;
+            let t3i = amc_i + bmd_r;
+            let o3r = t3r * w3re - t3i * w3im;
+            let o3i = t3r * w3im + t3i * w3re;
+            let outs = [(o0r, o0i), (o1r, o1i), (o2r, o2i), (o3r, o3i)];
+            let mut ys: [(&mut [f32], &mut [f32]); 4] = [
+                (&mut *y0r, &mut *y0i),
+                (&mut *y1r, &mut *y1i),
+                (&mut *y2r, &mut *y2i),
+                (&mut *y3r, &mut *y3i),
+            ];
+            for k in 0..4 {
+                let gr = f32x8::from_slice(&h[k].0[q..]);
+                let gi = f32x8::from_slice(&h[k].1[q..]);
+                let (or, oi) = outs[k];
+                (or * gr - oi * gi).copy_to_slice(&mut ys[k].0[q..q + LANES]);
+                (or * gi + oi * gr).copy_to_slice(&mut ys[k].1[q..q + LANES]);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            let xr = [ar[i], br[i], cr[i], dr[i]];
+            let xi = [ai[i], bi[i], ci[i], di[i]];
+            let (or, oi) = super::stockham::radix4_lane::<false>(xr, xi, w1, w2, w3, 1.0);
+            let mul = super::stockham::mul_spectrum_lane;
+            (y0r[i], y0i[i]) = mul(or[0], oi[0], h[0].0[i], h[0].1[i]);
+            (y1r[i], y1i[i]) = mul(or[1], oi[1], h[1].0[i], h[1].1[i]);
+            (y2r[i], y2i[i]) = mul(or[2], oi[2], h[2].0[i], h[2].1[i]);
+            (y3r[i], y3i[i]) = mul(or[3], oi[3], h[3].0[i], h[3].1[i]);
         }
     }
 }
@@ -349,6 +519,65 @@ pub fn radix8_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
             for k in 0..8 {
                 yout_re[k][i] = or[k];
                 yout_im[k][i] = oi[k];
+            }
+        }
+    }
+}
+
+/// MUL_SPECTRUM twin of [`radix8_stage`] (see [`radix2_stage_mul`]).
+#[allow(clippy::too_many_arguments)]
+pub fn radix8_stage_mul(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    hre: &[f32],
+    him: &[f32],
+) {
+    let m = n / 8;
+    for p in 0..m {
+        let w: [C32; 8] = match table {
+            Some(t) => t.row(p).try_into().expect("radix-8 table row"),
+            None => chain::<8>(p, n),
+        };
+        let base_in = s * p;
+        let xin_re: [&[f32]; 8] = core::array::from_fn(|j| {
+            let at = base_in + j * s * m;
+            &xre[at..at + s]
+        });
+        let xin_im: [&[f32]; 8] = core::array::from_fn(|j| {
+            let at = base_in + j * s * m;
+            &xim[at..at + s]
+        });
+        let base_out = 8 * s * p;
+        let mut yout_re = super::radix8::split8_mut(&mut yre[base_out..base_out + 8 * s], s);
+        let mut yout_im = super::radix8::split8_mut(&mut yim[base_out..base_out + 8 * s], s);
+        let h_re = super::radix8::split8(&hre[base_out..base_out + 8 * s], s);
+        let h_im = super::radix8::split8(&him[base_out..base_out + 8 * s], s);
+
+        let mut q = 0;
+        while q + LANES <= s {
+            let xr: [f32x8; 8] = core::array::from_fn(|j| f32x8::from_slice(&xin_re[j][q..]));
+            let xi: [f32x8; 8] = core::array::from_fn(|j| f32x8::from_slice(&xin_im[j][q..]));
+            let (or, oi) = butterfly8_vec::<false>(xr, xi, &w, f32x8::splat(1.0));
+            for k in 0..8 {
+                let gr = f32x8::from_slice(&h_re[k][q..]);
+                let gi = f32x8::from_slice(&h_im[k][q..]);
+                (or[k] * gr - oi[k] * gi).copy_to_slice(&mut yout_re[k][q..q + LANES]);
+                (or[k] * gi + oi[k] * gr).copy_to_slice(&mut yout_im[k][q..q + LANES]);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            let xr: [f32; 8] = core::array::from_fn(|j| xin_re[j][i]);
+            let xi: [f32; 8] = core::array::from_fn(|j| xin_im[j][i]);
+            let (or, oi) = super::radix8::butterfly8_lane::<false>(xr, xi, &w, 1.0);
+            for k in 0..8 {
+                (yout_re[k][i], yout_im[k][i]) =
+                    super::stockham::mul_spectrum_lane(or[k], oi[k], h_re[k][i], h_im[k][i]);
             }
         }
     }

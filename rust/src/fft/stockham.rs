@@ -42,6 +42,17 @@ fn run_at<'a>(re: &'a [f32], im: &'a [f32], at: usize, s: usize) -> (&'a [f32], 
     (&re[at..at + s], &im[at..at + s])
 }
 
+/// One complex multiply `x * h` on split scalars, in exactly the op
+/// order of [`C32::mul`] (and of the standalone spectrum-multiply pass
+/// the MUL_SPECTRUM codelets replace): `re = xr*hr - xi*hi`,
+/// `im = xr*hi + xi*hr`. Shared by every scalar MUL_SPECTRUM codelet
+/// and by the `std::simd` backend's scalar tails, so the fused product
+/// stays bitwise equal to the unfused transform-then-multiply path.
+#[inline(always)]
+pub(crate) fn mul_spectrum_lane(xr: f32, xi: f32, hr: f32, hi: f32) -> (f32, f32) {
+    (xr * hr - xi * hi, xr * hi + xi * hr)
+}
+
 /// One scalar lane of the radix-2 butterfly on split re/im values
 /// (inputs already `CONJ_IN`-conjugated by the caller, mirroring
 /// [`super::radix8::butterfly8_lane`]). Shared verbatim by the scalar
@@ -95,6 +106,60 @@ pub fn radix2_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
             y0i[i] = oi[0];
             y1r[i] = or[1];
             y1i[i] = oi[1];
+        };
+
+        let mut q = 0;
+        while q + LANES <= s {
+            for l in 0..LANES {
+                bf(q + l, &mut *y0r, &mut *y0i, &mut *y1r, &mut *y1i);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            bf(i, &mut *y0r, &mut *y0i, &mut *y1r, &mut *y1i);
+        }
+    }
+}
+
+/// The MUL_SPECTRUM variant of [`radix2_stage`]: the forward stage body
+/// (`CONJ_IN = FUSE_OUT = false`) with each output multiplied by the
+/// filter value at the *same output index* while it is still in
+/// registers. Only meaningful as the **last** stage of a forward
+/// transform, where the output index is the spectrum bin — which is the
+/// only place [`transform_line_mul_with`] dispatches it. `(hre, him)`
+/// must cover the full line (`n * s` values).
+#[allow(clippy::too_many_arguments)]
+pub fn radix2_stage_mul(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    hre: &[f32],
+    him: &[f32],
+) {
+    let m = n / 2;
+    for p in 0..m {
+        let w = match table {
+            Some(t) => t.get(p, 1),
+            None => chain::<2>(p, n)[1],
+        };
+        let (ar, ai) = run_at(xre, xim, s * p, s);
+        let (br, bi) = run_at(xre, xim, s * (p + m), s);
+        let base = 2 * s * p;
+        let (y0r, y1r) = yre[base..base + 2 * s].split_at_mut(s);
+        let (y0i, y1i) = yim[base..base + 2 * s].split_at_mut(s);
+        let (h0r, h0i) = run_at(hre, him, base, s);
+        let (h1r, h1i) = run_at(hre, him, base + s, s);
+
+        let bf = |i: usize, y0r: &mut [f32], y0i: &mut [f32], y1r: &mut [f32], y1i: &mut [f32]| {
+            let xr = [ar[i], br[i]];
+            let xi = [ai[i], bi[i]];
+            let (or, oi) = radix2_lane::<false>(xr, xi, w, 1.0);
+            (y0r[i], y0i[i]) = mul_spectrum_lane(or[0], oi[0], h0r[i], h0i[i]);
+            (y1r[i], y1i[i]) = mul_spectrum_lane(or[1], oi[1], h1r[i], h1i[i]);
         };
 
         let mut q = 0;
@@ -204,6 +269,95 @@ pub fn radix4_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
             y2i[i] = oi[2];
             y3r[i] = or[3];
             y3i[i] = oi[3];
+        };
+
+        let mut q = 0;
+        while q + LANES <= s {
+            for l in 0..LANES {
+                bf(
+                    q + l,
+                    &mut *y0r,
+                    &mut *y0i,
+                    &mut *y1r,
+                    &mut *y1i,
+                    &mut *y2r,
+                    &mut *y2i,
+                    &mut *y3r,
+                    &mut *y3i,
+                );
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            bf(
+                i,
+                &mut *y0r,
+                &mut *y0i,
+                &mut *y1r,
+                &mut *y1i,
+                &mut *y2r,
+                &mut *y2i,
+                &mut *y3r,
+                &mut *y3i,
+            );
+        }
+    }
+}
+
+/// The MUL_SPECTRUM variant of [`radix4_stage`]: forward butterflies
+/// with the filter multiply fused into the stores (see
+/// [`radix2_stage_mul`] for the contract).
+#[allow(clippy::too_many_arguments)]
+pub fn radix4_stage_mul(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    hre: &[f32],
+    him: &[f32],
+) {
+    let m = n / 4;
+    for p in 0..m {
+        let [_, w1, w2, w3] = match table {
+            Some(t) => [C32::ONE, t.get(p, 1), t.get(p, 2), t.get(p, 3)],
+            None => chain::<4>(p, n),
+        };
+        let base = s * p;
+        let step = s * m;
+        let (ar, ai) = run_at(xre, xim, base, s);
+        let (br, bi) = run_at(xre, xim, base + step, s);
+        let (cr, ci) = run_at(xre, xim, base + 2 * step, s);
+        let (dr, di) = run_at(xre, xim, base + 3 * step, s);
+        let out = &mut yre[4 * base..4 * base + 4 * s];
+        let (y0r, rest) = out.split_at_mut(s);
+        let (y1r, rest) = rest.split_at_mut(s);
+        let (y2r, y3r) = rest.split_at_mut(s);
+        let out = &mut yim[4 * base..4 * base + 4 * s];
+        let (y0i, rest) = out.split_at_mut(s);
+        let (y1i, rest) = rest.split_at_mut(s);
+        let (y2i, y3i) = rest.split_at_mut(s);
+        let h: [(&[f32], &[f32]); 4] =
+            core::array::from_fn(|k| run_at(hre, him, 4 * base + k * s, s));
+
+        let bf = |i: usize,
+                  y0r: &mut [f32],
+                  y0i: &mut [f32],
+                  y1r: &mut [f32],
+                  y1i: &mut [f32],
+                  y2r: &mut [f32],
+                  y2i: &mut [f32],
+                  y3r: &mut [f32],
+                  y3i: &mut [f32]| {
+            let xr = [ar[i], br[i], cr[i], dr[i]];
+            let xi = [ai[i], bi[i], ci[i], di[i]];
+            let (or, oi) = radix4_lane::<false>(xr, xi, w1, w2, w3, 1.0);
+            (y0r[i], y0i[i]) = mul_spectrum_lane(or[0], oi[0], h[0].0[i], h[0].1[i]);
+            (y1r[i], y1i[i]) = mul_spectrum_lane(or[1], oi[1], h[1].0[i], h[1].1[i]);
+            (y2r[i], y2i[i]) = mul_spectrum_lane(or[2], oi[2], h[2].0[i], h[2].1[i]);
+            (y3r[i], y3i[i]) = mul_spectrum_lane(or[3], oi[3], h[3].0[i], h[3].1[i]);
         };
 
         let mut q = 0;
@@ -349,6 +503,69 @@ pub fn transform_line_with(
     debug_assert!(src_is_main, "result must end in the main buffer");
 }
 
+/// Forward Stockham driver with a **fused spectrum multiply**: identical
+/// to the forward path of [`transform_line_with`] except that the final
+/// stage dispatches the backend's MUL_SPECTRUM codelet, so each output
+/// bin is multiplied by `h[bin] = (hre[bin], him[bin])` while it is
+/// still in the register tier — no standalone whole-buffer multiply
+/// pass, no intermediate store/reload of the unfiltered spectrum. The
+/// product is bitwise equal to `fft(x)` followed by an elementwise
+/// [`C32`](crate::util::complex::C32) multiply, because the fused
+/// codelets run the identical IEEE op sequence on the identical values.
+///
+/// This is the forward half of the matched-filter pipeline
+/// ([`crate::fft::pipeline`]); the inverse half is the ordinary fused
+/// inverse (`transform_line_with` with `inverse = true`) consuming the
+/// product in place.
+#[allow(clippy::too_many_arguments)]
+pub fn transform_line_mul_with(
+    codelets: &CodeletTable,
+    re: &mut [f32],
+    im: &mut [f32],
+    sre: &mut [f32],
+    sim: &mut [f32],
+    radices: &[usize],
+    tables: Option<&PlanTables>,
+    hre: &[f32],
+    him: &[f32],
+) {
+    let n_total = re.len();
+    debug_assert_eq!(im.len(), n_total);
+    debug_assert!(hre.len() >= n_total && him.len() >= n_total);
+    let sre = &mut sre[..n_total];
+    let sim = &mut sim[..n_total];
+    let levels = radices.len();
+    let mut src_is_main = levels % 2 == 0;
+    if !src_is_main {
+        sre.copy_from_slice(re);
+        sim.copy_from_slice(im);
+    }
+    let mut n = n_total;
+    let mut s = 1usize;
+    for (li, &r) in radices.iter().enumerate() {
+        let table = tables.map(|t| &t.stages[li]);
+        if li == levels - 1 {
+            let stage = codelets.stage_mul(r);
+            if src_is_main {
+                stage(re, im, sre, sim, n, s, table, hre, him);
+            } else {
+                stage(sre, sim, re, im, n, s, table, hre, him);
+            }
+        } else {
+            let stage = codelets.stage(r, false, false);
+            if src_is_main {
+                stage(re, im, sre, sim, n, s, table, 1.0);
+            } else {
+                stage(sre, sim, re, im, n, s, table, 1.0);
+            }
+        }
+        src_is_main = !src_is_main;
+        n /= r;
+        s *= r;
+    }
+    debug_assert!(src_is_main, "result must end in the main buffer");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -475,6 +692,56 @@ mod tests {
             transform_line(&mut y.re, &mut y.im, &mut sre, &mut sim, &radices, None);
             transform_line_fused(&mut y.re, &mut y.im, &mut sre, &mut sim, &radices, None, true);
             assert!(y.rel_l2_error(&x) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn mul_driver_is_bitwise_fft_then_multiply() {
+        // The fused MUL_SPECTRUM last stage must reproduce, bit for bit,
+        // the unfused transform followed by an elementwise C32 multiply
+        // (same op sequence, same values, no store/reload in between).
+        let mut rng = Rng::new(8);
+        for &max_radix in &[2usize, 4, 8] {
+            for &n in &[8usize, 32, 64, 256, 1024, 2048] {
+                let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+                let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+                let radices = radix_schedule(n, max_radix);
+                let pt = PlanTables::for_radices(n, &radices);
+                let (mut sre, mut sim) = (vec![0.0; n], vec![0.0; n]);
+                for tables in [None, Some(&pt)] {
+                    // Reference: transform, then the standalone multiply.
+                    let mut want = x.clone();
+                    transform_line_with(
+                        codelet::scalar_table(),
+                        &mut want.re,
+                        &mut want.im,
+                        &mut sre,
+                        &mut sim,
+                        &radices,
+                        tables,
+                        false,
+                    );
+                    for i in 0..n {
+                        let v = want.get(i) * h.get(i);
+                        want.set(i, v);
+                    }
+                    // Fused path.
+                    let mut got = x.clone();
+                    transform_line_mul_with(
+                        codelet::scalar_table(),
+                        &mut got.re,
+                        &mut got.im,
+                        &mut sre,
+                        &mut sim,
+                        &radices,
+                        tables,
+                        &h.re,
+                        &h.im,
+                    );
+                    assert_eq!(got.re, want.re, "n={n} max_radix={max_radix}");
+                    assert_eq!(got.im, want.im, "n={n} max_radix={max_radix}");
+                }
+            }
         }
     }
 

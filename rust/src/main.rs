@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
                  \x20 plan        [--n 4096]\n\
                  \x20 sim-params\n\
                  \x20 bench-model\n\
-                 \x20 sar         [--lines 64]\n"
+                 \x20 sar         [--lines 64] [--path matched|composed|fused|local]\n"
             );
             Ok(())
         }
@@ -264,9 +264,12 @@ fn bench_model() -> anyhow::Result<()> {
 }
 
 fn sar(args: &Args) -> anyhow::Result<()> {
-    use applefft::sar::range::{run_scene, RangeCompressor};
+    use applefft::sar::range::{run_scene, RangeCompressor, RangePath};
     use applefft::sar::{Chirp, Scene};
     let lines = args.get_usize("lines", 64)?;
+    // composed | matched | fused | local — default is the fused
+    // MatchedFilter service path (the paper's motivating pipeline).
+    let path: RangePath = args.get_str("path", "matched").parse()?;
     let svc = FftService::start(ServiceConfig {
         backend: backend_from(args),
         ..Default::default()
@@ -277,9 +280,10 @@ fn sar(args: &Args) -> anyhow::Result<()> {
     let scene = Scene::random(n, 5, chirp.samples, &mut rng);
     let echoes = scene.echoes(&chirp, lines, &mut rng);
     let comp = RangeCompressor::new(chirp, n);
-    let report = run_scene(&svc, &comp, &scene, &echoes, lines, false)?;
+    let report = run_scene(&svc, &comp, &scene, &echoes, lines, path)?;
     println!("{report:?}");
     anyhow::ensure!(report.detection_hits == report.targets_expected, "targets must focus");
-    println!("sar OK");
+    println!("\nservice metrics:\n{}", svc.drain()?.render());
+    println!("sar OK ({path:?} path)");
     Ok(())
 }

@@ -127,7 +127,13 @@ impl Registry {
                 Direction::Forward,
             );
         }
-        add("rangecomp4096".to_string(), ArtifactKind::RangeComp, 4096, "radix8", Direction::Forward);
+        // Fused matched filtering (the spectral pipeline) at every FFT
+        // size: the native backend serves all of them through the fused
+        // executor path; AOT manifests may compile a subset.
+        for n in [256usize, 512, 1024, 2048, 4096, 8192, 16384] {
+            let name = Registry::rangecomp_name(n);
+            add(name, ArtifactKind::RangeComp, n, "radix8", Direction::Forward);
+        }
         Registry { batch_tile, artifacts }
     }
 
@@ -154,6 +160,12 @@ impl Registry {
         format!("fft{n}_{}", direction.tag())
     }
 
+    /// Canonical artifact name for fused matched filtering (range
+    /// compression) at size `n`.
+    pub fn rangecomp_name(n: usize) -> String {
+        format!("rangecomp{n}")
+    }
+
     pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
         self.artifacts.values()
     }
@@ -167,11 +179,16 @@ mod tests {
     fn default_set_has_standard_names() {
         let r = Registry::default_set(32);
         assert_eq!(r.batch_tile, 32);
-        assert_eq!(r.len(), 18);
+        // 7 sizes x 2 directions + 3 fft4096 variants + 7 rangecomp.
+        assert_eq!(r.len(), 24);
         assert!(r.get("fft4096_fwd").is_ok());
         assert!(r.get("fft16384_inv").is_ok());
         assert!(r.get("fft4096_fwd_mma").is_ok());
         assert!(r.get("rangecomp4096").is_ok());
+        // Matched filtering is served at every FFT size.
+        for n in [256usize, 512, 1024, 2048, 8192, 16384] {
+            assert!(r.get(&format!("rangecomp{n}")).is_ok(), "rangecomp{n}");
+        }
         assert!(r.get("fft999_fwd").is_err());
     }
 
@@ -179,6 +196,7 @@ mod tests {
     fn fft_name_roundtrip() {
         assert_eq!(Registry::fft_name(4096, Direction::Forward), "fft4096_fwd");
         assert_eq!(Registry::fft_name(512, Direction::Inverse), "fft512_inv");
+        assert_eq!(Registry::rangecomp_name(2048), "rangecomp2048");
     }
 
     #[test]

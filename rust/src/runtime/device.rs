@@ -36,6 +36,11 @@ pub struct Job {
     pub inputs: Vec<Vec<f32>>,
     /// Dims for each input tensor.
     pub dims: Vec<Vec<usize>>,
+    /// Shared filter spectrum for RangeComp jobs on the native backend:
+    /// the serving path hands the registered `Arc` straight through so
+    /// no tile ever copies the spectrum (PJRT needs flat input literals
+    /// and keeps using `inputs[2..4]` instead).
+    pub filter: Option<Arc<SplitComplex>>,
     pub reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
 }
 

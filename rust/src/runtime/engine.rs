@@ -139,9 +139,19 @@ impl Engine {
         inputs: Vec<Vec<f32>>,
         dims: Vec<Vec<usize>>,
     ) -> Result<Vec<Vec<f32>>> {
+        self.execute_job(artifact, inputs, dims, None)
+    }
+
+    fn execute_job(
+        &self,
+        artifact: &str,
+        inputs: Vec<Vec<f32>>,
+        dims: Vec<Vec<usize>>,
+        filter: Option<Arc<SplitComplex>>,
+    ) -> Result<Vec<Vec<f32>>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Job { artifact: artifact.to_string(), inputs, dims, reply })
+            .send(Job { artifact: artifact.to_string(), inputs, dims, filter, reply })
             .map_err(|_| anyhow!("device thread has exited"))?;
         rx.recv().map_err(|_| anyhow!("device thread dropped the job"))?
     }
@@ -179,13 +189,41 @@ impl Engine {
         n: usize,
         batch: usize,
     ) -> Result<SplitComplex> {
-        let name = format!("rangecomp{n}");
+        let name = Registry::rangecomp_name(n);
         let out = self.execute_raw(
             &name,
             vec![x.re.clone(), x.im.clone(), h.re.clone(), h.im.clone()],
             vec![vec![batch, n], vec![batch, n], vec![n], vec![n]],
         )?;
         Ok(SplitComplex { re: out[0].clone(), im: out[1].clone() })
+    }
+
+    /// Fused range compression with the filter **shared by reference**:
+    /// the hot serving path for `MatchedFilter` tiles. On the native
+    /// backend the registered spectrum's `Arc` travels through the job
+    /// untouched — no per-tile copy of the filter, and `x` is consumed
+    /// rather than cloned. The PJRT backend needs flat input literals,
+    /// so it falls back to the cloning [`Self::range_compress`].
+    pub fn range_compress_shared(
+        &self,
+        x: SplitComplex,
+        h: &Arc<SplitComplex>,
+        n: usize,
+        batch: usize,
+    ) -> Result<SplitComplex> {
+        if self.backend_used == Backend::Pjrt {
+            return self.range_compress(&x, h, n, batch);
+        }
+        let name = Registry::rangecomp_name(n);
+        let mut out = self.execute_job(
+            &name,
+            vec![x.re, x.im],
+            vec![vec![batch, n], vec![batch, n]],
+            Some(h.clone()),
+        )?;
+        let im = out.pop().ok_or_else(|| anyhow!("rangecomp returned no im plane"))?;
+        let re = out.pop().ok_or_else(|| anyhow!("rangecomp returned no re plane"))?;
+        Ok(SplitComplex { re, im })
     }
 }
 
@@ -234,6 +272,23 @@ mod tests {
         for h in handles {
             assert_eq!(h.join().unwrap(), 256 * 32);
         }
+    }
+
+    #[test]
+    fn shared_filter_range_compress_matches_flat() {
+        // The zero-copy serving path must be bitwise the flat 4-input
+        // artifact invocation.
+        let engine = Engine::start(Backend::Native).unwrap();
+        let mut rng = Rng::new(62);
+        let (n, batch) = (4096, 32);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let flat = engine.range_compress(&x, &h, n, batch).unwrap();
+        let shared = engine
+            .range_compress_shared(x.clone(), &Arc::new(h), n, batch)
+            .unwrap();
+        assert_eq!(flat.re, shared.re);
+        assert_eq!(flat.im, shared.im);
     }
 
     #[test]

@@ -52,11 +52,17 @@ impl NativeExec {
 
     pub fn execute(&self, job: &mut Job) -> Result<Vec<Vec<f32>>> {
         let meta = self.registry.get(&job.artifact)?;
+        // RangeComp jobs carrying a shared filter Arc ship only the two
+        // data planes; the flat 4-input shape remains for PJRT parity.
+        let expect_inputs = match (&meta.kind, &job.filter) {
+            (ArtifactKind::RangeComp, Some(_)) => 2,
+            (kind, _) => kind.num_inputs(),
+        };
         ensure!(
-            job.inputs.len() == meta.kind.num_inputs(),
+            job.inputs.len() == expect_inputs,
             "artifact {} expects {} inputs, got {}",
             meta.name,
-            meta.kind.num_inputs(),
+            expect_inputs,
             job.inputs.len()
         );
         let (n, batch) = (meta.n, meta.batch);
@@ -79,25 +85,30 @@ impl NativeExec {
             }
             ArtifactKind::RangeComp => {
                 ensure!(job.inputs[0].len() == n * batch, "line size mismatch");
-                ensure!(job.inputs[2].len() == n, "filter size mismatch");
                 let mut s = SplitComplex {
                     re: std::mem::take(&mut job.inputs[0]),
                     im: std::mem::take(&mut job.inputs[1]),
                 };
-                exec.execute_batch_auto_into(&mut s, batch, crate::fft::Direction::Forward)?;
-                // Pointwise matched-filter multiply, in place on the
-                // split arrays (no interleave round-trip).
-                let (hre, him) = (&job.inputs[2], &job.inputs[3]);
-                for b in 0..batch {
-                    let at = b * n;
-                    let (sre, sim) = (&mut s.re[at..at + n], &mut s.im[at..at + n]);
-                    for i in 0..n {
-                        let (xr, xi) = (sre[i], sim[i]);
-                        sre[i] = xr * hre[i] - xi * him[i];
-                        sim[i] = xr * him[i] + xi * hre[i];
+                // Fused spectral pipeline: the matched-filter multiply
+                // rides the last forward stage in the register tier and
+                // the fused inverse consumes the product in place — no
+                // standalone multiply pass over the tile at all. The
+                // filter is the shared Arc when present (the serving
+                // path — zero copies), else the flat input planes.
+                let shared = job.filter.take();
+                let flat;
+                let filter: &SplitComplex = match &shared {
+                    Some(h) => h,
+                    None => {
+                        flat = SplitComplex {
+                            re: std::mem::take(&mut job.inputs[2]),
+                            im: std::mem::take(&mut job.inputs[3]),
+                        };
+                        &flat
                     }
-                }
-                exec.execute_batch_auto_into(&mut s, batch, crate::fft::Direction::Inverse)?;
+                };
+                ensure!(filter.len() == n, "filter size mismatch");
+                exec.execute_pipeline_auto_into(&mut s, batch, filter)?;
                 Ok(vec![s.re, s.im])
             }
         }
@@ -118,7 +129,7 @@ mod tests {
         dims: Vec<Vec<usize>>,
     ) -> (Job, mpsc::Receiver<Result<Vec<Vec<f32>>>>) {
         let (tx, rx) = mpsc::channel();
-        (Job { artifact: artifact.into(), inputs, dims, reply: tx }, rx)
+        (Job { artifact: artifact.into(), inputs, dims, filter: None, reply: tx }, rx)
     }
 
     #[test]
@@ -154,6 +165,79 @@ mod tests {
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].len(), n * batch);
         assert!(out[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn native_exec_rangecomp_is_fused_pipeline() {
+        // The RangeComp path must equal fft -> multiply -> ifft through
+        // the same executor, bit for bit, at every registered size.
+        let reg = Registry::default_set(2);
+        let exec = NativeExec::new(reg);
+        let mut rng = Rng::new(53);
+        for &n in &[512usize, 8192] {
+            let batch = 2;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let (mut job, _rx) = make_job(
+                &format!("rangecomp{n}"),
+                vec![x.re.clone(), x.im.clone(), h.re.clone(), h.im.clone()],
+                vec![vec![batch, n], vec![batch, n], vec![n], vec![n]],
+            );
+            let out = exec.execute(&mut job).unwrap();
+            // Reference through the same planner/backend.
+            let pexec = exec
+                .planner
+                .executor_with(n, Variant::Radix8, exec.codelet())
+                .unwrap();
+            let f = pexec
+                .execute_batch(&x, batch, crate::fft::Direction::Forward)
+                .unwrap();
+            let mut prod = SplitComplex::zeros(n * batch);
+            for b in 0..batch {
+                for i in 0..n {
+                    prod.set(b * n + i, f.get(b * n + i) * h.get(i));
+                }
+            }
+            pexec
+                .execute_batch_auto_into(&mut prod, batch, crate::fft::Direction::Inverse)
+                .unwrap();
+            assert_eq!(out[0], prod.re, "re: n={n}");
+            assert_eq!(out[1], prod.im, "im: n={n}");
+        }
+    }
+
+    #[test]
+    fn rangecomp_shared_filter_job_matches_flat() {
+        // A 2-input job carrying the Arc'd spectrum must produce the
+        // same bits as the flat 4-input shape (and not trip the arity
+        // check).
+        use std::sync::Arc;
+        let exec = NativeExec::new(Registry::default_set(2));
+        let mut rng = Rng::new(54);
+        let (n, batch) = (1024usize, 2usize);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let (mut flat_job, _rx) = make_job(
+            "rangecomp1024",
+            vec![x.re.clone(), x.im.clone(), h.re.clone(), h.im.clone()],
+            vec![vec![batch, n], vec![batch, n], vec![n], vec![n]],
+        );
+        let flat = exec.execute(&mut flat_job).unwrap();
+        let (mut shared_job, _rx2) = make_job(
+            "rangecomp1024",
+            vec![x.re.clone(), x.im.clone()],
+            vec![vec![batch, n], vec![batch, n]],
+        );
+        shared_job.filter = Some(Arc::new(h));
+        let shared = exec.execute(&mut shared_job).unwrap();
+        assert_eq!(flat, shared);
+        // Missing filter with only 2 inputs is an arity error.
+        let (mut bad, _rx3) = make_job(
+            "rangecomp1024",
+            vec![x.re.clone(), x.im.clone()],
+            vec![vec![batch, n], vec![batch, n]],
+        );
+        assert!(exec.execute(&mut bad).is_err());
     }
 
     #[test]

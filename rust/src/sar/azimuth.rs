@@ -12,7 +12,7 @@
 use super::chirp::Chirp;
 use crate::coordinator::FftService;
 use crate::fft::Direction;
-use crate::util::complex::{SplitComplex, C32};
+use crate::util::complex::SplitComplex;
 use anyhow::Result;
 
 /// Corner turn: (rows, cols) row-major -> (cols, rows) row-major.
@@ -49,6 +49,11 @@ pub fn target_history(n_az: usize, a0: usize, doppler_rate: f64) -> SplitComplex
 /// Azimuth-compress a corner-turned block: `data` is (n_range, n_az)
 /// row-major (each row = one range bin across azimuth). Returns the
 /// same layout, azimuth-focused.
+///
+/// One registered filter + one `MatchedFilter` request: all range rows
+/// coalesce into fused `rangecomp{n_az}` tiles, and the spectrum
+/// multiply rides the forward FFT's last stage on the executor — no
+/// host-side multiply pass over the block.
 pub fn compress_azimuth(
     svc: &FftService,
     data: &SplitComplex,
@@ -63,16 +68,8 @@ pub fn compress_azimuth(
     for i in 0..n_az {
         h.set(i, spec.get(i).conj());
     }
-    // FFT all range rows, multiply, IFFT — through the batched service.
-    let f = svc.fft(n_az, Direction::Forward, data.clone(), n_range)?;
-    let mut prod = SplitComplex::zeros(n_range * n_az);
-    for r in 0..n_range {
-        for i in 0..n_az {
-            let v = f.get(r * n_az + i) * C32::new(h.re[i], h.im[i]);
-            prod.set(r * n_az + i, v);
-        }
-    }
-    svc.fft(n_az, Direction::Inverse, prod, n_range)
+    let handle = svc.register_filter(n_az, h)?;
+    svc.matched_filter(&handle, data.clone(), n_range)
 }
 
 #[cfg(test)]

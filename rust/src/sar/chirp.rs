@@ -46,9 +46,12 @@ impl Chirp {
 
     /// Matched filter in the frequency domain for an `n`-point range
     /// line: conj(FFT(s)) with the pulse zero-padded to `n`, optionally
-    /// windowed (sidelobe control).
+    /// windowed (sidelobe control). The pulse FFT runs through the
+    /// caller's planner so its plan/executor caches (and workspace
+    /// pools) are shared with the compression pipeline itself.
     pub fn matched_filter(
         &self,
+        planner: &crate::fft::plan::NativePlanner,
         n: usize,
         window: Option<&dyn Fn(usize, usize) -> f32>,
     ) -> SplitComplex {
@@ -59,7 +62,6 @@ impl Chirp {
             let w = window.map(|f| f(i, self.samples)).unwrap_or(1.0);
             padded.set(i, pulse.get(i).scale(w));
         }
-        let planner = crate::fft::plan::NativePlanner::new();
         let spec = planner
             .fft_batch(&padded, n, 1, crate::fft::Direction::Forward)
             .expect("pulse FFT");
@@ -94,22 +96,19 @@ mod tests {
     #[test]
     fn matched_filter_focuses_pulse() {
         // Correlating the pulse with its own matched filter must produce
-        // a peak of height ~samples at the pulse start bin.
+        // a peak of height ~samples at the pulse start bin. Run through
+        // the fused pipeline (the production path).
         let c = Chirp::new(100e6, 256, 0.7);
         let n = 1024;
-        let h = c.matched_filter(n, None);
+        let planner = crate::fft::plan::NativePlanner::new();
+        let h = c.matched_filter(&planner, n, None);
         let mut line = SplitComplex::zeros(n);
         let pulse = c.samples_split();
         for i in 0..c.samples {
             line.set(i, pulse.get(i));
         }
-        let planner = crate::fft::plan::NativePlanner::new();
-        let spec = planner.fft_batch(&line, n, 1, crate::fft::Direction::Forward).unwrap();
-        let mut prod = SplitComplex::zeros(n);
-        for i in 0..n {
-            prod.set(i, spec.get(i) * h.get(i));
-        }
-        let out = planner.fft_batch(&prod, n, 1, crate::fft::Direction::Inverse).unwrap();
+        let pipe = crate::fft::pipeline::SpectralPipeline::from_spectrum(&planner, h).unwrap();
+        let out = pipe.process(&line, 1).unwrap();
         let (mut best, mut best_i) = (0.0f32, 0usize);
         for i in 0..n {
             let m = out.get(i).abs();

@@ -98,10 +98,19 @@ pub struct ImageFormation {
 
 impl ImageFormation {
     /// echoes (n_az, n_range) -> focused image (n_az, n_range).
+    ///
+    /// Registers the range and azimuth filters ad hoc (one each per
+    /// call; idle filter queues are evicted after draining, so repeated
+    /// calls don't accumulate state). A pipeline issuing many blocks
+    /// against one service should hold a `RangeCompressor` +
+    /// [`crate::coordinator::FilterHandle`] and use
+    /// `compress_matched_with` so blocks coalesce into shared tiles.
     pub fn form(&self, svc: &FftService, echoes: &SplitComplex) -> Result<SplitComplex> {
         let rc = RangeCompressor::new(self.chirp, self.n_range);
-        // 1. Range compression: batch of n_az range lines.
-        let range_done = rc.compress_composed(svc, echoes, self.n_az)?;
+        // 1. Range compression: batch of n_az range lines through the
+        // fused matched-filter service path (one round trip, the
+        // multiply fused into the executor's forward pass).
+        let range_done = rc.compress_matched(svc, echoes, self.n_az)?;
         // 2. Corner turn to (n_range, n_az).
         let turned = corner_turn(&range_done, self.n_az, self.n_range);
         // 3. Azimuth compression across lines, per range bin.

@@ -1,31 +1,71 @@
 //! Range compression through the FFT service (paper §VII-D).
 //!
-//! Two execution paths, both exercised by the end-to-end example:
+//! Execution paths, all exercised by the end-to-end example and tests:
 //!
 //! * **Composed**: FFT -> matched-filter multiply (host) -> IFFT, three
-//!   trips through the batched service — the baseline pipeline.
-//! * **Fused**: the single `rangecomp4096` artifact (the paper's
-//!   "future work" kernel fusion), one engine call.
+//!   trips through the batched service — the baseline pipeline, kept as
+//!   the reference the fused paths are compared against.
+//! * **Matched**: one trip through the service's `MatchedFilter`
+//!   request kind — lines coalesce into `rangecomp*` tiles and the
+//!   native backend runs the fused spectral pipeline per line
+//!   (multiply in the register tier, no standalone multiply pass).
+//! * **FusedArtifact**: the `rangecomp{n}` artifact invoked directly on
+//!   the engine in tile-sized blocks (bypasses the batcher).
+//! * **Local**: the in-process [`SpectralPipeline`] with no service at
+//!   all (batch-parallel through the pooled executor) — the lower bound
+//!   the serving layers are measured against.
 
 use super::chirp::Chirp;
 use super::scene::{detect_peaks, Scene};
-use crate::coordinator::FftService;
+use crate::coordinator::{FftService, FilterHandle};
+use crate::fft::pipeline::SpectralPipeline;
+use crate::fft::plan::NativePlanner;
 use crate::fft::Direction;
 use crate::util::complex::SplitComplex;
 use anyhow::Result;
 use std::time::Instant;
+
+/// Which execution path [`run_scene`] drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RangePath {
+    /// Three service round trips with a host-side multiply.
+    Composed,
+    /// The service's fused `MatchedFilter` request kind.
+    Matched,
+    /// The fused `rangecomp{n}` artifact, engine-direct in tiles.
+    FusedArtifact,
+    /// The in-process [`SpectralPipeline`] (no service).
+    Local,
+}
+
+impl std::str::FromStr for RangePath {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "composed" => Ok(RangePath::Composed),
+            "matched" => Ok(RangePath::Matched),
+            "fused" | "artifact" => Ok(RangePath::FusedArtifact),
+            "local" | "pipeline" => Ok(RangePath::Local),
+            other => anyhow::bail!("unknown range path {other:?}"),
+        }
+    }
+}
 
 pub struct RangeCompressor {
     pub chirp: Chirp,
     pub n: usize,
     /// Frequency-domain matched filter (n,).
     pub filter: SplitComplex,
+    /// Planner whose caches back the filter FFT and the local pipeline.
+    planner: NativePlanner,
+    /// In-process fused pipeline over the same filter, built on first
+    /// [`Self::compress_local`] — service-path users never pay for it.
+    pipeline: std::sync::OnceLock<SpectralPipeline>,
 }
 
 impl RangeCompressor {
     pub fn new(chirp: Chirp, n: usize) -> RangeCompressor {
-        let filter = chirp.matched_filter(n, None);
-        RangeCompressor { chirp, n, filter }
+        Self::build(chirp, n, None)
     }
 
     pub fn with_window(
@@ -33,8 +73,26 @@ impl RangeCompressor {
         n: usize,
         window: &dyn Fn(usize, usize) -> f32,
     ) -> RangeCompressor {
-        let filter = chirp.matched_filter(n, Some(window));
-        RangeCompressor { chirp, n, filter }
+        Self::build(chirp, n, Some(window))
+    }
+
+    fn build(
+        chirp: Chirp,
+        n: usize,
+        window: Option<&dyn Fn(usize, usize) -> f32>,
+    ) -> RangeCompressor {
+        let planner = NativePlanner::new();
+        let filter = chirp.matched_filter(&planner, n, window);
+        RangeCompressor { chirp, n, filter, planner, pipeline: std::sync::OnceLock::new() }
+    }
+
+    fn pipeline(&self) -> &SpectralPipeline {
+        self.pipeline.get_or_init(|| {
+            // `matched_filter` already ran an n-point FFT through this
+            // planner, so n is a validated transform size.
+            SpectralPipeline::from_spectrum(&self.planner, self.filter.clone())
+                .expect("range line size validated at construction")
+        })
     }
 
     /// Composed path: three service round trips.
@@ -56,8 +114,46 @@ impl RangeCompressor {
         svc.fft(n, Direction::Inverse, prod, lines)
     }
 
-    /// Fused path: the single rangecomp artifact (n = 4096 only, in
-    /// tiles of the artifact batch).
+    /// Register this compressor's filter with a service for the fused
+    /// `MatchedFilter` request kind. Share the handle across calls (and
+    /// clients) so their lines coalesce into the same tiles.
+    pub fn register_filter(&self, svc: &FftService) -> Result<FilterHandle> {
+        svc.register_filter(self.n, self.filter.clone())
+    }
+
+    /// Fused service path: one matched-filter request through a
+    /// registered handle (see [`Self::register_filter`]).
+    pub fn compress_matched_with(
+        &self,
+        svc: &FftService,
+        handle: &FilterHandle,
+        echoes: &SplitComplex,
+        lines: usize,
+    ) -> Result<SplitComplex> {
+        svc.matched_filter(handle, echoes.clone(), lines)
+    }
+
+    /// Fused service path, registering the filter ad hoc (convenience;
+    /// prefer [`Self::compress_matched_with`] when issuing many calls so
+    /// cross-request coalescing keeps working).
+    pub fn compress_matched(
+        &self,
+        svc: &FftService,
+        echoes: &SplitComplex,
+        lines: usize,
+    ) -> Result<SplitComplex> {
+        let handle = self.register_filter(svc)?;
+        self.compress_matched_with(svc, &handle, echoes, lines)
+    }
+
+    /// In-process fused pipeline (no service): batch-parallel through
+    /// the pooled executor, zero steady-state allocations.
+    pub fn compress_local(&self, echoes: &SplitComplex, lines: usize) -> Result<SplitComplex> {
+        self.pipeline().process(echoes, lines)
+    }
+
+    /// Fused path: the single rangecomp artifact, engine-direct in
+    /// tiles of the artifact batch.
     pub fn compress_fused(
         &self,
         svc: &FftService,
@@ -90,7 +186,8 @@ pub struct RangeReport {
     pub n: usize,
     pub elapsed_s: f64,
     pub us_per_line: f64,
-    /// Nominal GFLOPS crediting the two FFTs per line (§VI-A metric).
+    /// Nominal GFLOPS crediting the full pipeline per line (2 FFTs +
+    /// the 6N matched-filter multiply — [`crate::util::pipeline_flops`]).
     pub gflops: f64,
     pub targets_expected: usize,
     pub targets_detected: usize,
@@ -104,14 +201,15 @@ pub fn run_scene(
     scene: &Scene,
     echoes: &SplitComplex,
     lines: usize,
-    fused: bool,
+    path: RangePath,
 ) -> Result<RangeReport> {
     let n = compressor.n;
     let t0 = Instant::now();
-    let compressed = if fused {
-        compressor.compress_fused(svc, echoes, lines)?
-    } else {
-        compressor.compress_composed(svc, echoes, lines)?
+    let compressed = match path {
+        RangePath::Composed => compressor.compress_composed(svc, echoes, lines)?,
+        RangePath::Matched => compressor.compress_matched(svc, echoes, lines)?,
+        RangePath::FusedArtifact => compressor.compress_fused(svc, echoes, lines)?,
+        RangePath::Local => compressor.compress_local(echoes, lines)?,
     };
     let elapsed = t0.elapsed().as_secs_f64();
 
@@ -128,7 +226,7 @@ pub fn run_scene(
         .filter(|t| peaks.iter().any(|&p| p.abs_diff(t.range_bin) <= 2))
         .count();
 
-    let flops = 2.0 * crate::util::fft_flops(n) * lines as f64;
+    let flops = crate::util::pipeline_flops(n) * lines as f64;
     Ok(RangeReport {
         lines,
         n,
@@ -167,15 +265,52 @@ mod tests {
         let scene = Scene::random(n, 3, 128, &mut rng);
         let echoes = scene.echoes(&chirp, 4, &mut rng);
         let comp = RangeCompressor::new(chirp, n);
-        let report = run_scene(&svc, &comp, &scene, &echoes, 4, false).unwrap();
+        let report = run_scene(&svc, &comp, &scene, &echoes, 4, RangePath::Composed).unwrap();
         assert_eq!(report.detection_hits, 3, "{report:?}");
+    }
+
+    #[test]
+    fn all_paths_focus_targets() {
+        let svc = svc();
+        let mut rng = Rng::new(93);
+        let n = 1024;
+        let chirp = Chirp::new(100e6, 128, 0.8);
+        let scene = Scene::random(n, 3, 128, &mut rng);
+        let lines = 4;
+        let echoes = scene.echoes(&chirp, lines, &mut rng);
+        let comp = RangeCompressor::new(chirp, n);
+        for path in [RangePath::Composed, RangePath::Matched, RangePath::Local] {
+            let report = run_scene(&svc, &comp, &scene, &echoes, lines, path).unwrap();
+            assert_eq!(report.detection_hits, 3, "{path:?}: {report:?}");
+            assert!(report.gflops > 0.0, "{path:?}");
+        }
+    }
+
+    #[test]
+    fn matched_service_path_agrees_with_composed() {
+        // Same executor variant/backend end to end and the same multiply
+        // order -> fused service traffic is bitwise the composed result.
+        let svc = svc();
+        let mut rng = Rng::new(91);
+        let n = 4096;
+        let chirp = Chirp::new(100e6, 256, 0.8);
+        let scene = Scene::random(n, 4, 256, &mut rng);
+        let lines = 40; // spans multiple tiles
+        let echoes = scene.echoes(&chirp, lines, &mut rng);
+        let comp = RangeCompressor::new(chirp, n);
+        let a = comp.compress_composed(&svc, &echoes, lines).unwrap();
+        let b = comp.compress_matched(&svc, &echoes, lines).unwrap();
+        assert_eq!(a.re, b.re, "matched vs composed must be bitwise equal");
+        assert_eq!(a.im, b.im);
+        let m = svc.drain().unwrap();
+        assert!(m.mf_tiles > 0, "matched tiles must have been dispatched");
     }
 
     #[test]
     fn fused_matches_composed() {
         let svc = svc();
         let mut rng = Rng::new(91);
-        let n = 4096; // fused artifact exists only at 4096
+        let n = 4096; // fused artifact exists at every size; 4096 is the paper's
         let chirp = Chirp::new(100e6, 256, 0.8);
         let scene = Scene::random(n, 4, 256, &mut rng);
         let lines = 3;
@@ -185,6 +320,22 @@ mod tests {
         let b = comp.compress_fused(&svc, &echoes, lines).unwrap();
         let err = a.rel_l2_error(&b);
         assert!(err < 5e-4, "fused vs composed rel err {err}");
+    }
+
+    #[test]
+    fn local_pipeline_matches_composed() {
+        let svc = svc();
+        let mut rng = Rng::new(94);
+        let n = 4096;
+        let chirp = Chirp::new(100e6, 256, 0.8);
+        let scene = Scene::random(n, 2, 256, &mut rng);
+        let lines = 6;
+        let echoes = scene.echoes(&chirp, lines, &mut rng);
+        let comp = RangeCompressor::new(chirp, n);
+        let a = comp.compress_composed(&svc, &echoes, lines).unwrap();
+        let b = comp.compress_local(&echoes, lines).unwrap();
+        assert_eq!(a.re, b.re, "local pipeline vs composed must be bitwise equal");
+        assert_eq!(a.im, b.im);
     }
 
     #[test]

@@ -34,6 +34,14 @@ pub fn fft_flops(n: usize) -> f64 {
     5.0 * n as f64 * (ilog2_exact(n) as f64)
 }
 
+/// Nominal FLOP count of one matched-filter pipeline line (the fused
+/// FFT -> spectrum multiply -> IFFT of [`crate::fft::pipeline`]): two
+/// FFTs at `5 N log2 N` plus the pointwise complex multiply at 6 FLOPs
+/// per bin (4 mul + 2 add).
+pub fn pipeline_flops(n: usize) -> f64 {
+    2.0 * fft_flops(n) + 6.0 * n as f64
+}
+
 /// GFLOPS given nominal FLOPs for a whole batch and elapsed seconds.
 pub fn gflops(flops: f64, seconds: f64) -> f64 {
     if seconds <= 0.0 {
@@ -72,6 +80,12 @@ mod tests {
     fn fft_flops_matches_paper() {
         // Paper §VI-A: 5 N log2 N. At N=4096: 5*4096*12 = 245760.
         assert_eq!(fft_flops(4096), 245_760.0);
+    }
+
+    #[test]
+    fn pipeline_flops_is_two_ffts_plus_multiply() {
+        // N=4096: 2*245760 + 6*4096 = 516096.
+        assert_eq!(pipeline_flops(4096), 516_096.0);
     }
 
     #[test]

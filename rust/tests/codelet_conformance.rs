@@ -248,6 +248,109 @@ fn roundtrip_max_ulp_within_bounds_per_size() {
     }
 }
 
+/// MUL_SPECTRUM stage codelets: for every radix, backend, twiddle path,
+/// and q-run shape, the fused stage must be **bitwise** the plain
+/// forward stage followed by an elementwise complex multiply with the
+/// filter at the same output index — and all backends must agree
+/// bitwise with each other.
+#[test]
+fn mul_spectrum_stages_are_bitwise_stage_then_multiply() {
+    let mut rng = Rng::new(0x5D0C);
+    for radix in [2usize, 4, 8] {
+        for (n_mult, s) in [(1usize, 8usize), (2, 11), (4, 3), (2, 16)] {
+            let n = radix * n_mult;
+            let xre = rng.signal(n * s);
+            let xim = rng.signal(n * s);
+            let hre = rng.signal(n * s);
+            let him = rng.signal(n * s);
+            let stage_table = StageTable::new(n, radix);
+            let mut per_backend: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+            for &backend in CodeletBackend::compiled() {
+                let codelets = table(backend);
+                for tables in [None, Some(&stage_table)] {
+                    // Reference: the plain forward stage, then the
+                    // standalone multiply at the same indices.
+                    let mut wre = vec![0.0f32; n * s];
+                    let mut wim = vec![0.0f32; n * s];
+                    let plain = codelets.stage(radix, false, false);
+                    plain(&xre, &xim, &mut wre, &mut wim, n, s, tables, 1.0);
+                    for i in 0..n * s {
+                        let (r, im_) = (wre[i], wim[i]);
+                        wre[i] = r * hre[i] - im_ * him[i];
+                        wim[i] = r * him[i] + im_ * hre[i];
+                    }
+                    // Fused MUL_SPECTRUM stage.
+                    let mut yre = vec![0.0f32; n * s];
+                    let mut yim = vec![0.0f32; n * s];
+                    let fused = codelets.stage_mul(radix);
+                    fused(&xre, &xim, &mut yre, &mut yim, n, s, tables, &hre, &him);
+                    let what = format!(
+                        "backend={} radix={radix} n={n} s={s} tables={}",
+                        backend.tag(),
+                        tables.is_some(),
+                    );
+                    assert_eq!(yre, wre, "{what} re");
+                    assert_eq!(yim, wim, "{what} im");
+                    if tables.is_some() {
+                        per_backend.push((yre, yim));
+                    }
+                }
+            }
+            // Cross-backend bitwise agreement on the fused stage.
+            for other in &per_backend[1..] {
+                assert_eq!(per_backend[0].0, other.0, "radix={radix} s={s} re");
+                assert_eq!(per_backend[0].1, other.1, "radix={radix} s={s} im");
+            }
+        }
+    }
+}
+
+/// The full fused pipeline (forward with MUL_SPECTRUM last stage +
+/// fused inverse) against the three-dispatch reference, at every paper
+/// size, both kernel variants, every compiled backend — bitwise, and
+/// bitwise across backends. This is the acceptance gate for rerouting
+/// convolution/SAR traffic through `fft::pipeline`.
+#[test]
+fn fused_pipeline_matches_three_dispatch_all_paper_sizes() {
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(0xF17E);
+    for &n in &PAPER_SIZES {
+        let batch = 2usize;
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        for variant in [Variant::Radix4, Variant::Radix8] {
+            let mut per_backend: Vec<SplitComplex> = Vec::new();
+            for &backend in CodeletBackend::compiled() {
+                let ex = planner.executor_with(n, variant, backend).unwrap();
+                // Three-dispatch reference on the same executor.
+                let f = ex.execute_batch(&x, batch, Direction::Forward).unwrap();
+                let mut prod = SplitComplex::zeros(n * batch);
+                for b in 0..batch {
+                    for i in 0..n {
+                        prod.set(b * n + i, f.get(b * n + i) * h.get(i));
+                    }
+                }
+                let mut want = prod;
+                ex.execute_batch_into(&mut want, batch, Direction::Inverse).unwrap();
+                // Fused pipeline, serial and batch-parallel.
+                let mut got = x.clone();
+                ex.execute_pipeline_into(&mut got, batch, &h).unwrap();
+                assert_eq!(got.re, want.re, "n={n} {variant:?} {} re", backend.tag());
+                assert_eq!(got.im, want.im, "n={n} {variant:?} {} im", backend.tag());
+                let mut par = x.clone();
+                ex.execute_pipeline_par_into(&mut par, batch, &h).unwrap();
+                assert_eq!(par.re, got.re, "par: n={n} {variant:?} {}", backend.tag());
+                assert_eq!(par.im, got.im, "par: n={n} {variant:?} {}", backend.tag());
+                per_backend.push(got);
+            }
+            for other in &per_backend[1..] {
+                assert_eq!(per_backend[0].re, other.re, "n={n} {variant:?} re");
+                assert_eq!(per_backend[0].im, other.im, "n={n} {variant:?} im");
+            }
+        }
+    }
+}
+
 /// Batched execution through the pooled executors must conform too (the
 /// serving path): spot-check a multi-line batch per backend against the
 /// oracle at one representative single-threadgroup size and one

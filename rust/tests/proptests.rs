@@ -3,8 +3,11 @@
 
 use applefft::coordinator::{Decomposition, FftService, Planner, ServiceConfig};
 use applefft::fft::codelet::CodeletBackend;
+use applefft::fft::convolve::{direct_convolve, OverlapSave};
 use applefft::fft::dft::dft_batch;
+use applefft::fft::pipeline::SpectralPipeline;
 use applefft::fft::plan::{NativePlanner, Variant};
+use applefft::fft::real::{irfft_batch, rfft_batch};
 use applefft::fft::stockham::radix_schedule;
 use applefft::fft::Direction;
 use applefft::runtime::Backend;
@@ -157,6 +160,97 @@ fn prop_codelet_backends_bitwise_equal() {
             assert_eq!(a.re, b.re, "re: n={n} batch={batch} {variant:?} {dir:?}");
             assert_eq!(a.im, b.im, "im: n={n} batch={batch} {variant:?} {dir:?}");
         }
+    });
+}
+
+#[test]
+fn prop_rfft_irfft_roundtrip() {
+    // Real FFT algebra across random sizes and batches:
+    // irfft(rfft(x)) ≈ x, and the batched entry points (one pooled
+    // -executor dispatch for all lines) match exactly.
+    let planner = NativePlanner::new();
+    check("rfft/irfft roundtrip", 24, |g| {
+        let n = g.pow2_size(2, 12);
+        let batch = g.rng.between(1, 5);
+        let x = g.rng.signal(n * batch);
+        let spec = rfft_batch(&planner, &x, n, batch).unwrap();
+        assert_eq!(spec.len(), (n / 2 + 1) * batch, "half-spectrum shape");
+        let y = irfft_batch(&planner, &spec, n, batch).unwrap();
+        let max: f32 = x.iter().zip(&y).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        assert!(max < 2e-4, "n={n} batch={batch}: roundtrip max diff {max}");
+        // Real-input conjugate symmetry endpoints: DC and Nyquist bins
+        // of every line are (numerically) real — bounded relative to
+        // the bin magnitude, which grows like sqrt(n).
+        for b in 0..batch {
+            let at = b * (n / 2 + 1);
+            let tol = 1e-4 * (1.0 + (n as f32).sqrt());
+            assert!(spec.im[at].abs() < tol, "DC line {b}: {}", spec.im[at]);
+            assert!(
+                spec.im[at + n / 2].abs() < tol,
+                "Nyquist line {b}: {}",
+                spec.im[at + n / 2]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_overlap_save_matches_direct_oracle() {
+    // Streaming overlap-save (fused-pipeline blocks, arbitrary chunk
+    // boundaries) against the O(N*K) direct convolution, across random
+    // kernel lengths, block sizes, and chunkings.
+    let planner = NativePlanner::new();
+    check("overlap-save vs direct", 16, |g| {
+        let k = g.rng.between(1, 40);
+        // Smallest legal pow2 block >= 2k, bumped a random notch.
+        let min_block = (2 * k).next_power_of_two().max(8);
+        let n = min_block << g.rng.below(2);
+        let kernel = SplitComplex { re: g.rng.signal(k), im: g.rng.signal(k) };
+        let mut os = OverlapSave::new(&planner, &kernel, n).unwrap();
+        let total = g.rng.between(1, 4) * n + g.rng.below(n);
+        let x = SplitComplex { re: g.rng.signal(total), im: g.rng.signal(total) };
+        // Feed in random-sized chunks to stress the carried tail.
+        let mut got = SplitComplex::zeros(0);
+        let mut at = 0;
+        while at < total {
+            let take = g.rng.between(1, 2 * n).min(total - at);
+            let part = os.process(&x.slice(at, take)).unwrap();
+            got.extend_from(&part);
+            at += take;
+        }
+        assert_eq!(got.len(), total);
+        let want = direct_convolve(&x, &kernel);
+        let err = got.rel_l2_error(&want);
+        assert!(err < 1e-3, "k={k} n={n} total={total}: rel err {err}");
+    });
+}
+
+#[test]
+fn prop_pipeline_bitwise_equals_three_dispatch() {
+    // The fused spectral pipeline property, over random sizes, batches,
+    // and filters: fused == fft -> multiply -> ifft, bit for bit, on
+    // the same executor.
+    let planner = NativePlanner::new();
+    check("fused pipeline == composed", 16, |g| {
+        let n = g.pow2_size(3, 12);
+        let lines = g.rng.between(1, 4);
+        let (re, im) = g.signal(n * lines);
+        let x = SplitComplex { re, im };
+        let (hre, him) = g.signal(n);
+        let h = SplitComplex { re: hre, im: him };
+        let pipe = SpectralPipeline::from_spectrum(&planner, h.clone()).unwrap();
+        let exec = planner.executor_auto(n).unwrap();
+        let f = exec.execute_batch(&x, lines, Direction::Forward).unwrap();
+        let mut want = SplitComplex::zeros(n * lines);
+        for l in 0..lines {
+            for i in 0..n {
+                want.set(l * n + i, f.get(l * n + i) * h.get(i));
+            }
+        }
+        exec.execute_batch_into(&mut want, lines, Direction::Inverse).unwrap();
+        let got = pipe.process(&x, lines).unwrap();
+        assert_eq!(got.re, want.re, "n={n} lines={lines} re");
+        assert_eq!(got.im, want.im, "n={n} lines={lines} im");
     });
 }
 

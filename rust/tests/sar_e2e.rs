@@ -4,7 +4,7 @@
 
 use applefft::coordinator::{FftService, ServiceConfig};
 use applefft::runtime::{engine::artifacts_dir, Backend};
-use applefft::sar::range::{run_scene, RangeCompressor};
+use applefft::sar::range::{run_scene, RangeCompressor, RangePath};
 use applefft::sar::{Chirp, Scene};
 use applefft::testkit::check;
 use applefft::util::rng::Rng;
@@ -30,7 +30,7 @@ fn all_targets_focus_at_true_bins() {
     let lines = 16;
     let echoes = scene.echoes(&chirp, lines, &mut rng);
     let comp = RangeCompressor::new(chirp, n);
-    let report = run_scene(&svc, &comp, &scene, &echoes, lines, false).unwrap();
+    let report = run_scene(&svc, &comp, &scene, &echoes, lines, RangePath::Composed).unwrap();
     assert_eq!(report.detection_hits, 6, "{report:?}");
     assert!(report.gflops > 0.0);
 }
@@ -52,6 +52,33 @@ fn fused_and_composed_agree_end_to_end() {
 }
 
 #[test]
+fn matched_filter_service_path_end_to_end() {
+    // The fused MatchedFilter request kind (one service round trip,
+    // multiply fused into the executor's forward pass) must reproduce
+    // the composed three-trip pipeline bit for bit, and record
+    // pipeline FLOPs in the metrics.
+    let svc = service(Backend::Native);
+    let mut rng = Rng::new(303);
+    let n = 4096;
+    let chirp = Chirp::new(100e6, 256, 0.8);
+    let scene = Scene::random(n, 4, chirp.samples, &mut rng);
+    let lines = 40; // exceeds one tile: exercises matched-path tiling
+    let echoes = scene.echoes(&chirp, lines, &mut rng);
+    let comp = RangeCompressor::new(chirp, n);
+    let a = comp.compress_composed(&svc, &echoes, lines).unwrap();
+    let handle = comp.register_filter(&svc).unwrap();
+    let b = comp.compress_matched_with(&svc, &handle, &echoes, lines).unwrap();
+    assert_eq!(a.re, b.re, "matched service path must be bitwise composed");
+    assert_eq!(a.im, b.im);
+    // And the detection story holds on the fused path too.
+    let report = run_scene(&svc, &comp, &scene, &echoes, lines, RangePath::Matched).unwrap();
+    assert_eq!(report.detection_hits, 4, "{report:?}");
+    let m = svc.drain().unwrap();
+    assert!(m.mf_tiles > 0, "matched tiles must be recorded: {m:?}");
+    assert!(m.matched_share() > 0.0);
+}
+
+#[test]
 fn prop_random_scenes_always_recover_targets() {
     let svc = service(Backend::Native);
     check("sar recovery", 8, |g| {
@@ -62,7 +89,7 @@ fn prop_random_scenes_always_recover_targets() {
         let lines = g.rng.between(1, 6);
         let echoes = scene.echoes(&chirp, lines, &mut g.rng);
         let comp = RangeCompressor::new(chirp, n);
-        let report = run_scene(&svc, &comp, &scene, &echoes, lines, false).unwrap();
+        let report = run_scene(&svc, &comp, &scene, &echoes, lines, RangePath::Composed).unwrap();
         assert_eq!(report.detection_hits, k, "case {}: {report:?}", g.case);
     });
 }
@@ -82,8 +109,8 @@ fn pjrt_sar_pipeline() {
     let echoes = scene.echoes(&chirp, lines, &mut rng);
     let comp = RangeCompressor::new(chirp, n);
     // Composed through the batched service AND the fused artifact.
-    let composed = run_scene(&svc, &comp, &scene, &echoes, lines, false).unwrap();
+    let composed = run_scene(&svc, &comp, &scene, &echoes, lines, RangePath::Composed).unwrap();
     assert_eq!(composed.detection_hits, 5, "{composed:?}");
-    let fused = run_scene(&svc, &comp, &scene, &echoes, lines, true).unwrap();
+    let fused = run_scene(&svc, &comp, &scene, &echoes, lines, RangePath::FusedArtifact).unwrap();
     assert_eq!(fused.detection_hits, 5, "{fused:?}");
 }

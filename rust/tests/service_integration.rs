@@ -108,6 +108,52 @@ fn drain_flushes_partials_immediately() {
 }
 
 #[test]
+fn concurrent_matched_filter_clients_share_filter_tiles() {
+    // The SAR serving pattern: many clients, one registered filter. All
+    // their lines coalesce in the filter's queue, every response is the
+    // fused pipeline result, and the matched share shows in metrics.
+    let svc = service(Backend::Native);
+    let n = 512usize;
+    let mut rng = Rng::new(206);
+    let spec = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+    let handle = svc.register_filter(n, spec.clone()).unwrap();
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let svc = svc.clone();
+        let handle = handle.clone();
+        let spec = spec.clone();
+        let planner_ref = std::sync::Arc::new(NativePlanner::new());
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(300 + t);
+            for _ in 0..4 {
+                let lines = rng.between(1, 6);
+                let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+                let got = svc.matched_filter(&handle, x.clone(), lines).unwrap();
+                // Reference: local composed pipeline.
+                let f = planner_ref.fft_batch(&x, n, lines, Direction::Forward).unwrap();
+                let mut prod = SplitComplex::zeros(n * lines);
+                for l in 0..lines {
+                    for i in 0..n {
+                        prod.set(l * n + i, f.get(l * n + i) * spec.get(i));
+                    }
+                }
+                let want =
+                    planner_ref.fft_batch(&prod, n, lines, Direction::Inverse).unwrap();
+                let err = got.rel_l2_error(&want);
+                assert!(err < 5e-4, "client {t}: {err}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = svc.drain().unwrap();
+    assert_eq!(m.failures, 0);
+    assert!(m.mf_tiles > 0, "filter tiles must have been dispatched");
+    assert!(m.matched_share() > 0.0);
+}
+
+#[test]
 fn four_step_sizes_through_service() {
     let svc = service(Backend::Native);
     let planner = NativePlanner::new();
