@@ -27,7 +27,14 @@ fn main() -> anyhow::Result<()> {
     let model = report::table7(256);
     let mut table = Table::new(
         "Multi-size FFT (measured on this testbed + M1 model vs paper Table VII)",
-        &["N", "Decomposition", "us/line (measured)", "model GFLOPS (M1)", "paper GFLOPS", "rel err vs oracle"],
+        &[
+            "N",
+            "Decomposition",
+            "us/line (measured)",
+            "model GFLOPS (M1)",
+            "paper GFLOPS",
+            "rel err vs oracle",
+        ],
     );
 
     for (n, label, row) in &model {

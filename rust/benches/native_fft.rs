@@ -7,6 +7,7 @@
 
 use applefft::bench::table::{BenchJson, Table};
 use applefft::bench::Benchmark;
+use applefft::fft::bfp::Precision;
 use applefft::fft::codelet::CodeletBackend;
 use applefft::fft::plan::{NativePlan, NativePlanner, Variant};
 use applefft::fft::Direction;
@@ -70,50 +71,61 @@ fn main() {
     t2.print();
 
     // ---- Two-tier executor: serial vs batch-parallel × scalar vs simd
-    // codelets, the acceptance workload (N=4096, batch 64). The codelet
-    // axis is the register tier (explicit f32x8 vs autovectorised
-    // scalar loops); the path axis is the batch-occupancy tier (lines
-    // striped over workers). The simd-vs-scalar speedup column is the
-    // "explicit SIMD beats hoping the autovectoriser cooperates" proof
-    // row — run with `--features simd` on nightly to populate it. ----
+    // codelets × f32 vs bfp16 exchange, the acceptance workload
+    // (N=4096, batch 64). The codelet axis is the register tier
+    // (explicit f32x8 vs autovectorised scalar loops); the path axis is
+    // the batch-occupancy tier (lines striped over workers); the
+    // precision axis is the exchange tier (full f32 vs the
+    // block-floating-point codec on every inter-stage store). On CPU
+    // the bfp16 rows *pay* for the codec in compute — the interesting
+    // number is how far measured reality sits from the paper's §IX-A
+    // bandwidth-only 1.7x projection (see benches/future_work.rs). ----
     let batch64 = 64usize;
     let mut rng64 = Rng::new(64);
     let x64 = SplitComplex { re: rng64.signal(n * batch64), im: rng64.signal(n * batch64) };
     let mut te = Table::new(
-        "Two-tier executor — serial vs parallel x scalar vs simd, N=4096 batch 64",
-        &["path", "codelets", "us/FFT", "GFLOPS", "vs scalar serial"],
+        "Two-tier executor — serial vs parallel x codelets x precision, N=4096 batch 64",
+        &["path", "codelets", "precision", "us/FFT", "GFLOPS", "vs scalar serial f32"],
     );
     let mut scalar_serial_secs = None;
     for &backend in CodeletBackend::compiled() {
-        let ex = planner.executor_with(n, Variant::Radix8, backend).unwrap();
-        let ms = b.run(&format!("executor serial {} n=4096 b=64", backend.tag()), || {
-            let mut d = x64.clone();
-            ex.execute_batch_into(&mut d, batch64, Direction::Forward).unwrap();
-            d
-        });
-        let mp = b.run(&format!("executor batch-par {} n=4096 b=64", backend.tag()), || {
-            let mut d = x64.clone();
-            ex.execute_batch_par_into(&mut d, batch64, Direction::Forward).unwrap();
-            d
-        });
-        let base = *scalar_serial_secs.get_or_insert(ms.median_secs());
-        te.row(&[
-            "executor serial".into(),
-            backend.tag().into(),
-            format!("{:.1}", ms.median_secs() / batch64 as f64 * 1e6),
-            format!("{:.2}", gflops(fft_flops(n) * batch64 as f64, ms.median_secs())),
-            format!("{:.2}x", base / ms.median_secs()),
-        ]);
-        te.row(&[
-            format!("executor batch-par ({} threads)", ex.threads()),
-            backend.tag().into(),
-            format!("{:.1}", mp.median_secs() / batch64 as f64 * 1e6),
-            format!("{:.2}", gflops(fft_flops(n) * batch64 as f64, mp.median_secs())),
-            format!("{:.2}x", base / mp.median_secs()),
-        ]);
+        for &prec in Precision::all() {
+            let ex = planner
+                .executor_with_precision(n, Variant::Radix8, backend, prec)
+                .unwrap();
+            let what = format!("{} {}", backend.tag(), prec.tag());
+            let ms = b.run(&format!("executor serial {what} n=4096 b=64"), || {
+                let mut d = x64.clone();
+                ex.execute_batch_into(&mut d, batch64, Direction::Forward).unwrap();
+                d
+            });
+            let mp = b.run(&format!("executor batch-par {what} n=4096 b=64"), || {
+                let mut d = x64.clone();
+                ex.execute_batch_par_into(&mut d, batch64, Direction::Forward).unwrap();
+                d
+            });
+            let base = *scalar_serial_secs.get_or_insert(ms.median_secs());
+            te.row(&[
+                "executor serial".into(),
+                backend.tag().into(),
+                prec.tag().into(),
+                format!("{:.1}", ms.median_secs() / batch64 as f64 * 1e6),
+                format!("{:.2}", gflops(fft_flops(n) * batch64 as f64, ms.median_secs())),
+                format!("{:.2}x", base / ms.median_secs()),
+            ]);
+            te.row(&[
+                format!("executor batch-par ({} threads)", ex.threads()),
+                backend.tag().into(),
+                prec.tag().into(),
+                format!("{:.1}", mp.median_secs() / batch64 as f64 * 1e6),
+                format!("{:.2}", gflops(fft_flops(n) * batch64 as f64, mp.median_secs())),
+                format!("{:.2}x", base / mp.median_secs()),
+            ]);
+        }
     }
     te.note("GFLOPS is the paper's nominal 5*N*log2 N metric (§VI-A)");
     te.note("all rows include the input memcpy (out-of-place semantics)");
+    te.note("bfp16 = block-floating-point exchange (fft::bfp); butterflies stay f32");
     if !CodeletBackend::Simd.is_compiled() {
         te.note("simd rows absent: rebuild with `--features simd` on nightly");
     }
@@ -128,40 +140,48 @@ fn main() {
     let mut rngh = Rng::new(4097);
     let h64 = SplitComplex { re: rngh.signal(n), im: rngh.signal(n) };
     let mut tp = Table::new(
-        "Fused spectral pipeline — serial vs parallel x scalar vs simd, N=4096 batch 64",
-        &["path", "codelets", "us/line", "GFLOPS", "vs scalar serial"],
+        "Fused spectral pipeline — serial vs parallel x codelets x precision, N=4096 batch 64",
+        &["path", "codelets", "precision", "us/line", "GFLOPS", "vs scalar serial f32"],
     );
     let mut pipe_scalar_serial = None;
     for &backend in CodeletBackend::compiled() {
-        let ex = planner.executor_with(n, Variant::Radix8, backend).unwrap();
-        let ms = b.run(&format!("pipeline serial {} n=4096 b=64", backend.tag()), || {
-            let mut d = x64.clone();
-            ex.execute_pipeline_into(&mut d, batch64, &h64).unwrap();
-            d
-        });
-        let mp = b.run(&format!("pipeline batch-par {} n=4096 b=64", backend.tag()), || {
-            let mut d = x64.clone();
-            ex.execute_pipeline_par_into(&mut d, batch64, &h64).unwrap();
-            d
-        });
-        let base = *pipe_scalar_serial.get_or_insert(ms.median_secs());
-        tp.row(&[
-            "pipeline serial".into(),
-            backend.tag().into(),
-            format!("{:.1}", ms.median_secs() / batch64 as f64 * 1e6),
-            format!("{:.2}", gflops(pipeline_flops(n) * batch64 as f64, ms.median_secs())),
-            format!("{:.2}x", base / ms.median_secs()),
-        ]);
-        tp.row(&[
-            format!("pipeline batch-par ({} threads)", ex.threads()),
-            backend.tag().into(),
-            format!("{:.1}", mp.median_secs() / batch64 as f64 * 1e6),
-            format!("{:.2}", gflops(pipeline_flops(n) * batch64 as f64, mp.median_secs())),
-            format!("{:.2}x", base / mp.median_secs()),
-        ]);
+        for &prec in Precision::all() {
+            let ex = planner
+                .executor_with_precision(n, Variant::Radix8, backend, prec)
+                .unwrap();
+            let what = format!("{} {}", backend.tag(), prec.tag());
+            let ms = b.run(&format!("pipeline serial {what} n=4096 b=64"), || {
+                let mut d = x64.clone();
+                ex.execute_pipeline_into(&mut d, batch64, &h64).unwrap();
+                d
+            });
+            let mp = b.run(&format!("pipeline batch-par {what} n=4096 b=64"), || {
+                let mut d = x64.clone();
+                ex.execute_pipeline_par_into(&mut d, batch64, &h64).unwrap();
+                d
+            });
+            let base = *pipe_scalar_serial.get_or_insert(ms.median_secs());
+            tp.row(&[
+                "pipeline serial".into(),
+                backend.tag().into(),
+                prec.tag().into(),
+                format!("{:.1}", ms.median_secs() / batch64 as f64 * 1e6),
+                format!("{:.2}", gflops(pipeline_flops(n) * batch64 as f64, ms.median_secs())),
+                format!("{:.2}x", base / ms.median_secs()),
+            ]);
+            tp.row(&[
+                format!("pipeline batch-par ({} threads)", ex.threads()),
+                backend.tag().into(),
+                prec.tag().into(),
+                format!("{:.1}", mp.median_secs() / batch64 as f64 * 1e6),
+                format!("{:.2}", gflops(pipeline_flops(n) * batch64 as f64, mp.median_secs())),
+                format!("{:.2}x", base / mp.median_secs()),
+            ]);
+        }
     }
     tp.note("GFLOPS credits 2 FFTs + the 6N matched-filter multiply per line");
     tp.note("no standalone multiply pass: the product is fused into the forward last stage");
+    tp.note("bfp16 rows run the whole matched-filter chain at half-precision exchange");
     if !CodeletBackend::Simd.is_compiled() {
         tp.note("simd rows absent: rebuild with `--features simd` on nightly");
     }

@@ -39,7 +39,8 @@ fn main() {
         &applefft::sim::config::M1,
         &applefft::sim::config::CalibConstants::default(),
     );
-    let mut tm = Table::new("§V-C — simdgroup_matrix MMA analysis", &["metric", "value", "paper"]);
+    let mut tm =
+        Table::new("§V-C — simdgroup_matrix MMA analysis", &["metric", "value", "paper"]);
     let inflation = format!("{:.1}x", a.flop_inflation);
     tm.row_str(&["complex-via-real-MMA FLOP inflation", &inflation, "~3.4x"]);
     tm.row_str(&["MMA ALU-rate advantage", &format!("{:.2}x", a.rate_advantage), "~4x"]);

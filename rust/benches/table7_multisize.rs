@@ -41,7 +41,10 @@ fn main() {
             format!("{delta:+.1}%"),
         ]);
     }
-    t7.note("paper's own GFLOPS and us/FFT columns are mutually inconsistent at some sizes; we match GFLOPS (see EXPERIMENTS.md)");
+    t7.note(
+        "paper's own GFLOPS and us/FFT columns are mutually inconsistent at some sizes; \
+         we match GFLOPS (see EXPERIMENTS.md)",
+    );
     t7.print();
 
     // ---- Live multi-size sweep through the service. ----

@@ -18,7 +18,9 @@ use applefft::util::rng::Rng;
 /// A deliberately gather-heavy radix-2 Stockham (the shuffle variant's
 /// access structure, CPU edition): every butterfly input goes through an
 /// index table.
-fn gather_fft(x: &SplitComplex, n: usize, tables: &[(Vec<u32>, Vec<u32>, Vec<f32>, Vec<f32>, Vec<f32>)]) -> SplitComplex {
+type GatherTables = [(Vec<u32>, Vec<u32>, Vec<f32>, Vec<f32>, Vec<f32>)];
+
+fn gather_fft(x: &SplitComplex, n: usize, tables: &GatherTables) -> SplitComplex {
     let mut cur = x.clone();
     let mut next = SplitComplex::zeros(n);
     for (ia, ib, wr, wi, k1) in tables {
@@ -78,7 +80,9 @@ fn main() {
             format!("{:.2}", r.paper_gflops),
         ]);
     }
-    t.note("fewer barriers LOSES: scattered access costs 3.2x bandwidth, a barrier costs ~2 cycles");
+    t.note(
+        "fewer barriers LOSES: scattered access costs 3.2x bandwidth, a barrier costs ~2 cycles",
+    );
     t.print();
 
     // ---- Live inversion on this testbed. ----

@@ -134,15 +134,38 @@ fn json_string(s: &str) -> String {
 /// Machine-readable bench report: the bench binary's tables, serialised
 /// as one JSON document and written to `BENCH_<name>.json` at the
 /// repository root (one directory above the `rust/` crate).
+///
+/// Every report is tagged with the process-selected codelet backend and
+/// exchange precision (schema 2), so `BENCH_*.json` artifacts from
+/// different CI legs (scalar/simd x f32/bfp16) are comparable without
+/// parsing table cells. Extra tags can be attached with [`Self::tag`].
 #[derive(Debug, Clone)]
 pub struct BenchJson {
     name: String,
+    tags: Vec<(String, String)>,
     tables: Vec<Table>,
 }
 
 impl BenchJson {
     pub fn new(name: &str) -> BenchJson {
-        BenchJson { name: name.to_string(), tables: Vec::new() }
+        BenchJson {
+            name: name.to_string(),
+            tags: vec![
+                ("codelet".to_string(), crate::fft::codelet::select().tag().to_string()),
+                ("precision".to_string(), crate::fft::bfp::select().tag().to_string()),
+            ],
+            tables: Vec::new(),
+        }
+    }
+
+    /// Attach (or override) a report-level tag.
+    pub fn tag(&mut self, key: &str, value: &str) -> &mut Self {
+        if let Some(t) = self.tags.iter_mut().find(|(k, _)| k == key) {
+            t.1 = value.to_string();
+        } else {
+            self.tags.push((key.to_string(), value.to_string()));
+        }
+        self
     }
 
     /// Record a table (call right after printing it).
@@ -157,10 +180,16 @@ impl BenchJson {
 
     /// The whole report as a JSON document.
     pub fn to_json(&self) -> String {
+        let tags: Vec<String> = self
+            .tags
+            .iter()
+            .map(|(k, v)| format!("{}:{}", json_string(k), json_string(v)))
+            .collect();
         let tables: Vec<String> = self.tables.iter().map(|t| t.to_json()).collect();
         format!(
-            "{{\"bench\":{},\"schema\":1,\"tables\":[{}]}}\n",
+            "{{\"bench\":{},\"schema\":2,\"tags\":{{{}}},\"tables\":[{}]}}\n",
             json_string(&self.name),
+            tags.join(","),
             tables.join(",")
         )
     }
@@ -254,9 +283,27 @@ mod tests {
         b.add(&t1).add(&t2);
         assert_eq!(b.n_tables(), 2);
         let j = b.to_json();
-        assert!(j.starts_with("{\"bench\":\"native_fft\",\"schema\":1,"), "{j}");
+        assert!(j.starts_with("{\"bench\":\"native_fft\",\"schema\":2,\"tags\":{"), "{j}");
         assert!(j.contains("\"title\":\"A\"") && j.contains("\"title\":\"B\""), "{j}");
         assert!(j.ends_with("]}\n"), "{j:?}");
+    }
+
+    #[test]
+    fn bench_json_tags_codelet_and_precision() {
+        // Every report carries the backend/precision of the leg that
+        // produced it, so CI artifacts are comparable across legs.
+        let b = BenchJson::new("tagged");
+        let j = b.to_json();
+        let codelet = crate::fft::codelet::select().tag();
+        let precision = crate::fft::bfp::select().tag();
+        assert!(j.contains(&format!("\"codelet\":\"{codelet}\"")), "{j}");
+        assert!(j.contains(&format!("\"precision\":\"{precision}\"")), "{j}");
+        // Custom tags append; repeated keys override.
+        let mut b = BenchJson::new("tagged");
+        b.tag("host", "ci").tag("host", "laptop");
+        let j = b.to_json();
+        assert!(j.contains("\"host\":\"laptop\""), "{j}");
+        assert!(!j.contains("\"host\":\"ci\""), "{j}");
     }
 
     #[test]

@@ -10,12 +10,15 @@
 //! the transformed lines and replies exactly once, when complete.
 //!
 //! Queues are keyed by [`QueueKey`]: plain FFT traffic per (n,
-//! direction) as before, matched-filter traffic per (n, filter id) — so
-//! lines multiplying by the same registered spectrum coalesce into
-//! shared `rangecomp*` tiles and distinct filters never mix.
+//! direction, precision), matched-filter traffic per (n, filter id,
+//! precision) — so lines multiplying by the same registered spectrum
+//! coalesce into shared `rangecomp*` tiles, distinct filters never mix,
+//! and f32/bfp16 precision policies never share a tile (each tile
+//! executes at exactly one exchange precision).
 
 use super::metrics::Metrics;
 use super::request::{FftRequest, FftResponse, RequestKind};
+use crate::fft::bfp::Precision;
 use crate::fft::Direction;
 use crate::runtime::Registry;
 use crate::util::complex::SplitComplex;
@@ -145,22 +148,26 @@ pub enum TileKind {
     MatchedFilter(Arc<SplitComplex>),
 }
 
-/// Batching-queue key (see module docs).
+/// Batching-queue key (see module docs). Precision is part of the key:
+/// a tile executes at exactly one exchange precision, so requests with
+/// different precision policies must never coalesce.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum QueueKey {
-    Fft(Direction),
-    Filter(u64),
+    Fft(Direction, Precision),
+    Filter(u64, Precision),
+}
+
+impl FftRequest {
+    /// The queue this request's lines accumulate in.
+    pub fn queue_key(&self) -> QueueKey {
+        match &self.kind {
+            RequestKind::Fft(d) => QueueKey::Fft(*d, self.precision),
+            RequestKind::MatchedFilter(spec) => QueueKey::Filter(spec.id, self.precision),
+        }
+    }
 }
 
 impl RequestKind {
-    /// The queue this request's lines accumulate in.
-    pub fn queue_key(&self) -> QueueKey {
-        match self {
-            RequestKind::Fft(d) => QueueKey::Fft(*d),
-            RequestKind::MatchedFilter(spec) => QueueKey::Filter(spec.id),
-        }
-    }
-
     fn tile_kind(&self) -> TileKind {
         match self {
             RequestKind::Fft(d) => TileKind::Fft(*d),
@@ -184,6 +191,9 @@ pub struct Tile {
     pub artifact: String,
     pub n: usize,
     pub kind: TileKind,
+    /// Exchange precision every line in this tile executes at (queues
+    /// are keyed on it, so a tile is never mixed-precision).
+    pub precision: Precision,
     pub batch: usize,
     pub data: SplitComplex,
     pub segments: Vec<Segment>,
@@ -206,14 +216,16 @@ pub struct Queue {
     /// Tile kind every tile popped from this queue executes (queues are
     /// keyed so all entries share it).
     kind: TileKind,
+    /// Exchange precision of every tile this queue pops (keyed too).
+    precision: Precision,
     batch_tile: usize,
     pending: Vec<Pending>,
     queued_lines: usize,
 }
 
 impl Queue {
-    pub fn new(n: usize, kind: TileKind, batch_tile: usize) -> Queue {
-        Queue { n, kind, batch_tile, pending: Vec::new(), queued_lines: 0 }
+    pub fn new(n: usize, kind: TileKind, precision: Precision, batch_tile: usize) -> Queue {
+        Queue { n, kind, precision, batch_tile, pending: Vec::new(), queued_lines: 0 }
     }
 
     /// Whether this queue may accept `req`: same size, and for matched
@@ -302,6 +314,7 @@ impl Queue {
             artifact,
             n,
             kind: self.kind.clone(),
+            precision: self.precision,
             batch: self.batch_tile,
             data,
             segments,
@@ -327,11 +340,10 @@ impl Batcher {
     /// flush eagerly).
     pub fn admit(&mut self, req: &FftRequest) -> Vec<Tile> {
         let acc = Accumulator::new(req);
-        let key = (req.n, req.kind.queue_key());
-        let queue = self
-            .queues
-            .entry(key)
-            .or_insert_with(|| Queue::new(req.n, req.kind.tile_kind(), self.batch_tile));
+        let key = (req.n, req.queue_key());
+        let queue = self.queues.entry(key).or_insert_with(|| {
+            Queue::new(req.n, req.kind.tile_kind(), req.precision, self.batch_tile)
+        });
         self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         if !queue.accepts(req) {
             // Same filter id, different spectrum: only possible with a
@@ -383,7 +395,7 @@ impl Batcher {
     /// same handle submits again.
     fn evict_idle_filter_queues(&mut self) {
         self.queues
-            .retain(|(_, key), q| q.queued_lines() > 0 || matches!(key, QueueKey::Fft(_)));
+            .retain(|(_, key), q| q.queued_lines() > 0 || matches!(key, QueueKey::Fft(..)));
     }
 
     /// Number of live queues (tests: filter queues must not accumulate).
@@ -425,6 +437,7 @@ mod tests {
                 id,
                 n,
                 kind,
+                precision: Precision::F32,
                 data: SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) },
                 lines,
                 submitted_at: Instant::now(),
@@ -594,6 +607,35 @@ mod tests {
         assert!(b.admit(&r).is_empty());
         b.flush_expired(true);
         assert_eq!(b.queue_count(), 1, "fft queues are kept");
+    }
+
+    #[test]
+    fn precision_policies_never_share_a_tile() {
+        // Same (n, direction), different precision: distinct queues,
+        // distinct tiles, and each tile carries its precision.
+        let mut b = batcher(4);
+        let (mut r1, _rx1) = request(1, 256, 2, 50);
+        r1.precision = Precision::F32;
+        let (mut r2, _rx2) = request(2, 256, 2, 51);
+        r2.precision = Precision::Bfp16;
+        assert!(b.admit(&r1).is_empty());
+        assert!(b.admit(&r2).is_empty(), "bfp16 lines must not top up the f32 tile");
+        assert_eq!(b.queue_count(), 2);
+        let tiles = b.flush_expired(true);
+        assert_eq!(tiles.len(), 2);
+        let mut precisions: Vec<Precision> = tiles.iter().map(|t| t.precision).collect();
+        precisions.sort();
+        assert_eq!(precisions, vec![Precision::F32, Precision::Bfp16]);
+        // Same-precision traffic still coalesces.
+        let (mut r3, _rx3) = request(3, 256, 2, 52);
+        r3.precision = Precision::Bfp16;
+        let (mut r4, _rx4) = request(4, 256, 2, 53);
+        r4.precision = Precision::Bfp16;
+        assert!(b.admit(&r3).is_empty());
+        let tiles = b.admit(&r4);
+        assert_eq!(tiles.len(), 1, "same precision coalesces");
+        assert_eq!(tiles[0].precision, Precision::Bfp16);
+        assert_eq!(tiles[0].segments.len(), 2);
     }
 
     #[test]

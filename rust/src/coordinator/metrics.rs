@@ -6,7 +6,7 @@
 //! tile, so [`MetricsSnapshot::gflops`] reports executor throughput in
 //! the same unit as the paper's tables.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 
 /// Log-scale latency histogram: bucket i covers [2^i, 2^{i+1}) us.
 const BUCKETS: usize = 24;
@@ -79,11 +79,28 @@ pub struct Metrics {
     /// Nominal pipeline FLOPs (`2·5·N·log2 N + 6·N` per line) across
     /// matched-filter tiles — the matched-filter share of `flops`.
     pub mf_flops: AtomicU64,
+    /// Tiles executed at the `Bfp16` exchange precision.
+    pub bfp_tiles: AtomicU64,
+    /// Sum of sampled Bfp16-vs-f32 output SNRs, milli-dB (sampled every
+    /// `SNR_SAMPLE_EVERY`-th bfp tile by the worker).
+    bfp_snr_sum_mdb: AtomicI64,
+    /// Number of SNR samples behind `bfp_snr_sum_mdb`.
+    pub bfp_snr_samples: AtomicU64,
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
 }
 
 impl Metrics {
+    /// Record one sampled Bfp16-vs-f32 tile SNR. Exact matches come in
+    /// as `+inf` (e.g. a single-stage transform, which has no exchange
+    /// codec); they are clamped to a 200 dB cap so the running mean
+    /// stays finite and conservative.
+    pub fn record_bfp_snr(&self, db: f64) {
+        let mdb = (db.clamp(-200.0, 200.0) * 1000.0) as i64;
+        self.bfp_snr_sum_mdb.fetch_add(mdb, Ordering::Relaxed);
+        self.bfp_snr_samples.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Build a snapshot. `exec_busy_ns` is the device thread's pure
     /// execution time (from [`crate::runtime::Engine::device_busy_ns`]):
     /// it is measured at the executor, not at the workers, so tiles
@@ -93,8 +110,15 @@ impl Metrics {
     /// is fine for latency percentiles but would zero out
     /// sub-microsecond tiles.
     pub fn snapshot(&self, exec_busy_ns: u64) -> MetricsSnapshot {
+        let snr_samples = self.bfp_snr_samples.load(Ordering::Relaxed);
+        let snr_mean = if snr_samples == 0 {
+            0.0
+        } else {
+            self.bfp_snr_sum_mdb.load(Ordering::Relaxed) as f64 / 1e3 / snr_samples as f64
+        };
         MetricsSnapshot {
             codelet: crate::fft::codelet::select().tag(),
+            precision: crate::fft::bfp::select().tag(),
             requests: self.requests.load(Ordering::Relaxed),
             lines_in: self.lines_in.load(Ordering::Relaxed),
             tiles_dispatched: self.tiles_dispatched.load(Ordering::Relaxed),
@@ -103,6 +127,9 @@ impl Metrics {
             nominal_flops: self.flops.load(Ordering::Relaxed),
             mf_tiles: self.mf_tiles.load(Ordering::Relaxed),
             mf_nominal_flops: self.mf_flops.load(Ordering::Relaxed),
+            bfp_tiles: self.bfp_tiles.load(Ordering::Relaxed),
+            bfp_snr_samples: snr_samples,
+            bfp_snr_mean_db: snr_mean,
             exec_total_us: exec_busy_ns as f64 / 1e3,
             queue_mean_us: self.queue_latency.mean_us(),
             queue_p95_us: self.queue_latency.percentile_us(0.95),
@@ -117,6 +144,10 @@ pub struct MetricsSnapshot {
     /// Stage-codelet backend the native executors dispatch through
     /// ("scalar" or "simd"); empty only for `Default` snapshots.
     pub codelet: &'static str,
+    /// Process-default exchange precision ("f32" or "bfp16" — the
+    /// `APPLEFFT_PRECISION` selection; individual requests may pin
+    /// their own, counted by `bfp_tiles`).
+    pub precision: &'static str,
     pub requests: u64,
     pub lines_in: u64,
     pub tiles_dispatched: u64,
@@ -129,6 +160,13 @@ pub struct MetricsSnapshot {
     /// Pipeline FLOPs (2 FFTs + 6N multiply per line) across
     /// matched-filter tiles; included in `nominal_flops`.
     pub mf_nominal_flops: u64,
+    /// Tiles executed at the `Bfp16` exchange precision.
+    pub bfp_tiles: u64,
+    /// Sampled Bfp16-vs-f32 tile comparisons behind `bfp_snr_mean_db`.
+    pub bfp_snr_samples: u64,
+    /// Mean sampled output SNR of Bfp16 tiles against their f32 replay,
+    /// dB (0 when nothing was sampled).
+    pub bfp_snr_mean_db: f64,
     /// Total busy time of the executor across workers, microseconds.
     pub exec_total_us: f64,
     pub queue_mean_us: f64,
@@ -170,8 +208,9 @@ impl MetricsSnapshot {
         format!(
             "requests={} lines={} tiles={} padded={} ({:.1}%) failures={}\n\
              queue: mean {:.0} us, p95 {:.0} us | exec: mean {:.0} us, p95 {:.0} us\n\
-             executor: {:.2} GFLOPS nominal (5*N*log2 N / busy time), {} codelets\n\
-             matched-filter: {} tiles, {:.1}% of nominal FLOPs (2 FFTs + 6N per line)",
+             executor: {:.2} GFLOPS nominal (5*N*log2 N / busy time), {} codelets, {} default\n\
+             matched-filter: {} tiles, {:.1}% of nominal FLOPs (2 FFTs + 6N per line)\n\
+             bfp16: {} tiles, sampled SNR vs f32 {:.1} dB over {} samples",
             self.requests,
             self.lines_in,
             self.tiles_dispatched,
@@ -184,8 +223,12 @@ impl MetricsSnapshot {
             self.exec_p95_us,
             self.gflops(),
             self.codelet,
+            self.precision,
             self.mf_tiles,
             self.matched_share() * 100.0,
+            self.bfp_tiles,
+            self.bfp_snr_mean_db,
+            self.bfp_snr_samples,
         )
     }
 }
@@ -246,6 +289,29 @@ mod tests {
         assert!(r.contains("matched-filter"), "{r}");
         assert!(m.snapshot(2_000).gflops() > 0.0);
         assert_eq!(m.snapshot(0).gflops(), 0.0);
+    }
+
+    #[test]
+    fn bfp_snr_gauge_averages_samples() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot(0).bfp_snr_samples, 0);
+        assert_eq!(m.snapshot(0).bfp_snr_mean_db, 0.0);
+        m.record_bfp_snr(70.0);
+        m.record_bfp_snr(60.0);
+        m.bfp_tiles.fetch_add(16, Ordering::Relaxed);
+        let s = m.snapshot(0);
+        assert_eq!(s.bfp_snr_samples, 2);
+        assert!((s.bfp_snr_mean_db - 65.0).abs() < 1e-6, "{}", s.bfp_snr_mean_db);
+        assert_eq!(s.bfp_tiles, 16);
+        // Exact matches (inf) clamp to the 200 dB cap instead of
+        // poisoning the mean.
+        m.record_bfp_snr(f64::INFINITY);
+        let s = m.snapshot(0);
+        assert!((s.bfp_snr_mean_db - (330.0 / 3.0)).abs() < 1e-6, "{}", s.bfp_snr_mean_db);
+        // Rendered for operators, and the precision tag is present.
+        let r = s.render();
+        assert!(r.contains("bfp16:"), "{r}");
+        assert!(s.precision == "f32" || s.precision == "bfp16");
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Request/response types of the FFT service.
 
+use crate::fft::bfp::Precision;
 use crate::fft::Direction;
 use crate::util::complex::SplitComplex;
 use std::sync::mpsc;
@@ -50,6 +51,9 @@ pub struct FftRequest {
     pub id: RequestId,
     pub n: usize,
     pub kind: RequestKind,
+    /// Exchange-tier precision policy for this request's tiles. Part of
+    /// the batching-queue key: f32 and bfp16 lines never share a tile.
+    pub precision: Precision,
     /// `(lines, n)` row-major split-complex payload.
     pub data: SplitComplex,
     pub lines: usize,
@@ -112,6 +116,7 @@ mod tests {
                 id: 1,
                 n,
                 kind: RequestKind::Fft(Direction::Forward),
+                precision: Precision::F32,
                 data: SplitComplex::zeros(payload),
                 lines,
                 submitted_at: Instant::now(),

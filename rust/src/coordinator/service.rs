@@ -9,6 +9,7 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::planner::Planner;
 use super::request::{FftRequest, FftResponse, FilterSpec, RequestId, RequestKind};
 use super::worker::WorkerPool;
+use crate::fft::bfp::{self, Precision};
 use crate::fft::Direction;
 use crate::runtime::{Backend, Engine};
 use crate::util::complex::SplitComplex;
@@ -25,6 +26,7 @@ use std::time::{Duration, Instant};
 #[derive(Clone, Debug)]
 pub struct FilterHandle {
     n: usize,
+    precision: Precision,
     spec: FilterSpec,
 }
 
@@ -37,6 +39,11 @@ impl FilterHandle {
     /// The batching-queue id of this registration.
     pub fn id(&self) -> u64 {
         self.spec.id
+    }
+
+    /// Exchange precision every request through this handle runs at.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 }
 
@@ -159,6 +166,7 @@ impl FftService {
         &self,
         n: usize,
         kind: RequestKind,
+        precision: Precision,
         data: SplitComplex,
         lines: usize,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
@@ -168,6 +176,7 @@ impl FftService {
             id,
             n,
             kind,
+            precision,
             data,
             lines,
             submitted_at: Instant::now(),
@@ -180,7 +189,8 @@ impl FftService {
         Ok((id, rx))
     }
 
-    /// Async submission: returns the receiver for the response.
+    /// Async submission at the process-default precision: returns the
+    /// receiver for the response.
     pub fn submit(
         &self,
         n: usize,
@@ -188,9 +198,23 @@ impl FftService {
         data: SplitComplex,
         lines: usize,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.submit_prec(n, direction, data, lines, bfp::select())
+    }
+
+    /// Async submission with an explicit precision policy: the tiles
+    /// this request's lines land in execute their exchange tier at
+    /// `precision` (and only coalesce with same-precision traffic).
+    pub fn submit_prec(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+        precision: Precision,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
         // Planner enforces the synthesis rules (supported sizes).
         self.planner.plan(n, direction)?;
-        self.submit_request(n, RequestKind::Fft(direction), data, lines)
+        self.submit_request(n, RequestKind::Fft(direction), precision, data, lines)
     }
 
     /// Blocking convenience: submit and wait.
@@ -201,7 +225,19 @@ impl FftService {
         data: SplitComplex,
         lines: usize,
     ) -> Result<SplitComplex> {
-        let (_, rx) = self.submit(n, direction, data, lines)?;
+        self.fft_prec(n, direction, data, lines, bfp::select())
+    }
+
+    /// Blocking convenience with an explicit precision policy.
+    pub fn fft_prec(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+        precision: Precision,
+    ) -> Result<SplitComplex> {
+        let (_, rx) = self.submit_prec(n, direction, data, lines, precision)?;
         let resp = rx.recv().context("service dropped the request")?;
         resp.result.map_err(|e| anyhow::anyhow!(e))
     }
@@ -212,6 +248,18 @@ impl FftService {
     /// chirp filter, thousands of range lines, many clients) shares one
     /// registration.
     pub fn register_filter(&self, n: usize, spectrum: SplitComplex) -> Result<FilterHandle> {
+        self.register_filter_prec(n, spectrum, bfp::select())
+    }
+
+    /// [`Self::register_filter`] with the handle's precision policy
+    /// pinned: every matched-filter request through the handle runs at
+    /// `precision` (the handle's queue is keyed on it).
+    pub fn register_filter_prec(
+        &self,
+        n: usize,
+        spectrum: SplitComplex,
+        precision: Precision,
+    ) -> Result<FilterHandle> {
         // Matched filtering runs a forward and an inverse transform:
         // the planner must support the size (synthesis rules).
         self.planner.plan(n, Direction::Forward)?;
@@ -221,7 +269,7 @@ impl FftService {
             spectrum.len()
         );
         let id = NEXT_FILTER_ID.fetch_add(1, Ordering::Relaxed);
-        Ok(FilterHandle { n, spec: FilterSpec { id, spectrum: Arc::new(spectrum) } })
+        Ok(FilterHandle { n, precision, spec: FilterSpec { id, spectrum: Arc::new(spectrum) } })
     }
 
     /// Async matched-filter submission: `lines` rows of length `n` are
@@ -237,6 +285,7 @@ impl FftService {
         self.submit_request(
             filter.n,
             RequestKind::MatchedFilter(filter.spec.clone()),
+            filter.precision,
             data,
             lines,
         )
@@ -277,6 +326,18 @@ impl FftService {
         batch: usize,
     ) -> Result<SplitComplex> {
         self.engine.range_compress(x, h, n, batch)
+    }
+
+    /// [`Self::range_compress`] with the exchange precision pinned.
+    pub fn range_compress_prec(
+        &self,
+        x: &SplitComplex,
+        h: &SplitComplex,
+        n: usize,
+        batch: usize,
+        precision: Precision,
+    ) -> Result<SplitComplex> {
+        self.engine.range_compress_prec(x, h, n, batch, precision)
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -400,6 +461,43 @@ mod tests {
         let c = svc2.register_filter(512, SplitComplex::zeros(512)).unwrap();
         assert_ne!(a.id(), c.id());
         assert_ne!(b.id(), c.id());
+    }
+
+    #[test]
+    fn bfp16_precision_policy_flows_end_to_end() {
+        let svc = native_service();
+        let mut rng = crate::util::rng::Rng::new(73);
+        let (n, lines) = (1024usize, 5usize);
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        let y = svc.fft_prec(n, Direction::Forward, x.clone(), lines, Precision::Bfp16).unwrap();
+        let z = svc.fft_prec(n, Direction::Inverse, y, lines, Precision::Bfp16).unwrap();
+        // Round trip holds within the quantization budget...
+        assert!(z.rel_l2_error(&x) < 5e-3, "{}", z.rel_l2_error(&x));
+        // ...and is not the f32 result (the codec really ran).
+        let want = svc.fft(n, Direction::Forward, x.clone(), lines).unwrap();
+        let yb = svc.fft_prec(n, Direction::Forward, x, lines, Precision::Bfp16).unwrap();
+        assert_ne!(want.re, yb.re, "bfp16 and f32 outputs must differ");
+        let m = svc.drain().unwrap();
+        assert!(m.bfp_tiles >= 3, "bfp tiles recorded: {m:?}");
+        assert!(m.bfp_snr_samples >= 1, "snr sampling ran: {m:?}");
+        assert!(m.bfp_snr_mean_db >= 55.0, "sampled snr {}", m.bfp_snr_mean_db);
+        assert_eq!(m.failures, 0);
+    }
+
+    #[test]
+    fn matched_filter_handle_carries_precision() {
+        let svc = native_service();
+        let mut rng = crate::util::rng::Rng::new(74);
+        let (n, lines) = (512usize, 4usize);
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        let ones = SplitComplex { re: vec![1.0; n], im: vec![0.0; n] };
+        let h = svc.register_filter_prec(n, ones, Precision::Bfp16).unwrap();
+        assert_eq!(h.precision(), Precision::Bfp16);
+        let y = svc.matched_filter(&h, x.clone(), lines).unwrap();
+        assert!(y.rel_l2_error(&x) < 5e-3, "{}", y.rel_l2_error(&x));
+        let m = svc.drain().unwrap();
+        assert!(m.mf_tiles > 0);
+        assert!(m.bfp_tiles > 0, "matched bfp16 tiles must count as bfp tiles");
     }
 
     #[test]

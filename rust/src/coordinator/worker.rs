@@ -3,24 +3,75 @@
 
 use super::batcher::{Tile, TileKind};
 use super::metrics::Metrics;
+use crate::fft::bfp::{self, Precision};
 use crate::runtime::Engine;
+use crate::util::complex::SplitComplex;
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+/// Every `SNR_SAMPLE_EVERY`-th Bfp16 tile is re-executed at f32 and the
+/// two outputs compared, feeding the per-tile SNR-vs-f32 gauge in
+/// [`super::metrics::MetricsSnapshot`] — continuous evidence that the
+/// half-precision exchange tier is holding its accuracy floor in
+/// production, at ~1/8th of a tile's extra cost amortised across tiles.
+const SNR_SAMPLE_EVERY: u64 = 8;
+
+/// Compute the f32 reference for a sampled Bfp16 tile **on the worker
+/// thread**, through a worker-owned planner — never through the engine.
+/// The device thread's `busy_ns` is the GFLOPS denominator; routing the
+/// replay through it would bill unproductive reference work into every
+/// bfp16 throughput number. All serving artifacts are radix-8, so the
+/// replay matches the native backend's plan shape exactly.
+fn f32_replay(
+    kind: &TileKind,
+    input: &SplitComplex,
+    n: usize,
+    batch: usize,
+) -> anyhow::Result<SplitComplex> {
+    use std::sync::OnceLock;
+    static PLANNER: OnceLock<crate::fft::plan::NativePlanner> = OnceLock::new();
+    let planner = PLANNER.get_or_init(crate::fft::plan::NativePlanner::new);
+    let ex = planner.executor_with_precision(
+        n,
+        crate::fft::plan::Variant::Radix8,
+        crate::fft::codelet::select(),
+        Precision::F32,
+    )?;
+    match kind {
+        TileKind::Fft(dir) => ex.execute_batch(input, batch, *dir),
+        TileKind::MatchedFilter(h) => {
+            let mut d = input.clone();
+            ex.execute_pipeline_auto_into(&mut d, batch, h)?;
+            Ok(d)
+        }
+    }
+}
+
 /// Execute one tile synchronously and distribute results.
 pub fn run_tile(engine: &Engine, metrics: &Metrics, mut tile: Tile) {
+    // Decide SNR sampling before execution: the matched-filter path
+    // consumes the tile's data, so the reference input must be cloned
+    // up front (only on sampled tiles — the hot path copies nothing).
+    let sampled_input = if tile.precision == Precision::Bfp16 {
+        let nth = metrics.bfp_tiles.fetch_add(1, Ordering::Relaxed);
+        (nth % SNR_SAMPLE_EVERY == 0).then(|| tile.data.clone())
+    } else {
+        None
+    };
     let t0 = Instant::now();
     let result = match &tile.kind {
-        TileKind::Fft(dir) => engine.fft_batch(&tile.data, tile.n, tile.batch, *dir),
+        TileKind::Fft(dir) => {
+            engine.fft_batch_prec(&tile.data, tile.n, tile.batch, *dir, tile.precision)
+        }
         // Fused matched filtering: the native backend executes the whole
         // FFT -> multiply -> IFFT pipeline per line inside the executor.
         // The tile's data moves into the job and the registered spectrum
         // travels as its Arc — no per-tile copy of either.
         TileKind::MatchedFilter(h) => {
             let data = std::mem::take(&mut tile.data);
-            engine.range_compress_shared(data, h, tile.n, tile.batch)
+            engine.range_compress_shared_prec(data, h, tile.n, tile.batch, tile.precision)
         }
     };
     let exec_secs = t0.elapsed().as_secs_f64();
@@ -48,6 +99,16 @@ pub fn run_tile(engine: &Engine, metrics: &Metrics, mut tile: Tile) {
                 metrics.mf_flops.fetch_add(tile_flops as u64, Ordering::Relaxed);
             }
             metrics.flops.fetch_add(tile_flops as u64, Ordering::Relaxed);
+            // Sampled Bfp16 tiles: replay the identical tile at f32 on
+            // THIS worker thread (not the device thread — see
+            // `f32_replay`) and record the output SNR. A failed replay
+            // is not a request failure: the bfp16 result already
+            // shipped.
+            if let Some(input) = sampled_input {
+                if let Ok(want) = f32_replay(&tile.kind, &input, tile.n, tile.batch) {
+                    metrics.record_bfp_snr(bfp::snr_db(&out, &want));
+                }
+            }
             for seg in &tile.segments {
                 seg.acc.fill(&out, seg.tile_line, seg.request_line, seg.count, exec_secs);
                 metrics.queue_latency.record_secs(seg.acc.queue_secs());
@@ -135,6 +196,7 @@ mod tests {
             id: 11,
             n,
             kind: RequestKind::Fft(Direction::Forward),
+            precision: Precision::F32,
             data: data.clone(),
             lines,
             submitted_at: Instant::now(),
@@ -153,6 +215,7 @@ mod tests {
             artifact,
             n,
             kind,
+            precision: Precision::F32,
             batch,
             data: tile_data,
             segments: vec![Segment { acc, tile_line: 0, request_line: 0, count: lines }],
@@ -222,6 +285,36 @@ mod tests {
         let want_flops = (crate::util::pipeline_flops(n) * batch as f64) as u64;
         assert_eq!(metrics.mf_flops.load(Ordering::Relaxed), want_flops);
         assert_eq!(metrics.flops.load(Ordering::Relaxed), want_flops);
+    }
+
+    #[test]
+    fn bfp16_tile_counts_and_samples_snr() {
+        // A Bfp16 tile must execute at half precision, bump bfp_tiles,
+        // and (being the 0th bfp tile) get its f32-replay SNR sampled.
+        let engine = Engine::start(Backend::Native).unwrap();
+        let metrics = Metrics::default();
+        let (n, lines, batch) = (1024usize, 2usize, 32usize);
+        let (mut tile, rx, input) = tile_for(n, lines, batch);
+        tile.precision = Precision::Bfp16;
+        run_tile(&engine, &metrics, tile);
+        let resp = rx.recv().unwrap();
+        let out = resp.result.unwrap();
+        // Accurate, but not the f32 bits: the exchange codec ran.
+        let want = crate::fft::dft::dft_batch(&input, n, lines, Direction::Forward);
+        assert!(out.rel_l2_error(&want) < 5e-3);
+        assert_eq!(metrics.bfp_tiles.load(Ordering::Relaxed), 1);
+        let snap = metrics.snapshot(1_000);
+        assert_eq!(snap.bfp_snr_samples, 1, "0th bfp tile is sampled");
+        assert!(snap.bfp_snr_mean_db >= 55.0, "sampled snr {}", snap.bfp_snr_mean_db);
+        // Finite, below the exact-match cap: the replay really differed,
+        // i.e. the tile genuinely executed at Bfp16.
+        assert!(snap.bfp_snr_mean_db < 150.0, "sampled snr {}", snap.bfp_snr_mean_db);
+        // f32 tiles never touch the gauge.
+        let (tile, rx2, _) = tile_for(n, lines, batch);
+        run_tile(&engine, &metrics, tile);
+        assert!(rx2.recv().unwrap().result.is_ok());
+        assert_eq!(metrics.bfp_tiles.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.snapshot(1_000).bfp_snr_samples, 1);
     }
 
     #[test]

@@ -1,0 +1,465 @@
+//! Block-floating-point half-precision storage — the `Bfp16` exchange
+//! tier.
+//!
+//! The paper's §IX-A projects ~1.7x from halving exchange-tier bytes
+//! with FP16, and the follow-up BFP work ("Range, Not Precision",
+//! arXiv 2605.28451) identifies *why* naive FP16 FFTs fail: dynamic
+//! range, not mantissa width. FFT intermediates grow like `sqrt(N)` per
+//! stage and SAR scenes span >90 dB, which blows through FP16's
+//! `2^-14..65504` window long before the 11-bit mantissa runs out of
+//! precision. Block floating point fixes the range problem while
+//! keeping the byte win: every [`BLOCK`]-element run shares one `i8`
+//! exponent, and the elements store only f16 mantissas of the scaled
+//! values — 2 bytes per f32 plane element plus 1/64th of a byte of
+//! exponent, vs 4 bytes at f32.
+//!
+//! [`BfpVec`] is the storage type the executor's exchange tier uses
+//! when a plan runs at [`Precision::Bfp16`]:
+//!
+//! * the Stockham drivers pass every *inter-stage* store through the
+//!   quantize/dequantize codec (the stage butterflies themselves stay
+//!   full f32 in the register tier — compute-in-f32, exchange-in-BFP,
+//!   mirroring the paper's register/threadgroup split);
+//! * the four-step path (N > 4096, where the exchange tier genuinely
+//!   overflows the single-"threadgroup" budget) keeps its `(n1, n2)`
+//!   staging matrix *entirely* in BFP — the f32 staging buffers are
+//!   never allocated, halving the footprint of the tier that crosses
+//!   "device memory" between the two dispatches.
+//!
+//! Quantization: per block, the shared exponent `e` is chosen so the
+//! block's max magnitude scales into `[1, 2)`; every element stores
+//! `f16(x * 2^-e)` with round-to-nearest-even ([`crate::util::f16`]).
+//! Elements far below the block max keep f16's own relative precision
+//! (the mantissas are floating, not fixed point), so a block only loses
+//! an element outright when it is ~2^-38 below the block max — at which
+//! point its energy is irrelevant to the transform. Measured round-trip
+//! SNR for FFT-shaped data is ~71 dB per codec pass (proptests), and a
+//! full forward+inverse transform at every paper size stays >= 60 dB
+//! (tests/codelet_conformance.rs).
+
+use crate::util::complex::SplitComplex;
+use crate::util::f16;
+
+/// Elements sharing one block exponent. 64 complex-plane lanes = one
+/// GPU simdgroup-pair / two cache lines of mantissas — and it divides
+/// every Stockham stage length this library produces above the trivial
+/// sizes, so block boundaries never straddle a butterfly run.
+pub const BLOCK: usize = 64;
+
+/// Storage precision of a plan's exchange tier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    /// Full f32 exchange (the paper's shipped kernel).
+    F32,
+    /// Block-floating-point half-precision exchange: f16 mantissas with
+    /// a shared per-[`BLOCK`] `i8` exponent; butterflies stay f32.
+    Bfp16,
+}
+
+impl Precision {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bfp16 => "bfp16",
+        }
+    }
+
+    /// Both precisions, f32 first (bench/test iteration order).
+    pub fn all() -> &'static [Precision] {
+        &[Precision::F32, Precision::Bfp16]
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "bfp16" | "bfp" => Ok(Precision::Bfp16),
+            other => anyhow::bail!("unknown precision {other:?} (expected f32|bfp16)"),
+        }
+    }
+}
+
+/// The default exchange precision for new plans:
+/// `APPLEFFT_PRECISION=f32|bfp16` overrides (mirroring
+/// `APPLEFFT_CODELET`), else full f32. Resolved once per process; the
+/// plan/executor caches key on it.
+pub fn select() -> Precision {
+    use std::sync::OnceLock;
+    static SELECTED: OnceLock<Precision> = OnceLock::new();
+    *SELECTED.get_or_init(|| match std::env::var("APPLEFFT_PRECISION").ok().as_deref() {
+        Some("bfp16") | Some("bfp") => Precision::Bfp16,
+        _ => Precision::F32,
+    })
+}
+
+/// `2^k` as f32 for `k` in the normal-exponent range.
+#[inline(always)]
+fn exp2i(k: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&k));
+    f32::from_bits(((k + 127) as u32) << 23)
+}
+
+/// Shared block exponent for a run of values: `floor(log2(max |x|))`,
+/// so the scaled block max lands in `[1, 2)`. Zero (or fully
+/// non-finite) blocks get exponent 0.
+fn block_exponent(xs: &[f32]) -> i8 {
+    let mut max = 0.0f32;
+    for &x in xs {
+        let a = x.abs();
+        if a.is_finite() && a > max {
+            max = a;
+        }
+    }
+    if max == 0.0 {
+        return 0;
+    }
+    let exp_field = ((max.to_bits() >> 23) & 0xff) as i32;
+    // Subnormal maxes read as exponent field 0 -> -126 is close enough
+    // (the whole block is then denormal-tiny). Clamp so that *both*
+    // exp2i(e) and exp2i(-e) stay in the normal-f32 range: at e = 126
+    // the scaled max of a [2^126, 2^128) block lands in [2, 4), still
+    // far inside f16's 65504 ceiling.
+    (exp_field - 127).clamp(-126, 126) as i8
+}
+
+/// One plane of block-floating-point values: f16 mantissa bits per
+/// element plus one `i8` exponent per [`BLOCK`]-element block. Buffers
+/// grow on demand and are then reused (pooled inside
+/// [`crate::fft::exec::Workspace`]).
+#[derive(Debug, Default, Clone)]
+pub struct BfpVec {
+    mant: Vec<u16>,
+    exp: Vec<i8>,
+}
+
+impl BfpVec {
+    pub fn new() -> BfpVec {
+        BfpVec::default()
+    }
+
+    /// Capacity in elements.
+    pub fn len(&self) -> usize {
+        self.mant.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mant.is_empty()
+    }
+
+    /// Grow to hold at least `len` elements; returns whether an actual
+    /// (re)allocation happened (the workspace grow-event counter).
+    pub fn ensure(&mut self, len: usize) -> bool {
+        if self.mant.len() >= len {
+            return false;
+        }
+        self.mant.resize(len, 0);
+        self.exp.resize(len.div_ceil(BLOCK), 0);
+        true
+    }
+
+    /// Bytes this plane occupies (mantissas + exponents) — the
+    /// footprint the "halving" claim is about.
+    pub fn storage_bytes(&self) -> usize {
+        self.mant.len() * 2 + self.exp.len()
+    }
+
+    /// Quantize `src` into this plane starting at element `at`, which
+    /// must be [`BLOCK`]-aligned so shared exponents cover exactly the
+    /// written run (`src` may end mid-block; the tail becomes a partial
+    /// block with its own exponent).
+    pub fn quantize_at(&mut self, at: usize, src: &[f32]) {
+        assert!(at % BLOCK == 0, "BFP writes must be block-aligned (at={at})");
+        assert!(at + src.len() <= self.mant.len(), "BFP plane too small");
+        for (bi, chunk) in src.chunks(BLOCK).enumerate() {
+            let e = block_exponent(chunk);
+            self.exp[at / BLOCK + bi] = e;
+            let scale = exp2i(-(e as i32));
+            let base = at + bi * BLOCK;
+            for (i, &x) in chunk.iter().enumerate() {
+                self.mant[base + i] = f16::f32_to_f16_bits(x * scale);
+            }
+        }
+    }
+
+    /// Dequantize `dst.len()` elements starting at block-aligned `at`.
+    pub fn dequantize_at(&self, at: usize, dst: &mut [f32]) {
+        assert!(at % BLOCK == 0, "BFP reads must be block-aligned (at={at})");
+        assert!(at + dst.len() <= self.mant.len(), "BFP plane too small");
+        for (bi, chunk) in dst.chunks_mut(BLOCK).enumerate() {
+            let scale = exp2i(self.exp[at / BLOCK + bi] as i32);
+            let base = at + bi * BLOCK;
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = f16::f16_bits_to_f32(self.mant[base + i]) * scale;
+            }
+        }
+    }
+
+    /// Whole-plane convenience: quantize all of `src` from element 0.
+    pub fn quantize_from(&mut self, src: &[f32]) {
+        self.ensure(src.len());
+        self.quantize_at(0, src);
+    }
+
+    /// Whole-plane convenience: dequantize into all of `dst`.
+    pub fn dequantize_into(&self, dst: &mut [f32]) {
+        self.dequantize_at(0, dst);
+    }
+}
+
+/// Pass a split-complex buffer through the BFP codec in place: what the
+/// data looks like after one store+load through the half-precision
+/// exchange tier. The two planes quantize independently (separate block
+/// exponents), exactly as the split-complex exchange buffers are laid
+/// out. This is the inter-stage hook the `Bfp16` Stockham drivers call.
+pub(crate) fn exchange_roundtrip(
+    bre: &mut BfpVec,
+    bim: &mut BfpVec,
+    re: &mut [f32],
+    im: &mut [f32],
+) {
+    debug_assert!(bre.len() >= re.len() && bim.len() >= im.len());
+    bre.quantize_at(0, re);
+    bre.dequantize_at(0, re);
+    bim.quantize_at(0, im);
+    bim.dequantize_at(0, im);
+}
+
+/// Signal-to-noise ratio of `got` against `reference`, in dB:
+/// `10 log10(sum |ref|^2 / sum |got - ref|^2)`. Returns `f64::INFINITY`
+/// for an exact match (and `-INFINITY` for noise on a zero reference).
+pub fn snr_db(got: &SplitComplex, reference: &SplitComplex) -> f64 {
+    assert_eq!(got.len(), reference.len());
+    let mut sig = 0.0f64;
+    let mut err = 0.0f64;
+    for i in 0..got.len() {
+        sig += reference.get(i).norm_sqr() as f64;
+        err += (got.get(i) - reference.get(i)).norm_sqr() as f64;
+    }
+    if err == 0.0 {
+        return f64::INFINITY;
+    }
+    if sig == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    10.0 * (sig / err).log10()
+}
+
+/// Peak SNR in dB: peak reference power over *mean* error power —
+/// the imaging metric the SAR acceptance gate uses (a focused target's
+/// peak against the quantization noise floor).
+pub fn psnr_db(got: &SplitComplex, reference: &SplitComplex) -> f64 {
+    assert_eq!(got.len(), reference.len());
+    let mut peak = 0.0f64;
+    let mut err = 0.0f64;
+    for i in 0..got.len() {
+        peak = peak.max(reference.get(i).norm_sqr() as f64);
+        err += (got.get(i) - reference.get(i)).norm_sqr() as f64;
+    }
+    err /= got.len().max(1) as f64;
+    if err == 0.0 {
+        return f64::INFINITY;
+    }
+    if peak == 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    10.0 * (peak / err).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn precision_tags_and_parse() {
+        assert_eq!(Precision::F32.tag(), "f32");
+        assert_eq!(Precision::Bfp16.tag(), "bfp16");
+        assert_eq!("f32".parse::<Precision>().unwrap(), Precision::F32);
+        assert_eq!("bfp16".parse::<Precision>().unwrap(), Precision::Bfp16);
+        assert!("fp64".parse::<Precision>().is_err());
+        assert_eq!(Precision::all(), &[Precision::F32, Precision::Bfp16]);
+        // The process default is one of the two real precisions.
+        assert!(Precision::all().contains(&select()));
+    }
+
+    #[test]
+    fn roundtrip_preserves_exact_halves() {
+        // Values already representable as f16-times-2^e survive exactly.
+        let xs = vec![1.0f32, -2.0, 0.5, 0.0, 1024.0, -0.25, 3.5, 65504.0];
+        let mut v = BfpVec::new();
+        v.quantize_from(&xs);
+        let mut back = vec![0.0f32; xs.len()];
+        v.dequantize_into(&mut back);
+        assert_eq!(back, xs);
+    }
+
+    #[test]
+    fn block_exponent_extends_range_beyond_f16() {
+        // 1e9 overflows plain f16 (max 65504); the shared exponent
+        // rescales it into range. Same for 1e-9 (f16 flushes to zero).
+        for &scale in &[1e9f32, 1e-9] {
+            let xs: Vec<f32> = (0..BLOCK).map(|i| scale * (i as f32 + 1.0)).collect();
+            let mut v = BfpVec::new();
+            v.quantize_from(&xs);
+            let mut back = vec![0.0f32; xs.len()];
+            v.dequantize_into(&mut back);
+            for (a, b) in xs.iter().zip(&back) {
+                let rel = (a - b).abs() / a.abs();
+                assert!(rel < 1e-3, "scale={scale}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_exponent_blocks_survive() {
+        // Blocks whose max sits at the very top (or bottom) of the f32
+        // exponent range must round-trip instead of panicking in exp2i
+        // or zeroing out: e clamps to +-126, and f16's own range covers
+        // the residual scaled magnitudes.
+        let huge = [2.0e38f32, 1.0e38, 3.0e38];
+        let mut v = BfpVec::new();
+        v.quantize_from(&huge);
+        let mut back = vec![0.0f32; huge.len()];
+        v.dequantize_into(&mut back);
+        for (a, b) in huge.iter().zip(&back) {
+            let rel = (a - b).abs() / a;
+            assert!(rel < 1e-3, "{a} vs {b}");
+        }
+        let tiny = [3.0e-38f32, 1.5e-38, 2.0e-38];
+        let mut v = BfpVec::new();
+        v.quantize_from(&tiny);
+        let mut back = vec![0.0f32; tiny.len()];
+        v.dequantize_into(&mut back);
+        for (a, b) in tiny.iter().zip(&back) {
+            let rel = (a - b).abs() / a;
+            assert!(rel < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn blocks_quantize_independently() {
+        // A huge block must not wash out a tiny neighbouring block.
+        let mut xs = vec![1e8f32; BLOCK];
+        xs.extend(vec![1e-8f32; BLOCK]);
+        let mut v = BfpVec::new();
+        v.quantize_from(&xs);
+        let mut back = vec![0.0f32; xs.len()];
+        v.dequantize_into(&mut back);
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() / a < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn partial_tail_block_is_handled() {
+        let xs: Vec<f32> = (0..BLOCK + 7).map(|i| (i as f32) - 30.0).collect();
+        let mut v = BfpVec::new();
+        v.quantize_from(&xs);
+        assert_eq!(v.len(), BLOCK + 7);
+        let mut back = vec![0.0f32; xs.len()];
+        v.dequantize_into(&mut back);
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() <= 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_and_nonfinite_blocks() {
+        let mut v = BfpVec::new();
+        v.quantize_from(&[0.0; 10]);
+        let mut back = vec![1.0f32; 10];
+        v.dequantize_into(&mut back);
+        assert!(back.iter().all(|&x| x == 0.0));
+        // Non-finite values don't poison the block exponent.
+        let xs = [f32::INFINITY, 1.0, -1.0, f32::NAN];
+        let mut v = BfpVec::new();
+        v.quantize_from(&xs);
+        let mut back = vec![0.0f32; 4];
+        v.dequantize_into(&mut back);
+        assert_eq!(back[1], 1.0);
+        assert_eq!(back[2], -1.0);
+    }
+
+    #[test]
+    fn ensure_counts_growth_once() {
+        let mut v = BfpVec::new();
+        assert!(v.ensure(100));
+        assert!(!v.ensure(100));
+        assert!(!v.ensure(50));
+        assert!(v.ensure(200));
+        assert_eq!(v.len(), 200);
+        assert_eq!(v.exp.len(), 200usize.div_ceil(BLOCK));
+    }
+
+    #[test]
+    fn storage_is_about_half_of_f32() {
+        let mut v = BfpVec::new();
+        v.ensure(4096);
+        let f32_bytes = 4096 * 4;
+        assert_eq!(v.storage_bytes(), 4096 * 2 + 4096 / BLOCK);
+        assert!((v.storage_bytes() as f64) < 0.52 * f32_bytes as f64);
+    }
+
+    #[test]
+    fn random_roundtrip_snr_comfortably_above_60db() {
+        let mut rng = Rng::new(0xBF16);
+        for &scale in &[1.0f32, 1e6, 1e-6] {
+            let n = 4096;
+            let x = SplitComplex {
+                re: rng.signal(n).iter().map(|v| v * scale).collect(),
+                im: rng.signal(n).iter().map(|v| v * scale).collect(),
+            };
+            let mut bre = BfpVec::new();
+            let mut bim = BfpVec::new();
+            bre.quantize_from(&x.re);
+            bim.quantize_from(&x.im);
+            let mut got = SplitComplex::zeros(n);
+            bre.dequantize_into(&mut got.re);
+            bim.dequantize_into(&mut got.im);
+            let snr = snr_db(&got, &x);
+            assert!(snr >= 65.0, "scale={scale}: snr {snr:.1} dB");
+        }
+    }
+
+    #[test]
+    fn exchange_roundtrip_is_quantize_dequantize() {
+        let mut rng = Rng::new(0xE0);
+        let n = 200;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let mut a = x.clone();
+        let mut bre = BfpVec::new();
+        let mut bim = BfpVec::new();
+        bre.ensure(n);
+        bim.ensure(n);
+        exchange_roundtrip(&mut bre, &mut bim, &mut a.re, &mut a.im);
+        let mut want = SplitComplex::zeros(n);
+        let mut v = BfpVec::new();
+        v.quantize_from(&x.re);
+        v.dequantize_into(&mut want.re);
+        v.quantize_from(&x.im);
+        v.dequantize_into(&mut want.im);
+        assert_eq!(a.re, want.re);
+        assert_eq!(a.im, want.im);
+        // Idempotent: a second pass through the codec is exact.
+        let mut b = a.clone();
+        exchange_roundtrip(&mut bre, &mut bim, &mut b.re, &mut b.im);
+        assert_eq!(a.re, b.re);
+        assert_eq!(a.im, b.im);
+    }
+
+    #[test]
+    fn snr_helpers_edge_cases() {
+        let a = SplitComplex { re: vec![1.0, 2.0], im: vec![0.0, 1.0] };
+        assert_eq!(snr_db(&a, &a), f64::INFINITY);
+        assert_eq!(psnr_db(&a, &a), f64::INFINITY);
+        let z = SplitComplex::zeros(2);
+        assert_eq!(snr_db(&a, &z), f64::NEG_INFINITY);
+        // A known 20 dB case: error amplitude 1/10th of signal.
+        let sig = SplitComplex { re: vec![1.0; 100], im: vec![0.0; 100] };
+        let noisy = SplitComplex { re: vec![1.1; 100], im: vec![0.0; 100] };
+        let snr = snr_db(&noisy, &sig);
+        assert!((snr - 20.0).abs() < 1e-6, "{snr}");
+    }
+}

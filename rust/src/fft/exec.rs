@@ -29,6 +29,7 @@
 //! never touches this layer; later executor backends (PJRT tiles,
 //! half-precision) plug in underneath the same interface.
 
+use super::bfp::BfpVec;
 use super::plan::NativePlan;
 use super::Direction;
 use crate::util::complex::SplitComplex;
@@ -48,8 +49,24 @@ pub struct Workspace {
     pub(crate) sre: Vec<f32>,
     pub(crate) sim: Vec<f32>,
     /// Four-step `(n1, n2)` staging matrix (length >= N for N > 4096).
+    /// Only the `F32` precision path allocates it — at `Bfp16` the
+    /// staging lives in `bstage_*` at half the bytes.
     pub(crate) yre: Vec<f32>,
     pub(crate) yim: Vec<f32>,
+    /// `Bfp16` exchange planes: the inter-stage codec buffer on the
+    /// single-size path, and the `(n1, n2)` staging matrix (row stride
+    /// [`crate::fft::fourstep::bfp_stage_stride`]) on the four-step
+    /// path.
+    pub(crate) bstage_re: BfpVec,
+    pub(crate) bstage_im: BfpVec,
+    /// Row-FFT inter-stage codec planes for the `Bfp16` four-step
+    /// (length >= n2).
+    pub(crate) brow_re: BfpVec,
+    pub(crate) brow_im: BfpVec,
+    /// f32 row buffers for the `Bfp16` four-step (length >= n2): the
+    /// only full-precision staging that path owns.
+    pub(crate) rre: Vec<f32>,
+    pub(crate) rim: Vec<f32>,
     grows: usize,
 }
 
@@ -69,6 +86,26 @@ impl Workspace {
         if self.yre.len() < y_len {
             self.yre.resize(y_len, 0.0);
             self.yim.resize(y_len, 0.0);
+            self.grows += 1;
+        }
+    }
+
+    /// Make sure the `Bfp16` exchange-tier buffers hold `stage_len`
+    /// BFP elements, `row_len` row-codec elements, and `rowbuf_len` f32
+    /// row floats (0 = not needed). Growth counts into
+    /// [`grow_events`](Self::grow_events) exactly like the f32 scratch,
+    /// so the pool steady-state tests cover the BFP workspaces too.
+    pub(crate) fn ensure_bfp(&mut self, stage_len: usize, row_len: usize, rowbuf_len: usize) {
+        let mut grew = self.bstage_re.ensure(stage_len);
+        grew |= self.bstage_im.ensure(stage_len);
+        grew |= self.brow_re.ensure(row_len);
+        grew |= self.brow_im.ensure(row_len);
+        if self.rre.len() < rowbuf_len {
+            self.rre.resize(rowbuf_len, 0.0);
+            self.rim.resize(rowbuf_len, 0.0);
+            grew = true;
+        }
+        if grew {
             self.grows += 1;
         }
     }
@@ -158,6 +195,12 @@ impl BatchExecutor {
     /// through (surfaced in bench tables and metrics).
     pub fn codelet(&self) -> super::codelet::CodeletBackend {
         self.plan.codelet
+    }
+
+    /// Which exchange-tier precision this executor's plan stores
+    /// inter-stage data at (surfaced in bench tables and metrics).
+    pub fn precision(&self) -> super::bfp::Precision {
+        self.plan.precision
     }
 
     pub fn threads(&self) -> usize {
@@ -529,6 +572,70 @@ mod tests {
             assert_eq!(ex.pool_stats().0, created, "n={n}: workspace count grew");
             assert_eq!(ex.pool_grow_events(), grows, "n={n}: scratch reallocated");
             assert_eq!(ex.pool_stats().1, created, "n={n}: workspaces parked");
+        }
+    }
+
+    fn bfp_executor(n: usize, threads: usize) -> BatchExecutor {
+        let plan = NativePlan::new(n, Variant::Radix8)
+            .unwrap()
+            .with_precision(crate::fft::bfp::Precision::Bfp16);
+        BatchExecutor::with_threads(Arc::new(plan), threads)
+    }
+
+    #[test]
+    fn bfp_pool_reaches_steady_state() {
+        // The zero-allocation guarantee extends to the Bfp16 exchange
+        // buffers: once a workspace's BFP planes (and, for four-step,
+        // its row buffers) have grown to shape, repeated same-shape
+        // batches must not grow anything — at either decomposition.
+        let mut rng = Rng::new(0xB6);
+        for &(n, batch) in &[(1024usize, 16usize), (8192, 8)] {
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let ex = bfp_executor(n, 4);
+            assert_eq!(ex.precision(), crate::fft::bfp::Precision::Bfp16);
+            let mut d = x.clone();
+            ex.execute_batch_auto_into(&mut d, batch, Direction::Forward).unwrap();
+            let created = ex.pool_stats().0;
+            let grows = ex.pool_grow_events();
+            assert!(created >= 1);
+            for _ in 0..8 {
+                let mut d = x.clone();
+                ex.execute_batch_auto_into(&mut d, batch, Direction::Forward).unwrap();
+            }
+            assert_eq!(ex.pool_stats().0, created, "n={n}: workspace count grew");
+            assert_eq!(ex.pool_grow_events(), grows, "n={n}: BFP scratch reallocated");
+            assert_eq!(ex.pool_stats().1, created, "n={n}: workspaces parked");
+        }
+    }
+
+    #[test]
+    fn bfp_par_matches_serial_exactly() {
+        // Same codelets, same codec, same per-line order: the Bfp16
+        // batch-parallel path is bitwise the serial path.
+        let mut rng = Rng::new(0xB7);
+        for &(n, batch) in &[(512usize, 12usize), (8192, 6)] {
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let ex = bfp_executor(n, 4);
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let serial = ex.execute_batch(&x, batch, dir).unwrap();
+                let par = ex.execute_batch_par(&x, batch, dir).unwrap();
+                assert_eq!(serial.re, par.re, "n={n} {dir:?}");
+                assert_eq!(serial.im, par.im, "n={n} {dir:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn bfp_roundtrip_through_executor_within_snr() {
+        let mut rng = Rng::new(0xB8);
+        for &n in &[1024usize, 8192] {
+            let batch = 3;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let ex = bfp_executor(n, 2);
+            let y = ex.execute_batch(&x, batch, Direction::Forward).unwrap();
+            let z = ex.execute_batch(&y, batch, Direction::Inverse).unwrap();
+            let snr = crate::fft::bfp::snr_db(&z, &x);
+            assert!(snr >= 60.0, "n={n}: roundtrip snr {snr:.1} dB");
         }
     }
 

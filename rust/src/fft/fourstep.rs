@@ -18,10 +18,14 @@
 //! column loads and the `1/N` conjugate-scale into step 4's transpose
 //! stores — the same first/last-pass fusion the Stockham driver does.
 
+use super::bfp::{BfpVec, BLOCK};
 use super::codelet::{self, CodeletTable};
-use super::stockham::{radix_schedule, transform_line, transform_line_with};
+use super::stockham::{
+    radix_schedule, transform_line, transform_line_bfp_with, transform_line_with,
+};
 use super::twiddle::{fourstep_twiddles, PlanTables};
 use crate::util::complex::{SplitComplex, C32};
+use crate::util::round_up;
 
 /// Factor `n` for the four-step split per the paper's rule: `n2 = 4096`
 /// (= B_max), `n1 = n / n2`. For the paper's range (N <= 2^14) this
@@ -340,6 +344,172 @@ fn fourstep_steps123(
     }
 }
 
+/// Per-row stride (in elements) of the BFP staging matrix: rows start
+/// on [`BLOCK`] boundaries so every row's shared exponents cover only
+/// that row, whatever `n2` is (the tiny test splits included).
+pub fn bfp_stage_stride(n2: usize) -> usize {
+    round_up(n2, BLOCK)
+}
+
+/// Four-step on one line with the `(n1, n2)` staging matrix held
+/// **entirely in block floating point** — the `Bfp16` realisation of
+/// §IX-A's "halve the exchange bytes" projection at the tier where the
+/// exchange genuinely overflows: for N > 4096 the intermediate crosses
+/// "device memory" between the two dispatches, and here that crossing
+/// is 2 bytes/plane-element (+ 1/64 exponent) instead of 4. No f32
+/// staging buffer exists on this path at all; the only full-precision
+/// scratch is one row (`rre`/`rim`) plus the Stockham ping-pong
+/// (`sre`/`sim`), both of length `n2`.
+///
+/// Dataflow per line (compute-f32 / exchange-Bfp16 throughout):
+///
+/// 1. column DFT + twiddle (f32 registers, tiled [`BLOCK`] columns at a
+///    time) -> quantize into the BFP staging rows;
+/// 2. per row: dequantize -> length-`n2` Stockham FFT with the BFP
+///    inter-stage codec ([`transform_line_bfp_with`]) -> requantize;
+/// 3. step-4 transpose: dequantize each row and scatter to the output
+///    at f32, with the inverse conj+`1/N` (or the pipeline's filter
+///    multiply, forward only) fused into the store exactly like the
+///    f32 path.
+///
+/// `stage_re/stage_im` must hold `n1 * bfp_stage_stride(n2)` elements;
+/// `row_re/row_im` are the row codec planes (>= `n2`). `filter` is the
+/// step-4 fused spectrum multiply of
+/// [`fourstep_line_mul`]; it is forward-only (`inverse` must be false).
+#[allow(clippy::too_many_arguments)]
+pub fn fourstep_line_bfp(
+    codelets: &CodeletTable,
+    re: &mut [f32],
+    im: &mut [f32],
+    n1: usize,
+    n2: usize,
+    radices: &[usize],
+    tables: Option<&PlanTables>,
+    twiddles: &[C32],
+    stage_re: &mut BfpVec,
+    stage_im: &mut BfpVec,
+    row_re: &mut BfpVec,
+    row_im: &mut BfpVec,
+    rre: &mut [f32],
+    rim: &mut [f32],
+    sre: &mut [f32],
+    sim: &mut [f32],
+    inverse: bool,
+    filter: Option<(&[f32], &[f32])>,
+) {
+    let n = n1 * n2;
+    assert_eq!(re.len(), n);
+    assert_eq!(im.len(), n);
+    assert_eq!(twiddles.len(), n);
+    assert!(n1 == 2 || n1 == 4, "four-step n1={n1} not supported (paper uses 2 and 4)");
+    assert!(filter.is_none() || !inverse, "fused multiply is forward-only");
+    let stride = bfp_stage_stride(n2);
+    assert!(stage_re.len() >= n1 * stride && stage_im.len() >= n1 * stride);
+    if let Some((hre, him)) = filter {
+        assert!(hre.len() >= n && him.len() >= n);
+    }
+    let rre = &mut rre[..n2];
+    let rim = &mut rim[..n2];
+    let in_sign = if inverse { -1.0f32 } else { 1.0f32 };
+
+    // Steps 1+2: column DFT fused with the twiddle (and the inverse
+    // input conjugation via `in_sign`), BLOCK columns at a time into a
+    // small f32 register tile, quantized straight into the BFP staging
+    // rows — the full-width f32 staging matrix never materialises.
+    let mut tre = [[0.0f32; BLOCK]; 4];
+    let mut tim = [[0.0f32; BLOCK]; 4];
+    let mut c = 0;
+    while c < n2 {
+        let w = BLOCK.min(n2 - c);
+        match n1 {
+            2 => {
+                for j in 0..w {
+                    let j2 = c + j;
+                    let a = C32::new(re[j2], in_sign * im[j2]);
+                    let b = C32::new(re[n2 + j2], in_sign * im[n2 + j2]);
+                    let t0 = (a + b) * twiddles[j2];
+                    let t1 = (a - b) * twiddles[n2 + j2];
+                    tre[0][j] = t0.re;
+                    tim[0][j] = t0.im;
+                    tre[1][j] = t1.re;
+                    tim[1][j] = t1.im;
+                }
+            }
+            _ => {
+                for j in 0..w {
+                    let j2 = c + j;
+                    let a = C32::new(re[j2], in_sign * im[j2]);
+                    let b = C32::new(re[n2 + j2], in_sign * im[n2 + j2]);
+                    let cc = C32::new(re[2 * n2 + j2], in_sign * im[2 * n2 + j2]);
+                    let d = C32::new(re[3 * n2 + j2], in_sign * im[3 * n2 + j2]);
+                    let apc = a + cc;
+                    let amc = a - cc;
+                    let bpd = b + d;
+                    let bmd = b - d;
+                    let t0 = (apc + bpd) * twiddles[j2];
+                    let t1 = (amc - bmd.mul_i()) * twiddles[n2 + j2];
+                    let t2 = (apc - bpd) * twiddles[2 * n2 + j2];
+                    let t3 = (amc + bmd.mul_i()) * twiddles[3 * n2 + j2];
+                    tre[0][j] = t0.re;
+                    tim[0][j] = t0.im;
+                    tre[1][j] = t1.re;
+                    tim[1][j] = t1.im;
+                    tre[2][j] = t2.re;
+                    tim[2][j] = t2.im;
+                    tre[3][j] = t3.re;
+                    tim[3][j] = t3.im;
+                }
+            }
+        }
+        for k1 in 0..n1 {
+            stage_re.quantize_at(k1 * stride + c, &tre[k1][..w]);
+            stage_im.quantize_at(k1 * stride + c, &tim[k1][..w]);
+        }
+        c += w;
+    }
+
+    // Step 3: length-n2 row FFTs, each dequantized out of the staging
+    // tier, transformed with the BFP inter-stage codec, and requantized.
+    for k1 in 0..n1 {
+        let at = k1 * stride;
+        stage_re.dequantize_at(at, rre);
+        stage_im.dequantize_at(at, rim);
+        transform_line_bfp_with(
+            codelets, rre, rim, sre, sim, row_re, row_im, radices, tables, false,
+        );
+        stage_re.quantize_at(at, rre);
+        stage_im.quantize_at(at, rim);
+    }
+
+    // Step 4: transpose out of the BFP staging into the f32 output,
+    // with the inverse conj + 1/N scale (or the pipeline's filter
+    // multiply) fused into the store.
+    for k1 in 0..n1 {
+        let at = k1 * stride;
+        stage_re.dequantize_at(at, rre);
+        stage_im.dequantize_at(at, rim);
+        if let Some((hre, him)) = filter {
+            for k2 in 0..n2 {
+                let idx = k1 + n1 * k2;
+                let (tr, ti) = (rre[k2], rim[k2]);
+                re[idx] = tr * hre[idx] - ti * him[idx];
+                im[idx] = tr * him[idx] + ti * hre[idx];
+            }
+        } else if inverse {
+            let k = 1.0 / n as f32;
+            for k2 in 0..n2 {
+                re[k1 + n1 * k2] = rre[k2] * k;
+                im[k1 + n1 * k2] = -(rim[k2] * k);
+            }
+        } else {
+            for k2 in 0..n2 {
+                re[k1 + n1 * k2] = rre[k2];
+                im[k1 + n1 * k2] = rim[k2];
+            }
+        }
+    }
+}
+
 /// Convenience: build twiddles + schedule and run one line forward.
 pub fn fourstep_forward(x: &SplitComplex) -> SplitComplex {
     let n = x.len();
@@ -483,6 +653,156 @@ mod tests {
             assert_eq!(got.re, want.re, "n1={n1} n2={n2} re");
             assert_eq!(got.im, want.im, "n1={n1} n2={n2} im");
         }
+    }
+
+    /// Scratch bundle for the BFP four-step tests.
+    fn bfp_scratch(n1: usize, n2: usize) -> (BfpVec, BfpVec, BfpVec, BfpVec, Vec<f32>, Vec<f32>) {
+        let stride = bfp_stage_stride(n2);
+        let mut sre = BfpVec::new();
+        let mut sim = BfpVec::new();
+        sre.ensure(n1 * stride);
+        sim.ensure(n1 * stride);
+        let mut rre = BfpVec::new();
+        let mut rim = BfpVec::new();
+        rre.ensure(n2);
+        rim.ensure(n2);
+        (sre, sim, rre, rim, vec![0.0; n2], vec![0.0; n2])
+    }
+
+    #[test]
+    fn bfp_fourstep_tracks_f32_within_snr() {
+        // The BFP staging path against the f32 four-step, forward and
+        // fused inverse, on a small split (n1=4, n2=128 exercises
+        // multi-block rows) and the real 8192 split.
+        let mut rng = Rng::new(0xB4);
+        for &(n1, n2) in &[(4usize, 128usize), (2, 4096)] {
+            let n = n1 * n2;
+            let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let radices = radix_schedule(n2, 8);
+            let tw = fourstep_twiddles(n1, n2, false);
+            let want_fwd = fourstep_line(&x, n1, n2, &radices, None, &tw);
+            let (mut bsr, mut bsi, mut brr, mut bri, mut rre, mut rim) = bfp_scratch(n1, n2);
+            let (mut sre, mut sim) = (vec![0.0; n2], vec![0.0; n2]);
+            let mut got = x.clone();
+            fourstep_line_bfp(
+                codelet::scalar_table(),
+                &mut got.re,
+                &mut got.im,
+                n1,
+                n2,
+                &radices,
+                None,
+                &tw,
+                &mut bsr,
+                &mut bsi,
+                &mut brr,
+                &mut bri,
+                &mut rre,
+                &mut rim,
+                &mut sre,
+                &mut sim,
+                false,
+                None,
+            );
+            let snr = crate::fft::bfp::snr_db(&got, &want_fwd);
+            assert!(snr >= 60.0, "n1={n1} n2={n2} fwd: snr {snr:.1} dB");
+            // Fused inverse: round-trip back to the input.
+            fourstep_line_bfp(
+                codelet::scalar_table(),
+                &mut got.re,
+                &mut got.im,
+                n1,
+                n2,
+                &radices,
+                None,
+                &tw,
+                &mut bsr,
+                &mut bsi,
+                &mut brr,
+                &mut bri,
+                &mut rre,
+                &mut rim,
+                &mut sre,
+                &mut sim,
+                true,
+                None,
+            );
+            let snr = crate::fft::bfp::snr_db(&got, &x);
+            assert!(snr >= 60.0, "n1={n1} n2={n2} roundtrip: snr {snr:.1} dB");
+        }
+    }
+
+    #[test]
+    fn bfp_fourstep_mul_is_bitwise_bfp_transform_then_multiply() {
+        // The fused step-4 filter multiply at Bfp16 must equal the
+        // plain Bfp16 forward four-step followed by the standalone
+        // elementwise product, bit for bit (the codec fires at the same
+        // points either way).
+        let mut rng = Rng::new(0xB5);
+        for &(n1, n2) in &[(2usize, 64usize), (4, 128)] {
+            let n = n1 * n2;
+            let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let radices = radix_schedule(n2, 8);
+            let tw = fourstep_twiddles(n1, n2, false);
+            let (mut bsr, mut bsi, mut brr, mut bri, mut rre, mut rim) = bfp_scratch(n1, n2);
+            let (mut sre, mut sim) = (vec![0.0; n2], vec![0.0; n2]);
+            let mut want = x.clone();
+            fourstep_line_bfp(
+                codelet::scalar_table(),
+                &mut want.re,
+                &mut want.im,
+                n1,
+                n2,
+                &radices,
+                None,
+                &tw,
+                &mut bsr,
+                &mut bsi,
+                &mut brr,
+                &mut bri,
+                &mut rre,
+                &mut rim,
+                &mut sre,
+                &mut sim,
+                false,
+                None,
+            );
+            for i in 0..n {
+                let v = want.get(i) * h.get(i);
+                want.set(i, v);
+            }
+            let mut got = x.clone();
+            fourstep_line_bfp(
+                codelet::scalar_table(),
+                &mut got.re,
+                &mut got.im,
+                n1,
+                n2,
+                &radices,
+                None,
+                &tw,
+                &mut bsr,
+                &mut bsi,
+                &mut brr,
+                &mut bri,
+                &mut rre,
+                &mut rim,
+                &mut sre,
+                &mut sim,
+                false,
+                Some((&h.re, &h.im)),
+            );
+            assert_eq!(got.re, want.re, "n1={n1} n2={n2} re");
+            assert_eq!(got.im, want.im, "n1={n1} n2={n2} im");
+        }
+    }
+
+    #[test]
+    fn bfp_stage_stride_rounds_rows_to_blocks() {
+        assert_eq!(bfp_stage_stride(4096), 4096);
+        assert_eq!(bfp_stage_stride(8), BLOCK);
+        assert_eq!(bfp_stage_stride(100), 2 * BLOCK);
     }
 
     #[test]

@@ -34,6 +34,24 @@
 //!   ping-pong buffer and four-step staging matrix are allocated once
 //!   per worker and reused, so steady-state batch execution performs
 //!   zero scratch allocations.
+//! * **Precision tier** — [`bfp`]: a second axis over the same split.
+//!   The paper keeps butterfly operands full-precision in registers
+//!   while the exchange tier is pure bandwidth, and its §IX-A projects
+//!   ~1.7x from halving exchange bytes with FP16; the block-floating
+//!   -point realisation maps **compute-in-f32 onto the register tier
+//!   and storage-in-Bfp16 onto the exchange tier**. At
+//!   [`bfp::Precision::Bfp16`] every inter-stage store quantizes to
+//!   f16 mantissas with a shared per-64-element `i8` exponent (range
+//!   handled by the exponent, so FFT growth and SAR dynamic range
+//!   survive where plain FP16 fails) and every load dequantizes; the
+//!   four-step path (N > 4096, where the exchange genuinely overflows
+//!   the single-threadgroup budget) keeps its `(n1, n2)` staging
+//!   matrix entirely in BFP — half the bytes crossing "device memory",
+//!   with no f32 staging allocated at all. Plans fix the precision at
+//!   build time (`APPLEFFT_PRECISION=f32|bfp16` overrides, mirroring
+//!   the codelet selector), planner caches key on it, and the
+//!   conformance tests pin forward/inverse round-trip SNR >= 60 dB at
+//!   every paper size.
 //! * **Batch occupancy** — [`exec::BatchExecutor`] stripes batch lines
 //!   over scoped worker threads (one pooled workspace each), the CPU
 //!   analog of the paper's Fig. 1 "throughput needs batch >= 64 in
@@ -66,6 +84,7 @@
 //! ([`fourstep`]). [`plan`] exposes the planned, batched public API and
 //! caches the pooled executors every layer above shares.
 
+pub mod bfp;
 pub mod codelet;
 pub mod convolve;
 pub mod dft;

@@ -43,6 +43,7 @@
 //! request kind (the native backend's `rangecomp*` artifacts execute
 //! [`BatchExecutor::execute_pipeline_auto_into`] directly).
 
+use super::bfp::{self, Precision};
 use super::exec::BatchExecutor;
 use super::plan::NativePlanner;
 use super::Direction;
@@ -71,13 +72,25 @@ impl SpectralPipeline {
         kernel: &SplitComplex,
         n: usize,
     ) -> Result<SpectralPipeline> {
+        Self::new_with_precision(planner, kernel, n, bfp::select())
+    }
+
+    /// [`Self::new`] with the exchange precision pinned (the precision
+    /// policy surface: SAR range compression passes `Bfp16` here to run
+    /// half-precision end to end).
+    pub fn new_with_precision(
+        planner: &NativePlanner,
+        kernel: &SplitComplex,
+        n: usize,
+        precision: Precision,
+    ) -> Result<SpectralPipeline> {
         ensure!(!kernel.is_empty(), "empty kernel");
         ensure!(
             kernel.len() <= n,
             "kernel length {} exceeds block size {n}",
             kernel.len()
         );
-        let exec = planner.executor_auto(n)?;
+        let exec = planner.executor_auto_with(n, precision)?;
         let mut padded = SplitComplex::zeros(n);
         padded.re[..kernel.len()].copy_from_slice(&kernel.re);
         padded.im[..kernel.len()].copy_from_slice(&kernel.im);
@@ -91,7 +104,16 @@ impl SpectralPipeline {
         planner: &NativePlanner,
         spectrum: SplitComplex,
     ) -> Result<SpectralPipeline> {
-        let exec = planner.executor_auto(spectrum.len())?;
+        Self::from_spectrum_with_precision(planner, spectrum, bfp::select())
+    }
+
+    /// [`Self::from_spectrum`] with the exchange precision pinned.
+    pub fn from_spectrum_with_precision(
+        planner: &NativePlanner,
+        spectrum: SplitComplex,
+        precision: Precision,
+    ) -> Result<SpectralPipeline> {
+        let exec = planner.executor_auto_with(spectrum.len(), precision)?;
         Ok(SpectralPipeline { exec, filter: spectrum })
     }
 
@@ -114,6 +136,11 @@ impl SpectralPipeline {
     /// Transform size (block length) of the pipeline.
     pub fn n(&self) -> usize {
         self.exec.plan().n
+    }
+
+    /// Exchange-tier precision the pipeline executes at.
+    pub fn precision(&self) -> Precision {
+        self.exec.precision()
     }
 
     /// The cached frequency response.
@@ -228,6 +255,35 @@ mod tests {
         let pipe = SpectralPipeline::from_spectrum(&planner, SplitComplex::zeros(256)).unwrap();
         let mut wrong = SplitComplex::zeros(100);
         assert!(pipe.process_into(&mut wrong, 1).is_err());
+    }
+
+    #[test]
+    fn bfp16_pipeline_runs_half_precision_end_to_end() {
+        // A Bfp16 pipeline must carry its precision into the executor
+        // and still reproduce the identity-filter round trip within the
+        // quantization budget.
+        use crate::fft::bfp::{snr_db, Precision};
+        let planner = NativePlanner::new();
+        let (n, lines) = (1024usize, 4usize);
+        let mut rng = Rng::new(503);
+        let ones = SplitComplex { re: vec![1.0; n], im: vec![0.0; n] };
+        let pipe =
+            SpectralPipeline::from_spectrum_with_precision(&planner, ones, Precision::Bfp16)
+                .unwrap();
+        assert_eq!(pipe.precision(), Precision::Bfp16);
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        let y = pipe.process(&x, lines).unwrap();
+        let snr = snr_db(&y, &x);
+        assert!(snr >= 60.0, "identity-filter bfp16 roundtrip snr {snr:.1} dB");
+        // And the zero-allocation steady state holds for BFP workspaces.
+        let mut d = x.clone();
+        pipe.process_into(&mut d, lines).unwrap();
+        let warm = pipe.workspace_stats();
+        for _ in 0..8 {
+            let mut d = x.clone();
+            pipe.process_into(&mut d, lines).unwrap();
+        }
+        assert_eq!(pipe.workspace_stats(), warm, "bfp16 pipeline allocated past warmup");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! [`super::stockham::transform_line_fused`]), not by separate
 //! whole-buffer passes.
 
+use super::bfp::{self, Precision};
 use super::codelet::{self, CodeletBackend};
 use super::exec::{default_threads, BatchExecutor, Workspace};
 use super::fourstep;
@@ -100,6 +101,12 @@ pub struct NativePlan {
     /// (scalar autovectorised loops vs explicit `std::simd`), fixed at
     /// plan-build time. See [`crate::fft::codelet`].
     pub codelet: CodeletBackend,
+    /// Exchange-tier storage precision, fixed at plan-build time: `F32`
+    /// is the paper's shipped kernel; `Bfp16` routes every inter-stage
+    /// store through the block-floating-point codec and keeps the
+    /// four-step staging matrix in BFP (see [`crate::fft::bfp`]).
+    /// Butterfly compute stays f32 either way.
+    pub precision: Precision,
     /// If false, skip precomputed tables and use the sincos chain
     /// (ablation knob; see benches/native_fft.rs).
     pub use_tables: bool,
@@ -126,7 +133,14 @@ impl NativePlan {
                 tw_fwd: fourstep_twiddles(n1, n2, false),
             }
         };
-        Ok(NativePlan { n, variant, decomp, codelet: codelet::select(), use_tables: true })
+        Ok(NativePlan {
+            n,
+            variant,
+            decomp,
+            codelet: codelet::select(),
+            precision: bfp::select(),
+            use_tables: true,
+        })
     }
 
     /// Disable twiddle tables (use the on-the-fly sincos chain).
@@ -143,6 +157,13 @@ impl NativePlan {
     /// claims codelets that didn't run.
     pub fn with_codelet(mut self, backend: CodeletBackend) -> Self {
         self.codelet = backend.resolve();
+        self
+    }
+
+    /// Pin the exchange-tier precision (default: [`bfp::select`]'s
+    /// process-wide choice, `APPLEFFT_PRECISION` overridable).
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
         self
     }
 
@@ -176,45 +197,95 @@ impl NativePlan {
         debug_assert_eq!(re.len(), n * lines);
         debug_assert_eq!(im.len(), n * lines);
         let inverse = dir == Direction::Inverse;
+        let bfp16 = self.precision == Precision::Bfp16;
         let codelets = codelet::table(self.codelet);
         match &self.decomp {
             Decomposition::Single { radices, tables } => {
                 ws.ensure(n, 0);
+                if bfp16 {
+                    ws.ensure_bfp(n, 0, 0);
+                }
                 let tables = self.use_tables.then_some(tables);
                 for b in 0..lines {
                     let at = b * n;
-                    transform_line_with(
-                        codelets,
-                        &mut re[at..at + n],
-                        &mut im[at..at + n],
-                        &mut ws.sre,
-                        &mut ws.sim,
-                        radices,
-                        tables,
-                        inverse,
-                    );
+                    if bfp16 {
+                        stockham::transform_line_bfp_with(
+                            codelets,
+                            &mut re[at..at + n],
+                            &mut im[at..at + n],
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            &mut ws.bstage_re,
+                            &mut ws.bstage_im,
+                            radices,
+                            tables,
+                            inverse,
+                        );
+                    } else {
+                        transform_line_with(
+                            codelets,
+                            &mut re[at..at + n],
+                            &mut im[at..at + n],
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            radices,
+                            tables,
+                            inverse,
+                        );
+                    }
                 }
             }
             Decomposition::FourStep { n1, n2, radices, tables, tw_fwd } => {
-                ws.ensure(*n2, n);
                 let tables = self.use_tables.then_some(tables);
-                for b in 0..lines {
-                    let at = b * n;
-                    fourstep::fourstep_line_fused(
-                        codelets,
-                        &mut re[at..at + n],
-                        &mut im[at..at + n],
-                        *n1,
-                        *n2,
-                        radices,
-                        tables,
-                        tw_fwd,
-                        &mut ws.yre,
-                        &mut ws.yim,
-                        &mut ws.sre,
-                        &mut ws.sim,
-                        inverse,
-                    );
+                if bfp16 {
+                    // The staging matrix lives in BFP: no f32 y buffers
+                    // at all on this path (half the exchange footprint).
+                    let stride = fourstep::bfp_stage_stride(*n2);
+                    ws.ensure(*n2, 0);
+                    ws.ensure_bfp(n1 * stride, *n2, *n2);
+                    for b in 0..lines {
+                        let at = b * n;
+                        fourstep::fourstep_line_bfp(
+                            codelets,
+                            &mut re[at..at + n],
+                            &mut im[at..at + n],
+                            *n1,
+                            *n2,
+                            radices,
+                            tables,
+                            tw_fwd,
+                            &mut ws.bstage_re,
+                            &mut ws.bstage_im,
+                            &mut ws.brow_re,
+                            &mut ws.brow_im,
+                            &mut ws.rre,
+                            &mut ws.rim,
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            inverse,
+                            None,
+                        );
+                    }
+                } else {
+                    ws.ensure(*n2, n);
+                    for b in 0..lines {
+                        let at = b * n;
+                        fourstep::fourstep_line_fused(
+                            codelets,
+                            &mut re[at..at + n],
+                            &mut im[at..at + n],
+                            *n1,
+                            *n2,
+                            radices,
+                            tables,
+                            tw_fwd,
+                            &mut ws.yre,
+                            &mut ws.yim,
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            inverse,
+                        );
+                    }
                 }
             }
         }
@@ -240,74 +311,156 @@ impl NativePlan {
         debug_assert_eq!(re.len(), n * lines);
         debug_assert_eq!(im.len(), n * lines);
         debug_assert_eq!(filter.len(), n);
+        let bfp16 = self.precision == Precision::Bfp16;
         let codelets = codelet::table(self.codelet);
         match &self.decomp {
             Decomposition::Single { radices, tables } => {
                 ws.ensure(n, 0);
+                if bfp16 {
+                    ws.ensure_bfp(n, 0, 0);
+                }
                 let tables = self.use_tables.then_some(tables);
                 for b in 0..lines {
                     let at = b * n;
                     let (lre, lim) = (&mut re[at..at + n], &mut im[at..at + n]);
-                    stockham::transform_line_mul_with(
-                        codelets,
-                        lre,
-                        lim,
-                        &mut ws.sre,
-                        &mut ws.sim,
-                        radices,
-                        tables,
-                        &filter.re,
-                        &filter.im,
-                    );
-                    transform_line_with(
-                        codelets,
-                        lre,
-                        lim,
-                        &mut ws.sre,
-                        &mut ws.sim,
-                        radices,
-                        tables,
-                        true,
-                    );
+                    if bfp16 {
+                        stockham::transform_line_mul_bfp_with(
+                            codelets,
+                            lre,
+                            lim,
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            &mut ws.bstage_re,
+                            &mut ws.bstage_im,
+                            radices,
+                            tables,
+                            &filter.re,
+                            &filter.im,
+                        );
+                        stockham::transform_line_bfp_with(
+                            codelets,
+                            lre,
+                            lim,
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            &mut ws.bstage_re,
+                            &mut ws.bstage_im,
+                            radices,
+                            tables,
+                            true,
+                        );
+                    } else {
+                        stockham::transform_line_mul_with(
+                            codelets,
+                            lre,
+                            lim,
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            radices,
+                            tables,
+                            &filter.re,
+                            &filter.im,
+                        );
+                        transform_line_with(
+                            codelets,
+                            lre,
+                            lim,
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            radices,
+                            tables,
+                            true,
+                        );
+                    }
                 }
             }
             Decomposition::FourStep { n1, n2, radices, tables, tw_fwd } => {
-                ws.ensure(*n2, n);
                 let tables = self.use_tables.then_some(tables);
-                for b in 0..lines {
-                    let at = b * n;
-                    let (lre, lim) = (&mut re[at..at + n], &mut im[at..at + n]);
-                    fourstep::fourstep_line_mul(
-                        codelets,
-                        lre,
-                        lim,
-                        *n1,
-                        *n2,
-                        radices,
-                        tables,
-                        tw_fwd,
-                        &mut ws.yre,
-                        &mut ws.yim,
-                        &mut ws.sre,
-                        &mut ws.sim,
-                        &filter.re,
-                        &filter.im,
-                    );
-                    fourstep::fourstep_line_fused(
-                        codelets,
-                        lre,
-                        lim,
-                        *n1,
-                        *n2,
-                        radices,
-                        tables,
-                        tw_fwd,
-                        &mut ws.yre,
-                        &mut ws.yim,
-                        &mut ws.sre,
-                        &mut ws.sim,
-                        true,
-                    );
+                if bfp16 {
+                    let stride = fourstep::bfp_stage_stride(*n2);
+                    ws.ensure(*n2, 0);
+                    ws.ensure_bfp(n1 * stride, *n2, *n2);
+                    for b in 0..lines {
+                        let at = b * n;
+                        let (lre, lim) = (&mut re[at..at + n], &mut im[at..at + n]);
+                        fourstep::fourstep_line_bfp(
+                            codelets,
+                            lre,
+                            lim,
+                            *n1,
+                            *n2,
+                            radices,
+                            tables,
+                            tw_fwd,
+                            &mut ws.bstage_re,
+                            &mut ws.bstage_im,
+                            &mut ws.brow_re,
+                            &mut ws.brow_im,
+                            &mut ws.rre,
+                            &mut ws.rim,
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            false,
+                            Some((&filter.re, &filter.im)),
+                        );
+                        fourstep::fourstep_line_bfp(
+                            codelets,
+                            lre,
+                            lim,
+                            *n1,
+                            *n2,
+                            radices,
+                            tables,
+                            tw_fwd,
+                            &mut ws.bstage_re,
+                            &mut ws.bstage_im,
+                            &mut ws.brow_re,
+                            &mut ws.brow_im,
+                            &mut ws.rre,
+                            &mut ws.rim,
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            true,
+                            None,
+                        );
+                    }
+                } else {
+                    ws.ensure(*n2, n);
+                    for b in 0..lines {
+                        let at = b * n;
+                        let (lre, lim) = (&mut re[at..at + n], &mut im[at..at + n]);
+                        fourstep::fourstep_line_mul(
+                            codelets,
+                            lre,
+                            lim,
+                            *n1,
+                            *n2,
+                            radices,
+                            tables,
+                            tw_fwd,
+                            &mut ws.yre,
+                            &mut ws.yim,
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            &filter.re,
+                            &filter.im,
+                        );
+                        fourstep::fourstep_line_fused(
+                            codelets,
+                            lre,
+                            lim,
+                            *n1,
+                            *n2,
+                            radices,
+                            tables,
+                            tw_fwd,
+                            &mut ws.yre,
+                            &mut ws.yim,
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            true,
+                        );
+                    }
                 }
             }
         }
@@ -337,14 +490,15 @@ impl NativePlan {
     }
 }
 
-/// Plan + executor cache keyed by (size, variant, codelet backend),
-/// shared across threads. The backend is part of the key so pinned
-/// scalar/simd plans (tests, benches, ablation) never alias the
+/// Plan + executor cache keyed by (size, variant, codelet backend,
+/// precision), shared across threads. The backend and precision are
+/// part of the key so pinned scalar/simd or f32/bfp16 plans (tests,
+/// benches, ablation, per-request precision policies) never alias the
 /// default-selected executors or their workspace pools.
 #[derive(Default)]
 pub struct NativePlanner {
-    plans: Mutex<HashMap<(usize, Variant, CodeletBackend), Arc<NativePlan>>>,
-    executors: Mutex<HashMap<(usize, Variant, CodeletBackend), Arc<BatchExecutor>>>,
+    plans: Mutex<HashMap<(usize, Variant, CodeletBackend, Precision), Arc<NativePlan>>>,
+    executors: Mutex<HashMap<(usize, Variant, CodeletBackend, Precision), Arc<BatchExecutor>>>,
 }
 
 impl NativePlanner {
@@ -370,33 +524,55 @@ impl NativePlanner {
     /// The pooled executor for `n` on the preferred variant (see
     /// [`Self::plan_auto`]).
     pub fn executor_auto(&self, n: usize) -> Result<Arc<BatchExecutor>> {
-        ensure!(n.is_power_of_two() && n >= 2, "FFT size {n} must be a power of two >= 2");
-        self.executor(n, Variant::preferred(n))
+        self.executor_auto_with(n, bfp::select())
     }
 
-    /// The plan for `(n, variant)` pinned to a codelet backend. The
-    /// backend is [`resolve`](CodeletBackend::resolve)d before keying
-    /// the cache, so an uncompiled `Simd` request shares the scalar
-    /// entry instead of duplicating it under an untruthful label.
+    /// The pooled executor for `n` on the preferred variant, pinned to
+    /// an exchange precision — what precision-policy carriers (the
+    /// spectral pipeline, SAR compressors, the serving backend) use.
+    pub fn executor_auto_with(&self, n: usize, precision: Precision) -> Result<Arc<BatchExecutor>> {
+        ensure!(n.is_power_of_two() && n >= 2, "FFT size {n} must be a power of two >= 2");
+        self.executor_with_precision(n, Variant::preferred(n), codelet::select(), precision)
+    }
+
+    /// The plan for `(n, variant)` pinned to a codelet backend, on the
+    /// process-selected precision. The backend is
+    /// [`resolve`](CodeletBackend::resolve)d before keying the cache,
+    /// so an uncompiled `Simd` request shares the scalar entry instead
+    /// of duplicating it under an untruthful label.
     pub fn plan_with(
         &self,
         n: usize,
         variant: Variant,
         backend: CodeletBackend,
     ) -> Result<Arc<NativePlan>> {
+        self.plan_with_precision(n, variant, backend, bfp::select())
+    }
+
+    /// The fully-pinned plan lookup: (size, variant, codelet backend,
+    /// exchange precision) — the complete cache key.
+    pub fn plan_with_precision(
+        &self,
+        n: usize,
+        variant: Variant,
+        backend: CodeletBackend,
+        precision: Precision,
+    ) -> Result<Arc<NativePlan>> {
         let backend = backend.resolve();
         let mut cache = self.plans.lock().unwrap();
-        if let Some(p) = cache.get(&(n, variant, backend)) {
+        if let Some(p) = cache.get(&(n, variant, backend, precision)) {
             return Ok(p.clone());
         }
-        let plan = Arc::new(NativePlan::new(n, variant)?.with_codelet(backend));
-        cache.insert((n, variant, backend), plan.clone());
+        let plan =
+            Arc::new(NativePlan::new(n, variant)?.with_codelet(backend).with_precision(precision));
+        cache.insert((n, variant, backend, precision), plan.clone());
         Ok(plan)
     }
 
     /// The pooled batch executor for (n, variant) on the selected
-    /// codelet backend; created on first use and shared by every
-    /// subsequent caller, so workspace pools warm up once per shape.
+    /// codelet backend and precision; created on first use and shared
+    /// by every subsequent caller, so workspace pools warm up once per
+    /// shape.
     pub fn executor(&self, n: usize, variant: Variant) -> Result<Arc<BatchExecutor>> {
         self.executor_with(n, variant, codelet::select())
     }
@@ -409,18 +585,32 @@ impl NativePlanner {
         variant: Variant,
         backend: CodeletBackend,
     ) -> Result<Arc<BatchExecutor>> {
+        self.executor_with_precision(n, variant, backend, bfp::select())
+    }
+
+    /// The fully-pinned executor lookup: (size, variant, codelet
+    /// backend, exchange precision). Distinct precisions get distinct
+    /// executors (and workspace pools — their exchange tiers have
+    /// different shapes).
+    pub fn executor_with_precision(
+        &self,
+        n: usize,
+        variant: Variant,
+        backend: CodeletBackend,
+        precision: Precision,
+    ) -> Result<Arc<BatchExecutor>> {
         let backend = backend.resolve();
-        // Hold the lock across lookup + build: `plan_with()` uses a
-        // different mutex (no deadlock), and this keeps executor
+        // Hold the lock across lookup + build: `plan_with_precision()`
+        // uses a different mutex (no deadlock), and this keeps executor
         // construction single-flight so racing first users share one
         // pool.
         let mut cache = self.executors.lock().unwrap();
-        if let Some(e) = cache.get(&(n, variant, backend)) {
+        if let Some(e) = cache.get(&(n, variant, backend, precision)) {
             return Ok(e.clone());
         }
-        let plan = self.plan_with(n, variant, backend)?;
+        let plan = self.plan_with_precision(n, variant, backend, precision)?;
         let exec = Arc::new(BatchExecutor::with_threads(plan, default_threads()));
-        cache.insert((n, variant, backend), exec.clone());
+        cache.insert((n, variant, backend, precision), exec.clone());
         Ok(exec)
     }
 
@@ -564,6 +754,107 @@ mod tests {
         // The default entry points resolve to the process selection.
         assert_eq!(planner.plan(1024, Variant::Radix8).unwrap().codelet, codelet::select());
         assert_eq!(planner.executor(1024, Variant::Radix8).unwrap().codelet(), codelet::select());
+    }
+
+    #[test]
+    fn planner_keys_on_precision() {
+        let planner = NativePlanner::new();
+        let f32p = planner
+            .plan_with_precision(1024, Variant::Radix8, CodeletBackend::Scalar, Precision::F32)
+            .unwrap();
+        let bfp = planner
+            .plan_with_precision(1024, Variant::Radix8, CodeletBackend::Scalar, Precision::Bfp16)
+            .unwrap();
+        assert_eq!(f32p.precision, Precision::F32);
+        assert_eq!(bfp.precision, Precision::Bfp16);
+        assert!(!Arc::ptr_eq(&f32p, &bfp), "precisions must not alias");
+        assert_eq!(planner.cached_plans(), 2);
+        let ef = planner
+            .executor_with_precision(1024, Variant::Radix8, CodeletBackend::Scalar, Precision::F32)
+            .unwrap();
+        let eb = planner
+            .executor_with_precision(
+                1024,
+                Variant::Radix8,
+                CodeletBackend::Scalar,
+                Precision::Bfp16,
+            )
+            .unwrap();
+        assert!(!Arc::ptr_eq(&ef, &eb), "executors must not share pools across precisions");
+        assert_eq!(ef.precision(), Precision::F32);
+        assert_eq!(eb.precision(), Precision::Bfp16);
+        // Default entry points resolve to the process selection.
+        assert_eq!(planner.plan(1024, Variant::Radix8).unwrap().precision, bfp::select());
+    }
+
+    #[test]
+    fn bfp16_transform_tracks_f32_within_snr() {
+        // Whole-plan check across decompositions: the Bfp16 plan's
+        // output stays >= 60 dB of the f32 plan on the same values,
+        // both directions (the conformance suite prints the full
+        // per-size table; this is the unit-level gate).
+        let mut rng = Rng::new(0xB9);
+        let planner = NativePlanner::new();
+        for &n in &[256usize, 4096, 8192] {
+            let batch = 2;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let want = planner
+                    .plan_with_precision(
+                        n,
+                        Variant::Radix8,
+                        CodeletBackend::Scalar,
+                        Precision::F32,
+                    )
+                    .unwrap()
+                    .execute_batch(&x, batch, dir)
+                    .unwrap();
+                let got = planner
+                    .plan_with_precision(
+                        n,
+                        Variant::Radix8,
+                        CodeletBackend::Scalar,
+                        Precision::Bfp16,
+                    )
+                    .unwrap()
+                    .execute_batch(&x, batch, dir)
+                    .unwrap();
+                let snr = bfp::snr_db(&got, &want);
+                assert!(snr >= 60.0, "n={n} {dir:?}: snr {snr:.1} dB");
+            }
+        }
+    }
+
+    #[test]
+    fn bfp16_pipeline_matches_composed_bitwise() {
+        // The bitwise fused-equals-composed property survives the
+        // precision axis: at Bfp16 the fused pipeline and the
+        // three-dispatch composition run the codec at identical points,
+        // so their outputs are identical bits. Covers both
+        // decompositions.
+        let mut rng = Rng::new(0xBA);
+        let planner = NativePlanner::new();
+        for &n in &[1024usize, 8192] {
+            let batch = 2;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let plan = planner
+                .plan_with_precision(n, Variant::Radix8, CodeletBackend::Scalar, Precision::Bfp16)
+                .unwrap();
+            let f = plan.execute_batch(&x, batch, Direction::Forward).unwrap();
+            let mut prod = SplitComplex::zeros(n * batch);
+            for b in 0..batch {
+                for i in 0..n {
+                    prod.set(b * n + i, f.get(b * n + i) * h.get(i));
+                }
+            }
+            let want = plan.execute_batch(&prod, batch, Direction::Inverse).unwrap();
+            let mut got = x.clone();
+            let mut ws = crate::fft::exec::Workspace::new();
+            plan.run_lines_pipeline(&mut got.re, &mut got.im, batch, &h, &mut ws);
+            assert_eq!(got.re, want.re, "re: n={n}");
+            assert_eq!(got.im, want.im, "im: n={n}");
+        }
     }
 
     #[test]

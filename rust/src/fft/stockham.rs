@@ -25,6 +25,7 @@
 //! `s = 1`; each radix-r stage maps `(n, s) -> (n/r, s*r)`, keeping
 //! `n * s = N`.
 
+use super::bfp::{self, BfpVec};
 use super::codelet::{self, CodeletTable};
 use super::twiddle::{chain, PlanTables, StageTable};
 use crate::util::complex::C32;
@@ -566,6 +567,127 @@ pub fn transform_line_mul_with(
     debug_assert!(src_is_main, "result must end in the main buffer");
 }
 
+/// [`transform_line_with`], but with every **inter-stage** store routed
+/// through the block-floating-point codec: after each stage except the
+/// last, the stage's output buffer is quantized to f16 mantissas with
+/// shared per-block exponents and dequantized back
+/// ([`bfp::exchange_roundtrip`]) — the numerics of a half-precision
+/// exchange tier while the butterflies themselves stay full f32 in the
+/// register tier. The final stage's output leaves at f32 (results exit
+/// through "device memory", which stays full precision), so a
+/// single-stage transform is bit-identical to the f32 path.
+///
+/// `(bre, bim)` are the codec's BFP planes (capacity >= the line
+/// length), pooled inside [`crate::fft::exec::Workspace`] like every
+/// other piece of exchange-tier scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn transform_line_bfp_with(
+    codelets: &CodeletTable,
+    re: &mut [f32],
+    im: &mut [f32],
+    sre: &mut [f32],
+    sim: &mut [f32],
+    bre: &mut BfpVec,
+    bim: &mut BfpVec,
+    radices: &[usize],
+    tables: Option<&PlanTables>,
+    inverse: bool,
+) {
+    let n_total = re.len();
+    debug_assert_eq!(im.len(), n_total);
+    let sre = &mut sre[..n_total];
+    let sim = &mut sim[..n_total];
+    let levels = radices.len();
+    let scale = if inverse { 1.0 / n_total as f32 } else { 1.0 };
+    let mut src_is_main = levels % 2 == 0;
+    if !src_is_main {
+        sre.copy_from_slice(re);
+        sim.copy_from_slice(im);
+    }
+    let mut n = n_total;
+    let mut s = 1usize;
+    for (li, &r) in radices.iter().enumerate() {
+        let table = tables.map(|t| &t.stages[li]);
+        let conj_in = inverse && li == 0;
+        let fuse_out = inverse && li == levels - 1;
+        let stage = codelets.stage(r, conj_in, fuse_out);
+        if src_is_main {
+            stage(re, im, sre, sim, n, s, table, scale);
+            if li < levels - 1 {
+                bfp::exchange_roundtrip(bre, bim, sre, sim);
+            }
+        } else {
+            stage(sre, sim, re, im, n, s, table, scale);
+            if li < levels - 1 {
+                bfp::exchange_roundtrip(bre, bim, re, im);
+            }
+        }
+        src_is_main = !src_is_main;
+        n /= r;
+        s *= r;
+    }
+    debug_assert!(src_is_main, "result must end in the main buffer");
+}
+
+/// [`transform_line_mul_with`] with the BFP exchange codec on every
+/// inter-stage store (see [`transform_line_bfp_with`]): the forward
+/// half of the `Bfp16` spectral pipeline. The fused MUL_SPECTRUM last
+/// stage multiplies in the register tier, after the final codec pass —
+/// so at equal precision the fused product remains bitwise equal to
+/// "Bfp16 transform, then standalone multiply".
+#[allow(clippy::too_many_arguments)]
+pub fn transform_line_mul_bfp_with(
+    codelets: &CodeletTable,
+    re: &mut [f32],
+    im: &mut [f32],
+    sre: &mut [f32],
+    sim: &mut [f32],
+    bre: &mut BfpVec,
+    bim: &mut BfpVec,
+    radices: &[usize],
+    tables: Option<&PlanTables>,
+    hre: &[f32],
+    him: &[f32],
+) {
+    let n_total = re.len();
+    debug_assert_eq!(im.len(), n_total);
+    debug_assert!(hre.len() >= n_total && him.len() >= n_total);
+    let sre = &mut sre[..n_total];
+    let sim = &mut sim[..n_total];
+    let levels = radices.len();
+    let mut src_is_main = levels % 2 == 0;
+    if !src_is_main {
+        sre.copy_from_slice(re);
+        sim.copy_from_slice(im);
+    }
+    let mut n = n_total;
+    let mut s = 1usize;
+    for (li, &r) in radices.iter().enumerate() {
+        let table = tables.map(|t| &t.stages[li]);
+        if li == levels - 1 {
+            let stage = codelets.stage_mul(r);
+            if src_is_main {
+                stage(re, im, sre, sim, n, s, table, hre, him);
+            } else {
+                stage(sre, sim, re, im, n, s, table, hre, him);
+            }
+        } else {
+            let stage = codelets.stage(r, false, false);
+            if src_is_main {
+                stage(re, im, sre, sim, n, s, table, 1.0);
+                bfp::exchange_roundtrip(bre, bim, sre, sim);
+            } else {
+                stage(sre, sim, re, im, n, s, table, 1.0);
+                bfp::exchange_roundtrip(bre, bim, re, im);
+            }
+        }
+        src_is_main = !src_is_main;
+        n /= r;
+        s *= r;
+    }
+    debug_assert!(src_is_main, "result must end in the main buffer");
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -742,6 +864,130 @@ mod tests {
                     assert_eq!(got.im, want.im, "n={n} max_radix={max_radix}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn bfp_driver_tracks_f32_driver_within_snr() {
+        // The Bfp16 driver is the f32 driver plus the exchange codec
+        // between stages: outputs must stay >= 60 dB of the f32 path,
+        // both directions, every radix family.
+        let mut rng = Rng::new(0xB1);
+        for &max_radix in &[2usize, 4, 8] {
+            for &n in &[64usize, 512, 4096] {
+                let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+                let radices = radix_schedule(n, max_radix);
+                let (mut sre, mut sim) = (vec![0.0; n], vec![0.0; n]);
+                let (mut bre, mut bim) = (BfpVec::new(), BfpVec::new());
+                bre.ensure(n);
+                bim.ensure(n);
+                for inverse in [false, true] {
+                    let mut want = x.clone();
+                    transform_line_fused(
+                        &mut want.re, &mut want.im, &mut sre, &mut sim, &radices, None, inverse,
+                    );
+                    let mut got = x.clone();
+                    transform_line_bfp_with(
+                        codelet::scalar_table(),
+                        &mut got.re,
+                        &mut got.im,
+                        &mut sre,
+                        &mut sim,
+                        &mut bre,
+                        &mut bim,
+                        &radices,
+                        None,
+                        inverse,
+                    );
+                    let snr = crate::fft::bfp::snr_db(&got, &want);
+                    assert!(
+                        snr >= 60.0,
+                        "n={n} max_radix={max_radix} inverse={inverse}: snr {snr:.1} dB"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bfp_single_stage_is_bitwise_f32() {
+        // One stage has no inter-stage exchange, so the codec never
+        // fires and the Bfp16 driver is bit-identical to f32.
+        let mut rng = Rng::new(0xB2);
+        let n = 8;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let radices = radix_schedule(n, 8);
+        assert_eq!(radices.len(), 1);
+        let (mut sre, mut sim) = (vec![0.0; n], vec![0.0; n]);
+        let (mut bre, mut bim) = (BfpVec::new(), BfpVec::new());
+        bre.ensure(n);
+        bim.ensure(n);
+        let mut want = x.clone();
+        transform_line(&mut want.re, &mut want.im, &mut sre, &mut sim, &radices, None);
+        let mut got = x.clone();
+        transform_line_bfp_with(
+            codelet::scalar_table(),
+            &mut got.re,
+            &mut got.im,
+            &mut sre,
+            &mut sim,
+            &mut bre,
+            &mut bim,
+            &radices,
+            None,
+            false,
+        );
+        assert_eq!(got.re, want.re);
+        assert_eq!(got.im, want.im);
+    }
+
+    #[test]
+    fn bfp_mul_driver_is_bitwise_bfp_transform_then_multiply() {
+        // At equal precision the fused MUL_SPECTRUM last stage must
+        // still be bitwise "transform, then multiply": the codec runs
+        // at the same points in both formulations.
+        let mut rng = Rng::new(0xB3);
+        for &n in &[64usize, 256, 2048] {
+            let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let radices = radix_schedule(n, 8);
+            let (mut sre, mut sim) = (vec![0.0; n], vec![0.0; n]);
+            let (mut bre, mut bim) = (BfpVec::new(), BfpVec::new());
+            bre.ensure(n);
+            bim.ensure(n);
+            let mut want = x.clone();
+            transform_line_bfp_with(
+                codelet::scalar_table(),
+                &mut want.re,
+                &mut want.im,
+                &mut sre,
+                &mut sim,
+                &mut bre,
+                &mut bim,
+                &radices,
+                None,
+                false,
+            );
+            for i in 0..n {
+                let v = want.get(i) * h.get(i);
+                want.set(i, v);
+            }
+            let mut got = x.clone();
+            transform_line_mul_bfp_with(
+                codelet::scalar_table(),
+                &mut got.re,
+                &mut got.im,
+                &mut sre,
+                &mut sim,
+                &mut bre,
+                &mut bim,
+                &radices,
+                None,
+                &h.re,
+                &h.im,
+            );
+            assert_eq!(got.re, want.re, "n={n}");
+            assert_eq!(got.im, want.im, "n={n}");
         }
     }
 

@@ -150,7 +150,8 @@ fn validate(args: &Args) -> anyhow::Result<()> {
     let engine = Engine::start(backend_from(args))?;
     let planner = NativePlanner::new();
     println!("validate: backend {:?}", engine.backend());
-    let mut table = Table::new("Artifact validation vs native oracle", &["artifact", "rel L2 err", "status"]);
+    let mut table =
+        Table::new("Artifact validation vs native oracle", &["artifact", "rel L2 err", "status"]);
     let mut rng = Rng::new(7);
     for meta in engine.registry().clone().iter() {
         if meta.kind != applefft::runtime::ArtifactKind::Fft {
@@ -167,7 +168,8 @@ fn validate(args: &Args) -> anyhow::Result<()> {
         let want = planner.fft_batch(&x, n, batch, meta.direction)?;
         let err = got.rel_l2_error(&want);
         let ok = err < 5e-4;
-        table.row(&[meta.name.clone(), format!("{err:.2e}"), if ok { "OK" } else { "FAIL" }.into()]);
+        let status = if ok { "OK" } else { "FAIL" };
+        table.row(&[meta.name.clone(), format!("{err:.2e}"), status.into()]);
         anyhow::ensure!(ok, "{} failed validation: {err}", meta.name);
     }
     table.print();
@@ -188,7 +190,8 @@ fn plan(args: &Args) -> anyhow::Result<()> {
 }
 
 fn sim_params() -> anyhow::Result<()> {
-    let mut t = Table::new("Apple M1 GPU compute parameters (paper Table I)", &["parameter", "value"]);
+    let mut t =
+        Table::new("Apple M1 GPU compute parameters (paper Table I)", &["parameter", "value"]);
     t.row_str(&["GPU cores", &M1.cores.to_string()]);
     t.row_str(&["ALUs per core", &M1.alus_per_core.to_string()]);
     t.row_str(&["FP32 FLOPs/cycle/core", &M1.fp32_flops_per_cycle_core.to_string()]);
@@ -255,7 +258,8 @@ fn bench_model() -> anyhow::Result<()> {
     tm.row_str(&["Scalar radix-8 GFLOPS", &format!("{:.1}", a.scalar_gflops)]);
     tm.print();
 
-    let mut f1 = Table::new("Fig. 1 — batch scaling (N=4096)", &["batch", "GPU GFLOPS", "vDSP GFLOPS"]);
+    let mut f1 =
+        Table::new("Fig. 1 — batch scaling (N=4096)", &["batch", "GPU GFLOPS", "vDSP GFLOPS"]);
     for (b, gpu, vdsp) in report::fig1(&report::fig1_batches()) {
         f1.row(&[b.to_string(), format!("{gpu:.1}"), format!("{vdsp:.1}")]);
     }

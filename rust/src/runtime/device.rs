@@ -41,6 +41,10 @@ pub struct Job {
     /// no tile ever copies the spectrum (PJRT needs flat input literals
     /// and keeps using `inputs[2..4]` instead).
     pub filter: Option<Arc<SplitComplex>>,
+    /// Exchange-tier precision the native backend should execute at
+    /// (requests carry a precision policy; PJRT artifacts are compiled
+    /// f32 and ignore it).
+    pub precision: crate::fft::bfp::Precision,
     pub reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
 }
 

@@ -7,6 +7,7 @@
 
 use super::artifact::Registry;
 use super::device::{run_device, DeviceBackend, Job};
+use crate::fft::bfp::{self, Precision};
 use crate::fft::Direction;
 use crate::util::complex::SplitComplex;
 use anyhow::{anyhow, Context, Result};
@@ -132,14 +133,15 @@ impl Engine {
         Ok(())
     }
 
-    /// Raw execution: artifact name + flat input tensors with dims.
+    /// Raw execution: artifact name + flat input tensors with dims, at
+    /// the process-default precision.
     pub fn execute_raw(
         &self,
         artifact: &str,
         inputs: Vec<Vec<f32>>,
         dims: Vec<Vec<usize>>,
     ) -> Result<Vec<Vec<f32>>> {
-        self.execute_job(artifact, inputs, dims, None)
+        self.execute_job(artifact, inputs, dims, None, bfp::select())
     }
 
     fn execute_job(
@@ -148,23 +150,39 @@ impl Engine {
         inputs: Vec<Vec<f32>>,
         dims: Vec<Vec<usize>>,
         filter: Option<Arc<SplitComplex>>,
+        precision: Precision,
     ) -> Result<Vec<Vec<f32>>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Job { artifact: artifact.to_string(), inputs, dims, filter, reply })
+            .send(Job { artifact: artifact.to_string(), inputs, dims, filter, precision, reply })
             .map_err(|_| anyhow!("device thread has exited"))?;
         rx.recv().map_err(|_| anyhow!("device thread dropped the job"))?
     }
 
-    /// Batched FFT through the artifact for size `n`. `x` is `(batch, n)`
-    /// row-major split-complex; `batch` must equal the artifact's batch
-    /// tile (the coordinator's batcher guarantees this on the hot path).
+    /// Batched FFT through the artifact for size `n` at the
+    /// process-default precision. `x` is `(batch, n)` row-major
+    /// split-complex; `batch` must equal the artifact's batch tile (the
+    /// coordinator's batcher guarantees this on the hot path).
     pub fn fft_batch(
         &self,
         x: &SplitComplex,
         n: usize,
         batch: usize,
         direction: Direction,
+    ) -> Result<SplitComplex> {
+        self.fft_batch_prec(x, n, batch, direction, bfp::select())
+    }
+
+    /// [`Self::fft_batch`] with the request's exchange precision: the
+    /// tile path, where every request carries a precision policy. PJRT
+    /// artifacts are compiled f32 and execute as such regardless.
+    pub fn fft_batch_prec(
+        &self,
+        x: &SplitComplex,
+        n: usize,
+        batch: usize,
+        direction: Direction,
+        precision: Precision,
     ) -> Result<SplitComplex> {
         let name = Registry::fft_name(n, direction);
         let meta = self.registry.get(&name)?;
@@ -173,15 +191,18 @@ impl Engine {
             "artifact {name} is specialised for batch {}, got {batch}",
             meta.batch
         );
-        let out = self.execute_raw(
+        let out = self.execute_job(
             &name,
             vec![x.re.clone(), x.im.clone()],
             vec![vec![batch, n], vec![batch, n]],
+            None,
+            precision,
         )?;
         Ok(SplitComplex { re: out[0].clone(), im: out[1].clone() })
     }
 
-    /// Fused range compression (batch, n) with filter (n,).
+    /// Fused range compression (batch, n) with filter (n,) at the
+    /// process-default precision.
     pub fn range_compress(
         &self,
         x: &SplitComplex,
@@ -189,11 +210,25 @@ impl Engine {
         n: usize,
         batch: usize,
     ) -> Result<SplitComplex> {
+        self.range_compress_prec(x, h, n, batch, bfp::select())
+    }
+
+    /// [`Self::range_compress`] with the exchange precision pinned.
+    pub fn range_compress_prec(
+        &self,
+        x: &SplitComplex,
+        h: &SplitComplex,
+        n: usize,
+        batch: usize,
+        precision: Precision,
+    ) -> Result<SplitComplex> {
         let name = Registry::rangecomp_name(n);
-        let out = self.execute_raw(
+        let out = self.execute_job(
             &name,
             vec![x.re.clone(), x.im.clone(), h.re.clone(), h.im.clone()],
             vec![vec![batch, n], vec![batch, n], vec![n], vec![n]],
+            None,
+            precision,
         )?;
         Ok(SplitComplex { re: out[0].clone(), im: out[1].clone() })
     }
@@ -211,8 +246,21 @@ impl Engine {
         n: usize,
         batch: usize,
     ) -> Result<SplitComplex> {
+        self.range_compress_shared_prec(x, h, n, batch, bfp::select())
+    }
+
+    /// [`Self::range_compress_shared`] with the request's exchange
+    /// precision (the `MatchedFilter` tile path).
+    pub fn range_compress_shared_prec(
+        &self,
+        x: SplitComplex,
+        h: &Arc<SplitComplex>,
+        n: usize,
+        batch: usize,
+        precision: Precision,
+    ) -> Result<SplitComplex> {
         if self.backend_used == Backend::Pjrt {
-            return self.range_compress(&x, h, n, batch);
+            return self.range_compress_prec(&x, h, n, batch, precision);
         }
         let name = Registry::rangecomp_name(n);
         let mut out = self.execute_job(
@@ -220,6 +268,7 @@ impl Engine {
             vec![x.re, x.im],
             vec![vec![batch, n], vec![batch, n]],
             Some(h.clone()),
+            precision,
         )?;
         let im = out.pop().ok_or_else(|| anyhow!("rangecomp returned no im plane"))?;
         let re = out.pop().ok_or_else(|| anyhow!("rangecomp returned no re plane"))?;

@@ -69,7 +69,10 @@ impl NativeExec {
         // All artifact variants compute the same transform; the native
         // library distinguishes only the radix schedule.
         let variant = if meta.variant == "radix4" { Variant::Radix4 } else { Variant::Radix8 };
-        let exec = self.planner.executor_with(n, variant, self.codelet)?;
+        // The job's precision policy picks the exchange tier; plans and
+        // pooled workspaces are cached per (n, variant, backend,
+        // precision), so f32 and bfp16 tiles never share scratch shapes.
+        let exec = self.planner.executor_with_precision(n, variant, self.codelet, job.precision)?;
         match meta.kind {
             ArtifactKind::Fft => {
                 ensure!(job.inputs[0].len() == n * batch, "input size mismatch");
@@ -129,7 +132,15 @@ mod tests {
         dims: Vec<Vec<usize>>,
     ) -> (Job, mpsc::Receiver<Result<Vec<Vec<f32>>>>) {
         let (tx, rx) = mpsc::channel();
-        (Job { artifact: artifact.into(), inputs, dims, filter: None, reply: tx }, rx)
+        let job = Job {
+            artifact: artifact.into(),
+            inputs,
+            dims,
+            filter: None,
+            precision: crate::fft::bfp::Precision::F32,
+            reply: tx,
+        };
+        (job, rx)
     }
 
     #[test]
@@ -268,6 +279,33 @@ mod tests {
             (created, grows),
             "workspace pool must not grow across repeated tiles"
         );
+    }
+
+    #[test]
+    fn native_exec_honours_job_precision() {
+        // Two identical jobs, one per precision: the bfp16 result must
+        // be close to — but not the bits of — the f32 result.
+        use crate::fft::bfp::{snr_db, Precision};
+        let exec = NativeExec::new(Registry::default_set(2));
+        let mut rng = Rng::new(55);
+        let (n, batch) = (1024usize, 2usize);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let mk = |precision: Precision| {
+            let (mut job, _rx) = make_job(
+                "fft1024_fwd",
+                vec![x.re.clone(), x.im.clone()],
+                vec![vec![batch, n], vec![batch, n]],
+            );
+            job.precision = precision;
+            job
+        };
+        let f = exec.execute(&mut mk(Precision::F32)).unwrap();
+        let b = exec.execute(&mut mk(Precision::Bfp16)).unwrap();
+        assert_ne!(f[0], b[0], "bfp16 must not be the f32 bits");
+        let fs = SplitComplex { re: f[0].clone(), im: f[1].clone() };
+        let bs = SplitComplex { re: b[0].clone(), im: b[1].clone() };
+        let snr = snr_db(&bs, &fs);
+        assert!(snr >= 60.0, "snr {snr:.1} dB");
     }
 
     #[test]

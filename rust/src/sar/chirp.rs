@@ -48,7 +48,10 @@ impl Chirp {
     /// line: conj(FFT(s)) with the pulse zero-padded to `n`, optionally
     /// windowed (sidelobe control). The pulse FFT runs through the
     /// caller's planner so its plan/executor caches (and workspace
-    /// pools) are shared with the compression pipeline itself.
+    /// pools) are shared with the compression pipeline itself — and it
+    /// is pinned to full f32, whatever the process-default precision: a
+    /// reference waveform computed once should not carry exchange-tier
+    /// quantization noise into every line it filters.
     pub fn matched_filter(
         &self,
         planner: &crate::fft::plan::NativePlanner,
@@ -63,7 +66,13 @@ impl Chirp {
             padded.set(i, pulse.get(i).scale(w));
         }
         let spec = planner
-            .fft_batch(&padded, n, 1, crate::fft::Direction::Forward)
+            .executor_with_precision(
+                n,
+                crate::fft::plan::Variant::Radix8,
+                crate::fft::codelet::select(),
+                crate::fft::bfp::Precision::F32,
+            )
+            .and_then(|ex| ex.execute_batch(&padded, 1, crate::fft::Direction::Forward))
             .expect("pulse FFT");
         let mut h = SplitComplex::zeros(n);
         for i in 0..n {

@@ -18,6 +18,7 @@
 use super::chirp::Chirp;
 use super::scene::{detect_peaks, Scene};
 use crate::coordinator::{FftService, FilterHandle};
+use crate::fft::bfp::{self, Precision};
 use crate::fft::pipeline::SpectralPipeline;
 use crate::fft::plan::NativePlanner;
 use crate::fft::Direction;
@@ -54,6 +55,12 @@ impl std::str::FromStr for RangePath {
 pub struct RangeCompressor {
     pub chirp: Chirp,
     pub n: usize,
+    /// Exchange-tier precision every compression path runs at: the
+    /// composed trips, the matched service path (via the registered
+    /// handle), the fused artifact, and the local pipeline. The filter
+    /// spectrum itself is always computed at f32 — a chirp reference
+    /// should not carry quantization noise into every line.
+    pub precision: Precision,
     /// Frequency-domain matched filter (n,).
     pub filter: SplitComplex,
     /// Planner whose caches back the filter FFT and the local pipeline.
@@ -65,7 +72,13 @@ pub struct RangeCompressor {
 
 impl RangeCompressor {
     pub fn new(chirp: Chirp, n: usize) -> RangeCompressor {
-        Self::build(chirp, n, None)
+        Self::build(chirp, n, None, bfp::select())
+    }
+
+    /// Compressor pinned to an exchange precision — `Bfp16` runs SAR
+    /// range compression half-precision end to end.
+    pub fn new_with_precision(chirp: Chirp, n: usize, precision: Precision) -> RangeCompressor {
+        Self::build(chirp, n, None, precision)
     }
 
     pub fn with_window(
@@ -73,29 +86,54 @@ impl RangeCompressor {
         n: usize,
         window: &dyn Fn(usize, usize) -> f32,
     ) -> RangeCompressor {
-        Self::build(chirp, n, Some(window))
+        Self::build(chirp, n, Some(window), bfp::select())
+    }
+
+    /// Windowed compressor pinned to an exchange precision (the
+    /// windowed twin of [`Self::new_with_precision`]).
+    pub fn with_window_prec(
+        chirp: Chirp,
+        n: usize,
+        window: &dyn Fn(usize, usize) -> f32,
+        precision: Precision,
+    ) -> RangeCompressor {
+        Self::build(chirp, n, Some(window), precision)
     }
 
     fn build(
         chirp: Chirp,
         n: usize,
         window: Option<&dyn Fn(usize, usize) -> f32>,
+        precision: Precision,
     ) -> RangeCompressor {
         let planner = NativePlanner::new();
         let filter = chirp.matched_filter(&planner, n, window);
-        RangeCompressor { chirp, n, filter, planner, pipeline: std::sync::OnceLock::new() }
+        RangeCompressor {
+            chirp,
+            n,
+            precision,
+            filter,
+            planner,
+            pipeline: std::sync::OnceLock::new(),
+        }
     }
 
     fn pipeline(&self) -> &SpectralPipeline {
         self.pipeline.get_or_init(|| {
             // `matched_filter` already ran an n-point FFT through this
             // planner, so n is a validated transform size.
-            SpectralPipeline::from_spectrum(&self.planner, self.filter.clone())
-                .expect("range line size validated at construction")
+            SpectralPipeline::from_spectrum_with_precision(
+                &self.planner,
+                self.filter.clone(),
+                self.precision,
+            )
+            .expect("range line size validated at construction")
         })
     }
 
-    /// Composed path: three service round trips.
+    /// Composed path: three service round trips (at this compressor's
+    /// precision, so composed-vs-fused comparisons stay apples to
+    /// apples).
     pub fn compress_composed(
         &self,
         svc: &FftService,
@@ -103,7 +141,7 @@ impl RangeCompressor {
         lines: usize,
     ) -> Result<SplitComplex> {
         let n = self.n;
-        let spec = svc.fft(n, Direction::Forward, echoes.clone(), lines)?;
+        let spec = svc.fft_prec(n, Direction::Forward, echoes.clone(), lines, self.precision)?;
         let mut prod = SplitComplex::zeros(n * lines);
         for l in 0..lines {
             for i in 0..n {
@@ -111,14 +149,15 @@ impl RangeCompressor {
                 prod.set(l * n + i, v);
             }
         }
-        svc.fft(n, Direction::Inverse, prod, lines)
+        svc.fft_prec(n, Direction::Inverse, prod, lines, self.precision)
     }
 
     /// Register this compressor's filter with a service for the fused
     /// `MatchedFilter` request kind. Share the handle across calls (and
-    /// clients) so their lines coalesce into the same tiles.
+    /// clients) so their lines coalesce into the same tiles. The handle
+    /// carries this compressor's precision policy.
     pub fn register_filter(&self, svc: &FftService) -> Result<FilterHandle> {
-        svc.register_filter(self.n, self.filter.clone())
+        svc.register_filter_prec(self.n, self.filter.clone(), self.precision)
     }
 
     /// Fused service path: one matched-filter request through a
@@ -170,7 +209,7 @@ impl RangeCompressor {
             let mut block = SplitComplex::zeros(n * tile);
             block.re[..take * n].copy_from_slice(&echoes.re[at * n..(at + take) * n]);
             block.im[..take * n].copy_from_slice(&echoes.im[at * n..(at + take) * n]);
-            let y = svc.range_compress(&block, &self.filter, n, tile)?;
+            let y = svc.range_compress_prec(&block, &self.filter, n, tile, self.precision)?;
             out.re[at * n..(at + take) * n].copy_from_slice(&y.re[..take * n]);
             out.im[at * n..(at + take) * n].copy_from_slice(&y.im[..take * n]);
             at += take;

@@ -31,6 +31,17 @@ pub const M4_MAX: GpuConfig = GpuConfig {
 /// FP16 element size halves every byte term and doubles ALU throughput
 /// (paper Table I: FP16 = 512 FLOPs/cycle/core; §IX-A: "2x throughput,
 /// free conversion"; B_max doubles to 2^13).
+///
+/// **Measured counterpart:** this projection is no longer model-only.
+/// The repo's realisation is the block-floating-point exchange tier
+/// ([`crate::fft::bfp`], `Precision::Bfp16`), and
+/// `benches/future_work.rs` prints this model's speedup next to the
+/// measured f32-vs-bfp16 executor ratio on the same workload shape
+/// (radix-8, N=4096, batch 64); the full measured grid (precision ×
+/// codelet × serial/parallel) lands in `BENCH_native_fft.json` on
+/// every CI leg. Expect the measured CPU ratio to sit *below* this
+/// number: the model halves bytes on a bandwidth-bound GPU, while the
+/// CPU pays the quantize/dequantize codec in compute.
 #[derive(Clone, Copy, Debug)]
 pub struct Fp16Projection {
     pub b_max: usize,

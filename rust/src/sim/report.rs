@@ -200,7 +200,12 @@ mod tests {
         // Each row within 15% of the paper's value.
         for (n, _, r) in &t {
             let rel = (r.gflops - r.paper_gflops).abs() / r.paper_gflops;
-            assert!(rel < 0.15, "N={n}: model {} vs paper {} ({rel:.0}%)", r.gflops, r.paper_gflops);
+            assert!(
+                rel < 0.15,
+                "N={n}: model {} vs paper {} ({rel:.0}%)",
+                r.gflops,
+                r.paper_gflops
+            );
         }
     }
 

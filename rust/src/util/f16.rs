@@ -1,0 +1,186 @@
+//! Software IEEE 754 binary16 ("half") conversion, bit-level and
+//! dependency-free — the offline environment has no `half` crate, and
+//! stable Rust has no `f16` primitive. Only the two conversions the
+//! block-floating-point tier ([`crate::fft::bfp`]) needs are provided:
+//! `f32 -> f16` with round-to-nearest-even and the exact `f16 -> f32`
+//! widening.
+//!
+//! Layout (IEEE 754-2008 binary16): 1 sign bit, 5 exponent bits
+//! (bias 15), 10 mantissa bits. Max finite 65504, min normal `2^-14`,
+//! subnormal quantum `2^-24`.
+
+/// Largest finite f16 value, as f32.
+pub const F16_MAX: f32 = 65504.0;
+
+/// Smallest positive *normal* f16 value (`2^-14`), as f32.
+pub const F16_MIN_POSITIVE: f32 = 6.103_515_625e-5;
+
+/// Round a `(mantissa << shift)`-style fixed-point value to nearest,
+/// ties to even: drop `shift` low bits of `m`, rounding the kept part.
+#[inline]
+fn round_shift_rne(m: u32, shift: u32) -> u32 {
+    debug_assert!((1..32).contains(&shift));
+    let kept = m >> shift;
+    let rem = m & ((1 << shift) - 1);
+    let half = 1 << (shift - 1);
+    if rem > half || (rem == half && kept & 1 == 1) {
+        kept + 1
+    } else {
+        kept
+    }
+}
+
+/// Convert an `f32` to the nearest `f16` bit pattern (round to nearest,
+/// ties to even). Overflow saturates to infinity, underflow flushes
+/// through the subnormal range to signed zero; NaN stays NaN (quieted).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf or NaN. Keep NaN-ness (a payload of zero would read as
+        // inf, so force a quiet bit).
+        return if mant != 0 { sign | 0x7e00 } else { sign | 0x7c00 };
+    }
+
+    // Rebias: f32 bias 127 -> f16 bias 15.
+    let e = exp - 127 + 15;
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow -> +-inf
+    }
+    if e > 0 {
+        // Normal result: round the 23-bit mantissa to 10 bits. Rounding
+        // carries propagate into the exponent field naturally (an
+        // all-ones mantissa rounds up to the next power of two), and a
+        // carry out of e = 30 lands exactly on the inf pattern 0x7c00.
+        let h = round_shift_rne(((e as u32) << 23) | mant, 13);
+        return sign | h as u16;
+    }
+    // Subnormal result (|x| < 2^-14): value = m24 * 2^(e-15-9) with the
+    // implicit leading 1 made explicit; the f16 payload is the value in
+    // units of 2^-24, i.e. m24 >> (14 - e), RNE. A round-up out of the
+    // top subnormal lands exactly on the min-normal pattern 0x0400.
+    if e < -10 {
+        return sign; // underflow to zero (even the half-quantum rounds down)
+    }
+    let m24 = mant | 0x0080_0000;
+    let h = round_shift_rne(m24, (14 - e) as u32);
+    sign | h as u16
+}
+
+/// Widen an `f16` bit pattern to the exactly-representable `f32`.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        // Inf / NaN.
+        sign | 0x7f80_0000 | (mant << 13)
+    } else if exp != 0 {
+        // Normal: rebias 15 -> 127.
+        sign | ((exp + 112) << 23) | (mant << 13)
+    } else if mant == 0 {
+        sign // +-0
+    } else {
+        // Subnormal: value = mant * 2^-24; renormalise for f32.
+        let p = 31 - mant.leading_zeros(); // MSB position, 0..=9
+        sign | ((p + 103) << 23) | ((mant ^ (1 << p)) << (23 - p))
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip `f32 -> f16 -> f32`: the value the half-precision
+/// exchange tier would reproduce.
+#[inline]
+pub fn f16_round(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(0.5), 0x3800);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // f16 max
+        assert_eq!(f32_to_f16_bits(F16_MIN_POSITIVE), 0x0400); // min normal
+        assert_eq!(f32_to_f16_bits(5.960_464_5e-8), 0x0001); // min subnormal
+    }
+
+    #[test]
+    fn widening_is_exact() {
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_bits_to_f32(0xc000), -2.0);
+        assert_eq!(f16_bits_to_f32(0x7bff), 65504.0);
+        assert_eq!(f16_bits_to_f32(0x0400), F16_MIN_POSITIVE);
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_477_539_063e-8_f32);
+        assert_eq!(f16_bits_to_f32(0x0000), 0.0);
+        assert_eq!(f16_bits_to_f32(0x8000).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn overflow_and_underflow() {
+        assert_eq!(f32_to_f16_bits(65536.0), 0x7c00); // -> inf
+        assert_eq!(f32_to_f16_bits(-1e9), 0xfc00);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(1e-10), 0x0000); // -> zero
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn ties_round_to_even() {
+        // 1 + 2^-11 is exactly between 1.0 (even) and 1 + 2^-10: down.
+        assert_eq!(f32_to_f16_bits(1.0 + f32::powi(2.0, -11)), 0x3c00);
+        // 1 + 3*2^-11 is between 1+2^-10 (odd) and 1+2^-9 (even): up.
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * f32::powi(2.0, -11)), 0x3c02);
+        // Just above the tie rounds up.
+        assert_eq!(f32_to_f16_bits(1.0 + 1.001 * f32::powi(2.0, -11)), 0x3c01);
+    }
+
+    #[test]
+    fn rounding_carries_into_exponent() {
+        // The largest f16 mantissa below 2.0 plus half an ulp rounds up
+        // to exactly 2.0 (mantissa carry into the exponent field).
+        let below_two = f16_bits_to_f32(0x3fff);
+        let tie = (below_two + 2.0) / 2.0;
+        assert_eq!(f32_to_f16_bits(tie), 0x4000);
+        // Top subnormal + half quantum rounds into the min normal.
+        let top_sub = f16_bits_to_f32(0x03ff);
+        let tie = (top_sub + F16_MIN_POSITIVE) / 2.0;
+        assert_eq!(f32_to_f16_bits(tie), 0x0400);
+    }
+
+    #[test]
+    fn roundtrip_is_identity_on_f16_values() {
+        // Every finite f16 bit pattern widens and converts back exactly.
+        for h in 0u16..=0xffff {
+            let exp = (h >> 10) & 0x1f;
+            if exp == 0x1f {
+                continue; // inf/NaN handled elsewhere
+            }
+            let x = f16_bits_to_f32(h);
+            let back = f32_to_f16_bits(x);
+            // -0.0 and 0.0 keep their signs; everything else is exact.
+            assert_eq!(back, h, "h={h:#06x} x={x}");
+        }
+    }
+
+    #[test]
+    fn relative_error_within_half_ulp() {
+        // For values across the normal range, |round(x) - x| <= 2^-11 |x|.
+        let mut worst = 0.0f32;
+        for i in 0..10_000 {
+            let x = (i as f32 + 0.5) * 1e-3 + 1e-3;
+            let r = f16_round(x);
+            worst = worst.max((r - x).abs() / x);
+        }
+        assert!(worst <= f32::powi(2.0, -11), "{worst}");
+    }
+}

@@ -3,6 +3,7 @@
 //! buffers, PRNG, wall-clock timing helpers.
 
 pub mod complex;
+pub mod f16;
 pub mod rng;
 pub mod timer;
 

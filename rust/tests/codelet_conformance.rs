@@ -18,6 +18,7 @@
 //!    element; with `--features simd` absent the simd table falls back
 //!    to scalar and the assertion is trivially true).
 
+use applefft::fft::bfp::{snr_db, Precision};
 use applefft::fft::codelet::{table, CodeletBackend};
 use applefft::fft::dft::dft;
 use applefft::fft::plan::{NativePlanner, Variant};
@@ -347,6 +348,100 @@ fn fused_pipeline_matches_three_dispatch_all_paper_sizes() {
                 assert_eq!(per_backend[0].re, other.re, "n={n} {variant:?} re");
                 assert_eq!(per_backend[0].im, other.im, "n={n} {variant:?} im");
             }
+        }
+    }
+}
+
+/// The `Bfp16` exchange tier's accuracy gate, in the style of the
+/// paper's vDSP validation tables: at every paper size and both kernel
+/// variants, (a) the forward and inverse Bfp16 transforms stay >= 60 dB
+/// of the f32 path on identical inputs, (b) the full
+/// `ifft(fft(x)) ≈ x` round trip at Bfp16 stays >= 60 dB of the exact
+/// input, and (c) scalar/simd backends remain **bitwise** equal at
+/// Bfp16 (the codec is backend-independent scalar arithmetic, so the
+/// cross-backend equality the f32 tier guarantees must survive the
+/// precision axis).
+#[test]
+fn bfp16_forward_inverse_snr_all_paper_sizes() {
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(0xBF16);
+    println!("bfp16 exchange tier vs f32 path (SNR dB; gate: >= 60):");
+    println!(
+        "{:>7} {:>7} {:>10} {:>10} {:>10}",
+        "N", "variant", "fwd_snr", "inv_snr", "rt_snr"
+    );
+    for &n in &PAPER_SIZES {
+        let batch = 2usize;
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        for variant in [Variant::Radix4, Variant::Radix8] {
+            let mut per_backend: Vec<SplitComplex> = Vec::new();
+            let mut printed: Option<(f64, f64, f64)> = None;
+            for &backend in CodeletBackend::compiled() {
+                let f32_plan = planner
+                    .plan_with_precision(n, variant, backend, Precision::F32)
+                    .unwrap();
+                let bfp_plan = planner
+                    .plan_with_precision(n, variant, backend, Precision::Bfp16)
+                    .unwrap();
+                let fwd_ref = f32_plan.execute_batch(&x, batch, Direction::Forward).unwrap();
+                let fwd = bfp_plan.execute_batch(&x, batch, Direction::Forward).unwrap();
+                let inv_ref = f32_plan.execute_batch(&x, batch, Direction::Inverse).unwrap();
+                let inv = bfp_plan.execute_batch(&x, batch, Direction::Inverse).unwrap();
+                let rt = bfp_plan.execute_batch(&fwd, batch, Direction::Inverse).unwrap();
+                let fwd_snr = snr_db(&fwd, &fwd_ref);
+                let inv_snr = snr_db(&inv, &inv_ref);
+                let rt_snr = snr_db(&rt, &x);
+                let tag = backend.tag();
+                assert!(fwd_snr >= 60.0, "n={n} {variant:?} {tag}: fwd {fwd_snr:.1} dB");
+                assert!(inv_snr >= 60.0, "n={n} {variant:?} {tag}: inv {inv_snr:.1} dB");
+                assert!(rt_snr >= 60.0, "n={n} {variant:?} {tag}: rt {rt_snr:.1} dB");
+                printed.get_or_insert((fwd_snr, inv_snr, rt_snr));
+                per_backend.push(fwd);
+            }
+            let (f, i, r) = printed.unwrap();
+            println!("{:>7} {:>7} {:>10.1} {:>10.1} {:>10.1}", n, variant.tag(), f, i, r);
+            // Layer 3 at Bfp16: backends agree bitwise.
+            for other in &per_backend[1..] {
+                assert_eq!(per_backend[0].re, other.re, "n={n} {variant:?} bfp16 re");
+                assert_eq!(per_backend[0].im, other.im, "n={n} {variant:?} bfp16 im");
+            }
+        }
+    }
+}
+
+/// The fused Bfp16 pipeline against its own three-dispatch composition
+/// (bitwise — the codec fires at identical points), plus the pooled
+/// executor serial/parallel bitwise check, at one single-threadgroup
+/// and one four-step size.
+#[test]
+fn bfp16_fused_pipeline_matches_composed_bitwise() {
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(0xBF17);
+    for &n in &[2048usize, 16384] {
+        let batch = 2usize;
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        for &backend in CodeletBackend::compiled() {
+            let ex = planner
+                .executor_with_precision(n, Variant::Radix8, backend, Precision::Bfp16)
+                .unwrap();
+            let f = ex.execute_batch(&x, batch, Direction::Forward).unwrap();
+            let mut prod = SplitComplex::zeros(n * batch);
+            for b in 0..batch {
+                for i in 0..n {
+                    prod.set(b * n + i, f.get(b * n + i) * h.get(i));
+                }
+            }
+            let mut want = prod;
+            ex.execute_batch_into(&mut want, batch, Direction::Inverse).unwrap();
+            let mut got = x.clone();
+            ex.execute_pipeline_into(&mut got, batch, &h).unwrap();
+            assert_eq!(got.re, want.re, "n={n} {} re", backend.tag());
+            assert_eq!(got.im, want.im, "n={n} {} im", backend.tag());
+            let mut par = x.clone();
+            ex.execute_pipeline_par_into(&mut par, batch, &h).unwrap();
+            assert_eq!(par.re, got.re, "par: n={n} {}", backend.tag());
+            assert_eq!(par.im, got.im, "par: n={n} {}", backend.tag());
         }
     }
 }

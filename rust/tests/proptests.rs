@@ -2,6 +2,7 @@
 //! invariants and the FFT algebra — the DESIGN.md §8 checklist.
 
 use applefft::coordinator::{Decomposition, FftService, Planner, ServiceConfig};
+use applefft::fft::bfp::{snr_db, BfpVec, Precision};
 use applefft::fft::codelet::CodeletBackend;
 use applefft::fft::convolve::{direct_convolve, OverlapSave};
 use applefft::fft::dft::dft_batch;
@@ -159,6 +160,69 @@ fn prop_codelet_backends_bitwise_equal() {
                 .unwrap();
             assert_eq!(a.re, b.re, "re: n={n} batch={batch} {variant:?} {dir:?}");
             assert_eq!(a.im, b.im, "im: n={n} batch={batch} {variant:?} {dir:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_bfp_quantize_roundtrip_snr_at_least_60db() {
+    // The acceptance property of the block-floating-point codec: for
+    // random inputs at random scales (the shared exponent must absorb
+    // scale, that is the whole point of BFP over plain f16), one
+    // quantize -> dequantize round trip keeps SNR >= 60 dB. Empirically
+    // it sits near 74 dB; 60 is the subsystem's contract.
+    check("bfp roundtrip snr", 64, |g| {
+        let n = g.rng.between(1, 3000);
+        // Scales from 2^-20 to 2^20 — far outside plain f16's range.
+        let scale = f32::powi(2.0, g.rng.between(0, 40) as i32 - 20);
+        let x = SplitComplex {
+            re: g.rng.signal(n).iter().map(|v| v * scale).collect(),
+            im: g.rng.signal(n).iter().map(|v| v * scale).collect(),
+        };
+        let mut bre = BfpVec::new();
+        let mut bim = BfpVec::new();
+        bre.quantize_from(&x.re);
+        bim.quantize_from(&x.im);
+        let mut got = SplitComplex::zeros(n);
+        bre.dequantize_into(&mut got.re);
+        bim.dequantize_into(&mut got.im);
+        let snr = snr_db(&got, &x);
+        assert!(snr >= 60.0, "case {}: n={n} scale={scale}: snr {snr:.1} dB", g.case);
+    });
+}
+
+#[test]
+fn prop_bfp16_transform_tracks_f32_across_sizes() {
+    // Random sizes/batches/variants/directions: the Bfp16 plan stays
+    // within the quantization budget of the f32 plan on identical
+    // inputs, and the batch-parallel executor path is bitwise the
+    // serial Bfp16 path.
+    let planner = NativePlanner::new();
+    check("bfp16 vs f32 snr", 16, |g| {
+        let n = g.pow2_size(4, 13);
+        let batch = g.rng.between(1, 3);
+        let (re, im) = g.signal(n * batch);
+        let x = SplitComplex { re, im };
+        let variant = *g.rng.choose(&[Variant::Radix4, Variant::Radix8]);
+        for dir in [Direction::Forward, Direction::Inverse] {
+            let want = planner
+                .plan_with_precision(n, variant, CodeletBackend::Scalar, Precision::F32)
+                .unwrap()
+                .execute_batch(&x, batch, dir)
+                .unwrap();
+            let got = planner
+                .plan_with_precision(n, variant, CodeletBackend::Scalar, Precision::Bfp16)
+                .unwrap()
+                .execute_batch(&x, batch, dir)
+                .unwrap();
+            let snr = snr_db(&got, &want);
+            assert!(snr >= 60.0, "n={n} {variant:?} {dir:?}: snr {snr:.1} dB");
+            let ex = planner
+                .executor_with_precision(n, variant, CodeletBackend::Scalar, Precision::Bfp16)
+                .unwrap();
+            let par = ex.execute_batch_par(&x, batch, dir).unwrap();
+            assert_eq!(got.re, par.re, "par bitwise: n={n} {dir:?}");
+            assert_eq!(got.im, par.im, "par bitwise: n={n} {dir:?}");
         }
     });
 }

@@ -3,6 +3,7 @@
 //! integration-test twin of `examples/sar_range_compression.rs`.
 
 use applefft::coordinator::{FftService, ServiceConfig};
+use applefft::fft::bfp::{psnr_db, snr_db, Precision};
 use applefft::runtime::{engine::artifacts_dir, Backend};
 use applefft::sar::range::{run_scene, RangeCompressor, RangePath};
 use applefft::sar::{Chirp, Scene};
@@ -76,6 +77,52 @@ fn matched_filter_service_path_end_to_end() {
     let m = svc.drain().unwrap();
     assert!(m.mf_tiles > 0, "matched tiles must be recorded: {m:?}");
     assert!(m.matched_share() > 0.0);
+}
+
+#[test]
+fn bfp16_range_compression_holds_40db_peak_snr() {
+    // The half-precision acceptance gate: a full range-compressed image
+    // produced at Bfp16 must keep peak SNR >= 40 dB against the f32
+    // reference image (quantization noise stays ~20+ dB under even a
+    // weak focused target), on both the in-process pipeline and the
+    // batched MatchedFilter service path — and the targets must still
+    // focus at the true bins.
+    let svc = service(Backend::Native);
+    let mut rng = Rng::new(304);
+    let n = 4096;
+    let chirp = Chirp::new(100e6, 256, 0.8);
+    let scene = Scene::random(n, 5, chirp.samples, &mut rng);
+    let lines = 24;
+    let echoes = scene.echoes(&chirp, lines, &mut rng);
+    let f32_comp = RangeCompressor::new_with_precision(chirp, n, Precision::F32);
+    let bfp_comp = RangeCompressor::new_with_precision(chirp, n, Precision::Bfp16);
+    assert_eq!(bfp_comp.precision, Precision::Bfp16);
+    let reference = f32_comp.compress_local(&echoes, lines).unwrap();
+
+    // In-process fused pipeline at Bfp16.
+    let local = bfp_comp.compress_local(&echoes, lines).unwrap();
+    let psnr = psnr_db(&local, &reference);
+    let snr = snr_db(&local, &reference);
+    println!("bfp16 sar image vs f32: psnr {psnr:.1} dB, snr {snr:.1} dB (gate: psnr >= 40)");
+    assert!(psnr >= 40.0, "local bfp16 image psnr {psnr:.1} dB");
+    assert!(snr >= 40.0, "local bfp16 image snr {snr:.1} dB");
+
+    // Batched service path through a Bfp16 filter handle.
+    let handle = bfp_comp.register_filter(&svc).unwrap();
+    assert_eq!(handle.precision(), Precision::Bfp16);
+    let served = bfp_comp.compress_matched_with(&svc, &handle, &echoes, lines).unwrap();
+    let psnr = psnr_db(&served, &reference);
+    assert!(psnr >= 40.0, "matched bfp16 image psnr {psnr:.1} dB");
+    // Service and local run the same plan shape at the same precision:
+    // identical codec points, bitwise identical images.
+    assert_eq!(served.re, local.re, "service vs local bfp16 must be bitwise equal");
+    assert_eq!(served.im, local.im);
+
+    // Detection is precision-insensitive at this SNR.
+    let report = run_scene(&svc, &bfp_comp, &scene, &echoes, lines, RangePath::Matched).unwrap();
+    assert_eq!(report.detection_hits, 5, "{report:?}");
+    let m = svc.drain().unwrap();
+    assert!(m.bfp_tiles > 0, "bfp16 tiles must be recorded: {m:?}");
 }
 
 #[test]
