@@ -1,0 +1,70 @@
+//! Shard-scaling bench: blocking request throughput through the full
+//! sharded stack (batcher + worker pool + engine per shard) as the
+//! shard count grows, at the paper's acceptance size N=4096, both
+//! exchange precisions. Emits `BENCH_shard_scaling.json` at the repo
+//! root alongside the other `BENCH_*.json` CI artifacts.
+//!
+//! The workload is 128 lines per request — whole 32-line tiles at every
+//! shard count in the sweep — so the comparison measures striping, not
+//! padding. Wall-clock speedup on this CPU testbed is bounded by the
+//! host's cores (every "shard" shares them); the point of the table is
+//! the *trajectory* and the overhead of the striping tier itself, the
+//! same way the fig1 batch sweep reads.
+
+use applefft::bench::table::{BenchJson, Table};
+use applefft::bench::Benchmark;
+use applefft::coordinator::{ServiceConfig, ShardedFftService};
+use applefft::fft::bfp::Precision;
+use applefft::fft::Direction;
+use applefft::runtime::Backend;
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use applefft::util::{fft_flops, gflops};
+use std::time::Duration;
+
+fn main() {
+    let b = Benchmark::new("shard_scaling");
+    let mut json = BenchJson::new("shard_scaling");
+    let n = 4096usize;
+    let lines = 128usize; // 32-line tiles: 4/2/1 whole tiles per shard at 1/2/4 shards
+
+    for &precision in Precision::all() {
+        let title =
+            format!("Shard scaling — N={n}, {lines} lines/request, {} exchange", precision.tag());
+        let mut t =
+            Table::new(&title, &["shards", "us/request", "offered GFLOPS", "speedup vs 1 shard"]);
+        let mut base_us: Option<f64> = None;
+        for shards in [1usize, 2, 4] {
+            let svc = ShardedFftService::start(ServiceConfig {
+                backend: Backend::Native,
+                max_wait: Duration::from_micros(100),
+                workers: 2,
+                warm: false,
+                shards,
+            })
+            .expect("sharded service");
+            let mut rng = Rng::new(shards as u64);
+            let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+            let m = b.run(&format!("{} shards={shards}", precision.tag()), || {
+                svc.fft_prec(n, Direction::Forward, x.clone(), lines, precision).unwrap()
+            });
+            let us = m.median_secs() * 1e6;
+            let base = *base_us.get_or_insert(us);
+            t.row(&[
+                shards.to_string(),
+                format!("{us:.1}"),
+                format!("{:.2}", gflops(fft_flops(n) * lines as f64, m.median_secs())),
+                format!("{:.2}x", base / us),
+            ]);
+            svc.drain().expect("drain");
+        }
+        t.note("blocking round trips through the full sharded stack; CPU shards share host cores");
+        t.print();
+        json.add(&t);
+    }
+
+    match json.write_repo_root() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+}

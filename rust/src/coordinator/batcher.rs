@@ -134,6 +134,7 @@ impl AccumulatorInner {
             result,
             queue_secs,
             exec_secs: self.exec_secs,
+            completed_at: Instant::now(),
         });
     }
 }

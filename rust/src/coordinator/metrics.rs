@@ -119,6 +119,7 @@ impl Metrics {
         MetricsSnapshot {
             codelet: crate::fft::codelet::select().tag(),
             precision: crate::fft::bfp::select().tag(),
+            shards: 1,
             requests: self.requests.load(Ordering::Relaxed),
             lines_in: self.lines_in.load(Ordering::Relaxed),
             tiles_dispatched: self.tiles_dispatched.load(Ordering::Relaxed),
@@ -148,6 +149,10 @@ pub struct MetricsSnapshot {
     /// `APPLEFFT_PRECISION` selection; individual requests may pin
     /// their own, counted by `bfp_tiles`).
     pub precision: &'static str,
+    /// Worker shards behind this snapshot: 1 for a single service's own
+    /// snapshot, the summed shard count for a [`Self::merge`] of
+    /// per-shard snapshots (0 only for `Default` snapshots).
+    pub shards: u64,
     pub requests: u64,
     pub lines_in: u64,
     pub tiles_dispatched: u64,
@@ -176,6 +181,56 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// Merge per-shard snapshots into one cluster-level snapshot (the
+    /// sharded coordinator's `metrics()`): counters — tiles, lines,
+    /// FLOPs, bfp-SNR sample sums — add, `shards` adds (each per-shard
+    /// snapshot counts 1), and device busy time adds, so the merged
+    /// [`Self::gflops`] is aggregate FLOPs over aggregate device time.
+    /// Latency means are weighted across shards (queue by requests,
+    /// exec by tiles); p95s take the worst shard, which is conservative
+    /// but honest — a merged histogram would need the raw buckets the
+    /// snapshot intentionally leaves behind.
+    pub fn merge(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
+        let Some(first) = parts.first() else {
+            return MetricsSnapshot::default();
+        };
+        let mut m = MetricsSnapshot {
+            codelet: first.codelet,
+            precision: first.precision,
+            ..MetricsSnapshot::default()
+        };
+        let (mut snr_mdb, mut queue_w, mut exec_w) = (0.0f64, 0.0f64, 0.0f64);
+        for p in parts {
+            m.shards += p.shards;
+            m.requests += p.requests;
+            m.lines_in += p.lines_in;
+            m.tiles_dispatched += p.tiles_dispatched;
+            m.lines_padded += p.lines_padded;
+            m.failures += p.failures;
+            m.nominal_flops += p.nominal_flops;
+            m.mf_tiles += p.mf_tiles;
+            m.mf_nominal_flops += p.mf_nominal_flops;
+            m.bfp_tiles += p.bfp_tiles;
+            m.bfp_snr_samples += p.bfp_snr_samples;
+            snr_mdb += p.bfp_snr_mean_db * p.bfp_snr_samples as f64;
+            m.exec_total_us += p.exec_total_us;
+            queue_w += p.queue_mean_us * p.requests as f64;
+            exec_w += p.exec_mean_us * p.tiles_dispatched as f64;
+            m.queue_p95_us = m.queue_p95_us.max(p.queue_p95_us);
+            m.exec_p95_us = m.exec_p95_us.max(p.exec_p95_us);
+        }
+        if m.bfp_snr_samples > 0 {
+            m.bfp_snr_mean_db = snr_mdb / m.bfp_snr_samples as f64;
+        }
+        if m.requests > 0 {
+            m.queue_mean_us = queue_w / m.requests as f64;
+        }
+        if m.tiles_dispatched > 0 {
+            m.exec_mean_us = exec_w / m.tiles_dispatched as f64;
+        }
+        m
+    }
+
     /// Padding overhead: padded lines / dispatched lines.
     pub fn padding_ratio(&self) -> f64 {
         let dispatched = self.lines_in + self.lines_padded;
@@ -206,7 +261,7 @@ impl MetricsSnapshot {
 
     pub fn render(&self) -> String {
         format!(
-            "requests={} lines={} tiles={} padded={} ({:.1}%) failures={}\n\
+            "requests={} lines={} tiles={} padded={} ({:.1}%) failures={} shards={}\n\
              queue: mean {:.0} us, p95 {:.0} us | exec: mean {:.0} us, p95 {:.0} us\n\
              executor: {:.2} GFLOPS nominal (5*N*log2 N / busy time), {} codelets, {} default\n\
              matched-filter: {} tiles, {:.1}% of nominal FLOPs (2 FFTs + 6N per line)\n\
@@ -217,6 +272,7 @@ impl MetricsSnapshot {
             self.lines_padded,
             self.padding_ratio() * 100.0,
             self.failures,
+            self.shards,
             self.queue_mean_us,
             self.queue_p95_us,
             self.exec_mean_us,
@@ -312,6 +368,84 @@ mod tests {
         let r = s.render();
         assert!(r.contains("bfp16:"), "{r}");
         assert!(s.precision == "f32" || s.precision == "bfp16");
+    }
+
+    #[test]
+    fn merge_sums_counters_and_weights_means() {
+        let a = MetricsSnapshot {
+            codelet: "scalar",
+            precision: "f32",
+            shards: 1,
+            requests: 10,
+            lines_in: 100,
+            tiles_dispatched: 4,
+            lines_padded: 8,
+            failures: 1,
+            nominal_flops: 1_000,
+            mf_tiles: 1,
+            mf_nominal_flops: 250,
+            bfp_tiles: 2,
+            bfp_snr_samples: 1,
+            bfp_snr_mean_db: 70.0,
+            exec_total_us: 100.0,
+            queue_mean_us: 10.0,
+            queue_p95_us: 20.0,
+            exec_mean_us: 5.0,
+            exec_p95_us: 9.0,
+        };
+        let b = MetricsSnapshot {
+            shards: 1,
+            requests: 30,
+            lines_in: 300,
+            tiles_dispatched: 12,
+            nominal_flops: 3_000,
+            bfp_snr_samples: 3,
+            bfp_snr_mean_db: 60.0,
+            exec_total_us: 300.0,
+            queue_mean_us: 20.0,
+            queue_p95_us: 15.0,
+            exec_mean_us: 7.0,
+            exec_p95_us: 30.0,
+            ..a
+        };
+        let m = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(m.shards, 2);
+        assert_eq!(m.requests, 40);
+        assert_eq!(m.lines_in, 400);
+        assert_eq!(m.tiles_dispatched, 16);
+        assert_eq!(m.lines_padded, 16);
+        assert_eq!(m.failures, 2);
+        assert_eq!(m.nominal_flops, 4_000, "merged flops are the per-shard sum");
+        assert_eq!(m.mf_tiles, 2);
+        assert_eq!(m.mf_nominal_flops, 500);
+        assert_eq!(m.bfp_tiles, 4);
+        assert_eq!(m.bfp_snr_samples, 4);
+        // SNR mean is sample-weighted: (70*1 + 60*3) / 4.
+        assert!((m.bfp_snr_mean_db - 62.5).abs() < 1e-9, "{}", m.bfp_snr_mean_db);
+        // Busy time adds, so GFLOPS is aggregate flops / aggregate time.
+        assert!((m.exec_total_us - 400.0).abs() < 1e-9);
+        assert!((m.gflops() - 4_000.0 / 400e-6 / 1e9).abs() < 1e-12);
+        // queue mean: (10*10 + 20*30)/40 = 17.5; exec: (5*4 + 7*12)/16 = 6.5.
+        assert!((m.queue_mean_us - 17.5).abs() < 1e-9, "{}", m.queue_mean_us);
+        assert!((m.exec_mean_us - 6.5).abs() < 1e-9, "{}", m.exec_mean_us);
+        // p95s take the worst shard.
+        assert_eq!(m.queue_p95_us, 20.0);
+        assert_eq!(m.exec_p95_us, 30.0);
+        assert_eq!(m.codelet, "scalar");
+        // The shard count is rendered for operators.
+        assert!(m.render().contains("shards=2"), "{}", m.render());
+        // Degenerate cases.
+        assert_eq!(MetricsSnapshot::merge(&[]).shards, 0);
+        let one = MetricsSnapshot::merge(&[a]);
+        assert_eq!(one.requests, a.requests);
+        assert_eq!(one.shards, 1);
+    }
+
+    #[test]
+    fn snapshot_counts_one_shard() {
+        let m = Metrics::default();
+        assert_eq!(m.snapshot(0).shards, 1);
+        assert!(m.snapshot(0).render().contains("shards=1"));
     }
 
     #[test]

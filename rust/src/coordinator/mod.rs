@@ -34,7 +34,37 @@
 //! * [`service`] — the public facade; `drain()` returns the final
 //!   metrics snapshot including executor GFLOPS.
 //! * [`metrics`] — queue/execute latency, padding overhead, and
-//!   executor throughput in the paper's GFLOPS metric.
+//!   executor throughput in the paper's GFLOPS metric;
+//!   `MetricsSnapshot::merge` folds per-shard snapshots into one
+//!   cluster view (counter sums, weighted latency means, worst-shard
+//!   p95s, a `shards` tag).
+//! * [`shard`] — the scale-out tier: a [`shard::ShardedFftService`]
+//!   owns N full service stacks and stripes every request across them.
+//! * [`replay`] — trace-driven workload replay (open-loop latency
+//!   percentiles; `replay_sharded` adds the per-shard breakdown).
+//!
+//! # Sharding rules (the scale-out contract)
+//!
+//! The shard tier is the four-step idea applied to the *workload*
+//! instead of the transform: when traffic outgrows one device stack,
+//! split it into independent slices with a fixed recombination step.
+//! Three rules make the split invisible to clients:
+//!
+//! * **Striping** — plain-FFT request lines stripe round-robin over the
+//!   alive shards (line `l` → shard `l % alive`). Lines are
+//!   position-independent pure functions of their input, so placement
+//!   never changes bits.
+//! * **Filter affinity** — matched-filter lines all follow their
+//!   registered filter id to one home shard, preserving the
+//!   cross-request tile coalescing the batcher exists for (registration
+//!   itself fans out to every shard so any survivor can take over).
+//! * **Reassembly** — sub-responses scatter back by parent line index
+//!   and the client is answered exactly once. The invariant, enforced
+//!   by `tests/shard_integration.rs` across every request kind ×
+//!   precision × paper size × shard count 1–4: the sharded response is
+//!   **bitwise identical** to the single-service response, and a shard
+//!   death mid-trace loses or duplicates nothing (in-flight lines
+//!   requeue onto survivors; stale late responses are dropped).
 
 pub mod batcher;
 pub mod metrics;
@@ -42,8 +72,11 @@ pub mod planner;
 pub mod replay;
 pub mod request;
 pub mod service;
+pub mod shard;
 pub mod worker;
 
+pub use metrics::MetricsSnapshot;
 pub use planner::{Decomposition, Plan, Planner};
 pub use request::{FftRequest, FftResponse, FilterSpec, RequestId, RequestKind};
 pub use service::{FftService, FilterHandle, ServiceConfig};
+pub use shard::{ShardFilterHandle, ShardedFftService};

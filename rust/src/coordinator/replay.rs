@@ -1,14 +1,22 @@
 //! Trace-driven workload replay: generate or load a request trace
-//! (arrival time, size, lines, direction) and replay it against the
-//! service with open-loop timing, reporting latency percentiles and
-//! throughput — the standard serving-system evaluation the coordinator
-//! deserves (and `applefft serve --trace` exposes).
+//! (arrival time, size, lines, direction, precision) and replay it
+//! against the service — single or sharded, via [`ReplayTarget`] — with
+//! open-loop timing, reporting latency percentiles and throughput; the
+//! standard serving-system evaluation the coordinator deserves (and
+//! `applefft serve --trace` exposes). [`replay_sharded`] adds the
+//! per-shard latency breakdown, and [`replay_collect`] returns the raw
+//! responses so the shard harness can assert that the same trace is
+//! bitwise identical at every shard count.
 //!
-//! Trace file format (one request per line):
-//! `<arrival_us> <n> <lines> <fwd|inv>`
+//! Trace file format (one request per line; the trailing precision
+//! token is optional and defaults to `f32`):
+//! `<arrival_us> <n> <lines> <fwd|inv> [f32|bfp16]`
 
-use super::request::FftResponse;
+use super::metrics::MetricsSnapshot;
+use super::request::{FftResponse, RequestId};
 use super::service::FftService;
+use super::shard::ShardedFftService;
+use crate::fft::bfp::Precision;
 use crate::fft::Direction;
 use crate::util::complex::SplitComplex;
 use crate::util::rng::Rng;
@@ -24,6 +32,9 @@ pub struct TraceEntry {
     pub n: usize,
     pub lines: usize,
     pub direction: Direction,
+    /// Exchange precision the request pins (f32 unless the trace says
+    /// otherwise) — precision policies must survive sharding unchanged.
+    pub precision: Precision,
 }
 
 /// A workload trace.
@@ -58,7 +69,10 @@ impl Trace {
             };
             let lines = rng.between(1, 8);
             let direction = if rng.below(3) == 0 { Direction::Inverse } else { Direction::Forward };
-            entries.push(TraceEntry { arrival_us: t_us as u64, n, lines, direction });
+            // A quarter of the traffic pins the half-precision exchange
+            // tier, like a bandwidth-constrained client population.
+            let precision = if rng.below(4) == 0 { Precision::Bfp16 } else { Precision::F32 };
+            entries.push(TraceEntry { arrival_us: t_us as u64, n, lines, direction, precision });
         }
         Trace { entries }
     }
@@ -77,23 +91,69 @@ impl Trace {
             let n: usize = it.next().with_context(ctx)?.parse().with_context(ctx)?;
             let lines: usize = it.next().with_context(ctx)?.parse().with_context(ctx)?;
             let direction: Direction = it.next().with_context(ctx)?.parse()?;
-            entries.push(TraceEntry { arrival_us, n, lines, direction });
+            let precision: Precision = match it.next() {
+                Some(tok) => tok.parse().with_context(ctx)?,
+                None => Precision::F32,
+            };
+            entries.push(TraceEntry { arrival_us, n, lines, direction, precision });
         }
         Ok(Trace { entries })
     }
 
     pub fn to_text(&self) -> String {
-        let mut out = String::from("# arrival_us n lines direction\n");
+        let mut out = String::from("# arrival_us n lines direction precision\n");
         for e in &self.entries {
             out.push_str(&format!(
-                "{} {} {} {}\n",
+                "{} {} {} {} {}\n",
                 e.arrival_us,
                 e.n,
                 e.lines,
-                e.direction.tag()
+                e.direction.tag(),
+                e.precision.tag()
             ));
         }
         out
+    }
+}
+
+/// Anything a trace can replay against: the single service or the
+/// sharded coordinator. `submit_entry` must be asynchronous (the
+/// open-loop driver never blocks on completion); `drain_now`
+/// force-flushes partial tiles and returns the (merged) snapshot.
+pub trait ReplayTarget {
+    fn submit_entry(
+        &self,
+        e: &TraceEntry,
+        x: SplitComplex,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)>;
+    fn drain_now(&self) -> Result<MetricsSnapshot>;
+}
+
+impl ReplayTarget for FftService {
+    fn submit_entry(
+        &self,
+        e: &TraceEntry,
+        x: SplitComplex,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.submit_prec(e.n, e.direction, x, e.lines, e.precision)
+    }
+
+    fn drain_now(&self) -> Result<MetricsSnapshot> {
+        self.drain()
+    }
+}
+
+impl ReplayTarget for ShardedFftService {
+    fn submit_entry(
+        &self,
+        e: &TraceEntry,
+        x: SplitComplex,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.submit_prec(e.n, e.direction, x, e.lines, e.precision)
+    }
+
+    fn drain_now(&self) -> Result<MetricsSnapshot> {
+        self.drain()
     }
 }
 
@@ -115,7 +175,7 @@ pub struct ReplayReport {
 
 /// Open-loop replay: requests are injected at their trace arrival times
 /// regardless of completion (backpressure shows up as latency).
-pub fn replay(svc: &FftService, trace: &Trace, seed: u64) -> Result<ReplayReport> {
+pub fn replay<T: ReplayTarget>(svc: &T, trace: &Trace, seed: u64) -> Result<ReplayReport> {
     let mut rng = Rng::new(seed);
     let start = Instant::now();
     let mut inflight: Vec<(Instant, mpsc::Receiver<FftResponse>)> = Vec::new();
@@ -134,13 +194,16 @@ pub fn replay(svc: &FftService, trace: &Trace, seed: u64) -> Result<ReplayReport
             im: rng.signal(e.n * e.lines),
         };
         let sent = Instant::now();
-        let (_, rx) = svc.submit(e.n, e.direction, x, e.lines)?;
+        let (_, rx) = svc.submit_entry(e, x)?;
         inflight.push((sent, rx));
         lines += e.lines;
         flops += crate::util::fft_flops(e.n) * e.lines as f64;
     }
 
-    // Collect.
+    // Collect. Latency is measured submit -> response assembly
+    // (`completed_at`), not submit -> our sequential recv() turn — a
+    // slow early request must not inflate the recorded latency of
+    // fast later ones that finished while we were blocked on it.
     let mut latencies_us: Vec<f64> = Vec::with_capacity(inflight.len());
     let mut failures = 0usize;
     for (sent, rx) in inflight {
@@ -149,7 +212,8 @@ pub fn replay(svc: &FftService, trace: &Trace, seed: u64) -> Result<ReplayReport
                 if resp.result.is_err() {
                     failures += 1;
                 }
-                latencies_us.push(sent.elapsed().as_secs_f64() * 1e6);
+                let done = resp.completed_at.saturating_duration_since(sent);
+                latencies_us.push(done.as_secs_f64() * 1e6);
             }
             Err(_) => failures += 1,
         }
@@ -174,6 +238,79 @@ pub fn replay(svc: &FftService, trace: &Trace, seed: u64) -> Result<ReplayReport
         max_us: latencies_us.last().copied().unwrap_or(0.0),
         failures,
     })
+}
+
+/// Closed-loop replay that returns every response payload in trace
+/// order, with no pacing: the shard harness's bitwise-comparison
+/// primitive. The same `(trace, seed)` generates the same request data
+/// on every call, so collecting at different shard counts must yield
+/// identical bits ([`crate::coordinator::shard`]'s reassembly
+/// invariant). Any failed or dropped response is an error.
+pub fn replay_collect<T: ReplayTarget>(
+    svc: &T,
+    trace: &Trace,
+    seed: u64,
+) -> Result<Vec<SplitComplex>> {
+    let mut rng = Rng::new(seed);
+    let mut pending = Vec::with_capacity(trace.entries.len());
+    for e in &trace.entries {
+        let x = SplitComplex {
+            re: rng.signal(e.n * e.lines),
+            im: rng.signal(e.n * e.lines),
+        };
+        pending.push(svc.submit_entry(e, x)?.1);
+    }
+    svc.drain_now()?;
+    let mut out = Vec::with_capacity(pending.len());
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(60))
+            .with_context(|| format!("trace entry {i}: no response"))?;
+        out.push(resp.result.map_err(|m| anyhow::anyhow!("trace entry {i}: {m}"))?);
+    }
+    Ok(out)
+}
+
+/// One shard's slice of a sharded replay (from its post-drain metrics
+/// snapshot).
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    pub shard: usize,
+    pub requests: u64,
+    pub lines_in: u64,
+    pub tiles: u64,
+    pub queue_mean_us: f64,
+    pub queue_p95_us: f64,
+    pub exec_mean_us: f64,
+    pub exec_p95_us: f64,
+    pub gflops: f64,
+}
+
+/// Open-loop replay against the sharded coordinator, plus the per-shard
+/// latency-percentile breakdown (`applefft serve --trace --shards N`).
+pub fn replay_sharded(
+    svc: &ShardedFftService,
+    trace: &Trace,
+    seed: u64,
+) -> Result<(ReplayReport, Vec<ShardReport>)> {
+    let report = replay(svc, trace, seed)?;
+    svc.drain()?;
+    let shards = svc
+        .shard_metrics_by_slot()
+        .into_iter()
+        .map(|(i, m)| ShardReport {
+            shard: i,
+            requests: m.requests,
+            lines_in: m.lines_in,
+            tiles: m.tiles_dispatched,
+            queue_mean_us: m.queue_mean_us,
+            queue_p95_us: m.queue_p95_us,
+            exec_mean_us: m.exec_mean_us,
+            exec_p95_us: m.exec_p95_us,
+            gflops: m.gflops(),
+        })
+        .collect();
+    Ok((report, shards))
 }
 
 #[cfg(test)]
@@ -201,7 +338,33 @@ mod tests {
     fn parse_rejects_garbage() {
         assert!(Trace::parse("12 4096").is_err());
         assert!(Trace::parse("x y z w").is_err());
+        assert!(Trace::parse("12 256 3 fwd float64").is_err(), "bad precision token");
         assert!(Trace::parse("# comment only\n").unwrap().entries.is_empty());
+    }
+
+    #[test]
+    fn parse_precision_token_is_optional() {
+        // Old 4-token traces still parse (precision defaults to f32)...
+        let t = Trace::parse("10 256 3 fwd\n20 512 2 inv bfp16\n").unwrap();
+        assert_eq!(t.entries[0].precision, Precision::F32);
+        assert_eq!(t.entries[1].precision, Precision::Bfp16);
+        assert_eq!(t.entries[1].direction, Direction::Inverse);
+        // ...and the emitted format always carries the token.
+        assert!(t.to_text().contains("20 512 2 inv bfp16"), "{}", t.to_text());
+    }
+
+    fn fwd_trace(requests: u64, n: usize, lines: usize) -> Trace {
+        Trace {
+            entries: (0..requests)
+                .map(|i| TraceEntry {
+                    arrival_us: i * 500,
+                    n,
+                    lines,
+                    direction: Direction::Forward,
+                    precision: Precision::F32,
+                })
+                .collect(),
+        }
     }
 
     #[test]
@@ -211,23 +374,43 @@ mod tests {
             max_wait: Duration::from_millis(1),
             workers: 2,
             warm: false,
+            shards: 1,
         })
         .unwrap();
-        let trace = Trace {
-            entries: (0..20)
-                .map(|i| TraceEntry {
-                    arrival_us: i * 500,
-                    n: 256,
-                    lines: 3,
-                    direction: Direction::Forward,
-                })
-                .collect(),
-        };
-        let report = replay(&svc, &trace, 3).unwrap();
+        let report = replay(&svc, &fwd_trace(20, 256, 3), 3).unwrap();
         assert_eq!(report.requests, 20);
         assert_eq!(report.failures, 0);
         assert_eq!(report.lines, 60);
         assert!(report.p50_us > 0.0);
         assert!(report.p99_us >= report.p50_us);
+    }
+
+    #[test]
+    fn replay_sharded_reports_per_shard_percentiles() {
+        let svc = crate::coordinator::shard::ShardedFftService::start_native(2).unwrap();
+        let (report, shards) = replay_sharded(&svc, &fwd_trace(12, 256, 4), 4).unwrap();
+        assert_eq!(report.requests, 12);
+        assert_eq!(report.failures, 0);
+        assert_eq!(shards.len(), 2);
+        // Round-robin striping: both shards saw work.
+        for s in &shards {
+            assert!(s.requests > 0, "shard {} idle: {s:?}", s.shard);
+            assert!(s.lines_in > 0);
+            assert!(s.exec_p95_us > 0.0);
+        }
+    }
+
+    #[test]
+    fn replay_collect_is_shard_count_invariant() {
+        let single = crate::coordinator::shard::ShardedFftService::start_native(1).unwrap();
+        let sharded = crate::coordinator::shard::ShardedFftService::start_native(3).unwrap();
+        let trace = fwd_trace(6, 512, 5);
+        let want = replay_collect(&single, &trace, 9).unwrap();
+        let got = replay_collect(&sharded, &trace, 9).unwrap();
+        assert_eq!(want.len(), got.len());
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a.re, b.re, "entry {i} re");
+            assert_eq!(a.im, b.im, "entry {i} im");
+        }
     }
 }

@@ -42,6 +42,18 @@ impl RequestKind {
             RequestKind::MatchedFilter(_) => "matched",
         }
     }
+
+    /// Shard-routing affinity ([`crate::coordinator::shard`]): plain FFT
+    /// lines are position-independent and stripe round-robin (`None`),
+    /// while matched-filter lines carry the registered filter id — all
+    /// traffic through one registration must land on one shard so it
+    /// keeps coalescing into shared `rangecomp*` tiles there.
+    pub fn shard_affinity(&self) -> Option<u64> {
+        match self {
+            RequestKind::Fft(_) => None,
+            RequestKind::MatchedFilter(spec) => Some(spec.id),
+        }
+    }
 }
 
 /// A client request: `lines` independent `n`-point transforms (or
@@ -63,23 +75,24 @@ pub struct FftRequest {
     pub reply: mpsc::Sender<FftResponse>,
 }
 
+/// Shape rules shared by the single service's request validation and
+/// the sharded front door ([`crate::coordinator::shard`]) — one source
+/// of truth for the supported size range and payload geometry.
+pub(crate) fn validate_shape(n: usize, lines: usize, payload: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(lines > 0, "request has zero lines");
+    anyhow::ensure!(payload == n * lines, "payload {payload} != n({n}) x lines({lines})");
+    anyhow::ensure!(
+        n.is_power_of_two() && (256..=16384).contains(&n),
+        "unsupported size {n} (supported: 256..16384 pow2)"
+    );
+    Ok(())
+}
+
 impl FftRequest {
     pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(self.lines > 0, "request {} has zero lines", self.id);
-        anyhow::ensure!(
-            self.data.len() == self.n * self.lines,
-            "request {}: payload {} != n({}) x lines({})",
-            self.id,
-            self.data.len(),
-            self.n,
-            self.lines
-        );
-        anyhow::ensure!(
-            self.n.is_power_of_two() && (256..=16384).contains(&self.n),
-            "request {}: unsupported size {} (supported: 256..16384 pow2)",
-            self.id,
-            self.n
-        );
+        use anyhow::Context;
+        validate_shape(self.n, self.lines, self.data.len())
+            .with_context(|| format!("request {}", self.id))?;
         if let RequestKind::MatchedFilter(spec) = &self.kind {
             anyhow::ensure!(
                 spec.spectrum.len() == self.n,
@@ -103,6 +116,11 @@ pub struct FftResponse {
     pub queue_secs: f64,
     /// Time spent executing the tile on the engine.
     pub exec_secs: f64,
+    /// When the response was assembled (the last line came home). Lets
+    /// latency consumers ([`crate::coordinator::replay`]) measure
+    /// completion without being skewed by when they got around to
+    /// receiving from the channel.
+    pub completed_at: Instant,
 }
 
 #[cfg(test)]
@@ -156,5 +174,15 @@ mod tests {
         assert!(r.validate().is_err());
         assert_eq!(r.kind.tag(), "matched");
         assert_eq!(RequestKind::Fft(Direction::Inverse).tag(), "inv");
+    }
+
+    #[test]
+    fn shard_affinity_follows_filter_id() {
+        assert_eq!(RequestKind::Fft(Direction::Forward).shard_affinity(), None);
+        let kind = RequestKind::MatchedFilter(FilterSpec {
+            id: 42,
+            spectrum: Arc::new(SplitComplex::zeros(256)),
+        });
+        assert_eq!(kind.shard_affinity(), Some(42));
     }
 }

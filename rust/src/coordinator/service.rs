@@ -45,6 +45,12 @@ impl FilterHandle {
     pub fn precision(&self) -> Precision {
         self.precision
     }
+
+    /// The underlying queue-key spec (the sharded coordinator routes
+    /// per-shard sub-requests through it).
+    pub(crate) fn spec(&self) -> &FilterSpec {
+        &self.spec
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -57,6 +63,31 @@ pub struct ServiceConfig {
     /// Eagerly compile every artifact at startup (trades ~10 s startup
     /// for no first-request compile spike; see EXPERIMENTS.md §Perf).
     pub warm: bool,
+    /// Worker shards a
+    /// [`ShardedFftService`](crate::coordinator::shard::ShardedFftService)
+    /// stripes request lines across — each shard is a full
+    /// worker + engine + batcher + metrics stack. A plain [`FftService`]
+    /// is always exactly one such stack and ignores this knob. Defaults
+    /// to `APPLEFFT_SHARDS` (clamped to >= 1), else 1.
+    pub shards: usize,
+}
+
+impl ServiceConfig {
+    /// The `APPLEFFT_SHARDS` default shard count: read fresh on every
+    /// call, >= 1, falling back to 1 on unset or unparsable values.
+    pub fn default_shards() -> usize {
+        Self::parse_shards(std::env::var("APPLEFFT_SHARDS").ok().as_deref())
+    }
+
+    /// Pure core of [`Self::default_shards`], separated so tests cover
+    /// the parsing without mutating process environment (`set_var` in a
+    /// parallel test binary races concurrent `env::var` readers).
+    fn parse_shards(value: Option<&str>) -> usize {
+        value
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&s| s >= 1)
+            .unwrap_or(1)
+    }
 }
 
 impl Default for ServiceConfig {
@@ -66,6 +97,7 @@ impl Default for ServiceConfig {
             max_wait: Duration::from_millis(2),
             workers: 2,
             warm: false,
+            shards: ServiceConfig::default_shards(),
         }
     }
 }
@@ -172,6 +204,27 @@ impl FftService {
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
+        self.submit_routed(n, kind, precision, data, lines, id, tx)?;
+        Ok((id, rx))
+    }
+
+    /// Submission with a caller-minted request id and a caller-owned
+    /// reply channel: the sharded coordinator's entry point
+    /// ([`super::shard`]), where sub-requests on many shards all reply
+    /// into one collector channel and the id keys the reassembly table.
+    /// Ids only have to be unique per reply channel — a shard's own
+    /// counter and a parent's sub-request counter never meet.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn submit_routed(
+        &self,
+        n: usize,
+        kind: RequestKind,
+        precision: Precision,
+        data: SplitComplex,
+        lines: usize,
+        id: RequestId,
+        reply: mpsc::Sender<FftResponse>,
+    ) -> Result<()> {
         let req = FftRequest {
             id,
             n,
@@ -180,13 +233,12 @@ impl FftService {
             data,
             lines,
             submitted_at: Instant::now(),
-            reply: tx,
+            reply,
         };
         req.validate()?;
         self.admit_tx
             .send(Op::Submit(req))
-            .map_err(|_| anyhow::anyhow!("service has shut down"))?;
-        Ok((id, rx))
+            .map_err(|_| anyhow::anyhow!("service has shut down"))
     }
 
     /// Async submission at the process-default precision: returns the
@@ -367,8 +419,28 @@ mod tests {
             max_wait: Duration::from_millis(1),
             workers: 2,
             warm: false,
+            shards: 1,
         })
         .unwrap()
+    }
+
+    #[test]
+    fn shard_count_parsing() {
+        // Pure-function test: no env mutation (set_var would race
+        // concurrent env::var readers in the parallel test binary).
+        assert_eq!(ServiceConfig::parse_shards(None), 1);
+        assert_eq!(ServiceConfig::parse_shards(Some("4")), 4);
+        assert_eq!(ServiceConfig::parse_shards(Some(" 2 ")), 2, "whitespace tolerated");
+        assert_eq!(ServiceConfig::parse_shards(Some("0")), 1, "clamped to >= 1");
+        assert_eq!(ServiceConfig::parse_shards(Some("garbage")), 1);
+        assert_eq!(ServiceConfig::parse_shards(Some("")), 1);
+        // The env-reading wrapper agrees with the parser on whatever
+        // the environment currently says (read-only).
+        let current = std::env::var("APPLEFFT_SHARDS").ok();
+        assert_eq!(
+            ServiceConfig::default_shards(),
+            ServiceConfig::parse_shards(current.as_deref())
+        );
     }
 
     #[test]

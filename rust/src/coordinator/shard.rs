@@ -1,0 +1,866 @@
+//! Sharded coordinator: stripe request lines across N independent
+//! worker shards, reassemble by line index, and stay **bitwise
+//! identical** to the single-service answer at every shard count.
+//!
+//! Each shard is a full [`FftService`] — its own batcher thread, worker
+//! pool, engine/device thread, and metrics — so a
+//! [`ShardedFftService`] is the in-process model of the multi-node
+//! line-striped deployment the ROADMAP's serving north-star needs: the
+//! same shape as the four-step decomposition, one level up (the
+//! four-step path splits a *transform* that outgrew one threadgroup;
+//! the shard tier splits a *workload* that outgrows one device).
+//!
+//! Routing rules:
+//!
+//! * **Plain FFT** — per-line round-robin: parent line `l` rides the
+//!   `l % alive`-th live shard. Lines are position-independent pure
+//!   functions of their input (the conformance harness pins this:
+//!   serial == batch-parallel == any tile placement, bitwise), so
+//!   striping changes *where* a line is computed, never its bits.
+//! * **MatchedFilter** — filter-affine: all lines through one
+//!   registered handle land on one home shard
+//!   ([`RequestKind::shard_affinity`]), so same-filter traffic keeps
+//!   coalescing into shared `rangecomp*` tiles there. Registration
+//!   fans out to every shard up front; if the home shard dies the
+//!   handle resolves to the next survivor.
+//! * **Range compression** (engine-direct) — striped like plain FFT,
+//!   executed on all shards concurrently.
+//!
+//! Reassembly invariant: responses are scattered back by parent line
+//! index into a per-request accumulator that replies exactly once. A
+//! shard death requeues that shard's in-flight sub-requests onto
+//! survivors under fresh sub ids; any response the dying shard still
+//! delivers finds its id gone from the reassembly table and is
+//! dropped — so clients see every response exactly once, never zero,
+//! never twice (`tests/shard_integration.rs` enforces this).
+
+use super::metrics::MetricsSnapshot;
+use super::request::{FftResponse, RequestId, RequestKind};
+use super::service::{FftService, FilterHandle, ServiceConfig};
+use crate::fft::bfp::{self, Precision};
+use crate::fft::Direction;
+use crate::runtime::Backend;
+use crate::util::complex::SplitComplex;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+/// Round-robin line striping: parent line `l` is assigned to lane
+/// `l % lanes`. Returns one (possibly empty) parent-line-index list per
+/// lane, each in increasing order — the deterministic reassembly map.
+fn stripe_lines(lines: usize, lanes: usize) -> Vec<Vec<usize>> {
+    let mut maps = vec![Vec::new(); lanes];
+    for l in 0..lines {
+        maps[l % lanes].push(l);
+    }
+    maps
+}
+
+/// Gather the mapped lines of a `(lines, n)` payload into a contiguous
+/// sub-payload, in map order.
+fn gather_lines(data: &SplitComplex, n: usize, line_map: &[usize]) -> SplitComplex {
+    let mut out = SplitComplex::zeros(n * line_map.len());
+    for (j, &l) in line_map.iter().enumerate() {
+        out.re[j * n..(j + 1) * n].copy_from_slice(&data.re[l * n..(l + 1) * n]);
+        out.im[j * n..(j + 1) * n].copy_from_slice(&data.im[l * n..(l + 1) * n]);
+    }
+    out
+}
+
+/// Inverse of [`gather_lines`]: scatter the contiguous sub-payload's
+/// lines back to their mapped positions in the parent buffer.
+fn scatter_lines(out: &mut SplitComplex, src: &SplitComplex, n: usize, line_map: &[usize]) {
+    for (j, &l) in line_map.iter().enumerate() {
+        out.re[l * n..(l + 1) * n].copy_from_slice(&src.re[j * n..(j + 1) * n]);
+        out.im[l * n..(l + 1) * n].copy_from_slice(&src.im[j * n..(j + 1) * n]);
+    }
+}
+
+/// Per-request reassembly accumulator: sub-responses scatter their lines
+/// back by parent line index; the client is answered exactly once, when
+/// every line is home (or on the first failure).
+struct Parent {
+    id: RequestId,
+    n: usize,
+    total_lines: usize,
+    state: Mutex<ParentState>,
+}
+
+struct ParentState {
+    out: SplitComplex,
+    filled_lines: usize,
+    queue_secs: f64,
+    exec_secs: f64,
+    failed: Option<String>,
+    responded: bool,
+    /// Kept inside the mutex so `Parent` is `Sync` on every toolchain
+    /// (bare `mpsc::Sender` only became `Sync` on newer rustc).
+    reply: mpsc::Sender<FftResponse>,
+}
+
+impl Parent {
+    fn new(id: RequestId, n: usize, lines: usize, reply: mpsc::Sender<FftResponse>) -> Arc<Parent> {
+        Arc::new(Parent {
+            id,
+            n,
+            total_lines: lines,
+            state: Mutex::new(ParentState {
+                out: SplitComplex::zeros(n * lines),
+                filled_lines: 0,
+                queue_secs: 0.0,
+                exec_secs: 0.0,
+                failed: None,
+                responded: false,
+                reply,
+            }),
+        })
+    }
+
+    /// Scatter a sub-response's lines back to their parent indices.
+    fn fill(&self, src: &SplitComplex, line_map: &[usize], queue_secs: f64, exec_secs: f64) {
+        let mut st = self.state.lock().unwrap();
+        if st.responded {
+            // A sibling lane already failed the request: the client was
+            // answered and the output buffer taken. A late successful
+            // sub-response has nowhere to land — scattering into the
+            // emptied buffer would panic the collector thread and hang
+            // the whole service.
+            return;
+        }
+        scatter_lines(&mut st.out, src, self.n, line_map);
+        st.filled_lines += line_map.len();
+        st.queue_secs = st.queue_secs.max(queue_secs);
+        st.exec_secs = st.exec_secs.max(exec_secs);
+        self.maybe_respond(&mut st);
+    }
+
+    fn fail(&self, message: &str) {
+        let mut st = self.state.lock().unwrap();
+        st.failed = Some(message.to_string());
+        st.filled_lines = self.total_lines;
+        self.maybe_respond(&mut st);
+    }
+
+    fn maybe_respond(&self, st: &mut ParentState) {
+        if st.responded || st.filled_lines < self.total_lines {
+            return;
+        }
+        st.responded = true;
+        let result = match st.failed.take() {
+            Some(msg) => Err(msg),
+            None => Ok(std::mem::take(&mut st.out)),
+        };
+        // Receiver may have hung up; that's the client's business.
+        let _ = st.reply.send(FftResponse {
+            id: self.id,
+            result,
+            queue_secs: st.queue_secs,
+            exec_secs: st.exec_secs,
+            completed_at: std::time::Instant::now(),
+        });
+    }
+}
+
+/// One sub-request in flight on a shard. The payload is retained until
+/// the sub-response lands so a shard death can requeue it verbatim onto
+/// a survivor — the same price the batcher itself pays (its `Pending`
+/// queue holds a copy until tiling), and exactly what a multi-node
+/// deployment would have to buffer to resubmit. Single-shard services
+/// skip the retention entirely: with no survivor to requeue onto, the
+/// payload moves straight through ([`ShardedFftService::dispatch`]).
+struct SubEntry {
+    parent: Arc<Parent>,
+    /// Parent line index of each sub-payload line, in order.
+    line_map: Vec<usize>,
+    /// Slot index of the shard currently carrying this sub-request.
+    shard: usize,
+    n: usize,
+    kind: RequestKind,
+    precision: Precision,
+    data: SplitComplex,
+    /// True once a shard death has requeued this entry: its next
+    /// admission is a re-admission, compensated in the merged metrics.
+    requeued: bool,
+}
+
+type Inflight = Arc<Mutex<HashMap<RequestId, SubEntry>>>;
+
+struct Inner {
+    /// One slot per shard; `None` marks a dead shard.
+    slots: Vec<Mutex<Option<FftService>>>,
+    inflight: Inflight,
+    /// Mints parent request ids and sub-request ids from one sequence.
+    next_id: AtomicU64,
+    /// Every sub-request replies into this channel; the collector
+    /// thread demuxes by sub id. (Mutex-wrapped so `Inner` is `Sync`
+    /// without leaning on `mpsc::Sender`'s `Sync`-ness.)
+    collect_tx: Mutex<mpsc::Sender<FftResponse>>,
+    /// Final snapshots of killed shards, folded into merged metrics.
+    dead: Mutex<Vec<MetricsSnapshot>>,
+    /// Requests failed at the sharding tier itself (lines that could
+    /// not be placed on any shard) — the per-shard `failures` counters
+    /// never see these, so the merged snapshot adds them back.
+    failures: AtomicU64,
+    /// Sub-requests (and their line counts) re-admitted to a survivor
+    /// after a shard death. The dead shard's final snapshot already
+    /// counted their original admission, so the merged snapshot
+    /// subtracts these to keep `requests`/`lines_in` ≈ unique client
+    /// traffic (approximate only across a kill/submit race).
+    requeued_requests: AtomicU64,
+    requeued_lines: AtomicU64,
+    backend_used: Backend,
+}
+
+/// A filter registered on every shard of a [`ShardedFftService`]. The
+/// `route` field is the registration's home shard: all matched-filter
+/// traffic through this handle lands there (while it lives), so lines
+/// from different requests keep coalescing into shared tiles.
+#[derive(Clone, Debug)]
+pub struct ShardFilterHandle {
+    n: usize,
+    precision: Precision,
+    per_shard: Vec<Option<FilterHandle>>,
+    route: usize,
+}
+
+impl ShardFilterHandle {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Home shard slot this handle's traffic routes to first.
+    pub fn route(&self) -> usize {
+        self.route
+    }
+
+    /// Number of shards holding a live registration of this filter.
+    pub fn registrations(&self) -> usize {
+        self.per_shard.iter().filter(|h| h.is_some()).count()
+    }
+
+    /// First alive shard with a registration, scanning from the home
+    /// slot — the filter-affine routing rule.
+    fn resolve(&self, svc: &ShardedFftService) -> Result<(usize, &FilterHandle)> {
+        let count = self.per_shard.len();
+        anyhow::ensure!(count == svc.shard_count(), "filter handle from a different service");
+        for k in 0..count {
+            let i = (self.route + k) % count;
+            if let Some(h) = &self.per_shard[i] {
+                if svc.shard(i).is_some() {
+                    return Ok((i, h));
+                }
+            }
+        }
+        anyhow::bail!("no alive shard holds this filter registration")
+    }
+}
+
+/// N independent [`FftService`] shards behind one service interface —
+/// see the module docs for the striping/affinity/reassembly rules.
+/// Cheap to clone.
+#[derive(Clone)]
+pub struct ShardedFftService {
+    inner: Arc<Inner>,
+}
+
+impl ShardedFftService {
+    /// Start `config.shards` (>= 1) full service stacks. Each shard gets
+    /// the same backend/wait/worker/warm configuration.
+    pub fn start(config: ServiceConfig) -> Result<ShardedFftService> {
+        let count = config.shards.max(1);
+        let mut slots = Vec::with_capacity(count);
+        for i in 0..count {
+            let svc = FftService::start(ServiceConfig { shards: 1, ..config.clone() })
+                .with_context(|| format!("starting shard {i}/{count}"))?;
+            slots.push(Mutex::new(Some(svc)));
+        }
+        let backend_used = slots[0].lock().unwrap().as_ref().unwrap().engine().backend();
+        let inflight: Inflight = Arc::new(Mutex::new(HashMap::new()));
+        let (tx, rx) = mpsc::channel::<FftResponse>();
+        let table = inflight.clone();
+        std::thread::Builder::new()
+            .name("applefft-shard-collect".to_string())
+            .spawn(move || collector(rx, table))
+            .context("spawning shard collector thread")?;
+        Ok(ShardedFftService {
+            inner: Arc::new(Inner {
+                slots,
+                inflight,
+                next_id: AtomicU64::new(1),
+                collect_tx: Mutex::new(tx),
+                dead: Mutex::new(Vec::new()),
+                failures: AtomicU64::new(0),
+                requeued_requests: AtomicU64::new(0),
+                requeued_lines: AtomicU64::new(0),
+                backend_used,
+            }),
+        })
+    }
+
+    /// Total shard slots (alive + dead).
+    pub fn shard_count(&self) -> usize {
+        self.inner.slots.len()
+    }
+
+    /// Shards still serving.
+    pub fn alive_count(&self) -> usize {
+        self.alive().len()
+    }
+
+    /// Backend every shard's engine resolved to at startup.
+    pub fn backend(&self) -> Backend {
+        self.inner.backend_used
+    }
+
+    /// Artifact batch-tile of the shards (uniform across them).
+    pub fn batch_tile(&self) -> usize {
+        for i in 0..self.shard_count() {
+            if let Some(svc) = self.shard(i) {
+                return svc.batch_tile();
+            }
+        }
+        0
+    }
+
+    fn alive(&self) -> Vec<usize> {
+        (0..self.inner.slots.len())
+            .filter(|&i| self.inner.slots[i].lock().unwrap().is_some())
+            .collect()
+    }
+
+    /// Clone the service handle of slot `i` (None if dead).
+    fn shard(&self, i: usize) -> Option<FftService> {
+        self.inner.slots[i].lock().unwrap().clone()
+    }
+
+    /// Slot `*at` if alive, else the next alive slot (wrapping); updates
+    /// `*at` to the slot actually chosen.
+    fn shard_or_next(&self, at: &mut usize) -> Option<FftService> {
+        let count = self.inner.slots.len();
+        for k in 0..count {
+            let i = (*at + k) % count;
+            if let Some(svc) = self.shard(i) {
+                *at = i;
+                return Some(svc);
+            }
+        }
+        None
+    }
+
+    /// Place one sub-request on its assigned shard, walking to the next
+    /// survivor if that shard dies underfoot. The entry sits in the
+    /// inflight table *before* the shard sees it, so a concurrent
+    /// [`Self::kill_shard`] can always find and requeue it; if the kill
+    /// got there first (`remove` misses), ownership already moved and
+    /// this dispatch stops. Fails the parent only when no shard is left.
+    fn dispatch(&self, mut entry: SubEntry) {
+        let count = self.inner.slots.len();
+        let mut last_err = String::from("no alive shards");
+        for _attempt in 0..count.max(1) {
+            let Some(svc) = self.shard_or_next(&mut entry.shard) else { break };
+            let sub_id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+            let reply = self.inner.collect_tx.lock().unwrap().clone();
+            let (n, lines, precision) = (entry.n, entry.line_map.len(), entry.precision);
+            let kind = entry.kind.clone();
+            // With at most one alive shard there is nobody to requeue
+            // onto (shards never resurrect), so keep no requeue copy —
+            // the payload moves through instead of being cloned. This
+            // is the hot path of the default `serve` configuration and
+            // of any service degraded to its last survivor.
+            let payload = if self.alive().len() <= 1 {
+                std::mem::take(&mut entry.data)
+            } else {
+                entry.data.clone()
+            };
+            let was_requeued = entry.requeued;
+            self.inner.inflight.lock().unwrap().insert(sub_id, entry);
+            match svc.submit_routed(n, kind, precision, payload, lines, sub_id, reply) {
+                Ok(()) => {
+                    if was_requeued {
+                        // The dead shard's final snapshot already
+                        // counted this sub-request's first admission;
+                        // record the re-admission so merged metrics
+                        // can compensate.
+                        self.inner.requeued_requests.fetch_add(1, Ordering::Relaxed);
+                        self.inner.requeued_lines.fetch_add(lines as u64, Ordering::Relaxed);
+                    }
+                    return;
+                }
+                Err(e) => {
+                    last_err = format!("{e:#}");
+                    // Reclaim the entry and retry on the next slot. A
+                    // miss means a concurrent kill already requeued it.
+                    let Some(mut back) = self.inner.inflight.lock().unwrap().remove(&sub_id)
+                    else {
+                        return;
+                    };
+                    back.shard = (back.shard + 1) % count;
+                    entry = back;
+                }
+            }
+        }
+        // A placement failure happens at this tier, not inside any
+        // shard — count it here or the merged snapshot would show a
+        // clean service that failed requests.
+        self.inner.failures.fetch_add(1, Ordering::Relaxed);
+        entry
+            .parent
+            .fail(&format!("request lines could not be placed on any shard: {last_err}"));
+    }
+
+    /// Front-door shape check — the same rules the per-shard request
+    /// validation applies ([`super::request::validate_shape`]), run
+    /// here too so malformed requests fail synchronously instead of as
+    /// an async per-lane error.
+    fn validate_shape(&self, n: usize, data: &SplitComplex, lines: usize) -> Result<()> {
+        super::request::validate_shape(n, lines, data.len())
+    }
+
+    /// Async submission at the process-default precision.
+    pub fn submit(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.submit_prec(n, direction, data, lines, bfp::select())
+    }
+
+    /// Async submission with an explicit precision policy: lines stripe
+    /// round-robin over the alive shards and reassemble by line index —
+    /// the response is bitwise the single-service response.
+    pub fn submit_prec(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+        precision: Precision,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.validate_shape(n, &data, lines)?;
+        let alive = self.alive();
+        anyhow::ensure!(!alive.is_empty(), "all shards dead");
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let parent = Parent::new(id, n, lines, tx);
+        if alive.len() == 1 {
+            // Single-lane stripe is the identity: skip the gather copy
+            // and hand the payload straight to the one shard.
+            self.dispatch(SubEntry {
+                parent,
+                line_map: (0..lines).collect(),
+                shard: alive[0],
+                n,
+                kind: RequestKind::Fft(direction),
+                precision,
+                data,
+                requeued: false,
+            });
+            return Ok((id, rx));
+        }
+        for (lane, line_map) in stripe_lines(lines, alive.len()).into_iter().enumerate() {
+            if line_map.is_empty() {
+                continue;
+            }
+            let payload = gather_lines(&data, n, &line_map);
+            self.dispatch(SubEntry {
+                parent: parent.clone(),
+                line_map,
+                shard: alive[lane],
+                n,
+                kind: RequestKind::Fft(direction),
+                precision,
+                data: payload,
+                requeued: false,
+            });
+        }
+        Ok((id, rx))
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn fft(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<SplitComplex> {
+        self.fft_prec(n, direction, data, lines, bfp::select())
+    }
+
+    /// Blocking convenience with an explicit precision policy.
+    pub fn fft_prec(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+        precision: Precision,
+    ) -> Result<SplitComplex> {
+        let (_, rx) = self.submit_prec(n, direction, data, lines, precision)?;
+        let resp = rx.recv().context("sharded service dropped the request")?;
+        resp.result.map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Register a filter on **every** alive shard (fan-out), at the
+    /// process-default precision.
+    pub fn register_filter(&self, n: usize, spectrum: SplitComplex) -> Result<ShardFilterHandle> {
+        self.register_filter_prec(n, spectrum, bfp::select())
+    }
+
+    /// [`Self::register_filter`] with the handle's precision pinned. The
+    /// home shard (`route`) is derived from the first registration's
+    /// process-global id, spreading distinct filters across shards while
+    /// keeping each filter's traffic together.
+    pub fn register_filter_prec(
+        &self,
+        n: usize,
+        spectrum: SplitComplex,
+        precision: Precision,
+    ) -> Result<ShardFilterHandle> {
+        let count = self.inner.slots.len();
+        let mut per_shard = Vec::with_capacity(count);
+        let mut route_seed: Option<u64> = None;
+        for i in 0..count {
+            match self.shard(i) {
+                Some(svc) => {
+                    let h = svc.register_filter_prec(n, spectrum.clone(), precision)?;
+                    route_seed.get_or_insert(h.id());
+                    per_shard.push(Some(h));
+                }
+                None => per_shard.push(None),
+            }
+        }
+        let seed = route_seed.context("all shards dead")?;
+        Ok(ShardFilterHandle { n, precision, per_shard, route: (seed as usize) % count })
+    }
+
+    /// Async matched-filter submission: filter-affine — every line goes
+    /// to the handle's home shard so same-filter requests coalesce.
+    pub fn submit_matched(
+        &self,
+        filter: &ShardFilterHandle,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.validate_shape(filter.n, &data, lines)?;
+        let (home, handle) = filter.resolve(self)?;
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let parent = Parent::new(id, filter.n, lines, tx);
+        self.dispatch(SubEntry {
+            parent,
+            line_map: (0..lines).collect(),
+            shard: home,
+            n: filter.n,
+            kind: RequestKind::MatchedFilter(handle.spec().clone()),
+            precision: filter.precision,
+            data,
+            requeued: false,
+        });
+        Ok((id, rx))
+    }
+
+    /// Blocking matched-filter convenience: submit and wait.
+    pub fn matched_filter(
+        &self,
+        filter: &ShardFilterHandle,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<SplitComplex> {
+        let (_, rx) = self.submit_matched(filter, data, lines)?;
+        let resp = rx.recv().context("sharded service dropped the request")?;
+        resp.result.map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Engine-direct fused range compression, striped round-robin over
+    /// the alive shards and executed concurrently; reassembled by line
+    /// index, so bitwise the single-engine result.
+    pub fn range_compress(
+        &self,
+        x: &SplitComplex,
+        h: &SplitComplex,
+        n: usize,
+        batch: usize,
+    ) -> Result<SplitComplex> {
+        self.range_compress_prec(x, h, n, batch, bfp::select())
+    }
+
+    /// [`Self::range_compress`] with the exchange precision pinned.
+    pub fn range_compress_prec(
+        &self,
+        x: &SplitComplex,
+        h: &SplitComplex,
+        n: usize,
+        batch: usize,
+        precision: Precision,
+    ) -> Result<SplitComplex> {
+        self.validate_shape(n, x, batch)?;
+        // Clone the alive handles up front: a concurrent kill cannot
+        // invalidate them (the engine lives as long as any handle).
+        let services: Vec<FftService> =
+            (0..self.inner.slots.len()).filter_map(|i| self.shard(i)).collect();
+        anyhow::ensure!(!services.is_empty(), "all shards dead");
+        let maps = stripe_lines(batch, services.len());
+        let mut results: Vec<(usize, Result<SplitComplex>)> = Vec::new();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (lane, line_map) in maps.iter().enumerate() {
+                if line_map.is_empty() {
+                    continue;
+                }
+                let svc = &services[lane];
+                let sub = gather_lines(x, n, line_map);
+                let lines = line_map.len();
+                handles.push((
+                    lane,
+                    scope.spawn(move || svc.range_compress_prec(&sub, h, n, lines, precision)),
+                ));
+            }
+            for (lane, jh) in handles {
+                results.push((lane, jh.join().expect("range-compress worker panicked")));
+            }
+        });
+        let mut out = SplitComplex::zeros(n * batch);
+        for (lane, res) in results {
+            let sub = res?;
+            scatter_lines(&mut out, &sub, n, &maps[lane]);
+        }
+        Ok(out)
+    }
+
+    /// Force-flush every alive shard's partial tiles; returns the merged
+    /// post-drain snapshot.
+    pub fn drain(&self) -> Result<MetricsSnapshot> {
+        for i in 0..self.inner.slots.len() {
+            if let Some(svc) = self.shard(i) {
+                svc.drain()?;
+            }
+        }
+        Ok(self.metrics())
+    }
+
+    /// Merged metrics across all shards, dead ones included (their final
+    /// snapshot is captured at kill time — tiles the dying shard drains
+    /// *after* the kill are not counted). Two coordinator-tier
+    /// adjustments keep the merged view honest: placement failures
+    /// (which no shard ever saw) are added to `failures`, and
+    /// re-admissions caused by shard-death requeues are subtracted from
+    /// `requests`/`lines_in` so they approximate unique client traffic.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let mut parts = self.inner.dead.lock().unwrap().clone();
+        parts.extend(self.shard_metrics());
+        let mut m = MetricsSnapshot::merge(&parts);
+        m.failures += self.inner.failures.load(Ordering::Relaxed);
+        m.requests =
+            m.requests.saturating_sub(self.inner.requeued_requests.load(Ordering::Relaxed));
+        m.lines_in = m.lines_in.saturating_sub(self.inner.requeued_lines.load(Ordering::Relaxed));
+        m
+    }
+
+    /// Per-shard snapshots of the alive shards, in slot order (the
+    /// per-shard latency report `replay_sharded` prints).
+    pub fn shard_metrics(&self) -> Vec<MetricsSnapshot> {
+        self.shard_metrics_by_slot().into_iter().map(|(_, m)| m).collect()
+    }
+
+    /// Like [`Self::shard_metrics`], but each snapshot is paired with
+    /// its true slot index — after a shard death the alive list has
+    /// holes, and reports must not relabel the survivors.
+    pub fn shard_metrics_by_slot(&self) -> Vec<(usize, MetricsSnapshot)> {
+        (0..self.inner.slots.len())
+            .filter_map(|i| self.shard(i).map(|svc| (i, svc.metrics())))
+            .collect()
+    }
+
+    /// Kill shard `i` (failure-injection hook): remove it from routing,
+    /// fold its final metrics into the merged snapshot, and requeue its
+    /// in-flight sub-requests onto the survivors under fresh sub ids.
+    /// Responses the dying shard still delivers afterwards are dropped
+    /// by the collector (their ids left the inflight table here), so
+    /// every client still sees exactly one response. Returns `false` if
+    /// the shard was already dead.
+    pub fn kill_shard(&self, i: usize) -> bool {
+        let svc = { self.inner.slots[i].lock().unwrap().take() };
+        let Some(svc) = svc else { return false };
+        self.inner.dead.lock().unwrap().push(svc.metrics());
+        drop(svc);
+        let orphans: Vec<SubEntry> = {
+            let mut map = self.inner.inflight.lock().unwrap();
+            let ids: Vec<RequestId> =
+                map.iter().filter(|(_, e)| e.shard == i).map(|(&id, _)| id).collect();
+            ids.into_iter().filter_map(|id| map.remove(&id)).collect()
+        };
+        let count = self.inner.slots.len();
+        for mut entry in orphans {
+            // Filter-affine traffic restarts its scan from the slot its
+            // filter id hashes to ([`RequestKind::shard_affinity`]), so
+            // all of one filter's in-flight requeues land together and
+            // still share tiles with each other. (They keep the dead
+            // home's filter id, so they form their own transient queue
+            // there; post-death *new* submissions re-resolve to a
+            // survivor's registration id and coalesce separately until
+            // this tail drains.) Striped FFT lines just move on to the
+            // next slot.
+            entry.shard = match entry.kind.shard_affinity() {
+                Some(filter_id) => (filter_id as usize) % count,
+                None => (i + 1) % count,
+            };
+            entry.requeued = true;
+            self.dispatch(entry);
+        }
+        true
+    }
+}
+
+/// Collector loop: demux sub-responses back to their parents. A sub id
+/// missing from the inflight table is a stale response from a killed
+/// shard whose lines were requeued — dropping it is what makes delivery
+/// exactly-once.
+fn collector(rx: mpsc::Receiver<FftResponse>, inflight: Inflight) {
+    while let Ok(resp) = rx.recv() {
+        let entry = { inflight.lock().unwrap().remove(&resp.id) };
+        let Some(e) = entry else { continue };
+        match &resp.result {
+            Ok(data) => e.parent.fill(data, &e.line_map, resp.queue_secs, resp.exec_secs),
+            Err(msg) => e.parent.fail(msg),
+        }
+    }
+}
+
+impl ShardedFftService {
+    /// Start with `shards` shards and native-backend test defaults
+    /// (mirrors the single-service test constructors).
+    pub fn start_native(shards: usize) -> Result<ShardedFftService> {
+        ShardedFftService::start(ServiceConfig {
+            backend: Backend::Native,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            warm: false,
+            shards,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn stripe_and_gather_roundtrip() {
+        let maps = stripe_lines(7, 3);
+        assert_eq!(maps, vec![vec![0, 3, 6], vec![1, 4], vec![2, 5]]);
+        // Every line appears exactly once.
+        let mut all: Vec<usize> = maps.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..7).collect::<Vec<_>>());
+        // Single lane is the identity.
+        assert_eq!(stripe_lines(4, 1), vec![vec![0, 1, 2, 3]]);
+        // More lanes than lines leaves trailing lanes empty.
+        assert_eq!(stripe_lines(2, 4), vec![vec![0], vec![1], vec![], vec![]]);
+
+        let n = 8;
+        let mut rng = Rng::new(1);
+        let data = SplitComplex { re: rng.signal(n * 7), im: rng.signal(n * 7) };
+        let mut back = SplitComplex::zeros(n * 7);
+        for map in &maps {
+            let sub = gather_lines(&data, n, map);
+            scatter_lines(&mut back, &sub, n, map);
+        }
+        assert_eq!(back.re, data.re);
+        assert_eq!(back.im, data.im);
+    }
+
+    #[test]
+    fn sharded_fft_is_bitwise_single_service() {
+        let single = FftService::start(ServiceConfig {
+            backend: Backend::Native,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            warm: false,
+            shards: 1,
+        })
+        .unwrap();
+        let sharded = ShardedFftService::start_native(3).unwrap();
+        assert_eq!(sharded.shard_count(), 3);
+        assert_eq!(sharded.alive_count(), 3);
+        assert_eq!(sharded.backend(), Backend::Native);
+        assert_eq!(sharded.batch_tile(), single.batch_tile());
+        let mut rng = Rng::new(0x5A);
+        let (n, lines) = (512usize, 7usize);
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        for dir in [Direction::Forward, Direction::Inverse] {
+            let want = single.fft(n, dir, x.clone(), lines).unwrap();
+            let got = sharded.fft(n, dir, x.clone(), lines).unwrap();
+            assert_eq!(got.re, want.re, "{dir:?} re");
+            assert_eq!(got.im, want.im, "{dir:?} im");
+        }
+        let m = sharded.drain().unwrap();
+        assert_eq!(m.shards, 3);
+        assert_eq!(m.failures, 0);
+        assert_eq!(m.requests, 2 * 3, "each direction fans a sub-request to each shard");
+    }
+
+    #[test]
+    fn matched_filter_routes_to_one_shard() {
+        let sharded = ShardedFftService::start_native(3).unwrap();
+        let mut rng = Rng::new(0x5B);
+        let (n, lines) = (256usize, 6usize);
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        let spec = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let h = sharded.register_filter(n, spec).unwrap();
+        assert_eq!(h.n(), n);
+        assert_eq!(h.registrations(), 3, "registration fans out to all shards");
+        assert!(h.route() < 3);
+        let _ = sharded.matched_filter(&h, x.clone(), lines).unwrap();
+        let _ = sharded.matched_filter(&h, x, lines).unwrap();
+        sharded.drain().unwrap();
+        let per = sharded.shard_metrics();
+        let busy: Vec<usize> =
+            (0..per.len()).filter(|&i| per[i].mf_tiles > 0).collect();
+        assert_eq!(busy, vec![h.route()], "all matched tiles on the home shard");
+    }
+
+    #[test]
+    fn kill_shard_requeues_and_survivors_serve() {
+        let sharded = ShardedFftService::start_native(2).unwrap();
+        let mut rng = Rng::new(0x5C);
+        let (n, lines) = (256usize, 5usize);
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        let want = sharded.fft(n, Direction::Forward, x.clone(), lines).unwrap();
+        assert!(sharded.kill_shard(0));
+        assert!(!sharded.kill_shard(0), "double kill is a no-op");
+        assert_eq!(sharded.alive_count(), 1);
+        let got = sharded.fft(n, Direction::Forward, x.clone(), lines).unwrap();
+        assert_eq!(got.re, want.re, "survivor serves the identical answer");
+        assert_eq!(got.im, want.im);
+        // Dead shard's counters persist in the merged snapshot.
+        let m = sharded.metrics();
+        assert_eq!(m.shards, 2);
+        assert!(m.requests >= 3);
+        // Killing the last shard leaves a clean, explicit failure.
+        assert!(sharded.kill_shard(1));
+        assert!(sharded.fft(n, Direction::Forward, x, lines).is_err());
+    }
+
+    #[test]
+    fn sharded_validates_shapes() {
+        let sharded = ShardedFftService::start_native(2).unwrap();
+        let x = SplitComplex::zeros(100);
+        assert!(sharded.fft(100, Direction::Forward, x, 1).is_err()); // bad size
+        let x = SplitComplex::zeros(256);
+        assert!(sharded.fft(256, Direction::Forward, x, 2).is_err()); // bad payload
+        assert!(sharded
+            .fft(256, Direction::Forward, SplitComplex::zeros(0), 0)
+            .is_err()); // zero lines
+        assert!(sharded.register_filter(100, SplitComplex::zeros(100)).is_err());
+    }
+}

@@ -33,5 +33,6 @@ pub mod testkit;
 pub mod util;
 
 pub use coordinator::service::{FftService, ServiceConfig};
+pub use coordinator::shard::ShardedFftService;
 pub use fft::plan::NativePlanner;
 pub use util::complex::SplitComplex;

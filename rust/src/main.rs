@@ -12,7 +12,7 @@
 
 use applefft::bench::table::Table;
 use applefft::cli::Args;
-use applefft::coordinator::{FftService, ServiceConfig};
+use applefft::coordinator::{FftService, ServiceConfig, ShardedFftService};
 use applefft::fft::plan::NativePlanner;
 use applefft::fft::Direction;
 use applefft::runtime::{Backend, Engine};
@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
                 "applefft — 'Beating vDSP' (Bergach 2026) reproduction\n\n\
                  usage: applefft <subcommand> [options]\n\n\
                  subcommands:\n\
-                 \x20 serve       [--requests 200] [--workers 2] [--max-wait-ms 2]\n\
+                 \x20 serve       [--requests 200] [--workers 2] [--max-wait-ms 2] [--shards 1]\n\
                  \x20 validate    [--backend auto|pjrt|native]\n\
                  \x20 plan        [--n 4096]\n\
                  \x20 sim-params\n\
@@ -56,23 +56,27 @@ fn backend_from(args: &Args) -> Backend {
 }
 
 /// Synthetic serving workload: random sizes/line counts from concurrent
-/// clients, like a radar pipeline issuing range and azimuth FFT batches.
+/// clients, like a radar pipeline issuing range and azimuth FFT batches,
+/// striped across `--shards` worker shards (default `APPLEFFT_SHARDS`).
 /// With `--trace <file>` (or `--trace synthetic --rate <hz>`), runs an
-/// open-loop trace replay and reports latency percentiles instead.
+/// open-loop trace replay and reports latency percentiles — overall and
+/// per shard — instead.
 fn serve(args: &Args) -> anyhow::Result<()> {
     let requests = args.get_usize("requests", 200)?;
     let workers = args.get_usize("workers", 2)?;
     let max_wait = args.get_f64("max-wait-ms", 2.0)?;
     let clients = args.get_usize("clients", 4)?;
-    let svc = FftService::start(ServiceConfig {
+    let shards = args.get_usize("shards", ServiceConfig::default_shards())?;
+    let svc = ShardedFftService::start(ServiceConfig {
         backend: backend_from(args),
         max_wait: std::time::Duration::from_micros((max_wait * 1000.0) as u64),
         workers,
         warm: args.flag("warm"),
+        shards,
     })?;
 
     if let Some(trace_arg) = args.get("trace") {
-        use applefft::coordinator::replay::{replay, Trace};
+        use applefft::coordinator::replay::{replay_sharded, Trace};
         let trace = if trace_arg == "synthetic" {
             let rate = args.get_f64("rate", 500.0)?;
             let secs = args.get_f64("duration-s", 2.0)?;
@@ -81,11 +85,12 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             Trace::parse(&std::fs::read_to_string(trace_arg)?)?
         };
         println!(
-            "trace replay: {} requests, backend {:?}",
+            "trace replay: {} requests, backend {:?}, {} shard(s)",
             trace.entries.len(),
-            svc.engine().backend()
+            svc.backend(),
+            svc.shard_count()
         );
-        let report = replay(&svc, &trace, 43)?;
+        let (report, shard_reports) = replay_sharded(&svc, &trace, 43)?;
         println!(
             "\n{} requests / {} lines in {:.2}s = {:.0} lines/s, {:.2} GFLOPS (nominal)",
             report.requests, report.lines, report.wall_secs, report.lines_per_sec,
@@ -95,14 +100,30 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             "latency: p50 {:.0} us, p95 {:.0} us, p99 {:.0} us, max {:.0} us, failures {}",
             report.p50_us, report.p95_us, report.p99_us, report.max_us, report.failures
         );
+        let mut t = Table::new("Per-shard replay breakdown", &[
+            "shard", "requests", "lines", "tiles", "queue p95 us", "exec p95 us", "GFLOPS",
+        ]);
+        for s in &shard_reports {
+            t.row(&[
+                s.shard.to_string(),
+                s.requests.to_string(),
+                s.lines_in.to_string(),
+                s.tiles.to_string(),
+                format!("{:.0}", s.queue_p95_us),
+                format!("{:.0}", s.exec_p95_us),
+                format!("{:.2}", s.gflops),
+            ]);
+        }
+        t.print();
         let m = svc.drain()?;
         println!("\nmetrics:\n{}", m.render());
         return Ok(());
     }
     println!(
-        "serve: {requests} requests from {clients} clients, backend {:?}, tile {}",
-        svc.engine().backend(),
-        svc.batch_tile()
+        "serve: {requests} requests from {clients} clients, backend {:?}, tile {}, {} shard(s)",
+        svc.backend(),
+        svc.batch_tile(),
+        svc.shard_count()
     );
 
     let t0 = Instant::now();

@@ -164,6 +164,7 @@ mod tests {
             max_wait: std::time::Duration::from_millis(1),
             workers: 2,
             warm: false,
+            shards: 1,
         })
         .unwrap();
         let mut rng = Rng::new(500);

@@ -1,5 +1,9 @@
 //! Seeded property-testing helper (proptest substitute for the offline
-//! environment).
+//! environment) plus the shared accuracy toolkit every integration
+//! harness uses: the O(N^2) DFT oracle, SNR gauges, ULP distances, and
+//! the streaming accuracy-table printer. `codelet_conformance.rs`,
+//! `sar_e2e.rs`, `proptests.rs`, and `shard_integration.rs` all pull
+//! these from here instead of keeping per-file copies.
 //!
 //! `check` runs a property over many deterministically generated cases;
 //! on failure it reports the failing case index and seed so the exact
@@ -17,7 +21,91 @@
 //! });
 //! ```
 
+use crate::fft::Direction;
+use crate::util::complex::SplitComplex;
 use crate::util::rng::Rng;
+
+pub use crate::fft::bfp::{psnr_db, snr_db};
+
+/// The sizes the paper validates against vDSP (Tables V-VII) — the
+/// canonical size axis for conformance and shard harnesses.
+pub const PAPER_SIZES: [usize; 7] = [256, 512, 1024, 2048, 4096, 8192, 16384];
+
+/// The O(N^2) from-the-definition DFT oracle over `lines` independent
+/// rows (f64 accumulation inside `fft::dft`). Quadratic: keep oracle
+/// comparisons at N <= 4096 or a couple of lines.
+pub fn dft_oracle(x: &SplitComplex, n: usize, lines: usize, direction: Direction) -> SplitComplex {
+    crate::fft::dft::dft_batch(x, n, lines, direction)
+}
+
+/// ULP distance between two f32s (sign-magnitude order mapping, exact).
+pub fn ulp_dist(a: f32, b: f32) -> u64 {
+    fn key(x: f32) -> i64 {
+        let i = x.to_bits() as i32 as i64;
+        if i < 0 {
+            (i32::MIN as i64) - i
+        } else {
+            i
+        }
+    }
+    (key(a) - key(b)).unsigned_abs()
+}
+
+/// Max ULP distance over bins whose reference magnitude is at least
+/// `floor` (ULPs are meaningless for near-cancelled bins — their
+/// absolute error is what rel-L2 assertions bound).
+pub fn max_ulp_above(got: &SplitComplex, want: &SplitComplex, floor: f32) -> u64 {
+    let mut worst = 0u64;
+    for i in 0..want.len() {
+        if want.re[i].abs() >= floor {
+            worst = worst.max(ulp_dist(got.re[i], want.re[i]));
+        }
+        if want.im[i].abs() >= floor {
+            worst = worst.max(ulp_dist(got.im[i], want.im[i]));
+        }
+    }
+    worst
+}
+
+/// Root-mean-square magnitude of a reference spectrum, the scale ULP
+/// floors are set from.
+pub fn rms(x: &SplitComplex) -> f32 {
+    let sum: f64 = (0..x.len()).map(|i| x.get(i).norm_sqr() as f64).sum();
+    ((sum / x.len() as f64).sqrt()) as f32
+}
+
+/// Streaming accuracy-table printer (the max-ulp tables the conformance
+/// harness reports the way the paper reports vDSP deltas): prints the
+/// title and right-aligned header on construction, then one aligned row
+/// per `row` call — results appear as the (slow) oracle comparisons
+/// complete rather than all at the end.
+pub struct UlpTable {
+    widths: Vec<usize>,
+}
+
+impl UlpTable {
+    pub fn new(title: &str, columns: &[&str]) -> UlpTable {
+        println!("{title}");
+        let widths: Vec<usize> = columns.iter().map(|c| c.len().max(8)).collect();
+        let header: Vec<String> = columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, &w)| format!("{c:>w$}"))
+            .collect();
+        println!("{}", header.join(" "));
+        UlpTable { widths }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        assert_eq!(cells.len(), self.widths.len(), "row width mismatch");
+        let line: Vec<String> = cells
+            .iter()
+            .zip(&self.widths)
+            .map(|(c, &w)| format!("{c:>w$}"))
+            .collect();
+        println!("{}", line.join(" "));
+    }
+}
 
 /// Per-case generator context.
 pub struct Gen {
@@ -132,5 +220,61 @@ mod tests {
             assert_close(&[1.0], &[1.1], 1e-3, 0.0, "fail");
         });
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn ulp_dist_counts_representable_steps() {
+        assert_eq!(ulp_dist(1.0, 1.0), 0);
+        assert_eq!(ulp_dist(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        // Symmetric, and well-defined across the sign boundary.
+        assert_eq!(ulp_dist(-1.0, -1.0), 0);
+        assert_eq!(ulp_dist(1.0, 2.0), ulp_dist(2.0, 1.0));
+        assert_eq!(ulp_dist(0.0, -0.0), 0, "signed zeros coincide in the key order");
+    }
+
+    #[test]
+    fn max_ulp_above_ignores_small_bins() {
+        let want = SplitComplex { re: vec![10.0, 0.001], im: vec![0.0, 0.0] };
+        let got = SplitComplex { re: vec![10.0, 0.5], im: vec![0.0, 0.0] };
+        // The wildly-wrong bin sits below the floor: masked.
+        assert_eq!(max_ulp_above(&got, &want, 1.0), 0);
+        // Lowering the floor exposes it.
+        assert!(max_ulp_above(&got, &want, 1e-4) > 1_000_000);
+    }
+
+    #[test]
+    fn dft_oracle_matches_impulse() {
+        // DFT of a unit impulse is all-ones, per line.
+        let n = 8;
+        let mut x = SplitComplex::zeros(n * 2);
+        x.re[0] = 1.0;
+        x.re[n] = 1.0;
+        let y = dft_oracle(&x, n, 2, Direction::Forward);
+        for i in 0..2 * n {
+            assert!((y.re[i] - 1.0).abs() < 1e-6, "bin {i}: {}", y.re[i]);
+            assert!(y.im[i].abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rms_of_unit_circle() {
+        let x = SplitComplex { re: vec![1.0; 16], im: vec![0.0; 16] };
+        assert!((rms(&x) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ulp_table_aligns_and_checks_width() {
+        let t = UlpTable::new("demo:", &["N", "max_ulp"]);
+        t.row(&[256.to_string(), 3.to_string()]);
+        let r = std::panic::catch_unwind(|| t.row(&["one".to_string()]));
+        assert!(r.is_err(), "row width must be enforced");
+    }
+
+    #[test]
+    fn paper_sizes_are_the_supported_range() {
+        assert_eq!(PAPER_SIZES.len(), 7);
+        assert!(PAPER_SIZES.iter().all(|n| n.is_power_of_two()));
+        assert_eq!(*PAPER_SIZES.first().unwrap(), 256);
+        assert_eq!(*PAPER_SIZES.last().unwrap(), 16384);
     }
 }

@@ -18,54 +18,16 @@
 //!    element; with `--features simd` absent the simd table falls back
 //!    to scalar and the assertion is trivially true).
 
-use applefft::fft::bfp::{snr_db, Precision};
+use applefft::fft::bfp::Precision;
 use applefft::fft::codelet::{table, CodeletBackend};
-use applefft::fft::dft::dft;
 use applefft::fft::plan::{NativePlanner, Variant};
 use applefft::fft::twiddle::StageTable;
 use applefft::fft::Direction;
-use applefft::testkit::assert_close;
+use applefft::testkit::{
+    assert_close, dft_oracle, max_ulp_above, rms, snr_db, UlpTable, PAPER_SIZES,
+};
 use applefft::util::complex::SplitComplex;
 use applefft::util::rng::Rng;
-
-/// The sizes the paper validates against vDSP (Tables V-VII).
-const PAPER_SIZES: [usize; 7] = [256, 512, 1024, 2048, 4096, 8192, 16384];
-
-/// ULP distance between two f32s (sign-magnitude order mapping, exact).
-fn ulp_dist(a: f32, b: f32) -> u64 {
-    fn key(x: f32) -> i64 {
-        let i = x.to_bits() as i32 as i64;
-        if i < 0 {
-            (i32::MIN as i64) - i
-        } else {
-            i
-        }
-    }
-    (key(a) - key(b)).unsigned_abs()
-}
-
-/// Max ULP distance over bins whose reference magnitude is at least
-/// `floor` (ULPs are meaningless for near-cancelled bins — their
-/// absolute error is what the rel-L2 assertions bound).
-fn max_ulp_above(got: &SplitComplex, want: &SplitComplex, floor: f32) -> u64 {
-    let mut worst = 0u64;
-    for i in 0..want.len() {
-        if want.re[i].abs() >= floor {
-            worst = worst.max(ulp_dist(got.re[i], want.re[i]));
-        }
-        if want.im[i].abs() >= floor {
-            worst = worst.max(ulp_dist(got.im[i], want.im[i]));
-        }
-    }
-    worst
-}
-
-/// Root-mean-square magnitude of a reference spectrum, the scale the
-/// ULP floor is set from.
-fn rms(x: &SplitComplex) -> f32 {
-    let sum: f64 = (0..x.len()).map(|i| x.get(i).norm_sqr() as f64).sum();
-    ((sum / x.len() as f64).sqrt()) as f32
-}
 
 /// One radix-r DIF Stockham stage straight from the definition,
 /// accumulated in f64: `y[q + s(rp+k)] = (sum_j x[q + s(p+jm)]
@@ -171,10 +133,9 @@ fn stage_variants_match_naive_oracle() {
 fn full_transforms_match_dft_oracle_all_paper_sizes() {
     let planner = NativePlanner::new();
     let mut rng = Rng::new(0xFACADE);
-    println!("codelet conformance vs dft oracle (max ulp over bins >= rms/4):");
-    println!(
-        "{:>7} {:>4} {:>7} {:>8} {:>10} {:>9}",
-        "N", "dir", "variant", "backend", "rel_l2", "max_ulp"
+    let report = UlpTable::new(
+        "codelet conformance vs dft oracle (max ulp over bins >= rms/4):",
+        &["N", "dir", "variant", "backend", "rel_l2", "max_ulp"],
     );
     for &n in &PAPER_SIZES {
         let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
@@ -186,7 +147,7 @@ fn full_transforms_match_dft_oracle_all_paper_sizes() {
         for &dir in dirs {
             // The O(N^2) oracle is the expensive part: compute it once
             // per (size, direction) and reuse across variants/backends.
-            let want = dft(&x, dir);
+            let want = dft_oracle(&x, n, 1, dir);
             let floor = rms(&want) / 4.0;
             for variant in [Variant::Radix4, Variant::Radix8] {
                 let mut per_backend: Vec<SplitComplex> = Vec::new();
@@ -198,15 +159,14 @@ fn full_transforms_match_dft_oracle_all_paper_sizes() {
                         .unwrap();
                     let err = got.rel_l2_error(&want);
                     let ulp = max_ulp_above(&got, &want, floor);
-                    println!(
-                        "{:>7} {:>4} {:>7} {:>8} {:>10.2e} {:>9}",
-                        n,
-                        dir.tag(),
-                        variant.tag(),
-                        backend.tag(),
-                        err,
-                        ulp
-                    );
+                    report.row(&[
+                        n.to_string(),
+                        dir.tag().to_string(),
+                        variant.tag().to_string(),
+                        backend.tag().to_string(),
+                        format!("{err:.2e}"),
+                        ulp.to_string(),
+                    ]);
                     assert!(err < 3e-4, "n={n} {dir:?} {variant:?} {}: rel {err}", backend.tag());
                     assert!(
                         ulp < 1 << 16,
@@ -231,8 +191,10 @@ fn full_transforms_match_dft_oracle_all_paper_sizes() {
 fn roundtrip_max_ulp_within_bounds_per_size() {
     let planner = NativePlanner::new();
     let mut rng = Rng::new(0x0707);
-    println!("round-trip ifft(fft(x)) vs x (max ulp over bins with |x| >= 0.25):");
-    println!("{:>7} {:>8} {:>10} {:>9}", "N", "backend", "rel_l2", "max_ulp");
+    let report = UlpTable::new(
+        "round-trip ifft(fft(x)) vs x (max ulp over bins with |x| >= 0.25):",
+        &["N", "backend", "rel_l2", "max_ulp"],
+    );
     for &n in &PAPER_SIZES {
         let batch = 2usize;
         let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
@@ -242,7 +204,12 @@ fn roundtrip_max_ulp_within_bounds_per_size() {
             let z = plan.execute_batch(&y, batch, Direction::Inverse).unwrap();
             let err = z.rel_l2_error(&x);
             let ulp = max_ulp_above(&z, &x, 0.25);
-            println!("{:>7} {:>8} {:>10.2e} {:>9}", n, backend.tag(), err, ulp);
+            report.row(&[
+                n.to_string(),
+                backend.tag().to_string(),
+                format!("{err:.2e}"),
+                ulp.to_string(),
+            ]);
             assert!(err < 1e-4, "n={n} {}: roundtrip rel {err}", backend.tag());
             assert!(ulp < 1 << 14, "n={n} {}: roundtrip {ulp} ulps", backend.tag());
         }
@@ -365,10 +332,9 @@ fn fused_pipeline_matches_three_dispatch_all_paper_sizes() {
 fn bfp16_forward_inverse_snr_all_paper_sizes() {
     let planner = NativePlanner::new();
     let mut rng = Rng::new(0xBF16);
-    println!("bfp16 exchange tier vs f32 path (SNR dB; gate: >= 60):");
-    println!(
-        "{:>7} {:>7} {:>10} {:>10} {:>10}",
-        "N", "variant", "fwd_snr", "inv_snr", "rt_snr"
+    let report = UlpTable::new(
+        "bfp16 exchange tier vs f32 path (SNR dB; gate: >= 60):",
+        &["N", "variant", "fwd_snr", "inv_snr", "rt_snr"],
     );
     for &n in &PAPER_SIZES {
         let batch = 2usize;
@@ -399,7 +365,13 @@ fn bfp16_forward_inverse_snr_all_paper_sizes() {
                 per_backend.push(fwd);
             }
             let (f, i, r) = printed.unwrap();
-            println!("{:>7} {:>7} {:>10.1} {:>10.1} {:>10.1}", n, variant.tag(), f, i, r);
+            report.row(&[
+                n.to_string(),
+                variant.tag().to_string(),
+                format!("{f:.1}"),
+                format!("{i:.1}"),
+                format!("{r:.1}"),
+            ]);
             // Layer 3 at Bfp16: backends agree bitwise.
             for other in &per_backend[1..] {
                 assert_eq!(per_backend[0].re, other.re, "n={n} {variant:?} bfp16 re");
@@ -467,7 +439,7 @@ fn batched_executor_path_conforms() {
                 .unwrap();
             assert_eq!(got.re, want.re, "n={n} batch={batch} {}", backend.tag());
             assert_eq!(got.im, want.im, "n={n} batch={batch} {}", backend.tag());
-            let head = dft(&x.slice(0, n), Direction::Forward);
+            let head = dft_oracle(&x.slice(0, n), n, 1, Direction::Forward);
             let err = got.slice(0, n).rel_l2_error(&head);
             assert!(err < 3e-4, "n={n} {}: {err}", backend.tag());
         }

@@ -2,7 +2,7 @@
 //! pathological inputs — the service must degrade with errors, never
 //! hang, crash, or serve wrong answers silently.
 
-use applefft::coordinator::{FftService, ServiceConfig};
+use applefft::coordinator::{FftService, ServiceConfig, ShardedFftService};
 use applefft::fft::Direction;
 use applefft::runtime::{Backend, Engine, Registry};
 use applefft::util::complex::SplitComplex;
@@ -77,6 +77,7 @@ fn nan_and_inf_inputs_do_not_crash() {
         max_wait: Duration::from_millis(1),
         workers: 1,
         warm: false,
+        shards: 1,
     })
     .unwrap();
     let n = 256;
@@ -98,6 +99,7 @@ fn zero_input_gives_zero_spectrum() {
         max_wait: Duration::from_millis(1),
         workers: 1,
         warm: false,
+        shards: 1,
     })
     .unwrap();
     let y = svc.fft(512, Direction::Forward, SplitComplex::zeros(512), 1).unwrap();
@@ -111,6 +113,7 @@ fn drain_on_idle_service_is_noop() {
         max_wait: Duration::from_secs(3600),
         workers: 1,
         warm: false,
+        shards: 1,
     })
     .unwrap();
     svc.drain().unwrap();
@@ -127,6 +130,7 @@ fn responses_survive_dropped_receivers() {
         max_wait: Duration::from_millis(1),
         workers: 1,
         warm: false,
+        shards: 1,
     })
     .unwrap();
     let mut rng = Rng::new(600);
@@ -142,6 +146,24 @@ fn responses_survive_dropped_receivers() {
 }
 
 #[test]
+fn shard_death_degrades_then_fails_cleanly() {
+    // Kill shards one by one: survivors keep serving correct answers;
+    // only when the last shard dies do submissions fail — with an
+    // error, never a hang or a wrong answer.
+    let svc = ShardedFftService::start_native(2).unwrap();
+    let mut rng = Rng::new(700);
+    let n = 256;
+    let x = SplitComplex { re: rng.signal(n * 3), im: rng.signal(n * 3) };
+    let want = svc.fft(n, Direction::Forward, x.clone(), 3).unwrap();
+    assert!(svc.kill_shard(0));
+    let got = svc.fft(n, Direction::Forward, x.clone(), 3).unwrap();
+    assert_eq!(got.re, want.re, "survivor must serve the identical bits");
+    assert_eq!(got.im, want.im);
+    assert!(svc.kill_shard(1));
+    assert!(svc.fft(n, Direction::Forward, x, 3).is_err(), "no shards -> explicit error");
+}
+
+#[test]
 fn oversize_line_count_still_correct() {
     // A single request far larger than one tile (stress segmentation).
     let svc = FftService::start(ServiceConfig {
@@ -149,6 +171,7 @@ fn oversize_line_count_still_correct() {
         max_wait: Duration::from_millis(1),
         workers: 2,
         warm: false,
+        shards: 1,
     })
     .unwrap();
     let planner = applefft::fft::plan::NativePlanner::new();

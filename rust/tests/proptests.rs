@@ -2,17 +2,16 @@
 //! invariants and the FFT algebra — the DESIGN.md §8 checklist.
 
 use applefft::coordinator::{Decomposition, FftService, Planner, ServiceConfig};
-use applefft::fft::bfp::{snr_db, BfpVec, Precision};
+use applefft::fft::bfp::{BfpVec, Precision};
 use applefft::fft::codelet::CodeletBackend;
 use applefft::fft::convolve::{direct_convolve, OverlapSave};
-use applefft::fft::dft::dft_batch;
 use applefft::fft::pipeline::SpectralPipeline;
 use applefft::fft::plan::{NativePlanner, Variant};
 use applefft::fft::real::{irfft_batch, rfft_batch};
 use applefft::fft::stockham::radix_schedule;
 use applefft::fft::Direction;
 use applefft::runtime::Backend;
-use applefft::testkit::check;
+use applefft::testkit::{check, dft_oracle, snr_db};
 use applefft::util::complex::{SplitComplex, C32};
 use applefft::util::rng::Rng;
 use std::time::Duration;
@@ -345,7 +344,7 @@ fn prop_executor_par_serial_oracle_agree() {
                     if n <= 2048 {
                         let lines = batch.min(2);
                         let head = x.slice(0, lines * n);
-                        let want = dft_batch(&head, n, lines, dir);
+                        let want = dft_oracle(&head, n, lines, dir);
                         let err = serial.slice(0, lines * n).rel_l2_error(&want);
                         assert!(err < 2e-4, "oracle: n={n} {variant:?} b={batch} {dir:?}: {err}");
                     }
@@ -392,6 +391,7 @@ fn prop_service_never_drops_or_corrupts() {
         max_wait: Duration::from_millis(1),
         workers: 3,
         warm: false,
+        shards: 1,
     })
     .unwrap();
     let planner = NativePlanner::new();
@@ -429,6 +429,7 @@ fn prop_padding_is_invisible() {
         max_wait: Duration::from_micros(200),
         workers: 2,
         warm: false,
+        shards: 1,
     })
     .unwrap();
     let planner = NativePlanner::new();

@@ -3,11 +3,11 @@
 //! integration-test twin of `examples/sar_range_compression.rs`.
 
 use applefft::coordinator::{FftService, ServiceConfig};
-use applefft::fft::bfp::{psnr_db, snr_db, Precision};
+use applefft::fft::bfp::Precision;
 use applefft::runtime::{engine::artifacts_dir, Backend};
 use applefft::sar::range::{run_scene, RangeCompressor, RangePath};
 use applefft::sar::{Chirp, Scene};
-use applefft::testkit::check;
+use applefft::testkit::{check, psnr_db, snr_db};
 use applefft::util::rng::Rng;
 use std::time::Duration;
 
@@ -17,6 +17,7 @@ fn service(backend: Backend) -> FftService {
         max_wait: Duration::from_millis(1),
         workers: 2,
         warm: false,
+        shards: 1,
     })
     .unwrap()
 }

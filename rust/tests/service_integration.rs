@@ -16,6 +16,7 @@ fn service(backend: Backend) -> FftService {
         max_wait: Duration::from_millis(1),
         workers: 2,
         warm: false,
+        shards: 1,
     })
     .unwrap()
 }
@@ -51,6 +52,7 @@ fn async_submissions_coalesce_into_tiles() {
         max_wait: Duration::from_secs(3600),
         workers: 2,
         warm: false,
+        shards: 1,
     })
     .unwrap();
     let mut rng = Rng::new(201);
@@ -96,6 +98,7 @@ fn drain_flushes_partials_immediately() {
         max_wait: Duration::from_secs(3600), // never auto-flush
         workers: 1,
         warm: false,
+        shards: 1,
     })
     .unwrap();
     let mut rng = Rng::new(203);

@@ -1,0 +1,260 @@
+//! Shard-aware integration harness: the sharded coordinator must be
+//! **bitwise indistinguishable** from the single service at every shard
+//! count, for every request kind × precision × paper size — and a shard
+//! death mid-trace must lose or duplicate exactly zero responses.
+//!
+//! This is the acceptance gate for `coordinator::shard` (ISSUE 5): the
+//! striping/affinity/reassembly rules in `coordinator/mod.rs` are only
+//! real if this file cannot tell N shards from one.
+
+use applefft::coordinator::replay::{replay_collect, Trace, TraceEntry};
+use applefft::coordinator::{
+    FftService, MetricsSnapshot, ServiceConfig, ShardedFftService,
+};
+use applefft::fft::bfp::Precision;
+use applefft::fft::plan::NativePlanner;
+use applefft::fft::Direction;
+use applefft::runtime::Backend;
+use applefft::testkit::{check, UlpTable, PAPER_SIZES};
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use std::time::Duration;
+
+/// Shard counts the equality matrix runs at (1 is the degenerate
+/// control: the sharded wrapper around a single stack).
+const SHARD_COUNTS: [usize; 4] = [1, 2, 3, 4];
+
+fn config(shards: usize) -> ServiceConfig {
+    ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_millis(1),
+        workers: 2,
+        warm: false,
+        shards,
+    }
+}
+
+fn sharded(shards: usize) -> ShardedFftService {
+    ShardedFftService::start(config(shards)).unwrap()
+}
+
+fn bitwise(got: &SplitComplex, want: &SplitComplex, what: &str) {
+    assert_eq!(got.re, want.re, "{what}: re differs");
+    assert_eq!(got.im, want.im, "{what}: im differs");
+}
+
+/// The big matrix: every request kind (FFT fwd/inv, matched filter,
+/// engine-direct range compression) × precision (f32/bfp16) × all 7
+/// paper sizes × shard counts 1-4, bitwise against the single service.
+#[test]
+fn sharded_bitwise_equals_single_all_kinds_precisions_sizes() {
+    let single = FftService::start(config(1)).unwrap();
+    let multis: Vec<ShardedFftService> =
+        SHARD_COUNTS.iter().map(|&s| sharded(s)).collect();
+    let report = UlpTable::new(
+        "sharded vs single (bitwise at shard counts 1-4):",
+        &["N", "precision", "kind", "status"],
+    );
+    let mut rng = Rng::new(0x54A2D);
+    for &n in &PAPER_SIZES {
+        let lines = 5usize; // partial tile: exercises padding on every shard count
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        for &precision in Precision::all() {
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let want = single.fft_prec(n, dir, x.clone(), lines, precision).unwrap();
+                for (svc, &s) in multis.iter().zip(&SHARD_COUNTS) {
+                    let got = svc.fft_prec(n, dir, x.clone(), lines, precision).unwrap();
+                    bitwise(
+                        &got,
+                        &want,
+                        &format!("fft n={n} {dir:?} {precision:?} shards={s}"),
+                    );
+                }
+                report.row(&[
+                    n.to_string(),
+                    precision.tag().to_string(),
+                    format!("fft_{}", dir.tag()),
+                    "bitwise".to_string(),
+                ]);
+            }
+            // Matched filter: filter-affine routing, fan-out registration.
+            let want = {
+                let fh = single.register_filter_prec(n, h.clone(), precision).unwrap();
+                single.matched_filter(&fh, x.clone(), lines).unwrap()
+            };
+            for (svc, &s) in multis.iter().zip(&SHARD_COUNTS) {
+                let fh = svc.register_filter_prec(n, h.clone(), precision).unwrap();
+                assert_eq!(fh.registrations(), s, "registration fans out to every shard");
+                let got = svc.matched_filter(&fh, x.clone(), lines).unwrap();
+                bitwise(&got, &want, &format!("matched n={n} {precision:?} shards={s}"));
+            }
+            report.row(&[
+                n.to_string(),
+                precision.tag().to_string(),
+                "matched".to_string(),
+                "bitwise".to_string(),
+            ]);
+            // Engine-direct fused range compression, striped + concurrent.
+            let want = single.range_compress_prec(&x, &h, n, lines, precision).unwrap();
+            for (svc, &s) in multis.iter().zip(&SHARD_COUNTS) {
+                let got = svc.range_compress_prec(&x, &h, n, lines, precision).unwrap();
+                bitwise(&got, &want, &format!("rangecomp n={n} {precision:?} shards={s}"));
+            }
+            report.row(&[
+                n.to_string(),
+                precision.tag().to_string(),
+                "rangecomp".to_string(),
+                "bitwise".to_string(),
+            ]);
+        }
+    }
+    // The equality is meaningful only if striping really happened:
+    // at 4 shards the plain-FFT lines must have touched >= 2 stacks.
+    let per = multis[3].shard_metrics();
+    let busy = per.iter().filter(|m| m.tiles_dispatched > 0).count();
+    assert!(busy >= 2, "striping must spread work: {busy} busy shards");
+    for svc in &multis {
+        assert_eq!(svc.drain().unwrap().failures, 0);
+    }
+}
+
+/// Shard death mid-stream: in-flight lines requeue onto survivors; the
+/// client sees **exactly one** response per request — none lost to the
+/// dead shard, none duplicated by the requeue — and the numerics stay
+/// correct.
+#[test]
+fn shard_death_mid_trace_is_exactly_once() {
+    let svc = sharded(4);
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(0xDEAD);
+    let n = 256usize;
+    let mut pending = Vec::new();
+    for i in 0..60u64 {
+        let lines = rng.between(1, 12);
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        let (id, rx) = svc
+            .submit_prec(n, Direction::Forward, x.clone(), lines, Precision::F32)
+            .unwrap();
+        pending.push((id, rx, x, lines));
+        // Two deaths mid-trace, with traffic in flight around both.
+        if i == 20 {
+            assert!(svc.kill_shard(1), "first kill");
+        }
+        if i == 40 {
+            assert!(svc.kill_shard(3), "second kill");
+            assert!(!svc.kill_shard(3), "re-killing a dead shard is a no-op");
+        }
+    }
+    svc.drain().unwrap();
+    assert_eq!(svc.alive_count(), 2);
+    for (id, rx, x, lines) in pending {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("no response may be lost to a dead shard");
+        assert_eq!(resp.id, id, "response routed to its own request");
+        let got = resp.result.expect("requeued lines must succeed on survivors");
+        assert_eq!(got.len(), n * lines, "shape preserved across requeue");
+        let want = planner.fft_batch(&x, n, lines, Direction::Forward).unwrap();
+        let err = got.rel_l2_error(&want);
+        assert!(err < 5e-4, "numerics survive requeue: {err}");
+        assert!(rx.try_recv().is_err(), "no duplicate responses");
+    }
+    // Merged metrics keep the dead shards' history: all 4 stacks tagged.
+    let m = svc.metrics();
+    assert_eq!(m.shards, 4);
+    assert_eq!(m.failures, 0, "death is rerouting, not request failure");
+}
+
+/// Filter-affinity under failure: registration fan-out means a handle
+/// outlives its home shard — traffic re-resolves to a survivor and the
+/// answer stays bitwise identical.
+#[test]
+fn matched_filter_survives_home_shard_death() {
+    let single = FftService::start(config(1)).unwrap();
+    let svc = sharded(3);
+    let mut rng = Rng::new(0xF17E);
+    let (n, lines) = (1024usize, 6usize);
+    let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+    let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+    let want = {
+        let fh = single.register_filter(n, h.clone()).unwrap();
+        single.matched_filter(&fh, x.clone(), lines).unwrap()
+    };
+    let fh = svc.register_filter(n, h).unwrap();
+    let home = fh.route();
+    let a = svc.matched_filter(&fh, x.clone(), lines).unwrap();
+    bitwise(&a, &want, "before death");
+    assert!(svc.kill_shard(home), "kill the home shard");
+    let b = svc.matched_filter(&fh, x.clone(), lines).unwrap();
+    bitwise(&b, &want, "after home-shard death");
+    // Kill everything: the handle fails cleanly, not silently.
+    for i in 0..svc.shard_count() {
+        svc.kill_shard(i);
+    }
+    assert!(svc.matched_filter(&fh, x, lines).is_err());
+}
+
+/// Satellite 3 (proptest via testkit::check): random traces — sizes,
+/// line counts, directions, precisions — replayed at a random shard
+/// count are bitwise the 1-shard replay, and merged metrics FLOPs equal
+/// the per-shard sum.
+#[test]
+fn prop_random_traces_replay_bitwise_at_random_shard_count() {
+    check("sharded replay == 1-shard replay", 5, |g| {
+        let entries: Vec<TraceEntry> = (0..g.rng.between(3, 7))
+            .map(|i| TraceEntry {
+                arrival_us: (i as u64) * 200,
+                n: *g.rng.choose(&[256usize, 512, 1024, 2048]),
+                lines: g.rng.between(1, 10),
+                direction: if g.rng.below(3) == 0 {
+                    Direction::Inverse
+                } else {
+                    Direction::Forward
+                },
+                precision: if g.rng.below(3) == 0 { Precision::Bfp16 } else { Precision::F32 },
+            })
+            .collect();
+        let trace = Trace { entries };
+        let shard_count = g.rng.between(2, 4);
+        let base = sharded(1);
+        let multi = sharded(shard_count);
+        let want = replay_collect(&base, &trace, g.seed).unwrap();
+        let got = replay_collect(&multi, &trace, g.seed).unwrap();
+        assert_eq!(want.len(), got.len());
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a.re, b.re, "case {}: entry {i} re (shards={shard_count})", g.case);
+            assert_eq!(a.im, b.im, "case {}: entry {i} im (shards={shard_count})", g.case);
+        }
+        // Merged metrics are the per-shard sums (flops, requests, shards).
+        let per = multi.shard_metrics();
+        let merged = MetricsSnapshot::merge(&per);
+        assert_eq!(
+            merged.nominal_flops,
+            per.iter().map(|m| m.nominal_flops).sum::<u64>(),
+            "merged flops are the shard sum"
+        );
+        assert_eq!(merged.requests, per.iter().map(|m| m.requests).sum::<u64>());
+        assert_eq!(merged.shards as usize, shard_count);
+        assert_eq!(merged.failures, 0);
+    });
+}
+
+/// The `APPLEFFT_SHARDS` env knob drives the default config (the CI
+/// matrix leans on this): whatever the env says, the sharded service
+/// still answers bitwise like a single stack.
+#[test]
+fn env_default_shard_count_serves_identically() {
+    // Read whatever the environment (e.g. the CI matrix) set — do not
+    // mutate it here; other tests run concurrently in this process.
+    let shards = ServiceConfig::default_shards();
+    let svc = sharded(shards);
+    assert_eq!(svc.shard_count(), shards);
+    let single = FftService::start(config(1)).unwrap();
+    let mut rng = Rng::new(0xE7F);
+    let (n, lines) = (512usize, 9usize);
+    let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+    let want = single.fft(n, Direction::Forward, x.clone(), lines).unwrap();
+    let got = svc.fft(n, Direction::Forward, x, lines).unwrap();
+    bitwise(&got, &want, &format!("env shards={shards}"));
+}
