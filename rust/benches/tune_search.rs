@@ -1,0 +1,102 @@
+//! Searched-schedule bench: run the `fft::tune` shortest-path search on
+//! this host, then race the searched schedule against the
+//! `Variant::preferred` heuristic end-to-end at every paper size ×
+//! exchange precision. Emits `BENCH_tune.json` with the
+//! searched-vs-preferred GFLOPS ratios, the modeled cost ratios, the
+//! search wall time, and the cost model's memo hit rate — the ISSUE 6
+//! acceptance artifact.
+//!
+//! Under the measured cost model the searched schedule can never be
+//! priced above the heuristic (the preferred ladder is inside the
+//! capped search space), so the "model ratio" column is <= 1.000 by
+//! construction; the end-to-end column is the honest re-measurement on
+//! the pooled executor path.
+
+use applefft::bench::table::{BenchJson, Table};
+use applefft::bench::Benchmark;
+use applefft::fft::codelet;
+use applefft::fft::plan::{NativePlanner, Schedule, Variant};
+use applefft::fft::tune::Tuner;
+use applefft::fft::Direction;
+use applefft::testkit::PAPER_SIZES;
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use applefft::util::{fft_flops, gflops};
+use std::time::Instant;
+
+fn main() {
+    let b = Benchmark::new("tune_search");
+    let mut json = BenchJson::new("tune");
+    let batch = 16usize;
+
+    // Phase 1: the search itself, timed. One Tuner run covers every
+    // compiled backend × precision with a shared config.
+    let tuner = Tuner::default();
+    let t0 = Instant::now();
+    let run = tuner.tune(&PAPER_SIZES).expect("tune");
+    let search_secs = t0.elapsed().as_secs_f64();
+
+    let mut meta = Table::new(
+        "Schedule search — cost-model telemetry",
+        &["metric", "value"],
+    );
+    meta.row(&["search wall time (all sizes x backends x precisions)".into(),
+        format!("{search_secs:.2} s")]);
+    meta.row(&["edge cost requests".into(), run.edge_requests.to_string()]);
+    meta.row(&["edges measured".into(), run.edges_measured.to_string()]);
+    meta.row(&["memo hit rate".into(), format!("{:.1}%", run.memo_hit_rate() * 100.0)]);
+    meta.row(&["cache entries".into(), run.cache.len().to_string()]);
+    meta.print();
+    json.add(&meta);
+
+    // Phase 2: end-to-end race, searched vs preferred, through the same
+    // pooled executors the serving path uses.
+    let planner = NativePlanner::new();
+    let backend = codelet::select();
+    for o in &run.results {
+        if o.backend != backend {
+            continue; // race only the backend this process serves with
+        }
+        let n = o.result.n;
+        let searched = &o.result.schedule;
+        let preferred = Schedule::from_variant(n, Variant::preferred(n));
+        let title = format!(
+            "Searched vs preferred — N={n}, {} exchange, {} codelets",
+            o.precision.tag(),
+            backend.tag()
+        );
+        let mut t = Table::new(
+            &title,
+            &["plan", "schedule", "model cost us/line", "GFLOPS", "model ratio"],
+        );
+        let mut rng = Rng::new(n as u64);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let flops = fft_flops(n) * batch as f64;
+        for (label, schedule, cost) in [
+            ("searched", searched, o.result.cost),
+            ("preferred", &preferred, o.result.preferred_cost),
+        ] {
+            let ex = planner
+                .executor_scheduled(schedule, backend, o.precision)
+                .expect("executor");
+            let m = b.run(&format!("n={n} {} {label}", o.precision.tag()), || {
+                ex.execute_batch(&x, batch, Direction::Forward).unwrap()
+            });
+            t.row(&[
+                label.to_string(),
+                schedule.tag(),
+                format!("{:.3}", cost * 1e6),
+                format!("{:.2}", gflops(flops, m.median_secs())),
+                format!("{:.3}", o.result.ratio()),
+            ]);
+        }
+        t.note("model ratio <= 1.000 by construction; GFLOPS is the end-to-end re-measurement");
+        t.print();
+        json.add(&t);
+    }
+
+    match json.write_repo_root() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+}

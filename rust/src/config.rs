@@ -112,6 +112,93 @@ impl Document {
     }
 }
 
+/// One documented `APPLEFFT_*` environment knob.
+#[derive(Clone, Copy, Debug)]
+pub struct EnvKnob {
+    /// Full variable name (`APPLEFFT_...`).
+    pub name: &'static str,
+    /// Accepted values, human-readable.
+    pub values: &'static str,
+    /// What it does and what the default is.
+    pub what: &'static str,
+}
+
+/// Every environment knob the crate reads, in one place. `applefft
+/// serve --help` prints this table, and `env_knobs_cover_every_use`
+/// scans the source tree so a new `APPLEFFT_*` read cannot land
+/// undocumented (and a documented knob cannot silently stop being
+/// read).
+pub fn env_knobs() -> &'static [EnvKnob] {
+    &[
+        EnvKnob {
+            name: "APPLEFFT_ARTIFACTS",
+            values: "path",
+            what: "AOT artifacts directory (default: <repo>/artifacts)",
+        },
+        EnvKnob {
+            name: "APPLEFFT_BENCH_QUICK",
+            values: "1",
+            what: "shrink bench warmup/iteration counts for smoke runs",
+        },
+        EnvKnob {
+            name: "APPLEFFT_CODELET",
+            values: "scalar|simd",
+            what: "stage-codelet backend (default: simd when compiled, else scalar)",
+        },
+        EnvKnob {
+            name: "APPLEFFT_PRECISION",
+            values: "f32|bfp16",
+            what: "process-default exchange-tier precision (default: f32)",
+        },
+        EnvKnob {
+            name: "APPLEFFT_PROP_CASES",
+            values: "integer",
+            what: "property-test cases per property (default: per-test)",
+        },
+        EnvKnob {
+            name: "APPLEFFT_PROP_SEED",
+            values: "u64",
+            what: "property-test base seed, for reproducing failures",
+        },
+        EnvKnob {
+            name: "APPLEFFT_SHARDS",
+            values: "integer >= 1",
+            what: "default coordinator shard count (default: 1)",
+        },
+        EnvKnob {
+            name: "APPLEFFT_THREADS",
+            values: "integer >= 1",
+            what: "batch-executor worker threads (default: available parallelism, capped)",
+        },
+        EnvKnob {
+            name: "APPLEFFT_TUNE",
+            values: "off|0",
+            what: "disable the tuning cache; planners serve Variant::preferred only",
+        },
+        EnvKnob {
+            name: "APPLEFFT_TUNE_CACHE",
+            values: "path",
+            what: "tuning-cache file (default: ~/.cache/applefft/tuned.json)",
+        },
+    ]
+}
+
+/// The knob table rendered for `--help` output.
+pub fn env_knobs_help() -> String {
+    let mut out = String::from("Environment knobs:\n");
+    let width = env_knobs().iter().map(|k| k.name.len()).max().unwrap_or(0);
+    for k in env_knobs() {
+        out.push_str(&format!(
+            "  {:width$}  {:<12}  {}\n",
+            k.name,
+            k.values,
+            k.what,
+            width = width
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,5 +253,57 @@ file = fft8192_fwd.hlo.txt
     fn empty_ok() {
         let doc = Document::parse("\n# only comments\n").unwrap();
         assert!(doc.sections.is_empty());
+    }
+
+    /// Every `APPLEFFT_*` name appearing anywhere under `src/` (code,
+    /// doc comments, strings) must be in [`env_knobs`], and every
+    /// documented knob must still appear in the source. A new env read
+    /// fails this test until it is documented; a removed knob fails it
+    /// until the table drops the row.
+    #[test]
+    fn env_knobs_cover_every_use() {
+        fn scan(dir: &Path, found: &mut std::collections::BTreeSet<String>) {
+            for entry in std::fs::read_dir(dir).unwrap() {
+                let path = entry.unwrap().path();
+                if path.is_dir() {
+                    scan(&path, found);
+                } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                    let text = std::fs::read_to_string(&path).unwrap();
+                    let mut rest = text.as_str();
+                    while let Some(at) = rest.find("APPLEFFT_") {
+                        let tail = &rest[at..];
+                        let len = tail
+                            .find(|c: char| !(c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_'))
+                            .unwrap_or(tail.len());
+                        // Bare prefix occurrences (this scanner's own
+                        // needle) have no suffix — skip them.
+                        if len > "APPLEFFT_".len() {
+                            found.insert(tail[..len].to_string());
+                        }
+                        rest = &rest[at + len.max(1)..];
+                    }
+                }
+            }
+        }
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let mut found = std::collections::BTreeSet::new();
+        scan(&src, &mut found);
+        let documented: std::collections::BTreeSet<String> =
+            env_knobs().iter().map(|k| k.name.to_string()).collect();
+        let undocumented: Vec<_> = found.difference(&documented).collect();
+        assert!(
+            undocumented.is_empty(),
+            "env knobs read in src/ but missing from config::env_knobs(): {undocumented:?}"
+        );
+        let stale: Vec<_> = documented.difference(&found).collect();
+        assert!(
+            stale.is_empty(),
+            "env knobs documented but never read in src/: {stale:?}"
+        );
+        // The help rendering carries every row.
+        let help = env_knobs_help();
+        for k in env_knobs() {
+            assert!(help.contains(k.name), "help is missing {}", k.name);
+        }
     }
 }

@@ -22,8 +22,10 @@ const SNR_SAMPLE_EVERY: u64 = 8;
 /// thread**, through a worker-owned planner — never through the engine.
 /// The device thread's `busy_ns` is the GFLOPS denominator; routing the
 /// replay through it would bill unproductive reference work into every
-/// bfp16 throughput number. All serving artifacts are radix-8, so the
-/// replay matches the native backend's plan shape exactly.
+/// bfp16 throughput number. All serving artifacts are radix-8 (tuned
+/// hosts may substitute a searched schedule — the replay makes the same
+/// tuning-cache consultation as the serving path, so the plan shapes
+/// agree either way).
 fn f32_replay(
     kind: &TileKind,
     input: &SplitComplex,
@@ -33,11 +35,12 @@ fn f32_replay(
     use std::sync::OnceLock;
     static PLANNER: OnceLock<crate::fft::plan::NativePlanner> = OnceLock::new();
     let planner = PLANNER.get_or_init(crate::fft::plan::NativePlanner::new);
-    let ex = planner.executor_with_precision(
+    let ex = planner.executor_tuned(
         n,
         crate::fft::plan::Variant::Radix8,
         crate::fft::codelet::select(),
         Precision::F32,
+        batch,
     )?;
     match kind {
         TileKind::Fft(dir) => ex.execute_batch(input, batch, *dir),

@@ -78,6 +78,50 @@
 //! mirrors the paper's vDSP validation tables) and by the proptest
 //! equivalence property.
 //!
+//! # Schedule search
+//!
+//! [`plan::Variant::preferred`] is a two-case hand heuristic standing
+//! in for a plan space that has grown with every tier above: radix per
+//! stage, four-step split point, codelet backend, exchange precision,
+//! batch shape. [`tune`] replaces it with a searched schedule:
+//!
+//! * **DAG formulation** — a plan is a path through a stage DAG. For a
+//!   single-threadgroup row of length `2^m`, nodes are the remaining
+//!   exponent (plus a spent-the-radix-2 bit and the stage count) and
+//!   edges are radix-2/4/8 Stockham stages; sizes above 4096 prepend a
+//!   four-step `(n1, n2)` split edge (`n1 ∈ {2, 4}`, the column
+//!   codelet limit). Shortest path = cheapest schedule. Paths are
+//!   capped at the heuristic's pass count — the paper's premise is
+//!   that barrier count dominates — so the searched plan can rebalance
+//!   radices but never adds a pass, and since the preferred ladder is
+//!   itself in the capped space the searched modeled cost is `<=` the
+//!   heuristic's by construction. The searched winner is expressed as
+//!   a [`plan::Schedule`] (arbitrary ordered radix list + optional
+//!   split), the general plan shape [`plan::NativePlan`] now executes
+//!   beyond the three fixed `Variant` ladders.
+//! * **Cost-model assumptions** — [`tune::CostModel`] prices an edge
+//!   by timing the real stage codelet (plus the BFP codec round-trip
+//!   at `Bfp16`) at a realistic batch shape on [`crate::bench`],
+//!   memoized per `(edge, backend, precision)`. Stage cost is assumed
+//!   position-independent (it depends on row length and radix only),
+//!   which is what lets schedules canonicalise to non-increasing radix
+//!   order; four-step column overhead is measured as a whole line
+//!   minus the memoized row stages, clamped at zero.
+//! * **Cache key semantics** — winners persist to a per-host JSON
+//!   cache (`$APPLEFFT_TUNE_CACHE`, else
+//!   `~/.cache/applefft/tuned.json`; `APPLEFFT_TUNE=off` disables)
+//!   keyed `(n, resolved backend, precision, batch_bucket)` with a
+//!   schema-version field. [`plan::NativePlanner`] loads it lazily on
+//!   the first auto-plan consultation; lookups try the exact batch
+//!   bucket then the default tuning bucket; any miss, corrupt file, or
+//!   schema mismatch degrades to `Variant::preferred` — a cold planner
+//!   is bitwise-identical to the pre-tuning planner. Explicitly
+//!   requested variants (`plan(n, variant)`) never consult the cache.
+//!
+//! `applefft tune` runs the search offline;
+//! [`crate::runtime::Engine::warm_all_calibrate`] calibrates every
+//! registered size and persists the cache before warming.
+//!
 //! Algorithms: naive O(N^2) DFT oracle ([`dft`]), radix-2/radix-4
 //! Stockham autosort ([`stockham`]), the paper's radix-8 split-radix DIT
 //! butterfly ([`radix8`]), and the four-step decomposition for N > 4096
@@ -97,6 +141,7 @@ pub mod real;
 #[cfg(feature = "simd")]
 pub mod simd;
 pub mod stockham;
+pub mod tune;
 pub mod twiddle;
 
 /// Transform direction. Inverse is normalised by 1/N (vDSP convention is

@@ -76,6 +76,144 @@ impl Variant {
     }
 }
 
+/// An explicit, fully-general stage schedule — the plan shape the
+/// searcher in [`crate::fft::tune`] emits. Where [`Variant`] names one
+/// of two fixed greedy radix ladders, a `Schedule` is an arbitrary
+/// ordered list of radix-{2,4,8} stages (optionally under a four-step
+/// `(n1, n2)` split), so searched factorizations that no `Variant`
+/// expresses — e.g. `[8, 8, 4, 4]` at 1024, or the `(4, 2048)` split of
+/// 8192 — are runnable through the same codelet drivers.
+///
+/// Invariants enforced at construction (the stockham/fourstep drivers
+/// assert the same ones): every radix is 2, 4, or 8; the radix product
+/// is the row length; rows fit the single-threadgroup budget (≤ 4096);
+/// four-step column height `n1` ∈ {2, 4} (the only column codelets the
+/// paper ships).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Schedule {
+    radices: Vec<usize>,
+    split: Option<(usize, usize)>,
+}
+
+impl Schedule {
+    /// A single-threadgroup Stockham schedule: `radices` multiply out
+    /// to the transform size (≤ 4096).
+    pub fn single(radices: Vec<usize>) -> Result<Schedule> {
+        let n: usize = radices.iter().product();
+        ensure!(!radices.is_empty(), "schedule needs at least one stage");
+        ensure!(
+            radices.iter().all(|r| matches!(r, 2 | 4 | 8)),
+            "schedule radices must be 2, 4, or 8 (got {radices:?})"
+        );
+        ensure!(
+            n.is_power_of_two() && (2..=4096).contains(&n),
+            "single-threadgroup schedule size {n} out of range (2..=4096)"
+        );
+        Ok(Schedule { radices, split: None })
+    }
+
+    /// A four-step schedule: an `n1`-point column DFT (n1 ∈ {2, 4})
+    /// over rows of length `n2 = product(radices)` ≤ 4096.
+    pub fn four_step(n1: usize, n2: usize, radices: Vec<usize>) -> Result<Schedule> {
+        ensure!(matches!(n1, 2 | 4), "four-step n1={n1} not supported (paper uses 2 and 4)");
+        let rows = Schedule::single(radices)?;
+        ensure!(
+            rows.n() == n2,
+            "four-step row radices {:?} do not multiply to n2={n2}",
+            rows.radices
+        );
+        Ok(Schedule { radices: rows.radices, split: Some((n1, n2)) })
+    }
+
+    /// The schedule [`Variant`]'s greedy ladder produces for `n` —
+    /// exactly what [`NativePlan::new`] has always built, so a plan
+    /// constructed through this is bitwise-identical to the historical
+    /// variant plan.
+    pub fn from_variant(n: usize, variant: Variant) -> Schedule {
+        assert!(n.is_power_of_two() && n >= 2, "size {n} must be a power of two >= 2");
+        if n <= 4096 {
+            Schedule { radices: radix_schedule(n, variant.max_radix()), split: None }
+        } else {
+            let (n1, n2) = fourstep::split(n);
+            Schedule { radices: radix_schedule(n2, variant.max_radix()), split: Some((n1, n2)) }
+        }
+    }
+
+    /// Total transform size this schedule covers.
+    pub fn n(&self) -> usize {
+        let row: usize = self.radices.iter().product();
+        match self.split {
+            None => row,
+            Some((n1, _)) => n1 * row,
+        }
+    }
+
+    /// Per-row stage radices (the whole transform when not split).
+    pub fn radices(&self) -> &[usize] {
+        &self.radices
+    }
+
+    /// The four-step `(n1, n2)` split, if any.
+    pub fn split(&self) -> Option<(usize, usize)> {
+        self.split
+    }
+
+    /// Stockham passes per line, counted like [`NativePlan::passes`]:
+    /// the four-step column DFT is one extra pass.
+    pub fn passes(&self) -> usize {
+        self.radices.len() + usize::from(self.split.is_some())
+    }
+
+    /// The [`Variant`] label closest to this schedule — used only for
+    /// `NativePlan::variant` bookkeeping (telemetry tags, never
+    /// dispatch).
+    pub fn nearest_variant(&self) -> Variant {
+        if self.radices.contains(&8) {
+            Variant::Radix8
+        } else {
+            Variant::Radix4
+        }
+    }
+
+    /// Compact text form, the tuning cache's wire format:
+    /// `"8.8.4.4"` for a single-threadgroup schedule,
+    /// `"4x2048:8.8.8.4"` for a four-step one.
+    pub fn tag(&self) -> String {
+        let stages: Vec<String> = self.radices.iter().map(|r| r.to_string()).collect();
+        match self.split {
+            None => stages.join("."),
+            Some((n1, n2)) => format!("{n1}x{n2}:{}", stages.join(".")),
+        }
+    }
+}
+
+impl std::str::FromStr for Schedule {
+    type Err = anyhow::Error;
+
+    /// Parse the [`tag`](Schedule::tag) form, re-validating every
+    /// construction invariant (a corrupt cache entry cannot produce an
+    /// unrunnable schedule — it produces an `Err` and the planner falls
+    /// back to the heuristic).
+    fn from_str(s: &str) -> Result<Schedule> {
+        let parse_radices = |list: &str| -> Result<Vec<usize>> {
+            list.split('.')
+                .map(|t| t.parse::<usize>().map_err(|e| anyhow::anyhow!("bad radix {t:?}: {e}")))
+                .collect()
+        };
+        match s.split_once(':') {
+            None => Schedule::single(parse_radices(s)?),
+            Some((head, rows)) => {
+                let (n1s, n2s) = head
+                    .split_once('x')
+                    .ok_or_else(|| anyhow::anyhow!("bad four-step head {head:?}"))?;
+                let n1: usize = n1s.parse().map_err(|e| anyhow::anyhow!("bad n1 {n1s:?}: {e}"))?;
+                let n2: usize = n2s.parse().map_err(|e| anyhow::anyhow!("bad n2 {n2s:?}: {e}"))?;
+                Schedule::four_step(n1, n2, parse_radices(rows)?)
+            }
+        }
+    }
+}
+
 /// How the transform is decomposed (paper §IV-D synthesis rules).
 #[derive(Clone, Debug)]
 enum Decomposition {
@@ -115,22 +253,36 @@ pub struct NativePlan {
 impl NativePlan {
     pub fn new(n: usize, variant: Variant) -> Result<NativePlan> {
         ensure!(n.is_power_of_two() && n >= 2, "FFT size {n} must be a power of two >= 2");
-        let decomp = if n <= 4096 {
-            let radices = radix_schedule(n, variant.max_radix());
-            let tables = PlanTables::for_radices(n, &radices);
-            Decomposition::Single { radices, tables }
-        } else {
-            let (n1, n2) = fourstep::split(n);
-            let radices = radix_schedule(n2, variant.max_radix());
-            let tables = PlanTables::for_radices(n2, &radices);
-            Decomposition::FourStep {
-                n1,
-                n2,
-                radices,
-                tables,
-                // Inverse transforms reuse tw_fwd via the conjugation
-                // identity, so only forward twiddles are materialised.
-                tw_fwd: fourstep_twiddles(n1, n2, false),
+        Self::build(variant, Schedule::from_variant(n, variant))
+    }
+
+    /// Build a plan from an explicit (typically searched) [`Schedule`].
+    /// The `variant` field is set to the nearest ladder label for
+    /// telemetry; dispatch follows the schedule's stage list exactly.
+    pub fn with_schedule(schedule: Schedule) -> Result<NativePlan> {
+        Self::build(schedule.nearest_variant(), schedule)
+    }
+
+    fn build(variant: Variant, schedule: Schedule) -> Result<NativePlan> {
+        let n = schedule.n();
+        let decomp = match schedule.split() {
+            None => {
+                let radices = schedule.radices().to_vec();
+                let tables = PlanTables::for_radices(n, &radices);
+                Decomposition::Single { radices, tables }
+            }
+            Some((n1, n2)) => {
+                let radices = schedule.radices().to_vec();
+                let tables = PlanTables::for_radices(n2, &radices);
+                Decomposition::FourStep {
+                    n1,
+                    n2,
+                    radices,
+                    tables,
+                    // Inverse transforms reuse tw_fwd via the conjugation
+                    // identity, so only forward twiddles are materialised.
+                    tw_fwd: fourstep_twiddles(n1, n2, false),
+                }
             }
         };
         Ok(NativePlan {
@@ -141,6 +293,19 @@ impl NativePlan {
             precision: bfp::select(),
             use_tables: true,
         })
+    }
+
+    /// The stage schedule this plan dispatches (reconstructed from the
+    /// decomposition, so it is always the one that actually runs).
+    pub fn schedule(&self) -> Schedule {
+        match &self.decomp {
+            Decomposition::Single { radices, .. } => {
+                Schedule { radices: radices.clone(), split: None }
+            }
+            Decomposition::FourStep { n1, n2, radices, .. } => {
+                Schedule { radices: radices.clone(), split: Some((*n1, *n2)) }
+            }
+        }
     }
 
     /// Disable twiddle tables (use the on-the-fly sincos chain).
@@ -499,6 +664,16 @@ impl NativePlan {
 pub struct NativePlanner {
     plans: Mutex<HashMap<(usize, Variant, CodeletBackend, Precision), Arc<NativePlan>>>,
     executors: Mutex<HashMap<(usize, Variant, CodeletBackend, Precision), Arc<BatchExecutor>>>,
+    /// Searched-schedule plans/executors, keyed by the schedule itself
+    /// (two cache entries that searched to the same stage list share a
+    /// plan even if their tuning keys differ).
+    sched_plans: Mutex<HashMap<(Schedule, CodeletBackend, Precision), Arc<NativePlan>>>,
+    sched_executors: Mutex<HashMap<(Schedule, CodeletBackend, Precision), Arc<BatchExecutor>>>,
+    /// The per-host tuning cache ([`crate::fft::tune::TuneCache`]),
+    /// loaded lazily on the first auto-plan consultation — one file
+    /// stat + parse per planner, ever, and zero filesystem work at
+    /// construction. `None` = not consulted yet.
+    tuned: Mutex<Option<Arc<super::tune::TuneCache>>>,
 }
 
 impl NativePlanner {
@@ -515,9 +690,18 @@ impl NativePlanner {
     /// The plan for `n` on the planner's per-size preferred variant
     /// ([`Variant::preferred`]) — what size-agnostic callers (real FFT,
     /// convolution, the spectral pipeline) should use instead of
-    /// hardcoding a variant.
+    /// hardcoding a variant. Consults the per-host tuning cache first;
+    /// cold cache (or `APPLEFFT_TUNE=off`) falls back to the heuristic.
     pub fn plan_auto(&self, n: usize) -> Result<Arc<NativePlan>> {
         ensure!(n.is_power_of_two() && n >= 2, "FFT size {n} must be a power of two >= 2");
+        let (backend, precision) = (codelet::select(), bfp::select());
+        if let Some(s) =
+            self.tuned_schedule(n, backend, precision, super::tune::DEFAULT_TUNE_BATCH)
+        {
+            if let Ok(p) = self.plan_scheduled(&s, backend, precision) {
+                return Ok(p);
+            }
+        }
         self.plan(n, Variant::preferred(n))
     }
 
@@ -530,9 +714,105 @@ impl NativePlanner {
     /// The pooled executor for `n` on the preferred variant, pinned to
     /// an exchange precision — what precision-policy carriers (the
     /// spectral pipeline, SAR compressors, the serving backend) use.
+    /// Tuning-cache-aware, like [`Self::plan_auto`].
     pub fn executor_auto_with(&self, n: usize, precision: Precision) -> Result<Arc<BatchExecutor>> {
         ensure!(n.is_power_of_two() && n >= 2, "FFT size {n} must be a power of two >= 2");
-        self.executor_with_precision(n, Variant::preferred(n), codelet::select(), precision)
+        self.executor_tuned(
+            n,
+            Variant::preferred(n),
+            codelet::select(),
+            precision,
+            super::tune::DEFAULT_TUNE_BATCH,
+        )
+    }
+
+    /// The per-host tuning cache, loading it from disk exactly once.
+    fn tuning(&self) -> Arc<super::tune::TuneCache> {
+        let mut slot = self.tuned.lock().unwrap();
+        slot.get_or_insert_with(|| Arc::new(super::tune::TuneCache::load_default())).clone()
+    }
+
+    /// Replace the tuning cache (calibration and tests; the lazy
+    /// default load is skipped for whatever is installed here).
+    pub fn install_tuning(&self, cache: super::tune::TuneCache) {
+        *self.tuned.lock().unwrap() = Some(Arc::new(cache));
+    }
+
+    /// The searched schedule the tuning cache holds for
+    /// `(n, backend, precision, batch)`, if any. Batch is bucketed to
+    /// the cache's power-of-two buckets; a miss on the exact bucket
+    /// falls back to the default tuning bucket before giving up.
+    pub fn tuned_schedule(
+        &self,
+        n: usize,
+        backend: CodeletBackend,
+        precision: Precision,
+        batch: usize,
+    ) -> Option<Schedule> {
+        self.tuning().lookup(n, backend.resolve(), precision, batch).cloned()
+    }
+
+    /// The plan for an explicit (searched) schedule, cached like the
+    /// variant plans.
+    pub fn plan_scheduled(
+        &self,
+        schedule: &Schedule,
+        backend: CodeletBackend,
+        precision: Precision,
+    ) -> Result<Arc<NativePlan>> {
+        let backend = backend.resolve();
+        let mut cache = self.sched_plans.lock().unwrap();
+        if let Some(p) = cache.get(&(schedule.clone(), backend, precision)) {
+            return Ok(p.clone());
+        }
+        let plan = Arc::new(
+            NativePlan::with_schedule(schedule.clone())?
+                .with_codelet(backend)
+                .with_precision(precision),
+        );
+        cache.insert((schedule.clone(), backend, precision), plan.clone());
+        Ok(plan)
+    }
+
+    /// The pooled executor for an explicit (searched) schedule.
+    pub fn executor_scheduled(
+        &self,
+        schedule: &Schedule,
+        backend: CodeletBackend,
+        precision: Precision,
+    ) -> Result<Arc<BatchExecutor>> {
+        let backend = backend.resolve();
+        // Single-flight, like `executor_with_precision`.
+        let mut cache = self.sched_executors.lock().unwrap();
+        if let Some(e) = cache.get(&(schedule.clone(), backend, precision)) {
+            return Ok(e.clone());
+        }
+        let plan = self.plan_scheduled(schedule, backend, precision)?;
+        let exec = Arc::new(BatchExecutor::with_threads(plan, default_threads()));
+        cache.insert((schedule.clone(), backend, precision), exec.clone());
+        Ok(exec)
+    }
+
+    /// The serving path's executor lookup: the tuning cache's searched
+    /// schedule for `(n, backend, precision, batch)` when one exists,
+    /// else exactly the executor `fallback` would have produced — a
+    /// cold cache is bitwise-indistinguishable from the pre-tuning
+    /// planner. A cache entry that fails to build a plan degrades to
+    /// the fallback too, never to an error.
+    pub fn executor_tuned(
+        &self,
+        n: usize,
+        fallback: Variant,
+        backend: CodeletBackend,
+        precision: Precision,
+        batch: usize,
+    ) -> Result<Arc<BatchExecutor>> {
+        if let Some(s) = self.tuned_schedule(n, backend, precision, batch) {
+            if let Ok(e) = self.executor_scheduled(&s, backend, precision) {
+                return Ok(e);
+            }
+        }
+        self.executor_with_precision(n, fallback, backend, precision)
     }
 
     /// The plan for `(n, variant)` pinned to a codelet backend, on the
@@ -630,13 +910,25 @@ impl NativePlanner {
         self.plans.lock().unwrap().len()
     }
 
-    /// Aggregate workspace-pool telemetry across all cached executors:
-    /// `(workspaces created, buffer grow events)`. Used by the serving
-    /// layer's allocation-free-steady-state test.
+    /// Number of cached searched-schedule plans (the variant plans are
+    /// counted by [`Self::cached_plans`]).
+    pub fn cached_schedules(&self) -> usize {
+        self.sched_plans.lock().unwrap().len()
+    }
+
+    /// Aggregate workspace-pool telemetry across all cached executors
+    /// (variant- and schedule-keyed): `(workspaces created, buffer grow
+    /// events)`. Used by the serving layer's
+    /// allocation-free-steady-state test.
     pub fn workspace_stats(&self) -> (usize, usize) {
-        let cache = self.executors.lock().unwrap();
-        let created = cache.values().map(|e| e.pool_stats().0).sum();
-        let grows = cache.values().map(|e| e.pool_grow_events()).sum();
+        let execs = self.executors.lock().unwrap();
+        let sched = self.sched_executors.lock().unwrap();
+        let all = execs.values().chain(sched.values());
+        let (mut created, mut grows) = (0, 0);
+        for e in all {
+            created += e.pool_stats().0;
+            grows += e.pool_grow_events();
+        }
         (created, grows)
     }
 }
@@ -981,5 +1273,158 @@ mod tests {
         let a = with.execute_batch(&x, 1, Direction::Forward).unwrap();
         let b = without.execute_batch(&x, 1, Direction::Forward).unwrap();
         assert!(a.rel_l2_error(&b) < 1e-5);
+    }
+
+    #[test]
+    fn schedule_built_plans_are_bitwise_the_variant_plans() {
+        // `NativePlan::new` now routes through `Schedule::from_variant`;
+        // this pins the refactor: a plan built explicitly from that
+        // schedule runs the exact same stage list, so outputs are
+        // identical bits to the variant-built plan — the "cold planner
+        // behaves exactly as today" acceptance bound at the plan level.
+        let mut rng = Rng::new(0x5C);
+        for &n in &[256usize, 1024, 8192] {
+            let batch = 2;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            for variant in [Variant::Radix4, Variant::Radix8] {
+                let via_variant = NativePlan::new(n, variant).unwrap();
+                let sched = Schedule::from_variant(n, variant);
+                assert_eq!(via_variant.schedule(), sched, "n={n} {variant:?}");
+                let via_schedule = NativePlan::with_schedule(sched).unwrap();
+                for dir in [Direction::Forward, Direction::Inverse] {
+                    let a = via_variant.execute_batch(&x, batch, dir).unwrap();
+                    let b = via_schedule.execute_batch(&x, batch, dir).unwrap();
+                    assert_eq!(a.re, b.re, "re: n={n} {variant:?} {dir:?}");
+                    assert_eq!(a.im, b.im, "im: n={n} {variant:?} {dir:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_ladder_schedules_are_correct() {
+        // Schedules no `Variant` ladder produces: a mixed-radix stage
+        // list and the non-default four-step split. Both must transform
+        // correctly — this is what makes the searcher's space runnable.
+        let mut rng = Rng::new(0x5D);
+        let n = 1024;
+        let batch = 2;
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let want = dft_batch(&x, n, batch, Direction::Forward);
+        for radices in [vec![8, 8, 4, 4], vec![4, 8, 8, 4], vec![2, 8, 8, 8]] {
+            let plan =
+                NativePlan::with_schedule(Schedule::single(radices.clone()).unwrap()).unwrap();
+            let got = plan.execute_batch(&x, batch, Direction::Forward).unwrap();
+            let err = got.rel_l2_error(&want);
+            assert!(err < 2e-4, "{radices:?}: rel err {err}");
+            let back = plan.execute_batch(&got, batch, Direction::Inverse).unwrap();
+            assert!(back.rel_l2_error(&x) < 1e-4, "{radices:?}: roundtrip");
+        }
+        // Four-step 8192 as (4, 2048) instead of the default (2, 4096).
+        let n = 8192;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let sched = Schedule::four_step(4, 2048, vec![8, 8, 8, 4]).unwrap();
+        assert_eq!(sched.n(), n);
+        assert_eq!(sched.passes(), 5);
+        let plan = NativePlan::with_schedule(sched).unwrap();
+        let got = plan.execute_batch(&x, 1, Direction::Forward).unwrap();
+        let want =
+            NativePlan::new(n, Variant::Radix8).unwrap().execute_batch(&x, 1, Direction::Forward);
+        assert!(got.rel_l2_error(&want.unwrap()) < 1e-4, "split (4,2048)");
+        let back = plan.execute_batch(&got, 1, Direction::Inverse).unwrap();
+        assert!(back.rel_l2_error(&x) < 1e-4, "split (4,2048) roundtrip");
+    }
+
+    #[test]
+    fn schedule_tag_roundtrips_and_rejects_garbage() {
+        for sched in [
+            Schedule::single(vec![8, 8, 4]).unwrap(),
+            Schedule::single(vec![2]).unwrap(),
+            Schedule::four_step(2, 4096, vec![8, 8, 8, 8]).unwrap(),
+            Schedule::four_step(4, 2048, vec![8, 8, 8, 4]).unwrap(),
+        ] {
+            let tag = sched.tag();
+            let back: Schedule = tag.parse().unwrap();
+            assert_eq!(back, sched, "tag {tag:?}");
+        }
+        assert_eq!(Schedule::four_step(2, 4096, vec![8, 8, 8, 8]).unwrap().tag(), "2x4096:8.8.8.8");
+        for bad in ["", "8.8.3", "7", "8x512:8.8.8", "2x4096:8.8.8", "2x4096", "8..8"] {
+            assert!(bad.parse::<Schedule>().is_err(), "{bad:?} must not parse");
+        }
+        // Oversized rows violate the threadgroup budget.
+        assert!(Schedule::single(vec![8; 5]).is_err(), "8^5 = 32768 > 4096");
+        assert!(Schedule::four_step(8, 512, vec![8, 8, 8]).is_err(), "n1=8 unsupported");
+    }
+
+    #[test]
+    fn executor_tuned_cold_is_bitwise_the_preferred_executor() {
+        use crate::fft::tune::TuneCache;
+        let mut rng = Rng::new(0x5E);
+        let planner = NativePlanner::new();
+        // Pin an empty cache so the test never reads a developer's real
+        // per-host cache file.
+        planner.install_tuning(TuneCache::default());
+        for &n in &[1024usize, 8192] {
+            let batch = 3;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let tuned = planner
+                .executor_tuned(
+                    n,
+                    Variant::preferred(n),
+                    CodeletBackend::Scalar,
+                    Precision::F32,
+                    batch,
+                )
+                .unwrap();
+            let fallback = planner
+                .executor_with_precision(
+                    n,
+                    Variant::preferred(n),
+                    CodeletBackend::Scalar,
+                    Precision::F32,
+                )
+                .unwrap();
+            // Not merely equivalent: the identical cached executor.
+            assert!(Arc::ptr_eq(&tuned, &fallback), "n={n}: cold tuned must share the executor");
+            let a = tuned.execute_batch(&x, batch, Direction::Forward).unwrap();
+            let b = fallback.execute_batch(&x, batch, Direction::Forward).unwrap();
+            assert_eq!(a.re, b.re, "n={n}");
+            assert_eq!(a.im, b.im, "n={n}");
+        }
+        assert_eq!(planner.cached_schedules(), 0, "cold path must not build schedule plans");
+    }
+
+    #[test]
+    fn installed_tuning_reroutes_the_auto_paths() {
+        use crate::fft::tune::{batch_bucket, TuneCache, DEFAULT_TUNE_BATCH};
+        let planner = NativePlanner::new();
+        let sched = Schedule::single(vec![8, 8, 4, 4]).unwrap();
+        let mut cache = TuneCache::default();
+        cache.insert(
+            1024,
+            codelet::select(),
+            bfp::select(),
+            batch_bucket(DEFAULT_TUNE_BATCH),
+            sched.clone(),
+            0.0,
+        );
+        planner.install_tuning(cache);
+        // plan_auto serves the searched schedule...
+        let plan = planner.plan_auto(1024).unwrap();
+        assert_eq!(plan.schedule(), sched);
+        let ex = planner.executor_auto(1024).unwrap();
+        assert_eq!(ex.plan().schedule(), sched);
+        // ...while explicit-variant lookups are untouched.
+        let pinned = planner.plan(1024, Variant::Radix4).unwrap();
+        assert_eq!(pinned.schedule(), Schedule::from_variant(1024, Variant::Radix4));
+        // Sizes the cache has no entry for fall back to the heuristic.
+        let cold = planner.plan_auto(512).unwrap();
+        assert_eq!(cold.schedule(), Schedule::from_variant(512, Variant::preferred(512)));
+        // Batch buckets without an entry fall back to the default
+        // bucket's entry rather than abandoning the searched schedule.
+        let bucketed = planner
+            .executor_tuned(1024, Variant::Radix8, codelet::select(), bfp::select(), 61)
+            .unwrap();
+        assert_eq!(bucketed.plan().schedule(), sched);
     }
 }

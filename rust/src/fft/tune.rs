@@ -1,0 +1,1427 @@
+//! Searched plan schedules: enumerator, measured cost model, and the
+//! persistent per-host tuning cache.
+//!
+//! `Variant::preferred` is a two-case hand heuristic. This module
+//! replaces it (for auto-planned sizes) with a shortest-path search
+//! over the actual plan space, in the style of "Shortest-Path FFT"
+//! (arXiv 2604.04311):
+//!
+//! - **The DAG.** For a row of length `2^m`, a node is the remaining
+//!   exponent still to be factored (plus a "spent the one allowed
+//!   radix-2 stage" bit and the stage count so far); an edge is one
+//!   Stockham stage of radix 2, 4, or 8, weighted by its measured
+//!   cost. A full factorization is a path from exponent `m` to 0, and
+//!   the cheapest legal schedule is the shortest such path. Sizes
+//!   above the 4096-point single-threadgroup budget add a four-step
+//!   split choice `(n1, n2)`, `n1 ∈ {2, 4}` (the only column codelets
+//!   the paper ships), priced as one [`Edge::Column`] plus `n1` row
+//!   paths.
+//! - **Search caps.** Paths are capped at `Variant::preferred(n)`'s
+//!   pass count — the paper's premise is that barrier (pass) count
+//!   dominates, so the searcher may rebalance radices but never adds a
+//!   pass. The preferred ladder itself is always inside the capped
+//!   space, so the searched cost is `<=` the heuristic's cost *by
+//!   construction*, not by luck. At most one radix-2 stage is explored
+//!   (two radix-2 stages are dominated by one radix-4) and stage cost
+//!   is position-independent under the model, so schedules are
+//!   canonicalised to non-increasing radix order — together this keeps
+//!   the whole enumerable space at 34 schedules across the 7 paper
+//!   sizes, small enough for the conformance suite to gate every one.
+//! - **The cost model.** [`CostModel`] prices an [`Edge`] by running
+//!   the real stage codelet (plus the BFP exchange codec round-trip at
+//!   `Bfp16`) on the [`crate::bench`] harness at a realistic batch
+//!   shape, memoizing per-edge: pricing every candidate schedule for
+//!   all 7 paper sizes re-measures each distinct edge once. Column
+//!   edges are measured as a whole four-step line minus the (memoized)
+//!   canonical row stages, clamped at zero — the residual transpose +
+//!   twiddle + column-DFT overhead.
+//! - **The cache.** [`TuneCache`] persists searched winners to
+//!   `~/.cache/applefft/tuned.json` (override `APPLEFFT_TUNE_CACHE`;
+//!   kill switch `APPLEFFT_TUNE=off`), keyed
+//!   `(n, backend, precision, batch_bucket)`. `NativePlanner` loads it
+//!   lazily on the first auto-plan consultation and serves the searched
+//!   [`Schedule`]; anything missing, corrupt, unreadable, or from a
+//!   different [`SCHEMA_VERSION`] degrades to `Variant::preferred` —
+//!   a cold planner is bitwise-identical to the pre-tuning planner.
+//!
+//! The offline entry point is [`Tuner`] (CLI: `applefft tune`);
+//! [`crate::runtime::Engine::warm_all_calibrate`] runs it over every
+//! registered artifact size, persists the cache, then warms — calibrate
+//! once, serve the searched schedule forever.
+
+use super::bfp::{BfpVec, Precision};
+use super::codelet::{self, CodeletBackend};
+use super::exec::Workspace;
+use super::fourstep;
+use super::plan::{Schedule, Variant};
+use super::stockham::radix_schedule;
+use super::twiddle::{fourstep_twiddles, PlanTables, StageTable};
+use crate::bench::{BenchConfig, Benchmark};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, ensure, Result};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Largest single-threadgroup row (the paper's 4096-point budget).
+pub const MAX_SINGLE: usize = 4096;
+
+/// Tuning-cache schema version; bump on any wire-format change. A
+/// cache written by a different version fails [`TuneCache::parse`] and
+/// the planner falls back to the heuristic.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// The batch shape tuning measures at, and the bucket auto-planning
+/// consults when the caller has no batch in hand. 16 lines is the
+/// serving tile's order of magnitude without being so large that
+/// stage timing drowns in memory traffic.
+pub const DEFAULT_TUNE_BATCH: usize = 16;
+
+/// Bucket a runtime batch size for cache keying: clamped
+/// next-power-of-two, so e.g. batches 9..=16 share one searched entry
+/// and anything >= 64 shares the top bucket.
+pub fn batch_bucket(batch: usize) -> usize {
+    batch.max(1).next_power_of_two().min(64)
+}
+
+// ---------------------------------------------------------------------------
+// Plan-space enumeration
+// ---------------------------------------------------------------------------
+
+/// Every canonical radix factorization of a single-threadgroup row:
+/// non-increasing radices from {8, 4, 2} with at most one radix-2
+/// stage. Ordering within a schedule does not change its modeled cost
+/// (stage cost depends on row length and radix only), and a second
+/// radix-2 stage is always dominated by replacing the pair with one
+/// radix-4, so this canonical form loses no optimum.
+pub fn enumerate_radix_schedules(n: usize) -> Vec<Vec<usize>> {
+    assert!(
+        n.is_power_of_two() && (2..=MAX_SINGLE).contains(&n),
+        "row length {n} out of range"
+    );
+    let m = n.trailing_zeros() as usize;
+    let mut out = Vec::new();
+    for twos in 0..=1usize.min(m) {
+        let rest = m - twos;
+        for eights in 0..=rest / 3 {
+            if (rest - 3 * eights) % 2 != 0 {
+                continue;
+            }
+            let fours = (rest - 3 * eights) / 2;
+            let mut radices = vec![8; eights];
+            radices.extend(std::iter::repeat(4).take(fours));
+            radices.extend(std::iter::repeat(2).take(twos));
+            out.push(radices);
+        }
+    }
+    out
+}
+
+/// Legal four-step splits for `n > 4096`: `n1 ∈ {2, 4}` (column
+/// codelet limit) with `n2 = n / n1` inside the threadgroup budget.
+pub fn enumerate_splits(n: usize) -> Vec<(usize, usize)> {
+    assert!(n.is_power_of_two() && n > MAX_SINGLE, "size {n} does not need a split");
+    [2usize, 4]
+        .into_iter()
+        .filter_map(|n1| {
+            let n2 = n / n1;
+            (n2 >= 2 && n2 <= MAX_SINGLE).then_some((n1, n2))
+        })
+        .collect()
+}
+
+/// The complete legal schedule space for `n` — what the conformance
+/// suite gates and the searcher's optimum is drawn from.
+pub fn enumerate_schedules(n: usize) -> Vec<Schedule> {
+    if n <= MAX_SINGLE {
+        enumerate_radix_schedules(n)
+            .into_iter()
+            .map(|r| Schedule::single(r).expect("enumerated radices are valid"))
+            .collect()
+    } else {
+        enumerate_splits(n)
+            .into_iter()
+            .flat_map(|(n1, n2)| {
+                enumerate_radix_schedules(n2)
+                    .into_iter()
+                    .map(move |r| Schedule::four_step(n1, n2, r).expect("enumerated split is valid"))
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Measured cost model
+// ---------------------------------------------------------------------------
+
+/// One priced unit of work in the schedule DAG.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Edge {
+    /// One Stockham stage of `radix` over a `line`-point row
+    /// (including the BFP exchange round-trip at `Bfp16`).
+    Stage { line: usize, radix: usize },
+    /// The four-step `(n1, n2)` overhead that is *not* the n1 row
+    /// transforms: column DFT + twiddle multiply + transpose store.
+    Column { n1: usize, n2: usize },
+}
+
+type Measurer = Box<dyn Fn(Edge, CodeletBackend, Precision, usize) -> f64>;
+
+/// Memoizing per-edge cost oracle. `measured` prices edges on the
+/// bench harness with real codelets; `synthetic` injects a
+/// deterministic function (tests, and the search-optimality proofs).
+pub struct CostModel {
+    backend: CodeletBackend,
+    precision: Precision,
+    batch: usize,
+    /// Measured column edges subtract the memoized canonical row
+    /// stages from a whole-line timing (see module docs); synthetic
+    /// models price `Edge::Column` directly.
+    residual_column: bool,
+    memo: RefCell<HashMap<Edge, f64>>,
+    requests: Cell<usize>,
+    measured: Cell<usize>,
+    measurer: Measurer,
+}
+
+impl CostModel {
+    /// A cost model that times real codelets at `batch` lines per
+    /// measurement, under `config`'s warmup/iteration budget.
+    pub fn measured(
+        backend: CodeletBackend,
+        precision: Precision,
+        batch: usize,
+        config: BenchConfig,
+    ) -> CostModel {
+        CostModel {
+            backend: backend.resolve(),
+            precision,
+            batch: batch.max(1),
+            residual_column: true,
+            memo: RefCell::new(HashMap::new()),
+            requests: Cell::new(0),
+            measured: Cell::new(0),
+            measurer: Box::new(move |edge, b, p, batch| measure_edge(edge, b, p, batch, config)),
+        }
+    }
+
+    /// A deterministic model for tests: `f` is the edge cost, verbatim.
+    pub fn synthetic(f: impl Fn(Edge) -> f64 + 'static) -> CostModel {
+        CostModel {
+            backend: CodeletBackend::Scalar,
+            precision: Precision::F32,
+            batch: 1,
+            residual_column: false,
+            memo: RefCell::new(HashMap::new()),
+            requests: Cell::new(0),
+            measured: Cell::new(0),
+            measurer: Box::new(move |edge, _, _, _| f(edge)),
+        }
+    }
+
+    /// Seconds for one edge (per line), memoized.
+    pub fn edge_cost(&self, edge: Edge) -> f64 {
+        self.requests.set(self.requests.get() + 1);
+        if let Some(&c) = self.memo.borrow().get(&edge) {
+            return c;
+        }
+        let cost = match edge {
+            Edge::Column { n1, n2 } if self.residual_column => {
+                // Price the canonical rows first (memoized — shared
+                // with every single-threadgroup schedule of n2), then
+                // time the whole four-step line and keep the residual.
+                let canonical = radix_schedule(n2, 8);
+                let rows: f64 = canonical
+                    .iter()
+                    .map(|&r| self.edge_cost(Edge::Stage { line: n2, radix: r }))
+                    .sum();
+                self.measured.set(self.measured.get() + 1);
+                let total = (self.measurer)(edge, self.backend, self.precision, self.batch);
+                (total - n1 as f64 * rows).max(0.0)
+            }
+            _ => {
+                self.measured.set(self.measured.get() + 1);
+                (self.measurer)(edge, self.backend, self.precision, self.batch)
+            }
+        };
+        self.memo.borrow_mut().insert(edge, cost);
+        cost
+    }
+
+    /// Price a full schedule: sum of its stage edges, plus the column
+    /// edge (and `n1`-fold row replication) when split.
+    pub fn schedule_cost(&self, schedule: &Schedule) -> f64 {
+        match schedule.split() {
+            None => {
+                let line = schedule.n();
+                schedule
+                    .radices()
+                    .iter()
+                    .map(|&r| self.edge_cost(Edge::Stage { line, radix: r }))
+                    .sum()
+            }
+            Some((n1, n2)) => {
+                let rows: f64 = schedule
+                    .radices()
+                    .iter()
+                    .map(|&r| self.edge_cost(Edge::Stage { line: n2, radix: r }))
+                    .sum();
+                self.edge_cost(Edge::Column { n1, n2 }) + n1 as f64 * rows
+            }
+        }
+    }
+
+    /// `(edge cost requests, edges actually measured)` — the gap is
+    /// the memo hit count.
+    pub fn stats(&self) -> (usize, usize) {
+        (self.requests.get(), self.measured.get())
+    }
+}
+
+/// Time one edge with real codelets. Stage edges run the stage
+/// function `batch` times over distinct lines (amortising call
+/// overhead) and report seconds per line; column edges time one whole
+/// four-step line (the model subtracts row costs — see
+/// [`CostModel::edge_cost`]).
+fn measure_edge(
+    edge: Edge,
+    backend: CodeletBackend,
+    precision: Precision,
+    batch: usize,
+    config: BenchConfig,
+) -> f64 {
+    let bench = Benchmark::with_config("tune", config);
+    let bfp = precision == Precision::Bfp16;
+    match edge {
+        Edge::Stage { line, radix } => {
+            let mut rng = Rng::new(0x7E57_0000 ^ ((line as u64) << 8) ^ radix as u64);
+            let xre = rng.signal(line * batch);
+            let xim = rng.signal(line * batch);
+            let mut yre = vec![0.0f32; line * batch];
+            let mut yim = vec![0.0f32; line * batch];
+            let table = StageTable::new(line, radix);
+            let stage = codelet::table(backend).stage(radix, false, false);
+            let mut bre = BfpVec::new();
+            let mut bim = BfpVec::new();
+            let case =
+                format!("stage r{radix} line {line} {} {}", backend.tag(), precision.tag());
+            let m = bench.run(&case, || {
+                for l in 0..batch {
+                    let at = l * line;
+                    stage(
+                        &xre[at..at + line],
+                        &xim[at..at + line],
+                        &mut yre[at..at + line],
+                        &mut yim[at..at + line],
+                        line,
+                        1,
+                        Some(&table),
+                        1.0,
+                    );
+                    if bfp {
+                        bre.quantize_from(&yre[at..at + line]);
+                        bre.dequantize_into(&mut yre[at..at + line]);
+                        bim.quantize_from(&yim[at..at + line]);
+                        bim.dequantize_into(&mut yim[at..at + line]);
+                    }
+                }
+            });
+            m.median_secs() / batch as f64
+        }
+        Edge::Column { n1, n2 } => {
+            let n = n1 * n2;
+            let radices = radix_schedule(n2, 8);
+            let tables = PlanTables::for_radices(n2, &radices);
+            let tw = fourstep_twiddles(n1, n2, false);
+            let mut rng = Rng::new(0xC01_0000 ^ n as u64);
+            let re0 = rng.signal(n);
+            let im0 = rng.signal(n);
+            let mut re = re0.clone();
+            let mut im = im0.clone();
+            let mut ws = Workspace::new();
+            let codelets = codelet::table(backend);
+            let case = format!("fourstep {n1}x{n2} {} {}", backend.tag(), precision.tag());
+            if bfp {
+                let stride = fourstep::bfp_stage_stride(n2);
+                ws.ensure(n2, 0);
+                ws.ensure_bfp(n1 * stride, n2, n2);
+                bench
+                    .run(&case, || {
+                        // The line transforms in place: refresh the input
+                        // each iteration so repeated runs don't feed the
+                        // output back in (same refresh for every split at
+                        // a given n, so candidates stay comparable).
+                        re.copy_from_slice(&re0);
+                        im.copy_from_slice(&im0);
+                        fourstep::fourstep_line_bfp(
+                            codelets,
+                            &mut re,
+                            &mut im,
+                            n1,
+                            n2,
+                            &radices,
+                            Some(&tables),
+                            &tw,
+                            &mut ws.bstage_re,
+                            &mut ws.bstage_im,
+                            &mut ws.brow_re,
+                            &mut ws.brow_im,
+                            &mut ws.rre,
+                            &mut ws.rim,
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            false,
+                            None,
+                        );
+                    })
+                    .median_secs()
+            } else {
+                ws.ensure(n2, n);
+                bench
+                    .run(&case, || {
+                        re.copy_from_slice(&re0);
+                        im.copy_from_slice(&im0);
+                        fourstep::fourstep_line_fused(
+                            codelets,
+                            &mut re,
+                            &mut im,
+                            n1,
+                            n2,
+                            &radices,
+                            Some(&tables),
+                            &tw,
+                            &mut ws.yre,
+                            &mut ws.yim,
+                            &mut ws.sre,
+                            &mut ws.sim,
+                            false,
+                        );
+                    })
+                    .median_secs()
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shortest-path search
+// ---------------------------------------------------------------------------
+
+/// The searched winner for one size, with the heuristic it was scored
+/// against.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub n: usize,
+    pub schedule: Schedule,
+    /// Modeled seconds per line for `schedule`.
+    pub cost: f64,
+    pub preferred: Schedule,
+    /// Modeled seconds per line for `Variant::preferred`'s ladder.
+    pub preferred_cost: f64,
+}
+
+impl SearchResult {
+    /// `cost / preferred_cost` — `<= 1` by construction (the preferred
+    /// ladder is inside the searched space).
+    pub fn ratio(&self) -> f64 {
+        if self.preferred_cost > 0.0 {
+            self.cost / self.preferred_cost
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Shortest-path search over the schedule DAG for one size.
+///
+/// Pass count is hard-capped at the heuristic's (see module docs), so
+/// the result never regresses `Variant::preferred`'s stage count and
+/// its modeled cost is never above the heuristic's.
+pub fn search(n: usize, model: &CostModel) -> Result<SearchResult> {
+    ensure!(n.is_power_of_two() && n >= 2, "tune: size {n} must be a power of two >= 2");
+    ensure!(n <= 4 * MAX_SINGLE, "tune: size {n} exceeds the four-step ceiling (n1 <= 4)");
+    let preferred = Schedule::from_variant(n, Variant::preferred(n));
+    let preferred_cost = model.schedule_cost(&preferred);
+    let (schedule, cost) = if n <= MAX_SINGLE {
+        let (radices, cost) = search_radices(n, preferred.passes(), model);
+        (Schedule::single(radices)?, cost)
+    } else {
+        let row_cap = preferred.passes() - 1;
+        let mut best: Option<(Schedule, f64)> = None;
+        for (n1, n2) in enumerate_splits(n) {
+            let (radices, row_cost) = search_radices(n2, row_cap, model);
+            let cost = model.edge_cost(Edge::Column { n1, n2 }) + n1 as f64 * row_cost;
+            if best.as_ref().map_or(true, |(_, c)| cost < *c) {
+                best = Some((Schedule::four_step(n1, n2, radices)?, cost));
+            }
+        }
+        best.expect("n in (4096, 16384] always has a legal split")
+    };
+    if cost > preferred_cost {
+        // Unreachable by construction (the preferred path is explored);
+        // guard against FP noise anyway — never serve a regression.
+        return Ok(SearchResult {
+            n,
+            schedule: preferred.clone(),
+            cost: preferred_cost,
+            preferred,
+            preferred_cost,
+        });
+    }
+    Ok(SearchResult { n, schedule, cost, preferred, preferred_cost })
+}
+
+/// Cheapest radix factorization of a `line`-point row in at most `cap`
+/// stages with at most one radix-2 stage: dynamic shortest path over
+/// states (remaining exponent, radix-2 spent, stages used), relaxed in
+/// topological (increasing consumed exponent) order. Ties prefer fewer
+/// stages. The result is canonicalised to non-increasing radix order
+/// (cost is order-invariant under the model).
+fn search_radices(line: usize, cap: usize, model: &CostModel) -> (Vec<usize>, f64) {
+    let m = line.trailing_zeros() as usize;
+    // Guard feasibility: even all-radix-8 needs ceil(m/3) stages.
+    let cap = cap.min(m).max(m.div_ceil(3));
+    let c2 = model.edge_cost(Edge::Stage { line, radix: 2 });
+    let c4 = if m >= 2 { model.edge_cost(Edge::Stage { line, radix: 4 }) } else { f64::INFINITY };
+    let c8 = if m >= 3 { model.edge_cost(Edge::Stage { line, radix: 8 }) } else { f64::INFINITY };
+    // dist[j][u][t]: cheapest way to consume exponent j with t stages,
+    // u = whether the radix-2 stage is spent. from[..] is the last
+    // stage's radix, for path reconstruction.
+    let mut dist = vec![vec![vec![f64::INFINITY; cap + 1]; 2]; m + 1];
+    let mut from = vec![vec![vec![0usize; cap + 1]; 2]; m + 1];
+    dist[0][0][0] = 0.0;
+    for j in 0..m {
+        for u in 0..2 {
+            for t in 0..cap {
+                let d = dist[j][u][t];
+                if !d.is_finite() {
+                    continue;
+                }
+                for (dj, uu, c, r) in [(3, u, c8, 8), (2, u, c4, 4), (1, 1, c2, 2)] {
+                    if r == 2 && u == 1 {
+                        continue; // the one radix-2 stage is spent
+                    }
+                    let jj = j + dj;
+                    if jj > m {
+                        continue;
+                    }
+                    let nd = d + c;
+                    if nd < dist[jj][uu][t + 1] {
+                        dist[jj][uu][t + 1] = nd;
+                        from[jj][uu][t + 1] = r;
+                    }
+                }
+            }
+        }
+    }
+    let mut best: Option<(f64, usize, usize)> = None; // (cost, stages, u)
+    for u in 0..2 {
+        for t in 1..=cap {
+            let d = dist[m][u][t];
+            if !d.is_finite() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bc, bt, _)) => d < bc || (d == bc && t < bt),
+            };
+            if better {
+                best = Some((d, t, u));
+            }
+        }
+    }
+    let (cost, stages, mut u) = best.expect("cap admits at least the all-8s/4s ladder");
+    let mut radices = Vec::with_capacity(stages);
+    let mut j = m;
+    let mut t = stages;
+    while t > 0 {
+        let r = from[j][u][t];
+        radices.push(r);
+        j -= r.trailing_zeros() as usize;
+        if r == 2 {
+            u = 0;
+        }
+        t -= 1;
+    }
+    debug_assert_eq!(j, 0);
+    radices.sort_unstable_by(|a, b| b.cmp(a));
+    (radices, cost)
+}
+
+// ---------------------------------------------------------------------------
+// Persistent per-host cache
+// ---------------------------------------------------------------------------
+
+/// Full cache key: transform size, resolved codelet backend, exchange
+/// precision, and the bucketed batch shape the search measured at.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct TuneKey {
+    pub n: usize,
+    pub backend: CodeletBackend,
+    pub precision: Precision,
+    pub bucket: usize,
+}
+
+/// One searched winner.
+#[derive(Clone, Debug)]
+pub struct TuneEntry {
+    pub schedule: Schedule,
+    /// Modeled cost at search time, microseconds per line (diagnostic;
+    /// never used for dispatch).
+    pub cost_us: f64,
+}
+
+/// The persistent per-host tuning cache. An empty cache is the cold
+/// state: every lookup misses and callers fall back to the heuristic.
+#[derive(Clone, Debug, Default)]
+pub struct TuneCache {
+    entries: HashMap<TuneKey, TuneEntry>,
+}
+
+impl TuneCache {
+    /// Record a searched winner.
+    pub fn insert(
+        &mut self,
+        n: usize,
+        backend: CodeletBackend,
+        precision: Precision,
+        bucket: usize,
+        schedule: Schedule,
+        cost_us: f64,
+    ) {
+        assert_eq!(schedule.n(), n, "schedule {} is not size {n}", schedule.tag());
+        let key = TuneKey { n, backend: backend.resolve(), precision, bucket };
+        self.entries.insert(key, TuneEntry { schedule, cost_us });
+    }
+
+    /// The searched schedule for a runtime shape, if tuned: exact batch
+    /// bucket first, then the default tuning bucket (a tuned size keeps
+    /// serving its searched schedule at batch shapes the tuner never
+    /// measured).
+    pub fn lookup(
+        &self,
+        n: usize,
+        backend: CodeletBackend,
+        precision: Precision,
+        batch: usize,
+    ) -> Option<&Schedule> {
+        let key = TuneKey { n, backend, precision, bucket: batch_bucket(batch) };
+        if let Some(e) = self.entries.get(&key) {
+            return Some(&e.schedule);
+        }
+        let fallback = TuneKey { bucket: batch_bucket(DEFAULT_TUNE_BATCH), ..key };
+        self.entries.get(&fallback).map(|e| &e.schedule)
+    }
+
+    pub fn get(&self, key: &TuneKey) -> Option<&TuneEntry> {
+        self.entries.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Whether tuning is enabled at all (`APPLEFFT_TUNE=off|0` is the
+    /// kill switch — the planner then never reads the cache file).
+    pub fn enabled() -> bool {
+        !matches!(std::env::var("APPLEFFT_TUNE").ok().as_deref(), Some("off") | Some("0"))
+    }
+
+    /// The per-host cache path: `APPLEFFT_TUNE_CACHE` verbatim if set,
+    /// else `$XDG_CACHE_HOME/applefft/tuned.json`, else
+    /// `$HOME/.cache/applefft/tuned.json`.
+    pub fn default_path() -> Option<PathBuf> {
+        if let Ok(p) = std::env::var("APPLEFFT_TUNE_CACHE") {
+            if !p.is_empty() {
+                return Some(PathBuf::from(p));
+            }
+        }
+        let base = std::env::var_os("XDG_CACHE_HOME")
+            .map(PathBuf::from)
+            .or_else(|| std::env::var_os("HOME").map(|h| PathBuf::from(h).join(".cache")))?;
+        Some(base.join("applefft").join("tuned.json"))
+    }
+
+    /// What `NativePlanner` calls on first consultation: the default
+    /// path, degrading to an empty cache when tuning is disabled, no
+    /// path resolves, the file is missing/unreadable, or it fails to
+    /// parse (corrupt, wrong schema). Never errors, never panics.
+    pub fn load_default() -> TuneCache {
+        if !Self::enabled() {
+            return TuneCache::default();
+        }
+        match Self::default_path() {
+            Some(p) => Self::load_or_empty(&p),
+            None => TuneCache::default(),
+        }
+    }
+
+    /// Load from an explicit path, degrading to empty on any failure.
+    pub fn load_or_empty(path: &Path) -> TuneCache {
+        std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Self::parse(&text).ok())
+            .unwrap_or_default()
+    }
+
+    /// Load from an explicit path, surfacing the failure (CLI use —
+    /// the serving path wants [`Self::load_or_empty`]).
+    pub fn load(path: &Path) -> Result<TuneCache> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse the JSON wire form, re-validating every entry (schema
+    /// version, schedule grammar and invariants, size agreement).
+    pub fn parse(text: &str) -> Result<TuneCache> {
+        let root = json::parse(text).map_err(|e| anyhow!("tuning cache: {e}"))?;
+        let schema = root
+            .get("schema")
+            .and_then(json::Value::num)
+            .ok_or_else(|| anyhow!("tuning cache: missing schema version"))?;
+        ensure!(
+            schema == SCHEMA_VERSION as f64,
+            "tuning cache: schema {schema} != supported {SCHEMA_VERSION}"
+        );
+        let list = root
+            .get("entries")
+            .and_then(json::Value::arr)
+            .ok_or_else(|| anyhow!("tuning cache: missing entries array"))?;
+        let mut cache = TuneCache::default();
+        for item in list {
+            let field = |k: &str| {
+                item.get(k).ok_or_else(|| anyhow!("tuning cache entry: missing {k:?}"))
+            };
+            let n = field("n")?
+                .num()
+                .ok_or_else(|| anyhow!("tuning cache entry: n is not a number"))?
+                as usize;
+            let backend = backend_from_tag(
+                field("backend")?
+                    .str()
+                    .ok_or_else(|| anyhow!("tuning cache entry: backend is not a string"))?,
+            )?;
+            let precision: Precision = field("precision")?
+                .str()
+                .ok_or_else(|| anyhow!("tuning cache entry: precision is not a string"))?
+                .parse()?;
+            let bucket = field("bucket")?
+                .num()
+                .ok_or_else(|| anyhow!("tuning cache entry: bucket is not a number"))?
+                as usize;
+            let schedule: Schedule = field("schedule")?
+                .str()
+                .ok_or_else(|| anyhow!("tuning cache entry: schedule is not a string"))?
+                .parse()?;
+            ensure!(
+                schedule.n() == n,
+                "tuning cache entry: schedule {} is not size {n}",
+                schedule.tag()
+            );
+            let cost_us = item.get("cost_us").and_then(json::Value::num).unwrap_or(0.0);
+            cache
+                .entries
+                .insert(TuneKey { n, backend, precision, bucket }, TuneEntry { schedule, cost_us });
+        }
+        Ok(cache)
+    }
+
+    /// Deterministic (sorted) JSON wire form.
+    pub fn to_json(&self) -> String {
+        let mut keys: Vec<&TuneKey> = self.entries.keys().collect();
+        keys.sort_by_key(|k| (k.n, k.backend.tag(), k.precision.tag(), k.bucket));
+        let mut out = format!("{{\n  \"schema\": {SCHEMA_VERSION},\n  \"entries\": [\n");
+        for (i, k) in keys.iter().enumerate() {
+            let e = &self.entries[*k];
+            let sep = if i + 1 < keys.len() { "," } else { "" };
+            out.push_str(&format!(
+                "    {{\"n\": {}, \"backend\": \"{}\", \"precision\": \"{}\", \
+                 \"bucket\": {}, \"schedule\": \"{}\", \"cost_us\": {:.4}}}{sep}\n",
+                k.n,
+                k.backend.tag(),
+                k.precision.tag(),
+                k.bucket,
+                e.schedule.tag(),
+                e.cost_us,
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write to `path`, creating parent directories. Errors (read-only
+    /// filesystem, permission) surface to the caller; the planner side
+    /// is unaffected — it only ever reads.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+fn backend_from_tag(tag: &str) -> Result<CodeletBackend> {
+    match tag {
+        "scalar" => Ok(CodeletBackend::Scalar),
+        "simd" => Ok(CodeletBackend::Simd),
+        other => Err(anyhow!("unknown codelet backend {other:?} (expected scalar|simd)")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Offline tuner
+// ---------------------------------------------------------------------------
+
+/// One `(backend, precision)` slice of a tuning run.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub backend: CodeletBackend,
+    pub precision: Precision,
+    pub result: SearchResult,
+}
+
+/// A completed tuning run: the populated cache plus per-combination
+/// search results and memoization telemetry.
+pub struct TuneRun {
+    pub cache: TuneCache,
+    pub results: Vec<TuneOutcome>,
+    pub edge_requests: usize,
+    pub edges_measured: usize,
+}
+
+impl TuneRun {
+    /// Fraction of edge-cost requests served from the memo — the
+    /// search prices 34 schedules across the paper sizes from a few
+    /// dozen distinct measurements, and this is the receipt.
+    pub fn memo_hit_rate(&self) -> f64 {
+        if self.edge_requests == 0 {
+            return 0.0;
+        }
+        1.0 - self.edges_measured as f64 / self.edge_requests as f64
+    }
+}
+
+/// The offline search orchestrator: every compiled codelet backend ×
+/// every precision × the requested sizes, one memoized [`CostModel`]
+/// per (backend, precision).
+pub struct Tuner {
+    pub batch: usize,
+    pub config: BenchConfig,
+}
+
+impl Default for Tuner {
+    fn default() -> Self {
+        Tuner { batch: DEFAULT_TUNE_BATCH, config: BenchConfig::from_env() }
+    }
+}
+
+impl Tuner {
+    pub fn new() -> Tuner {
+        Tuner::default()
+    }
+
+    /// CI-smoke configuration (same budget as `BenchConfig::quick`).
+    pub fn quick() -> Tuner {
+        Tuner { batch: DEFAULT_TUNE_BATCH, config: BenchConfig::quick() }
+    }
+
+    /// Search every combination and return the populated cache.
+    pub fn tune(&self, sizes: &[usize]) -> Result<TuneRun> {
+        let mut run = TuneRun {
+            cache: TuneCache::default(),
+            results: Vec::new(),
+            edge_requests: 0,
+            edges_measured: 0,
+        };
+        for &backend in CodeletBackend::compiled() {
+            for &precision in Precision::all() {
+                let model = CostModel::measured(backend, precision, self.batch, self.config);
+                for &n in sizes {
+                    let r = search(n, &model)?;
+                    run.cache.insert(
+                        n,
+                        backend,
+                        precision,
+                        batch_bucket(self.batch),
+                        r.schedule.clone(),
+                        r.cost * 1e6,
+                    );
+                    run.results.push(TuneOutcome { backend, precision, result: r });
+                }
+                let (rq, ms) = model.stats();
+                run.edge_requests += rq;
+                run.edges_measured += ms;
+            }
+        }
+        Ok(run)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Minimal JSON reader (no serde in the dependency budget)
+// ---------------------------------------------------------------------------
+
+mod json {
+    //! Just enough JSON to read the tuning cache back: objects, arrays,
+    //! strings (with escapes), f64 numbers, and literals. Strict on
+    //! structure (trailing bytes, unterminated tokens and bad escapes
+    //! are errors) so a truncated cache file fails parse — and the
+    //! planner falls back — instead of half-loading.
+
+    #[derive(Clone, Debug, PartialEq)]
+    pub enum Value {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Value>),
+        Obj(Vec<(String, Value)>),
+    }
+
+    impl Value {
+        pub fn num(&self) -> Option<f64> {
+            if let Value::Num(x) = self {
+                Some(*x)
+            } else {
+                None
+            }
+        }
+
+        pub fn str(&self) -> Option<&str> {
+            if let Value::Str(s) = self {
+                Some(s)
+            } else {
+                None
+            }
+        }
+
+        pub fn arr(&self) -> Option<&[Value]> {
+            if let Value::Arr(items) = self {
+                Some(items)
+            } else {
+                None
+            }
+        }
+
+        /// Object field lookup (None on non-objects too).
+        pub fn get(&self, key: &str) -> Option<&Value> {
+            if let Value::Obj(kv) = self {
+                kv.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            } else {
+                None
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Value, String> {
+        let mut p = Parser { b: text.as_bytes(), at: 0 };
+        let v = p.value()?;
+        p.ws();
+        if p.at != p.b.len() {
+            return Err(format!("trailing bytes at offset {}", p.at));
+        }
+        Ok(v)
+    }
+
+    struct Parser<'a> {
+        b: &'a [u8],
+        at: usize,
+    }
+
+    impl Parser<'_> {
+        fn ws(&mut self) {
+            while self.at < self.b.len() && self.b[self.at].is_ascii_whitespace() {
+                self.at += 1;
+            }
+        }
+
+        fn peek(&self) -> Option<u8> {
+            self.b.get(self.at).copied()
+        }
+
+        fn eat(&mut self, c: u8) -> Result<(), String> {
+            if self.peek() == Some(c) {
+                self.at += 1;
+                Ok(())
+            } else {
+                Err(format!("expected {:?} at offset {}", c as char, self.at))
+            }
+        }
+
+        fn lit(&mut self, word: &str, v: Value) -> Result<Value, String> {
+            if self.b[self.at..].starts_with(word.as_bytes()) {
+                self.at += word.len();
+                Ok(v)
+            } else {
+                Err(format!("bad literal at offset {}", self.at))
+            }
+        }
+
+        fn value(&mut self) -> Result<Value, String> {
+            self.ws();
+            match self.peek() {
+                Some(b'{') => self.object(),
+                Some(b'[') => self.array(),
+                Some(b'"') => Ok(Value::Str(self.string()?)),
+                Some(b't') => self.lit("true", Value::Bool(true)),
+                Some(b'f') => self.lit("false", Value::Bool(false)),
+                Some(b'n') => self.lit("null", Value::Null),
+                Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+                _ => Err(format!("unexpected input at offset {}", self.at)),
+            }
+        }
+
+        fn object(&mut self) -> Result<Value, String> {
+            self.eat(b'{')?;
+            let mut kv = Vec::new();
+            self.ws();
+            if self.peek() == Some(b'}') {
+                self.at += 1;
+                return Ok(Value::Obj(kv));
+            }
+            loop {
+                self.ws();
+                let k = self.string()?;
+                self.ws();
+                self.eat(b':')?;
+                let v = self.value()?;
+                kv.push((k, v));
+                self.ws();
+                match self.peek() {
+                    Some(b',') => self.at += 1,
+                    Some(b'}') => {
+                        self.at += 1;
+                        return Ok(Value::Obj(kv));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at offset {}", self.at)),
+                }
+            }
+        }
+
+        fn array(&mut self) -> Result<Value, String> {
+            self.eat(b'[')?;
+            let mut items = Vec::new();
+            self.ws();
+            if self.peek() == Some(b']') {
+                self.at += 1;
+                return Ok(Value::Arr(items));
+            }
+            loop {
+                items.push(self.value()?);
+                self.ws();
+                match self.peek() {
+                    Some(b',') => self.at += 1,
+                    Some(b']') => {
+                        self.at += 1;
+                        return Ok(Value::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at offset {}", self.at)),
+                }
+            }
+        }
+
+        fn string(&mut self) -> Result<String, String> {
+            self.eat(b'"')?;
+            let mut out: Vec<u8> = Vec::new();
+            loop {
+                let c = *self
+                    .b
+                    .get(self.at)
+                    .ok_or_else(|| "unterminated string".to_string())?;
+                match c {
+                    b'"' => {
+                        self.at += 1;
+                        return String::from_utf8(out).map_err(|_| "invalid utf-8".to_string());
+                    }
+                    b'\\' => {
+                        self.at += 1;
+                        let e = *self
+                            .b
+                            .get(self.at)
+                            .ok_or_else(|| "unterminated escape".to_string())?;
+                        self.at += 1;
+                        let ch = match e {
+                            b'"' => '"',
+                            b'\\' => '\\',
+                            b'/' => '/',
+                            b'n' => '\n',
+                            b't' => '\t',
+                            b'r' => '\r',
+                            b'b' => '\u{8}',
+                            b'f' => '\u{c}',
+                            b'u' => {
+                                if self.at + 4 > self.b.len() {
+                                    return Err("truncated \\u escape".to_string());
+                                }
+                                let hex = std::str::from_utf8(&self.b[self.at..self.at + 4])
+                                    .map_err(|_| "bad \\u escape".to_string())?;
+                                let cp = u32::from_str_radix(hex, 16)
+                                    .map_err(|_| "bad \\u escape".to_string())?;
+                                self.at += 4;
+                                char::from_u32(cp)
+                                    .ok_or_else(|| "bad \\u codepoint".to_string())?
+                            }
+                            _ => return Err(format!("bad escape at offset {}", self.at)),
+                        };
+                        let mut buf = [0u8; 4];
+                        out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                    }
+                    _ => {
+                        out.push(c);
+                        self.at += 1;
+                    }
+                }
+            }
+        }
+
+        fn number(&mut self) -> Result<Value, String> {
+            let start = self.at;
+            while let Some(c) = self.peek() {
+                if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                    self.at += 1;
+                } else {
+                    break;
+                }
+            }
+            let s = std::str::from_utf8(&self.b[start..self.at]).unwrap_or("");
+            s.parse::<f64>()
+                .map(Value::Num)
+                .map_err(|e| format!("bad number {s:?} at offset {start}: {e}"))
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn parses_structures() {
+            let v = parse(r#"{"a": [1, 2.5, -3e2], "b": "x\nyA", "c": true, "d": null}"#)
+                .unwrap();
+            assert_eq!(v.get("a").unwrap().arr().unwrap()[2].num(), Some(-300.0));
+            assert_eq!(v.get("b").unwrap().str(), Some("x\nyA"));
+            assert_eq!(v.get("c"), Some(&Value::Bool(true)));
+            assert_eq!(v.get("d"), Some(&Value::Null));
+            assert_eq!(parse("[]").unwrap(), Value::Arr(vec![]));
+            assert_eq!(parse("{}").unwrap(), Value::Obj(vec![]));
+        }
+
+        #[test]
+        fn rejects_malformed() {
+            for bad in
+                ["", "{", "[1,", "{\"a\" 1}", "tru", "\"unterminated", "1 2", "{\"a\":}", "nul"]
+            {
+                assert!(parse(bad).is_err(), "{bad:?} must not parse");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::PAPER_SIZES;
+
+    /// Unique-enough temp path without `Date::now` (process id + an
+    /// atomic counter survives parallel test threads).
+    fn temp_path(tag: &str) -> PathBuf {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static SEQ: AtomicUsize = AtomicUsize::new(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir()
+            .join(format!("applefft-tune-{}-{}-{}.json", std::process::id(), tag, seq))
+    }
+
+    #[test]
+    fn enumeration_counts_and_validity() {
+        // Hand-counted space per paper size (34 total): the suite that
+        // conformance-gates "every schedule the enumerator can emit"
+        // depends on this staying small.
+        let want: [(usize, usize); 7] =
+            [(256, 3), (512, 4), (1024, 4), (2048, 4), (4096, 5), (8192, 9), (16384, 5)];
+        let mut total = 0;
+        for (n, count) in want {
+            let schedules = enumerate_schedules(n);
+            assert_eq!(schedules.len(), count, "n={n}");
+            total += schedules.len();
+            let preferred = Schedule::from_variant(n, Variant::preferred(n));
+            assert!(
+                schedules.contains(&preferred),
+                "n={n}: preferred ladder {} missing from the space",
+                preferred.tag()
+            );
+            for s in &schedules {
+                assert_eq!(s.n(), n, "schedule {} has wrong size", s.tag());
+                let twos = s.radices().iter().filter(|&&r| r == 2).count();
+                assert!(twos <= 1, "schedule {} has {twos} radix-2 stages", s.tag());
+                let mut sorted = s.radices().to_vec();
+                sorted.sort_unstable_by(|a, b| b.cmp(a));
+                assert_eq!(sorted, s.radices(), "schedule {} not canonical", s.tag());
+            }
+        }
+        assert_eq!(total, 34);
+        // Splits: the paper's default is always present.
+        assert_eq!(enumerate_splits(8192), vec![(2, 4096), (4, 2048)]);
+        assert_eq!(enumerate_splits(16384), vec![(4, 4096)]);
+    }
+
+    #[test]
+    fn search_finds_the_synthetic_optimum() {
+        // Radix-8 stages priced cheapest: within the 5-stage cap at
+        // 1024 the optimum is [8,8,4,4] (cost 2*1 + 2*10 = 22), beating
+        // the preferred radix-4 ladder (5*10 = 50).
+        let model = CostModel::synthetic(|e| match e {
+            Edge::Stage { radix: 8, .. } => 1.0,
+            Edge::Stage { radix: 4, .. } => 10.0,
+            Edge::Stage { .. } => 100.0,
+            Edge::Column { .. } => 0.5,
+        });
+        let r = search(1024, &model).unwrap();
+        assert_eq!(r.schedule, Schedule::single(vec![8, 8, 4, 4]).unwrap());
+        assert!((r.cost - 22.0).abs() < 1e-9, "cost {}", r.cost);
+        assert!((r.preferred_cost - 50.0).abs() < 1e-9);
+        assert!(r.ratio() < 1.0);
+
+        // Flip the pricing: radix-4 cheapest, the preferred ladder IS
+        // the optimum and the search returns it exactly.
+        let model = CostModel::synthetic(|e| match e {
+            Edge::Stage { radix: 4, .. } => 1.0,
+            Edge::Stage { .. } => 10.0,
+            Edge::Column { .. } => 0.5,
+        });
+        let r = search(1024, &model).unwrap();
+        assert_eq!(r.schedule, r.preferred);
+        assert!((r.ratio() - 1.0).abs() < 1e-12);
+
+        // Four-step: make 2048-rows much cheaper than 4096-rows; the
+        // search must pick the (4, 2048) split over the default.
+        let model = CostModel::synthetic(|e| match e {
+            Edge::Stage { line: 2048, .. } => 1.0,
+            Edge::Stage { .. } => 100.0,
+            Edge::Column { .. } => 1.0,
+        });
+        let r = search(8192, &model).unwrap();
+        assert_eq!(r.schedule.split(), Some((4, 2048)));
+        assert!(r.schedule.passes() <= r.preferred.passes());
+    }
+
+    #[test]
+    fn searched_schedules_never_regress_preferred() {
+        // Satellite gate: across adversarial synthetic pricings, the
+        // searched schedule for every paper size keeps (a) pass count
+        // <= the heuristic's and (b) modeled cost <= the heuristic's.
+        let pricings: Vec<CostModel> = vec![
+            // Cheap small radices: the search would love extra stages.
+            CostModel::synthetic(|e| match e {
+                Edge::Stage { radix, .. } => radix as f64,
+                Edge::Column { .. } => 1.0,
+            }),
+            // Cheap big radices.
+            CostModel::synthetic(|e| match e {
+                Edge::Stage { radix, .. } => 10.0 - radix as f64,
+                Edge::Column { .. } => 1.0,
+            }),
+            // Flat: everything ties; ties prefer fewer stages.
+            CostModel::synthetic(|_| 1.0),
+        ];
+        for model in &pricings {
+            for &n in &PAPER_SIZES {
+                let r = search(n, model).unwrap();
+                let pref = Schedule::from_variant(n, Variant::preferred(n));
+                assert!(
+                    r.schedule.passes() <= pref.passes(),
+                    "n={n}: searched {} has {} passes, preferred {} has {}",
+                    r.schedule.tag(),
+                    r.schedule.passes(),
+                    pref.tag(),
+                    pref.passes()
+                );
+                assert!(
+                    r.cost <= r.preferred_cost + 1e-12,
+                    "n={n}: searched cost {} above preferred {}",
+                    r.cost,
+                    r.preferred_cost
+                );
+                assert_eq!(r.schedule.n(), n);
+                // The winner is inside the enumerable space.
+                assert!(
+                    enumerate_schedules(n).contains(&r.schedule),
+                    "n={n}: {} not in the enumerated space",
+                    r.schedule.tag()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn measured_model_memoizes_and_searches() {
+        // A real (tiny-budget) measured search: sane costs, high memo
+        // hit rate, and a winner no worse than preferred. Covers the
+        // Column-residual path via 8192.
+        let cfg = BenchConfig { warmup: 1, iters: 3, budget_secs: 0.05 };
+        let model = CostModel::measured(CodeletBackend::Scalar, Precision::F32, 4, cfg);
+        for &n in &[256usize, 8192] {
+            let r = search(n, &model).unwrap();
+            assert!(r.cost.is_finite() && r.cost >= 0.0, "n={n}: cost {}", r.cost);
+            assert!(r.cost <= r.preferred_cost + 1e-12, "n={n}");
+        }
+        let (requests, measured) = model.stats();
+        assert!(measured <= requests);
+        assert!(
+            measured < requests,
+            "memo never hit: {measured} measured of {requests} requests"
+        );
+        // Re-pricing a schedule costs zero new measurements.
+        let before = model.stats().1;
+        model.schedule_cost(&Schedule::from_variant(8192, Variant::Radix8));
+        assert_eq!(model.stats().1, before, "re-pricing must be fully memoized");
+    }
+
+    #[test]
+    fn bfp16_model_prices_the_codec() {
+        // The Bfp16 stage edge includes the quantize/dequantize round
+        // trip, so it must never be cheaper than pure compute at equal
+        // shape... modulo timer noise; assert it at least measures and
+        // searches cleanly.
+        let cfg = BenchConfig { warmup: 1, iters: 3, budget_secs: 0.05 };
+        let model = CostModel::measured(CodeletBackend::Scalar, Precision::Bfp16, 4, cfg);
+        let r = search(1024, &model).unwrap();
+        assert!(r.cost.is_finite() && r.cost > 0.0);
+        assert!(enumerate_schedules(1024).contains(&r.schedule));
+    }
+
+    #[test]
+    fn cache_roundtrips_through_json() {
+        let mut cache = TuneCache::default();
+        cache.insert(
+            1024,
+            CodeletBackend::Scalar,
+            Precision::F32,
+            16,
+            Schedule::single(vec![8, 8, 4, 4]).unwrap(),
+            12.5,
+        );
+        cache.insert(
+            8192,
+            CodeletBackend::Scalar,
+            Precision::Bfp16,
+            16,
+            Schedule::four_step(4, 2048, vec![8, 8, 8, 4]).unwrap(),
+            99.25,
+        );
+        let text = cache.to_json();
+        let back = TuneCache::parse(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(
+            back.lookup(1024, CodeletBackend::Scalar, Precision::F32, 16),
+            Some(&Schedule::single(vec![8, 8, 4, 4]).unwrap())
+        );
+        assert_eq!(
+            back.lookup(8192, CodeletBackend::Scalar, Precision::Bfp16, 10),
+            Some(&Schedule::four_step(4, 2048, vec![8, 8, 8, 4]).unwrap()),
+            "batch 10 buckets to 16"
+        );
+        assert_eq!(back.lookup(1024, CodeletBackend::Scalar, Precision::Bfp16, 16), None);
+        let key = TuneKey {
+            n: 8192,
+            backend: CodeletBackend::Scalar,
+            precision: Precision::Bfp16,
+            bucket: 16,
+        };
+        assert!((back.get(&key).unwrap().cost_us - 99.25).abs() < 1e-9);
+        // Determinism: serialize(parse(serialize(x))) is a fixpoint.
+        assert_eq!(back.to_json(), text);
+    }
+
+    #[test]
+    fn cache_file_roundtrip_and_failure_modes() {
+        let mut cache = TuneCache::default();
+        cache.insert(
+            512,
+            CodeletBackend::Scalar,
+            Precision::F32,
+            16,
+            Schedule::single(vec![8, 8, 8]).unwrap(),
+            3.0,
+        );
+        let path = temp_path("roundtrip");
+        cache.save(&path).unwrap();
+        let back = TuneCache::load(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(TuneCache::load_or_empty(&path).len(), 1);
+        std::fs::remove_file(&path).unwrap();
+
+        // Missing file: load errors, load_or_empty degrades to cold.
+        assert!(TuneCache::load(&path).is_err());
+        assert!(TuneCache::load_or_empty(&path).is_empty());
+
+        // Corrupt file: same split.
+        std::fs::write(&path, "{ this is not json").unwrap();
+        assert!(TuneCache::load(&path).is_err());
+        assert!(TuneCache::load_or_empty(&path).is_empty());
+
+        // Wrong schema version: rejected wholesale.
+        let wrong = cache.to_json().replace(
+            &format!("\"schema\": {SCHEMA_VERSION}"),
+            &format!("\"schema\": {}", SCHEMA_VERSION + 1),
+        );
+        std::fs::write(&path, &wrong).unwrap();
+        let err = TuneCache::load(&path).unwrap_err().to_string();
+        assert!(err.contains("schema"), "{err}");
+        assert!(TuneCache::load_or_empty(&path).is_empty());
+
+        // A valid file with an entry whose schedule contradicts its
+        // size: rejected (never serve a mis-sized schedule).
+        let lying = cache.to_json().replace("\"n\": 512", "\"n\": 1024");
+        assert!(TuneCache::parse(&lying).is_err());
+        std::fs::remove_file(&path).unwrap();
+
+        // Unwritable destination: save surfaces the error.
+        std::fs::write(&path, "a plain file").unwrap();
+        let under_file = path.join("sub").join("tuned.json");
+        assert!(cache.save(&under_file).is_err(), "writing under a file must fail");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn tuner_populates_every_combination() {
+        let tuner =
+            Tuner { batch: 2, config: BenchConfig { warmup: 1, iters: 2, budget_secs: 0.05 } };
+        let sizes = [256usize, 1024];
+        let run = tuner.tune(&sizes).unwrap();
+        let combos = CodeletBackend::compiled().len() * Precision::all().len();
+        assert_eq!(run.results.len(), combos * sizes.len());
+        assert_eq!(run.cache.len(), combos * sizes.len());
+        for &backend in CodeletBackend::compiled() {
+            for &precision in Precision::all() {
+                for &n in &sizes {
+                    let s = run
+                        .cache
+                        .lookup(n, backend, precision, tuner.batch)
+                        .unwrap_or_else(|| panic!("missing {n} {backend:?} {precision:?}"));
+                    assert_eq!(s.n(), n);
+                }
+            }
+        }
+        assert!(run.memo_hit_rate() >= 0.0 && run.memo_hit_rate() < 1.0);
+    }
+
+    #[test]
+    fn batch_bucketing() {
+        assert_eq!(batch_bucket(0), 1);
+        assert_eq!(batch_bucket(1), 1);
+        assert_eq!(batch_bucket(9), 16);
+        assert_eq!(batch_bucket(16), 16);
+        assert_eq!(batch_bucket(17), 32);
+        assert_eq!(batch_bucket(1000), 64);
+    }
+}

@@ -9,6 +9,8 @@
 //! * `sim-params` — print the M1 model parameters (paper Table I).
 //! * `bench-model`— print every model-regenerated paper table/figure.
 //! * `sar`        — run the SAR range-compression demo.
+//! * `tune`       — search the plan space on this host and persist the
+//!                  winners to the tuning cache (`fft::tune`).
 
 use applefft::bench::table::Table;
 use applefft::cli::Args;
@@ -30,6 +32,7 @@ fn main() -> anyhow::Result<()> {
         Some("sim-params") => sim_params(),
         Some("bench-model") => bench_model(),
         Some("sar") => sar(&args),
+        Some("tune") => tune(&args),
         _ => {
             println!(
                 "applefft — 'Beating vDSP' (Bergach 2026) reproduction\n\n\
@@ -40,7 +43,8 @@ fn main() -> anyhow::Result<()> {
                  \x20 plan        [--n 4096]\n\
                  \x20 sim-params\n\
                  \x20 bench-model\n\
-                 \x20 sar         [--lines 64] [--path matched|composed|fused|local]\n"
+                 \x20 sar         [--lines 64] [--path matched|composed|fused|local]\n\
+                 \x20 tune        [--sizes 256,...,16384] [--batch 16] [--quick] [--out <file>]\n"
             );
             Ok(())
         }
@@ -62,6 +66,15 @@ fn backend_from(args: &Args) -> Backend {
 /// open-loop trace replay and reports latency percentiles — overall and
 /// per shard — instead.
 fn serve(args: &Args) -> anyhow::Result<()> {
+    if args.flag("help") {
+        println!(
+            "applefft serve — batched FFT service\n\n\
+             options: [--requests 200] [--workers 2] [--max-wait-ms 2] [--shards N]\n\
+             \x20        [--clients 4] [--warm] [--trace <file>|synthetic [--rate hz]]\n"
+        );
+        print!("{}", applefft::config::env_knobs_help());
+        return Ok(());
+    }
     let requests = args.get_usize("requests", 200)?;
     let workers = args.get_usize("workers", 2)?;
     let max_wait = args.get_f64("max-wait-ms", 2.0)?;
@@ -285,6 +298,53 @@ fn bench_model() -> anyhow::Result<()> {
         f1.row(&[b.to_string(), format!("{gpu:.1}"), format!("{vdsp:.1}")]);
     }
     f1.print();
+    Ok(())
+}
+
+/// Offline schedule search: enumerate the plan space for the requested
+/// sizes, price it on the measured cost model, and persist the winners
+/// to the per-host tuning cache so every later `plan_auto` serves the
+/// searched schedule.
+fn tune(args: &Args) -> anyhow::Result<()> {
+    use applefft::bench::BenchConfig;
+    use applefft::fft::tune::{TuneCache, Tuner, DEFAULT_TUNE_BATCH};
+    use applefft::testkit::PAPER_SIZES;
+    let sizes = args.get_usize_list("sizes", &PAPER_SIZES)?;
+    let batch = args.get_usize("batch", DEFAULT_TUNE_BATCH)?;
+    let config = if args.flag("quick") { BenchConfig::quick() } else { BenchConfig::from_env() };
+    let out = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => TuneCache::default_path()
+            .ok_or_else(|| anyhow::anyhow!("no cache path: set APPLEFFT_TUNE_CACHE or HOME"))?,
+    };
+    println!("tune: sizes {sizes:?}, batch {batch}, cache {}", out.display());
+    let t0 = Instant::now();
+    let run = Tuner { batch, config }.tune(&sizes)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(
+        "Searched schedules vs Variant::preferred (measured cost model)",
+        &["N", "backend", "precision", "searched", "preferred", "cost ratio"],
+    );
+    for o in &run.results {
+        t.row(&[
+            o.result.n.to_string(),
+            o.backend.tag().to_string(),
+            o.precision.tag().to_string(),
+            o.result.schedule.tag(),
+            o.result.preferred.tag(),
+            format!("{:.3}", o.result.ratio()),
+        ]);
+    }
+    t.print();
+    println!(
+        "search: {:.2}s wall, {} edge requests, {} measured ({:.0}% memo hits)",
+        wall,
+        run.edge_requests,
+        run.edges_measured,
+        run.memo_hit_rate() * 100.0
+    );
+    run.cache.save(&out)?;
+    println!("wrote {} entries to {}", run.cache.len(), out.display());
     Ok(())
 }
 

@@ -133,6 +133,39 @@ impl Engine {
         Ok(())
     }
 
+    /// Calibrate-then-warm: run the schedule search over every
+    /// registered FFT size, persist the winners to the tuning cache,
+    /// then [`Self::warm_all`] — so the warmed executors are already
+    /// the searched schedules ("calibrate once, serve the searched
+    /// schedule forever"). `path` overrides the cache destination
+    /// (tests MUST pass a temp path; writing the real per-host cache
+    /// mid-test-run would make planners loaded before and after it
+    /// appeared disagree). Returns the path written, or `None` when
+    /// the cache could not be persisted (read-only home, no resolvable
+    /// path) — calibration still warms and the engine still serves.
+    pub fn warm_all_calibrate(&self, path: Option<PathBuf>) -> Result<Option<PathBuf>> {
+        use crate::fft::tune::{TuneCache, Tuner};
+        let mut sizes: Vec<usize> = self
+            .registry
+            .iter()
+            .filter(|m| m.kind == super::artifact::ArtifactKind::Fft)
+            .map(|m| m.n)
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        let run = Tuner::quick().tune(&sizes)?;
+        let dest = path.or_else(TuneCache::default_path);
+        let written = match dest {
+            Some(p) => match run.cache.save(&p) {
+                Ok(()) => Some(p),
+                Err(_) => None, // degrade: serve the heuristic, don't fail warmup
+            },
+            None => None,
+        };
+        self.warm_all()?;
+        Ok(written)
+    }
+
     /// Raw execution: artifact name + flat input tensors with dims, at
     /// the process-default precision.
     pub fn execute_raw(
@@ -345,5 +378,47 @@ mod tests {
         let engine = Engine::start(Backend::Native).unwrap();
         let x = SplitComplex::zeros(256 * 7);
         assert!(engine.fft_batch(&x, 256, 7, Direction::Forward).is_err());
+    }
+
+    #[test]
+    fn warm_all_calibrate_writes_cache_and_serves() {
+        use crate::fft::tune::TuneCache;
+        // Use a small registry so the quick search stays cheap, and a
+        // temp destination — NEVER the real per-host cache path, which
+        // other tests' planners may be lazily loading concurrently.
+        let engine = Engine::start(Backend::Native).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("applefft-calibrate-{}.json", std::process::id()));
+        let written = engine.warm_all_calibrate(Some(path.clone())).unwrap();
+        assert_eq!(written.as_deref(), Some(path.as_path()));
+        let cache = TuneCache::load(&path).unwrap();
+        assert!(!cache.is_empty(), "calibration must persist searched entries");
+        // Every registered FFT size got an entry for the selected
+        // backend/precision combination.
+        use crate::fft::{bfp, codelet};
+        for m in engine.registry().iter() {
+            if m.kind == crate::runtime::artifact::ArtifactKind::Fft {
+                assert!(
+                    cache
+                        .lookup(
+                            m.n,
+                            codelet::select(),
+                            bfp::select(),
+                            crate::fft::tune::DEFAULT_TUNE_BATCH
+                        )
+                        .is_some(),
+                    "size {} missing from calibrated cache",
+                    m.n
+                );
+            }
+        }
+        // Post-calibration serving still answers correctly.
+        let mut rng = Rng::new(63);
+        let (n, batch) = (256, 32);
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let y = engine.fft_batch(&x, n, batch, Direction::Forward).unwrap();
+        let want = dft_batch(&x, n, batch, Direction::Forward);
+        assert!(y.rel_l2_error(&want) < 2e-4);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -72,7 +72,12 @@ impl NativeExec {
         // The job's precision policy picks the exchange tier; plans and
         // pooled workspaces are cached per (n, variant, backend,
         // precision), so f32 and bfp16 tiles never share scratch shapes.
-        let exec = self.planner.executor_with_precision(n, variant, self.codelet, job.precision)?;
+        // The tuning cache is consulted first: a searched schedule for
+        // this (n, backend, precision, batch bucket) overrides the
+        // artifact's fixed variant, and a cold or corrupt cache degrades
+        // to exactly the variant executor served before tuning existed.
+        let exec =
+            self.planner.executor_tuned(n, variant, self.codelet, job.precision, batch)?;
         match meta.kind {
             ArtifactKind::Fft => {
                 ensure!(job.inputs[0].len() == n * batch, "input size mismatch");
@@ -195,10 +200,19 @@ mod tests {
                 vec![vec![batch, n], vec![batch, n], vec![n], vec![n]],
             );
             let out = exec.execute(&mut job).unwrap();
-            // Reference through the same planner/backend.
+            // Reference through the same planner/backend — and the same
+            // tuned-schedule consultation the serving path now makes, so
+            // the bitwise assertion holds whether or not this host has a
+            // tuning cache.
             let pexec = exec
                 .planner
-                .executor_with(n, Variant::Radix8, exec.codelet())
+                .executor_tuned(
+                    n,
+                    Variant::Radix8,
+                    exec.codelet(),
+                    crate::fft::bfp::Precision::F32,
+                    batch,
+                )
                 .unwrap();
             let f = pexec
                 .execute_batch(&x, batch, crate::fft::Direction::Forward)

@@ -418,6 +418,109 @@ fn bfp16_fused_pipeline_matches_composed_bitwise() {
     }
 }
 
+/// ISSUE 6 gate: **every** schedule the tuner's enumerator can emit for
+/// the 7 paper sizes — all radix-2/4/8 factorizations per row, both
+/// four-step splits above 4096 — must clear the same bars the fixed
+/// variants clear, because a tuning cache may legally select any of
+/// them:
+///
+/// * O(N^2) oracle up to N=4096; above that, agreement with the
+///   preferred ladder (itself oracle-gated in layer 2a) within a
+///   relative bound, since different splits execute a genuinely
+///   different op order;
+/// * scalar == simd **bitwise** per schedule;
+/// * pooled-executor serial == batch-parallel **bitwise** per schedule
+///   (the searched schedules ride the same striping path the variants
+///   do);
+/// * Bfp16 >= 60 dB SNR against the *same schedule* at f32.
+#[test]
+fn searched_schedules_conform_all_paper_sizes() {
+    use applefft::fft::tune::enumerate_schedules;
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(0x7C4ED);
+    let report = UlpTable::new(
+        "searched-schedule conformance (every enumerable schedule):",
+        &["N", "schedule", "rel_err", "bfp_snr", "status"],
+    );
+    let mut gated = 0usize;
+    for &n in &PAPER_SIZES {
+        let batch = 3usize; // odd: exercises the parallel path's tail chunk
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        // One reference per size: the quadratic oracle where tractable,
+        // else the (oracle-gated elsewhere) preferred plan.
+        let want = if n <= 4096 {
+            dft_oracle(&x, n, batch, Direction::Forward)
+        } else {
+            planner
+                .plan(n, Variant::Radix8)
+                .unwrap()
+                .execute_batch(&x, batch, Direction::Forward)
+                .unwrap()
+        };
+        for schedule in enumerate_schedules(n) {
+            let mut per_backend: Vec<SplitComplex> = Vec::new();
+            let mut printed: Option<(f64, f64)> = None;
+            for &backend in CodeletBackend::compiled() {
+                // Serial plan path vs the oracle/reference.
+                let plan = planner
+                    .plan_scheduled(&schedule, backend, Precision::F32)
+                    .unwrap();
+                let got = plan.execute_batch(&x, batch, Direction::Forward).unwrap();
+                let err = got.rel_l2_error(&want);
+                assert!(
+                    err < 3e-4,
+                    "n={n} schedule={} {}: rel {err}",
+                    schedule.tag(),
+                    backend.tag()
+                );
+                // Pooled executor: serial == parallel, bitwise, and the
+                // serial executor path == the plan path, bitwise.
+                let ex = planner
+                    .executor_scheduled(&schedule, backend, Precision::F32)
+                    .unwrap();
+                let ser = ex.execute_batch(&x, batch, Direction::Forward).unwrap();
+                assert_eq!(ser.re, got.re, "n={n} {} exec re", schedule.tag());
+                assert_eq!(ser.im, got.im, "n={n} {} exec im", schedule.tag());
+                let par = ex.execute_batch_par(&x, batch, Direction::Forward).unwrap();
+                assert_eq!(par.re, ser.re, "n={n} {} par re", schedule.tag());
+                assert_eq!(par.im, ser.im, "n={n} {} par im", schedule.tag());
+                // Bfp16 on the same schedule: accuracy floor holds.
+                let bfp = planner
+                    .plan_scheduled(&schedule, backend, Precision::Bfp16)
+                    .unwrap()
+                    .execute_batch(&x, batch, Direction::Forward)
+                    .unwrap();
+                let snr = snr_db(&bfp, &got);
+                assert!(
+                    snr >= 60.0,
+                    "n={n} schedule={} {}: bfp16 {snr:.1} dB",
+                    schedule.tag(),
+                    backend.tag()
+                );
+                printed.get_or_insert((err, snr));
+                per_backend.push(got);
+            }
+            // scalar == simd, bitwise, per schedule.
+            for other in &per_backend[1..] {
+                assert_eq!(per_backend[0].re, other.re, "n={n} {} re", schedule.tag());
+                assert_eq!(per_backend[0].im, other.im, "n={n} {} im", schedule.tag());
+            }
+            let (err, snr) = printed.unwrap();
+            report.row(&[
+                n.to_string(),
+                schedule.tag(),
+                format!("{err:.2e}"),
+                format!("{snr:.1}"),
+                "ok".to_string(),
+            ]);
+            gated += 1;
+        }
+    }
+    // The enumerator's hand-counted space: if this grows, the gate above
+    // silently got more expensive — fail loudly instead.
+    assert_eq!(gated, 34, "enumerable schedule count changed");
+}
+
 /// Batched execution through the pooled executors must conform too (the
 /// serving path): spot-check a multi-line batch per backend against the
 /// oracle at one representative single-threadgroup size and one

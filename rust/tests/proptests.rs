@@ -355,6 +355,71 @@ fn prop_executor_par_serial_oracle_agree() {
 }
 
 #[test]
+fn prop_tune_cache_roundtrip_bitwise() {
+    // ISSUE 6 satellite: the full tuning loop — search a schedule,
+    // persist it to a cache file, load it back into a fresh planner,
+    // plan through the cache — must reproduce **bitwise** the output of
+    // the in-memory searched plan. Random sizes, batches, directions,
+    // precisions, and random synthetic edge pricings (so different
+    // cases search different winners). The cache file is a temp path,
+    // never the real per-host location.
+    use applefft::fft::tune::{
+        batch_bucket, search, CostModel, Edge, TuneCache, DEFAULT_TUNE_BATCH,
+    };
+    let planner = NativePlanner::new();
+    check("tune cache roundtrip == in-memory plan", 12, |g| {
+        let n = g.pow2_size(8, 14);
+        let batch = g.rng.between(1, 4);
+        let precision = if g.rng.below(2) == 0 { Precision::F32 } else { Precision::Bfp16 };
+        let dir = if g.rng.below(2) == 0 { Direction::Forward } else { Direction::Inverse };
+        // Random stage pricing: radix → a random positive cost, fixed
+        // within a case, so the searched winner varies across cases.
+        let (c2, c4, c8) = (
+            g.rng.between(1, 100) as f64,
+            g.rng.between(1, 100) as f64,
+            g.rng.between(1, 100) as f64,
+        );
+        let model = CostModel::synthetic(move |e| match e {
+            Edge::Stage { radix: 2, .. } => c2,
+            Edge::Stage { radix: 4, .. } => c4,
+            Edge::Stage { radix: 8, .. } => c8,
+            Edge::Stage { .. } => unreachable!(),
+            Edge::Column { .. } => 1.0,
+        });
+        let searched = search(n, &model).unwrap().schedule;
+        // In-memory reference: plan the searched schedule directly.
+        let backend = CodeletBackend::Scalar;
+        let want_plan = planner.plan_scheduled(&searched, backend, precision).unwrap();
+        let (re, im) = g.signal(n * batch);
+        let x = SplitComplex { re, im };
+        let want = want_plan.execute_batch(&x, batch, dir).unwrap();
+        // Persist -> load -> plan through a fresh planner's cache.
+        let mut cache = TuneCache::default();
+        cache.insert(n, backend, precision, batch_bucket(DEFAULT_TUNE_BATCH), searched, 0.0);
+        let path = std::env::temp_dir().join(format!(
+            "applefft-prop-tune-{}-{}.json",
+            std::process::id(),
+            g.case
+        ));
+        cache.save(&path).unwrap();
+        let loaded = TuneCache::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let fresh = NativePlanner::new();
+        fresh.install_tuning(loaded);
+        let s = fresh
+            .tuned_schedule(n, backend, precision, DEFAULT_TUNE_BATCH)
+            .expect("roundtripped entry must be served");
+        let got = fresh
+            .plan_scheduled(&s, backend, precision)
+            .unwrap()
+            .execute_batch(&x, batch, dir)
+            .unwrap();
+        assert_eq!(got.re, want.re, "case {}: n={n} {dir:?} {precision:?} re", g.case);
+        assert_eq!(got.im, want.im, "case {}: n={n} {dir:?} {precision:?} im", g.case);
+    });
+}
+
+#[test]
 fn prop_workspace_pool_steady_state() {
     // The exchange tier must stop allocating once warm: repeated tiles
     // of every shape reuse pooled workspaces, so the created/grow
