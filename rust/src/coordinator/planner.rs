@@ -11,7 +11,7 @@ use crate::fft::stockham::radix_schedule;
 use crate::fft::Direction;
 use crate::runtime::Registry;
 use crate::sim::occupancy;
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 /// How a size is executed (the paper's Table V/VI configurations).
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -20,6 +20,11 @@ pub enum Decomposition {
     SingleTg { radices: Vec<usize>, threads: usize, tg_bytes: usize },
     /// Two dispatches + stride permutation through device memory.
     FourStep { n1: usize, n2: usize },
+    /// Any-N serving outside the paper's artifact range: the schedule
+    /// the native ladder picked ([`crate::fft::plan::any_schedule`]),
+    /// carried by tag (mixed-radix stage list, `rader{p}`, or
+    /// `bluestein{n}`).
+    AnyN { tag: String, passes: usize },
 }
 
 /// An executable plan for one (size, direction).
@@ -41,6 +46,7 @@ impl Plan {
         match &self.decomposition {
             Decomposition::SingleTg { radices, .. } => radices.len(),
             Decomposition::FourStep { n2, .. } => 1 + radix_schedule(*n2, 8).len(),
+            Decomposition::AnyN { passes, .. } => *passes,
         }
     }
 }
@@ -67,11 +73,22 @@ impl Planner {
     }
 
     pub fn plan(&self, n: usize, direction: Direction) -> Result<Plan> {
-        if !n.is_power_of_two() {
-            bail!("FFT size {n} is not a power of two");
-        }
-        if !(256..=16384).contains(&n) {
-            bail!("FFT size {n} outside the supported range 256..16384");
+        // Sizes outside the paper's artifact range (non-pow2, or pow2
+        // below 256) serve through the native any-N ladder; the ladder
+        // itself rejects what nothing can plan (n < 2, n > 8192
+        // non-pow2, pow2 > 16384).
+        if !(n.is_power_of_two() && (256..=16384).contains(&n)) {
+            let schedule = crate::fft::plan::any_schedule(n)?;
+            return Ok(Plan {
+                n,
+                direction,
+                decomposition: Decomposition::AnyN {
+                    tag: schedule.tag(),
+                    passes: schedule.passes(),
+                },
+                artifact: Registry::fft_name(n, direction),
+                batch_tile: self.batch_tile,
+            });
         }
         let decomposition = if n <= B_MAX {
             let radices = radix_schedule(n, self.max_radix);
@@ -183,11 +200,24 @@ mod tests {
     }
 
     #[test]
-    fn rejects_out_of_range() {
+    fn any_n_sizes_plan_outside_the_paper_range() {
         let p = Planner::new(32);
-        assert!(p.plan(128, Direction::Forward).is_err());
-        assert!(p.plan(32768, Direction::Forward).is_err());
-        assert!(p.plan(1000, Direction::Forward).is_err());
+        // One per any-N class: 5-smooth, Rader, Bluestein, small pow2.
+        for (n, want_tag) in
+            [(1000usize, "8.5.5.5"), (1013, "rader1013"), (1001, "bluestein1001"), (128, "8.8.2")]
+        {
+            let plan = p.plan(n, Direction::Forward).unwrap();
+            let Decomposition::AnyN { tag, passes } = &plan.decomposition else {
+                panic!("n={n} must plan as AnyN, got {:?}", plan.decomposition)
+            };
+            assert_eq!(tag, want_tag, "n={n}");
+            assert_eq!(*passes, plan.passes());
+            assert_eq!(plan.artifact, format!("fft{n}_fwd"));
+        }
+        // What nothing can plan still rejects.
+        for bad in [0usize, 1, 8193, 10000, 32768] {
+            assert!(p.plan(bad, Direction::Forward).is_err(), "n={bad} must not plan");
+        }
     }
 
     #[test]

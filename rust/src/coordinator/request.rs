@@ -82,8 +82,10 @@ pub(crate) fn validate_shape(n: usize, lines: usize, payload: usize) -> anyhow::
     anyhow::ensure!(lines > 0, "request has zero lines");
     anyhow::ensure!(payload == n * lines, "payload {payload} != n({n}) x lines({lines})");
     anyhow::ensure!(
-        n.is_power_of_two() && (256..=16384).contains(&n),
-        "unsupported size {n} (supported: 256..16384 pow2)"
+        (n.is_power_of_two() && (2..=16384).contains(&n))
+            || (2..=crate::fft::plan::MAX_ANY_N).contains(&n),
+        "unsupported size {n} (supported: pow2 2..=16384, any 2..={})",
+        crate::fft::plan::MAX_ANY_N
     );
     Ok(())
 }
@@ -154,9 +156,23 @@ mod tests {
     fn validate_rejects_bad_shapes() {
         assert!(req(256, 3, 700).0.validate().is_err()); // wrong payload
         assert!(req(256, 0, 0).0.validate().is_err()); // zero lines
-        assert!(req(300, 1, 300).0.validate().is_err()); // not pow2
-        assert!(req(128, 1, 128).0.validate().is_err()); // below range
+        assert!(req(1, 1, 1).0.validate().is_err()); // below range
+        assert!(req(10000, 1, 10000).0.validate().is_err()); // non-pow2 above any-N range
         assert!(req(32768, 1, 32768).0.validate().is_err()); // above range
+    }
+
+    #[test]
+    fn validate_accepts_arbitrary_n() {
+        // Non-pow2 sizes are served through the any-N plans; small pow2
+        // sizes below the paper range are plain preferred-ladder plans.
+        for n in [3usize, 14, 128, 300, 480, 1000, 1013, 8192] {
+            let (r, _rx) = req(n, 2, 2 * n);
+            assert!(r.validate().is_ok(), "n={n} must validate");
+        }
+        // 8193 is above MAX_ANY_N and not a pow2: still rejected.
+        assert!(req(8193, 1, 8193).0.validate().is_err());
+        // 16384 stays pow2-only territory.
+        assert!(req(16384, 1, 16384).0.validate().is_ok());
     }
 
     #[test]

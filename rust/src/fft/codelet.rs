@@ -143,7 +143,31 @@ pub trait CodeletSet {
     );
 
     #[allow(clippy::too_many_arguments)]
+    fn radix3<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    );
+
+    #[allow(clippy::too_many_arguments)]
     fn radix4<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    );
+
+    #[allow(clippy::too_many_arguments)]
+    fn radix5<const CONJ_IN: bool, const FUSE_OUT: bool>(
         xre: &[f32],
         xim: &[f32],
         yre: &mut [f32],
@@ -183,7 +207,33 @@ pub trait CodeletSet {
     );
 
     #[allow(clippy::too_many_arguments)]
+    fn radix3_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    );
+
+    #[allow(clippy::too_many_arguments)]
     fn radix4_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    );
+
+    #[allow(clippy::too_many_arguments)]
+    fn radix5_mul(
         xre: &[f32],
         xim: &[f32],
         yre: &mut [f32],
@@ -228,6 +278,19 @@ impl CodeletSet for ScalarCodelets {
         super::stockham::radix2_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
     }
 
+    fn radix3<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    ) {
+        super::stockham::radix3_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
+    }
+
     fn radix4<const CONJ_IN: bool, const FUSE_OUT: bool>(
         xre: &[f32],
         xim: &[f32],
@@ -239,6 +302,19 @@ impl CodeletSet for ScalarCodelets {
         scale: f32,
     ) {
         super::stockham::radix4_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
+    }
+
+    fn radix5<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    ) {
+        super::stockham::radix5_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
     }
 
     fn radix8<const CONJ_IN: bool, const FUSE_OUT: bool>(
@@ -268,6 +344,20 @@ impl CodeletSet for ScalarCodelets {
         super::stockham::radix2_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
     }
 
+    fn radix3_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    ) {
+        super::stockham::radix3_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
+    }
+
     fn radix4_mul(
         xre: &[f32],
         xim: &[f32],
@@ -280,6 +370,20 @@ impl CodeletSet for ScalarCodelets {
         him: &[f32],
     ) {
         super::stockham::radix4_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
+    }
+
+    fn radix5_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    ) {
+        super::stockham::radix5_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
     }
 
     fn radix8_mul(
@@ -318,6 +422,19 @@ impl CodeletSet for SimdCodelets {
         super::simd::radix2_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
     }
 
+    fn radix3<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    ) {
+        super::simd::radix3_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
+    }
+
     fn radix4<const CONJ_IN: bool, const FUSE_OUT: bool>(
         xre: &[f32],
         xim: &[f32],
@@ -329,6 +446,19 @@ impl CodeletSet for SimdCodelets {
         scale: f32,
     ) {
         super::simd::radix4_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
+    }
+
+    fn radix5<const CONJ_IN: bool, const FUSE_OUT: bool>(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        scale: f32,
+    ) {
+        super::simd::radix5_stage::<CONJ_IN, FUSE_OUT>(xre, xim, yre, yim, n, s, table, scale)
     }
 
     fn radix8<const CONJ_IN: bool, const FUSE_OUT: bool>(
@@ -358,6 +488,20 @@ impl CodeletSet for SimdCodelets {
         super::simd::radix2_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
     }
 
+    fn radix3_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    ) {
+        super::simd::radix3_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
+    }
+
     fn radix4_mul(
         xre: &[f32],
         xim: &[f32],
@@ -370,6 +514,20 @@ impl CodeletSet for SimdCodelets {
         him: &[f32],
     ) {
         super::simd::radix4_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
+    }
+
+    fn radix5_mul(
+        xre: &[f32],
+        xim: &[f32],
+        yre: &mut [f32],
+        yim: &mut [f32],
+        n: usize,
+        s: usize,
+        table: Option<&StageTable>,
+        hre: &[f32],
+        him: &[f32],
+    ) {
+        super::simd::radix5_stage_mul(xre, xim, yre, yim, n, s, table, hre, him)
     }
 
     fn radix8_mul(
@@ -395,12 +553,16 @@ pub struct CodeletTable {
     backend: CodeletBackend,
     /// Indexed `[conj_in as usize | (fuse_out as usize) << 1]`.
     r2: [StageFn; 4],
+    r3: [StageFn; 4],
     r4: [StageFn; 4],
+    r5: [StageFn; 4],
     r8: [StageFn; 4],
     /// MUL_SPECTRUM variants (forward last stage with the fused filter
     /// multiply), one per radix.
     r2_mul: MulStageFn,
+    r3_mul: MulStageFn,
     r4_mul: MulStageFn,
+    r5_mul: MulStageFn,
     r8_mul: MulStageFn,
 }
 
@@ -415,11 +577,23 @@ impl CodeletTable {
                 C::radix2::<false, true>,
                 C::radix2::<true, true>,
             ],
+            r3: [
+                C::radix3::<false, false>,
+                C::radix3::<true, false>,
+                C::radix3::<false, true>,
+                C::radix3::<true, true>,
+            ],
             r4: [
                 C::radix4::<false, false>,
                 C::radix4::<true, false>,
                 C::radix4::<false, true>,
                 C::radix4::<true, true>,
+            ],
+            r5: [
+                C::radix5::<false, false>,
+                C::radix5::<true, false>,
+                C::radix5::<false, true>,
+                C::radix5::<true, true>,
             ],
             r8: [
                 C::radix8::<false, false>,
@@ -428,7 +602,9 @@ impl CodeletTable {
                 C::radix8::<true, true>,
             ],
             r2_mul: C::radix2_mul,
+            r3_mul: C::radix3_mul,
             r4_mul: C::radix4_mul,
+            r5_mul: C::radix5_mul,
             r8_mul: C::radix8_mul,
         }
     }
@@ -443,7 +619,9 @@ impl CodeletTable {
         let idx = conj_in as usize | (fuse_out as usize) << 1;
         match radix {
             2 => self.r2[idx],
+            3 => self.r3[idx],
             4 => self.r4[idx],
+            5 => self.r5[idx],
             8 => self.r8[idx],
             other => panic!("unsupported radix {other}"),
         }
@@ -455,7 +633,9 @@ impl CodeletTable {
     pub fn stage_mul(&self, radix: usize) -> MulStageFn {
         match radix {
             2 => self.r2_mul,
+            3 => self.r3_mul,
             4 => self.r4_mul,
+            5 => self.r5_mul,
             8 => self.r8_mul,
             other => panic!("unsupported radix {other}"),
         }
@@ -546,13 +726,13 @@ mod tests {
     #[test]
     #[should_panic]
     fn table_rejects_unknown_radix() {
-        scalar_table().stage(3, false, false);
+        scalar_table().stage(7, false, false);
     }
 
     #[test]
     #[should_panic]
     fn mul_table_rejects_unknown_radix() {
-        scalar_table().stage_mul(3);
+        scalar_table().stage_mul(7);
     }
 
     #[test]
@@ -562,7 +742,7 @@ mod tests {
         let mut rng = Rng::new(71);
         for &backend in CodeletBackend::compiled() {
             let t = table(backend);
-            for radix in [2usize, 4, 8] {
+            for radix in [2usize, 3, 4, 5, 8] {
                 let (n, s) = (radix, 24usize);
                 let xre = rng.signal(n * s);
                 let xim = rng.signal(n * s);
@@ -585,7 +765,7 @@ mod tests {
         let mut rng = Rng::new(70);
         for &backend in CodeletBackend::compiled() {
             let t = table(backend);
-            for radix in [2usize, 4, 8] {
+            for radix in [2usize, 3, 4, 5, 8] {
                 let (n, s) = (radix * 2, 3usize);
                 let xre = rng.signal(n * s);
                 let xim = rng.signal(n * s);

@@ -67,6 +67,16 @@ pub struct Workspace {
     /// only full-precision staging that path owns.
     pub(crate) rre: Vec<f32>,
     pub(crate) rim: Vec<f32>,
+    /// Rader/Bluestein convolution line (length >= the plan's `M`):
+    /// the zero-padded gather/chirp buffer the `M`-point convolution
+    /// FFTs run in place on.
+    pub(crate) ext_re: Vec<f32>,
+    pub(crate) ext_im: Vec<f32>,
+    /// Nested workspace for the convolution plan's own exchange tier
+    /// (Rader/Bluestein only; the conv plan is power-of-two, so nesting
+    /// is exactly one level deep). Boxed and lazy so pow2 plans pay
+    /// nothing.
+    pub(crate) inner: Option<Box<Workspace>>,
     grows: usize,
 }
 
@@ -110,9 +120,33 @@ impl Workspace {
         }
     }
 
-    /// Number of buffer (re)allocations this workspace has performed.
+    /// Make sure the Rader/Bluestein convolution line holds `len`
+    /// floats per plane (and that the nested conv workspace exists).
+    pub(crate) fn ensure_ext(&mut self, len: usize) {
+        if self.ext_re.len() < len {
+            self.ext_re.resize(len, 0.0);
+            self.ext_im.resize(len, 0.0);
+            self.grows += 1;
+        }
+        if self.inner.is_none() {
+            self.inner = Some(Box::default());
+            self.grows += 1;
+        }
+    }
+
+    /// Split-borrow the convolution line and the nested workspace
+    /// (callers hold both mutably at once: the conv plan runs *on* the
+    /// ext line *with* the inner scratch). Call
+    /// [`ensure_ext`](Self::ensure_ext) first.
+    pub(crate) fn ext_split(&mut self) -> (&mut [f32], &mut [f32], &mut Workspace) {
+        let inner = self.inner.get_or_insert_with(Box::default);
+        (&mut self.ext_re, &mut self.ext_im, inner)
+    }
+
+    /// Number of buffer (re)allocations this workspace has performed,
+    /// including the nested convolution workspace's.
     pub fn grow_events(&self) -> usize {
-        self.grows
+        self.grows + self.inner.as_ref().map_or(0, |w| w.grow_events())
     }
 }
 
@@ -636,6 +670,36 @@ mod tests {
             let z = ex.execute_batch(&y, batch, Direction::Inverse).unwrap();
             let snr = crate::fft::bfp::snr_db(&z, &x);
             assert!(snr >= 60.0, "n={n}: roundtrip snr {snr:.1} dB");
+        }
+    }
+
+    #[test]
+    fn any_size_executor_par_matches_serial_and_pools() {
+        // Non-pow2 plans (smooth stage lists, Rader, Bluestein) inherit
+        // both executor guarantees: batch-parallel striping is bitwise
+        // the serial path, and the pool — including the nested
+        // convolution workspace — reaches a zero-allocation steady
+        // state.
+        let mut rng = Rng::new(0xA7);
+        for &(n, batch) in &[(480usize, 16usize), (97, 40), (1001, 20)] {
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let ex =
+                BatchExecutor::with_threads(Arc::new(NativePlan::new_any(n).unwrap()), 4);
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let serial = ex.execute_batch(&x, batch, dir).unwrap();
+                let par = ex.execute_batch_par(&x, batch, dir).unwrap();
+                assert_eq!(serial.re, par.re, "n={n} {dir:?}");
+                assert_eq!(serial.im, par.im, "n={n} {dir:?}");
+            }
+            let created = ex.pool_stats().0;
+            let grows = ex.pool_grow_events();
+            assert!(created >= 1);
+            for _ in 0..4 {
+                let mut d = x.clone();
+                ex.execute_batch_auto_into(&mut d, batch, Direction::Forward).unwrap();
+            }
+            assert_eq!(ex.pool_stats().0, created, "n={n}: workspace count grew");
+            assert_eq!(ex.pool_grow_events(), grows, "n={n}: scratch reallocated");
         }
     }
 

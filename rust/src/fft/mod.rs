@@ -122,6 +122,42 @@
 //! [`crate::runtime::Engine::warm_all_calibrate`] calibrates every
 //! registered size and persists the cache before warming.
 //!
+//! # Arbitrary N
+//!
+//! The paper ships 7 power-of-two sizes; real traffic (arbitrary
+//! sample rates, pruned radar range lines) hits every N. The any-N
+//! decision ladder ([`plan::any_schedule`]) closes the gap, cheapest
+//! decomposition first:
+//!
+//! 1. **Power of two** — the historical [`plan::Variant::preferred`]
+//!    plan, bitwise-identical to what the 7 paper sizes always ran.
+//! 2. **5-smooth ≤ 4096** — direct radix-{2,3,4,5,8} Stockham stages:
+//!    hand-written radix-3/5 codelets (scalar + `std::simd` twins,
+//!    same bitwise-equal contract and fused-inverse/MUL_SPECTRUM
+//!    variants as the existing radices) slot into the same
+//!    [`codelet::CodeletTable`] dispatch, so batching, BFP exchange,
+//!    the fused pipeline, tuning, and sharding all apply unchanged.
+//!    `log2`-cost per point, within ~2x of an equal-size pow2 line.
+//! 3. **Prime** — Rader's algorithm: the prime-`p` DFT becomes a
+//!    cyclic convolution of length `p - 1`, executed as an `M =
+//!    next_pow2(2p - 3)`-point circular convolution (forward FFT,
+//!    pointwise multiply against a precomputed kernel spectrum,
+//!    normalized inverse FFT) through the existing pow2 plans — ~2-4x
+//!    an equal-size pow2 transform (two FFTs of up to 2x the length).
+//! 4. **Anything else** (composite non-smooth, or 5-smooth above the
+//!    single-threadgroup budget) — Bluestein's chirp-z: any-`n` DFT as
+//!    a chirp-modulated convolution of length `M = next_pow2(2n - 1)`,
+//!    same cost shape as Rader. Universal: every `2 ≤ n ≤ 8192` plans.
+//!
+//! The convolution kernels are transformed once at plan build with a
+//! *pinned scalar/f32* plan, so they are constants shared by every
+//! backend/precision retarget — which is how the PR 5 invariants
+//! (scalar==simd bitwise, serial==par bitwise, sharded==single
+//! bitwise, Bfp16 ≥ 60 dB) extend to every N rather than 7 of them.
+//! `tests/codelet_conformance.rs` sweeps every N in 2..=512 against
+//! the oracle at both backends and precisions (2..=128 in the default
+//! run; the full sweep runs `--ignored` on the nightly CI leg).
+//!
 //! Algorithms: naive O(N^2) DFT oracle ([`dft`]), radix-2/radix-4
 //! Stockham autosort ([`stockham`]), the paper's radix-8 split-radix DIT
 //! butterfly ([`radix8`]), and the four-step decomposition for N > 4096
@@ -157,6 +193,15 @@ impl Direction {
         match self {
             Direction::Forward => "fwd",
             Direction::Inverse => "inv",
+        }
+    }
+
+    /// The opposite direction (round-trip tests and inverse-via-forward
+    /// formulations).
+    pub fn flip(&self) -> Direction {
+        match self {
+            Direction::Forward => Direction::Inverse,
+            Direction::Inverse => Direction::Forward,
         }
     }
 }

@@ -76,40 +76,78 @@ impl Variant {
     }
 }
 
+/// Beyond-ladder plan kinds for sizes no stage list factorises: the
+/// prime and arbitrary-N fallbacks of the any-N decision ladder
+/// ([`any_schedule`]). Both realise the transform as an `M`-point
+/// power-of-two circular convolution through the existing Stockham
+/// machinery.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Special {
+    /// Rader's algorithm: a prime-`p` DFT as a cyclic convolution of
+    /// length `p - 1` (indices permuted by a primitive root).
+    Rader(usize),
+    /// Bluestein's chirp-z: any-`n` DFT as a chirp-modulated linear
+    /// convolution (the universal fallback).
+    Bluestein(usize),
+}
+
 /// An explicit, fully-general stage schedule — the plan shape the
 /// searcher in [`crate::fft::tune`] emits. Where [`Variant`] names one
 /// of two fixed greedy radix ladders, a `Schedule` is an arbitrary
-/// ordered list of radix-{2,4,8} stages (optionally under a four-step
-/// `(n1, n2)` split), so searched factorizations that no `Variant`
-/// expresses — e.g. `[8, 8, 4, 4]` at 1024, or the `(4, 2048)` split of
-/// 8192 — are runnable through the same codelet drivers.
+/// ordered list of radix-{2,3,4,5,8} stages (optionally under a
+/// four-step `(n1, n2)` split), so searched factorizations that no
+/// `Variant` expresses — e.g. `[8, 8, 4, 4]` at 1024, `[8, 5, 4, 3]`
+/// at 480, or the `(4, 2048)` split of 8192 — are runnable through the
+/// same codelet drivers. Prime and otherwise-unfactorable sizes are
+/// carried as [`Special`] plan kinds instead of a stage list.
 ///
 /// Invariants enforced at construction (the stockham/fourstep drivers
-/// assert the same ones): every radix is 2, 4, or 8; the radix product
-/// is the row length; rows fit the single-threadgroup budget (≤ 4096);
-/// four-step column height `n1` ∈ {2, 4} (the only column codelets the
-/// paper ships).
+/// assert the same ones): every radix is one of {2, 3, 4, 5, 8}; the
+/// radix product is the row length; rows fit the single-threadgroup
+/// budget (≤ 4096); four-step column height `n1` ∈ {2, 4} (the only
+/// column codelets the paper ships); Rader needs an odd prime and
+/// Bluestein any size, both ≤ [`MAX_ANY_N`].
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct Schedule {
     radices: Vec<usize>,
     split: Option<(usize, usize)>,
+    special: Option<Special>,
 }
 
 impl Schedule {
     /// A single-threadgroup Stockham schedule: `radices` multiply out
-    /// to the transform size (≤ 4096).
+    /// to the transform size (≤ 4096, any 5-smooth value).
     pub fn single(radices: Vec<usize>) -> Result<Schedule> {
         let n: usize = radices.iter().product();
         ensure!(!radices.is_empty(), "schedule needs at least one stage");
         ensure!(
-            radices.iter().all(|r| matches!(r, 2 | 4 | 8)),
-            "schedule radices must be 2, 4, or 8 (got {radices:?})"
+            radices.iter().all(|r| matches!(r, 2 | 3 | 4 | 5 | 8)),
+            "schedule radices must be one of {{2, 3, 4, 5, 8}} (got {radices:?})"
         );
         ensure!(
-            n.is_power_of_two() && (2..=4096).contains(&n),
+            (2..=4096).contains(&n),
             "single-threadgroup schedule size {n} out of range (2..=4096)"
         );
-        Ok(Schedule { radices, split: None })
+        Ok(Schedule { radices, split: None, special: None })
+    }
+
+    /// A Rader plan for the odd prime `p`: the prime DFT as a cyclic
+    /// convolution of length `p - 1`, executed as an `M`-point
+    /// power-of-two circular convolution (`M = next_pow2(2p - 3)`).
+    pub fn rader(p: usize) -> Result<Schedule> {
+        ensure!((3..=MAX_ANY_N).contains(&p), "Rader size {p} out of range (3..={MAX_ANY_N})");
+        ensure!(is_prime(p), "Rader plan needs a prime size (got {p})");
+        Ok(Schedule { radices: Vec::new(), split: None, special: Some(Special::Rader(p)) })
+    }
+
+    /// A Bluestein chirp-z plan for arbitrary `n` — the universal
+    /// fallback (`M = next_pow2(2n - 1)` convolution length).
+    pub fn bluestein(n: usize) -> Result<Schedule> {
+        ensure!(
+            (2..=MAX_ANY_N).contains(&n),
+            "Bluestein size {n} out of range (2..={MAX_ANY_N})"
+        );
+        Ok(Schedule { radices: Vec::new(), split: None, special: Some(Special::Bluestein(n)) })
     }
 
     /// A four-step schedule: an `n1`-point column DFT (n1 ∈ {2, 4})
@@ -122,7 +160,7 @@ impl Schedule {
             "four-step row radices {:?} do not multiply to n2={n2}",
             rows.radices
         );
-        Ok(Schedule { radices: rows.radices, split: Some((n1, n2)) })
+        Ok(Schedule { radices: rows.radices, split: Some((n1, n2)), special: None })
     }
 
     /// The schedule [`Variant`]'s greedy ladder produces for `n` —
@@ -132,20 +170,35 @@ impl Schedule {
     pub fn from_variant(n: usize, variant: Variant) -> Schedule {
         assert!(n.is_power_of_two() && n >= 2, "size {n} must be a power of two >= 2");
         if n <= 4096 {
-            Schedule { radices: radix_schedule(n, variant.max_radix()), split: None }
+            Schedule { radices: radix_schedule(n, variant.max_radix()), split: None, special: None }
         } else {
             let (n1, n2) = fourstep::split(n);
-            Schedule { radices: radix_schedule(n2, variant.max_radix()), split: Some((n1, n2)) }
+            Schedule {
+                radices: radix_schedule(n2, variant.max_radix()),
+                split: Some((n1, n2)),
+                special: None,
+            }
         }
     }
 
     /// Total transform size this schedule covers.
     pub fn n(&self) -> usize {
+        match self.special {
+            Some(Special::Rader(p)) => return p,
+            Some(Special::Bluestein(n)) => return n,
+            None => {}
+        }
         let row: usize = self.radices.iter().product();
         match self.split {
             None => row,
             Some((n1, _)) => n1 * row,
         }
+    }
+
+    /// The [`Special`] plan kind, if this is a Rader/Bluestein schedule
+    /// rather than a stage list.
+    pub fn special(&self) -> Option<Special> {
+        self.special
     }
 
     /// Per-row stage radices (the whole transform when not split).
@@ -159,8 +212,17 @@ impl Schedule {
     }
 
     /// Stockham passes per line, counted like [`NativePlan::passes`]:
-    /// the four-step column DFT is one extra pass.
+    /// the four-step column DFT is one extra pass. Rader/Bluestein
+    /// count as forward + inverse convolution FFTs plus the pointwise
+    /// kernel multiply.
     pub fn passes(&self) -> usize {
+        if let Some(sp) = self.special {
+            let m = match sp {
+                Special::Rader(p) => (2 * (p - 1) - 1).next_power_of_two(),
+                Special::Bluestein(n) => (2 * n - 1).next_power_of_two(),
+            };
+            return 2 * Schedule::from_variant(m, Variant::preferred(m)).passes() + 1;
+        }
         self.radices.len() + usize::from(self.split.is_some())
     }
 
@@ -177,8 +239,14 @@ impl Schedule {
 
     /// Compact text form, the tuning cache's wire format:
     /// `"8.8.4.4"` for a single-threadgroup schedule,
-    /// `"4x2048:8.8.8.4"` for a four-step one.
+    /// `"4x2048:8.8.8.4"` for a four-step one, `"rader1013"` /
+    /// `"bluestein1000"` for the special plan kinds.
     pub fn tag(&self) -> String {
+        match self.special {
+            Some(Special::Rader(p)) => return format!("rader{p}"),
+            Some(Special::Bluestein(n)) => return format!("bluestein{n}"),
+            None => {}
+        }
         let stages: Vec<String> = self.radices.iter().map(|r| r.to_string()).collect();
         match self.split {
             None => stages.join("."),
@@ -195,6 +263,19 @@ impl std::str::FromStr for Schedule {
     /// unrunnable schedule — it produces an `Err` and the planner falls
     /// back to the heuristic).
     fn from_str(s: &str) -> Result<Schedule> {
+        // Special plan kinds first: "rader{p}" / "bluestein{n}". The
+        // constructors re-validate (primality, range), so a corrupt tag
+        // like "rader10" is an Err, never a bad plan.
+        if let Some(rest) = s.strip_prefix("rader") {
+            let p: usize =
+                rest.parse().map_err(|e| anyhow::anyhow!("bad Rader size {rest:?}: {e}"))?;
+            return Schedule::rader(p);
+        }
+        if let Some(rest) = s.strip_prefix("bluestein") {
+            let n: usize =
+                rest.parse().map_err(|e| anyhow::anyhow!("bad Bluestein size {rest:?}: {e}"))?;
+            return Schedule::bluestein(n);
+        }
         let parse_radices = |list: &str| -> Result<Vec<usize>> {
             list.split('.')
                 .map(|t| t.parse::<usize>().map_err(|e| anyhow::anyhow!("bad radix {t:?}: {e}")))
@@ -214,7 +295,141 @@ impl std::str::FromStr for Schedule {
     }
 }
 
-/// How the transform is decomposed (paper §IV-D synthesis rules).
+/// Largest non-power-of-two size the any-N ladder serves. Rader at
+/// `p <= 8191` and Bluestein at `n <= 8192` both keep the convolution
+/// length `M = next_pow2(2n - 1)` within the 16384-point power-of-two
+/// machinery the paper ships.
+pub const MAX_ANY_N: usize = 8192;
+
+/// Trial-division primality — sizes are ≤ [`MAX_ANY_N`], so this is
+/// plan-build cost, not transform cost.
+pub(crate) fn is_prime(n: usize) -> bool {
+    if n < 2 {
+        return false;
+    }
+    let mut d = 2;
+    while d * d <= n {
+        if n % d == 0 {
+            return false;
+        }
+        d += 1;
+    }
+    true
+}
+
+/// Whether `n` factors entirely into {2, 3, 5} — i.e. is runnable as a
+/// direct radix-{2,3,4,5,8} Stockham stage list.
+pub(crate) fn is_five_smooth(n: usize) -> bool {
+    let mut rem = n;
+    for p in [2usize, 3, 5] {
+        while rem % p == 0 {
+            rem /= p;
+        }
+    }
+    rem == 1
+}
+
+/// Canonical stage list for a 5-smooth `n`: the power-of-two part as
+/// the greedy radix-8 ladder (`8…8 [4] [2]`), fives before threes, in
+/// non-increasing radix order — `[8s, 5s, 4?, 3s, 2?]`. Always inside
+/// the space `fft::tune::enumerate_radix_schedules` searches, so a
+/// tuned entry can only replace it with something measured faster.
+pub(crate) fn five_smooth_radices(n: usize) -> Vec<usize> {
+    debug_assert!(n >= 2 && is_five_smooth(n), "five_smooth_radices({n})");
+    let (mut rem, mut twos, mut threes, mut fives) = (n, 0usize, 0usize, 0usize);
+    while rem % 2 == 0 {
+        twos += 1;
+        rem /= 2;
+    }
+    while rem % 3 == 0 {
+        threes += 1;
+        rem /= 3;
+    }
+    while rem % 5 == 0 {
+        fives += 1;
+        rem /= 5;
+    }
+    debug_assert_eq!(rem, 1);
+    let mut out = vec![8usize; twos / 3];
+    out.extend(std::iter::repeat(5).take(fives));
+    if twos % 3 == 2 {
+        out.push(4);
+    }
+    out.extend(std::iter::repeat(3).take(threes));
+    if twos % 3 == 1 {
+        out.push(2);
+    }
+    out
+}
+
+/// The any-N planning ladder (codelet → Rader → Bluestein):
+/// power-of-two sizes keep their historical [`Variant`] schedule
+/// (bitwise-identical plans); 5-smooth sizes ≤ 4096 run direct
+/// radix-{2,3,4,5,8} stages; primes run Rader; everything else —
+/// including 5-smooth sizes above the single-threadgroup budget —
+/// falls through to Bluestein.
+pub fn any_schedule(n: usize) -> Result<Schedule> {
+    ensure!(n >= 2, "FFT size {n} must be >= 2");
+    if n.is_power_of_two() {
+        ensure!(n <= 16384, "power-of-two FFT size {n} exceeds 16384");
+        return Ok(Schedule::from_variant(n, Variant::preferred(n)));
+    }
+    ensure!(n <= MAX_ANY_N, "non-power-of-two FFT size {n} exceeds {MAX_ANY_N}");
+    if is_five_smooth(n) && n <= 4096 {
+        return Schedule::single(five_smooth_radices(n));
+    }
+    if is_prime(n) {
+        return Schedule::rader(n);
+    }
+    Schedule::bluestein(n)
+}
+
+/// `b^e mod m` by square-and-multiply (`m` ≤ 8192, so products fit
+/// comfortably in usize).
+fn pow_mod(mut b: usize, mut e: usize, m: usize) -> usize {
+    let mut acc = 1usize;
+    b %= m;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = acc * b % m;
+        }
+        b = b * b % m;
+        e >>= 1;
+    }
+    acc
+}
+
+/// Smallest primitive root modulo the odd prime `p`: the first `g`
+/// with `g^((p-1)/q) != 1` for every prime factor `q` of `p - 1`.
+fn primitive_root(p: usize) -> usize {
+    let mut factors = Vec::new();
+    let mut rem = p - 1;
+    let mut d = 2;
+    while d * d <= rem {
+        if rem % d == 0 {
+            factors.push(d);
+            while rem % d == 0 {
+                rem /= d;
+            }
+        }
+        d += 1;
+    }
+    if rem > 1 {
+        factors.push(rem);
+    }
+    'g: for g in 2..p {
+        for &q in &factors {
+            if pow_mod(g, (p - 1) / q, p) == 1 {
+                continue 'g;
+            }
+        }
+        return g;
+    }
+    unreachable!("every odd prime has a primitive root")
+}
+
+/// How the transform is decomposed (paper §IV-D synthesis rules, plus
+/// the any-N convolution plan kinds of [`any_schedule`]).
 #[derive(Clone, Debug)]
 enum Decomposition {
     /// Single-"threadgroup" Stockham run (N <= 4096).
@@ -226,6 +441,35 @@ enum Decomposition {
         radices: Vec<usize>,
         tables: PlanTables,
         tw_fwd: Vec<C32>,
+    },
+    /// Rader prime-length DFT: gather by powers of a primitive root,
+    /// an `M`-point circular convolution against a precomputed kernel
+    /// spectrum, scatter by inverse powers.
+    Rader {
+        /// `g^q mod p` for `q` in `0..p-1` (gather permutation).
+        g_pow: Vec<u32>,
+        /// `g^{-m} mod p` for `m` in `0..p-1` (scatter permutation and
+        /// kernel exponents).
+        g_inv_pow: Vec<u32>,
+        /// `FFT_M` of the wrapped kernel `b[r] = W_p^{g^{-r}}` — built
+        /// once with a pinned scalar/f32 plan, so it is one constant
+        /// shared by every backend/precision retarget of this plan.
+        kernel: SplitComplex,
+        /// The `M`-point power-of-two convolution plan.
+        conv: Box<NativePlan>,
+    },
+    /// Bluestein chirp-z: chirp-modulate, `M`-point circular
+    /// convolution against the conjugate-chirp kernel spectrum,
+    /// chirp-demodulate.
+    Bluestein {
+        /// `w[j] = e^{-iπ j²/n}` for `j` in `0..n` (phase reduced mod
+        /// `2n` in f64 before sincos).
+        chirp: SplitComplex,
+        /// `FFT_M` of the wrapped conjugate chirp — same pinned
+        /// scalar/f32 constant contract as the Rader kernel.
+        kernel: SplitComplex,
+        /// The `M`-point power-of-two convolution plan.
+        conv: Box<NativePlan>,
     },
 }
 
@@ -256,6 +500,17 @@ impl NativePlan {
         Self::build(variant, Schedule::from_variant(n, variant))
     }
 
+    /// Plan any size `n >= 2`: power-of-two sizes build exactly the
+    /// historical [`Variant::preferred`] plan (bitwise-identical
+    /// output); everything else takes the [`any_schedule`] codelet →
+    /// Rader → Bluestein ladder.
+    pub fn new_any(n: usize) -> Result<NativePlan> {
+        if n.is_power_of_two() && n >= 2 {
+            return Self::new(n, Variant::preferred(n));
+        }
+        Self::with_schedule(any_schedule(n)?)
+    }
+
     /// Build a plan from an explicit (typically searched) [`Schedule`].
     /// The `variant` field is set to the nearest ladder label for
     /// telemetry; dispatch follows the schedule's stage list exactly.
@@ -265,6 +520,20 @@ impl NativePlan {
 
     fn build(variant: Variant, schedule: Schedule) -> Result<NativePlan> {
         let n = schedule.n();
+        if let Some(sp) = schedule.special() {
+            let decomp = match sp {
+                Special::Rader(p) => Self::build_rader(p)?,
+                Special::Bluestein(bn) => Self::build_bluestein(bn)?,
+            };
+            return Ok(NativePlan {
+                n,
+                variant,
+                decomp,
+                codelet: codelet::select(),
+                precision: bfp::select(),
+                use_tables: true,
+            });
+        }
         let decomp = match schedule.split() {
             None => {
                 let radices = schedule.radices().to_vec();
@@ -295,22 +564,125 @@ impl NativePlan {
         })
     }
 
+    /// Transform the padded kernel line in place with a *pinned*
+    /// scalar/f32 plan of its (power-of-two) length, and return the
+    /// spectrum alongside the runtime convolution plan. Pinning makes
+    /// the kernel one constant shared by every backend/precision
+    /// retarget of the outer plan, so scalar==simd stays bitwise by
+    /// construction at Rader/Bluestein sizes.
+    fn conv_kernel(mut pad: SplitComplex) -> Result<(SplitComplex, Box<NativePlan>)> {
+        let m = pad.len();
+        let conv = NativePlan::new(m, Variant::preferred(m))?;
+        let pinned = NativePlan::new(m, Variant::preferred(m))?
+            .with_codelet(CodeletBackend::Scalar)
+            .with_precision(Precision::F32);
+        let mut ws = Workspace::new();
+        pinned.run_lines(&mut pad.re, &mut pad.im, 1, Direction::Forward, &mut ws);
+        Ok((pad, Box::new(conv)))
+    }
+
+    /// Build the Rader decomposition for the odd prime `p`: permutation
+    /// tables from a primitive root, and the spectrum of the length
+    /// `L = p - 1` kernel `b[r] = W_p^{g^{-r}}` periodically wrapped
+    /// into `M = next_pow2(2L - 1)` points (`b_pad[M - j] = b[L - j]`
+    /// carries the negative lags; `M >= 2L - 1` keeps head and tail
+    /// disjoint, so the `M`-point circular convolution of the
+    /// zero-padded gather line is exactly the length-`L` cyclic one).
+    fn build_rader(p: usize) -> Result<Decomposition> {
+        let l = p - 1;
+        let m = (2 * l - 1).next_power_of_two();
+        let g = primitive_root(p);
+        let g_inv = pow_mod(g, p - 2, p);
+        let (mut g_pow, mut g_inv_pow) = (Vec::with_capacity(l), Vec::with_capacity(l));
+        let (mut fwd, mut inv) = (1usize, 1usize);
+        for _ in 0..l {
+            g_pow.push(fwd as u32);
+            g_inv_pow.push(inv as u32);
+            fwd = fwd * g % p;
+            inv = inv * g_inv % p;
+        }
+        let mut pad = SplitComplex::zeros(m);
+        for r in 0..l {
+            let theta = -2.0 * std::f64::consts::PI * (g_inv_pow[r] as f64) / (p as f64);
+            pad.re[r] = theta.cos() as f32;
+            pad.im[r] = theta.sin() as f32;
+        }
+        for j in 1..l {
+            pad.re[m - j] = pad.re[l - j];
+            pad.im[m - j] = pad.im[l - j];
+        }
+        let (kernel, conv) = Self::conv_kernel(pad)?;
+        Ok(Decomposition::Rader { g_pow, g_inv_pow, kernel, conv })
+    }
+
+    /// Build the Bluestein decomposition for arbitrary `n`: the chirp
+    /// `w[j] = e^{-iπ j²/n}` (phase reduced mod `2n` in f64 — `j²` has
+    /// period `2n` in the exponent) and the spectrum of its conjugate
+    /// wrapped into `M = next_pow2(2n - 1)` points; the kernel is even
+    /// (`b[-j] = b[j]`), so the wrap mirrors the head.
+    fn build_bluestein(n: usize) -> Result<Decomposition> {
+        let m = (2 * n - 1).next_power_of_two();
+        let mut chirp = SplitComplex::zeros(n);
+        for j in 0..n {
+            let theta = -std::f64::consts::PI * ((j * j) % (2 * n)) as f64 / n as f64;
+            chirp.re[j] = theta.cos() as f32;
+            chirp.im[j] = theta.sin() as f32;
+        }
+        let mut pad = SplitComplex::zeros(m);
+        for j in 0..n {
+            pad.re[j] = chirp.re[j];
+            pad.im[j] = -chirp.im[j];
+            if j > 0 {
+                pad.re[m - j] = chirp.re[j];
+                pad.im[m - j] = -chirp.im[j];
+            }
+        }
+        let (kernel, conv) = Self::conv_kernel(pad)?;
+        Ok(Decomposition::Bluestein { chirp, kernel, conv })
+    }
+
     /// The stage schedule this plan dispatches (reconstructed from the
     /// decomposition, so it is always the one that actually runs).
     pub fn schedule(&self) -> Schedule {
         match &self.decomp {
             Decomposition::Single { radices, .. } => {
-                Schedule { radices: radices.clone(), split: None }
+                Schedule { radices: radices.clone(), split: None, special: None }
             }
             Decomposition::FourStep { n1, n2, radices, .. } => {
-                Schedule { radices: radices.clone(), split: Some((*n1, *n2)) }
+                Schedule { radices: radices.clone(), split: Some((*n1, *n2)), special: None }
             }
+            Decomposition::Rader { .. } => Schedule {
+                radices: Vec::new(),
+                split: None,
+                special: Some(Special::Rader(self.n)),
+            },
+            Decomposition::Bluestein { .. } => Schedule {
+                radices: Vec::new(),
+                split: None,
+                special: Some(Special::Bluestein(self.n)),
+            },
+        }
+    }
+
+    /// The nested convolution plan of a Rader/Bluestein decomposition,
+    /// if any — backend/precision retargets recurse into it so the
+    /// whole plan runs one configuration. (The conv plan is always a
+    /// power-of-two Single/FourStep plan; no deeper nesting exists.)
+    fn conv_plan_mut(&mut self) -> Option<&mut NativePlan> {
+        match &mut self.decomp {
+            Decomposition::Rader { conv, .. } | Decomposition::Bluestein { conv, .. } => {
+                Some(conv)
+            }
+            _ => None,
         }
     }
 
     /// Disable twiddle tables (use the on-the-fly sincos chain).
     pub fn without_tables(mut self) -> Self {
         self.use_tables = false;
+        if let Some(conv) = self.conv_plan_mut() {
+            conv.use_tables = false;
+        }
         self
     }
 
@@ -322,6 +694,9 @@ impl NativePlan {
     /// claims codelets that didn't run.
     pub fn with_codelet(mut self, backend: CodeletBackend) -> Self {
         self.codelet = backend.resolve();
+        if let Some(conv) = self.conv_plan_mut() {
+            conv.codelet = backend.resolve();
+        }
         self
     }
 
@@ -329,6 +704,9 @@ impl NativePlan {
     /// process-wide choice, `APPLEFFT_PRECISION` overridable).
     pub fn with_precision(mut self, precision: Precision) -> Self {
         self.precision = precision;
+        if let Some(conv) = self.conv_plan_mut() {
+            conv.precision = precision;
+        }
         self
     }
 
@@ -342,6 +720,11 @@ impl NativePlan {
                 // threadgroup dispatches": 1 + row passes. n1 kept for doc.
                 let _ = n1;
                 1 + radices.len()
+            }
+            // Forward + inverse convolution FFTs plus the pointwise
+            // kernel multiply (matches Schedule::passes).
+            Decomposition::Rader { conv, .. } | Decomposition::Bluestein { conv, .. } => {
+                2 * conv.passes() + 1
             }
         }
     }
@@ -451,6 +834,43 @@ impl NativePlan {
                             inverse,
                         );
                     }
+                }
+            }
+            Decomposition::Rader { g_pow, g_inv_pow, kernel, conv } => {
+                ws.ensure_ext(kernel.len());
+                let (ext_re, ext_im, inner) = ws.ext_split();
+                for b in 0..lines {
+                    let at = b * n;
+                    rader_line(
+                        conv,
+                        &mut re[at..at + n],
+                        &mut im[at..at + n],
+                        g_pow,
+                        g_inv_pow,
+                        kernel,
+                        inverse,
+                        ext_re,
+                        ext_im,
+                        inner,
+                    );
+                }
+            }
+            Decomposition::Bluestein { chirp, kernel, conv } => {
+                ws.ensure_ext(kernel.len());
+                let (ext_re, ext_im, inner) = ws.ext_split();
+                for b in 0..lines {
+                    let at = b * n;
+                    bluestein_line(
+                        conv,
+                        &mut re[at..at + n],
+                        &mut im[at..at + n],
+                        chirp,
+                        kernel,
+                        inverse,
+                        ext_re,
+                        ext_im,
+                        inner,
+                    );
                 }
             }
         }
@@ -628,6 +1048,26 @@ impl NativePlan {
                     }
                 }
             }
+            // The convolution plan kinds have no last-stage store to
+            // fuse into; the pipeline is the composed three-dispatch
+            // sequence itself (forward, pointwise multiply in the same
+            // IEEE op order as the fused codelets, fused inverse) — so
+            // it is bitwise-equal to that sequence by construction.
+            Decomposition::Rader { .. } | Decomposition::Bluestein { .. } => {
+                self.run_lines(re, im, lines, Direction::Forward, ws);
+                for b in 0..lines {
+                    let at = b * n;
+                    for i in 0..n {
+                        (re[at + i], im[at + i]) = stockham::mul_spectrum_lane(
+                            re[at + i],
+                            im[at + i],
+                            filter.re[i],
+                            filter.im[i],
+                        );
+                    }
+                }
+                self.run_lines(re, im, lines, Direction::Inverse, ws);
+            }
         }
     }
 
@@ -652,6 +1092,106 @@ impl NativePlan {
         let mut ws = Workspace::new();
         self.run_lines(&mut data.re, &mut data.im, batch, dir, &mut ws);
         Ok(data)
+    }
+}
+
+/// One Rader line in place: gather `x[g^q]` into the zero-padded conv
+/// line, `M`-point circular convolution against the kernel spectrum
+/// (forward FFT, pointwise multiply, normalized inverse FFT — the
+/// repo's inverse carries `1/M`, which is exactly the circular
+/// convolution normalization), then scatter `X[g^{-m}] = x[0] + c[m]`
+/// and `X[0] = Σx`. The inverse transform is the conjugation identity
+/// `ifft(x) = conj(fft(conj(x)))/p` fused into the gather (conjugated
+/// loads) and scatter (conjugate + `1/p` stores); `sign`-multiplies by
+/// `1.0` on the forward path are IEEE-exact identities, so the forward
+/// path is bit-identical to an unfused formulation.
+#[allow(clippy::too_many_arguments)]
+fn rader_line(
+    conv: &NativePlan,
+    re: &mut [f32],
+    im: &mut [f32],
+    g_pow: &[u32],
+    g_inv_pow: &[u32],
+    kernel: &SplitComplex,
+    inverse: bool,
+    ext_re: &mut [f32],
+    ext_im: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let p = re.len();
+    let l = p - 1;
+    let m = kernel.len();
+    let sign = if inverse { -1.0f32 } else { 1.0 };
+    let (ext_re, ext_im) = (&mut ext_re[..m], &mut ext_im[..m]);
+    ext_re.fill(0.0);
+    ext_im.fill(0.0);
+    let (x0r, x0i) = (re[0], sign * im[0]);
+    let (mut sr, mut si) = (x0r, x0i);
+    for q in 0..l {
+        let idx = g_pow[q] as usize;
+        let (vr, vi) = (re[idx], sign * im[idx]);
+        ext_re[q] = vr;
+        ext_im[q] = vi;
+        sr += vr;
+        si += vi;
+    }
+    conv.run_lines(ext_re, ext_im, 1, Direction::Forward, ws);
+    for j in 0..m {
+        (ext_re[j], ext_im[j]) =
+            stockham::mul_spectrum_lane(ext_re[j], ext_im[j], kernel.re[j], kernel.im[j]);
+    }
+    conv.run_lines(ext_re, ext_im, 1, Direction::Inverse, ws);
+    let scale = if inverse { 1.0 / p as f32 } else { 1.0 };
+    re[0] = sr * scale;
+    im[0] = sign * si * scale;
+    for mi in 0..l {
+        let idx = g_inv_pow[mi] as usize;
+        re[idx] = (x0r + ext_re[mi]) * scale;
+        im[idx] = sign * ((x0i + ext_im[mi]) * scale);
+    }
+}
+
+/// One Bluestein line in place: chirp-modulate into the zero-padded
+/// conv line, `M`-point circular convolution against the
+/// conjugate-chirp kernel spectrum, chirp-demodulate. Derivation:
+/// `jk = (j² + k² - (k-j)²)/2`, so `X[k] = w[k] Σ_j (x[j]w[j])·b[k-j]`
+/// with `b = conj(w)` even and `2n`-periodic — a linear convolution
+/// that the `M ≥ 2n-1` circular one computes exactly. Inverse via the
+/// same fused conjugation identity as [`rader_line`].
+#[allow(clippy::too_many_arguments)]
+fn bluestein_line(
+    conv: &NativePlan,
+    re: &mut [f32],
+    im: &mut [f32],
+    chirp: &SplitComplex,
+    kernel: &SplitComplex,
+    inverse: bool,
+    ext_re: &mut [f32],
+    ext_im: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let n = re.len();
+    let m = kernel.len();
+    let sign = if inverse { -1.0f32 } else { 1.0 };
+    let (ext_re, ext_im) = (&mut ext_re[..m], &mut ext_im[..m]);
+    ext_re.fill(0.0);
+    ext_im.fill(0.0);
+    for j in 0..n {
+        (ext_re[j], ext_im[j]) =
+            stockham::mul_spectrum_lane(re[j], sign * im[j], chirp.re[j], chirp.im[j]);
+    }
+    conv.run_lines(ext_re, ext_im, 1, Direction::Forward, ws);
+    for j in 0..m {
+        (ext_re[j], ext_im[j]) =
+            stockham::mul_spectrum_lane(ext_re[j], ext_im[j], kernel.re[j], kernel.im[j]);
+    }
+    conv.run_lines(ext_re, ext_im, 1, Direction::Inverse, ws);
+    let scale = if inverse { 1.0 / n as f32 } else { 1.0 };
+    for k in 0..n {
+        let (or, oi) =
+            stockham::mul_spectrum_lane(ext_re[k], ext_im[k], chirp.re[k], chirp.im[k]);
+        re[k] = or * scale;
+        im[k] = sign * (oi * scale);
     }
 }
 
@@ -693,7 +1233,6 @@ impl NativePlanner {
     /// hardcoding a variant. Consults the per-host tuning cache first;
     /// cold cache (or `APPLEFFT_TUNE=off`) falls back to the heuristic.
     pub fn plan_auto(&self, n: usize) -> Result<Arc<NativePlan>> {
-        ensure!(n.is_power_of_two() && n >= 2, "FFT size {n} must be a power of two >= 2");
         let (backend, precision) = (codelet::select(), bfp::select());
         if let Some(s) =
             self.tuned_schedule(n, backend, precision, super::tune::DEFAULT_TUNE_BATCH)
@@ -701,6 +1240,9 @@ impl NativePlanner {
             if let Ok(p) = self.plan_scheduled(&s, backend, precision) {
                 return Ok(p);
             }
+        }
+        if !(n.is_power_of_two() && n >= 2) {
+            return self.plan_scheduled(&any_schedule(n)?, backend, precision);
         }
         self.plan(n, Variant::preferred(n))
     }
@@ -716,7 +1258,14 @@ impl NativePlanner {
     /// spectral pipeline, SAR compressors, the serving backend) use.
     /// Tuning-cache-aware, like [`Self::plan_auto`].
     pub fn executor_auto_with(&self, n: usize, precision: Precision) -> Result<Arc<BatchExecutor>> {
-        ensure!(n.is_power_of_two() && n >= 2, "FFT size {n} must be a power of two >= 2");
+        if !(n.is_power_of_two() && n >= 2) {
+            return self.executor_any(
+                n,
+                codelet::select(),
+                precision,
+                super::tune::DEFAULT_TUNE_BATCH,
+            );
+        }
         self.executor_tuned(
             n,
             Variant::preferred(n),
@@ -724,6 +1273,26 @@ impl NativePlanner {
             precision,
             super::tune::DEFAULT_TUNE_BATCH,
         )
+    }
+
+    /// Non-power-of-two executor lookup: the tuning cache's searched
+    /// schedule first (the searcher can beat [`five_smooth_radices`]'
+    /// canonical order on 5-smooth sizes), else the [`any_schedule`]
+    /// ladder. Cached through the same schedule-keyed maps as every
+    /// other searched plan.
+    pub fn executor_any(
+        &self,
+        n: usize,
+        backend: CodeletBackend,
+        precision: Precision,
+        batch: usize,
+    ) -> Result<Arc<BatchExecutor>> {
+        if let Some(s) = self.tuned_schedule(n, backend, precision, batch) {
+            if let Ok(e) = self.executor_scheduled(&s, backend, precision) {
+                return Ok(e);
+            }
+        }
+        self.executor_scheduled(&any_schedule(n)?, backend, precision)
     }
 
     /// The per-host tuning cache, loading it from disk exactly once.
@@ -807,6 +1376,11 @@ impl NativePlanner {
         precision: Precision,
         batch: usize,
     ) -> Result<Arc<BatchExecutor>> {
+        // Non-power-of-two sizes have no variant ladder to fall back
+        // to; `fallback` only labels the pow2 path.
+        if !(n.is_power_of_two() && n >= 2) {
+            return self.executor_any(n, backend, precision, batch);
+        }
         if let Some(s) = self.tuned_schedule(n, backend, precision, batch) {
             if let Ok(e) = self.executor_scheduled(&s, backend, precision) {
                 return Ok(e);
@@ -904,6 +1478,20 @@ impl NativePlanner {
         dir: Direction,
     ) -> Result<SplitComplex> {
         self.executor(n, Variant::Radix8)?.execute_batch(input, batch, dir)
+    }
+
+    /// Convenience one-shot batched FFT at any size `n >= 2`, through
+    /// the pooled tuning-aware auto executor (power-of-two sizes keep
+    /// the historical preferred-variant plan; everything else takes the
+    /// [`any_schedule`] ladder).
+    pub fn fft_batch_any(
+        &self,
+        input: &SplitComplex,
+        n: usize,
+        batch: usize,
+        dir: Direction,
+    ) -> Result<SplitComplex> {
+        self.executor_auto(n)?.execute_batch(input, batch, dir)
     }
 
     pub fn cached_plans(&self) -> usize {
@@ -1340,15 +1928,38 @@ mod tests {
         for sched in [
             Schedule::single(vec![8, 8, 4]).unwrap(),
             Schedule::single(vec![2]).unwrap(),
+            Schedule::single(vec![8, 5, 4, 3]).unwrap(),
+            Schedule::single(vec![5, 3]).unwrap(),
             Schedule::four_step(2, 4096, vec![8, 8, 8, 8]).unwrap(),
             Schedule::four_step(4, 2048, vec![8, 8, 8, 4]).unwrap(),
+            Schedule::rader(1013).unwrap(),
+            Schedule::bluestein(1000).unwrap(),
         ] {
             let tag = sched.tag();
             let back: Schedule = tag.parse().unwrap();
             assert_eq!(back, sched, "tag {tag:?}");
         }
         assert_eq!(Schedule::four_step(2, 4096, vec![8, 8, 8, 8]).unwrap().tag(), "2x4096:8.8.8.8");
-        for bad in ["", "8.8.3", "7", "8x512:8.8.8", "2x4096:8.8.8", "2x4096", "8..8"] {
+        assert_eq!(Schedule::rader(17).unwrap().tag(), "rader17");
+        assert_eq!(Schedule::bluestein(480).unwrap().tag(), "bluestein480");
+        for bad in [
+            "",
+            "8.8.7",
+            "7",
+            "8x512:8.8.8",
+            "2x4096:8.8.8",
+            "2x4096",
+            "8..8",
+            // Special kinds re-validate: composite Rader, out-of-range
+            // or malformed sizes are parse errors, never bad plans.
+            "rader10",
+            "rader",
+            "rader8209",
+            "bluestein0",
+            "bluestein1",
+            "bluestein8193",
+            "bluesteinx",
+        ] {
             assert!(bad.parse::<Schedule>().is_err(), "{bad:?} must not parse");
         }
         // Oversized rows violate the threadgroup budget.
@@ -1426,5 +2037,209 @@ mod tests {
             .executor_tuned(1024, Variant::Radix8, codelet::select(), bfp::select(), 61)
             .unwrap();
         assert_eq!(bucketed.plan().schedule(), sched);
+    }
+
+    #[test]
+    fn any_schedule_ladder_routes_each_class() {
+        // pow2 → the historical variant schedule (bitwise-preserving);
+        // 5-smooth ≤ 4096 → direct stages; prime → Rader; composite
+        // non-smooth (and 5-smooth above the threadgroup budget) →
+        // Bluestein; out of range → error.
+        assert_eq!(
+            any_schedule(1024).unwrap(),
+            Schedule::from_variant(1024, Variant::preferred(1024))
+        );
+        assert_eq!(any_schedule(15).unwrap(), Schedule::single(vec![5, 3]).unwrap());
+        assert_eq!(any_schedule(60).unwrap(), Schedule::single(vec![5, 4, 3]).unwrap());
+        assert_eq!(any_schedule(480).unwrap(), Schedule::single(vec![8, 5, 4, 3]).unwrap());
+        assert_eq!(any_schedule(1000).unwrap(), Schedule::single(vec![8, 5, 5, 5]).unwrap());
+        assert_eq!(any_schedule(17).unwrap(), Schedule::rader(17).unwrap());
+        assert_eq!(any_schedule(1013).unwrap(), Schedule::rader(1013).unwrap());
+        assert_eq!(any_schedule(14).unwrap(), Schedule::bluestein(14).unwrap());
+        assert_eq!(any_schedule(1001).unwrap(), Schedule::bluestein(1001).unwrap());
+        assert_eq!(any_schedule(4800).unwrap(), Schedule::bluestein(4800).unwrap());
+        assert!(any_schedule(0).is_err());
+        assert!(any_schedule(1).is_err());
+        assert!(any_schedule(8193).is_err());
+        assert!(any_schedule(32768).is_err());
+        // Tag metadata for the special kinds.
+        assert_eq!(Schedule::rader(1013).unwrap().n(), 1013);
+        assert_eq!(Schedule::bluestein(1001).unwrap().n(), 1001);
+        assert!(Schedule::rader(1013).unwrap().passes() > 0);
+        // Rader rejects composites; both reject out-of-range sizes.
+        assert!(Schedule::rader(1000).is_err());
+        assert!(Schedule::rader(2).is_err(), "p=2 is power-of-two territory");
+        assert!(Schedule::bluestein(8193).is_err());
+    }
+
+    #[test]
+    fn five_smooth_radices_are_canonical_and_complete() {
+        for (n, want) in [
+            (15usize, vec![5usize, 3]),
+            (45, vec![5, 3, 3]),
+            (100, vec![5, 5, 4]),
+            (120, vec![8, 5, 3]),
+            (480, vec![8, 5, 4, 3]),
+            (2025, vec![5, 5, 3, 3, 3, 3]),
+            (4096, vec![8, 8, 8, 8]),
+            (6, vec![3, 2]),
+        ] {
+            let got = five_smooth_radices(n);
+            assert_eq!(got, want, "n={n}");
+            assert_eq!(got.iter().product::<usize>(), n, "n={n}");
+        }
+        assert!(is_five_smooth(4800) && !is_five_smooth(14) && !is_five_smooth(1013));
+        assert!(is_prime(2) && is_prime(8191) && !is_prime(1) && !is_prime(8189));
+    }
+
+    #[test]
+    fn any_size_plans_match_oracle() {
+        // One size per ladder class (and a few extras), forward and
+        // inverse, against the f64 O(N²) oracle. Rader/Bluestein pay
+        // two extra FFT passes of rounding, hence the looser bound.
+        let mut rng = Rng::new(0x70);
+        for &n in &[15usize, 60, 480, 2025, 17, 97, 1013, 14, 1001] {
+            let batch = 2;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let plan = NativePlan::new_any(n).unwrap();
+            assert_eq!(plan.n, n);
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let want = dft_batch(&x, n, batch, dir);
+                let got = plan.execute_batch(&x, batch, dir).unwrap();
+                let err = got.rel_l2_error(&want);
+                assert!(err < 5e-4, "n={n} {dir:?}: rel err {err}");
+                let back = plan.execute_batch(&got, batch, dir.flip()).unwrap();
+                assert!(back.rel_l2_error(&x) < 5e-4, "n={n} {dir:?}: roundtrip");
+            }
+        }
+        // new_any at a power of two is the historical preferred plan.
+        assert_eq!(
+            NativePlan::new_any(1024).unwrap().schedule(),
+            Schedule::from_variant(1024, Variant::preferred(1024))
+        );
+    }
+
+    #[test]
+    fn any_size_backends_bitwise_agree() {
+        // The scalar==simd contract extends to every ladder class: the
+        // new radix-3/5 codelets run the identical IEEE op sequence per
+        // element, and the Rader/Bluestein kernel spectra are pinned
+        // scalar constants, so the convolution plans inherit the pow2
+        // bitwise contract.
+        let mut rng = Rng::new(0x71);
+        for &n in &[60usize, 480, 97, 1013, 14, 1001] {
+            let batch = 2;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let a = NativePlan::new_any(n).unwrap().with_codelet(CodeletBackend::Scalar);
+            let b = NativePlan::new_any(n).unwrap().with_codelet(CodeletBackend::Simd);
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let ya = a.execute_batch(&x, batch, dir).unwrap();
+                let yb = b.execute_batch(&x, batch, dir).unwrap();
+                assert_eq!(ya.re, yb.re, "re: n={n} {dir:?}");
+                assert_eq!(ya.im, yb.im, "im: n={n} {dir:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn any_size_bfp16_tracks_f32_within_snr() {
+        // The ≥ 60 dB exchange-tier gate at non-power-of-two sizes: the
+        // Bfp16 retarget recurses into the Rader/Bluestein convolution
+        // plan, so the whole transform runs the half-precision exchange
+        // tier.
+        let mut rng = Rng::new(0x72);
+        for &n in &[480usize, 1000, 1013, 1001] {
+            let batch = 2;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let f32p = NativePlan::new_any(n)
+                .unwrap()
+                .with_codelet(CodeletBackend::Scalar)
+                .with_precision(Precision::F32);
+            let bfpp = NativePlan::new_any(n)
+                .unwrap()
+                .with_codelet(CodeletBackend::Scalar)
+                .with_precision(Precision::Bfp16);
+            assert_eq!(bfpp.precision, Precision::Bfp16);
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let want = f32p.execute_batch(&x, batch, dir).unwrap();
+                let got = bfpp.execute_batch(&x, batch, dir).unwrap();
+                let snr = bfp::snr_db(&got, &want);
+                assert!(snr >= 60.0, "n={n} {dir:?}: snr {snr:.1} dB");
+            }
+        }
+    }
+
+    #[test]
+    fn any_size_pipeline_matches_three_dispatch_bitwise() {
+        // The fused-equals-composed contract at non-pow2 sizes: smooth
+        // stage lists fuse MUL_SPECTRUM into the last stage; the
+        // convolution kinds *are* the composed sequence, with the
+        // multiply in the same IEEE op order.
+        let mut rng = Rng::new(0x73);
+        for &n in &[60usize, 480, 97, 1001] {
+            let batch = 2;
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let plan = NativePlan::new_any(n).unwrap();
+            let f = plan.execute_batch(&x, batch, Direction::Forward).unwrap();
+            let mut prod = SplitComplex::zeros(n * batch);
+            for b in 0..batch {
+                for i in 0..n {
+                    prod.set(b * n + i, f.get(b * n + i) * h.get(i));
+                }
+            }
+            let want = plan.execute_batch(&prod, batch, Direction::Inverse).unwrap();
+            let mut got = x.clone();
+            let mut ws = crate::fft::exec::Workspace::new();
+            plan.run_lines_pipeline(&mut got.re, &mut got.im, batch, &h, &mut ws);
+            assert_eq!(got.re, want.re, "re: n={n}");
+            assert_eq!(got.im, want.im, "im: n={n}");
+        }
+    }
+
+    #[test]
+    fn planner_auto_paths_serve_any_size() {
+        use crate::fft::tune::TuneCache;
+        let mut rng = Rng::new(0x74);
+        let planner = NativePlanner::new();
+        // Hermetic: never read a developer's per-host cache file.
+        planner.install_tuning(TuneCache::default());
+        let plan = planner.plan_auto(480).unwrap();
+        assert_eq!(plan.schedule(), any_schedule(480).unwrap());
+        let ex = planner.executor_auto(1013).unwrap();
+        assert_eq!(ex.plan().schedule(), Schedule::rader(1013).unwrap());
+        // Same schedule → the identical cached executor.
+        let ex2 = planner.executor_auto(1013).unwrap();
+        assert!(Arc::ptr_eq(&ex, &ex2));
+        // executor_tuned ignores the variant fallback label off-ladder.
+        let et = planner
+            .executor_tuned(1001, Variant::Radix8, codelet::select(), bfp::select(), 16)
+            .unwrap();
+        assert_eq!(et.plan().schedule(), Schedule::bluestein(1001).unwrap());
+        // Unplannable sizes stay errors through every entry point.
+        assert!(planner.plan_auto(0).is_err());
+        assert!(planner.plan_auto(8193).is_err());
+        assert!(planner.executor_auto(10000).is_err());
+        // fft_batch_any round-trips through the pooled auto executor.
+        let n = 1000;
+        let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+        let y = planner.fft_batch_any(&x, n, 1, Direction::Forward).unwrap();
+        let z = planner.fft_batch_any(&y, n, 1, Direction::Inverse).unwrap();
+        assert!(z.rel_l2_error(&x) < 1e-4);
+        // An installed non-pow2 tuning entry reroutes the auto path,
+        // exactly like the pow2 sizes.
+        use crate::fft::tune::{batch_bucket, DEFAULT_TUNE_BATCH};
+        let searched = Schedule::single(vec![5, 4, 4, 3]).unwrap(); // 240
+        let mut cache = TuneCache::default();
+        cache.insert(
+            240,
+            codelet::select(),
+            bfp::select(),
+            batch_bucket(DEFAULT_TUNE_BATCH),
+            searched.clone(),
+            0.0,
+        );
+        planner.install_tuning(cache);
+        assert_eq!(planner.plan_auto(240).unwrap().schedule(), searched);
     }
 }

@@ -22,7 +22,7 @@
 //! property assert bitwise equality against the scalar backend, so any
 //! drift in the vector bodies is a test failure, not a tolerance.
 
-use super::stockham::{FRAC_1_SQRT_2, LANES};
+use super::stockham::{rot, FRAC_1_SQRT_2, LANES};
 use super::twiddle::{chain, StageTable};
 use crate::util::complex::C32;
 use std::simd::f32x8;
@@ -391,6 +391,410 @@ pub fn radix4_stage_mul(
             (y1r[i], y1i[i]) = mul(or[1], oi[1], h[1].0[i], h[1].1[i]);
             (y2r[i], y2i[i]) = mul(or[2], oi[2], h[2].0[i], h[2].1[i]);
             (y3r[i], y3i[i]) = mul(or[3], oi[3], h[3].0[i], h[3].1[i]);
+        }
+    }
+}
+
+/// One radix-3 DIF Stockham stage on explicit `f32x8` registers; the
+/// vector twin of [`super::stockham::radix3_stage`] — the same op
+/// sequence as [`super::stockham::radix3_lane`], lanewise.
+#[allow(clippy::too_many_arguments)]
+pub fn radix3_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    scale: f32,
+) {
+    let m = n / 3;
+    let scale_v = f32x8::splat(scale);
+    let k3 = f32x8::splat(rot::S3);
+    let half = f32x8::splat(0.5);
+    for p in 0..m {
+        let [_, w1, w2] = match table {
+            Some(t) => [C32::ONE, t.get(p, 1), t.get(p, 2)],
+            None => chain::<3>(p, n),
+        };
+        let base = s * p;
+        let step = s * m;
+        let (ar, ai) = (&xre[base..base + s], &xim[base..base + s]);
+        let b0 = base + step;
+        let (br, bi) = (&xre[b0..b0 + s], &xim[b0..b0 + s]);
+        let c0 = base + 2 * step;
+        let (cr, ci) = (&xre[c0..c0 + s], &xim[c0..c0 + s]);
+        let out = &mut yre[3 * base..3 * base + 3 * s];
+        let (y0r, rest) = out.split_at_mut(s);
+        let (y1r, y2r) = rest.split_at_mut(s);
+        let out = &mut yim[3 * base..3 * base + 3 * s];
+        let (y0i, rest) = out.split_at_mut(s);
+        let (y1i, y2i) = rest.split_at_mut(s);
+
+        let (w1re, w1im) = (f32x8::splat(w1.re), f32x8::splat(w1.im));
+        let (w2re, w2im) = (f32x8::splat(w2.re), f32x8::splat(w2.im));
+
+        let mut q = 0;
+        while q + LANES <= s {
+            let x0r = f32x8::from_slice(&ar[q..]);
+            let x0i = load::<CONJ_IN>(ai, q);
+            let x1r = f32x8::from_slice(&br[q..]);
+            let x1i = load::<CONJ_IN>(bi, q);
+            let x2r = f32x8::from_slice(&cr[q..]);
+            let x2i = load::<CONJ_IN>(ci, q);
+            let sr = x1r + x2r;
+            let si = x1i + x2i;
+            let dr = x1r - x2r;
+            let di = x1i - x2i;
+            let o0r = x0r + sr;
+            let o0i = x0i + si;
+            let mr = x0r - half * sr;
+            let mi = x0i - half * si;
+            let kdr = k3 * dr;
+            let kdi = k3 * di;
+            let t1r = mr + kdi;
+            let t1i = mi - kdr;
+            let o1r = t1r * w1re - t1i * w1im;
+            let o1i = t1r * w1im + t1i * w1re;
+            let t2r = mr - kdi;
+            let t2i = mi + kdr;
+            let o2r = t2r * w2re - t2i * w2im;
+            let o2i = t2r * w2im + t2i * w2re;
+            if FUSE_OUT {
+                (o0r * scale_v).copy_to_slice(&mut y0r[q..q + LANES]);
+                (-(o0i * scale_v)).copy_to_slice(&mut y0i[q..q + LANES]);
+                (o1r * scale_v).copy_to_slice(&mut y1r[q..q + LANES]);
+                (-(o1i * scale_v)).copy_to_slice(&mut y1i[q..q + LANES]);
+                (o2r * scale_v).copy_to_slice(&mut y2r[q..q + LANES]);
+                (-(o2i * scale_v)).copy_to_slice(&mut y2i[q..q + LANES]);
+            } else {
+                o0r.copy_to_slice(&mut y0r[q..q + LANES]);
+                o0i.copy_to_slice(&mut y0i[q..q + LANES]);
+                o1r.copy_to_slice(&mut y1r[q..q + LANES]);
+                o1i.copy_to_slice(&mut y1i[q..q + LANES]);
+                o2r.copy_to_slice(&mut y2r[q..q + LANES]);
+                o2i.copy_to_slice(&mut y2i[q..q + LANES]);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            // Scalar tail: the shared scalar lane from stockham.rs.
+            let xr = [ar[i], br[i], cr[i]];
+            let xi = if CONJ_IN { [-ai[i], -bi[i], -ci[i]] } else { [ai[i], bi[i], ci[i]] };
+            let (or, oi) = super::stockham::radix3_lane::<FUSE_OUT>(xr, xi, w1, w2, scale);
+            y0r[i] = or[0];
+            y0i[i] = oi[0];
+            y1r[i] = or[1];
+            y1i[i] = oi[1];
+            y2r[i] = or[2];
+            y2i[i] = oi[2];
+        }
+    }
+}
+
+/// MUL_SPECTRUM twin of [`radix3_stage`] (see [`radix2_stage_mul`]).
+#[allow(clippy::too_many_arguments)]
+pub fn radix3_stage_mul(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    hre: &[f32],
+    him: &[f32],
+) {
+    let m = n / 3;
+    let k3 = f32x8::splat(rot::S3);
+    let half = f32x8::splat(0.5);
+    for p in 0..m {
+        let [_, w1, w2] = match table {
+            Some(t) => [C32::ONE, t.get(p, 1), t.get(p, 2)],
+            None => chain::<3>(p, n),
+        };
+        let base = s * p;
+        let step = s * m;
+        let (ar, ai) = (&xre[base..base + s], &xim[base..base + s]);
+        let b0 = base + step;
+        let (br, bi) = (&xre[b0..b0 + s], &xim[b0..b0 + s]);
+        let c0 = base + 2 * step;
+        let (cr, ci) = (&xre[c0..c0 + s], &xim[c0..c0 + s]);
+        let out = &mut yre[3 * base..3 * base + 3 * s];
+        let (y0r, rest) = out.split_at_mut(s);
+        let (y1r, y2r) = rest.split_at_mut(s);
+        let out = &mut yim[3 * base..3 * base + 3 * s];
+        let (y0i, rest) = out.split_at_mut(s);
+        let (y1i, y2i) = rest.split_at_mut(s);
+        let h: [(&[f32], &[f32]); 3] = core::array::from_fn(|k| {
+            let at = 3 * base + k * s;
+            (&hre[at..at + s], &him[at..at + s])
+        });
+
+        let (w1re, w1im) = (f32x8::splat(w1.re), f32x8::splat(w1.im));
+        let (w2re, w2im) = (f32x8::splat(w2.re), f32x8::splat(w2.im));
+
+        let mut q = 0;
+        while q + LANES <= s {
+            let x0r = f32x8::from_slice(&ar[q..]);
+            let x0i = f32x8::from_slice(&ai[q..]);
+            let x1r = f32x8::from_slice(&br[q..]);
+            let x1i = f32x8::from_slice(&bi[q..]);
+            let x2r = f32x8::from_slice(&cr[q..]);
+            let x2i = f32x8::from_slice(&ci[q..]);
+            let sr = x1r + x2r;
+            let si = x1i + x2i;
+            let dr = x1r - x2r;
+            let di = x1i - x2i;
+            let o0r = x0r + sr;
+            let o0i = x0i + si;
+            let mr = x0r - half * sr;
+            let mi = x0i - half * si;
+            let kdr = k3 * dr;
+            let kdi = k3 * di;
+            let t1r = mr + kdi;
+            let t1i = mi - kdr;
+            let o1r = t1r * w1re - t1i * w1im;
+            let o1i = t1r * w1im + t1i * w1re;
+            let t2r = mr - kdi;
+            let t2i = mi + kdr;
+            let o2r = t2r * w2re - t2i * w2im;
+            let o2i = t2r * w2im + t2i * w2re;
+            let outs = [(o0r, o0i), (o1r, o1i), (o2r, o2i)];
+            let mut ys: [(&mut [f32], &mut [f32]); 3] =
+                [(&mut *y0r, &mut *y0i), (&mut *y1r, &mut *y1i), (&mut *y2r, &mut *y2i)];
+            for k in 0..3 {
+                let gr = f32x8::from_slice(&h[k].0[q..]);
+                let gi = f32x8::from_slice(&h[k].1[q..]);
+                let (or, oi) = outs[k];
+                (or * gr - oi * gi).copy_to_slice(&mut ys[k].0[q..q + LANES]);
+                (or * gi + oi * gr).copy_to_slice(&mut ys[k].1[q..q + LANES]);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            let xr = [ar[i], br[i], cr[i]];
+            let xi = [ai[i], bi[i], ci[i]];
+            let (or, oi) = super::stockham::radix3_lane::<false>(xr, xi, w1, w2, 1.0);
+            let mul = super::stockham::mul_spectrum_lane;
+            (y0r[i], y0i[i]) = mul(or[0], oi[0], h[0].0[i], h[0].1[i]);
+            (y1r[i], y1i[i]) = mul(or[1], oi[1], h[1].0[i], h[1].1[i]);
+            (y2r[i], y2i[i]) = mul(or[2], oi[2], h[2].0[i], h[2].1[i]);
+        }
+    }
+}
+
+/// The radix-5 butterfly on eight-lane registers: the vector twin of
+/// [`super::stockham::radix5_lane`], returning the `w^{pk}`-twisted
+/// outputs per bin.
+#[inline(always)]
+fn butterfly5_vec<const FUSE_OUT: bool>(
+    xr: [f32x8; 5],
+    xi: [f32x8; 5],
+    w: &[C32; 5],
+    scale_v: f32x8,
+) -> ([f32x8; 5], [f32x8; 5]) {
+    let c51 = f32x8::splat(rot::C51);
+    let c52 = f32x8::splat(rot::C52);
+    let s51 = f32x8::splat(rot::S51);
+    let s52 = f32x8::splat(rot::S52);
+    let (t1r, t1i) = (xr[1] + xr[4], xi[1] + xi[4]);
+    let (t2r, t2i) = (xr[2] + xr[3], xi[2] + xi[3]);
+    let (t3r, t3i) = (xr[1] - xr[4], xi[1] - xi[4]);
+    let (t4r, t4i) = (xr[2] - xr[3], xi[2] - xi[3]);
+    let (b0r, b0i) = (xr[0] + t1r + t2r, xi[0] + t1i + t2i);
+    let (m1r, m1i) = (xr[0] + c51 * t1r + c52 * t2r, xi[0] + c51 * t1i + c52 * t2i);
+    let (m2r, m2i) = (xr[0] + c52 * t1r + c51 * t2r, xi[0] + c52 * t1i + c51 * t2i);
+    let (v1r, v1i) = (s51 * t3r + s52 * t4r, s51 * t3i + s52 * t4i);
+    let (v2r, v2i) = (s52 * t3r - s51 * t4r, s52 * t3i - s51 * t4i);
+    let (b1r, b1i) = (m1r + v1i, m1i - v1r);
+    let (b2r, b2i) = (m2r + v2i, m2i - v2r);
+    let (b3r, b3i) = (m2r - v2i, m2i + v2r);
+    let (b4r, b4i) = (m1r - v1i, m1i + v1r);
+
+    let br = [b0r, b1r, b2r, b3r, b4r];
+    let bi = [b0i, b1i, b2i, b3i, b4i];
+
+    let mut or = [f32x8::splat(0.0); 5];
+    let mut oi = [f32x8::splat(0.0); 5];
+    for k in 0..5 {
+        let wre = f32x8::splat(w[k].re);
+        let wim = f32x8::splat(w[k].im);
+        let tr = br[k] * wre - bi[k] * wim;
+        let ti = br[k] * wim + bi[k] * wre;
+        if FUSE_OUT {
+            or[k] = tr * scale_v;
+            oi[k] = -(ti * scale_v);
+        } else {
+            or[k] = tr;
+            oi[k] = ti;
+        }
+    }
+    (or, oi)
+}
+
+/// One radix-5 DIF Stockham stage on explicit `f32x8` registers; the
+/// vector twin of [`super::stockham::radix5_stage`].
+#[allow(clippy::too_many_arguments)]
+pub fn radix5_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    scale: f32,
+) {
+    let m = n / 5;
+    let scale_v = f32x8::splat(scale);
+    for p in 0..m {
+        let w: [C32; 5] = match table {
+            Some(t) => t.row(p).try_into().expect("radix-5 table row"),
+            None => chain::<5>(p, n),
+        };
+        let base_in = s * p;
+        let xin_re: [&[f32]; 5] = core::array::from_fn(|j| {
+            let at = base_in + j * s * m;
+            &xre[at..at + s]
+        });
+        let xin_im: [&[f32]; 5] = core::array::from_fn(|j| {
+            let at = base_in + j * s * m;
+            &xim[at..at + s]
+        });
+        let base_out = 5 * s * p;
+        let out = &mut yre[base_out..base_out + 5 * s];
+        let (y0r, rest) = out.split_at_mut(s);
+        let (y1r, rest) = rest.split_at_mut(s);
+        let (y2r, rest) = rest.split_at_mut(s);
+        let (y3r, y4r) = rest.split_at_mut(s);
+        let out = &mut yim[base_out..base_out + 5 * s];
+        let (y0i, rest) = out.split_at_mut(s);
+        let (y1i, rest) = rest.split_at_mut(s);
+        let (y2i, rest) = rest.split_at_mut(s);
+        let (y3i, y4i) = rest.split_at_mut(s);
+
+        let mut q = 0;
+        while q + LANES <= s {
+            let xr: [f32x8; 5] = core::array::from_fn(|j| f32x8::from_slice(&xin_re[j][q..]));
+            let xi: [f32x8; 5] = core::array::from_fn(|j| load::<CONJ_IN>(xin_im[j], q));
+            let (or, oi) = butterfly5_vec::<FUSE_OUT>(xr, xi, &w, scale_v);
+            or[0].copy_to_slice(&mut y0r[q..q + LANES]);
+            oi[0].copy_to_slice(&mut y0i[q..q + LANES]);
+            or[1].copy_to_slice(&mut y1r[q..q + LANES]);
+            oi[1].copy_to_slice(&mut y1i[q..q + LANES]);
+            or[2].copy_to_slice(&mut y2r[q..q + LANES]);
+            oi[2].copy_to_slice(&mut y2i[q..q + LANES]);
+            or[3].copy_to_slice(&mut y3r[q..q + LANES]);
+            oi[3].copy_to_slice(&mut y3i[q..q + LANES]);
+            or[4].copy_to_slice(&mut y4r[q..q + LANES]);
+            oi[4].copy_to_slice(&mut y4i[q..q + LANES]);
+            q += LANES;
+        }
+        for i in q..s {
+            // Scalar tail: the shared scalar lane from stockham.rs.
+            let xr: [f32; 5] = core::array::from_fn(|j| xin_re[j][i]);
+            let xi: [f32; 5] = if CONJ_IN {
+                core::array::from_fn(|j| -xin_im[j][i])
+            } else {
+                core::array::from_fn(|j| xin_im[j][i])
+            };
+            let (or, oi) =
+                super::stockham::radix5_lane::<FUSE_OUT>(xr, xi, w[1], w[2], w[3], w[4], scale);
+            y0r[i] = or[0];
+            y0i[i] = oi[0];
+            y1r[i] = or[1];
+            y1i[i] = oi[1];
+            y2r[i] = or[2];
+            y2i[i] = oi[2];
+            y3r[i] = or[3];
+            y3i[i] = oi[3];
+            y4r[i] = or[4];
+            y4i[i] = oi[4];
+        }
+    }
+}
+
+/// MUL_SPECTRUM twin of [`radix5_stage`] (see [`radix2_stage_mul`]).
+#[allow(clippy::too_many_arguments)]
+pub fn radix5_stage_mul(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    hre: &[f32],
+    him: &[f32],
+) {
+    let m = n / 5;
+    for p in 0..m {
+        let w: [C32; 5] = match table {
+            Some(t) => t.row(p).try_into().expect("radix-5 table row"),
+            None => chain::<5>(p, n),
+        };
+        let base_in = s * p;
+        let xin_re: [&[f32]; 5] = core::array::from_fn(|j| {
+            let at = base_in + j * s * m;
+            &xre[at..at + s]
+        });
+        let xin_im: [&[f32]; 5] = core::array::from_fn(|j| {
+            let at = base_in + j * s * m;
+            &xim[at..at + s]
+        });
+        let base_out = 5 * s * p;
+        let out = &mut yre[base_out..base_out + 5 * s];
+        let (y0r, rest) = out.split_at_mut(s);
+        let (y1r, rest) = rest.split_at_mut(s);
+        let (y2r, rest) = rest.split_at_mut(s);
+        let (y3r, y4r) = rest.split_at_mut(s);
+        let out = &mut yim[base_out..base_out + 5 * s];
+        let (y0i, rest) = out.split_at_mut(s);
+        let (y1i, rest) = rest.split_at_mut(s);
+        let (y2i, rest) = rest.split_at_mut(s);
+        let (y3i, y4i) = rest.split_at_mut(s);
+        let h: [(&[f32], &[f32]); 5] = core::array::from_fn(|k| {
+            let at = base_out + k * s;
+            (&hre[at..at + s], &him[at..at + s])
+        });
+
+        let mut q = 0;
+        while q + LANES <= s {
+            let xr: [f32x8; 5] = core::array::from_fn(|j| f32x8::from_slice(&xin_re[j][q..]));
+            let xi: [f32x8; 5] = core::array::from_fn(|j| f32x8::from_slice(&xin_im[j][q..]));
+            let (or, oi) = butterfly5_vec::<false>(xr, xi, &w, f32x8::splat(1.0));
+            let mut ys: [(&mut [f32], &mut [f32]); 5] = [
+                (&mut *y0r, &mut *y0i),
+                (&mut *y1r, &mut *y1i),
+                (&mut *y2r, &mut *y2i),
+                (&mut *y3r, &mut *y3i),
+                (&mut *y4r, &mut *y4i),
+            ];
+            for k in 0..5 {
+                let gr = f32x8::from_slice(&h[k].0[q..]);
+                let gi = f32x8::from_slice(&h[k].1[q..]);
+                (or[k] * gr - oi[k] * gi).copy_to_slice(&mut ys[k].0[q..q + LANES]);
+                (or[k] * gi + oi[k] * gr).copy_to_slice(&mut ys[k].1[q..q + LANES]);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            let xr: [f32; 5] = core::array::from_fn(|j| xin_re[j][i]);
+            let xi: [f32; 5] = core::array::from_fn(|j| xin_im[j][i]);
+            let (or, oi) =
+                super::stockham::radix5_lane::<false>(xr, xi, w[1], w[2], w[3], w[4], 1.0);
+            for k in 0..5 {
+                let (yr, yi) = match k {
+                    0 => (&mut y0r[i], &mut y0i[i]),
+                    1 => (&mut y1r[i], &mut y1i[i]),
+                    2 => (&mut y2r[i], &mut y2i[i]),
+                    3 => (&mut y3r[i], &mut y3i[i]),
+                    _ => (&mut y4r[i], &mut y4i[i]),
+                };
+                (*yr, *yi) = super::stockham::mul_spectrum_lane(or[k], oi[k], h[k].0[i], h[k].1[i]);
+            }
         }
     }
 }

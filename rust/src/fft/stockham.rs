@@ -1,4 +1,4 @@
-//! Stockham autosort stage codelets (radix-2 and radix-4) and the
+//! Stockham autosort stage codelets (radix-2/3/4/5) and the
 //! multi-stage driver — the register tier of the two-tier executor.
 //!
 //! The Stockham formulation (paper §II-B) reads from one buffer and
@@ -394,6 +394,443 @@ pub fn radix4_stage_mul(
     }
 }
 
+/// Rotation constants of the radix-3/5 butterflies, spelled to full
+/// f64 precision and rounded once to f32 — the same single-rounding
+/// discipline the twiddle tables use (f64 trig, one cast).
+#[allow(clippy::excessive_precision)]
+pub(crate) mod rot {
+    /// `sin(2π/3) = √3/2`.
+    pub const S3: f32 = 0.866_025_403_784_438_6;
+    /// `cos(2π/5)`.
+    pub const C51: f32 = 0.309_016_994_374_947_45;
+    /// `cos(4π/5)`.
+    pub const C52: f32 = -0.809_016_994_374_947_5;
+    /// `sin(2π/5)`.
+    pub const S51: f32 = 0.951_056_516_295_153_5;
+    /// `sin(4π/5)`.
+    pub const S52: f32 = 0.587_785_252_292_473_1;
+}
+
+/// One scalar lane of the radix-3 butterfly (inputs already
+/// `CONJ_IN`-conjugated by the caller). With `ω = e^{-2πi/3}`, outputs
+/// are `y0 = x0 + s`, `y{1,2} = (m ∓ i·K·d)·w{1,2}` where `s = x1 + x2`,
+/// `d = x1 − x2`, `m = x0 − s/2`, `K = √3/2`. Shared verbatim by the
+/// scalar stage codelet and the `std::simd` backend's scalar tail.
+#[inline(always)]
+pub(crate) fn radix3_lane<const FUSE_OUT: bool>(
+    xr: [f32; 3],
+    xi: [f32; 3],
+    w1: C32,
+    w2: C32,
+    scale: f32,
+) -> ([f32; 3], [f32; 3]) {
+    let (sr, si) = (xr[1] + xr[2], xi[1] + xi[2]);
+    let (dr, di) = (xr[1] - xr[2], xi[1] - xi[2]);
+    let (o0r, o0i) = (xr[0] + sr, xi[0] + si);
+    let (mr, mi) = (xr[0] - 0.5 * sr, xi[0] - 0.5 * si);
+    let (kdr, kdi) = (rot::S3 * dr, rot::S3 * di);
+    // k=1: (m - i·K·d)·w1.  k=2: (m + i·K·d)·w2.
+    let (t1r, t1i) = (mr + kdi, mi - kdr);
+    let (o1r, o1i) = (t1r * w1.re - t1i * w1.im, t1r * w1.im + t1i * w1.re);
+    let (t2r, t2i) = (mr - kdi, mi + kdr);
+    let (o2r, o2i) = (t2r * w2.re - t2i * w2.im, t2r * w2.im + t2i * w2.re);
+    if FUSE_OUT {
+        (
+            [o0r * scale, o1r * scale, o2r * scale],
+            [-(o0i * scale), -(o1i * scale), -(o2i * scale)],
+        )
+    } else {
+        ([o0r, o1r, o2r], [o0i, o1i, o2i])
+    }
+}
+
+/// One radix-3 DIF Stockham stage: same `(n, s) -> (n/3, s*3)` walk as
+/// [`radix2_stage`], butterfly per [`radix3_lane`].
+#[allow(clippy::too_many_arguments)]
+pub fn radix3_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    scale: f32,
+) {
+    let m = n / 3;
+    for p in 0..m {
+        let [_, w1, w2] = match table {
+            Some(t) => [C32::ONE, t.get(p, 1), t.get(p, 2)],
+            None => chain::<3>(p, n),
+        };
+        let base = s * p;
+        let step = s * m;
+        let (ar, ai) = run_at(xre, xim, base, s);
+        let (br, bi) = run_at(xre, xim, base + step, s);
+        let (cr, ci) = run_at(xre, xim, base + 2 * step, s);
+        let out = &mut yre[3 * base..3 * base + 3 * s];
+        let (y0r, rest) = out.split_at_mut(s);
+        let (y1r, y2r) = rest.split_at_mut(s);
+        let out = &mut yim[3 * base..3 * base + 3 * s];
+        let (y0i, rest) = out.split_at_mut(s);
+        let (y1i, y2i) = rest.split_at_mut(s);
+
+        let bf = |i: usize,
+                  y0r: &mut [f32],
+                  y0i: &mut [f32],
+                  y1r: &mut [f32],
+                  y1i: &mut [f32],
+                  y2r: &mut [f32],
+                  y2i: &mut [f32]| {
+            let xr = [ar[i], br[i], cr[i]];
+            let xi = if CONJ_IN { [-ai[i], -bi[i], -ci[i]] } else { [ai[i], bi[i], ci[i]] };
+            let (or, oi) = radix3_lane::<FUSE_OUT>(xr, xi, w1, w2, scale);
+            y0r[i] = or[0];
+            y0i[i] = oi[0];
+            y1r[i] = or[1];
+            y1i[i] = oi[1];
+            y2r[i] = or[2];
+            y2i[i] = oi[2];
+        };
+
+        let mut q = 0;
+        while q + LANES <= s {
+            for l in 0..LANES {
+                bf(q + l, &mut *y0r, &mut *y0i, &mut *y1r, &mut *y1i, &mut *y2r, &mut *y2i);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            bf(i, &mut *y0r, &mut *y0i, &mut *y1r, &mut *y1i, &mut *y2r, &mut *y2i);
+        }
+    }
+}
+
+/// The MUL_SPECTRUM variant of [`radix3_stage`] (see [`radix2_stage_mul`]
+/// for the contract).
+#[allow(clippy::too_many_arguments)]
+pub fn radix3_stage_mul(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    hre: &[f32],
+    him: &[f32],
+) {
+    let m = n / 3;
+    for p in 0..m {
+        let [_, w1, w2] = match table {
+            Some(t) => [C32::ONE, t.get(p, 1), t.get(p, 2)],
+            None => chain::<3>(p, n),
+        };
+        let base = s * p;
+        let step = s * m;
+        let (ar, ai) = run_at(xre, xim, base, s);
+        let (br, bi) = run_at(xre, xim, base + step, s);
+        let (cr, ci) = run_at(xre, xim, base + 2 * step, s);
+        let out = &mut yre[3 * base..3 * base + 3 * s];
+        let (y0r, rest) = out.split_at_mut(s);
+        let (y1r, y2r) = rest.split_at_mut(s);
+        let out = &mut yim[3 * base..3 * base + 3 * s];
+        let (y0i, rest) = out.split_at_mut(s);
+        let (y1i, y2i) = rest.split_at_mut(s);
+        let h: [(&[f32], &[f32]); 3] =
+            core::array::from_fn(|k| run_at(hre, him, 3 * base + k * s, s));
+
+        let bf = |i: usize,
+                  y0r: &mut [f32],
+                  y0i: &mut [f32],
+                  y1r: &mut [f32],
+                  y1i: &mut [f32],
+                  y2r: &mut [f32],
+                  y2i: &mut [f32]| {
+            let xr = [ar[i], br[i], cr[i]];
+            let xi = [ai[i], bi[i], ci[i]];
+            let (or, oi) = radix3_lane::<false>(xr, xi, w1, w2, 1.0);
+            (y0r[i], y0i[i]) = mul_spectrum_lane(or[0], oi[0], h[0].0[i], h[0].1[i]);
+            (y1r[i], y1i[i]) = mul_spectrum_lane(or[1], oi[1], h[1].0[i], h[1].1[i]);
+            (y2r[i], y2i[i]) = mul_spectrum_lane(or[2], oi[2], h[2].0[i], h[2].1[i]);
+        };
+
+        let mut q = 0;
+        while q + LANES <= s {
+            for l in 0..LANES {
+                bf(q + l, &mut *y0r, &mut *y0i, &mut *y1r, &mut *y1i, &mut *y2r, &mut *y2i);
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            bf(i, &mut *y0r, &mut *y0i, &mut *y1r, &mut *y1i, &mut *y2r, &mut *y2i);
+        }
+    }
+}
+
+/// One scalar lane of the radix-5 butterfly (inputs already
+/// `CONJ_IN`-conjugated by the caller). Standard 5-point Winograd-style
+/// decomposition: with `t1 = x1 + x4`, `t2 = x2 + x3`, `t3 = x1 − x4`,
+/// `t4 = x2 − x3`, the even parts are `m1 = x0 + c1·t1 + c2·t2` /
+/// `m2 = x0 + c2·t1 + c1·t2` and the odd parts `v1 = s1·t3 + s2·t4` /
+/// `v2 = s2·t3 − s1·t4` (`c/s k = cos/sin(2πk/5)`), giving
+/// `y{1,4} = (m1 ∓ i·v1)·w{1,4}` and `y{2,3} = (m2 ∓ i·v2)·w{2,3}`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn radix5_lane<const FUSE_OUT: bool>(
+    xr: [f32; 5],
+    xi: [f32; 5],
+    w1: C32,
+    w2: C32,
+    w3: C32,
+    w4: C32,
+    scale: f32,
+) -> ([f32; 5], [f32; 5]) {
+    let (t1r, t1i) = (xr[1] + xr[4], xi[1] + xi[4]);
+    let (t2r, t2i) = (xr[2] + xr[3], xi[2] + xi[3]);
+    let (t3r, t3i) = (xr[1] - xr[4], xi[1] - xi[4]);
+    let (t4r, t4i) = (xr[2] - xr[3], xi[2] - xi[3]);
+    let (o0r, o0i) = (xr[0] + t1r + t2r, xi[0] + t1i + t2i);
+    let (m1r, m1i) = (
+        xr[0] + rot::C51 * t1r + rot::C52 * t2r,
+        xi[0] + rot::C51 * t1i + rot::C52 * t2i,
+    );
+    let (m2r, m2i) = (
+        xr[0] + rot::C52 * t1r + rot::C51 * t2r,
+        xi[0] + rot::C52 * t1i + rot::C51 * t2i,
+    );
+    let (v1r, v1i) = (rot::S51 * t3r + rot::S52 * t4r, rot::S51 * t3i + rot::S52 * t4i);
+    let (v2r, v2i) = (rot::S52 * t3r - rot::S51 * t4r, rot::S52 * t3i - rot::S51 * t4i);
+    // k=1: (m1 - i·v1)·w1.  k=2: (m2 - i·v2)·w2.
+    // k=3: (m2 + i·v2)·w3.  k=4: (m1 + i·v1)·w4.
+    let (a1r, a1i) = (m1r + v1i, m1i - v1r);
+    let (o1r, o1i) = (a1r * w1.re - a1i * w1.im, a1r * w1.im + a1i * w1.re);
+    let (a2r, a2i) = (m2r + v2i, m2i - v2r);
+    let (o2r, o2i) = (a2r * w2.re - a2i * w2.im, a2r * w2.im + a2i * w2.re);
+    let (a3r, a3i) = (m2r - v2i, m2i + v2r);
+    let (o3r, o3i) = (a3r * w3.re - a3i * w3.im, a3r * w3.im + a3i * w3.re);
+    let (a4r, a4i) = (m1r - v1i, m1i + v1r);
+    let (o4r, o4i) = (a4r * w4.re - a4i * w4.im, a4r * w4.im + a4i * w4.re);
+    if FUSE_OUT {
+        (
+            [o0r * scale, o1r * scale, o2r * scale, o3r * scale, o4r * scale],
+            [
+                -(o0i * scale),
+                -(o1i * scale),
+                -(o2i * scale),
+                -(o3i * scale),
+                -(o4i * scale),
+            ],
+        )
+    } else {
+        ([o0r, o1r, o2r, o3r, o4r], [o0i, o1i, o2i, o3i, o4i])
+    }
+}
+
+/// One radix-5 DIF Stockham stage: same `(n, s) -> (n/5, s*5)` walk as
+/// [`radix4_stage`], butterfly per [`radix5_lane`].
+#[allow(clippy::too_many_arguments)]
+pub fn radix5_stage<const CONJ_IN: bool, const FUSE_OUT: bool>(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    scale: f32,
+) {
+    let m = n / 5;
+    for p in 0..m {
+        let [_, w1, w2, w3, w4] = match table {
+            Some(t) => [C32::ONE, t.get(p, 1), t.get(p, 2), t.get(p, 3), t.get(p, 4)],
+            None => chain::<5>(p, n),
+        };
+        let base = s * p;
+        let step = s * m;
+        let (ar, ai) = run_at(xre, xim, base, s);
+        let (br, bi) = run_at(xre, xim, base + step, s);
+        let (cr, ci) = run_at(xre, xim, base + 2 * step, s);
+        let (dr, di) = run_at(xre, xim, base + 3 * step, s);
+        let (er, ei) = run_at(xre, xim, base + 4 * step, s);
+        let out = &mut yre[5 * base..5 * base + 5 * s];
+        let (y0r, rest) = out.split_at_mut(s);
+        let (y1r, rest) = rest.split_at_mut(s);
+        let (y2r, rest) = rest.split_at_mut(s);
+        let (y3r, y4r) = rest.split_at_mut(s);
+        let out = &mut yim[5 * base..5 * base + 5 * s];
+        let (y0i, rest) = out.split_at_mut(s);
+        let (y1i, rest) = rest.split_at_mut(s);
+        let (y2i, rest) = rest.split_at_mut(s);
+        let (y3i, y4i) = rest.split_at_mut(s);
+
+        #[allow(clippy::too_many_arguments)]
+        let bf = |i: usize,
+                  y0r: &mut [f32],
+                  y0i: &mut [f32],
+                  y1r: &mut [f32],
+                  y1i: &mut [f32],
+                  y2r: &mut [f32],
+                  y2i: &mut [f32],
+                  y3r: &mut [f32],
+                  y3i: &mut [f32],
+                  y4r: &mut [f32],
+                  y4i: &mut [f32]| {
+            let xr = [ar[i], br[i], cr[i], dr[i], er[i]];
+            let xi = if CONJ_IN {
+                [-ai[i], -bi[i], -ci[i], -di[i], -ei[i]]
+            } else {
+                [ai[i], bi[i], ci[i], di[i], ei[i]]
+            };
+            let (or, oi) = radix5_lane::<FUSE_OUT>(xr, xi, w1, w2, w3, w4, scale);
+            y0r[i] = or[0];
+            y0i[i] = oi[0];
+            y1r[i] = or[1];
+            y1i[i] = oi[1];
+            y2r[i] = or[2];
+            y2i[i] = oi[2];
+            y3r[i] = or[3];
+            y3i[i] = oi[3];
+            y4r[i] = or[4];
+            y4i[i] = oi[4];
+        };
+
+        let mut q = 0;
+        while q + LANES <= s {
+            for l in 0..LANES {
+                bf(
+                    q + l,
+                    &mut *y0r,
+                    &mut *y0i,
+                    &mut *y1r,
+                    &mut *y1i,
+                    &mut *y2r,
+                    &mut *y2i,
+                    &mut *y3r,
+                    &mut *y3i,
+                    &mut *y4r,
+                    &mut *y4i,
+                );
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            bf(
+                i,
+                &mut *y0r,
+                &mut *y0i,
+                &mut *y1r,
+                &mut *y1i,
+                &mut *y2r,
+                &mut *y2i,
+                &mut *y3r,
+                &mut *y3i,
+                &mut *y4r,
+                &mut *y4i,
+            );
+        }
+    }
+}
+
+/// The MUL_SPECTRUM variant of [`radix5_stage`] (see [`radix2_stage_mul`]
+/// for the contract).
+#[allow(clippy::too_many_arguments)]
+pub fn radix5_stage_mul(
+    xre: &[f32],
+    xim: &[f32],
+    yre: &mut [f32],
+    yim: &mut [f32],
+    n: usize,
+    s: usize,
+    table: Option<&StageTable>,
+    hre: &[f32],
+    him: &[f32],
+) {
+    let m = n / 5;
+    for p in 0..m {
+        let [_, w1, w2, w3, w4] = match table {
+            Some(t) => [C32::ONE, t.get(p, 1), t.get(p, 2), t.get(p, 3), t.get(p, 4)],
+            None => chain::<5>(p, n),
+        };
+        let base = s * p;
+        let step = s * m;
+        let (ar, ai) = run_at(xre, xim, base, s);
+        let (br, bi) = run_at(xre, xim, base + step, s);
+        let (cr, ci) = run_at(xre, xim, base + 2 * step, s);
+        let (dr, di) = run_at(xre, xim, base + 3 * step, s);
+        let (er, ei) = run_at(xre, xim, base + 4 * step, s);
+        let out = &mut yre[5 * base..5 * base + 5 * s];
+        let (y0r, rest) = out.split_at_mut(s);
+        let (y1r, rest) = rest.split_at_mut(s);
+        let (y2r, rest) = rest.split_at_mut(s);
+        let (y3r, y4r) = rest.split_at_mut(s);
+        let out = &mut yim[5 * base..5 * base + 5 * s];
+        let (y0i, rest) = out.split_at_mut(s);
+        let (y1i, rest) = rest.split_at_mut(s);
+        let (y2i, rest) = rest.split_at_mut(s);
+        let (y3i, y4i) = rest.split_at_mut(s);
+        let h: [(&[f32], &[f32]); 5] =
+            core::array::from_fn(|k| run_at(hre, him, 5 * base + k * s, s));
+
+        #[allow(clippy::too_many_arguments)]
+        let bf = |i: usize,
+                  y0r: &mut [f32],
+                  y0i: &mut [f32],
+                  y1r: &mut [f32],
+                  y1i: &mut [f32],
+                  y2r: &mut [f32],
+                  y2i: &mut [f32],
+                  y3r: &mut [f32],
+                  y3i: &mut [f32],
+                  y4r: &mut [f32],
+                  y4i: &mut [f32]| {
+            let xr = [ar[i], br[i], cr[i], dr[i], er[i]];
+            let xi = [ai[i], bi[i], ci[i], di[i], ei[i]];
+            let (or, oi) = radix5_lane::<false>(xr, xi, w1, w2, w3, w4, 1.0);
+            (y0r[i], y0i[i]) = mul_spectrum_lane(or[0], oi[0], h[0].0[i], h[0].1[i]);
+            (y1r[i], y1i[i]) = mul_spectrum_lane(or[1], oi[1], h[1].0[i], h[1].1[i]);
+            (y2r[i], y2i[i]) = mul_spectrum_lane(or[2], oi[2], h[2].0[i], h[2].1[i]);
+            (y3r[i], y3i[i]) = mul_spectrum_lane(or[3], oi[3], h[3].0[i], h[3].1[i]);
+            (y4r[i], y4i[i]) = mul_spectrum_lane(or[4], oi[4], h[4].0[i], h[4].1[i]);
+        };
+
+        let mut q = 0;
+        while q + LANES <= s {
+            for l in 0..LANES {
+                bf(
+                    q + l,
+                    &mut *y0r,
+                    &mut *y0i,
+                    &mut *y1r,
+                    &mut *y1i,
+                    &mut *y2r,
+                    &mut *y2i,
+                    &mut *y3r,
+                    &mut *y3i,
+                    &mut *y4r,
+                    &mut *y4i,
+                );
+            }
+            q += LANES;
+        }
+        for i in q..s {
+            bf(
+                i,
+                &mut *y0r,
+                &mut *y0i,
+                &mut *y1r,
+                &mut *y1i,
+                &mut *y2r,
+                &mut *y2i,
+                &mut *y3r,
+                &mut *y3i,
+                &mut *y4r,
+                &mut *y4i,
+            );
+        }
+    }
+}
+
 /// Radix schedule for a transform of size `n` preferring the given
 /// maximum radix (8 -> paper's radix-8 kernel, 4 -> radix-4 baseline).
 /// Greedy: as many max-radix stages as possible, then 4s, then a final 2
@@ -752,6 +1189,109 @@ mod tests {
             let want = dft(&x, Direction::Forward);
             let got = run_stockham(&x, 4, false);
             assert!(got.rel_l2_error(&want) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn radix3_and_radix5_stages_match_dft() {
+        // Hand-listed 3/5-smooth schedules (radix_schedule stays
+        // pow2-only; arbitrary-N composition lives in fft::plan).
+        let cases: &[(usize, &[usize])] = &[
+            (3, &[3]),
+            (5, &[5]),
+            (9, &[3, 3]),
+            (15, &[5, 3]),
+            (15, &[3, 5]),
+            (25, &[5, 5]),
+            (12, &[4, 3]),
+            (20, &[4, 5]),
+            (30, &[2, 3, 5]),
+            (120, &[8, 5, 3]),
+            (360, &[8, 5, 3, 3]),
+            (480, &[8, 4, 5, 3]),
+        ];
+        let mut rng = Rng::new(0x35);
+        for &(n, radices) in cases {
+            let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let want = dft(&x, Direction::Forward);
+            let pt = PlanTables::for_radices(n, radices);
+            let (mut sre, mut sim) = (vec![0.0; n], vec![0.0; n]);
+            for tables in [None, Some(&pt)] {
+                let mut got = x.clone();
+                transform_line_with(
+                    codelet::scalar_table(),
+                    &mut got.re,
+                    &mut got.im,
+                    &mut sre,
+                    &mut sim,
+                    radices,
+                    tables,
+                    false,
+                );
+                let err = got.rel_l2_error(&want);
+                assert!(err < 1e-4, "n={n} radices={radices:?} tables={}: {err}", tables.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn radix3_and_radix5_fused_inverse_roundtrips() {
+        let cases: &[(usize, &[usize])] =
+            &[(15, &[5, 3]), (45, &[3, 3, 5]), (60, &[4, 3, 5]), (480, &[8, 4, 5, 3])];
+        let mut rng = Rng::new(0x36);
+        for &(n, radices) in cases {
+            let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let (mut sre, mut sim) = (vec![0.0; n], vec![0.0; n]);
+            let mut y = x.clone();
+            transform_line(&mut y.re, &mut y.im, &mut sre, &mut sim, radices, None);
+            transform_line_fused(&mut y.re, &mut y.im, &mut sre, &mut sim, radices, None, true);
+            assert!(y.rel_l2_error(&x) < 1e-4, "n={n} radices={radices:?}");
+        }
+    }
+
+    #[test]
+    fn radix3_and_radix5_mul_driver_is_bitwise() {
+        // Same contract as mul_driver_is_bitwise_fft_then_multiply, at
+        // the new radices (each takes a turn as the fused last stage).
+        let cases: &[(usize, &[usize])] =
+            &[(15, &[5, 3]), (15, &[3, 5]), (60, &[4, 3, 5]), (60, &[3, 4, 5]), (60, &[5, 4, 3])];
+        let mut rng = Rng::new(0x37);
+        for &(n, radices) in cases {
+            let x = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let h = SplitComplex { re: rng.signal(n), im: rng.signal(n) };
+            let pt = PlanTables::for_radices(n, radices);
+            let (mut sre, mut sim) = (vec![0.0; n], vec![0.0; n]);
+            for tables in [None, Some(&pt)] {
+                let mut want = x.clone();
+                transform_line_with(
+                    codelet::scalar_table(),
+                    &mut want.re,
+                    &mut want.im,
+                    &mut sre,
+                    &mut sim,
+                    radices,
+                    tables,
+                    false,
+                );
+                for i in 0..n {
+                    let v = want.get(i) * h.get(i);
+                    want.set(i, v);
+                }
+                let mut got = x.clone();
+                transform_line_mul_with(
+                    codelet::scalar_table(),
+                    &mut got.re,
+                    &mut got.im,
+                    &mut sre,
+                    &mut sim,
+                    radices,
+                    tables,
+                    &h.re,
+                    &h.im,
+                );
+                assert_eq!(got.re, want.re, "n={n} radices={radices:?}");
+                assert_eq!(got.im, want.im, "n={n} radices={radices:?}");
+            }
         }
     }
 

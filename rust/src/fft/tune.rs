@@ -89,17 +89,31 @@ pub fn batch_bucket(batch: usize) -> usize {
 // ---------------------------------------------------------------------------
 
 /// Every canonical radix factorization of a single-threadgroup row:
-/// non-increasing radices from {8, 4, 2} with at most one radix-2
-/// stage. Ordering within a schedule does not change its modeled cost
-/// (stage cost depends on row length and radix only), and a second
-/// radix-2 stage is always dominated by replacing the pair with one
-/// radix-4, so this canonical form loses no optimum.
+/// non-increasing radices from {8, 5, 4, 3, 2} with at most one
+/// radix-2 stage. Ordering within a schedule does not change its
+/// modeled cost (stage cost depends on row length and radix only), and
+/// a second radix-2 stage is always dominated by replacing the pair
+/// with one radix-4, so this canonical form loses no optimum.
+///
+/// The row must be 5-smooth. Its 3s and 5s are forced (each prime
+/// factor 3/5 is exactly one radix-3/5 stage — there is nothing to
+/// enumerate), so only the power-of-two part branches and pure
+/// power-of-two sizes enumerate exactly what they always did: the
+/// widened radix set grows the space only where the old one had no
+/// schedules at all.
 pub fn enumerate_radix_schedules(n: usize) -> Vec<Vec<usize>> {
-    assert!(
-        n.is_power_of_two() && (2..=MAX_SINGLE).contains(&n),
-        "row length {n} out of range"
-    );
-    let m = n.trailing_zeros() as usize;
+    assert!((2..=MAX_SINGLE).contains(&n), "row length {n} out of range");
+    let (mut rem, mut threes, mut fives) = (n, 0usize, 0usize);
+    while rem % 3 == 0 {
+        threes += 1;
+        rem /= 3;
+    }
+    while rem % 5 == 0 {
+        fives += 1;
+        rem /= 5;
+    }
+    assert!(rem.is_power_of_two(), "row length {n} is not 5-smooth");
+    let m = rem.trailing_zeros() as usize;
     let mut out = Vec::new();
     for twos in 0..=1usize.min(m) {
         let rest = m - twos;
@@ -109,11 +123,15 @@ pub fn enumerate_radix_schedules(n: usize) -> Vec<Vec<usize>> {
             }
             let fours = (rest - 3 * eights) / 2;
             let mut radices = vec![8; eights];
+            radices.extend(std::iter::repeat(5).take(fives));
             radices.extend(std::iter::repeat(4).take(fours));
+            radices.extend(std::iter::repeat(3).take(threes));
             radices.extend(std::iter::repeat(2).take(twos));
             out.push(radices);
         }
     }
+    // Pure 3^a·5^b sizes (m = 0) fall out of the loop naturally: one
+    // iteration with no 8/4/2 stages pushes the forced list itself.
     out
 }
 
@@ -438,7 +456,39 @@ impl SearchResult {
 /// the result never regresses `Variant::preferred`'s stage count and
 /// its modeled cost is never above the heuristic's.
 pub fn search(n: usize, model: &CostModel) -> Result<SearchResult> {
-    ensure!(n.is_power_of_two() && n >= 2, "tune: size {n} must be a power of two >= 2");
+    ensure!(n >= 2, "tune: size {n} must be >= 2");
+    if !n.is_power_of_two() {
+        // 5-smooth rows: the 3/5 stages are forced, so the space is the
+        // (small) power-of-two-part enumeration — exhaustive min, no DP
+        // needed. The canonical `any_schedule` stage list is inside the
+        // enumerated space, so the searched cost never regresses it.
+        ensure!(
+            n <= MAX_SINGLE && super::plan::is_five_smooth(n),
+            "tune: non-power-of-two size {n} must be 5-smooth and <= {MAX_SINGLE} \
+             (Rader/Bluestein plans have no schedule to search)"
+        );
+        let preferred = super::plan::any_schedule(n)?;
+        let preferred_cost = model.schedule_cost(&preferred);
+        let (schedule, cost) = enumerate_radix_schedules(n)
+            .into_iter()
+            .map(|r| Schedule::single(r).expect("enumerated radices are valid"))
+            .map(|s| {
+                let c = model.schedule_cost(&s);
+                (s, c)
+            })
+            .min_by(|(_, a), (_, b)| a.total_cmp(b))
+            .expect("5-smooth sizes always enumerate at least one schedule");
+        if cost > preferred_cost {
+            return Ok(SearchResult {
+                n,
+                schedule: preferred.clone(),
+                cost: preferred_cost,
+                preferred,
+                preferred_cost,
+            });
+        }
+        return Ok(SearchResult { n, schedule, cost, preferred, preferred_cost });
+    }
     ensure!(n <= 4 * MAX_SINGLE, "tune: size {n} exceeds the four-step ceiling (n1 <= 4)");
     let preferred = Schedule::from_variant(n, Variant::preferred(n));
     let preferred_cost = model.schedule_cost(&preferred);
@@ -1172,6 +1222,148 @@ mod tests {
         // Splits: the paper's default is always present.
         assert_eq!(enumerate_splits(8192), vec![(2, 4096), (4, 2048)]);
         assert_eq!(enumerate_splits(16384), vec![(4, 4096)]);
+    }
+
+    #[test]
+    fn smooth_enumeration_is_forced_stages_plus_pow2_part() {
+        // 5-smooth rows: every 3/5 prime factor is one forced stage, so
+        // the space is exactly the power-of-two-part enumeration.
+        assert_eq!(enumerate_radix_schedules(15), vec![vec![5, 3]]);
+        assert_eq!(enumerate_radix_schedules(60), vec![vec![5, 4, 3]]);
+        assert_eq!(enumerate_radix_schedules(2025), vec![vec![5, 5, 3, 3, 3, 3]]);
+        // 480 = 2^5·3·5 and 1000 = 2^3·5^3 branch their pow2 part
+        // exactly like 32 and 8 do (two compositions each).
+        assert_eq!(
+            enumerate_radix_schedules(480),
+            vec![vec![8, 5, 4, 3], vec![5, 4, 4, 3, 2]]
+        );
+        assert_eq!(
+            enumerate_radix_schedules(1000),
+            vec![vec![8, 5, 5, 5], vec![5, 5, 5, 4, 2]]
+        );
+        for n in [15usize, 60, 480, 1000, 2025] {
+            let schedules = enumerate_schedules(n);
+            let preferred = crate::fft::plan::any_schedule(n).unwrap();
+            assert!(
+                schedules.contains(&preferred),
+                "n={n}: canonical ladder {} missing from the space",
+                preferred.tag()
+            );
+            for s in &schedules {
+                assert_eq!(s.n(), n, "schedule {} has wrong size", s.tag());
+                let twos = s.radices().iter().filter(|&&r| r == 2).count();
+                assert!(twos <= 1, "schedule {} has {twos} radix-2 stages", s.tag());
+            }
+        }
+    }
+
+    #[test]
+    fn smooth_search_picks_the_enumerated_min_and_rejects_specials() {
+        // Price radix-2 free and radix-8 dear: at 480 the [5,4,4,3,2]
+        // row (cost 8) beats the canonical [8,5,4,3] ladder (cost 15).
+        let model = CostModel::synthetic(|e| match e {
+            Edge::Stage { radix: 2, .. } => 0.0,
+            Edge::Stage { radix: 8, .. } => 9.0,
+            Edge::Stage { .. } => 2.0,
+            Edge::Column { .. } => 1.0,
+        });
+        let r = search(480, &model).unwrap();
+        assert_eq!(r.schedule, Schedule::single(vec![5, 4, 4, 3, 2]).unwrap());
+        assert!((r.cost - 8.0).abs() < 1e-9, "cost {}", r.cost);
+        assert_eq!(r.preferred, crate::fft::plan::any_schedule(480).unwrap());
+        assert!((r.preferred_cost - 15.0).abs() < 1e-9);
+        assert!(r.ratio() < 1.0);
+
+        // Flat pricing ties on stage count: the 4-stage canonical
+        // ladder beats the 5-stage alternative and the search returns
+        // the preferred schedule exactly.
+        let model = CostModel::synthetic(|_| 1.0);
+        let r = search(480, &model).unwrap();
+        assert_eq!(r.schedule, r.preferred);
+        assert!((r.ratio() - 1.0).abs() < 1e-12);
+
+        // Single-schedule spaces are trivially their own optimum.
+        let r = search(15, &model).unwrap();
+        assert_eq!(r.schedule, Schedule::single(vec![5, 3]).unwrap());
+        assert_eq!(r.schedule, r.preferred);
+
+        // Rader/Bluestein sizes have no schedule to search, and
+        // 5-smooth sizes above the single-threadgroup budget plan as
+        // Bluestein: all reject cleanly rather than mis-tune.
+        for bad in [1usize, 14, 97, 1001, 1013, 4800] {
+            assert!(search(bad, &model).is_err(), "search({bad}) must error");
+        }
+    }
+
+    #[test]
+    fn cache_v1_compat_and_special_tags() {
+        // A cache file written before arbitrary-N landed (schema 1,
+        // radix-2/4/8 tags only) still loads verbatim.
+        let legacy = r#"{
+  "schema": 1,
+  "entries": [
+    {"n": 1024, "backend": "scalar", "precision": "f32", "bucket": 16, "schedule": "8.8.4.4", "cost_us": 12.5},
+    {"n": 8192, "backend": "scalar", "precision": "bfp16", "bucket": 16, "schedule": "2x4096:8.8.8.8", "cost_us": 99.0}
+  ]
+}"#;
+        let cache = TuneCache::parse(legacy).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(
+            cache.lookup(1024, CodeletBackend::Scalar, Precision::F32, 16),
+            Some(&Schedule::single(vec![8, 8, 4, 4]).unwrap())
+        );
+
+        // New plan kinds ride the same wire format at the same schema
+        // version: mixed-radix, Rader and Bluestein tags round-trip.
+        let mut cache = TuneCache::default();
+        cache.insert(
+            480,
+            CodeletBackend::Scalar,
+            Precision::F32,
+            16,
+            Schedule::single(vec![8, 5, 4, 3]).unwrap(),
+            4.0,
+        );
+        cache.insert(
+            1013,
+            CodeletBackend::Scalar,
+            Precision::F32,
+            16,
+            Schedule::rader(1013).unwrap(),
+            40.0,
+        );
+        cache.insert(
+            1001,
+            CodeletBackend::Scalar,
+            Precision::Bfp16,
+            16,
+            Schedule::bluestein(1001).unwrap(),
+            41.0,
+        );
+        let text = cache.to_json();
+        assert!(text.contains("\"schedule\": \"8.5.4.3\""), "{text}");
+        assert!(text.contains("\"schedule\": \"rader1013\""), "{text}");
+        assert!(text.contains("\"schedule\": \"bluestein1001\""), "{text}");
+        let back = TuneCache::parse(&text).unwrap();
+        assert_eq!(
+            back.lookup(480, CodeletBackend::Scalar, Precision::F32, 16),
+            Some(&Schedule::single(vec![8, 5, 4, 3]).unwrap())
+        );
+        assert_eq!(
+            back.lookup(1013, CodeletBackend::Scalar, Precision::F32, 16),
+            Some(&Schedule::rader(1013).unwrap())
+        );
+        assert_eq!(
+            back.lookup(1001, CodeletBackend::Scalar, Precision::Bfp16, 16),
+            Some(&Schedule::bluestein(1001).unwrap())
+        );
+        assert_eq!(back.to_json(), text);
+
+        // A corrupted special tag fails the whole parse (either the tag
+        // itself or the size cross-check), so the planner degrades to
+        // cold rather than serving a mis-sized plan.
+        let lying = text.replace("rader1013", "rader1015");
+        assert!(TuneCache::parse(&lying).is_err());
     }
 
     #[test]

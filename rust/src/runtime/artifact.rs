@@ -143,6 +143,51 @@ impl Registry {
             .with_context(|| format!("unknown artifact {name:?} (have: {:?})", self.names()))
     }
 
+    /// Like [`Self::get`], but for names outside the compiled set it
+    /// synthesises a native-fallback entry from the canonical name
+    /// grammar (`fft{n}_{fwd|inv}`, `rangecomp{n}`) when `n` is a size
+    /// the any-N planner serves. This is how arbitrary-size requests
+    /// reach the engine without an AOT manifest ever listing them; the
+    /// registry itself stays the strict compiled inventory.
+    pub fn resolve(&self, name: &str) -> Result<ArtifactMeta> {
+        if let Ok(meta) = self.get(name) {
+            return Ok(meta.clone());
+        }
+        let (kind, n, direction) = Self::parse_name(name)
+            .with_context(|| format!("unknown artifact {name:?} (have: {:?})", self.names()))?;
+        anyhow::ensure!(
+            (n.is_power_of_two() && (2..=16384).contains(&n))
+                || (2..=crate::fft::plan::MAX_ANY_N).contains(&n),
+            "artifact {name:?}: size {n} outside the any-N serving range"
+        );
+        Ok(ArtifactMeta {
+            name: name.to_string(),
+            kind,
+            n,
+            batch: self.batch_tile.max(1),
+            variant: "auto".to_string(),
+            direction,
+            file: None,
+        })
+    }
+
+    /// Parse the canonical name grammar back into (kind, n, direction).
+    fn parse_name(name: &str) -> Result<(ArtifactKind, usize, Direction)> {
+        if let Some(rest) = name.strip_prefix("rangecomp") {
+            let n: usize = rest.parse().with_context(|| format!("artifact name {name:?}"))?;
+            return Ok((ArtifactKind::RangeComp, n, Direction::Forward));
+        }
+        if let Some(rest) = name.strip_prefix("fft") {
+            if let Some((num, dir)) = rest.split_once('_') {
+                let n: usize =
+                    num.parse().with_context(|| format!("artifact name {name:?}"))?;
+                let direction: Direction = dir.parse()?;
+                return Ok((ArtifactKind::Fft, n, direction));
+            }
+        }
+        bail!("artifact name {name:?} is not fft{{n}}_{{fwd|inv}} or rangecomp{{n}}")
+    }
+
     pub fn names(&self) -> Vec<&str> {
         self.artifacts.keys().map(|s| s.as_str()).collect()
     }
@@ -190,6 +235,32 @@ mod tests {
             assert!(r.get(&format!("rangecomp{n}")).is_ok(), "rangecomp{n}");
         }
         assert!(r.get("fft999_fwd").is_err());
+    }
+
+    #[test]
+    fn resolve_synthesises_any_size_names() {
+        let r = Registry::default_set(32);
+        // Registry hits resolve to the compiled entry unchanged.
+        let meta = r.resolve("fft4096_fwd").unwrap();
+        assert_eq!((meta.n, meta.kind, meta.variant.as_str()), (4096, ArtifactKind::Fft, "radix8"));
+        // Any-N names outside the compiled set synthesise on the fly.
+        for (name, n, kind, dir) in [
+            ("fft480_fwd", 480, ArtifactKind::Fft, Direction::Forward),
+            ("fft1013_inv", 1013, ArtifactKind::Fft, Direction::Inverse),
+            ("fft128_fwd", 128, ArtifactKind::Fft, Direction::Forward),
+            ("rangecomp1000", 1000, ArtifactKind::RangeComp, Direction::Forward),
+        ] {
+            let meta = r.resolve(name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert_eq!((meta.n, meta.kind, meta.direction), (n, kind, dir), "{name}");
+            assert_eq!(meta.variant, "auto");
+            assert!(meta.file.is_none());
+        }
+        // Out-of-range sizes and garbage names still fail.
+        for bad in ["fft8193_fwd", "fft0_fwd", "fft32768_inv", "fft999x_fwd", "fftx", "bogus"] {
+            assert!(r.resolve(bad).is_err(), "{bad} must not resolve");
+        }
+        // `get` stays the strict compiled inventory.
+        assert!(r.get("fft480_fwd").is_err());
     }
 
     #[test]

@@ -218,7 +218,9 @@ impl Engine {
         precision: Precision,
     ) -> Result<SplitComplex> {
         let name = Registry::fft_name(n, direction);
-        let meta = self.registry.get(&name)?;
+        // `resolve` admits any-N names the compiled manifest never
+        // lists; synthesised entries inherit the registry batch tile.
+        let meta = self.registry.resolve(&name)?;
         anyhow::ensure!(
             batch == meta.batch,
             "artifact {name} is specialised for batch {}, got {batch}",

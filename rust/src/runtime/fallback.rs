@@ -51,7 +51,10 @@ impl NativeExec {
     }
 
     pub fn execute(&self, job: &mut Job) -> Result<Vec<Vec<f32>>> {
-        let meta = self.registry.get(&job.artifact)?;
+        // `resolve` falls through to the canonical-name grammar for
+        // any-N sizes the compiled manifest never lists — the native
+        // backend serves them through the same executor paths.
+        let meta = self.registry.resolve(&job.artifact)?;
         // RangeComp jobs carrying a shared filter Arc ship only the two
         // data planes; the flat 4-input shape remains for PJRT parity.
         let expect_inputs = match (&meta.kind, &job.filter) {
@@ -67,8 +70,15 @@ impl NativeExec {
         );
         let (n, batch) = (meta.n, meta.batch);
         // All artifact variants compute the same transform; the native
-        // library distinguishes only the radix schedule.
-        let variant = if meta.variant == "radix4" { Variant::Radix4 } else { Variant::Radix8 };
+        // library distinguishes only the radix schedule. Synthesised
+        // any-N entries carry "auto": the per-size preferred ladder for
+        // power-of-two sizes, and for everything else the variant is
+        // ignored (`executor_tuned` routes to the any-N plans).
+        let variant = match meta.variant.as_str() {
+            "radix4" => Variant::Radix4,
+            "auto" if meta.n.is_power_of_two() => Variant::preferred(meta.n),
+            _ => Variant::Radix8,
+        };
         // The job's precision policy picks the exchange tier; plans and
         // pooled workspaces are cached per (n, variant, backend,
         // precision), so f32 and bfp16 tiles never share scratch shapes.
@@ -164,6 +174,44 @@ mod tests {
         let got = SplitComplex { re: out[0].clone(), im: out[1].clone() };
         let want = dft_batch(&x, n, batch, Direction::Forward);
         assert!(got.rel_l2_error(&want) < 2e-4);
+    }
+
+    #[test]
+    fn native_exec_serves_any_size_artifacts() {
+        // Names outside the compiled set — one per any-N plan class
+        // (5-smooth, Rader, Bluestein, sub-paper pow2) — execute
+        // through the synthesised-metadata path and match the oracle.
+        let exec = NativeExec::new(Registry::default_set(2));
+        let mut rng = Rng::new(56);
+        let batch = 2;
+        for (name, n, dir) in [
+            ("fft480_fwd", 480usize, Direction::Forward),
+            ("fft1013_inv", 1013, Direction::Inverse),
+            ("fft1001_fwd", 1001, Direction::Forward),
+            ("fft128_fwd", 128, Direction::Forward),
+        ] {
+            let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+            let (mut job, _rx) = make_job(
+                name,
+                vec![x.re.clone(), x.im.clone()],
+                vec![vec![batch, n], vec![batch, n]],
+            );
+            let out = exec.execute(&mut job).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            let got = SplitComplex { re: out[0].clone(), im: out[1].clone() };
+            let want = dft_batch(&x, n, batch, dir);
+            let err = got.rel_l2_error(&want);
+            assert!(err < 5e-4, "{name}: rel l2 {err:.2e}");
+        }
+        // Fused matched filtering at a non-pow2 size runs too.
+        let n = 480;
+        let (mut job, _rx) = make_job(
+            "rangecomp480",
+            vec![rng.signal(n * batch), rng.signal(n * batch), rng.signal(n), rng.signal(n)],
+            vec![vec![batch, n], vec![batch, n], vec![n], vec![n]],
+        );
+        let out = exec.execute(&mut job).unwrap();
+        assert_eq!(out[0].len(), n * batch);
+        assert!(out[0].iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -90,7 +90,7 @@ fn stage_variants_match_naive_oracle() {
     let scale = 0.0625f32;
     for &backend in CodeletBackend::compiled() {
         let codelets = table(backend);
-        for radix in [2usize, 4, 8] {
+        for radix in [2usize, 3, 4, 5, 8] {
             for (n_mult, s) in [(1usize, 8usize), (2, 11), (4, 3), (2, 16)] {
                 let n = radix * n_mult;
                 let xre = rng.signal(n * s);
@@ -224,7 +224,7 @@ fn roundtrip_max_ulp_within_bounds_per_size() {
 #[test]
 fn mul_spectrum_stages_are_bitwise_stage_then_multiply() {
     let mut rng = Rng::new(0x5D0C);
-    for radix in [2usize, 4, 8] {
+    for radix in [2usize, 3, 4, 5, 8] {
         for (n_mult, s) in [(1usize, 8usize), (2, 11), (4, 3), (2, 16)] {
             let n = radix * n_mult;
             let xre = rng.signal(n * s);
@@ -519,6 +519,180 @@ fn searched_schedules_conform_all_paper_sizes() {
     // The enumerator's hand-counted space: if this grows, the gate above
     // silently got more expensive — fail loudly instead.
     assert_eq!(gated, 34, "enumerable schedule count changed");
+}
+
+/// The any-N ladder class a size lands in, mirroring
+/// [`applefft::fft::plan::any_schedule`]'s decision order — the rows of
+/// the per-class conformance table.
+fn size_class(n: usize) -> &'static str {
+    fn is_prime(n: usize) -> bool {
+        if n < 2 {
+            return false;
+        }
+        let mut d = 2usize;
+        while d * d <= n {
+            if n % d == 0 {
+                return false;
+            }
+            d += 1;
+        }
+        true
+    }
+    let mut m = n;
+    for f in [2usize, 3, 5] {
+        while m % f == 0 {
+            m /= f;
+        }
+    }
+    if n.is_power_of_two() {
+        "pow2"
+    } else if m == 1 && n <= 4096 {
+        "smooth"
+    } else if is_prime(n) {
+        "rader"
+    } else {
+        "bluestein"
+    }
+}
+
+/// The convolution length a Rader/Bluestein plan for `n` runs through —
+/// sets the Bfp16 SNR gate (more conv stages = more codec events).
+fn conv_len(n: usize) -> usize {
+    match size_class(n) {
+        "rader" => (2 * (n - 1) - 1).next_power_of_two(),
+        "bluestein" => (2 * n - 1).next_power_of_two(),
+        _ => 0,
+    }
+}
+
+/// ISSUE 7 gate: the arbitrary-N conformance sweep. Every size in
+/// `lo..=hi` plus `sampled`, both directions, every compiled backend,
+/// both exchange precisions, against the O(N^2) oracle — with the
+/// worst case per any-N ladder class reported as a table. The PR 5
+/// invariants ride along per size: scalar == simd bitwise at both
+/// precisions, and Bfp16 tracks the same-schedule f32 output within
+/// the SNR floor (60 dB, relaxed to 55 dB only where the Rader/
+/// Bluestein convolution exceeds the single-threadgroup budget and the
+/// codec fires at 4-5x as many points).
+fn any_n_conformance(lo: usize, hi: usize, sampled: &[usize]) {
+    use applefft::fft::plan::any_schedule;
+    use std::collections::BTreeMap;
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(0xA27B1);
+    // class -> (sizes, worst (rel_l2, n), worst (ulp, n), min (snr, n))
+    #[derive(Default)]
+    struct Worst {
+        count: usize,
+        err: (f64, usize),
+        ulp: (u64, usize),
+        snr: (f64, usize),
+    }
+    let mut classes: BTreeMap<&'static str, Worst> = BTreeMap::new();
+    let sizes = (lo..=hi).chain(sampled.iter().copied());
+    for n in sizes {
+        let batch = if n <= 512 { 2usize } else { 1 };
+        let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+        let schedule = any_schedule(n).unwrap_or_else(|e| panic!("n={n}: {e:#}"));
+        let class = size_class(n);
+        // Direct stage plans carry the paper-size 60 dB floor. The
+        // convolution classes run 2 extra transforms' worth of codec
+        // events (so ~3 dB more quantization noise in the worst case);
+        // the representative-size >= 60 dB gate lives in `fft::plan`'s
+        // unit tests — here the sweep bounds the whole population.
+        let snr_floor = match conv_len(n) {
+            0 => 60.0,
+            m if m <= 4096 => 58.0,
+            _ => 55.0,
+        };
+        let entry = classes.entry(class).or_default();
+        entry.count += 1;
+        for dir in [Direction::Forward, Direction::Inverse] {
+            let want = dft_oracle(&x, n, batch, dir);
+            let floor = rms(&want) / 4.0;
+            let mut f32_outs: Vec<SplitComplex> = Vec::new();
+            let mut bfp_outs: Vec<SplitComplex> = Vec::new();
+            for &backend in CodeletBackend::compiled() {
+                let got = planner
+                    .plan_scheduled(&schedule, backend, Precision::F32)
+                    .unwrap_or_else(|e| panic!("n={n} {}: {e:#}", backend.tag()))
+                    .execute_batch(&x, batch, dir)
+                    .unwrap();
+                let err = got.rel_l2_error(&want);
+                let ulp = max_ulp_above(&got, &want, floor);
+                assert!(
+                    err < 5e-4,
+                    "n={n} ({class}) {dir:?} {}: rel {err:.2e}",
+                    backend.tag()
+                );
+                assert!(ulp < 1 << 16, "n={n} ({class}) {dir:?} {}: {ulp} ulps", backend.tag());
+                let bfp = planner
+                    .plan_scheduled(&schedule, backend, Precision::Bfp16)
+                    .unwrap()
+                    .execute_batch(&x, batch, dir)
+                    .unwrap();
+                let snr = snr_db(&bfp, &got);
+                assert!(
+                    snr >= snr_floor,
+                    "n={n} ({class}) {dir:?} {}: bfp16 {snr:.1} dB",
+                    backend.tag()
+                );
+                if err > entry.err.0 {
+                    entry.err = (err, n);
+                }
+                if ulp > entry.ulp.0 {
+                    entry.ulp = (ulp, n);
+                }
+                if entry.snr.1 == 0 || snr < entry.snr.0 {
+                    entry.snr = (snr, n);
+                }
+                f32_outs.push(got);
+                bfp_outs.push(bfp);
+            }
+            // scalar == simd bitwise, at both precisions, per size+dir.
+            for other in &f32_outs[1..] {
+                assert_eq!(f32_outs[0].re, other.re, "n={n} {dir:?} f32 re");
+                assert_eq!(f32_outs[0].im, other.im, "n={n} {dir:?} f32 im");
+            }
+            for other in &bfp_outs[1..] {
+                assert_eq!(bfp_outs[0].re, other.re, "n={n} {dir:?} bfp16 re");
+                assert_eq!(bfp_outs[0].im, other.im, "n={n} {dir:?} bfp16 im");
+            }
+        }
+    }
+    let report = UlpTable::new(
+        &format!("any-N conformance {lo}..={hi} (+{} sampled), worst per class:", sampled.len()),
+        &["class", "sizes", "rel_l2", "at_N", "max_ulp", "at_N", "min_snr", "at_N"],
+    );
+    for (class, w) in &classes {
+        report.row(&[
+            class.to_string(),
+            w.count.to_string(),
+            format!("{:.2e}", w.err.0),
+            w.err.1.to_string(),
+            w.ulp.0.to_string(),
+            w.ulp.1.to_string(),
+            format!("{:.1}", w.snr.0),
+            w.snr.1.to_string(),
+        ]);
+    }
+}
+
+/// Default-run subset of the arbitrary-N sweep: every size 2..=128.
+/// Fast (the quadratic oracle is cheap down here) but already covers
+/// every ladder class many times over.
+#[test]
+fn any_n_conformance_every_size_to_128() {
+    any_n_conformance(2, 128, &[]);
+}
+
+/// The full ISSUE 7 acceptance sweep: every size 2..=512 plus sampled
+/// sizes up to the 8192 any-N ceiling (one per ladder class in the
+/// four-step range). The O(N^2) oracle makes this minutes of work, so
+/// it runs `--ignored` on the scheduled/nightly CI leg.
+#[test]
+#[ignore = "full any-N sweep (minutes of O(N^2) oracle): nightly CI leg runs --ignored"]
+fn any_n_conformance_every_size_to_512_and_sampled() {
+    any_n_conformance(129, 512, &[625, 1000, 1001, 1013, 2025, 3000, 4800, 6561, 7919, 8192]);
 }
 
 /// Batched execution through the pooled executors must conform too (the

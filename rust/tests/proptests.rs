@@ -34,6 +34,9 @@ fn prop_planner_synthesis_rules() {
                 assert_eq!(n1 * n2, n, "factorisation");
                 assert!(n2 <= 4096, "N2 <= B_max");
             }
+            Decomposition::AnyN { .. } => {
+                unreachable!("pow2 sizes in the paper range never plan as AnyN")
+            }
         }
     });
 }
@@ -416,6 +419,79 @@ fn prop_tune_cache_roundtrip_bitwise() {
             .unwrap();
         assert_eq!(got.re, want.re, "case {}: n={n} {dir:?} {precision:?} re", g.case);
         assert_eq!(got.im, want.im, "case {}: n={n} {dir:?} {precision:?} im", g.case);
+    });
+}
+
+#[test]
+fn prop_any_n_roundtrip_and_backends_bitwise() {
+    // ISSUE 7 satellite: the any-N ladder, property form. Random sizes
+    // across every schedule class (pow2, 5-smooth mixed-radix, Rader,
+    // Bluestein): inverse(forward(x)) returns x, and the scalar/simd
+    // codelet backends stay *bitwise* identical — the PR 5 contract
+    // extends to every size because the Rader/Bluestein convolution
+    // kernels are pinned to one backend at build time.
+    use applefft::fft::plan::any_schedule;
+    let planner = NativePlanner::new();
+    check("any-N roundtrip + bitwise backends", 24, |g| {
+        let n = g.rng.between(2, 8192);
+        let schedule = any_schedule(n).unwrap_or_else(|e| panic!("n={n}: {e:#}"));
+        let batch = g.rng.between(1, 3);
+        let (re, im) = g.signal(n * batch);
+        let x = SplitComplex { re, im };
+        let plan = planner
+            .plan_scheduled(&schedule, CodeletBackend::Scalar, Precision::F32)
+            .unwrap();
+        let f = plan.execute_batch(&x, batch, Direction::Forward).unwrap();
+        let back = plan.execute_batch(&f, batch, Direction::Inverse).unwrap();
+        let err = back.rel_l2_error(&x);
+        assert!(err < 5e-4, "case {}: n={n} tag={} roundtrip err {err:e}", g.case, schedule.tag());
+        let simd = planner
+            .plan_scheduled(&schedule, CodeletBackend::Simd, Precision::F32)
+            .unwrap()
+            .execute_batch(&x, batch, Direction::Forward)
+            .unwrap();
+        assert_eq!(f.re, simd.re, "re: n={n} tag={}", schedule.tag());
+        assert_eq!(f.im, simd.im, "im: n={n} tag={}", schedule.tag());
+    });
+}
+
+#[test]
+fn prop_prime_sizes_rader_bluestein_oracle_agree() {
+    // ISSUE 7 satellite: at random primes both prime-size algorithms
+    // are live — Rader (the ladder's pick) and Bluestein (the explicit
+    // fallback) — and both must match the O(N^2) DFT oracle in both
+    // directions. They are *different* algorithms over different
+    // convolution lengths, so this is a tolerance check, not bitwise.
+    use applefft::fft::plan::Schedule;
+    let planner = NativePlanner::new();
+    check("rader/bluestein vs oracle at random primes", 12, |g| {
+        // Random prime: walk up from a random start until Rader admits
+        // it (Schedule::rader rejects composites). Primes are dense
+        // enough below 1600 that this stays in the oracle-cheap range.
+        let mut p = g.rng.between(3, 1500);
+        while Schedule::rader(p).is_err() {
+            p += 1;
+        }
+        let (re, im) = g.signal(p);
+        let x = SplitComplex { re, im };
+        let rader = planner
+            .plan_scheduled(&Schedule::rader(p).unwrap(), CodeletBackend::Scalar, Precision::F32)
+            .unwrap();
+        let blue = planner
+            .plan_scheduled(
+                &Schedule::bluestein(p).unwrap(),
+                CodeletBackend::Scalar,
+                Precision::F32,
+            )
+            .unwrap();
+        for dir in [Direction::Forward, Direction::Inverse] {
+            let want = dft_oracle(&x, p, 1, dir);
+            let r = rader.execute_batch(&x, 1, dir).unwrap();
+            let b = blue.execute_batch(&x, 1, dir).unwrap();
+            let (er, eb) = (r.rel_l2_error(&want), b.rel_l2_error(&want));
+            assert!(er < 5e-4, "case {}: rader p={p} {dir:?} err {er:e}", g.case);
+            assert!(eb < 5e-4, "case {}: bluestein p={p} {dir:?} err {eb:e}", g.case);
+        }
     });
 }
 

@@ -2,7 +2,7 @@
 //! workers -> engine), on the native backend so they run pre-artifacts;
 //! a final test upgrades to PJRT when artifacts exist.
 
-use applefft::coordinator::{FftService, ServiceConfig};
+use applefft::coordinator::{FftService, ServiceConfig, ShardedFftService};
 use applefft::fft::plan::NativePlanner;
 use applefft::fft::Direction;
 use applefft::runtime::{engine::artifacts_dir, Backend};
@@ -168,6 +168,43 @@ fn four_step_sizes_through_service() {
         let want = planner.fft_batch(&x, n, lines, Direction::Forward).unwrap();
         assert!(got.rel_l2_error(&want) < 5e-4, "n={n}");
     }
+}
+
+#[test]
+fn arbitrary_sizes_through_sharded_front_door() {
+    // ISSUE 7 satellite: non-pow2 sizes served end to end through the
+    // sharded coordinator — admission (validate_shape), planning
+    // (Decomposition::AnyN), batching, artifact resolution, and the
+    // native engine — one size per schedule class: 480 (5-smooth,
+    // 8*5*4*3), 1000 (5-smooth, 8*5^3), 1013 (prime -> Rader). The
+    // reference is the planner's own any-N executor; the sharded answer
+    // must also be bitwise the 1-shard answer.
+    let single = service(Backend::Native);
+    let svc = ShardedFftService::start(ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_millis(1),
+        workers: 2,
+        warm: false,
+        shards: 3,
+    })
+    .unwrap();
+    let planner = NativePlanner::new();
+    let mut rng = Rng::new(207);
+    for n in [480usize, 1000, 1013] {
+        for dir in [Direction::Forward, Direction::Inverse] {
+            let lines = rng.between(1, 6);
+            let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+            let got = svc.fft(n, dir, x.clone(), lines).unwrap();
+            let base = single.fft(n, dir, x.clone(), lines).unwrap();
+            assert_eq!(got.re, base.re, "n={n} {dir:?}: sharded re != single re");
+            assert_eq!(got.im, base.im, "n={n} {dir:?}: sharded im != single im");
+            let want = planner.fft_batch_any(&x, n, lines, dir).unwrap();
+            let err = got.rel_l2_error(&want);
+            assert!(err < 5e-4, "n={n} {dir:?} lines={lines}: {err}");
+        }
+    }
+    assert_eq!(svc.drain().unwrap().failures, 0);
+    assert_eq!(single.drain().unwrap().failures, 0);
 }
 
 #[test]

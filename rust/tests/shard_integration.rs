@@ -240,6 +240,50 @@ fn prop_random_traces_replay_bitwise_at_random_shard_count() {
     });
 }
 
+/// ISSUE 7 satellite: the shard-equality contract is size-blind. Random
+/// traces over arbitrary sizes — one of each schedule class (5-smooth,
+/// Rader prime, Bluestein composite) plus truly random N in the serving
+/// range — replay bitwise at a random shard count, exactly like the
+/// pow2 matrix above. Striping never regroups lines in a way the
+/// per-line executor can observe, whatever the radix ladder underneath.
+#[test]
+fn prop_any_n_traces_replay_bitwise_sharded_vs_single() {
+    check("any-N sharded replay == 1-shard replay", 4, |g| {
+        // smooth / smooth / Rader / Bluestein anchors + random fill.
+        let classes = [480usize, 1000, 1013, 1001];
+        let entries: Vec<TraceEntry> = (0..g.rng.between(3, 6))
+            .map(|i| TraceEntry {
+                arrival_us: (i as u64) * 200,
+                n: if g.rng.below(2) == 0 {
+                    *g.rng.choose(&classes)
+                } else {
+                    g.rng.between(2, 2048)
+                },
+                lines: g.rng.between(1, 8),
+                direction: if g.rng.below(3) == 0 {
+                    Direction::Inverse
+                } else {
+                    Direction::Forward
+                },
+                precision: if g.rng.below(3) == 0 { Precision::Bfp16 } else { Precision::F32 },
+            })
+            .collect();
+        let trace = Trace { entries };
+        let shard_count = g.rng.between(2, 4);
+        let base = sharded(1);
+        let multi = sharded(shard_count);
+        let want = replay_collect(&base, &trace, g.seed).unwrap();
+        let got = replay_collect(&multi, &trace, g.seed).unwrap();
+        assert_eq!(want.len(), got.len());
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            let n = trace.entries[i].n;
+            assert_eq!(a.re, b.re, "case {}: entry {i} n={n} re (shards={shard_count})", g.case);
+            assert_eq!(a.im, b.im, "case {}: entry {i} n={n} im (shards={shard_count})", g.case);
+        }
+        assert_eq!(multi.drain().unwrap().failures, 0);
+    });
+}
+
 /// The `APPLEFFT_SHARDS` env knob drives the default config (the CI
 /// matrix leans on this): whatever the env says, the sharded service
 /// still answers bitwise like a single stack.
