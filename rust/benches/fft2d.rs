@@ -1,0 +1,194 @@
+//! 2D pipeline bench: the corner-turn exchange tier and the fused
+//! `Fft2d`/`FormImage` request path. Emits `BENCH_fft2d.json` at the
+//! repo root alongside the other `BENCH_*.json` CI artifacts.
+//!
+//! Four tables:
+//!
+//! 1. blocked vs naive transpose GB/s — the cache-blocked tile turn
+//!    against the strided scatter loop it is bitwise-equal to;
+//! 2. exchange precision — the same corner turn with the turned matrix
+//!    staged through BFP planes, reporting the bytes that actually
+//!    cross the exchange (the paper's half-width claim);
+//! 3. fused one-request 2D FFT vs the caller-orchestrated two-pass
+//!    composition (row request -> host turn -> column request -> turn
+//!    back) through the full service stack;
+//! 4. whole-scene `FormImage` through the sharded coordinator at
+//!    1/2/4 shards.
+
+use applefft::bench::table::{BenchJson, Table};
+use applefft::bench::Benchmark;
+use applefft::coordinator::{FftService, ServiceConfig, ShardedFftService};
+use applefft::fft::bfp::{BfpVec, Precision};
+use applefft::fft::{tile, Direction};
+use applefft::runtime::Backend;
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use applefft::util::{fft2d_flops, formimage_flops, gflops};
+use std::time::Duration;
+
+fn config(shards: usize) -> ServiceConfig {
+    ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_micros(100),
+        workers: 2,
+        warm: false,
+        shards,
+    }
+}
+
+fn gb_per_s(bytes: usize, secs: f64) -> f64 {
+    bytes as f64 / secs / 1e9
+}
+
+fn main() {
+    let b = Benchmark::new("fft2d");
+    let mut json = BenchJson::new("fft2d");
+    let mut rng = Rng::new(0x2D);
+
+    // --- 1. Blocked vs naive corner turn -------------------------------
+    let (rows, cols) = (1024usize, 1024usize);
+    let x = SplitComplex { re: rng.signal(rows * cols), im: rng.signal(rows * cols) };
+    let mut dst = SplitComplex::zeros(rows * cols);
+    // Both planes read once and written once per turn.
+    let turn_bytes = rows * cols * 4 * 2 * 2;
+    let mut t = Table::new(
+        &format!("Corner-turn transpose — {rows}x{cols} f32"),
+        &["variant", "us/turn", "GB/s", "speedup"],
+    );
+    let m_naive = b.run("transpose naive", || {
+        tile::transpose_naive(&x.re, &x.im, &mut dst.re, &mut dst.im, rows, cols)
+    });
+    let m_blocked = b.run("transpose blocked", || {
+        let op = tile::FusedStore::Plain;
+        tile::transpose_into(&x.re, &x.im, &mut dst.re, &mut dst.im, rows, cols, op)
+    });
+    for (name, m) in [("naive", &m_naive), ("blocked", &m_blocked)] {
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}", m.median_secs() * 1e6),
+            format!("{:.2}", gb_per_s(turn_bytes, m.median_secs())),
+            format!("{:.2}x", m_naive.median_secs() / m.median_secs()),
+        ]);
+    }
+    t.note("bytes = re+im planes, read + write; blocked is bitwise the naive loop");
+    t.print();
+    json.add(&t);
+
+    // --- 2. Exchange precision: f32 vs BFP-staged ----------------------
+    let mut t = Table::new(
+        &format!("Corner-turn exchange — {rows}x{cols}, f32 vs bfp16 staging"),
+        &["exchange", "us/turn", "MiB crossing", "bytes vs f32"],
+    );
+    let (mut bre, mut bim) = (BfpVec::new(), BfpVec::new());
+    let (mut rre, mut rim) = (vec![0.0f32; rows], vec![0.0f32; rows]);
+    let f32_cross = rows * cols * 4 * 2;
+    let mut cross = f32_cross;
+    for &precision in Precision::all() {
+        let m = b.run(&format!("exchange {}", precision.tag()), || {
+            tile::exchange_transpose(
+                &x.re,
+                &x.im,
+                &mut dst.re,
+                &mut dst.im,
+                rows,
+                cols,
+                precision,
+                &mut bre,
+                &mut bim,
+                &mut rre,
+                &mut rim,
+            )
+        });
+        if precision == Precision::Bfp16 {
+            cross = bre.storage_bytes() + bim.storage_bytes();
+        }
+        t.row(&[
+            precision.tag().to_string(),
+            format!("{:.1}", m.median_secs() * 1e6),
+            format!("{:.2}", cross as f64 / (1 << 20) as f64),
+            format!("{:.2}x", cross as f64 / f32_cross as f64),
+        ]);
+    }
+    t.note("crossing = bytes of the turned matrix at the exchange tier (BFP planes at bfp16)");
+    t.print();
+    json.add(&t);
+
+    // --- 3. Fused one-request 2D FFT vs two-pass composition -----------
+    let (na, nr) = (256usize, 1024usize);
+    let scene = SplitComplex { re: rng.signal(na * nr), im: rng.signal(na * nr) };
+    let flops = fft2d_flops(na, nr);
+    for &precision in Precision::all() {
+        let svc = FftService::start(config(1)).expect("service");
+        let mut t = Table::new(
+            &format!("2D FFT {na}x{nr} — fused vs two-pass, {} exchange", precision.tag()),
+            &["path", "us/scene", "GFLOPS", "speedup"],
+        );
+        let m_two = b.run(&format!("two-pass {}", precision.tag()), || {
+            let rowed = svc
+                .fft_prec(nr, Direction::Forward, scene.clone(), na, precision)
+                .expect("row pass");
+            let mut turned = SplitComplex::zeros(na * nr);
+            tile::transpose_naive(&rowed.re, &rowed.im, &mut turned.re, &mut turned.im, na, nr);
+            let coled =
+                svc.fft_prec(na, Direction::Forward, turned, nr, precision).expect("column pass");
+            let mut out = SplitComplex::zeros(na * nr);
+            tile::transpose_naive(&coled.re, &coled.im, &mut out.re, &mut out.im, nr, na);
+            out
+        });
+        let m_fused = b.run(&format!("fused {}", precision.tag()), || {
+            svc.fft2d_prec(nr, Direction::Forward, scene.clone(), na, precision).expect("fft2d")
+        });
+        for (name, m) in [("two-pass", &m_two), ("fused Fft2d", &m_fused)] {
+            t.row(&[
+                name.to_string(),
+                format!("{:.1}", m.median_secs() * 1e6),
+                format!("{:.2}", gflops(flops, m.median_secs())),
+                format!("{:.2}x", m_two.median_secs() / m.median_secs()),
+            ]);
+        }
+        t.note("two-pass: two blocking requests with host corner turns between them");
+        t.print();
+        json.add(&t);
+        svc.drain().expect("drain");
+    }
+
+    // --- 4. FormImage shard scaling ------------------------------------
+    let (na, nr) = (512usize, 512usize);
+    let scene = SplitComplex { re: rng.signal(na * nr), im: rng.signal(na * nr) };
+    let hr = SplitComplex { re: rng.signal(nr), im: rng.signal(nr) };
+    let ha = SplitComplex { re: rng.signal(na), im: rng.signal(na) };
+    let flops = formimage_flops(na, nr);
+    for &precision in Precision::all() {
+        let mut t = Table::new(
+            &format!("FormImage {na}x{nr} shard scaling — {} exchange", precision.tag()),
+            &["shards", "us/scene", "GFLOPS", "speedup vs 1 shard"],
+        );
+        let mut base_us: Option<f64> = None;
+        for shards in [1usize, 2, 4] {
+            let svc = ShardedFftService::start(config(shards)).expect("sharded service");
+            let range = svc.register_filter_prec(nr, hr.clone(), precision).expect("range filter");
+            let azimuth =
+                svc.register_filter_prec(na, ha.clone(), precision).expect("azimuth filter");
+            let m = b.run(&format!("formimage {} shards={shards}", precision.tag()), || {
+                svc.form_image(&range, &azimuth, scene.clone(), na).expect("form_image")
+            });
+            let us = m.median_secs() * 1e6;
+            let base = *base_us.get_or_insert(us);
+            t.row(&[
+                shards.to_string(),
+                format!("{us:.1}"),
+                format!("{:.2}", gflops(flops, m.median_secs())),
+                format!("{:.2}x", base / us),
+            ]);
+            svc.drain().expect("drain");
+        }
+        t.note("row stripes fan out per shard; the corner turn is the cross-shard exchange");
+        t.print();
+        json.add(&t);
+    }
+
+    match json.write_repo_root() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+}

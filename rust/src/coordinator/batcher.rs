@@ -147,6 +147,15 @@ pub enum TileKind {
     /// Fused matched filtering against the shared spectrum (the
     /// `rangecomp{n}` artifact; native backend runs the fused pipeline).
     MatchedFilter(Arc<SplitComplex>),
+    /// Whole-matrix 2D FFT (`fft2d{n}` artifact): the tile is one
+    /// request's `(lines, n)` matrix, batch = the row count.
+    Fft2d(Direction),
+    /// Whole-image formation (`formimage{n}` artifact): both filter
+    /// spectra shared by Arc, range length `n`, azimuth length = rows.
+    FormImage {
+        range: Arc<SplitComplex>,
+        azimuth: Arc<SplitComplex>,
+    },
 }
 
 /// Batching-queue key (see module docs). Precision is part of the key:
@@ -159,11 +168,15 @@ pub enum QueueKey {
 }
 
 impl FftRequest {
-    /// The queue this request's lines accumulate in.
+    /// The queue this request's lines accumulate in. 2D requests never
+    /// queue — [`Batcher::admit`] dispatches them as dedicated tiles.
     pub fn queue_key(&self) -> QueueKey {
         match &self.kind {
             RequestKind::Fft(d) => QueueKey::Fft(*d, self.precision),
             RequestKind::MatchedFilter(spec) => QueueKey::Filter(spec.id, self.precision),
+            RequestKind::Fft2d(..) | RequestKind::FormImage { .. } => {
+                unreachable!("2D requests dispatch as dedicated tiles, never through a queue")
+            }
         }
     }
 }
@@ -173,6 +186,11 @@ impl RequestKind {
         match self {
             RequestKind::Fft(d) => TileKind::Fft(*d),
             RequestKind::MatchedFilter(spec) => TileKind::MatchedFilter(spec.spectrum.clone()),
+            RequestKind::Fft2d(d) => TileKind::Fft2d(*d),
+            RequestKind::FormImage { range, azimuth } => TileKind::FormImage {
+                range: range.spectrum.clone(),
+                azimuth: azimuth.spectrum.clone(),
+            },
         }
     }
 }
@@ -310,6 +328,9 @@ impl Queue {
         let artifact = match &self.kind {
             TileKind::Fft(d) => Registry::fft_name(n, *d),
             TileKind::MatchedFilter(_) => Registry::rangecomp_name(n),
+            TileKind::Fft2d(..) | TileKind::FormImage { .. } => {
+                unreachable!("2D tiles are built by Batcher::tile_2d, not popped from queues")
+            }
         };
         Some(Tile {
             artifact,
@@ -341,6 +362,17 @@ impl Batcher {
     /// flush eagerly).
     pub fn admit(&mut self, req: &FftRequest) -> Vec<Tile> {
         let acc = Accumulator::new(req);
+        // 2D requests bypass coalescing entirely: the request IS the
+        // tile (one whole matrix, batch = row count, no padding), and
+        // it dispatches eagerly — batching delay buys nothing when a
+        // single request already fills both phases.
+        if req.kind.is_2d() {
+            self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            self.metrics
+                .lines_in
+                .fetch_add(req.lines as u64, std::sync::atomic::Ordering::Relaxed);
+            return vec![Self::tile_2d(req, acc)];
+        }
         let key = (req.n, req.queue_key());
         let queue = self.queues.entry(key).or_insert_with(|| {
             Queue::new(req.n, req.kind.tile_kind(), req.precision, self.batch_tile)
@@ -365,6 +397,26 @@ impl Batcher {
         }
         self.evict_idle_filter_queues();
         tiles
+    }
+
+    /// One dedicated tile for a whole-matrix 2D request.
+    fn tile_2d(req: &FftRequest, acc: Arc<Accumulator>) -> Tile {
+        acc.dispatched();
+        let artifact = match &req.kind {
+            RequestKind::Fft2d(d) => Registry::fft2d_name(req.n, *d),
+            RequestKind::FormImage { .. } => Registry::formimage_name(req.n),
+            _ => unreachable!("tile_2d called on a 1D request"),
+        };
+        Tile {
+            artifact,
+            n: req.n,
+            kind: req.kind.tile_kind(),
+            precision: req.precision,
+            batch: req.lines,
+            data: req.data.clone(),
+            segments: vec![Segment { acc, tile_line: 0, request_line: 0, count: req.lines }],
+            padded_lines: 0,
+        }
     }
 
     /// Flush queues whose oldest entry exceeded `max_wait` (or all, when
@@ -651,6 +703,40 @@ mod tests {
             panic!("expected matched-filter tile");
         };
         assert!(Arc::ptr_eq(h, &spec), "tile must share the registered spectrum");
+    }
+
+    #[test]
+    fn fft2d_requests_dispatch_as_dedicated_tiles() {
+        // A 2D request never coalesces, never pads, and flushes
+        // eagerly: one tile, batch = row count, one spanning segment.
+        let mut b = batcher(8);
+        let (r, _rx) =
+            request_kind(1, 256, 3, 60, RequestKind::Fft2d(Direction::Forward));
+        let tiles = b.admit(&r);
+        assert_eq!(tiles.len(), 1);
+        let t = &tiles[0];
+        assert_eq!(t.artifact, "fft2d256");
+        assert_eq!((t.batch, t.padded_lines), (3, 0), "batch is the row count, no padding");
+        assert_eq!(t.segments.len(), 1);
+        assert_eq!(t.segments[0].count, 3);
+        assert!(matches!(t.kind, TileKind::Fft2d(Direction::Forward)));
+        assert_eq!(b.queue_count(), 0, "no queue created for 2D traffic");
+
+        // FormImage carries both spectra by Arc.
+        let range = Arc::new(SplitComplex::zeros(256));
+        let azimuth = Arc::new(SplitComplex::zeros(4));
+        let kind = RequestKind::FormImage {
+            range: FilterSpec { id: 1, spectrum: range.clone() },
+            azimuth: FilterSpec { id: 2, spectrum: azimuth.clone() },
+        };
+        let (r2, _rx2) = request_kind(2, 256, 4, 61, kind);
+        let tiles = b.admit(&r2);
+        assert_eq!(tiles.len(), 1);
+        assert_eq!(tiles[0].artifact, "formimage256");
+        let TileKind::FormImage { range: tr, azimuth: ta } = &tiles[0].kind else {
+            panic!("expected FormImage tile");
+        };
+        assert!(Arc::ptr_eq(tr, &range) && Arc::ptr_eq(ta, &azimuth));
     }
 
     #[test]

@@ -79,6 +79,12 @@ pub struct Metrics {
     /// Nominal pipeline FLOPs (`2·5·N·log2 N + 6·N` per line) across
     /// matched-filter tiles — the matched-filter share of `flops`.
     pub mf_flops: AtomicU64,
+    /// Whole-matrix 2D tiles dispatched (`Fft2d` + `FormImage`).
+    pub image_tiles: AtomicU64,
+    /// Nominal FLOPs across 2D tiles (rows x length-cols lines plus
+    /// cols x length-rows lines, both phases' fused-multiply terms
+    /// included for `FormImage`) — the 2D share of `flops`.
+    pub image_flops: AtomicU64,
     /// Tiles executed at the `Bfp16` exchange precision.
     pub bfp_tiles: AtomicU64,
     /// Sum of sampled Bfp16-vs-f32 output SNRs, milli-dB (sampled every
@@ -128,6 +134,8 @@ impl Metrics {
             nominal_flops: self.flops.load(Ordering::Relaxed),
             mf_tiles: self.mf_tiles.load(Ordering::Relaxed),
             mf_nominal_flops: self.mf_flops.load(Ordering::Relaxed),
+            image_tiles: self.image_tiles.load(Ordering::Relaxed),
+            image_nominal_flops: self.image_flops.load(Ordering::Relaxed),
             bfp_tiles: self.bfp_tiles.load(Ordering::Relaxed),
             bfp_snr_samples: snr_samples,
             bfp_snr_mean_db: snr_mean,
@@ -165,6 +173,11 @@ pub struct MetricsSnapshot {
     /// Pipeline FLOPs (2 FFTs + 6N multiply per line) across
     /// matched-filter tiles; included in `nominal_flops`.
     pub mf_nominal_flops: u64,
+    /// Whole-matrix 2D tiles dispatched (`Fft2d` + `FormImage`).
+    pub image_tiles: u64,
+    /// Nominal FLOPs across 2D tiles (both phases, fused-multiply
+    /// terms included for `FormImage`); included in `nominal_flops`.
+    pub image_nominal_flops: u64,
     /// Tiles executed at the `Bfp16` exchange precision.
     pub bfp_tiles: u64,
     /// Sampled Bfp16-vs-f32 tile comparisons behind `bfp_snr_mean_db`.
@@ -210,6 +223,8 @@ impl MetricsSnapshot {
             m.nominal_flops += p.nominal_flops;
             m.mf_tiles += p.mf_tiles;
             m.mf_nominal_flops += p.mf_nominal_flops;
+            m.image_tiles += p.image_tiles;
+            m.image_nominal_flops += p.image_nominal_flops;
             m.bfp_tiles += p.bfp_tiles;
             m.bfp_snr_samples += p.bfp_snr_samples;
             snr_mdb += p.bfp_snr_mean_db * p.bfp_snr_samples as f64;
@@ -259,9 +274,18 @@ impl MetricsSnapshot {
         self.mf_nominal_flops as f64 / self.nominal_flops as f64
     }
 
+    /// Whole-matrix 2D (`Fft2d`/`FormImage`) share of the nominal FLOPs.
+    pub fn image_share(&self) -> f64 {
+        if self.nominal_flops == 0 {
+            return 0.0;
+        }
+        self.image_nominal_flops as f64 / self.nominal_flops as f64
+    }
+
     pub fn render(&self) -> String {
         format!(
-            "requests={} lines={} tiles={} padded={} ({:.1}%) failures={} shards={}\n\
+            "requests={} lines={} tiles={} padded={} ({:.1}%) failures={} shards={} \
+             image_tiles={} ({:.1}% of flops)\n\
              queue: mean {:.0} us, p95 {:.0} us | exec: mean {:.0} us, p95 {:.0} us\n\
              executor: {:.2} GFLOPS nominal (5*N*log2 N / busy time), {} codelets, {} default\n\
              matched-filter: {} tiles, {:.1}% of nominal FLOPs (2 FFTs + 6N per line)\n\
@@ -273,6 +297,8 @@ impl MetricsSnapshot {
             self.padding_ratio() * 100.0,
             self.failures,
             self.shards,
+            self.image_tiles,
+            self.image_share() * 100.0,
             self.queue_mean_us,
             self.queue_p95_us,
             self.exec_mean_us,
@@ -384,6 +410,8 @@ mod tests {
             nominal_flops: 1_000,
             mf_tiles: 1,
             mf_nominal_flops: 250,
+            image_tiles: 1,
+            image_nominal_flops: 100,
             bfp_tiles: 2,
             bfp_snr_samples: 1,
             bfp_snr_mean_db: 70.0,
@@ -418,6 +446,8 @@ mod tests {
         assert_eq!(m.nominal_flops, 4_000, "merged flops are the per-shard sum");
         assert_eq!(m.mf_tiles, 2);
         assert_eq!(m.mf_nominal_flops, 500);
+        assert_eq!(m.image_tiles, 2);
+        assert_eq!(m.image_nominal_flops, 200);
         assert_eq!(m.bfp_tiles, 4);
         assert_eq!(m.bfp_snr_samples, 4);
         // SNR mean is sample-weighted: (70*1 + 60*3) / 4.
@@ -446,6 +476,24 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.snapshot(0).shards, 1);
         assert!(m.snapshot(0).render().contains("shards=1"));
+    }
+
+    #[test]
+    fn image_metrics_snapshot_and_render() {
+        let m = Metrics::default();
+        m.flops.fetch_add(2_000, Ordering::Relaxed);
+        m.image_tiles.fetch_add(3, Ordering::Relaxed);
+        m.image_flops.fetch_add(500, Ordering::Relaxed);
+        let s = m.snapshot(1_000);
+        assert_eq!(s.image_tiles, 3);
+        assert_eq!(s.image_nominal_flops, 500);
+        assert!((s.image_share() - 0.25).abs() < 1e-9);
+        assert_eq!(MetricsSnapshot::default().image_share(), 0.0);
+        // Rendered on the shards= summary line.
+        let r = s.render();
+        let first = r.lines().next().unwrap();
+        assert!(first.contains("shards=1"), "{first}");
+        assert!(first.contains("image_tiles=3"), "{first}");
     }
 
     #[test]

@@ -65,6 +65,17 @@
 //!   **bitwise identical** to the single-service response, and a shard
 //!   death mid-trace loses or duplicates nothing (in-flight lines
 //!   requeue onto survivors; stale late responses are dropped).
+//! * **2D decomposition** — whole-matrix `Fft2d`/`FormImage` requests
+//!   stripe their *row phase* across shards like a 1D request, run the
+//!   corner turn coordinator-side through the same
+//!   [`crate::fft::tile::exchange_transpose`] the engine's fused path
+//!   uses (BFP-staged at `Bfp16` — the exchange is the real cross-shard
+//!   data motion), then re-stripe the *column phase*. Because the
+//!   per-line transforms are position-independent and the exchange is
+//!   the identical function, the sharded 2D response is bitwise the
+//!   single-service fused response at every shard count and both
+//!   precisions; with one shard alive the whole matrix delegates to the
+//!   engine's fused 2D tile directly.
 
 pub mod batcher;
 pub mod metrics;

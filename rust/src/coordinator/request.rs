@@ -33,6 +33,18 @@ pub enum RequestKind {
     /// ([`crate::fft::pipeline`]), batch-parallel through the
     /// `rangecomp*` artifacts.
     MatchedFilter(FilterSpec),
+    /// 2D FFT of the whole `(lines, n)` payload treated as a matrix:
+    /// row FFTs, a blocked corner-turn exchange, column FFTs. The
+    /// request is one matrix — it never coalesces with other requests.
+    Fft2d(Direction),
+    /// Whole-image formation: both 2D phases run the fused
+    /// matched-filter pipeline — `range` (length `n`) against every
+    /// row, `azimuth` (length `lines`) against every column of the
+    /// corner-turned matrix.
+    FormImage {
+        range: FilterSpec,
+        azimuth: FilterSpec,
+    },
 }
 
 impl RequestKind {
@@ -40,17 +52,27 @@ impl RequestKind {
         match self {
             RequestKind::Fft(d) => d.tag(),
             RequestKind::MatchedFilter(_) => "matched",
+            RequestKind::Fft2d(_) => "fft2d",
+            RequestKind::FormImage { .. } => "image",
         }
+    }
+
+    /// Whether this request is a whole-matrix 2D computation (one tile,
+    /// never coalesced, both matrix dimensions are transform lengths).
+    pub fn is_2d(&self) -> bool {
+        matches!(self, RequestKind::Fft2d(_) | RequestKind::FormImage { .. })
     }
 
     /// Shard-routing affinity ([`crate::coordinator::shard`]): plain FFT
     /// lines are position-independent and stripe round-robin (`None`),
     /// while matched-filter lines carry the registered filter id — all
     /// traffic through one registration must land on one shard so it
-    /// keeps coalescing into shared `rangecomp*` tiles there.
+    /// keeps coalescing into shared `rangecomp*` tiles there. 2D kinds
+    /// never reach line striping (the sharded front door decomposes
+    /// them into phase stripes itself), so they carry no affinity.
     pub fn shard_affinity(&self) -> Option<u64> {
         match self {
-            RequestKind::Fft(_) => None,
+            RequestKind::Fft(_) | RequestKind::Fft2d(_) | RequestKind::FormImage { .. } => None,
             RequestKind::MatchedFilter(spec) => Some(spec.id),
         }
     }
@@ -95,14 +117,40 @@ impl FftRequest {
         use anyhow::Context;
         validate_shape(self.n, self.lines, self.data.len())
             .with_context(|| format!("request {}", self.id))?;
-        if let RequestKind::MatchedFilter(spec) = &self.kind {
-            anyhow::ensure!(
-                spec.spectrum.len() == self.n,
-                "request {}: filter spectrum {} != n({})",
-                self.id,
-                spec.spectrum.len(),
-                self.n
-            );
+        match &self.kind {
+            RequestKind::MatchedFilter(spec) => {
+                anyhow::ensure!(
+                    spec.spectrum.len() == self.n,
+                    "request {}: filter spectrum {} != n({})",
+                    self.id,
+                    spec.spectrum.len(),
+                    self.n
+                );
+            }
+            kind if kind.is_2d() => {
+                // Both matrix dimensions are transform lengths in a 2D
+                // request: the column phase runs `lines`-point lines,
+                // so `lines` must sit in the serving range too.
+                validate_shape(self.lines, self.n, self.data.len())
+                    .with_context(|| format!("request {} (column phase)", self.id))?;
+                if let RequestKind::FormImage { range, azimuth } = &self.kind {
+                    anyhow::ensure!(
+                        range.spectrum.len() == self.n,
+                        "request {}: range filter {} != n({})",
+                        self.id,
+                        range.spectrum.len(),
+                        self.n
+                    );
+                    anyhow::ensure!(
+                        azimuth.spectrum.len() == self.lines,
+                        "request {}: azimuth filter {} != lines({})",
+                        self.id,
+                        azimuth.spectrum.len(),
+                        self.lines
+                    );
+                }
+            }
+            _ => {}
         }
         Ok(())
     }
@@ -190,6 +238,30 @@ mod tests {
         assert!(r.validate().is_err());
         assert_eq!(r.kind.tag(), "matched");
         assert_eq!(RequestKind::Fft(Direction::Inverse).tag(), "inv");
+    }
+
+    #[test]
+    fn validate_checks_2d_shapes_and_filters() {
+        // Fft2d: both dimensions must be in the serving range.
+        let (mut r, _rx) = req(256, 64, 256 * 64);
+        r.kind = RequestKind::Fft2d(Direction::Forward);
+        assert!(r.validate().is_ok());
+        assert_eq!(r.kind.tag(), "fft2d");
+        assert!(r.kind.is_2d());
+        let (mut bad, _rx2) = req(256, 1, 256);
+        bad.kind = RequestKind::Fft2d(Direction::Forward);
+        assert!(bad.validate().is_err(), "1-row matrix: column length 1 is below range");
+        // FormImage: filter lengths must match their own phase.
+        let mk_spec = |id, len| FilterSpec { id, spectrum: Arc::new(SplitComplex::zeros(len)) };
+        let (mut img, _rx3) = req(512, 64, 512 * 64);
+        img.kind =
+            RequestKind::FormImage { range: mk_spec(1, 512), azimuth: mk_spec(2, 64) };
+        assert!(img.validate().is_ok());
+        assert_eq!(img.kind.tag(), "image");
+        img.kind = RequestKind::FormImage { range: mk_spec(1, 512), azimuth: mk_spec(2, 63) };
+        assert!(img.validate().is_err(), "azimuth filter must match lines");
+        img.kind = RequestKind::FormImage { range: mk_spec(1, 100), azimuth: mk_spec(2, 64) };
+        assert!(img.validate().is_err(), "range filter must match n");
     }
 
     #[test]

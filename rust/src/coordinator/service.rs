@@ -355,6 +355,100 @@ impl FftService {
         resp.result.map_err(|e| anyhow::anyhow!(e))
     }
 
+    /// Async 2D-FFT submission: the `(lines, n)` payload is one matrix
+    /// (row FFTs -> blocked corner turn -> column FFTs), dispatched as
+    /// a single dedicated tile — it never coalesces with other traffic.
+    pub fn submit_fft2d_prec(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+        precision: Precision,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        // Both dimensions are transform lengths: the planner must
+        // support each (the request validates this too, but failing
+        // here keeps the error synchronous like submit_prec).
+        self.planner.plan(n, direction)?;
+        self.planner.plan(lines, direction)?;
+        self.submit_request(n, RequestKind::Fft2d(direction), precision, data, lines)
+    }
+
+    /// Blocking 2D FFT at the process-default precision.
+    pub fn fft2d(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<SplitComplex> {
+        self.fft2d_prec(n, direction, data, lines, bfp::select())
+    }
+
+    /// Blocking 2D FFT with an explicit precision policy (at `Bfp16`
+    /// the corner-turn exchange is staged through half-width planes).
+    pub fn fft2d_prec(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+        precision: Precision,
+    ) -> Result<SplitComplex> {
+        let (_, rx) = self.submit_fft2d_prec(n, direction, data, lines, precision)?;
+        let resp = rx.recv().context("service dropped the request")?;
+        resp.result.map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Async whole-image formation: the `(lines, n)` scene runs fused
+    /// range compression over every row (against `range`, length `n`),
+    /// a blocked corner turn, fused azimuth compression over every
+    /// column (against `azimuth`, length `lines`), and a turn back —
+    /// one pipelined pass, one dedicated tile. Both handles must carry
+    /// the same precision policy (the tile executes at exactly one).
+    pub fn submit_form_image(
+        &self,
+        range: &FilterHandle,
+        azimuth: &FilterHandle,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        anyhow::ensure!(
+            range.precision == azimuth.precision,
+            "range ({:?}) and azimuth ({:?}) filters disagree on precision",
+            range.precision,
+            azimuth.precision
+        );
+        anyhow::ensure!(
+            azimuth.n == lines,
+            "azimuth filter is registered for {} lines, scene has {lines}",
+            azimuth.n
+        );
+        self.submit_request(
+            range.n,
+            RequestKind::FormImage {
+                range: range.spec.clone(),
+                azimuth: azimuth.spec.clone(),
+            },
+            range.precision,
+            data,
+            lines,
+        )
+    }
+
+    /// Blocking whole-image formation: submit and wait.
+    pub fn form_image(
+        &self,
+        range: &FilterHandle,
+        azimuth: &FilterHandle,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<SplitComplex> {
+        let (_, rx) = self.submit_form_image(range, azimuth, data, lines)?;
+        let resp = rx.recv().context("service dropped the request")?;
+        resp.result.map_err(|e| anyhow::anyhow!(e))
+    }
+
     /// Force-flush all partial tiles (used by batch drivers before
     /// measuring, and by shutdown paths). Returns the post-drain metrics
     /// snapshot so callers get the final counters — including executor
@@ -570,6 +664,78 @@ mod tests {
         let m = svc.drain().unwrap();
         assert!(m.mf_tiles > 0);
         assert!(m.bfp_tiles > 0, "matched bfp16 tiles must count as bfp tiles");
+    }
+
+    #[test]
+    fn fft2d_roundtrip_through_service() {
+        let svc = native_service();
+        let mut rng = crate::util::rng::Rng::new(75);
+        let (rows, cols) = (64usize, 256usize);
+        let x = SplitComplex { re: rng.signal(rows * cols), im: rng.signal(rows * cols) };
+        let spec = svc.fft2d(cols, Direction::Forward, x.clone(), rows).unwrap();
+        let back = svc.fft2d(cols, Direction::Inverse, spec, rows).unwrap();
+        assert!(back.rel_l2_error(&x) < 1e-4, "{}", back.rel_l2_error(&x));
+        let m = svc.drain().unwrap();
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.image_tiles, 2, "each 2D request is one dedicated tile");
+        assert_eq!(m.lines_padded, 0, "2D tiles never pad");
+        assert!(m.image_nominal_flops > 0);
+        // Unsupported column length fails synchronously.
+        assert!(svc
+            .fft2d(256, Direction::Forward, SplitComplex::zeros(256), 1)
+            .is_err());
+    }
+
+    #[test]
+    fn form_image_is_bitwise_two_pass_composition() {
+        // The one-request FormImage path must equal matched-filter rows
+        // -> corner turn -> matched-filter columns -> corner turn back,
+        // composed through the same service (F32: the blocked exchange
+        // is pure movement, so this is bitwise).
+        use crate::fft::tile::{transpose_into, FusedStore};
+        let svc = native_service();
+        let mut rng = crate::util::rng::Rng::new(76);
+        let (rows, cols) = (64usize, 512usize);
+        let x = SplitComplex { re: rng.signal(rows * cols), im: rng.signal(rows * cols) };
+        let hr = SplitComplex { re: rng.signal(cols), im: rng.signal(cols) };
+        let ha = SplitComplex { re: rng.signal(rows), im: rng.signal(rows) };
+        // Pin F32: at Bfp16 the one-pass exchange is BFP-staged while
+        // the composed reference turns at f32, so only F32 is bitwise.
+        let range = svc.register_filter_prec(cols, hr, Precision::F32).unwrap();
+        let azimuth = svc.register_filter_prec(rows, ha, Precision::F32).unwrap();
+        let got = svc.form_image(&range, &azimuth, x.clone(), rows).unwrap();
+
+        let rowdone = svc.matched_filter(&range, x, rows).unwrap();
+        let mut turned = SplitComplex::zeros(rows * cols);
+        transpose_into(
+            &rowdone.re,
+            &rowdone.im,
+            &mut turned.re,
+            &mut turned.im,
+            rows,
+            cols,
+            FusedStore::Plain,
+        );
+        let coldone = svc.matched_filter(&azimuth, turned, cols).unwrap();
+        let mut want = SplitComplex::zeros(rows * cols);
+        transpose_into(
+            &coldone.re,
+            &coldone.im,
+            &mut want.re,
+            &mut want.im,
+            cols,
+            rows,
+            FusedStore::Plain,
+        );
+        assert_eq!(got.re, want.re, "FormImage must be bitwise the composed two-pass");
+        assert_eq!(got.im, want.im);
+        let m = svc.drain().unwrap();
+        assert_eq!(m.image_tiles, 1);
+        assert_eq!(m.failures, 0);
+        // Mismatched azimuth registration is rejected up front.
+        assert!(svc
+            .submit_form_image(&range, &range, SplitComplex::zeros(rows * cols), rows)
+            .is_err());
     }
 
     #[test]

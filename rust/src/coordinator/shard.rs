@@ -25,6 +25,18 @@
 //!   handle resolves to the next survivor.
 //! * **Range compression** (engine-direct) — striped like plain FFT,
 //!   executed on all shards concurrently.
+//! * **2D requests** (`Fft2d` / `FormImage`) — decomposed into phase
+//!   stripes: the row phase stripes across the alive shards as 1D
+//!   sub-requests, the corner turn runs coordinator-side through the
+//!   *same* [`crate::fft::tile::exchange_transpose`] the engine's 2D
+//!   path uses (BFP-staged at `Bfp16` — the cross-shard exchange is
+//!   where the half-width bytes actually pay), then the column phase
+//!   re-stripes and a second exchange restores row-major. Per-line
+//!   transforms are position-independent and both paths turn the same
+//!   bits through the same function, so the sharded answer is bitwise
+//!   the single-service answer at every shard count, at both
+//!   precisions. With one alive shard the whole request is delegated
+//!   to that shard's own fused 2D path instead (no coordinator copy).
 //!
 //! Reassembly invariant: responses are scattered back by parent line
 //! index into a per-request accumulator that replies exactly once. A
@@ -35,9 +47,10 @@
 //! never twice (`tests/shard_integration.rs` enforces this).
 
 use super::metrics::MetricsSnapshot;
-use super::request::{FftResponse, RequestId, RequestKind};
+use super::request::{FftResponse, FilterSpec, RequestId, RequestKind};
 use super::service::{FftService, FilterHandle, ServiceConfig};
-use crate::fft::bfp::{self, Precision};
+use crate::fft::bfp::{self, BfpVec, Precision};
+use crate::fft::tile;
 use crate::fft::Direction;
 use crate::runtime::Backend;
 use crate::util::complex::SplitComplex;
@@ -258,6 +271,44 @@ impl ShardFilterHandle {
             }
         }
         anyhow::bail!("no alive shard holds this filter registration")
+    }
+
+    /// This handle's registration on shard slot `i`. The decomposed 2D
+    /// phases route each stripe through its target shard's *own*
+    /// registration, so the stripe coalesces with that shard's 1D
+    /// matched-filter traffic.
+    fn spec_on(&self, i: usize) -> Result<FilterSpec> {
+        self.per_shard
+            .get(i)
+            .and_then(|h| h.as_ref())
+            .map(|h| h.spec().clone())
+            .with_context(|| format!("no filter registration on shard {i}"))
+    }
+
+    /// Per-slot registration specs (None where the slot had no live
+    /// shard at registration time — such slots are dead forever, so an
+    /// alive slot always has `Some`).
+    fn specs_by_slot(&self) -> Vec<Option<FilterSpec>> {
+        self.per_shard.iter().map(|h| h.as_ref().map(|h| h.spec().clone())).collect()
+    }
+}
+
+/// Per-slot request kinds of one decomposed 2D phase: plain FFT lines
+/// are uniform across shards; matched-filter lines use each shard's
+/// own filter registration ([`ShardFilterHandle::spec_on`]).
+enum PhaseKind {
+    Uniform(RequestKind),
+    PerShard(Vec<Option<FilterSpec>>),
+}
+
+impl PhaseKind {
+    fn for_slot(&self, slot: usize) -> RequestKind {
+        match self {
+            PhaseKind::Uniform(k) => k.clone(),
+            PhaseKind::PerShard(specs) => RequestKind::MatchedFilter(
+                specs[slot].clone().expect("alive shard without a filter registration"),
+            ),
+        }
     }
 }
 
@@ -636,6 +687,316 @@ impl ShardedFftService {
         Ok(out)
     }
 
+    /// One striped 1D phase of a decomposed 2D request: `lines`
+    /// length-`n` lines round-robined over the alive shards and
+    /// reassembled by line index (exactly the plain-FFT striping rule).
+    /// Blocks until every line is home; returns the reassembled phase
+    /// output plus the lane-max queue/exec times.
+    fn run_phase_striped(
+        &self,
+        n: usize,
+        lines: usize,
+        data: SplitComplex,
+        precision: Precision,
+        kind: &PhaseKind,
+    ) -> Result<(SplitComplex, f64, f64)> {
+        let alive = self.alive();
+        anyhow::ensure!(!alive.is_empty(), "all shards dead");
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        let parent = Parent::new(id, n, lines, tx);
+        if alive.len() == 1 {
+            self.dispatch(SubEntry {
+                parent,
+                line_map: (0..lines).collect(),
+                shard: alive[0],
+                n,
+                kind: kind.for_slot(alive[0]),
+                precision,
+                data,
+                requeued: false,
+            });
+        } else {
+            for (lane, line_map) in stripe_lines(lines, alive.len()).into_iter().enumerate() {
+                if line_map.is_empty() {
+                    continue;
+                }
+                let payload = gather_lines(&data, n, &line_map);
+                self.dispatch(SubEntry {
+                    parent: parent.clone(),
+                    line_map,
+                    shard: alive[lane],
+                    n,
+                    kind: kind.for_slot(alive[lane]),
+                    precision,
+                    data: payload,
+                    requeued: false,
+                });
+            }
+        }
+        let resp = rx.recv().context("sharded service dropped the 2D phase")?;
+        let out = resp.result.map_err(|e| anyhow::anyhow!(e))?;
+        Ok((out, resp.queue_secs, resp.exec_secs))
+    }
+
+    /// Orchestrate one decomposed 2D request (runs on its own thread):
+    /// row-phase stripes -> coordinator-side corner turn -> column-phase
+    /// stripes -> turn back -> one client response. The exchanges call
+    /// the same [`tile::exchange_transpose`] as the engine's fused 2D
+    /// path on the same bits, which is what keeps the sharded answer
+    /// bitwise the single-service answer at both precisions.
+    #[allow(clippy::too_many_arguments)]
+    fn run_2d_decomposed(
+        &self,
+        id: RequestId,
+        rows: usize,
+        cols: usize,
+        data: SplitComplex,
+        precision: Precision,
+        row_kind: PhaseKind,
+        col_kind: PhaseKind,
+        reply: mpsc::Sender<FftResponse>,
+    ) {
+        let work = || -> Result<(SplitComplex, f64, f64)> {
+            let (rowed, q1, e1) =
+                self.run_phase_striped(cols, rows, data, precision, &row_kind)?;
+            let rowbuf = rows.max(cols);
+            let (mut bre, mut bim) = (BfpVec::new(), BfpVec::new());
+            let (mut rre, mut rim) = (vec![0.0f32; rowbuf], vec![0.0f32; rowbuf]);
+            // Exchange: (rows x cols) -> (cols x rows), BFP-staged at
+            // Bfp16 — this is the actual cross-shard corner turn.
+            let mut turned = SplitComplex::zeros(rows * cols);
+            tile::exchange_transpose(
+                &rowed.re,
+                &rowed.im,
+                &mut turned.re,
+                &mut turned.im,
+                rows,
+                cols,
+                precision,
+                &mut bre,
+                &mut bim,
+                &mut rre,
+                &mut rim,
+            );
+            drop(rowed);
+            let (coled, q2, e2) =
+                self.run_phase_striped(rows, cols, turned, precision, &col_kind)?;
+            // Exchange back: (cols x rows) -> (rows x cols).
+            let mut out = SplitComplex::zeros(rows * cols);
+            tile::exchange_transpose(
+                &coled.re,
+                &coled.im,
+                &mut out.re,
+                &mut out.im,
+                cols,
+                rows,
+                precision,
+                &mut bre,
+                &mut bim,
+                &mut rre,
+                &mut rim,
+            );
+            Ok((out, q1 + q2, e1 + e2))
+        };
+        let (result, queue_secs, exec_secs) = match work() {
+            Ok((out, q, e)) => (Ok(out), q, e),
+            Err(err) => (Err(format!("{err:#}")), 0.0, 0.0),
+        };
+        let _ = reply.send(FftResponse {
+            id,
+            result,
+            queue_secs,
+            exec_secs,
+            completed_at: std::time::Instant::now(),
+        });
+    }
+
+    /// Front-door shape rules shared by both 2D kinds: the payload is a
+    /// `(lines, n)` matrix and *both* dimensions are transform lengths.
+    fn validate_2d(&self, n: usize, data: &SplitComplex, lines: usize) -> Result<()> {
+        self.validate_shape(n, data, lines)?;
+        super::request::validate_shape(lines, n, data.len()).context("2D request (column phase)")
+    }
+
+    /// Async 2D FFT submission at the process-default precision.
+    pub fn submit_fft2d(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.submit_fft2d_prec(n, direction, data, lines, bfp::select())
+    }
+
+    /// Async 2D FFT of the whole `(lines, n)` matrix with an explicit
+    /// precision policy — see the module docs' 2D routing rule. The
+    /// response is bitwise the single-service [`FftService::fft2d_prec`]
+    /// answer at every shard count.
+    pub fn submit_fft2d_prec(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+        precision: Precision,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.validate_2d(n, &data, lines)?;
+        let alive = self.alive();
+        anyhow::ensure!(!alive.is_empty(), "all shards dead");
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        if alive.len() == 1 {
+            // One alive shard: nothing to exchange across — delegate
+            // the whole matrix to its fused engine-side 2D path.
+            let parent = Parent::new(id, n, lines, tx);
+            self.dispatch(SubEntry {
+                parent,
+                line_map: (0..lines).collect(),
+                shard: alive[0],
+                n,
+                kind: RequestKind::Fft2d(direction),
+                precision,
+                data,
+                requeued: false,
+            });
+            return Ok((id, rx));
+        }
+        let svc = self.clone();
+        let kind = RequestKind::Fft(direction);
+        std::thread::Builder::new()
+            .name("applefft-shard-2d".to_string())
+            .spawn(move || {
+                svc.run_2d_decomposed(
+                    id,
+                    lines,
+                    n,
+                    data,
+                    precision,
+                    PhaseKind::Uniform(kind.clone()),
+                    PhaseKind::Uniform(kind),
+                    tx,
+                )
+            })
+            .context("spawning 2D orchestrator thread")?;
+        Ok((id, rx))
+    }
+
+    /// Blocking 2D FFT convenience: submit and wait.
+    pub fn fft2d(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<SplitComplex> {
+        self.fft2d_prec(n, direction, data, lines, bfp::select())
+    }
+
+    /// Blocking 2D FFT convenience with the precision pinned.
+    pub fn fft2d_prec(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+        precision: Precision,
+    ) -> Result<SplitComplex> {
+        let (_, rx) = self.submit_fft2d_prec(n, direction, data, lines, precision)?;
+        let resp = rx.recv().context("sharded service dropped the request")?;
+        resp.result.map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Async whole-image formation: range compression stripes across
+    /// the shards, the corner turn is the coordinator-side exchange,
+    /// azimuth compression re-stripes. Both handles must be registered
+    /// on this service at the same precision; `azimuth` must be length
+    /// `lines`. Bitwise the single-service
+    /// [`FftService::form_image`] answer at every shard count.
+    pub fn submit_form_image(
+        &self,
+        range: &ShardFilterHandle,
+        azimuth: &ShardFilterHandle,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        anyhow::ensure!(
+            range.precision == azimuth.precision,
+            "range/azimuth filter precisions differ ({:?} vs {:?})",
+            range.precision,
+            azimuth.precision
+        );
+        anyhow::ensure!(
+            azimuth.n == lines,
+            "azimuth filter length {} != lines({lines})",
+            azimuth.n
+        );
+        let count = self.shard_count();
+        anyhow::ensure!(
+            range.per_shard.len() == count && azimuth.per_shard.len() == count,
+            "filter handle from a different service"
+        );
+        let n = range.n;
+        self.validate_2d(n, &data, lines)?;
+        let alive = self.alive();
+        anyhow::ensure!(!alive.is_empty(), "all shards dead");
+        let precision = range.precision;
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        if alive.len() == 1 {
+            let slot = alive[0];
+            let kind = RequestKind::FormImage {
+                range: range.spec_on(slot)?,
+                azimuth: azimuth.spec_on(slot)?,
+            };
+            let parent = Parent::new(id, n, lines, tx);
+            self.dispatch(SubEntry {
+                parent,
+                line_map: (0..lines).collect(),
+                shard: slot,
+                n,
+                kind,
+                precision,
+                data,
+                requeued: false,
+            });
+            return Ok((id, rx));
+        }
+        let row_specs = range.specs_by_slot();
+        let col_specs = azimuth.specs_by_slot();
+        let svc = self.clone();
+        std::thread::Builder::new()
+            .name("applefft-shard-2d".to_string())
+            .spawn(move || {
+                svc.run_2d_decomposed(
+                    id,
+                    lines,
+                    n,
+                    data,
+                    precision,
+                    PhaseKind::PerShard(row_specs),
+                    PhaseKind::PerShard(col_specs),
+                    tx,
+                )
+            })
+            .context("spawning 2D orchestrator thread")?;
+        Ok((id, rx))
+    }
+
+    /// Blocking whole-image formation: submit and wait.
+    pub fn form_image(
+        &self,
+        range: &ShardFilterHandle,
+        azimuth: &ShardFilterHandle,
+        data: SplitComplex,
+        lines: usize,
+    ) -> Result<SplitComplex> {
+        let (_, rx) = self.submit_form_image(range, azimuth, data, lines)?;
+        let resp = rx.recv().context("sharded service dropped the request")?;
+        resp.result.map_err(|e| anyhow::anyhow!(e))
+    }
+
     /// Force-flush every alive shard's partial tiles; returns the merged
     /// post-drain snapshot.
     pub fn drain(&self) -> Result<MetricsSnapshot> {
@@ -849,6 +1210,94 @@ mod tests {
         // Killing the last shard leaves a clean, explicit failure.
         assert!(sharded.kill_shard(1));
         assert!(sharded.fft(n, Direction::Forward, x, lines).is_err());
+    }
+
+    #[test]
+    fn sharded_fft2d_is_bitwise_single_service() {
+        let single = FftService::start(ServiceConfig {
+            backend: Backend::Native,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            warm: false,
+            shards: 1,
+        })
+        .unwrap();
+        let sharded = ShardedFftService::start_native(3).unwrap();
+        let mut rng = Rng::new(0x2d10);
+        let (rows, cols) = (64usize, 256usize);
+        let x = SplitComplex { re: rng.signal(rows * cols), im: rng.signal(rows * cols) };
+        for precision in [Precision::F32, Precision::Bfp16] {
+            let want = single
+                .fft2d_prec(cols, Direction::Forward, x.clone(), rows, precision)
+                .unwrap();
+            let got = sharded
+                .fft2d_prec(cols, Direction::Forward, x.clone(), rows, precision)
+                .unwrap();
+            assert_eq!(got.re, want.re, "{precision:?} re");
+            assert_eq!(got.im, want.im, "{precision:?} im");
+        }
+        // Both dimensions are validated up front, synchronously.
+        assert!(sharded
+            .fft2d(256, Direction::Forward, SplitComplex::zeros(256), 1)
+            .is_err(), "1-row matrix: column length below serving range");
+    }
+
+    #[test]
+    fn sharded_form_image_is_bitwise_single_service() {
+        let single = FftService::start(ServiceConfig {
+            backend: Backend::Native,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            warm: false,
+            shards: 1,
+        })
+        .unwrap();
+        let sharded = ShardedFftService::start_native(2).unwrap();
+        let mut rng = Rng::new(0x2d11);
+        let (rows, cols) = (64usize, 256usize);
+        let x = SplitComplex { re: rng.signal(rows * cols), im: rng.signal(rows * cols) };
+        let hr = SplitComplex { re: rng.signal(cols), im: rng.signal(cols) };
+        let ha = SplitComplex { re: rng.signal(rows), im: rng.signal(rows) };
+        for precision in [Precision::F32, Precision::Bfp16] {
+            let sr = single.register_filter_prec(cols, hr.clone(), precision).unwrap();
+            let sa = single.register_filter_prec(rows, ha.clone(), precision).unwrap();
+            let want = single.form_image(&sr, &sa, x.clone(), rows).unwrap();
+            let dr = sharded.register_filter_prec(cols, hr.clone(), precision).unwrap();
+            let da = sharded.register_filter_prec(rows, ha.clone(), precision).unwrap();
+            let got = sharded.form_image(&dr, &da, x.clone(), rows).unwrap();
+            assert_eq!(got.re, want.re, "{precision:?} re");
+            assert_eq!(got.im, want.im, "{precision:?} im");
+        }
+        // Mismatched azimuth length / precisions fail synchronously.
+        let dr = sharded.register_filter_prec(cols, hr.clone(), Precision::F32).unwrap();
+        assert!(sharded.submit_form_image(&dr, &dr, x.clone(), rows).is_err());
+        let db = sharded.register_filter_prec(rows, ha.clone(), Precision::Bfp16).unwrap();
+        assert!(sharded.submit_form_image(&dr, &db, x.clone(), rows).is_err());
+    }
+
+    #[test]
+    fn single_shard_fft2d_delegates_to_engine_2d() {
+        // alive == 1: the whole matrix goes to the one shard's fused 2D
+        // path (its engine counts an image tile); still bitwise the
+        // single-service answer.
+        let single = FftService::start(ServiceConfig {
+            backend: Backend::Native,
+            max_wait: Duration::from_millis(1),
+            workers: 2,
+            warm: false,
+            shards: 1,
+        })
+        .unwrap();
+        let sharded = ShardedFftService::start_native(1).unwrap();
+        let mut rng = Rng::new(0x2d12);
+        let (rows, cols) = (64usize, 256usize);
+        let x = SplitComplex { re: rng.signal(rows * cols), im: rng.signal(rows * cols) };
+        let want = single.fft2d(cols, Direction::Forward, x.clone(), rows).unwrap();
+        let got = sharded.fft2d(cols, Direction::Forward, x.clone(), rows).unwrap();
+        assert_eq!(got.re, want.re);
+        assert_eq!(got.im, want.im);
+        let m = sharded.drain().unwrap();
+        assert_eq!(m.image_tiles, 1, "delegated 2D request ran as one engine tile");
     }
 
     #[test]

@@ -49,6 +49,13 @@ fn f32_replay(
             ex.execute_pipeline_auto_into(&mut d, batch, h)?;
             Ok(d)
         }
+        // 2D tiles are excluded from sampling (run_tile never clones a
+        // reference input for them): their accuracy story is pinned by
+        // the dedicated image-PSNR gates in the integration tests, and
+        // a whole-matrix f32 replay would double the tile's cost.
+        TileKind::Fft2d(..) | TileKind::FormImage { .. } => {
+            anyhow::bail!("2D tiles are not SNR-sampled")
+        }
     }
 }
 
@@ -57,7 +64,8 @@ pub fn run_tile(engine: &Engine, metrics: &Metrics, mut tile: Tile) {
     // Decide SNR sampling before execution: the matched-filter path
     // consumes the tile's data, so the reference input must be cloned
     // up front (only on sampled tiles — the hot path copies nothing).
-    let sampled_input = if tile.precision == Precision::Bfp16 {
+    let samplable = !matches!(tile.kind, TileKind::Fft2d(..) | TileKind::FormImage { .. });
+    let sampled_input = if tile.precision == Precision::Bfp16 && samplable {
         let nth = metrics.bfp_tiles.fetch_add(1, Ordering::Relaxed);
         (nth % SNR_SAMPLE_EVERY == 0).then(|| tile.data.clone())
     } else {
@@ -75,6 +83,17 @@ pub fn run_tile(engine: &Engine, metrics: &Metrics, mut tile: Tile) {
         TileKind::MatchedFilter(h) => {
             let data = std::mem::take(&mut tile.data);
             engine.range_compress_shared_prec(data, h, tile.n, tile.batch, tile.precision)
+        }
+        // Whole-matrix 2D tiles: batch is the row count (never the
+        // artifact batch tile), the data moves into the job, and for
+        // FormImage both filter spectra ride their Arcs.
+        TileKind::Fft2d(dir) => {
+            let data = std::mem::take(&mut tile.data);
+            engine.fft2d_prec(data, tile.n, tile.batch, *dir, tile.precision)
+        }
+        TileKind::FormImage { range, azimuth } => {
+            let data = std::mem::take(&mut tile.data);
+            engine.form_image_shared_prec(data, range, azimuth, tile.n, tile.batch, tile.precision)
         }
     };
     let exec_secs = t0.elapsed().as_secs_f64();
@@ -96,10 +115,20 @@ pub fn run_tile(engine: &Engine, metrics: &Metrics, mut tile: Tile) {
                 TileKind::MatchedFilter(_) => {
                     crate::util::pipeline_flops(tile.n) * tile.batch as f64
                 }
+                // 2D tiles: batch = rows, n = cols; both phases count
+                // (the corner turns are pure movement and count zero).
+                TileKind::Fft2d(_) => crate::util::fft2d_flops(tile.batch, tile.n),
+                TileKind::FormImage { .. } => {
+                    crate::util::formimage_flops(tile.batch, tile.n)
+                }
             };
             if matches!(tile.kind, TileKind::MatchedFilter(_)) {
                 metrics.mf_tiles.fetch_add(1, Ordering::Relaxed);
                 metrics.mf_flops.fetch_add(tile_flops as u64, Ordering::Relaxed);
+            }
+            if matches!(tile.kind, TileKind::Fft2d(_) | TileKind::FormImage { .. }) {
+                metrics.image_tiles.fetch_add(1, Ordering::Relaxed);
+                metrics.image_flops.fetch_add(tile_flops as u64, Ordering::Relaxed);
             }
             metrics.flops.fetch_add(tile_flops as u64, Ordering::Relaxed);
             // Sampled Bfp16 tiles: replay the identical tile at f32 on
@@ -213,6 +242,8 @@ mod tests {
         let artifact = match &kind {
             TileKind::Fft(d) => format!("fft{n}_{}", d.tag()),
             TileKind::MatchedFilter(_) => format!("rangecomp{n}"),
+            TileKind::Fft2d(_) => format!("fft2d{n}"),
+            TileKind::FormImage { .. } => format!("formimage{n}"),
         };
         let tile = Tile {
             artifact,
@@ -318,6 +349,39 @@ mod tests {
         assert!(rx2.recv().unwrap().result.is_ok());
         assert_eq!(metrics.bfp_tiles.load(Ordering::Relaxed), 1);
         assert_eq!(metrics.snapshot(1_000).bfp_snr_samples, 1);
+    }
+
+    #[test]
+    fn fft2d_tile_executes_and_counts_image_metrics() {
+        use std::sync::Arc as StdArc;
+        let engine = Engine::start(Backend::Native).unwrap();
+        let metrics = Metrics::default();
+        // 2D tiles carry batch == lines (the row count), no padding.
+        let (rows, cols) = (64usize, 256usize);
+        let (tile, rx, input) =
+            tile_kind_for(cols, rows, rows, TileKind::Fft2d(Direction::Forward));
+        run_tile(&engine, &metrics, tile);
+        let out = rx.recv().unwrap().result.unwrap();
+        assert_eq!(out.len(), rows * cols);
+        // Row-phase check alone distinguishes 2D from 1D: a 1D batch
+        // would equal dft rows exactly; 2D must not.
+        let rows_only = crate::fft::dft::dft_batch(&input, cols, rows, Direction::Forward);
+        assert!(out.rel_l2_error(&rows_only) > 1e-3, "column phase must have run");
+        assert_eq!(metrics.image_tiles.load(Ordering::Relaxed), 1);
+        let want_flops = crate::util::fft2d_flops(rows, cols) as u64;
+        assert_eq!(metrics.image_flops.load(Ordering::Relaxed), want_flops);
+        assert_eq!(metrics.flops.load(Ordering::Relaxed), want_flops);
+
+        // FormImage with identity filters: both pipelines pass the
+        // matrix through, so the tile returns the input (and counts the
+        // fused-pipeline flops for both phases).
+        let ones = |len| StdArc::new(SplitComplex { re: vec![1.0; len], im: vec![0.0; len] });
+        let kind = TileKind::FormImage { range: ones(cols), azimuth: ones(rows) };
+        let (tile, rx2, input2) = tile_kind_for(cols, rows, rows, kind);
+        run_tile(&engine, &metrics, tile);
+        let out2 = rx2.recv().unwrap().result.unwrap();
+        assert!(out2.rel_l2_error(&input2) < 1e-4);
+        assert_eq!(metrics.image_tiles.load(Ordering::Relaxed), 2);
     }
 
     #[test]

@@ -67,6 +67,13 @@ pub struct Workspace {
     /// only full-precision staging that path owns.
     pub(crate) rre: Vec<f32>,
     pub(crate) rim: Vec<f32>,
+    /// 2D corner-turn staging (the exchange between the row and column
+    /// phases of an `Fft2d`/`FormImage` pass): holds the `cols x rows`
+    /// turned matrix. At `Bfp16` the turn additionally round-trips
+    /// through `bstage_*`, so the bytes crossing the corner turn are
+    /// half-width.
+    pub(crate) t2re: Vec<f32>,
+    pub(crate) t2im: Vec<f32>,
     /// Rader/Bluestein convolution line (length >= the plan's `M`):
     /// the zero-padded gather/chirp buffer the `M`-point convolution
     /// FFTs run in place on.
@@ -116,6 +123,24 @@ impl Workspace {
             grew = true;
         }
         if grew {
+            self.grows += 1;
+        }
+    }
+
+    /// Make sure the 2D corner-turn staging holds `elems` floats per
+    /// plane and the f32 row buffers `rowbuf_len` floats (the `Bfp16`
+    /// exchange dequantizes through them). Growth counts into
+    /// [`grow_events`](Self::grow_events) like every other plane, so
+    /// the steady-state tests cover the 2D staging too.
+    pub(crate) fn ensure_2d(&mut self, elems: usize, rowbuf_len: usize) {
+        if self.t2re.len() < elems {
+            self.t2re.resize(elems, 0.0);
+            self.t2im.resize(elems, 0.0);
+            self.grows += 1;
+        }
+        if self.rre.len() < rowbuf_len {
+            self.rre.resize(rowbuf_len, 0.0);
+            self.rim.resize(rowbuf_len, 0.0);
             self.grows += 1;
         }
     }

@@ -1,0 +1,489 @@
+//! Row-column 2D FFT and whole-image formation: the engine-side
+//! realisation of `Fft2d` / `FormImage` requests.
+//!
+//! A 2D transform of a `rows x cols` row-major matrix is three passes:
+//!
+//! 1. **row phase** — `rows` independent length-`cols` 1D transforms,
+//!    dispatched through a regular [`BatchExecutor`] (so the row phase
+//!    inherits the serial/par/auto batch paths, the tuned schedules,
+//!    and the per-precision plans unchanged);
+//! 2. **exchange** — one cache-blocked corner turn through
+//!    [`super::tile::exchange_transpose`] into pooled [`Workspace`]
+//!    staging planes, held in `BfpVec` at `Precision::Bfp16` so the
+//!    bytes crossing the turn are half-width;
+//! 3. **column phase** — `cols` independent length-`rows` transforms on
+//!    the turned matrix, then a second exchange back to row-major.
+//!
+//! [`Fft2dExecutor::form_image_into`] is the same skeleton with both
+//! phases upgraded to the fused spectral pipeline: the row phase is
+//! range compression (forward FFT with the range matched filter fused
+//! into the last stage, then the fused inverse) and the column phase is
+//! azimuth compression with the azimuth filter fused the same way —
+//! whole-scene SAR formation as one pipelined pass, no host-side
+//! multiply or transpose anywhere.
+//!
+//! Per-line transforms are position-independent, and both the engine's
+//! single-service path and the sharded coordinator run the exchange
+//! through the same tile-layer function on the same bits — which is why
+//! a sharded `FormImage` is bitwise identical to the single service at
+//! every shard count, at both precisions.
+
+use super::bfp::Precision;
+use super::exec::{BatchExecutor, Workspace, WorkspacePool};
+use super::tile::{bfp_row_stride, exchange_transpose};
+use super::Direction;
+use crate::util::complex::SplitComplex;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// Which batch path each 1D phase takes — mirrors the serial /
+/// batch-parallel / policy trio on [`BatchExecutor`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode2d {
+    Serial,
+    Par,
+    Auto,
+}
+
+/// A 2D plan: two 1D executors (row phase `n = cols`, column phase
+/// `n = rows`) joined by the blocked corner-turn exchange, with the
+/// staging planes pooled in [`Workspace`]s owned by this executor.
+///
+/// The pool is private to one `(rows, cols, precision)` shape, so after
+/// warmup the staging planes are reused verbatim — the steady state is
+/// allocation-free, exactly like the 1D batch paths.
+#[derive(Debug)]
+pub struct Fft2dExecutor {
+    rows: usize,
+    cols: usize,
+    precision: Precision,
+    row_exec: Arc<BatchExecutor>,
+    col_exec: Arc<BatchExecutor>,
+    pool: WorkspacePool,
+}
+
+/// The column phase's work, selected per request kind.
+enum ColPhase<'a> {
+    Fft(Direction),
+    Pipeline(&'a SplitComplex),
+}
+
+impl Fft2dExecutor {
+    /// Join two 1D executors into a 2D plan. `row_exec` must transform
+    /// length-`cols` lines and `col_exec` length-`rows` lines, both at
+    /// the same exchange precision (which the corner turns also use).
+    pub fn new(
+        row_exec: Arc<BatchExecutor>,
+        col_exec: Arc<BatchExecutor>,
+    ) -> Result<Fft2dExecutor> {
+        let cols = row_exec.plan().n;
+        let rows = col_exec.plan().n;
+        let precision = row_exec.precision();
+        ensure!(
+            col_exec.precision() == precision,
+            "row/column executors disagree on precision ({:?} vs {:?})",
+            precision,
+            col_exec.precision()
+        );
+        Ok(Fft2dExecutor { rows, cols, precision, row_exec, col_exec, pool: WorkspacePool::new() })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Row-phase executor (shared with the 1D serving path).
+    pub fn row_exec(&self) -> &Arc<BatchExecutor> {
+        &self.row_exec
+    }
+
+    /// Column-phase executor (shared with the 1D serving path).
+    pub fn col_exec(&self) -> &Arc<BatchExecutor> {
+        &self.col_exec
+    }
+
+    /// Staging-pool stats `(created, available)` for steady-state tests.
+    pub fn pool_stats(&self) -> (usize, usize) {
+        (self.pool.created(), self.pool.available())
+    }
+
+    /// Total staging-plane (re)allocations across parked workspaces.
+    pub fn pool_grow_events(&self) -> usize {
+        self.pool.grow_events()
+    }
+
+    /// In-place 2D FFT of `data` (`rows x cols` row-major), policy
+    /// batch path. Output is the full 2D DFT in the same layout.
+    pub fn execute_2d_into(&self, data: &mut SplitComplex, dir: Direction) -> Result<()> {
+        self.run(data, dir, None, Mode2d::Auto)
+    }
+
+    /// Serial-phase variant of [`Self::execute_2d_into`].
+    pub fn execute_2d_serial_into(&self, data: &mut SplitComplex, dir: Direction) -> Result<()> {
+        self.run(data, dir, None, Mode2d::Serial)
+    }
+
+    /// Batch-parallel variant of [`Self::execute_2d_into`].
+    pub fn execute_2d_par_into(&self, data: &mut SplitComplex, dir: Direction) -> Result<()> {
+        self.run(data, dir, None, Mode2d::Par)
+    }
+
+    /// Out-of-place 2D FFT convenience (tests and benches).
+    pub fn execute_2d(&self, input: &SplitComplex, dir: Direction) -> Result<SplitComplex> {
+        let mut data = input.clone();
+        self.execute_2d_into(&mut data, dir)?;
+        Ok(data)
+    }
+
+    /// In-place whole-image formation: `data` is the `rows x cols`
+    /// (azimuth-lines x range-samples) echo matrix; the row phase runs
+    /// the fused matched-filter pipeline against `range_filter`
+    /// (length `cols`), the column phase against `azimuth_filter`
+    /// (length `rows`). Output is the focused image, same layout.
+    pub fn form_image_into(
+        &self,
+        data: &mut SplitComplex,
+        range_filter: &SplitComplex,
+        azimuth_filter: &SplitComplex,
+    ) -> Result<()> {
+        self.run(data, Direction::Forward, Some((range_filter, azimuth_filter)), Mode2d::Auto)
+    }
+
+    /// Out-of-place image formation convenience.
+    pub fn form_image(
+        &self,
+        input: &SplitComplex,
+        range_filter: &SplitComplex,
+        azimuth_filter: &SplitComplex,
+    ) -> Result<SplitComplex> {
+        let mut data = input.clone();
+        self.form_image_into(&mut data, range_filter, azimuth_filter)?;
+        Ok(data)
+    }
+
+    fn run(
+        &self,
+        data: &mut SplitComplex,
+        dir: Direction,
+        filters: Option<(&SplitComplex, &SplitComplex)>,
+        mode: Mode2d,
+    ) -> Result<()> {
+        let (rows, cols) = (self.rows, self.cols);
+        ensure!(
+            data.len() == rows * cols,
+            "2D input length {} != rows({rows}) * cols({cols})",
+            data.len()
+        );
+        if let Some((rf, af)) = filters {
+            ensure!(rf.len() == cols, "range filter length {} != cols {cols}", rf.len());
+            ensure!(af.len() == rows, "azimuth filter length {} != rows {rows}", af.len());
+        }
+
+        // Row phase: rows x length-cols lines, in place.
+        match filters {
+            Some((rf, _)) => self.phase_pipeline(&self.row_exec, data, rows, rf, mode)?,
+            None => self.phase_fft(&self.row_exec, data, rows, dir, mode)?,
+        }
+
+        // Acquire the corner-turn staging and size it once; the pool is
+        // shape-private, so after warmup these are exact-size reuses.
+        let elems = rows * cols;
+        let rowbuf = rows.max(cols);
+        let mut ws = self.pool.acquire();
+        ws.ensure_2d(elems, rowbuf);
+        if self.precision == Precision::Bfp16 {
+            let planes = (cols * bfp_row_stride(rows)).max(rows * bfp_row_stride(cols));
+            ws.ensure_bfp(planes, 0, rowbuf);
+        }
+        // Move the staging planes out so the turned matrix can be fed
+        // back through the column executor as a SplitComplex; the Vecs
+        // go back into the workspace afterwards (plain pointer moves).
+        let mut stage = SplitComplex {
+            re: std::mem::take(&mut ws.t2re),
+            im: std::mem::take(&mut ws.t2im),
+        };
+
+        let result = self.run_turned(data, &mut stage, &mut ws, dir, filters, mode);
+
+        ws.t2re = stage.re;
+        ws.t2im = stage.im;
+        self.pool.release(ws);
+        result
+    }
+
+    /// Exchange -> column phase -> exchange back. Split out so the
+    /// staging planes are restored to the workspace on error too.
+    fn run_turned(
+        &self,
+        data: &mut SplitComplex,
+        stage: &mut SplitComplex,
+        ws: &mut Workspace,
+        dir: Direction,
+        filters: Option<(&SplitComplex, &SplitComplex)>,
+        mode: Mode2d,
+    ) -> Result<()> {
+        let (rows, cols) = (self.rows, self.cols);
+        // Exchange: (rows x cols) -> staging (cols x rows), blocked,
+        // BFP-staged at Bfp16.
+        exchange_transpose(
+            &data.re,
+            &data.im,
+            &mut stage.re[..rows * cols],
+            &mut stage.im[..rows * cols],
+            rows,
+            cols,
+            self.precision,
+            &mut ws.bstage_re,
+            &mut ws.bstage_im,
+            &mut ws.rre,
+            &mut ws.rim,
+        );
+
+        // Column phase: cols x length-rows lines on the turned matrix.
+        // The azimuth matched-filter multiply rides the pipeline's last
+        // forward stage here — the 2D analog of `SpectralPipeline`.
+        let col_phase = match filters {
+            Some((_, af)) => ColPhase::Pipeline(af),
+            None => ColPhase::Fft(dir),
+        };
+        match col_phase {
+            ColPhase::Fft(d) => self.phase_fft(&self.col_exec, stage, cols, d, mode)?,
+            ColPhase::Pipeline(af) => self.phase_pipeline(&self.col_exec, stage, cols, af, mode)?,
+        }
+
+        // Exchange back: staging (cols x rows) -> (rows x cols).
+        exchange_transpose(
+            &stage.re[..rows * cols],
+            &stage.im[..rows * cols],
+            &mut data.re,
+            &mut data.im,
+            cols,
+            rows,
+            self.precision,
+            &mut ws.bstage_re,
+            &mut ws.bstage_im,
+            &mut ws.rre,
+            &mut ws.rim,
+        );
+        Ok(())
+    }
+
+    fn phase_fft(
+        &self,
+        exec: &BatchExecutor,
+        data: &mut SplitComplex,
+        batch: usize,
+        dir: Direction,
+        mode: Mode2d,
+    ) -> Result<()> {
+        match mode {
+            Mode2d::Serial => exec.execute_batch_into(data, batch, dir),
+            Mode2d::Par => exec.execute_batch_par_into(data, batch, dir),
+            Mode2d::Auto => exec.execute_batch_auto_into(data, batch, dir),
+        }
+    }
+
+    fn phase_pipeline(
+        &self,
+        exec: &BatchExecutor,
+        data: &mut SplitComplex,
+        batch: usize,
+        filter: &SplitComplex,
+        mode: Mode2d,
+    ) -> Result<()> {
+        match mode {
+            Mode2d::Serial => exec.execute_pipeline_into(data, batch, filter),
+            Mode2d::Par => exec.execute_pipeline_par_into(data, batch, filter),
+            Mode2d::Auto => exec.execute_pipeline_auto_into(data, batch, filter),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::bfp::snr_db;
+    use crate::fft::plan::{NativePlan, Variant};
+    use crate::fft::tile::{transpose_into, FusedStore};
+    use crate::util::rng::Rng;
+
+    fn exec_for(n: usize, precision: Precision, threads: usize) -> Arc<BatchExecutor> {
+        let plan = NativePlan::new(n, Variant::preferred(n)).unwrap().with_precision(precision);
+        Arc::new(BatchExecutor::with_threads(Arc::new(plan), threads))
+    }
+
+    fn fft2d(rows: usize, cols: usize, precision: Precision, threads: usize) -> Fft2dExecutor {
+        Fft2dExecutor::new(exec_for(cols, precision, threads), exec_for(rows, precision, threads))
+            .unwrap()
+    }
+
+    fn mat(rng: &mut Rng, rows: usize, cols: usize) -> SplitComplex {
+        SplitComplex { re: rng.signal(rows * cols), im: rng.signal(rows * cols) }
+    }
+
+    /// Reference: the same two 1D phases composed by hand around naive
+    /// transposes (the caller-orchestrated two-pass shape).
+    fn two_pass_reference(
+        ex: &Fft2dExecutor,
+        input: &SplitComplex,
+        dir: Direction,
+    ) -> SplitComplex {
+        let (rows, cols) = (ex.rows(), ex.cols());
+        let mut data = input.clone();
+        ex.row_exec().execute_batch_into(&mut data, rows, dir).unwrap();
+        let mut turned = SplitComplex::zeros(rows * cols);
+        transpose_into(
+            &data.re,
+            &data.im,
+            &mut turned.re,
+            &mut turned.im,
+            rows,
+            cols,
+            FusedStore::Plain,
+        );
+        ex.col_exec().execute_batch_into(&mut turned, cols, dir).unwrap();
+        let mut out = SplitComplex::zeros(rows * cols);
+        transpose_into(
+            &turned.re,
+            &turned.im,
+            &mut out.re,
+            &mut out.im,
+            cols,
+            rows,
+            FusedStore::Plain,
+        );
+        out
+    }
+
+    #[test]
+    fn fft2d_f32_is_bitwise_two_pass_composition() {
+        let mut rng = Rng::new(0x2d01);
+        for &(rows, cols) in &[(64usize, 128usize), (128, 64), (32, 32)] {
+            let ex = fft2d(rows, cols, Precision::F32, 1);
+            let x = mat(&mut rng, rows, cols);
+            let want = two_pass_reference(&ex, &x, Direction::Forward);
+            let got = ex.execute_2d(&x, Direction::Forward).unwrap();
+            assert_eq!(got.re, want.re, "{rows}x{cols} re");
+            assert_eq!(got.im, want.im, "{rows}x{cols} im");
+        }
+    }
+
+    #[test]
+    fn fft2d_matches_dft_oracle() {
+        // Row-column against the O(N^2) DFT applied to rows then
+        // columns by hand.
+        let mut rng = Rng::new(0x2d02);
+        let (rows, cols) = (16usize, 32usize);
+        let ex = fft2d(rows, cols, Precision::F32, 1);
+        let x = mat(&mut rng, rows, cols);
+        let mut want = crate::fft::dft::dft_batch(&x, cols, rows, Direction::Forward);
+        // Transpose, DFT the columns, transpose back.
+        let mut t = SplitComplex::zeros(rows * cols);
+        transpose_into(&want.re, &want.im, &mut t.re, &mut t.im, rows, cols, FusedStore::Plain);
+        let tc = crate::fft::dft::dft_batch(&t, rows, cols, Direction::Forward);
+        transpose_into(&tc.re, &tc.im, &mut want.re, &mut want.im, cols, rows, FusedStore::Plain);
+        let got = ex.execute_2d(&x, Direction::Forward).unwrap();
+        let snr = snr_db(&got, &want);
+        assert!(snr >= 120.0, "2D vs oracle snr {snr:.1} dB");
+    }
+
+    #[test]
+    fn fft2d_roundtrip_recovers_input() {
+        let mut rng = Rng::new(0x2d03);
+        for precision in [Precision::F32, Precision::Bfp16] {
+            let (rows, cols) = (64usize, 256usize);
+            let ex = fft2d(rows, cols, precision, 1);
+            let x = mat(&mut rng, rows, cols);
+            let spec = ex.execute_2d(&x, Direction::Forward).unwrap();
+            let back = ex.execute_2d(&spec, Direction::Inverse).unwrap();
+            let snr = snr_db(&back, &x);
+            let gate = if precision == Precision::Bfp16 { 55.0 } else { 110.0 };
+            assert!(snr >= gate, "{precision:?} roundtrip snr {snr:.1} dB");
+        }
+    }
+
+    #[test]
+    fn serial_par_auto_are_bitwise_equal() {
+        let mut rng = Rng::new(0x2d04);
+        for precision in [Precision::F32, Precision::Bfp16] {
+            let (rows, cols) = (64usize, 512usize);
+            let ex = fft2d(rows, cols, precision, 4);
+            let x = mat(&mut rng, rows, cols);
+            let mut serial = x.clone();
+            ex.execute_2d_serial_into(&mut serial, Direction::Forward).unwrap();
+            let mut par = x.clone();
+            ex.execute_2d_par_into(&mut par, Direction::Forward).unwrap();
+            let mut auto = x.clone();
+            ex.execute_2d_into(&mut auto, Direction::Forward).unwrap();
+            assert_eq!(serial.re, par.re, "{precision:?} serial==par re");
+            assert_eq!(serial.im, par.im, "{precision:?} serial==par im");
+            assert_eq!(serial.re, auto.re, "{precision:?} serial==auto re");
+            assert_eq!(serial.im, auto.im, "{precision:?} serial==auto im");
+        }
+    }
+
+    #[test]
+    fn form_image_is_bitwise_pipeline_composition() {
+        // FormImage == pipeline rows -> blocked turn -> pipeline cols
+        // -> turn back, composed by hand on the same executors (F32:
+        // the exchange is pure movement).
+        let mut rng = Rng::new(0x2d05);
+        let (rows, cols) = (64usize, 128usize);
+        let ex = fft2d(rows, cols, Precision::F32, 1);
+        let x = mat(&mut rng, rows, cols);
+        let rf = mat(&mut rng, 1, cols);
+        let af = mat(&mut rng, 1, rows);
+        let mut want = x.clone();
+        ex.row_exec().execute_pipeline_into(&mut want, rows, &rf).unwrap();
+        let mut turned = SplitComplex::zeros(rows * cols);
+        transpose_into(
+            &want.re,
+            &want.im,
+            &mut turned.re,
+            &mut turned.im,
+            rows,
+            cols,
+            FusedStore::Plain,
+        );
+        ex.col_exec().execute_pipeline_into(&mut turned, cols, &af).unwrap();
+        transpose_into(
+            &turned.re,
+            &turned.im,
+            &mut want.re,
+            &mut want.im,
+            cols,
+            rows,
+            FusedStore::Plain,
+        );
+        let got = ex.form_image(&x, &rf, &af).unwrap();
+        assert_eq!(got.re, want.re);
+        assert_eq!(got.im, want.im);
+    }
+
+    #[test]
+    fn staging_pool_reaches_steady_state() {
+        let mut rng = Rng::new(0x2d06);
+        for precision in [Precision::F32, Precision::Bfp16] {
+            let (rows, cols) = (64usize, 64usize);
+            let ex = fft2d(rows, cols, precision, 1);
+            let x = mat(&mut rng, rows, cols);
+            // Warmup creates and grows the staging workspace.
+            ex.execute_2d(&x, Direction::Forward).unwrap();
+            let (created, _) = ex.pool_stats();
+            let grows = ex.pool_grow_events();
+            for _ in 0..4 {
+                ex.execute_2d(&x, Direction::Forward).unwrap();
+            }
+            assert_eq!(ex.pool_stats().0, created, "{precision:?}: staging pool grew");
+            assert_eq!(ex.pool_grow_events(), grows, "{precision:?}: staging reallocated");
+        }
+    }
+}

@@ -20,6 +20,7 @@
 
 use super::bfp::{BfpVec, BLOCK};
 use super::codelet::{self, CodeletTable};
+use super::tile::{transpose_from_bfp, transpose_into, FusedStore};
 use super::stockham::{
     radix_schedule, transform_line, transform_line_bfp_with, transform_line_with,
 };
@@ -192,24 +193,11 @@ pub fn fourstep_line_fused(
         codelets, re, im, n1, n2, radices, tables, twiddles, yre, yim, sre, sim, inverse,
     );
 
-    // Step 4: transpose (n1, n2) back into (re, im) at index k1 + n1*k2,
-    // fusing the inverse conjugate + 1/N scale into the store.
-    if inverse {
-        let k = 1.0 / n as f32;
-        for k1 in 0..n1 {
-            for k2 in 0..n2 {
-                re[k1 + n1 * k2] = yre[k1 * n2 + k2] * k;
-                im[k1 + n1 * k2] = -(yim[k1 * n2 + k2] * k);
-            }
-        }
-    } else {
-        for k1 in 0..n1 {
-            for k2 in 0..n2 {
-                re[k1 + n1 * k2] = yre[k1 * n2 + k2];
-                im[k1 + n1 * k2] = yim[k1 * n2 + k2];
-            }
-        }
-    }
+    // Step 4: transpose (n1, n2) back into (re, im) at index k1 + n1*k2
+    // via the blocked tile layer, fusing the inverse conjugate + 1/N
+    // scale into the store (same per-element op, bitwise unchanged).
+    let op = if inverse { FusedStore::ConjScale(1.0 / n as f32) } else { FusedStore::Plain };
+    transpose_into(yre, yim, re, im, n1, n2, op);
 }
 
 /// Four-step **forward** transform with the spectral pipeline's fused
@@ -244,16 +232,10 @@ pub fn fourstep_line_mul(
         codelets, re, im, n1, n2, radices, tables, twiddles, yre, yim, sre, sim, false,
     );
 
-    // Step 4: transpose with the filter multiply fused into the store,
-    // while the row-FFT output is still hot.
-    for k1 in 0..n1 {
-        for k2 in 0..n2 {
-            let idx = k1 + n1 * k2;
-            let (tr, ti) = (yre[k1 * n2 + k2], yim[k1 * n2 + k2]);
-            re[idx] = tr * hre[idx] - ti * him[idx];
-            im[idx] = tr * him[idx] + ti * hre[idx];
-        }
-    }
+    // Step 4: transpose with the filter multiply fused into the store
+    // (tile layer, `FusedStore::Mul` — the op order of the standalone
+    // multiply pass), while the row-FFT output is still hot.
+    transpose_into(yre, yim, re, im, n1, n2, FusedStore::Mul { hre, him });
 }
 
 /// Steps 1-3 of the four-step decomposition, shared by the plain, fused
@@ -481,33 +463,15 @@ pub fn fourstep_line_bfp(
         stage_im.quantize_at(at, rim);
     }
 
-    // Step 4: transpose out of the BFP staging into the f32 output,
-    // with the inverse conj + 1/N scale (or the pipeline's filter
-    // multiply) fused into the store.
-    for k1 in 0..n1 {
-        let at = k1 * stride;
-        stage_re.dequantize_at(at, rre);
-        stage_im.dequantize_at(at, rim);
-        if let Some((hre, him)) = filter {
-            for k2 in 0..n2 {
-                let idx = k1 + n1 * k2;
-                let (tr, ti) = (rre[k2], rim[k2]);
-                re[idx] = tr * hre[idx] - ti * him[idx];
-                im[idx] = tr * him[idx] + ti * hre[idx];
-            }
-        } else if inverse {
-            let k = 1.0 / n as f32;
-            for k2 in 0..n2 {
-                re[k1 + n1 * k2] = rre[k2] * k;
-                im[k1 + n1 * k2] = -(rim[k2] * k);
-            }
-        } else {
-            for k2 in 0..n2 {
-                re[k1 + n1 * k2] = rre[k2];
-                im[k1 + n1 * k2] = rim[k2];
-            }
-        }
-    }
+    // Step 4: transpose out of the BFP staging into the f32 output via
+    // the tile layer, with the inverse conj + 1/N scale (or the
+    // pipeline's filter multiply) fused into the store.
+    let op = match filter {
+        Some((hre, him)) => FusedStore::Mul { hre, him },
+        None if inverse => FusedStore::ConjScale(1.0 / n as f32),
+        None => FusedStore::Plain,
+    };
+    transpose_from_bfp(stage_re, stage_im, stride, rre, rim, re, im, n1, n2, op);
 }
 
 /// Convenience: build twiddles + schedule and run one line forward.

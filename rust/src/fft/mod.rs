@@ -158,6 +158,40 @@
 //! the oracle at both backends and precisions (2..=128 in the default
 //! run; the full sweep runs `--ignored` on the nightly CI leg).
 //!
+//! # 2D decomposition
+//!
+//! A 2D transform (or a whole SAR image formation) is the four-step
+//! idea writ large: row transforms, a corner-turn exchange, column
+//! transforms. [`tile`] generalises the four-step step-4 stride
+//! permutation into a reusable cache-blocked transpose layer —
+//! square [`tile::TILE`]×[`tile::TILE`] blocks (64, matching the BFP
+//! [`bfp::BLOCK`]) with the same fused store hooks the step-4 scatter
+//! had (plain / inverse conj+`1/N` / filter multiply), bitwise equal
+//! to the naive corner turn because transposition is pure data
+//! movement. [`fft2d::Fft2dExecutor`] composes two 1D
+//! [`exec::BatchExecutor`]s around that exchange:
+//!
+//! * **row phase** — a regular 1D batch (serial/par/auto paths, tuned
+//!   schedules, and precision plans all inherited);
+//! * **exchange** — one blocked corner turn into pooled
+//!   [`exec::Workspace`] staging planes; at [`bfp::Precision::Bfp16`]
+//!   the turned matrix is staged through `BfpVec` planes
+//!   ([`tile::transpose_quantize`]), so the bytes crossing the turn —
+//!   the scattered-access tier the paper identifies as the real
+//!   bottleneck — are half-width;
+//! * **column phase** — the turned batch, with the azimuth matched
+//!   filter fused into its last forward stage for `FormImage`
+//!   (exactly the [`pipeline::SpectralPipeline`] fusion), then a
+//!   second exchange back to row-major.
+//!
+//! The coordinator serves these as `Fft2d` / `FormImage` request
+//! kinds; the sharded service stripes the row phase across shards,
+//! runs the *same* tile-layer exchange on the gathered matrix, and
+//! re-stripes the column phase — bitwise identical to the single
+//! service at every shard count and both precisions, because every
+//! per-line transform is position-independent and the exchange is the
+//! same function on the same bits.
+//!
 //! Algorithms: naive O(N^2) DFT oracle ([`dft`]), radix-2/radix-4
 //! Stockham autosort ([`stockham`]), the paper's radix-8 split-radix DIT
 //! butterfly ([`radix8`]), and the four-step decomposition for N > 4096
@@ -169,6 +203,7 @@ pub mod codelet;
 pub mod convolve;
 pub mod dft;
 pub mod exec;
+pub mod fft2d;
 pub mod fourstep;
 pub mod pipeline;
 pub mod plan;
@@ -177,6 +212,7 @@ pub mod real;
 #[cfg(feature = "simd")]
 pub mod simd;
 pub mod stockham;
+pub mod tile;
 pub mod tune;
 pub mod twiddle;
 

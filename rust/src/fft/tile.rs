@@ -1,0 +1,489 @@
+//! Cache-blocked transpose / re-tile layer: the corner-turn exchange
+//! tier shared by the four-step step-4 stride permutation, the SAR
+//! `corner_turn`, and the 2D row-column decomposition
+//! ([`super::fft2d`]).
+//!
+//! The paper's central finding is that scattered memory access — not
+//! barriers — is the real bottleneck. A naive transpose walks one of
+//! its two matrices at stride `rows` (or `cols`), missing cache on
+//! every element once the matrix outgrows L1. The blocked transpose
+//! walks both matrices [`TILE`]×[`TILE`] square blocks at a time, so
+//! each block's source rows and destination columns stay resident
+//! while the block is turned. [`TILE`] equals the BFP codec's
+//! [`BLOCK`], which is what lets the Bfp16 variants quantize whole
+//! blocks straight out of the turned tile.
+//!
+//! Every variant is **pure data movement plus an optional fused
+//! per-element store op** ([`FusedStore`]): each output element is
+//! written exactly once and reads exactly one input element, so the
+//! blocked iteration order cannot change a single bit relative to the
+//! naive loop — the f32 paths are bitwise-equal to the scatter loops
+//! they replace by construction (pinned by the proptest below and by
+//! `tests/proptests.rs`). The fused ops reproduce the exact IEEE op
+//! order of the four-step step-4 stores they subsume:
+//!
+//! * [`FusedStore::ConjScale`] — the fused inverse `conj + 1/N`:
+//!   `re = s_re * k; im = -(s_im * k)`.
+//! * [`FusedStore::Mul`] — the spectral pipeline's filter multiply,
+//!   indexed by **output** position: `re = tr*h_re - ti*h_im;
+//!   im = tr*h_im + ti*h_re`.
+//!
+//! The Bfp16 variants realise "half the corner-turn bytes": the turned
+//! matrix is staged in [`BfpVec`] planes (f16 mantissas + shared i8
+//! exponent per [`BLOCK`]), with each staging row starting on a block
+//! boundary ([`bfp_row_stride`]) so one row's exponents never bleed
+//! into the next.
+
+use super::bfp::{BfpVec, BLOCK};
+use crate::util::round_up;
+
+/// Square transpose block edge. Equal to the BFP [`BLOCK`] so a turned
+/// tile quantizes as whole blocks.
+pub const TILE: usize = BLOCK;
+
+/// Per-row stride (elements) of a BFP staging plane holding rows of
+/// `len` elements: rows start on [`BLOCK`] boundaries so shared
+/// exponents stay within one row. (The four-step staging uses the same
+/// rule — see [`super::fourstep::bfp_stage_stride`].)
+pub fn bfp_row_stride(len: usize) -> usize {
+    round_up(len, BLOCK)
+}
+
+/// Optional per-element op fused into a transpose store. `h` spectra
+/// are indexed by the **destination** position, matching the four-step
+/// step-4 fused multiply they generalise.
+#[derive(Clone, Copy)]
+pub enum FusedStore<'a> {
+    /// Plain movement: `dst = src`.
+    Plain,
+    /// Fused inverse conj + scale: `re = s_re * k; im = -(s_im * k)`.
+    ConjScale(f32),
+    /// Fused spectrum multiply against `(hre, him)` at the destination
+    /// index (the pipeline's matched-filter op order).
+    Mul { hre: &'a [f32], him: &'a [f32] },
+}
+
+#[inline(always)]
+fn store(op: &FusedStore, dst_re: &mut [f32], dst_im: &mut [f32], idx: usize, sr: f32, si: f32) {
+    match op {
+        FusedStore::Plain => {
+            dst_re[idx] = sr;
+            dst_im[idx] = si;
+        }
+        FusedStore::ConjScale(k) => {
+            dst_re[idx] = sr * k;
+            dst_im[idx] = -(si * k);
+        }
+        FusedStore::Mul { hre, him } => {
+            dst_re[idx] = sr * hre[idx] - si * him[idx];
+            dst_im[idx] = sr * him[idx] + si * hre[idx];
+        }
+    }
+}
+
+/// Blocked transpose of a `rows x cols` row-major matrix into its
+/// `cols x rows` row-major transpose: `dst[c*rows + r] = src[r*cols + c]`,
+/// with `op` fused into the store. Handles non-multiple-of-[`TILE`]
+/// edge tiles; bitwise-identical to the naive double loop (pure
+/// movement, each output written once).
+pub fn transpose_into(
+    src_re: &[f32],
+    src_im: &[f32],
+    dst_re: &mut [f32],
+    dst_im: &mut [f32],
+    rows: usize,
+    cols: usize,
+    op: FusedStore,
+) {
+    assert!(src_re.len() >= rows * cols && src_im.len() >= rows * cols);
+    assert!(dst_re.len() >= rows * cols && dst_im.len() >= rows * cols);
+    let mut rb = 0;
+    while rb < rows {
+        let rh = TILE.min(rows - rb);
+        let mut cb = 0;
+        while cb < cols {
+            let cw = TILE.min(cols - cb);
+            for r in rb..rb + rh {
+                let row = r * cols;
+                for c in cb..cb + cw {
+                    store(&op, dst_re, dst_im, c * rows + r, src_re[row + c], src_im[row + c]);
+                }
+            }
+            cb += cw;
+        }
+        rb += rh;
+    }
+}
+
+/// Naive element-at-a-time transpose — the reference the blocked paths
+/// are tested (and benched) against. Same store contract as
+/// [`transpose_into`] with [`FusedStore::Plain`].
+pub fn transpose_naive(
+    src_re: &[f32],
+    src_im: &[f32],
+    dst_re: &mut [f32],
+    dst_im: &mut [f32],
+    rows: usize,
+    cols: usize,
+) {
+    for r in 0..rows {
+        for c in 0..cols {
+            dst_re[c * rows + r] = src_re[r * cols + c];
+            dst_im[c * rows + r] = src_im[r * cols + c];
+        }
+    }
+}
+
+/// Transpose a `rows x cols` f32 matrix **into BFP staging planes**
+/// holding the `cols x rows` transpose: staging row `c` (stride
+/// [`bfp_row_stride`]`(rows)`) holds source column `c`. Each
+/// [`TILE`]x[`TILE`] tile is turned in registers and quantized as
+/// whole blocks (tile row offsets are block-aligned because `TILE ==
+/// BLOCK`), so the turned matrix never materialises at f32 — this is
+/// the half-width corner-turn exchange.
+///
+/// Callers must [`BfpVec::ensure`] `cols * bfp_row_stride(rows)`
+/// elements per plane first.
+pub fn transpose_quantize(
+    src_re: &[f32],
+    src_im: &[f32],
+    rows: usize,
+    cols: usize,
+    bre: &mut BfpVec,
+    bim: &mut BfpVec,
+) {
+    assert!(src_re.len() >= rows * cols && src_im.len() >= rows * cols);
+    let stride = bfp_row_stride(rows);
+    assert!(bre.len() >= cols * stride && bim.len() >= cols * stride);
+    let mut tre = vec![0.0f32; TILE * TILE];
+    let mut tim = vec![0.0f32; TILE * TILE];
+    let mut rb = 0;
+    while rb < rows {
+        let rh = TILE.min(rows - rb);
+        let mut cb = 0;
+        while cb < cols {
+            let cw = TILE.min(cols - cb);
+            // Turn the tile in registers: t[j][i] = src[rb+i][cb+j].
+            for i in 0..rh {
+                let row = (rb + i) * cols;
+                for j in 0..cw {
+                    tre[j * TILE + i] = src_re[row + cb + j];
+                    tim[j * TILE + i] = src_im[row + cb + j];
+                }
+            }
+            // Quantize each turned tile row as one (possibly partial)
+            // block: `rb` is block-aligned because TILE == BLOCK.
+            for j in 0..cw {
+                let at = (cb + j) * stride + rb;
+                bre.quantize_at(at, &tre[j * TILE..j * TILE + rh]);
+                bim.quantize_at(at, &tim[j * TILE..j * TILE + rh]);
+            }
+            cb += cw;
+        }
+        rb += rh;
+    }
+}
+
+/// Dequantize BFP staging planes holding a `rows x cols` matrix (row
+/// stride `stride` >= [`bfp_row_stride`]`(cols)`) and store its
+/// `cols x rows` transpose into f32 output, with `op` fused into the
+/// store: `dst[c*rows + r] = dequant(stage[r][c])`. This is the
+/// four-step step-4 BFP scatter, generalised: `(rre, rim)` is a
+/// caller-owned row buffer (>= `cols` long) the rows are dequantized
+/// through.
+#[allow(clippy::too_many_arguments)]
+pub fn transpose_from_bfp(
+    bre: &BfpVec,
+    bim: &BfpVec,
+    stride: usize,
+    rre: &mut [f32],
+    rim: &mut [f32],
+    dst_re: &mut [f32],
+    dst_im: &mut [f32],
+    rows: usize,
+    cols: usize,
+    op: FusedStore,
+) {
+    assert!(stride >= cols && bre.len() >= rows * stride && bim.len() >= rows * stride);
+    assert!(dst_re.len() >= rows * cols && dst_im.len() >= rows * cols);
+    let rre = &mut rre[..cols];
+    let rim = &mut rim[..cols];
+    for r in 0..rows {
+        bre.dequantize_at(r * stride, rre);
+        bim.dequantize_at(r * stride, rim);
+        // Blocked column scatter: the destination is walked in TILE-row
+        // runs so its cache lines are reused across the row.
+        let mut cb = 0;
+        while cb < cols {
+            let cw = TILE.min(cols - cb);
+            for c in cb..cb + cw {
+                store(&op, dst_re, dst_im, c * rows + r, rre[c], rim[c]);
+            }
+            cb += cw;
+        }
+    }
+}
+
+/// One corner-turn exchange at a given precision: `dst` (>= rows*cols
+/// per plane) receives the `cols x rows` transpose of `src`. At `F32`
+/// this is the blocked transpose (pure movement, bitwise the naive
+/// corner turn); at `Bfp16` the turned matrix is staged through the
+/// caller's BFP planes — quantize on the way in, dequantize on the way
+/// out — so the bytes crossing the corner turn are half-width.
+/// `(rre, rim)` is a row buffer >= `rows` long (Bfp16 only). Both the
+/// engine's 2D path and the sharded coordinator's cross-shard exchange
+/// call exactly this function, which is what makes sharded and
+/// single-service 2D requests bitwise identical at *both* precisions.
+#[allow(clippy::too_many_arguments)]
+pub fn exchange_transpose(
+    src_re: &[f32],
+    src_im: &[f32],
+    dst_re: &mut [f32],
+    dst_im: &mut [f32],
+    rows: usize,
+    cols: usize,
+    precision: super::bfp::Precision,
+    bre: &mut BfpVec,
+    bim: &mut BfpVec,
+    rre: &mut [f32],
+    rim: &mut [f32],
+) {
+    match precision {
+        super::bfp::Precision::F32 => {
+            transpose_into(src_re, src_im, dst_re, dst_im, rows, cols, FusedStore::Plain);
+        }
+        super::bfp::Precision::Bfp16 => {
+            let stride = bfp_row_stride(rows);
+            bre.ensure(cols * stride);
+            bim.ensure(cols * stride);
+            transpose_quantize(src_re, src_im, rows, cols, bre, bim);
+            // The staging now holds the turned matrix (cols x rows);
+            // reading its rows straight out is an identity-layout
+            // dequantize: stage row c is dst row c.
+            for c in 0..cols {
+                bre.dequantize_at(c * stride, &mut rre[..rows]);
+                bim.dequantize_at(c * stride, &mut rim[..rows]);
+                dst_re[c * rows..(c + 1) * rows].copy_from_slice(&rre[..rows]);
+                dst_im[c * rows..(c + 1) * rows].copy_from_slice(&rim[..rows]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::bfp::{snr_db, Precision};
+    use crate::util::complex::SplitComplex;
+    use crate::util::rng::Rng;
+
+    fn mat(rng: &mut Rng, rows: usize, cols: usize) -> SplitComplex {
+        SplitComplex { re: rng.signal(rows * cols), im: rng.signal(rows * cols) }
+    }
+
+    #[test]
+    fn blocked_matches_naive_bitwise_over_shapes() {
+        // Non-square, non-multiple-of-TILE edge tiles, degenerate rows.
+        let mut rng = Rng::new(0x71);
+        for &(rows, cols) in &[
+            (1usize, 1usize),
+            (2, 4096),
+            (4, 4096),
+            (7, 130),
+            (64, 64),
+            (65, 63),
+            (128, 100),
+            (100, 257),
+            (256, 64),
+        ] {
+            let x = mat(&mut rng, rows, cols);
+            let mut naive = SplitComplex::zeros(rows * cols);
+            transpose_naive(&x.re, &x.im, &mut naive.re, &mut naive.im, rows, cols);
+            let mut blocked = SplitComplex::zeros(rows * cols);
+            transpose_into(
+                &x.re,
+                &x.im,
+                &mut blocked.re,
+                &mut blocked.im,
+                rows,
+                cols,
+                FusedStore::Plain,
+            );
+            assert_eq!(blocked.re, naive.re, "{rows}x{cols} re");
+            assert_eq!(blocked.im, naive.im, "{rows}x{cols} im");
+        }
+    }
+
+    #[test]
+    fn prop_blocked_transpose_bitwise_random_shapes() {
+        // Satellite 3: random non-square shapes including edge tiles.
+        crate::testkit::check("blocked transpose == naive corner turn", 24, |g| {
+            let rows = g.rng.between(1, 200);
+            let cols = g.rng.between(1, 200);
+            let x = SplitComplex {
+                re: g.rng.signal(rows * cols),
+                im: g.rng.signal(rows * cols),
+            };
+            let mut naive = SplitComplex::zeros(rows * cols);
+            transpose_naive(&x.re, &x.im, &mut naive.re, &mut naive.im, rows, cols);
+            let mut blocked = SplitComplex::zeros(rows * cols);
+            transpose_into(
+                &x.re,
+                &x.im,
+                &mut blocked.re,
+                &mut blocked.im,
+                rows,
+                cols,
+                FusedStore::Plain,
+            );
+            assert_eq!(blocked.re, naive.re, "case {}: {rows}x{cols} re", g.case);
+            assert_eq!(blocked.im, naive.im, "case {}: {rows}x{cols} im", g.case);
+        });
+    }
+
+    #[test]
+    fn fused_conj_scale_matches_scalar_loop() {
+        let mut rng = Rng::new(0x72);
+        let (rows, cols) = (4usize, 100usize);
+        let x = mat(&mut rng, rows, cols);
+        let k = 1.0f32 / (rows * cols) as f32;
+        let mut want = SplitComplex::zeros(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                want.re[c * rows + r] = x.re[r * cols + c] * k;
+                want.im[c * rows + r] = -(x.im[r * cols + c] * k);
+            }
+        }
+        let mut got = SplitComplex::zeros(rows * cols);
+        transpose_into(
+            &x.re,
+            &x.im,
+            &mut got.re,
+            &mut got.im,
+            rows,
+            cols,
+            FusedStore::ConjScale(k),
+        );
+        assert_eq!(got.re, want.re);
+        assert_eq!(got.im, want.im);
+    }
+
+    #[test]
+    fn fused_mul_matches_transpose_then_multiply() {
+        let mut rng = Rng::new(0x73);
+        let (rows, cols) = (2usize, 96usize);
+        let x = mat(&mut rng, rows, cols);
+        let h = mat(&mut rng, rows, cols);
+        let mut want = SplitComplex::zeros(rows * cols);
+        transpose_naive(&x.re, &x.im, &mut want.re, &mut want.im, rows, cols);
+        for i in 0..rows * cols {
+            let (tr, ti) = (want.re[i], want.im[i]);
+            want.re[i] = tr * h.re[i] - ti * h.im[i];
+            want.im[i] = tr * h.im[i] + ti * h.re[i];
+        }
+        let mut got = SplitComplex::zeros(rows * cols);
+        transpose_into(
+            &x.re,
+            &x.im,
+            &mut got.re,
+            &mut got.im,
+            rows,
+            cols,
+            FusedStore::Mul { hre: &h.re, him: &h.im },
+        );
+        assert_eq!(got.re, want.re);
+        assert_eq!(got.im, want.im);
+    }
+
+    #[test]
+    fn bfp_staged_roundtrip_transposes_within_snr() {
+        // transpose_quantize then transpose_from_bfp undoes the turn:
+        // the result is the identity up to one codec round trip.
+        let mut rng = Rng::new(0x74);
+        for &(rows, cols) in &[(64usize, 64usize), (100, 37), (5, 200)] {
+            let x = mat(&mut rng, rows, cols);
+            let stride = bfp_row_stride(rows);
+            let mut bre = BfpVec::new();
+            let mut bim = BfpVec::new();
+            bre.ensure(cols * stride);
+            bim.ensure(cols * stride);
+            transpose_quantize(&x.re, &x.im, rows, cols, &mut bre, &mut bim);
+            // Staging holds cols x rows; transposing it back gives
+            // rows x cols again.
+            let mut back = SplitComplex::zeros(rows * cols);
+            let mut rre = vec![0.0f32; rows];
+            let mut rim = vec![0.0f32; rows];
+            transpose_from_bfp(
+                &bre,
+                &bim,
+                stride,
+                &mut rre,
+                &mut rim,
+                &mut back.re,
+                &mut back.im,
+                cols,
+                rows,
+                FusedStore::Plain,
+            );
+            let snr = snr_db(&back, &x);
+            assert!(snr >= 60.0, "{rows}x{cols}: roundtrip snr {snr:.1} dB");
+        }
+    }
+
+    #[test]
+    fn exchange_transpose_f32_is_bitwise_naive() {
+        let mut rng = Rng::new(0x75);
+        let (rows, cols) = (48usize, 130usize);
+        let x = mat(&mut rng, rows, cols);
+        let mut naive = SplitComplex::zeros(rows * cols);
+        transpose_naive(&x.re, &x.im, &mut naive.re, &mut naive.im, rows, cols);
+        let mut got = SplitComplex::zeros(rows * cols);
+        let (mut bre, mut bim) = (BfpVec::new(), BfpVec::new());
+        let (mut rre, mut rim) = (vec![0.0f32; rows], vec![0.0f32; rows]);
+        exchange_transpose(
+            &x.re,
+            &x.im,
+            &mut got.re,
+            &mut got.im,
+            rows,
+            cols,
+            Precision::F32,
+            &mut bre,
+            &mut bim,
+            &mut rre,
+            &mut rim,
+        );
+        assert_eq!(got.re, naive.re);
+        assert_eq!(got.im, naive.im);
+    }
+
+    #[test]
+    fn exchange_transpose_bfp_tracks_f32_within_snr_and_halves_bytes() {
+        let mut rng = Rng::new(0x76);
+        let (rows, cols) = (128usize, 96usize);
+        let x = mat(&mut rng, rows, cols);
+        let mut want = SplitComplex::zeros(rows * cols);
+        transpose_naive(&x.re, &x.im, &mut want.re, &mut want.im, rows, cols);
+        let mut got = SplitComplex::zeros(rows * cols);
+        let (mut bre, mut bim) = (BfpVec::new(), BfpVec::new());
+        let (mut rre, mut rim) = (vec![0.0f32; rows], vec![0.0f32; rows]);
+        exchange_transpose(
+            &x.re,
+            &x.im,
+            &mut got.re,
+            &mut got.im,
+            rows,
+            cols,
+            Precision::Bfp16,
+            &mut bre,
+            &mut bim,
+            &mut rre,
+            &mut rim,
+        );
+        let snr = snr_db(&got, &want);
+        assert!(snr >= 60.0, "bfp exchange snr {snr:.1} dB");
+        // The staged exchange crossed at roughly half the f32 bytes.
+        let f32_bytes = rows * cols * 4;
+        assert!(bre.storage_bytes() < f32_bytes * 6 / 10, "{}", bre.storage_bytes());
+    }
+}

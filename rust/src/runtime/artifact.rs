@@ -19,6 +19,14 @@ pub enum ArtifactKind {
     Fft,
     /// Fused range compression: inputs (xr, xi, hr, hi), outputs (re, im).
     RangeComp,
+    /// 2D FFT: inputs (re, im), shape (rows, n) with `n` the row length
+    /// and the row count carried as the batch — row FFTs, a blocked
+    /// corner-turn exchange, column FFTs.
+    Fft2d,
+    /// Whole-image formation: inputs (xr, xi, range hr/hi, azimuth
+    /// hr/hi), both 2D phases running the fused matched-filter
+    /// pipeline around the corner-turn exchange.
+    FormImage,
 }
 
 impl ArtifactKind {
@@ -26,14 +34,17 @@ impl ArtifactKind {
         match s {
             "fft" => Ok(ArtifactKind::Fft),
             "rangecomp" => Ok(ArtifactKind::RangeComp),
+            "fft2d" => Ok(ArtifactKind::Fft2d),
+            "formimage" => Ok(ArtifactKind::FormImage),
             other => bail!("unknown artifact kind {other:?}"),
         }
     }
 
     pub fn num_inputs(&self) -> usize {
         match self {
-            ArtifactKind::Fft => 2,
+            ArtifactKind::Fft | ArtifactKind::Fft2d => 2,
             ArtifactKind::RangeComp => 4,
+            ArtifactKind::FormImage => 6,
         }
     }
 }
@@ -177,6 +188,20 @@ impl Registry {
             let n: usize = rest.parse().with_context(|| format!("artifact name {name:?}"))?;
             return Ok((ArtifactKind::RangeComp, n, Direction::Forward));
         }
+        if let Some(rest) = name.strip_prefix("formimage") {
+            let n: usize = rest.parse().with_context(|| format!("artifact name {name:?}"))?;
+            return Ok((ArtifactKind::FormImage, n, Direction::Forward));
+        }
+        // "fft2d" must be tried before the bare "fft" prefix.
+        if let Some(rest) = name.strip_prefix("fft2d") {
+            if let Some((num, dir)) = rest.split_once('_') {
+                let n: usize =
+                    num.parse().with_context(|| format!("artifact name {name:?}"))?;
+                return Ok((ArtifactKind::Fft2d, n, dir.parse()?));
+            }
+            let n: usize = rest.parse().with_context(|| format!("artifact name {name:?}"))?;
+            return Ok((ArtifactKind::Fft2d, n, Direction::Forward));
+        }
         if let Some(rest) = name.strip_prefix("fft") {
             if let Some((num, dir)) = rest.split_once('_') {
                 let n: usize =
@@ -185,7 +210,10 @@ impl Registry {
                 return Ok((ArtifactKind::Fft, n, direction));
             }
         }
-        bail!("artifact name {name:?} is not fft{{n}}_{{fwd|inv}} or rangecomp{{n}}")
+        bail!(
+            "artifact name {name:?} is not fft{{n}}_{{fwd|inv}}, rangecomp{{n}}, \
+             fft2d{{n}}[_{{fwd|inv}}], or formimage{{n}}"
+        )
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -209,6 +237,21 @@ impl Registry {
     /// compression) at size `n`.
     pub fn rangecomp_name(n: usize) -> String {
         format!("rangecomp{n}")
+    }
+
+    /// Canonical artifact name for a 2D FFT with row length `n` (the
+    /// row count rides as the batch). Inverse appends `_inv`.
+    pub fn fft2d_name(n: usize, direction: Direction) -> String {
+        match direction {
+            Direction::Forward => format!("fft2d{n}"),
+            Direction::Inverse => format!("fft2d{n}_inv"),
+        }
+    }
+
+    /// Canonical artifact name for whole-image formation with range
+    /// line length `n` (azimuth length = the batch).
+    pub fn formimage_name(n: usize) -> String {
+        format!("formimage{n}")
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
@@ -249,6 +292,11 @@ mod tests {
             ("fft1013_inv", 1013, ArtifactKind::Fft, Direction::Inverse),
             ("fft128_fwd", 128, ArtifactKind::Fft, Direction::Forward),
             ("rangecomp1000", 1000, ArtifactKind::RangeComp, Direction::Forward),
+            ("fft2d512", 512, ArtifactKind::Fft2d, Direction::Forward),
+            ("fft2d512_inv", 512, ArtifactKind::Fft2d, Direction::Inverse),
+            ("fft2d480", 480, ArtifactKind::Fft2d, Direction::Forward),
+            ("formimage512", 512, ArtifactKind::FormImage, Direction::Forward),
+            ("formimage1000", 1000, ArtifactKind::FormImage, Direction::Forward),
         ] {
             let meta = r.resolve(name).unwrap_or_else(|e| panic!("{name}: {e:#}"));
             assert_eq!((meta.n, meta.kind, meta.direction), (n, kind, dir), "{name}");
@@ -256,7 +304,19 @@ mod tests {
             assert!(meta.file.is_none());
         }
         // Out-of-range sizes and garbage names still fail.
-        for bad in ["fft8193_fwd", "fft0_fwd", "fft32768_inv", "fft999x_fwd", "fftx", "bogus"] {
+        for bad in [
+            "fft8193_fwd",
+            "fft0_fwd",
+            "fft32768_inv",
+            "fft999x_fwd",
+            "fftx",
+            "bogus",
+            "fft2d0",
+            "fft2d32768",
+            "fft2dx",
+            "formimage0",
+            "formimagex",
+        ] {
             assert!(r.resolve(bad).is_err(), "{bad} must not resolve");
         }
         // `get` stays the strict compiled inventory.
@@ -268,6 +328,14 @@ mod tests {
         assert_eq!(Registry::fft_name(4096, Direction::Forward), "fft4096_fwd");
         assert_eq!(Registry::fft_name(512, Direction::Inverse), "fft512_inv");
         assert_eq!(Registry::rangecomp_name(2048), "rangecomp2048");
+        assert_eq!(Registry::fft2d_name(512, Direction::Forward), "fft2d512");
+        assert_eq!(Registry::fft2d_name(512, Direction::Inverse), "fft2d512_inv");
+        assert_eq!(Registry::formimage_name(1024), "formimage1024");
+        // The name helpers round-trip through the resolve grammar.
+        let r = Registry::default_set(32);
+        for name in ["fft2d512", "fft2d512_inv", "formimage1024"] {
+            assert!(r.resolve(name).is_ok(), "{name}");
+        }
     }
 
     #[test]

@@ -41,6 +41,10 @@ pub struct Job {
     /// no tile ever copies the spectrum (PJRT needs flat input literals
     /// and keeps using `inputs[2..4]` instead).
     pub filter: Option<Arc<SplitComplex>>,
+    /// Second shared filter for `FormImage` jobs: the azimuth matched
+    /// filter applied by the column phase (`filter` carries the range
+    /// filter for the row phase). Always `None` for 1D artifacts.
+    pub filter2: Option<Arc<SplitComplex>>,
     /// Exchange-tier precision the native backend should execute at
     /// (requests carry a precision policy; PJRT artifacts are compiled
     /// f32 and ignore it).

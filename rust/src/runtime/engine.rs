@@ -174,7 +174,7 @@ impl Engine {
         inputs: Vec<Vec<f32>>,
         dims: Vec<Vec<usize>>,
     ) -> Result<Vec<Vec<f32>>> {
-        self.execute_job(artifact, inputs, dims, None, bfp::select())
+        self.execute_job(artifact, inputs, dims, None, None, bfp::select())
     }
 
     fn execute_job(
@@ -183,11 +183,20 @@ impl Engine {
         inputs: Vec<Vec<f32>>,
         dims: Vec<Vec<usize>>,
         filter: Option<Arc<SplitComplex>>,
+        filter2: Option<Arc<SplitComplex>>,
         precision: Precision,
     ) -> Result<Vec<Vec<f32>>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Job { artifact: artifact.to_string(), inputs, dims, filter, precision, reply })
+            .send(Job {
+                artifact: artifact.to_string(),
+                inputs,
+                dims,
+                filter,
+                filter2,
+                precision,
+                reply,
+            })
             .map_err(|_| anyhow!("device thread has exited"))?;
         rx.recv().map_err(|_| anyhow!("device thread dropped the job"))?
     }
@@ -231,6 +240,7 @@ impl Engine {
             vec![x.re.clone(), x.im.clone()],
             vec![vec![batch, n], vec![batch, n]],
             None,
+            None,
             precision,
         )?;
         Ok(SplitComplex { re: out[0].clone(), im: out[1].clone() })
@@ -262,6 +272,7 @@ impl Engine {
             &name,
             vec![x.re.clone(), x.im.clone(), h.re.clone(), h.im.clone()],
             vec![vec![batch, n], vec![batch, n], vec![n], vec![n]],
+            None,
             None,
             precision,
         )?;
@@ -303,10 +314,73 @@ impl Engine {
             vec![x.re, x.im],
             vec![vec![batch, n], vec![batch, n]],
             Some(h.clone()),
+            None,
             precision,
         )?;
         let im = out.pop().ok_or_else(|| anyhow!("rangecomp returned no im plane"))?;
         let re = out.pop().ok_or_else(|| anyhow!("rangecomp returned no re plane"))?;
+        Ok(SplitComplex { re, im })
+    }
+
+    /// Pipelined 2D FFT of a `(batch, n)` row-major matrix: row FFTs,
+    /// blocked corner turn, column FFTs, turn back — one job on the
+    /// device thread, staged through the executor's pooled workspaces.
+    /// Unlike [`Self::fft_batch_prec`] the row count (`batch`) is NOT
+    /// pinned to the artifact batch tile: a 2D request is one whole
+    /// matrix, never coalesced with neighbours.
+    pub fn fft2d_prec(
+        &self,
+        x: SplitComplex,
+        n: usize,
+        batch: usize,
+        direction: Direction,
+        precision: Precision,
+    ) -> Result<SplitComplex> {
+        let name = Registry::fft2d_name(n, direction);
+        let mut out = self.execute_job(
+            &name,
+            vec![x.re, x.im],
+            vec![vec![batch, n], vec![batch, n]],
+            None,
+            None,
+            precision,
+        )?;
+        let im = out.pop().ok_or_else(|| anyhow!("fft2d returned no im plane"))?;
+        let re = out.pop().ok_or_else(|| anyhow!("fft2d returned no re plane"))?;
+        Ok(SplitComplex { re, im })
+    }
+
+    /// Whole-image formation: fused range compression over every row,
+    /// blocked corner turn, fused azimuth compression over every
+    /// column, turn back — one pipelined pass over a `(batch, n)`
+    /// scene. Both filter spectra travel as shared `Arc`s (`range` has
+    /// length `n`, `azimuth` length `batch`), so no tile ever copies a
+    /// filter; `x` is consumed, not cloned. Native backend only — the
+    /// PJRT artifact set has no 2D entries.
+    pub fn form_image_shared_prec(
+        &self,
+        x: SplitComplex,
+        range: &Arc<SplitComplex>,
+        azimuth: &Arc<SplitComplex>,
+        n: usize,
+        batch: usize,
+        precision: Precision,
+    ) -> Result<SplitComplex> {
+        anyhow::ensure!(
+            self.backend_used != Backend::Pjrt,
+            "form_image requires the native backend (no 2D PJRT artifacts)"
+        );
+        let name = Registry::formimage_name(n);
+        let mut out = self.execute_job(
+            &name,
+            vec![x.re, x.im],
+            vec![vec![batch, n], vec![batch, n]],
+            Some(range.clone()),
+            Some(azimuth.clone()),
+            precision,
+        )?;
+        let im = out.pop().ok_or_else(|| anyhow!("formimage returned no im plane"))?;
+        let re = out.pop().ok_or_else(|| anyhow!("formimage returned no re plane"))?;
         Ok(SplitComplex { re, im })
     }
 }

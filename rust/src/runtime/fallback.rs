@@ -20,21 +20,41 @@
 
 use super::artifact::{ArtifactKind, Registry};
 use super::device::Job;
+use crate::fft::bfp::Precision;
 use crate::fft::codelet::{self, CodeletBackend};
+use crate::fft::exec::BatchExecutor;
+use crate::fft::fft2d::Fft2dExecutor;
 use crate::fft::plan::{NativePlanner, Variant};
+use crate::fft::Direction;
 use crate::util::complex::SplitComplex;
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Cache key for one 2D executor shape: `(rows, cols, precision,
+/// fused)` — `fused` separates `FormImage` (pipeline phases, resolved
+/// through the rangecomp artifact entries) from plain `Fft2d`.
+type Key2d = (usize, usize, Precision, bool);
 
 pub struct NativeExec {
     registry: Registry,
     planner: NativePlanner,
     /// Stage-codelet backend every executor this backend builds runs on.
     codelet: CodeletBackend,
+    /// 2D executors by shape. Each owns its corner-turn staging pool,
+    /// so repeated same-shape 2D tiles reuse the staging planes exactly
+    /// as 1D tiles reuse executor workspaces.
+    fft2d: Mutex<HashMap<Key2d, Arc<Fft2dExecutor>>>,
 }
 
 impl NativeExec {
     pub fn new(registry: Registry) -> Self {
-        NativeExec { registry, planner: NativePlanner::new(), codelet: codelet::select() }
+        NativeExec {
+            registry,
+            planner: NativePlanner::new(),
+            codelet: codelet::select(),
+            fft2d: Mutex::new(HashMap::new()),
+        }
     }
 
     /// The stage-codelet backend this backend's executors dispatch
@@ -50,15 +70,73 @@ impl NativeExec {
         self.planner.workspace_stats()
     }
 
+    /// Map an artifact's variant tag to a native plan variant. All
+    /// artifact variants compute the same transform; the native library
+    /// distinguishes only the radix schedule. Synthesised any-N entries
+    /// carry "auto": the per-size preferred ladder for power-of-two
+    /// sizes, and for everything else the variant is ignored
+    /// (`executor_tuned` routes to the any-N plans).
+    fn variant_for(tag: &str, n: usize) -> Variant {
+        match tag {
+            "radix4" => Variant::Radix4,
+            "auto" if n.is_power_of_two() => Variant::preferred(n),
+            _ => Variant::Radix8,
+        }
+    }
+
+    /// One 2D-phase executor for lines of length `len`, resolved
+    /// through the same artifact entry a 1D tile of that size would use
+    /// (`rangecomp{len}` for fused phases, `fft{len}_fwd` otherwise) —
+    /// so the variant mapping and tuned-batch hint match the 1D serving
+    /// path exactly, and the 2D result is bitwise the composition of 1D
+    /// tiles through the same executors.
+    fn axis_exec(
+        &self,
+        len: usize,
+        fused: bool,
+        precision: Precision,
+    ) -> Result<Arc<BatchExecutor>> {
+        let name = if fused {
+            Registry::rangecomp_name(len)
+        } else {
+            Registry::fft_name(len, Direction::Forward)
+        };
+        let meta = self.registry.resolve(&name)?;
+        let variant = Self::variant_for(&meta.variant, meta.n);
+        self.planner.executor_tuned(meta.n, variant, self.codelet, precision, meta.batch)
+    }
+
+    /// The cached 2D executor for one `(rows, cols, precision, fused)`
+    /// shape, built on first use. Caching keeps the corner-turn staging
+    /// pool alive across tiles: repeated same-shape 2D requests are
+    /// staging-allocation-free after warmup.
+    fn exec2d(
+        &self,
+        rows: usize,
+        cols: usize,
+        fused: bool,
+        precision: Precision,
+    ) -> Result<Arc<Fft2dExecutor>> {
+        let key = (rows, cols, precision, fused);
+        if let Some(ex) = self.fft2d.lock().unwrap().get(&key) {
+            return Ok(ex.clone());
+        }
+        let row_exec = self.axis_exec(cols, fused, precision)?;
+        let col_exec = self.axis_exec(rows, fused, precision)?;
+        let ex = Arc::new(Fft2dExecutor::new(row_exec, col_exec)?);
+        Ok(self.fft2d.lock().unwrap().entry(key).or_insert(ex).clone())
+    }
+
     pub fn execute(&self, job: &mut Job) -> Result<Vec<Vec<f32>>> {
         // `resolve` falls through to the canonical-name grammar for
         // any-N sizes the compiled manifest never lists — the native
         // backend serves them through the same executor paths.
         let meta = self.registry.resolve(&job.artifact)?;
-        // RangeComp jobs carrying a shared filter Arc ship only the two
-        // data planes; the flat 4-input shape remains for PJRT parity.
+        // RangeComp/FormImage jobs carrying shared filter Arcs ship
+        // only the two data planes; the flat shapes remain for PJRT
+        // parity (and tests).
         let expect_inputs = match (&meta.kind, &job.filter) {
-            (ArtifactKind::RangeComp, Some(_)) => 2,
+            (ArtifactKind::RangeComp | ArtifactKind::FormImage, Some(_)) => 2,
             (kind, _) => kind.num_inputs(),
         };
         ensure!(
@@ -69,27 +147,20 @@ impl NativeExec {
             job.inputs.len()
         );
         let (n, batch) = (meta.n, meta.batch);
-        // All artifact variants compute the same transform; the native
-        // library distinguishes only the radix schedule. Synthesised
-        // any-N entries carry "auto": the per-size preferred ladder for
-        // power-of-two sizes, and for everything else the variant is
-        // ignored (`executor_tuned` routes to the any-N plans).
-        let variant = match meta.variant.as_str() {
-            "radix4" => Variant::Radix4,
-            "auto" if meta.n.is_power_of_two() => Variant::preferred(meta.n),
-            _ => Variant::Radix8,
-        };
-        // The job's precision policy picks the exchange tier; plans and
-        // pooled workspaces are cached per (n, variant, backend,
-        // precision), so f32 and bfp16 tiles never share scratch shapes.
-        // The tuning cache is consulted first: a searched schedule for
-        // this (n, backend, precision, batch bucket) overrides the
-        // artifact's fixed variant, and a cold or corrupt cache degrades
-        // to exactly the variant executor served before tuning existed.
-        let exec =
-            self.planner.executor_tuned(n, variant, self.codelet, job.precision, batch)?;
+        let variant = Self::variant_for(&meta.variant, meta.n);
         match meta.kind {
             ArtifactKind::Fft => {
+                // The job's precision policy picks the exchange tier;
+                // plans and pooled workspaces are cached per (n,
+                // variant, backend, precision), so f32 and bfp16 tiles
+                // never share scratch shapes. The tuning cache is
+                // consulted first: a searched schedule for this (n,
+                // backend, precision, batch bucket) overrides the
+                // artifact's fixed variant, and a cold or corrupt cache
+                // degrades to exactly the variant executor served
+                // before tuning existed.
+                let exec =
+                    self.planner.executor_tuned(n, variant, self.codelet, job.precision, batch)?;
                 ensure!(job.inputs[0].len() == n * batch, "input size mismatch");
                 // Take the job's owned input buffers (the device thread
                 // drops the job right after this call) and transform them
@@ -102,6 +173,8 @@ impl NativeExec {
                 Ok(vec![x.re, x.im])
             }
             ArtifactKind::RangeComp => {
+                let exec =
+                    self.planner.executor_tuned(n, variant, self.codelet, job.precision, batch)?;
                 ensure!(job.inputs[0].len() == n * batch, "line size mismatch");
                 let mut s = SplitComplex {
                     re: std::mem::take(&mut job.inputs[0]),
@@ -129,6 +202,69 @@ impl NativeExec {
                 exec.execute_pipeline_auto_into(&mut s, batch, filter)?;
                 Ok(vec![s.re, s.im])
             }
+            ArtifactKind::Fft2d => {
+                // 2D tiles are one whole matrix: `n` is the row length,
+                // the row count rides in the dims (NOT the artifact
+                // batch tile — a matrix is never coalesced).
+                let rows = job
+                    .dims
+                    .first()
+                    .and_then(|d| d.first())
+                    .copied()
+                    .ok_or_else(|| anyhow!("fft2d job carries no dims"))?;
+                ensure!(rows >= 1, "fft2d needs at least one row");
+                ensure!(job.inputs[0].len() == rows * n, "2d input size mismatch");
+                let ex = self.exec2d(rows, n, false, job.precision)?;
+                let mut x = SplitComplex {
+                    re: std::mem::take(&mut job.inputs[0]),
+                    im: std::mem::take(&mut job.inputs[1]),
+                };
+                ex.execute_2d_into(&mut x, meta.direction)?;
+                Ok(vec![x.re, x.im])
+            }
+            ArtifactKind::FormImage => {
+                let rows = job
+                    .dims
+                    .first()
+                    .and_then(|d| d.first())
+                    .copied()
+                    .ok_or_else(|| anyhow!("formimage job carries no dims"))?;
+                ensure!(rows >= 1, "formimage needs at least one row");
+                ensure!(job.inputs[0].len() == rows * n, "scene size mismatch");
+                let ex = self.exec2d(rows, n, true, job.precision)?;
+                let mut x = SplitComplex {
+                    re: std::mem::take(&mut job.inputs[0]),
+                    im: std::mem::take(&mut job.inputs[1]),
+                };
+                // Both filters travel as shared Arcs on the serving
+                // path (range in `filter`, azimuth in `filter2`), or as
+                // the flat inputs[2..6] planes for PJRT-shaped jobs.
+                let shared_r = job.filter.take();
+                let shared_a = job.filter2.take();
+                let (flat_r, flat_a);
+                let (range, azimuth): (&SplitComplex, &SplitComplex) =
+                    match (&shared_r, &shared_a) {
+                        (Some(r), Some(a)) => (r, a),
+                        (None, None) => {
+                            flat_r = SplitComplex {
+                                re: std::mem::take(&mut job.inputs[2]),
+                                im: std::mem::take(&mut job.inputs[3]),
+                            };
+                            flat_a = SplitComplex {
+                                re: std::mem::take(&mut job.inputs[4]),
+                                im: std::mem::take(&mut job.inputs[5]),
+                            };
+                            (&flat_r, &flat_a)
+                        }
+                        _ => anyhow::bail!(
+                            "formimage needs both shared filters or neither"
+                        ),
+                    };
+                ensure!(range.len() == n, "range filter size mismatch");
+                ensure!(azimuth.len() == rows, "azimuth filter size mismatch");
+                ex.form_image_into(&mut x, range, azimuth)?;
+                Ok(vec![x.re, x.im])
+            }
         }
     }
 }
@@ -152,6 +288,7 @@ mod tests {
             inputs,
             dims,
             filter: None,
+            filter2: None,
             precision: crate::fft::bfp::Precision::F32,
             reply: tx,
         };
@@ -311,6 +448,118 @@ mod tests {
             vec![vec![batch, n], vec![batch, n]],
         );
         assert!(exec.execute(&mut bad).is_err());
+    }
+
+    #[test]
+    fn native_exec_fft2d_is_bitwise_two_1d_passes() {
+        // The fft2d artifact must equal row FFTs -> corner turn ->
+        // column FFTs -> turn back, composed from 1D jobs through the
+        // same backend, bit for bit (F32: the exchange is pure
+        // movement). The row count is deliberately not the batch tile.
+        use crate::fft::tile::{transpose_into, FusedStore};
+        let exec = NativeExec::new(Registry::default_set(32));
+        let mut rng = Rng::new(57);
+        let (rows, cols) = (96usize, 256usize);
+        let x = SplitComplex { re: rng.signal(rows * cols), im: rng.signal(rows * cols) };
+        let (mut job, _rx) = make_job(
+            "fft2d256",
+            vec![x.re.clone(), x.im.clone()],
+            vec![vec![rows, cols], vec![rows, cols]],
+        );
+        let out = exec.execute(&mut job).unwrap();
+
+        // Reference: 1D executors resolved exactly as axis_exec does.
+        let row_exec = exec.axis_exec(cols, false, crate::fft::bfp::Precision::F32).unwrap();
+        let col_exec = exec.axis_exec(rows, false, crate::fft::bfp::Precision::F32).unwrap();
+        let mut want = x.clone();
+        row_exec.execute_batch_auto_into(&mut want, rows, Direction::Forward).unwrap();
+        let mut t = SplitComplex::zeros(rows * cols);
+        transpose_into(&want.re, &want.im, &mut t.re, &mut t.im, rows, cols, FusedStore::Plain);
+        col_exec.execute_batch_auto_into(&mut t, cols, Direction::Forward).unwrap();
+        transpose_into(&t.re, &t.im, &mut want.re, &mut want.im, cols, rows, FusedStore::Plain);
+        assert_eq!(out[0], want.re);
+        assert_eq!(out[1], want.im);
+    }
+
+    #[test]
+    fn native_exec_formimage_shared_filters_run() {
+        use std::sync::Arc;
+        let exec = NativeExec::new(Registry::default_set(32));
+        let mut rng = Rng::new(58);
+        let (rows, cols) = (64usize, 512usize);
+        let x = SplitComplex { re: rng.signal(rows * cols), im: rng.signal(rows * cols) };
+        let hr = SplitComplex { re: rng.signal(cols), im: rng.signal(cols) };
+        let ha = SplitComplex { re: rng.signal(rows), im: rng.signal(rows) };
+        // Flat 6-input shape.
+        let (mut flat_job, _rx) = make_job(
+            "formimage512",
+            vec![
+                x.re.clone(),
+                x.im.clone(),
+                hr.re.clone(),
+                hr.im.clone(),
+                ha.re.clone(),
+                ha.im.clone(),
+            ],
+            vec![
+                vec![rows, cols],
+                vec![rows, cols],
+                vec![cols],
+                vec![cols],
+                vec![rows],
+                vec![rows],
+            ],
+        );
+        let flat = exec.execute(&mut flat_job).unwrap();
+        // Shared-Arc 2-input shape must produce the same bits.
+        let (mut shared_job, _rx2) = make_job(
+            "formimage512",
+            vec![x.re.clone(), x.im.clone()],
+            vec![vec![rows, cols], vec![rows, cols]],
+        );
+        shared_job.filter = Some(Arc::new(hr));
+        shared_job.filter2 = Some(Arc::new(ha));
+        let shared = exec.execute(&mut shared_job).unwrap();
+        assert_eq!(flat, shared);
+        // One shared filter without the other is an error, not a
+        // silent fall-through to the flat planes.
+        let (mut bad, _rx3) = make_job(
+            "formimage512",
+            vec![x.re.clone(), x.im.clone()],
+            vec![vec![rows, cols], vec![rows, cols]],
+        );
+        bad.filter = shared_job.filter.clone();
+        assert!(exec.execute(&mut bad).is_err());
+    }
+
+    #[test]
+    fn repeated_2d_tiles_reuse_cached_executor_and_staging() {
+        // Same-shape 2D tiles must hit the cached Fft2dExecutor, whose
+        // staging pool stops growing after warmup.
+        let exec = NativeExec::new(Registry::default_set(32));
+        let mut rng = Rng::new(59);
+        let (rows, cols) = (64usize, 256usize);
+        let mk = |rng: &mut Rng| {
+            make_job(
+                "fft2d256",
+                vec![rng.signal(rows * cols), rng.signal(rows * cols)],
+                vec![vec![rows, cols], vec![rows, cols]],
+            )
+        };
+        let (mut job, _rx) = mk(&mut rng);
+        exec.execute(&mut job).unwrap();
+        let ex = exec
+            .exec2d(rows, cols, false, crate::fft::bfp::Precision::F32)
+            .unwrap();
+        let (created, _) = ex.pool_stats();
+        let grows = ex.pool_grow_events();
+        for _ in 0..4 {
+            let (mut job, _rx) = mk(&mut rng);
+            exec.execute(&mut job).unwrap();
+        }
+        assert_eq!(exec.fft2d.lock().unwrap().len(), 1, "one cached 2D shape");
+        assert_eq!(ex.pool_stats().0, created, "staging pool must not grow");
+        assert_eq!(ex.pool_grow_events(), grows, "staging must not reallocate");
     }
 
     #[test]

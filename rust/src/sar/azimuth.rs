@@ -11,19 +11,23 @@
 
 use super::chirp::Chirp;
 use crate::coordinator::FftService;
+use crate::fft::tile::{transpose_into, FusedStore};
 use crate::fft::Direction;
 use crate::util::complex::SplitComplex;
 use anyhow::Result;
 
 /// Corner turn: (rows, cols) row-major -> (cols, rows) row-major.
+///
+/// Thin wrapper over the cache-blocked [`crate::fft::tile`] transpose —
+/// pure data movement, so the blocked walk is bitwise identical to the
+/// naive scatter loop it replaced (pinned by the tile-layer proptests).
+/// Inside the engine the same tier runs the exchange between the 2D row
+/// and column phases, optionally staged at `Bfp16`; this host-side form
+/// stays f32.
 pub fn corner_turn(x: &SplitComplex, rows: usize, cols: usize) -> SplitComplex {
     assert_eq!(x.len(), rows * cols);
     let mut out = SplitComplex::zeros(rows * cols);
-    for r in 0..rows {
-        for c in 0..cols {
-            out.set(c * rows + r, x.get(r * cols + c));
-        }
-    }
+    transpose_into(&x.re, &x.im, &mut out.re, &mut out.im, rows, cols, FusedStore::Plain);
     out
 }
 
@@ -56,20 +60,28 @@ pub fn target_history(n_az: usize, a0: usize, doppler_rate: f64) -> SplitComplex
 /// host-side multiply pass over the block.
 pub fn compress_azimuth(
     svc: &FftService,
-    data: &SplitComplex,
+    data: SplitComplex,
     n_range: usize,
     n_az: usize,
     doppler_rate: f64,
 ) -> Result<SplitComplex> {
     // Frequency-domain matched filter from the azimuth reference.
+    let h = azimuth_filter(svc, n_az, doppler_rate)?;
+    let handle = svc.register_filter(n_az, h)?;
+    svc.matched_filter(&handle, data, n_range)
+}
+
+/// Frequency-domain azimuth matched filter: `conj(FFT(reference))`.
+/// Shared by [`compress_azimuth`] and the one-request `FormImage` path,
+/// which carries it as the column phase's fused multiply.
+pub fn azimuth_filter(svc: &FftService, n_az: usize, doppler_rate: f64) -> Result<SplitComplex> {
     let ref_fn = azimuth_reference(n_az, doppler_rate);
     let spec = svc.fft(n_az, Direction::Forward, ref_fn, 1)?;
     let mut h = SplitComplex::zeros(n_az);
     for i in 0..n_az {
         h.set(i, spec.get(i).conj());
     }
-    let handle = svc.register_filter(n_az, h)?;
-    svc.matched_filter(&handle, data.clone(), n_range)
+    Ok(h)
 }
 
 #[cfg(test)]
@@ -115,7 +127,7 @@ mod tests {
         for i in 0..n_az {
             data.set(2 * n_az + i, hist.get(i));
         }
-        let out = compress_azimuth(&svc, &data, n_range, n_az, kr).unwrap();
+        let out = compress_azimuth(&svc, data, n_range, n_az, kr).unwrap();
         // Focused peak on range row 2 at azimuth ~100; other rows quiet.
         let row = |r: usize| -> Vec<f32> {
             (0..n_az).map(|i| out.get(r * n_az + i).abs()).collect()

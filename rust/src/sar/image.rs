@@ -1,11 +1,21 @@
 //! Full 2D SAR image formation: range compression -> corner turn ->
 //! azimuth compression (the classic range-Doppler algorithm skeleton,
 //! paper §I/§VII-D).
+//!
+//! [`ImageFormation::form`] submits the whole scene as **one**
+//! `FormImage` request: the service runs both matched-filter phases
+//! around the engine's blocked corner-turn exchange, so no pixel ever
+//! crosses the host boundary between phases. The caller-orchestrated
+//! two-pass shape (range request -> host corner turn -> azimuth
+//! request) is kept as [`ImageFormation::form_composed`] — at `F32` the
+//! two are bitwise identical, which is the acceptance check for the
+//! one-request path.
 
-use super::azimuth::{compress_azimuth, corner_turn, target_history};
+use super::azimuth::{azimuth_filter, corner_turn, target_history};
 use super::chirp::Chirp;
 use super::range::RangeCompressor;
 use crate::coordinator::FftService;
+use crate::fft::bfp::{self, Precision};
 use crate::util::complex::{SplitComplex, C32};
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -97,26 +107,64 @@ pub struct ImageFormation {
 }
 
 impl ImageFormation {
-    /// echoes (n_az, n_range) -> focused image (n_az, n_range).
+    /// echoes (n_az, n_range) -> focused image (n_az, n_range), as one
+    /// `FormImage` request at the process-default precision.
     ///
     /// Registers the range and azimuth filters ad hoc (one each per
     /// call; idle filter queues are evicted after draining, so repeated
-    /// calls don't accumulate state). A pipeline issuing many blocks
-    /// against one service should hold a `RangeCompressor` +
-    /// [`crate::coordinator::FilterHandle`] and use
-    /// `compress_matched_with` so blocks coalesce into shared tiles.
+    /// calls don't accumulate state). A pipeline issuing many scenes
+    /// against one service should register both filters once and call
+    /// [`FftService::form_image`] directly so its requests share them.
     pub fn form(&self, svc: &FftService, echoes: &SplitComplex) -> Result<SplitComplex> {
-        let rc = RangeCompressor::new(self.chirp, self.n_range);
+        self.form_prec(svc, echoes, bfp::select())
+    }
+
+    /// [`Self::form`] with the exchange precision pinned: the whole
+    /// scene travels as one request — range compression rows, the
+    /// engine's blocked corner-turn exchange (BFP-staged at `Bfp16`),
+    /// azimuth compression columns with the filter multiply fused into
+    /// the column phase's last forward stage.
+    pub fn form_prec(
+        &self,
+        svc: &FftService,
+        echoes: &SplitComplex,
+        precision: Precision,
+    ) -> Result<SplitComplex> {
+        let rc = RangeCompressor::new_with_precision(self.chirp, self.n_range, precision);
+        let range = rc.register_filter(svc)?;
+        let h = azimuth_filter(svc, self.n_az, self.doppler_rate)?;
+        let azimuth = svc.register_filter_prec(self.n_az, h, precision)?;
+        svc.form_image(&range, &azimuth, echoes.clone(), self.n_az)
+    }
+
+    /// The caller-orchestrated two-pass composition the one-request
+    /// path replaced: range request -> host corner turn -> azimuth
+    /// request -> turn back. Kept as the acceptance reference — at
+    /// `F32` the exchange is pure movement, so [`Self::form_prec`] is
+    /// bitwise this composition.
+    pub fn form_composed_prec(
+        &self,
+        svc: &FftService,
+        echoes: &SplitComplex,
+        precision: Precision,
+    ) -> Result<SplitComplex> {
+        let rc = RangeCompressor::new_with_precision(self.chirp, self.n_range, precision);
         // 1. Range compression: batch of n_az range lines through the
-        // fused matched-filter service path (one round trip, the
-        // multiply fused into the executor's forward pass).
+        // fused matched-filter service path.
         let range_done = rc.compress_matched(svc, echoes, self.n_az)?;
         // 2. Corner turn to (n_range, n_az).
         let turned = corner_turn(&range_done, self.n_az, self.n_range);
         // 3. Azimuth compression across lines, per range bin.
-        let az_done = compress_azimuth(svc, &turned, self.n_range, self.n_az, self.doppler_rate)?;
+        let h = azimuth_filter(svc, self.n_az, self.doppler_rate)?;
+        let handle = svc.register_filter_prec(self.n_az, h, precision)?;
+        let az_done = svc.matched_filter(&handle, turned, self.n_range)?;
         // 4. Turn back to (n_az, n_range).
         Ok(corner_turn(&az_done, self.n_range, self.n_az))
+    }
+
+    /// [`Self::form_composed_prec`] at the process-default precision.
+    pub fn form_composed(&self, svc: &FftService, echoes: &SplitComplex) -> Result<SplitComplex> {
+        self.form_composed_prec(svc, echoes, bfp::select())
     }
 }
 
@@ -181,5 +229,37 @@ mod tests {
         let image = form.form(&svc, &echoes).unwrap();
         let hits = score_image(&image, &scene, 2, 2);
         assert_eq!(hits, 3, "all 2D targets must focus (got {hits})");
+        let m = svc.drain().unwrap();
+        assert!(m.image_tiles >= 1, "whole-scene formation must run as a 2D tile");
+    }
+
+    #[test]
+    fn one_request_form_is_bitwise_composed_two_pass() {
+        let svc = FftService::start(ServiceConfig {
+            backend: Backend::Native,
+            max_wait: std::time::Duration::from_millis(1),
+            workers: 2,
+            warm: false,
+            shards: 1,
+        })
+        .unwrap();
+        let mut rng = Rng::new(501);
+        let (nr, na) = (256usize, 64usize);
+        let chirp = Chirp::new(100e6, 32, 0.8);
+        let scene = Scene2d::random(nr, na, 2, chirp.samples, &mut rng);
+        let echoes = scene.echoes(&chirp, &mut rng);
+        let form = ImageFormation {
+            chirp,
+            n_range: nr,
+            n_az: na,
+            doppler_rate: scene.doppler_rate,
+        };
+        // F32: the corner-turn exchange is pure movement, so the fused
+        // one-request image equals the two-pass composition bitwise.
+        let fused = form.form_prec(&svc, &echoes, crate::fft::bfp::Precision::F32).unwrap();
+        let composed =
+            form.form_composed_prec(&svc, &echoes, crate::fft::bfp::Precision::F32).unwrap();
+        assert_eq!(fused.re, composed.re);
+        assert_eq!(fused.im, composed.im);
     }
 }

@@ -9,6 +9,20 @@
 //! compression through the FFT service, checking that targets focus at
 //! their true range bins — a full-loop correctness *and* throughput
 //! driver (`examples/sar_range_compression.rs`).
+//!
+//! # The corner turn
+//!
+//! Between range and azimuth compression the scene matrix must be
+//! transposed — the memory-bound "corner turn" of every SAR text.
+//! [`azimuth::corner_turn`] is a thin wrapper over the cache-blocked
+//! [`crate::fft::tile`] transpose (bitwise the naive scatter loop it
+//! replaced), but the preferred path no longer turns on the host at
+//! all: [`image::ImageFormation::form`] ships the whole scene as one
+//! `FormImage` request and the engine runs the turn as its internal
+//! row/column exchange — BFP-staged at `Bfp16`, so the corner-turn
+//! bytes are half-width exactly where the paper says the bottleneck
+//! lives. Under the sharded coordinator the same exchange becomes the
+//! cross-shard data motion, bitwise unchanged.
 
 pub mod azimuth;
 pub mod chirp;

@@ -31,8 +31,11 @@ pub fn human_bytes(b: usize) -> String {
 }
 
 /// Nominal FFT FLOP count used throughout the paper: `5 N log2 N`.
+/// Non-power-of-two lines (mixed-radix / Rader / Bluestein serving)
+/// are billed by the same convention with a real-valued `log2 N` —
+/// exact for powers of two, so the pow2 counts are unchanged.
 pub fn fft_flops(n: usize) -> f64 {
-    5.0 * n as f64 * (ilog2_exact(n) as f64)
+    5.0 * n as f64 * (n as f64).log2()
 }
 
 /// Nominal FLOP count of one matched-filter pipeline line (the fused
@@ -41,6 +44,21 @@ pub fn fft_flops(n: usize) -> f64 {
 /// per bin (4 mul + 2 add).
 pub fn pipeline_flops(n: usize) -> f64 {
     2.0 * fft_flops(n) + 6.0 * n as f64
+}
+
+/// Nominal FLOP count of one `rows x cols` 2D FFT: `rows` row
+/// transforms at `5 Nc log2 Nc` plus `cols` column transforms at
+/// `5 Nr log2 Nr` (the corner turn is pure movement and counts zero).
+pub fn fft2d_flops(rows: usize, cols: usize) -> f64 {
+    rows as f64 * fft_flops(cols) + cols as f64 * fft_flops(rows)
+}
+
+/// Nominal FLOP count of one whole-image formation (`FormImage`): both
+/// phases are full matched-filter pipelines (forward FFT + fused
+/// multiply + inverse FFT per line), so each line costs
+/// [`pipeline_flops`] of its length.
+pub fn formimage_flops(rows: usize, cols: usize) -> f64 {
+    rows as f64 * pipeline_flops(cols) + cols as f64 * pipeline_flops(rows)
 }
 
 /// GFLOPS given nominal FLOPs for a whole batch and elapsed seconds.
@@ -84,9 +102,34 @@ mod tests {
     }
 
     #[test]
+    fn fft_flops_handles_any_n() {
+        // Any-N serving bills the same 5 N log2 N convention; the count
+        // must be finite and monotone, not panic, for non-pow2 lines.
+        let f = fft_flops(1000);
+        assert!(f.is_finite() && f > fft_flops(512) && f < fft_flops(2048), "{f}");
+        assert_eq!(fft_flops(1), 0.0);
+    }
+
+    #[test]
     fn pipeline_flops_is_two_ffts_plus_multiply() {
         // N=4096: 2*245760 + 6*4096 = 516096.
         assert_eq!(pipeline_flops(4096), 516_096.0);
+    }
+
+    #[test]
+    fn fft2d_flops_sums_both_phases() {
+        // 64 rows of 4096 + 4096 cols of 64: 64*245760 + 4096*5*64*6.
+        assert_eq!(fft2d_flops(64, 4096), 64.0 * 245_760.0 + 4096.0 * 1_920.0);
+        // Symmetric in its arguments.
+        assert_eq!(fft2d_flops(64, 4096), fft2d_flops(4096, 64));
+    }
+
+    #[test]
+    fn formimage_flops_is_two_pipelined_phases() {
+        assert_eq!(
+            formimage_flops(256, 512),
+            256.0 * pipeline_flops(512) + 512.0 * pipeline_flops(256)
+        );
     }
 
     #[test]

@@ -11,10 +11,12 @@ use applefft::coordinator::replay::{replay_collect, Trace, TraceEntry};
 use applefft::coordinator::{
     FftService, MetricsSnapshot, ServiceConfig, ShardedFftService,
 };
-use applefft::fft::bfp::Precision;
+use applefft::fft::bfp::{snr_db, Precision};
 use applefft::fft::plan::NativePlanner;
 use applefft::fft::Direction;
 use applefft::runtime::Backend;
+use applefft::sar::azimuth::azimuth_filter;
+use applefft::sar::{Chirp, ImageFormation, RangeCompressor, Scene2d};
 use applefft::testkit::{check, UlpTable, PAPER_SIZES};
 use applefft::util::complex::SplitComplex;
 use applefft::util::rng::Rng;
@@ -282,6 +284,109 @@ fn prop_any_n_traces_replay_bitwise_sharded_vs_single() {
         }
         assert_eq!(multi.drain().unwrap().failures, 0);
     });
+}
+
+/// ISSUE 8 tentpole gate: whole-matrix 2D requests — `Fft2d` in both
+/// directions and whole-scene `FormImage` — are bitwise identical
+/// between the sharded coordinator (shard counts 1-4) and the single
+/// service, at both exchange precisions, on a square and a non-square
+/// matrix. The decomposed row/column striping plus the coordinator-side
+/// corner-turn exchange cannot be told apart from the engine's own
+/// fused 2D path, because both call exactly `fft::tile::
+/// exchange_transpose` around position-independent per-line tiles.
+#[test]
+fn sharded_2d_requests_bitwise_equal_single_all_shard_counts() {
+    let single = FftService::start(config(1)).unwrap();
+    let multis: Vec<ShardedFftService> =
+        SHARD_COUNTS.iter().map(|&s| sharded(s)).collect();
+    let mut rng = Rng::new(0x2D8);
+    for &(rows, cols) in &[(512usize, 512usize), (128, 512)] {
+        let x = SplitComplex { re: rng.signal(rows * cols), im: rng.signal(rows * cols) };
+        let hr = SplitComplex { re: rng.signal(cols), im: rng.signal(cols) };
+        let ha = SplitComplex { re: rng.signal(rows), im: rng.signal(rows) };
+        for &precision in Precision::all() {
+            for dir in [Direction::Forward, Direction::Inverse] {
+                let want = single.fft2d_prec(cols, dir, x.clone(), rows, precision).unwrap();
+                for (svc, &s) in multis.iter().zip(&SHARD_COUNTS) {
+                    let got = svc.fft2d_prec(cols, dir, x.clone(), rows, precision).unwrap();
+                    bitwise(
+                        &got,
+                        &want,
+                        &format!("fft2d {rows}x{cols} {dir:?} {precision:?} shards={s}"),
+                    );
+                }
+            }
+            // FormImage: the same registered spectra everywhere.
+            let want = {
+                let r = single.register_filter_prec(cols, hr.clone(), precision).unwrap();
+                let a = single.register_filter_prec(rows, ha.clone(), precision).unwrap();
+                single.form_image(&r, &a, x.clone(), rows).unwrap()
+            };
+            for (svc, &s) in multis.iter().zip(&SHARD_COUNTS) {
+                let r = svc.register_filter_prec(cols, hr.clone(), precision).unwrap();
+                let a = svc.register_filter_prec(rows, ha.clone(), precision).unwrap();
+                let got = svc.form_image(&r, &a, x.clone(), rows).unwrap();
+                bitwise(
+                    &got,
+                    &want,
+                    &format!("formimage {rows}x{cols} {precision:?} shards={s}"),
+                );
+            }
+        }
+    }
+    for svc in &multis {
+        assert_eq!(svc.drain().unwrap().failures, 0);
+    }
+}
+
+/// ISSUE 8 acceptance: a whole SAR scene formed through the sharded
+/// coordinator equals the caller-orchestrated two-pass composition
+/// (range request -> host corner turn -> azimuth request -> turn back)
+/// — bitwise at `F32`, where the exchange is pure movement, and within
+/// >= 40 dB of the f32 composition at `Bfp16`, where the corner turn
+/// crosses at half-width through the BFP staging planes.
+#[test]
+fn sharded_form_image_matches_two_pass_composition() {
+    let single = FftService::start(config(1)).unwrap();
+    let mut rng = Rng::new(0x54A);
+    // 512x512 plus a non-square scene (512 range bins x 128 lines).
+    for &(nr, na) in &[(512usize, 512usize), (512, 128)] {
+        let chirp = Chirp::new(100e6, 64, 0.8);
+        let scene = Scene2d::random(nr, na, 3, chirp.samples, &mut rng);
+        let echoes = scene.echoes(&chirp, &mut rng);
+        let form = ImageFormation {
+            chirp,
+            n_range: nr,
+            n_az: na,
+            doppler_rate: scene.doppler_rate,
+        };
+        let composed = form.form_composed_prec(&single, &echoes, Precision::F32).unwrap();
+        for &shards in &[2usize, 4] {
+            let svc = sharded(shards);
+            for &precision in Precision::all() {
+                let rc = RangeCompressor::new_with_precision(chirp, nr, precision);
+                let range = svc.register_filter_prec(nr, rc.filter.clone(), precision).unwrap();
+                let h = azimuth_filter(&single, na, scene.doppler_rate).unwrap();
+                let azimuth = svc.register_filter_prec(na, h, precision).unwrap();
+                let got = svc.form_image(&range, &azimuth, echoes.clone(), na).unwrap();
+                match precision {
+                    Precision::F32 => bitwise(
+                        &got,
+                        &composed,
+                        &format!("scene {nr}x{na} shards={shards}"),
+                    ),
+                    Precision::Bfp16 => {
+                        let snr = snr_db(&got, &composed);
+                        assert!(
+                            snr >= 40.0,
+                            "scene {nr}x{na} shards={shards}: bfp16 image snr {snr:.1} dB"
+                        );
+                    }
+                }
+            }
+            assert_eq!(svc.drain().unwrap().failures, 0);
+        }
+    }
 }
 
 /// The `APPLEFFT_SHARDS` env knob drives the default config (the CI
