@@ -55,5 +55,20 @@ fn main() -> anyhow::Result<()> {
             s.requests, s.tiles_dispatched, s.lines_in
         );
     }
+
+    // 6. Cluster percentiles are exact, not worst-of-shards: the merged
+    //    snapshot carries the summed histogram buckets, so these numbers
+    //    are what one service seeing all the traffic would report.
+    println!(
+        "\nmerged exact percentiles (from summed buckets):\n\
+         queue: p50 {:.1} us, p95 {:.1} us, p99 {:.1} us | \
+         exec: p50 {:.1} us, p95 {:.1} us, p99 {:.1} us",
+        m.queue_hist.percentile_us(0.50),
+        m.queue_hist.percentile_us(0.95),
+        m.queue_hist.percentile_us(0.99),
+        m.exec_hist.percentile_us(0.50),
+        m.exec_hist.percentile_us(0.95),
+        m.exec_hist.percentile_us(0.99),
+    );
     Ok(())
 }

@@ -1,0 +1,83 @@
+//! Observability-tier overhead (ISSUE 9 acceptance): the span
+//! instrumentation sits on per-line kernel hot paths (the four-step
+//! phase spans fire once per line), so this bench pins down what the
+//! disabled path costs — it must be noise-level, because a disabled
+//! span is one relaxed atomic load with no clock read — and what
+//! turning tracing on costs, which is the price an operator pays for
+//! `APPLEFFT_TRACE`.
+//!
+//! N=16384 forces the four-step decomposition (N > 4096), the
+//! worst case for span density: cols/rows/transpose spans per line on
+//! every execute. Rows: tracing off with the recorder never
+//! constructed, tracing on, then re-disabled (the post-construction
+//! disabled path — the flag off but the recorder allocated).
+
+use applefft::bench::table::{BenchJson, Table};
+use applefft::bench::Benchmark;
+use applefft::fft::plan::{NativePlanner, Variant};
+use applefft::fft::Direction;
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use applefft::util::{fft_flops, gflops};
+
+fn main() {
+    let b = Benchmark::new("obs_overhead");
+    let mut json = BenchJson::new("obs");
+    let planner = NativePlanner::new();
+    let n = 16384usize; // four-step: phase spans on the per-line hot path
+    let batch = 8usize;
+    let mut rng = Rng::new(n as u64);
+    let x = SplitComplex { re: rng.signal(n * batch), im: rng.signal(n * batch) };
+    let plan = planner.plan(n, Variant::Radix8).unwrap();
+    let run = |label: &str| {
+        let m = b.run(label, || plan.execute_batch(&x, batch, Direction::Forward).unwrap());
+        (
+            m.median_secs() / batch as f64 * 1e6,
+            gflops(fft_flops(n) * batch as f64, m.median_secs()),
+        )
+    };
+
+    // Baseline first, before anything can construct the recorder.
+    if std::env::var_os("APPLEFFT_TRACE").is_none() {
+        assert!(
+            !applefft::obs::recorder_constructed(),
+            "the off row must measure a process that never built the recorder"
+        );
+    }
+    let (off_us, off_gf) = run("tracing off (recorder never constructed)");
+
+    applefft::obs::set_enabled(true);
+    let (on_us, on_gf) = run("tracing on");
+    // Drain so the enabled run's events don't sit in the rings forever.
+    let recorded: usize = applefft::obs::take_events().iter().map(|g| g.events.len()).sum();
+
+    applefft::obs::set_enabled(false);
+    let (redis_us, redis_gf) = run("tracing re-disabled");
+
+    let mut t = Table::new(
+        &format!("Observability overhead — four-step N={n}, batch {batch}"),
+        &["mode", "us/FFT", "GFLOPS", "vs off"],
+    );
+    for (mode, us, gf) in [
+        ("tracing off (never constructed)", off_us, off_gf),
+        ("tracing on", on_us, on_gf),
+        ("tracing re-disabled", redis_us, redis_gf),
+    ] {
+        t.row(&[
+            mode.into(),
+            format!("{us:.1}"),
+            format!("{gf:.2}"),
+            format!("{:.3}x", off_us / us),
+        ]);
+    }
+    t.note("off rows bound the always-compiled cost: one relaxed load per span site");
+    t.note(&format!("the enabled run recorded {recorded} events into the per-thread rings"));
+    t.print();
+
+    json.add(&t);
+    match json.write_repo_root() {
+        Ok(path) => println!("bench json: {}", path.display()),
+        Err(e) => eprintln!("bench json write failed: {e}"),
+    }
+    println!("obs_overhead bench OK");
+}

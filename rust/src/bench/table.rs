@@ -112,8 +112,9 @@ impl Table {
 }
 
 /// Minimal JSON string escaping (quotes, backslashes, control chars) —
-/// no serde in the offline environment.
-fn json_string(s: &str) -> String {
+/// no serde in the offline environment. Shared with the Chrome trace
+/// writer ([`crate::obs::chrome`]).
+pub(crate) fn json_string(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {

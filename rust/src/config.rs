@@ -171,6 +171,11 @@ pub fn env_knobs() -> &'static [EnvKnob] {
             what: "batch-executor worker threads (default: available parallelism, capped)",
         },
         EnvKnob {
+            name: "APPLEFFT_TRACE",
+            values: "path",
+            what: "enable span tracing and write a Chrome trace-event JSON file on drain",
+        },
+        EnvKnob {
             name: "APPLEFFT_TUNE",
             values: "off|0",
             what: "disable the tuning cache; planners serve Variant::preferred only",

@@ -94,6 +94,9 @@ impl Accumulator {
         let mut a = self.inner.lock().unwrap();
         if a.first_dispatch.is_none() {
             a.first_dispatch = Some(Instant::now());
+            // Close the async queue span opened at submit: first
+            // dispatch is the queue-latency endpoint.
+            crate::obs::span(crate::obs::SpanKind::Queue).req(a.id).n(a.n).async_end();
         }
     }
 
@@ -128,6 +131,8 @@ impl AccumulatorInner {
             Some(msg) => Err(msg),
             None => Ok(std::mem::take(&mut self.out)),
         };
+        // Close the request-lifetime async span opened at submit.
+        crate::obs::span(crate::obs::SpanKind::Request).req(self.id).n(self.n).async_end();
         // Receiver may have hung up; that's the client's business.
         let _ = self.reply.send(FftResponse {
             id: self.id,

@@ -1,30 +1,43 @@
-//! Service metrics: lock-free counters + a fixed-bucket latency
-//! histogram (no external metrics crate in the offline environment).
+//! Service metrics: lock-free counters + fixed-bucket latency
+//! histograms (no external metrics crate in the offline environment).
 //!
 //! Alongside the latency histograms the service tracks nominal FLOPs
 //! (the paper's `5·N·log2 N` per line, §VI-A) for every dispatched
 //! tile, so [`MetricsSnapshot::gflops`] reports executor throughput in
 //! the same unit as the paper's tables.
+//!
+//! Snapshots carry the **raw histogram buckets** ([`HistSnapshot`], a
+//! fixed `Copy` array), so [`MetricsSnapshot::merge`] sums buckets and
+//! cluster-level percentiles are computed from the merged distribution —
+//! exactly what one service seeing the union of the traffic would
+//! report — instead of taking the worst shard's percentile.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 
-/// Log-scale latency histogram: bucket i covers [2^i, 2^{i+1}) us.
+/// Log-scale latency histogram: bucket i covers [2^i, 2^{i+1}) us
+/// (bucket 0 also absorbs the sub-microsecond range [0, 2)).
 const BUCKETS: usize = 24;
 
 #[derive(Default)]
 pub struct Histogram {
     counts: [AtomicU64; BUCKETS],
-    sum_us: AtomicU64,
+    /// Nanosecond-accurate value sum: recording whole microseconds
+    /// would truncate sub-µs tiles to 0 and drag the mean toward zero.
+    sum_ns: AtomicU64,
     n: AtomicU64,
 }
 
 impl Histogram {
-    pub fn record_secs(&self, secs: f64) {
-        let us = (secs * 1e6).max(0.0);
-        let bucket = (us.max(1.0).log2() as usize).min(BUCKETS - 1);
+    pub fn record_ns(&self, ns: u64) {
+        let us = ns / 1000;
+        let bucket = if us < 2 { 0 } else { 63 - us.leading_zeros() as usize }.min(BUCKETS - 1);
         self.counts[bucket].fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us as u64, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
         self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_secs(&self, secs: f64) {
+        self.record_ns((secs.max(0.0) * 1e9) as u64);
     }
 
     pub fn count(&self) -> u64 {
@@ -33,30 +46,79 @@ impl Histogram {
 
     /// Sum of all recorded values, microseconds.
     pub fn total_us(&self) -> f64 {
-        self.sum_us.load(Ordering::Relaxed) as f64
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e3
     }
 
     pub fn mean_us(&self) -> f64 {
-        let n = self.count();
-        if n == 0 {
-            return 0.0;
-        }
-        self.total_us() / n as f64
+        self.snapshot().mean_us()
     }
 
-    /// Approximate percentile from bucket upper bounds.
     pub fn percentile_us(&self, p: f64) -> f64 {
-        let total = self.count();
-        if total == 0 {
+        self.snapshot().percentile_us(p)
+    }
+
+    /// Copy out the raw buckets (what [`MetricsSnapshot`] carries).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut s = HistSnapshot::default();
+        for (dst, src) in s.counts.iter_mut().zip(self.counts.iter()) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        s.count = self.n.load(Ordering::Relaxed);
+        s.sum_ns = self.sum_ns.load(Ordering::Relaxed);
+        s
+    }
+}
+
+/// Plain-data copy of a [`Histogram`]: the raw log-scale buckets plus
+/// the exact count/sum. `Copy`, so [`MetricsSnapshot`] stays `Copy`;
+/// mergeable by summation, so cluster percentiles stay exact.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub counts: [u64; BUCKETS],
+    pub count: u64,
+    pub sum_ns: u64,
+}
+
+impl HistSnapshot {
+    /// Add another snapshot's buckets into this one. Merging then
+    /// asking for a percentile is exact: the summed buckets are the
+    /// buckets one histogram would hold after seeing both streams.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (dst, src) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *dst += src;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
             return 0.0;
         }
-        let target = (total as f64 * p).ceil() as u64;
+        self.sum_ns as f64 / 1e3 / self.count as f64
+    }
+
+    /// Percentile with linear interpolation inside the winning bucket
+    /// (bucket i spans [2^i, 2^{i+1}) us; bucket 0 spans [0, 2)), so a
+    /// p95 is no longer overstated by up to 2× to its bucket's upper
+    /// power-of-two bound.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((self.count as f64 * p).ceil() as u64).clamp(1, self.count);
         let mut seen = 0u64;
-        for (i, c) in self.counts.iter().enumerate() {
-            seen += c.load(Ordering::Relaxed);
-            if seen >= target {
-                return (1u64 << (i + 1)) as f64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
             }
+            if seen + c >= target {
+                let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi = (1u64 << (i + 1)) as f64;
+                let into = (target - seen) as f64 / c as f64;
+                return lo + (hi - lo) * into;
+            }
+            seen += c;
         }
         (1u64 << BUCKETS) as f64
     }
@@ -94,6 +156,11 @@ pub struct Metrics {
     pub bfp_snr_samples: AtomicU64,
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
+    /// Corner-turn (`tile::exchange_transpose`) durations, fed by the
+    /// [`crate::obs`] span sink on worker/device/orchestrator threads.
+    pub exchange_latency: Histogram,
+    /// BFP16 quantize/dequantize pass durations, fed the same way.
+    pub codec_latency: Histogram,
 }
 
 impl Metrics {
@@ -111,10 +178,7 @@ impl Metrics {
     /// execution time (from [`crate::runtime::Engine::device_busy_ns`]):
     /// it is measured at the executor, not at the workers, so tiles
     /// queued behind the serialized device thread are not double-billed
-    /// into the GFLOPS denominator. It is also nanosecond-accurate —
-    /// [`Histogram::record_secs`] truncates to whole microseconds, which
-    /// is fine for latency percentiles but would zero out
-    /// sub-microsecond tiles.
+    /// into the GFLOPS denominator.
     pub fn snapshot(&self, exec_busy_ns: u64) -> MetricsSnapshot {
         let snr_samples = self.bfp_snr_samples.load(Ordering::Relaxed);
         let snr_mean = if snr_samples == 0 {
@@ -122,6 +186,8 @@ impl Metrics {
         } else {
             self.bfp_snr_sum_mdb.load(Ordering::Relaxed) as f64 / 1e3 / snr_samples as f64
         };
+        let queue_hist = self.queue_latency.snapshot();
+        let exec_hist = self.exec_latency.snapshot();
         MetricsSnapshot {
             codelet: crate::fft::codelet::select().tag(),
             precision: crate::fft::bfp::select().tag(),
@@ -140,10 +206,14 @@ impl Metrics {
             bfp_snr_samples: snr_samples,
             bfp_snr_mean_db: snr_mean,
             exec_total_us: exec_busy_ns as f64 / 1e3,
-            queue_mean_us: self.queue_latency.mean_us(),
-            queue_p95_us: self.queue_latency.percentile_us(0.95),
-            exec_mean_us: self.exec_latency.mean_us(),
-            exec_p95_us: self.exec_latency.percentile_us(0.95),
+            queue_mean_us: queue_hist.mean_us(),
+            queue_p95_us: queue_hist.percentile_us(0.95),
+            exec_mean_us: exec_hist.mean_us(),
+            exec_p95_us: exec_hist.percentile_us(0.95),
+            queue_hist,
+            exec_hist,
+            exchange_hist: self.exchange_latency.snapshot(),
+            codec_hist: self.codec_latency.snapshot(),
         }
     }
 }
@@ -187,10 +257,21 @@ pub struct MetricsSnapshot {
     pub bfp_snr_mean_db: f64,
     /// Total busy time of the executor across workers, microseconds.
     pub exec_total_us: f64,
+    /// Derived from `queue_hist`/`exec_hist` (kept as plain fields for
+    /// table consumers); after a [`Self::merge`] they reflect the
+    /// merged distribution, not any single shard.
     pub queue_mean_us: f64,
     pub queue_p95_us: f64,
     pub exec_mean_us: f64,
     pub exec_p95_us: f64,
+    /// Raw request queue-wait buckets.
+    pub queue_hist: HistSnapshot,
+    /// Raw tile execution-time buckets.
+    pub exec_hist: HistSnapshot,
+    /// Raw corner-turn (exchange transpose) duration buckets.
+    pub exchange_hist: HistSnapshot,
+    /// Raw BFP16 quantize/dequantize duration buckets.
+    pub codec_hist: HistSnapshot,
 }
 
 impl MetricsSnapshot {
@@ -199,10 +280,9 @@ impl MetricsSnapshot {
     /// FLOPs, bfp-SNR sample sums — add, `shards` adds (each per-shard
     /// snapshot counts 1), and device busy time adds, so the merged
     /// [`Self::gflops`] is aggregate FLOPs over aggregate device time.
-    /// Latency means are weighted across shards (queue by requests,
-    /// exec by tiles); p95s take the worst shard, which is conservative
-    /// but honest — a merged histogram would need the raw buckets the
-    /// snapshot intentionally leaves behind.
+    /// Histogram buckets add too, and the latency means/percentiles are
+    /// recomputed from the summed buckets — identical to what a single
+    /// service seeing the union of the traffic would report.
     pub fn merge(parts: &[MetricsSnapshot]) -> MetricsSnapshot {
         let Some(first) = parts.first() else {
             return MetricsSnapshot::default();
@@ -212,7 +292,7 @@ impl MetricsSnapshot {
             precision: first.precision,
             ..MetricsSnapshot::default()
         };
-        let (mut snr_mdb, mut queue_w, mut exec_w) = (0.0f64, 0.0f64, 0.0f64);
+        let mut snr_mdb = 0.0f64;
         for p in parts {
             m.shards += p.shards;
             m.requests += p.requests;
@@ -229,20 +309,18 @@ impl MetricsSnapshot {
             m.bfp_snr_samples += p.bfp_snr_samples;
             snr_mdb += p.bfp_snr_mean_db * p.bfp_snr_samples as f64;
             m.exec_total_us += p.exec_total_us;
-            queue_w += p.queue_mean_us * p.requests as f64;
-            exec_w += p.exec_mean_us * p.tiles_dispatched as f64;
-            m.queue_p95_us = m.queue_p95_us.max(p.queue_p95_us);
-            m.exec_p95_us = m.exec_p95_us.max(p.exec_p95_us);
+            m.queue_hist.merge(&p.queue_hist);
+            m.exec_hist.merge(&p.exec_hist);
+            m.exchange_hist.merge(&p.exchange_hist);
+            m.codec_hist.merge(&p.codec_hist);
         }
         if m.bfp_snr_samples > 0 {
             m.bfp_snr_mean_db = snr_mdb / m.bfp_snr_samples as f64;
         }
-        if m.requests > 0 {
-            m.queue_mean_us = queue_w / m.requests as f64;
-        }
-        if m.tiles_dispatched > 0 {
-            m.exec_mean_us = exec_w / m.tiles_dispatched as f64;
-        }
+        m.queue_mean_us = m.queue_hist.mean_us();
+        m.queue_p95_us = m.queue_hist.percentile_us(0.95);
+        m.exec_mean_us = m.exec_hist.mean_us();
+        m.exec_p95_us = m.exec_hist.percentile_us(0.95);
         m
     }
 
@@ -286,7 +364,10 @@ impl MetricsSnapshot {
         format!(
             "requests={} lines={} tiles={} padded={} ({:.1}%) failures={} shards={} \
              image_tiles={} ({:.1}% of flops)\n\
-             queue: mean {:.0} us, p95 {:.0} us | exec: mean {:.0} us, p95 {:.0} us\n\
+             queue: mean {:.1} us, p50 {:.1} us, p95 {:.1} us | \
+             exec: mean {:.1} us, p50 {:.1} us, p95 {:.1} us\n\
+             exchange: mean {:.1} us, p50 {:.1} us, p95 {:.1} us over {} turns | \
+             codec: mean {:.1} us, p50 {:.1} us, p95 {:.1} us over {} passes\n\
              executor: {:.2} GFLOPS nominal (5*N*log2 N / busy time), {} codelets, {} default\n\
              matched-filter: {} tiles, {:.1}% of nominal FLOPs (2 FFTs + 6N per line)\n\
              bfp16: {} tiles, sampled SNR vs f32 {:.1} dB over {} samples",
@@ -300,9 +381,19 @@ impl MetricsSnapshot {
             self.image_tiles,
             self.image_share() * 100.0,
             self.queue_mean_us,
+            self.queue_hist.percentile_us(0.50),
             self.queue_p95_us,
             self.exec_mean_us,
+            self.exec_hist.percentile_us(0.50),
             self.exec_p95_us,
+            self.exchange_hist.mean_us(),
+            self.exchange_hist.percentile_us(0.50),
+            self.exchange_hist.percentile_us(0.95),
+            self.exchange_hist.count,
+            self.codec_hist.mean_us(),
+            self.codec_hist.percentile_us(0.50),
+            self.codec_hist.percentile_us(0.95),
+            self.codec_hist.count,
             self.gflops(),
             self.codelet,
             self.precision,
@@ -312,6 +403,52 @@ impl MetricsSnapshot {
             self.bfp_snr_mean_db,
             self.bfp_snr_samples,
         )
+    }
+
+    /// Prometheus-style text exposition (`applefft serve --stats-text`):
+    /// counters as `_total`, latency histograms in the cumulative-bucket
+    /// form scrapers expect, bucket bounds in microseconds.
+    pub fn render_prometheus(&self) -> String {
+        fn counter(out: &mut String, name: &str, v: u64) {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        fn gauge(out: &mut String, name: &str, v: f64) {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+        }
+        fn hist(out: &mut String, name: &str, h: &HistSnapshot) {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, &c) in h.counts.iter().enumerate() {
+                cum += c;
+                out.push_str(&format!("{name}_bucket{{le=\"{}\"}} {cum}\n", 1u64 << (i + 1)));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("{name}_sum {}\n", h.sum_ns as f64 / 1e3));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+        }
+        let mut out = String::new();
+        out.push_str(&format!(
+            "applefft_build_info{{codelet=\"{}\",precision=\"{}\"}} 1\n",
+            self.codelet, self.precision
+        ));
+        counter(&mut out, "applefft_requests_total", self.requests);
+        counter(&mut out, "applefft_lines_total", self.lines_in);
+        counter(&mut out, "applefft_tiles_total", self.tiles_dispatched);
+        counter(&mut out, "applefft_lines_padded_total", self.lines_padded);
+        counter(&mut out, "applefft_failures_total", self.failures);
+        counter(&mut out, "applefft_nominal_flops_total", self.nominal_flops);
+        counter(&mut out, "applefft_mf_tiles_total", self.mf_tiles);
+        counter(&mut out, "applefft_image_tiles_total", self.image_tiles);
+        counter(&mut out, "applefft_bfp_tiles_total", self.bfp_tiles);
+        gauge(&mut out, "applefft_shards", self.shards as f64);
+        gauge(&mut out, "applefft_exec_busy_us", self.exec_total_us);
+        gauge(&mut out, "applefft_gflops", self.gflops());
+        gauge(&mut out, "applefft_bfp_snr_mean_db", self.bfp_snr_mean_db);
+        hist(&mut out, "applefft_queue_latency_us", &self.queue_hist);
+        hist(&mut out, "applefft_exec_latency_us", &self.exec_hist);
+        hist(&mut out, "applefft_exchange_latency_us", &self.exchange_hist);
+        hist(&mut out, "applefft_codec_latency_us", &self.codec_hist);
+        out
     }
 }
 
@@ -323,15 +460,86 @@ mod tests {
     fn histogram_mean_and_percentile() {
         let h = Histogram::default();
         for _ in 0..90 {
-            h.record_secs(10e-6); // 10 us -> bucket 3
+            h.record_secs(10e-6); // 10 us -> bucket 3, [8, 16)
         }
         for _ in 0..10 {
-            h.record_secs(1000e-6); // 1000 us -> bucket 9
+            h.record_secs(1000e-6); // 1000 us -> bucket 9, [512, 1024)
         }
         assert_eq!(h.count(), 100);
-        assert!((h.mean_us() - 109.0).abs() < 2.0, "{}", h.mean_us());
-        assert!(h.percentile_us(0.5) <= 16.0);
-        assert!(h.percentile_us(0.99) >= 1024.0);
+        // The secs->ns conversion may round by ±1 ns per record.
+        assert!((h.mean_us() - 109.0).abs() < 1e-3, "{}", h.mean_us());
+        // Interpolated percentiles: p50 lands 50/90 into bucket 3
+        // (8 + 8*50/90), p99 lands 9/10 into bucket 9 (512 + 512*0.9).
+        assert!((h.percentile_us(0.5) - (8.0 + 8.0 * 50.0 / 90.0)).abs() < 1e-9);
+        assert!((h.percentile_us(0.99) - 972.8).abs() < 1e-9, "{}", h.percentile_us(0.99));
+        assert!((h.percentile_us(1.0) - 1024.0).abs() < 1e-9, "p100 is the bucket top");
+        assert_eq!(Histogram::default().percentile_us(0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_keeps_submicrosecond_mass() {
+        // Regression: sum_us truncation used to add 0 for each sub-µs
+        // record, dragging the mean to zero.
+        let h = Histogram::default();
+        for _ in 0..100 {
+            h.record_secs(0.5e-6);
+        }
+        assert_eq!(h.count(), 100);
+        // ±1 ns conversion rounding per record: 50 us ± 0.1 us.
+        assert!((h.total_us() - 50.0).abs() < 0.1, "{}", h.total_us());
+        assert!((h.mean_us() - 0.5).abs() < 1e-3, "{}", h.mean_us());
+        // All mass in bucket 0 ([0, 2) us): p50 interpolates to 1.0.
+        assert!((h.percentile_us(0.5) - 1.0).abs() < 1e-9, "{}", h.percentile_us(0.5));
+    }
+
+    #[test]
+    fn histogram_bucket_edges() {
+        let h = Histogram::default();
+        h.record_ns(0); // bucket 0
+        h.record_ns(1_999); // 1 us -> bucket 0
+        h.record_ns(2_000); // 2 us -> bucket 1
+        h.record_ns(1_000_000_000_000); // beyond the top -> clamped last bucket
+        let s = h.snapshot();
+        assert_eq!(s.counts[0], 2);
+        assert_eq!(s.counts[1], 1);
+        assert_eq!(s.counts[BUCKETS - 1], 1);
+        assert_eq!(s.count, 4);
+    }
+
+    #[test]
+    fn merged_buckets_match_union_service() {
+        // Two shards each see part of the traffic; a third histogram
+        // sees the union. Merged percentiles must equal the union's
+        // exactly — this replaces the old worst-shard conservatism.
+        let shard_a = Metrics::default();
+        let shard_b = Metrics::default();
+        let union = Metrics::default();
+        let record = |m: &Metrics, q_us: f64, e_us: f64| {
+            m.queue_latency.record_secs(q_us * 1e-6);
+            m.exec_latency.record_secs(e_us * 1e-6);
+            m.exchange_latency.record_ns((e_us * 500.0) as u64);
+            m.codec_latency.record_ns((q_us * 250.0) as u64);
+        };
+        for i in 0..40 {
+            let (q, e) = (3.0 + i as f64, 0.5 + 0.25 * i as f64);
+            record(if i % 3 == 0 { &shard_a } else { &shard_b }, q, e);
+            record(&union, q, e);
+        }
+        let merged = MetricsSnapshot::merge(&[shard_a.snapshot(0), shard_b.snapshot(0)]);
+        let solo = union.snapshot(0);
+        for p in [0.5, 0.95, 0.99] {
+            assert_eq!(merged.queue_hist.percentile_us(p), solo.queue_hist.percentile_us(p));
+            assert_eq!(merged.exec_hist.percentile_us(p), solo.exec_hist.percentile_us(p));
+            assert_eq!(
+                merged.exchange_hist.percentile_us(p),
+                solo.exchange_hist.percentile_us(p)
+            );
+            assert_eq!(merged.codec_hist.percentile_us(p), solo.codec_hist.percentile_us(p));
+        }
+        assert_eq!(merged.queue_hist, solo.queue_hist);
+        assert_eq!(merged.queue_mean_us, solo.queue_mean_us);
+        assert_eq!(merged.exec_p95_us, solo.exec_p95_us);
+        assert!(merged.queue_p95_us > 0.0);
     }
 
     #[test]
@@ -369,6 +577,9 @@ mod tests {
         assert!(codelet == "scalar" || codelet == "simd", "{codelet:?}");
         assert!(r.contains("codelets"), "{r}");
         assert!(r.contains("matched-filter"), "{r}");
+        assert!(r.contains("p50"), "{r}");
+        assert!(r.contains("exchange:"), "{r}");
+        assert!(r.contains("codec:"), "{r}");
         assert!(m.snapshot(2_000).gflops() > 0.0);
         assert_eq!(m.snapshot(0).gflops(), 0.0);
     }
@@ -397,7 +608,7 @@ mod tests {
     }
 
     #[test]
-    fn merge_sums_counters_and_weights_means() {
+    fn merge_sums_counters() {
         let a = MetricsSnapshot {
             codelet: "scalar",
             precision: "f32",
@@ -416,10 +627,7 @@ mod tests {
             bfp_snr_samples: 1,
             bfp_snr_mean_db: 70.0,
             exec_total_us: 100.0,
-            queue_mean_us: 10.0,
-            queue_p95_us: 20.0,
-            exec_mean_us: 5.0,
-            exec_p95_us: 9.0,
+            ..Default::default()
         };
         let b = MetricsSnapshot {
             shards: 1,
@@ -430,10 +638,6 @@ mod tests {
             bfp_snr_samples: 3,
             bfp_snr_mean_db: 60.0,
             exec_total_us: 300.0,
-            queue_mean_us: 20.0,
-            queue_p95_us: 15.0,
-            exec_mean_us: 7.0,
-            exec_p95_us: 30.0,
             ..a
         };
         let m = MetricsSnapshot::merge(&[a, b]);
@@ -455,12 +659,9 @@ mod tests {
         // Busy time adds, so GFLOPS is aggregate flops / aggregate time.
         assert!((m.exec_total_us - 400.0).abs() < 1e-9);
         assert!((m.gflops() - 4_000.0 / 400e-6 / 1e9).abs() < 1e-12);
-        // queue mean: (10*10 + 20*30)/40 = 17.5; exec: (5*4 + 7*12)/16 = 6.5.
-        assert!((m.queue_mean_us - 17.5).abs() < 1e-9, "{}", m.queue_mean_us);
-        assert!((m.exec_mean_us - 6.5).abs() < 1e-9, "{}", m.exec_mean_us);
-        // p95s take the worst shard.
-        assert_eq!(m.queue_p95_us, 20.0);
-        assert_eq!(m.exec_p95_us, 30.0);
+        // Latency scalars come from the merged buckets (empty here).
+        assert_eq!(m.queue_mean_us, 0.0);
+        assert_eq!(m.exec_p95_us, 0.0);
         assert_eq!(m.codelet, "scalar");
         // The shard count is rendered for operators.
         assert!(m.render().contains("shards=2"), "{}", m.render());
@@ -507,5 +708,27 @@ mod tests {
         assert_eq!(s.mf_nominal_flops, 250);
         assert!((s.matched_share() - 0.25).abs() < 1e-9);
         assert_eq!(MetricsSnapshot::default().matched_share(), 0.0);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let m = Metrics::default();
+        m.requests.fetch_add(7, Ordering::Relaxed);
+        m.queue_latency.record_ns(10_000); // 10 us
+        m.queue_latency.record_ns(100_000); // 100 us
+        m.exchange_latency.record_ns(3_000);
+        let text = m.snapshot(5_000).render_prometheus();
+        assert!(text.contains("applefft_requests_total 7\n"), "{text}");
+        assert!(text.contains("# TYPE applefft_queue_latency_us histogram"), "{text}");
+        assert!(text.contains("applefft_queue_latency_us_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("applefft_queue_latency_us_count 2"), "{text}");
+        assert!(text.contains("applefft_exchange_latency_us_count 1"), "{text}");
+        assert!(text.contains("applefft_build_info{codelet="), "{text}");
+        // Buckets are cumulative: the 10 us record shows up in every
+        // bucket from le="16" onward.
+        assert!(text.contains("applefft_queue_latency_us_bucket{le=\"16\"} 1"), "{text}");
+        assert!(text.contains("applefft_queue_latency_us_bucket{le=\"256\"} 2"), "{text}");
+        // Sum is µs-denominated and nanosecond-accurate.
+        assert!(text.contains("applefft_queue_latency_us_sum 110"), "{text}");
     }
 }

@@ -33,11 +33,12 @@
 //!   pipeline count — 2 FFTs + 6N — per matched-filter line).
 //! * [`service`] — the public facade; `drain()` returns the final
 //!   metrics snapshot including executor GFLOPS.
-//! * [`metrics`] — queue/execute latency, padding overhead, and
-//!   executor throughput in the paper's GFLOPS metric;
-//!   `MetricsSnapshot::merge` folds per-shard snapshots into one
-//!   cluster view (counter sums, weighted latency means, worst-shard
-//!   p95s, a `shards` tag).
+//! * [`metrics`] — queue/execute/exchange/codec latency histograms,
+//!   padding overhead, and executor throughput in the paper's GFLOPS
+//!   metric. Snapshots carry the raw log-scale buckets, so
+//!   `MetricsSnapshot::merge` sums them and cluster p50/p95/p99 come
+//!   from the merged distribution — exactly what one service seeing the
+//!   union of the traffic would report, not a worst-shard bound.
 //! * [`shard`] — the scale-out tier: a [`shard::ShardedFftService`]
 //!   owns N full service stacks and stripes every request across them.
 //! * [`replay`] — trace-driven workload replay (open-loop latency
@@ -76,6 +77,23 @@
 //!   single-service fused response at every shard count and both
 //!   precisions; with one shard alive the whole matrix delegates to the
 //!   engine's fused 2D tile directly.
+//!
+//! # Observability
+//!
+//! The request path is instrumented end to end with the always-compiled
+//! span tier of [`crate::obs`]: submit and admission are sync spans;
+//! each request's life and its time in the batching queue are async
+//! pairs keyed by a process-global request id; worker tiles, device
+//! executions, four-step phases, corner-turn exchanges and BFP codec
+//! passes are sync spans on their own threads; the sharded front door
+//! adds stripe/row-phase/column-phase/gather spans so a decomposed 2D
+//! request renders as one tree. With tracing off a span site costs one
+//! relaxed atomic load and the recorder is never constructed; the
+//! exchange/codec spans still feed the per-kind [`metrics`] histograms
+//! through a thread-local sink. `APPLEFFT_TRACE=<path>` (or the
+//! `applefft trace` subcommand) writes the Chrome trace-event JSON on
+//! drain, and `applefft serve --stats-text` appends the
+//! Prometheus-style exposition of the same snapshot.
 
 pub mod batcher;
 pub mod metrics;

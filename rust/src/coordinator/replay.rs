@@ -280,8 +280,10 @@ pub struct ShardReport {
     pub lines_in: u64,
     pub tiles: u64,
     pub queue_mean_us: f64,
+    pub queue_p50_us: f64,
     pub queue_p95_us: f64,
     pub exec_mean_us: f64,
+    pub exec_p50_us: f64,
     pub exec_p95_us: f64,
     pub gflops: f64,
 }
@@ -304,8 +306,10 @@ pub fn replay_sharded(
             lines_in: m.lines_in,
             tiles: m.tiles_dispatched,
             queue_mean_us: m.queue_mean_us,
+            queue_p50_us: m.queue_hist.percentile_us(0.50),
             queue_p95_us: m.queue_p95_us,
             exec_mean_us: m.exec_mean_us,
+            exec_p50_us: m.exec_hist.percentile_us(0.50),
             exec_p95_us: m.exec_p95_us,
             gflops: m.gflops(),
         })

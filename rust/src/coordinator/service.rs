@@ -11,6 +11,7 @@ use super::request::{FftRequest, FftResponse, FilterSpec, RequestId, RequestKind
 use super::worker::WorkerPool;
 use crate::fft::bfp::{self, Precision};
 use crate::fft::Direction;
+use crate::obs;
 use crate::runtime::{Backend, Engine};
 use crate::util::complex::SplitComplex;
 use anyhow::{Context, Result};
@@ -114,7 +115,6 @@ pub struct FftService {
     engine: Engine,
     metrics: Arc<Metrics>,
     planner: Planner,
-    next_id: Arc<AtomicU64>,
 }
 
 /// Filter ids are **process-global**, not per-service: a handle
@@ -126,11 +126,17 @@ static NEXT_FILTER_ID: AtomicU64 = AtomicU64::new(1);
 
 impl FftService {
     pub fn start(config: ServiceConfig) -> Result<FftService> {
-        let engine = Engine::start(config.backend).context("starting runtime engine")?;
+        // `APPLEFFT_TRACE=<path>` turns span tracing on for the process
+        // and flushes a Chrome trace file on every drain.
+        obs::init_from_env();
+        let metrics = Arc::new(Metrics::default());
+        // The metrics handle rides into the engine so its device thread
+        // feeds the exchange/codec histograms via the obs span sink.
+        let engine = Engine::start_with(config.backend, Some(metrics.clone()))
+            .context("starting runtime engine")?;
         if config.warm {
             engine.warm_all().context("warming artifacts")?;
         }
-        let metrics = Arc::new(Metrics::default());
         let planner = Planner::new(engine.batch_tile());
         let pool = WorkerPool::start(engine.clone(), metrics.clone(), config.workers);
         let (admit_tx, admit_rx) = mpsc::channel::<Op>();
@@ -161,7 +167,14 @@ impl FftService {
                     };
                     match op {
                         Some(Op::Submit(req)) => {
-                            for tile in batcher.admit(&req) {
+                            let tiles = {
+                                let _admit = obs::span(obs::SpanKind::Admit)
+                                    .req(req.id)
+                                    .n(req.n)
+                                    .start();
+                                batcher.admit(&req)
+                            };
+                            for tile in tiles {
                                 let _ = pool.submit(tile);
                             }
                         }
@@ -185,13 +198,7 @@ impl FftService {
             })
             .context("spawning batcher thread")?;
 
-        Ok(FftService {
-            admit_tx,
-            engine,
-            metrics,
-            planner,
-            next_id: Arc::new(AtomicU64::new(1)),
-        })
+        Ok(FftService { admit_tx, engine, metrics, planner })
     }
 
     fn submit_request(
@@ -202,7 +209,9 @@ impl FftService {
         data: SplitComplex,
         lines: usize,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // Process-global ids: they key the async trace spans, so two
+        // coordinators in one process must never mint the same id.
+        let id = obs::next_request_id();
         let (tx, rx) = mpsc::channel();
         self.submit_routed(n, kind, precision, data, lines, id, tx)?;
         Ok((id, rx))
@@ -225,6 +234,13 @@ impl FftService {
         id: RequestId,
         reply: mpsc::Sender<FftResponse>,
     ) -> Result<()> {
+        let tag = obs::OpTag::of(&kind);
+        let _submit = obs::span(obs::SpanKind::Submit)
+            .req(id)
+            .n(n)
+            .precision(precision)
+            .op(tag)
+            .start();
         let req = FftRequest {
             id,
             n,
@@ -236,6 +252,11 @@ impl FftService {
             reply,
         };
         req.validate()?;
+        // Async pairs: the request's life ends at its reply
+        // (`AccumulatorInner::maybe_respond`); its queue interval ends
+        // at first tile dispatch (`Accumulator::dispatched`).
+        obs::span(obs::SpanKind::Request).req(id).n(n).precision(precision).op(tag).async_begin();
+        obs::span(obs::SpanKind::Queue).req(id).n(n).async_begin();
         self.admit_tx
             .send(Op::Submit(req))
             .map_err(|_| anyhow::anyhow!("service has shut down"))
@@ -459,6 +480,7 @@ impl FftService {
             .send(Op::Drain(tx))
             .map_err(|_| anyhow::anyhow!("service has shut down"))?;
         rx.recv().context("batcher dropped drain ack")?;
+        obs::flush_env_trace();
         Ok(self.metrics())
     }
 

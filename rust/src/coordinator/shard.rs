@@ -115,6 +115,9 @@ struct ParentState {
 
 impl Parent {
     fn new(id: RequestId, n: usize, lines: usize, reply: mpsc::Sender<FftResponse>) -> Arc<Parent> {
+        // Every parent opens an async request span here; `maybe_respond`
+        // closes it, so the pair brackets the sharded request lifetime.
+        crate::obs::span(crate::obs::SpanKind::Request).req(id).n(n).async_begin();
         Arc::new(Parent {
             id,
             n,
@@ -165,6 +168,8 @@ impl Parent {
             Some(msg) => Err(msg),
             None => Ok(std::mem::take(&mut st.out)),
         };
+        // Close the async request span opened where this parent was made.
+        crate::obs::span(crate::obs::SpanKind::Request).req(self.id).n(self.n).async_end();
         // Receiver may have hung up; that's the client's business.
         let _ = st.reply.send(FftResponse {
             id: self.id,
@@ -204,8 +209,11 @@ struct Inner {
     /// One slot per shard; `None` marks a dead shard.
     slots: Vec<Mutex<Option<FftService>>>,
     inflight: Inflight,
-    /// Mints parent request ids and sub-request ids from one sequence.
-    next_id: AtomicU64,
+    /// Coordinator-tier histograms: the decomposed-2D corner turns run
+    /// on the orchestrator threads (not inside any shard), so their
+    /// exchange/codec latency is recorded here and folded into
+    /// [`ShardedFftService::metrics`] alongside the shard snapshots.
+    coord_metrics: Arc<super::metrics::Metrics>,
     /// Every sub-request replies into this channel; the collector
     /// thread demuxes by sub id. (Mutex-wrapped so `Inner` is `Sync`
     /// without leaning on `mpsc::Sender`'s `Sync`-ness.)
@@ -343,7 +351,7 @@ impl ShardedFftService {
             inner: Arc::new(Inner {
                 slots,
                 inflight,
-                next_id: AtomicU64::new(1),
+                coord_metrics: Arc::new(super::metrics::Metrics::default()),
                 collect_tx: Mutex::new(tx),
                 dead: Mutex::new(Vec::new()),
                 failures: AtomicU64::new(0),
@@ -415,7 +423,7 @@ impl ShardedFftService {
         let mut last_err = String::from("no alive shards");
         for _attempt in 0..count.max(1) {
             let Some(svc) = self.shard_or_next(&mut entry.shard) else { break };
-            let sub_id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+            let sub_id = crate::obs::next_request_id();
             let reply = self.inner.collect_tx.lock().unwrap().clone();
             let (n, lines, precision) = (entry.n, entry.line_map.len(), entry.precision);
             let kind = entry.kind.clone();
@@ -498,9 +506,17 @@ impl ShardedFftService {
         self.validate_shape(n, &data, lines)?;
         let alive = self.alive();
         anyhow::ensure!(!alive.is_empty(), "all shards dead");
-        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        // Ids come from the process-global sequence so async trace spans
+        // from different services never collide on the same key.
+        let id = crate::obs::next_request_id();
         let (tx, rx) = mpsc::channel();
         let parent = Parent::new(id, n, lines, tx);
+        // Sync span over the gather/dispatch striping on the caller.
+        let _stripe = crate::obs::span(crate::obs::SpanKind::Stripe)
+            .req(id)
+            .n(n)
+            .precision(precision)
+            .start();
         if alive.len() == 1 {
             // Single-lane stripe is the identity: skip the gather copy
             // and hand the payload straight to the one shard.
@@ -603,7 +619,7 @@ impl ShardedFftService {
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
         self.validate_shape(filter.n, &data, lines)?;
         let (home, handle) = filter.resolve(self)?;
-        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = crate::obs::next_request_id();
         let (tx, rx) = mpsc::channel();
         let parent = Parent::new(id, filter.n, lines, tx);
         self.dispatch(SubEntry {
@@ -702,7 +718,7 @@ impl ShardedFftService {
     ) -> Result<(SplitComplex, f64, f64)> {
         let alive = self.alive();
         anyhow::ensure!(!alive.is_empty(), "all shards dead");
-        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = crate::obs::next_request_id();
         let (tx, rx) = mpsc::channel();
         let parent = Parent::new(id, n, lines, tx);
         if alive.len() == 1 {
@@ -757,9 +773,29 @@ impl ShardedFftService {
         col_kind: PhaseKind,
         reply: mpsc::Sender<FftResponse>,
     ) {
+        // The corner turns below run on THIS orchestrator thread, so the
+        // coordinator-tier histograms are the sink here; the async span
+        // pair brackets the whole decomposed request under the client id.
+        crate::obs::set_metrics_sink(Some(self.inner.coord_metrics.clone()));
+        let op = match &row_kind {
+            PhaseKind::Uniform(_) => crate::obs::OpTag::Fft2d,
+            PhaseKind::PerShard(_) => crate::obs::OpTag::Image,
+        };
+        crate::obs::span(crate::obs::SpanKind::Request)
+            .req(id)
+            .n(cols)
+            .precision(precision)
+            .op(op)
+            .async_begin();
         let work = || -> Result<(SplitComplex, f64, f64)> {
-            let (rowed, q1, e1) =
-                self.run_phase_striped(cols, rows, data, precision, &row_kind)?;
+            let (rowed, q1, e1) = {
+                let _row = crate::obs::span(crate::obs::SpanKind::RowPhase)
+                    .req(id)
+                    .n(cols)
+                    .precision(precision)
+                    .start();
+                self.run_phase_striped(cols, rows, data, precision, &row_kind)?
+            };
             let rowbuf = rows.max(cols);
             let (mut bre, mut bim) = (BfpVec::new(), BfpVec::new());
             let (mut rre, mut rim) = (vec![0.0f32; rowbuf], vec![0.0f32; rowbuf]);
@@ -780,8 +816,14 @@ impl ShardedFftService {
                 &mut rim,
             );
             drop(rowed);
-            let (coled, q2, e2) =
-                self.run_phase_striped(rows, cols, turned, precision, &col_kind)?;
+            let (coled, q2, e2) = {
+                let _col = crate::obs::span(crate::obs::SpanKind::ColPhase)
+                    .req(id)
+                    .n(rows)
+                    .precision(precision)
+                    .start();
+                self.run_phase_striped(rows, cols, turned, precision, &col_kind)?
+            };
             // Exchange back: (cols x rows) -> (rows x cols).
             let mut out = SplitComplex::zeros(rows * cols);
             tile::exchange_transpose(
@@ -803,6 +845,7 @@ impl ShardedFftService {
             Ok((out, q, e)) => (Ok(out), q, e),
             Err(err) => (Err(format!("{err:#}")), 0.0, 0.0),
         };
+        crate::obs::span(crate::obs::SpanKind::Request).req(id).n(cols).async_end();
         let _ = reply.send(FftResponse {
             id,
             result,
@@ -845,7 +888,7 @@ impl ShardedFftService {
         self.validate_2d(n, &data, lines)?;
         let alive = self.alive();
         anyhow::ensure!(!alive.is_empty(), "all shards dead");
-        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = crate::obs::next_request_id();
         let (tx, rx) = mpsc::channel();
         if alive.len() == 1 {
             // One alive shard: nothing to exchange across — delegate
@@ -942,7 +985,7 @@ impl ShardedFftService {
         let alive = self.alive();
         anyhow::ensure!(!alive.is_empty(), "all shards dead");
         let precision = range.precision;
-        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = crate::obs::next_request_id();
         let (tx, rx) = mpsc::channel();
         if alive.len() == 1 {
             let slot = alive[0];
@@ -1005,6 +1048,9 @@ impl ShardedFftService {
                 svc.drain()?;
             }
         }
+        // Shard drains flushed their own rings; rewrite the trace file
+        // once more so coordinator-tier spans land in it too.
+        crate::obs::flush_env_trace();
         Ok(self.metrics())
     }
 
@@ -1018,7 +1064,13 @@ impl ShardedFftService {
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut parts = self.inner.dead.lock().unwrap().clone();
         parts.extend(self.shard_metrics());
+        let slots = parts.len() as u64;
+        // Coordinator-tier part: exchange/codec histograms fed by the 2D
+        // orchestrator threads' corner turns. It is not a shard, so the
+        // merged shard count is restored below.
+        parts.push(self.inner.coord_metrics.snapshot(0));
         let mut m = MetricsSnapshot::merge(&parts);
+        m.shards = slots;
         m.failures += self.inner.failures.load(Ordering::Relaxed);
         m.requests =
             m.requests.saturating_sub(self.inner.requeued_requests.load(Ordering::Relaxed));
@@ -1090,7 +1142,17 @@ fn collector(rx: mpsc::Receiver<FftResponse>, inflight: Inflight) {
         let entry = { inflight.lock().unwrap().remove(&resp.id) };
         let Some(e) = entry else { continue };
         match &resp.result {
-            Ok(data) => e.parent.fill(data, &e.line_map, resp.queue_secs, resp.exec_secs),
+            Ok(data) => {
+                // The scatter back into the parent buffer is the gather
+                // step of the sharded request — span it under the
+                // parent's id so it lands inside the request tree.
+                let _gather = crate::obs::span(crate::obs::SpanKind::Gather)
+                    .req(e.parent.id)
+                    .n(e.n)
+                    .shard(e.shard)
+                    .start();
+                e.parent.fill(data, &e.line_map, resp.queue_secs, resp.exec_secs)
+            }
             Err(msg) => e.parent.fail(msg),
         }
     }

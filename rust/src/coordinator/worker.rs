@@ -61,6 +61,19 @@ fn f32_replay(
 
 /// Execute one tile synchronously and distribute results.
 pub fn run_tile(engine: &Engine, metrics: &Metrics, mut tile: Tile) {
+    // One span per tile, not per request: a coalesced tile carries
+    // segments of several requests, so it traces with req 0 and its
+    // shape (n, precision, op) instead.
+    let span = crate::obs::span(crate::obs::SpanKind::WorkerTile)
+        .n(tile.n)
+        .precision(tile.precision);
+    let _tile_span = match &tile.kind {
+        TileKind::Fft(d) => span.dir(*d),
+        TileKind::MatchedFilter(_) => span.op(crate::obs::OpTag::Matched),
+        TileKind::Fft2d(_) => span.op(crate::obs::OpTag::Fft2d),
+        TileKind::FormImage { .. } => span.op(crate::obs::OpTag::Image),
+    }
+    .start();
     // Decide SNR sampling before execution: the matched-filter path
     // consumes the tile's data, so the reference input must be cloned
     // up front (only on sampled tiles — the hot path copies nothing).
@@ -174,14 +187,19 @@ impl WorkerPool {
                 let metrics = metrics.clone();
                 std::thread::Builder::new()
                     .name(format!("applefft-worker-{i}"))
-                    .spawn(move || loop {
-                        let tile = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match tile {
-                            Ok(t) => run_tile(&engine, &metrics, t),
-                            Err(_) => break, // channel closed: shut down
+                    .spawn(move || {
+                        // Workers run the f32 SNR replays in-thread, so
+                        // their exchange/codec spans need the sink too.
+                        crate::obs::set_metrics_sink(Some(metrics.clone()));
+                        loop {
+                            let tile = {
+                                let guard = rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            match tile {
+                                Ok(t) => run_tile(&engine, &metrics, t),
+                                Err(_) => break, // channel closed: shut down
+                            }
                         }
                     })
                     .expect("spawning worker")

@@ -196,6 +196,7 @@ pub fn fourstep_line_fused(
     // Step 4: transpose (n1, n2) back into (re, im) at index k1 + n1*k2
     // via the blocked tile layer, fusing the inverse conjugate + 1/N
     // scale into the store (same per-element op, bitwise unchanged).
+    let _t = crate::obs::span(crate::obs::SpanKind::FourStepTranspose).n(n).start();
     let op = if inverse { FusedStore::ConjScale(1.0 / n as f32) } else { FusedStore::Plain };
     transpose_into(yre, yim, re, im, n1, n2, op);
 }
@@ -235,6 +236,7 @@ pub fn fourstep_line_mul(
     // Step 4: transpose with the filter multiply fused into the store
     // (tile layer, `FusedStore::Mul` — the op order of the standalone
     // multiply pass), while the row-FFT output is still hot.
+    let _t = crate::obs::span(crate::obs::SpanKind::FourStepTranspose).n(n).start();
     transpose_into(yre, yim, re, im, n1, n2, FusedStore::Mul { hre, him });
 }
 
@@ -269,6 +271,7 @@ fn fourstep_steps123(
 
     // Steps 1+2: length-n1 DFT down the columns, fused with the twiddle
     // (and with the inverse input conjugation via `in_sign`).
+    let cols_span = crate::obs::span(crate::obs::SpanKind::FourStepCols).n(n).start();
     match n1 {
         2 => {
             for j2 in 0..n2 {
@@ -308,9 +311,11 @@ fn fourstep_steps123(
         }
         other => panic!("four-step n1={other} not supported (paper uses 2 and 4)"),
     }
+    drop(cols_span);
 
     // Step 3: length-n2 FFT along each of the n1 rows, on the selected
     // codelet backend.
+    let _rows_span = crate::obs::span(crate::obs::SpanKind::FourStepRows).n(n).start();
     for k1 in 0..n1 {
         let row = k1 * n2;
         transform_line_with(
@@ -398,6 +403,7 @@ pub fn fourstep_line_bfp(
     // input conjugation via `in_sign`), BLOCK columns at a time into a
     // small f32 register tile, quantized straight into the BFP staging
     // rows — the full-width f32 staging matrix never materialises.
+    let cols_span = crate::obs::span(crate::obs::SpanKind::FourStepCols).n(n).start();
     let mut tre = [[0.0f32; BLOCK]; 4];
     let mut tim = [[0.0f32; BLOCK]; 4];
     let mut c = 0;
@@ -449,9 +455,11 @@ pub fn fourstep_line_bfp(
         }
         c += w;
     }
+    drop(cols_span);
 
     // Step 3: length-n2 row FFTs, each dequantized out of the staging
     // tier, transformed with the BFP inter-stage codec, and requantized.
+    let rows_span = crate::obs::span(crate::obs::SpanKind::FourStepRows).n(n).start();
     for k1 in 0..n1 {
         let at = k1 * stride;
         stage_re.dequantize_at(at, rre);
@@ -462,10 +470,12 @@ pub fn fourstep_line_bfp(
         stage_re.quantize_at(at, rre);
         stage_im.quantize_at(at, rim);
     }
+    drop(rows_span);
 
     // Step 4: transpose out of the BFP staging into the f32 output via
     // the tile layer, with the inverse conj + 1/N scale (or the
     // pipeline's filter multiply) fused into the store.
+    let _t = crate::obs::span(crate::obs::SpanKind::FourStepTranspose).n(n).start();
     let op = match filter {
         Some((hre, him)) => FusedStore::Mul { hre, him },
         None if inverse => FusedStore::ConjScale(1.0 / n as f32),

@@ -248,6 +248,13 @@ pub fn exchange_transpose(
     rre: &mut [f32],
     rim: &mut [f32],
 ) {
+    // The exchange span is also the feed for the coordinator's exchange
+    // latency histogram (guard-drop sink); the codec spans below feed
+    // the codec histogram the same way.
+    let _exchange = crate::obs::span(crate::obs::SpanKind::Exchange)
+        .n(rows * cols)
+        .precision(precision)
+        .start();
     match precision {
         super::bfp::Precision::F32 => {
             transpose_into(src_re, src_im, dst_re, dst_im, rows, cols, FusedStore::Plain);
@@ -256,10 +263,20 @@ pub fn exchange_transpose(
             let stride = bfp_row_stride(rows);
             bre.ensure(cols * stride);
             bim.ensure(cols * stride);
-            transpose_quantize(src_re, src_im, rows, cols, bre, bim);
+            {
+                let _q = crate::obs::span(crate::obs::SpanKind::Quantize)
+                    .n(rows * cols)
+                    .precision(precision)
+                    .start();
+                transpose_quantize(src_re, src_im, rows, cols, bre, bim);
+            }
             // The staging now holds the turned matrix (cols x rows);
             // reading its rows straight out is an identity-layout
             // dequantize: stage row c is dst row c.
+            let _d = crate::obs::span(crate::obs::SpanKind::Dequantize)
+                .n(rows * cols)
+                .precision(precision)
+                .start();
             for c in 0..cols {
                 bre.dequantize_at(c * stride, &mut rre[..rows]);
                 bim.dequantize_at(c * stride, &mut rim[..rows]);

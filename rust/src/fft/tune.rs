@@ -920,7 +920,7 @@ impl Tuner {
 // Minimal JSON reader (no serde in the dependency budget)
 // ---------------------------------------------------------------------------
 
-mod json {
+pub mod json {
     //! Just enough JSON to read the tuning cache back: objects, arrays,
     //! strings (with escapes), f64 numbers, and literals. Strict on
     //! structure (trailing bytes, unterminated tokens and bad escapes

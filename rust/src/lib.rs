@@ -26,6 +26,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod fft;
+pub mod obs;
 pub mod runtime;
 pub mod sar;
 pub mod sim;

@@ -13,6 +13,9 @@
 //!                  request through the sharded front door.
 //! * `tune`       — search the plan space on this host and persist the
 //!                  winners to the tuning cache (`fft::tune`).
+//! * `trace`      — capture a Chrome trace-event JSON of one sharded
+//!                  `FormImage` request (load in chrome://tracing or
+//!                  Perfetto to see the span tree).
 
 use applefft::bench::table::Table;
 use applefft::cli::Args;
@@ -36,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         Some("sar") => sar(&args),
         Some("image") => image(&args),
         Some("tune") => tune(&args),
+        Some("trace") => trace_cmd(&args),
         _ => {
             println!(
                 "applefft — 'Beating vDSP' (Bergach 2026) reproduction\n\n\
@@ -48,7 +52,8 @@ fn main() -> anyhow::Result<()> {
                  \x20 bench-model\n\
                  \x20 sar         [--lines 64] [--path matched|composed|fused|local]\n\
                  \x20 image       [--n-range 512] [--n-az 256] [--shards 1] [--repeat 1]\n\
-                 \x20 tune        [--sizes 256,...,16384] [--batch 16] [--quick] [--out <file>]\n"
+                 \x20 tune        [--sizes 256,...,16384] [--batch 16] [--quick] [--out <file>]\n\
+                 \x20 trace       [--n-range 512] [--n-az 256] [--shards 2] [--out trace.json]\n"
             );
             Ok(())
         }
@@ -74,7 +79,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         println!(
             "applefft serve — batched FFT service\n\n\
              options: [--requests 200] [--workers 2] [--max-wait-ms 2] [--shards N]\n\
-             \x20        [--clients 4] [--warm] [--trace <file>|synthetic [--rate hz]]\n"
+             \x20        [--clients 4] [--warm] [--trace <file>|synthetic [--rate hz]]\n\
+             \x20        [--stats-text]  (append the Prometheus-style exposition)\n"
         );
         print!("{}", applefft::config::env_knobs_help());
         return Ok(());
@@ -118,7 +124,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             report.p50_us, report.p95_us, report.p99_us, report.max_us, report.failures
         );
         let mut t = Table::new("Per-shard replay breakdown", &[
-            "shard", "requests", "lines", "tiles", "queue p95 us", "exec p95 us", "GFLOPS",
+            "shard", "requests", "lines", "tiles", "queue p50 us", "queue p95 us",
+            "exec p50 us", "exec p95 us", "GFLOPS",
         ]);
         for s in &shard_reports {
             t.row(&[
@@ -126,7 +133,9 @@ fn serve(args: &Args) -> anyhow::Result<()> {
                 s.requests.to_string(),
                 s.lines_in.to_string(),
                 s.tiles.to_string(),
+                format!("{:.0}", s.queue_p50_us),
                 format!("{:.0}", s.queue_p95_us),
+                format!("{:.0}", s.exec_p50_us),
                 format!("{:.0}", s.exec_p95_us),
                 format!("{:.2}", s.gflops),
             ]);
@@ -134,6 +143,9 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         t.print();
         let m = svc.drain()?;
         println!("\nmetrics:\n{}", m.render());
+        if args.flag("stats-text") {
+            println!("\n{}", m.render_prometheus());
+        }
         return Ok(());
     }
     println!(
@@ -181,6 +193,9 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         total_flops / dt / 1e9
     );
     println!("\nmetrics:\n{}", m.render());
+    if args.flag("stats-text") {
+        println!("\n{}", m.render_prometheus());
+    }
     Ok(())
 }
 
@@ -430,5 +445,52 @@ fn image(args: &Args) -> anyhow::Result<()> {
     );
     anyhow::ensure!(hits == scene.targets.len(), "targets must focus");
     println!("\nservice metrics:\n{}", svc.drain()?.render());
+    Ok(())
+}
+
+/// Capture a Chrome trace of one sharded `FormImage` request: enable
+/// span tracing in-process (no `APPLEFFT_TRACE` needed), drive the
+/// decomposed 2D path, and write the trace-event JSON — load it in
+/// chrome://tracing or Perfetto to see the submit -> stripe -> row
+/// phase -> exchange -> column phase -> gather tree.
+fn trace_cmd(args: &Args) -> anyhow::Result<()> {
+    use applefft::sar::azimuth::azimuth_reference;
+    use applefft::sar::{Chirp, RangeCompressor, Scene2d};
+    let nr = args.get_usize("n-range", 512)?;
+    let na = args.get_usize("n-az", 256)?;
+    // Two shards by default: that is the smallest service that takes the
+    // decomposed 2D path (one shard delegates to the fused engine 2D).
+    let shards = args.get_usize("shards", 2)?;
+    let out = std::path::PathBuf::from(args.get_str("out", "trace.json"));
+    applefft::obs::set_enabled(true);
+    let svc = ShardedFftService::start(ServiceConfig {
+        backend: backend_from(args),
+        shards,
+        ..Default::default()
+    })?;
+    let mut rng = Rng::new(12);
+    let chirp = Chirp::new(100e6, 64, 0.8);
+    let scene = Scene2d::random(nr, na, 4, chirp.samples, &mut rng);
+    let echoes = scene.echoes(&chirp, &mut rng);
+    let rc = RangeCompressor::new(chirp, nr);
+    let range = svc.register_filter_prec(nr, rc.filter.clone(), rc.precision)?;
+    let planner = NativePlanner::new();
+    let spec =
+        planner.fft_batch(&azimuth_reference(na, scene.doppler_rate), na, 1, Direction::Forward)?;
+    let mut ha = SplitComplex::zeros(na);
+    for i in 0..na {
+        ha.set(i, spec.get(i).conj());
+    }
+    let azimuth = svc.register_filter_prec(na, ha, rc.precision)?;
+    println!(
+        "trace: {na}x{nr} FormImage, backend {:?}, {} shard(s)",
+        svc.backend(),
+        svc.shard_count()
+    );
+    let image = svc.form_image(&range, &azimuth, echoes, na)?;
+    anyhow::ensure!(image.len() == na * nr);
+    svc.drain()?;
+    let events = applefft::obs::write_chrome(&out)?;
+    println!("wrote {events} trace events to {}", out.display());
     Ok(())
 }

@@ -1,0 +1,205 @@
+//! Hand-rolled Chrome trace-event JSON writer (no serde in the offline
+//! environment; string escaping reuses [`crate::bench::table`]'s).
+//!
+//! The output is the `{"traceEvents": [...]}` object form that
+//! `chrome://tracing` and Perfetto load directly: a `"M"` thread-name
+//! metadata record per ring, `"B"`/`"E"` pairs for same-thread sync
+//! spans (the viewer stacks them by thread), and `"b"`/`"e"`
+//! async-nestable pairs keyed by `cat` + request id for cross-thread
+//! intervals — which is what stitches a sharded 2D request into one
+//! tree. Timestamps are microseconds with the nanosecond remainder as
+//! the fractional part, straight off the trace clock.
+
+use super::trace::ThreadEvents;
+use super::{decode, Phase, SpanEvent};
+use crate::bench::table::json_string;
+
+/// Render drained per-thread event groups as a Chrome trace-event JSON
+/// document. Events whose kind this build does not know are skipped.
+pub fn render(groups: &[ThreadEvents]) -> String {
+    let mut events: Vec<String> = Vec::new();
+    for g in groups {
+        events.push(format!(
+            "{{\"ph\":\"M\",\"pid\":1,\"tid\":{},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":{}}}}}",
+            g.tid,
+            json_string(&g.name)
+        ));
+        for ev in &g.events {
+            if let Some(s) = decode(ev) {
+                events.push(render_event(g.tid, &s));
+            }
+        }
+    }
+    format!("{{\"traceEvents\":[{}]}}\n", events.join(","))
+}
+
+/// Trace timestamps are microseconds; keep nanosecond precision as the
+/// fractional part (the in-repo strict JSON parser reads plain decimal
+/// floats, and so do the trace viewers).
+fn ts_us(ns: u64) -> String {
+    format!("{}.{:03}", ns / 1000, ns % 1000)
+}
+
+fn args_json(s: &SpanEvent) -> String {
+    let mut parts = vec![format!("\"req\":{}", s.req)];
+    if s.n != 0 {
+        parts.push(format!("\"n\":{}", s.n));
+    }
+    if let Some(shard) = s.shard {
+        parts.push(format!("\"shard\":{shard}"));
+    }
+    if let Some(p) = s.precision {
+        parts.push(format!("\"precision\":{}", json_string(p)));
+    }
+    if let Some(op) = s.op {
+        parts.push(format!("\"op\":{}", json_string(op)));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn render_event(tid: usize, s: &SpanEvent) -> String {
+    let name = json_string(s.kind.tag());
+    match s.phase {
+        Phase::SyncBegin => format!(
+            "{{\"name\":{name},\"cat\":{name},\"ph\":\"B\",\"pid\":1,\"tid\":{tid},\
+             \"ts\":{},\"args\":{}}}",
+            ts_us(s.ts_ns),
+            args_json(s)
+        ),
+        Phase::SyncEnd => {
+            format!("{{\"ph\":\"E\",\"pid\":1,\"tid\":{tid},\"ts\":{}}}", ts_us(s.ts_ns))
+        }
+        Phase::AsyncBegin => format!(
+            "{{\"name\":{name},\"cat\":{name},\"ph\":\"b\",\"id\":{},\"pid\":1,\
+             \"tid\":{tid},\"ts\":{},\"args\":{}}}",
+            s.req,
+            ts_us(s.ts_ns),
+            args_json(s)
+        ),
+        Phase::AsyncEnd => format!(
+            "{{\"name\":{name},\"cat\":{name},\"ph\":\"e\",\"id\":{},\"pid\":1,\
+             \"tid\":{tid},\"ts\":{}}}",
+            s.req,
+            ts_us(s.ts_ns)
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{span, OpTag, Phase, RawEvent, SpanKind};
+    use super::*;
+    use crate::fft::bfp::Precision;
+    use crate::fft::tune::json;
+
+    fn ev(builder: crate::obs::SpanBuilder, phase: Phase, ts_ns: u64) -> RawEvent {
+        let (req, meta) = builder.packed(phase);
+        RawEvent { ts_ns, req, meta }
+    }
+
+    fn sample_groups() -> Vec<ThreadEvents> {
+        let tile = span(SpanKind::WorkerTile).req(5).n(4096).precision(Precision::F32);
+        let exch = span(SpanKind::Exchange).req(5).n(4096).shard(1).op(OpTag::Image);
+        let request = span(SpanKind::Request).req(5).op(OpTag::Image);
+        vec![
+            ThreadEvents {
+                tid: 0,
+                name: "applefft-worker-0".into(),
+                events: vec![
+                    ev(tile, Phase::SyncBegin, 1_500),
+                    ev(exch, Phase::SyncBegin, 2_000),
+                    ev(exch, Phase::SyncEnd, 3_250),
+                    ev(tile, Phase::SyncEnd, 4_001),
+                ],
+            },
+            ThreadEvents {
+                tid: 1,
+                name: "main \"quoted\"".into(),
+                events: vec![
+                    ev(request, Phase::AsyncBegin, 1_000),
+                    ev(request, Phase::AsyncEnd, 5_000),
+                ],
+            },
+        ]
+    }
+
+    #[test]
+    fn render_is_strict_json_with_expected_events() {
+        let doc = render(&sample_groups());
+        // The document must survive the repo's own strict JSON parser
+        // (the same one that reads tuning caches).
+        let v = json::parse(&doc).expect("chrome trace must be strict JSON");
+        let events = v.get("traceEvents").and_then(|e| e.arr()).expect("traceEvents array");
+        // 2 thread-name metadata + 4 sync + 2 async events.
+        assert_eq!(events.len(), 8);
+        let phs: Vec<String> = events
+            .iter()
+            .map(|e| e.get("ph").and_then(|p| p.str()).unwrap().to_string())
+            .collect();
+        assert_eq!(phs.iter().filter(|p| *p == "M").count(), 2);
+        assert_eq!(phs.iter().filter(|p| *p == "B").count(), 2);
+        assert_eq!(phs.iter().filter(|p| *p == "E").count(), 2);
+        assert_eq!(phs.iter().filter(|p| *p == "b").count(), 1);
+        assert_eq!(phs.iter().filter(|p| *p == "e").count(), 1);
+    }
+
+    #[test]
+    fn sync_events_carry_name_args_and_fractional_ts() {
+        let doc = render(&sample_groups());
+        let v = json::parse(&doc).unwrap();
+        let events = v.get("traceEvents").and_then(|e| e.arr()).unwrap();
+        let begin = events
+            .iter()
+            .find(|e| {
+                e.get("ph").and_then(|p| p.str()) == Some("B")
+                    && e.get("name").and_then(|n| n.str()) == Some("exchange_transpose")
+            })
+            .expect("exchange begin event");
+        // ts 2000 ns = 2.000 us; the parser reads it as a float.
+        assert!((begin.get("ts").and_then(|t| t.num()).unwrap() - 2.0).abs() < 1e-9);
+        let args = begin.get("args").expect("args object");
+        assert_eq!(args.get("req").and_then(|r| r.num()), Some(5.0));
+        assert_eq!(args.get("n").and_then(|n| n.num()), Some(4096.0));
+        assert_eq!(args.get("shard").and_then(|s| s.num()), Some(1.0));
+        assert_eq!(args.get("op").and_then(|o| o.str()), Some("image"));
+        // 3250 ns renders with a non-trivial fractional part.
+        assert!(doc.contains("\"ts\":3.250"), "{doc}");
+    }
+
+    #[test]
+    fn async_events_key_on_request_id_and_names_escape() {
+        let doc = render(&sample_groups());
+        let v = json::parse(&doc).unwrap();
+        let events = v.get("traceEvents").and_then(|e| e.arr()).unwrap();
+        let b = events
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.str()) == Some("b"))
+            .expect("async begin");
+        assert_eq!(b.get("id").and_then(|i| i.num()), Some(5.0));
+        assert_eq!(b.get("cat").and_then(|c| c.str()), Some("request"));
+        // The quoted thread name round-trips through escaping.
+        let meta = events
+            .iter()
+            .find(|e| {
+                e.get("ph").and_then(|p| p.str()) == Some("M")
+                    && e.get("tid").and_then(|t| t.num()) == Some(1.0)
+            })
+            .unwrap();
+        let name = meta.get("args").and_then(|a| a.get("name"));
+        assert_eq!(name.and_then(|n| n.str()), Some("main \"quoted\""));
+    }
+
+    #[test]
+    fn unknown_kinds_are_skipped_not_corrupted() {
+        let groups = vec![ThreadEvents {
+            tid: 0,
+            name: "t".into(),
+            events: vec![RawEvent { ts_ns: 1, req: 1, meta: 0x3f }],
+        }];
+        let doc = render(&groups);
+        let v = json::parse(&doc).unwrap();
+        let events = v.get("traceEvents").and_then(|e| e.arr()).unwrap();
+        assert_eq!(events.len(), 1, "only the thread-name metadata survives");
+    }
+}

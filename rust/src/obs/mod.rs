@@ -1,0 +1,550 @@
+//! Observability tier: always-compiled span tracing across the request
+//! path, plus the export glue that turns recorded spans into a
+//! Chrome-trace JSON file.
+//!
+//! The paper's central empirical lesson (§VIII) is that performance
+//! intuition fails without measurement — so the serving stack carries
+//! its own low-overhead telemetry instead of guessing where a request's
+//! time goes between submit, queue, stripe, device, corner-turn and
+//! reassembly:
+//!
+//! - **Spans** ([`span`]): RAII guards that emit begin/end event pairs
+//!   into the lock-free per-thread rings of [`trace`]. Each span packs
+//!   its kind, request id, shard slot, transform length and precision
+//!   into one `u64`, so the hot path writes three words and never
+//!   allocates. With tracing disabled the recorder is never constructed
+//!   and a span costs one relaxed atomic load.
+//! - **Async pairs** ([`SpanBuilder::async_begin`] /
+//!   [`SpanBuilder::async_end`]): cross-thread intervals (a request's
+//!   life, its time in the batching queue) keyed by request id, so a
+//!   sharded 2D request renders as one coherent tree even though its
+//!   pieces run on many threads.
+//! - **Metrics sink** ([`set_metrics_sink`]): worker/device/orchestrator
+//!   threads install their service's [`Metrics`], and exchange/codec
+//!   spans feed the per-kind duration histograms even while tracing is
+//!   off — that is the "always-on" half of the tier.
+//! - **Exports**: [`write_chrome`] renders everything drained so far via
+//!   [`chrome`]; `APPLEFFT_TRACE=<path>` ([`init_from_env`] /
+//!   [`flush_env_trace`]) wires it to service drains without code
+//!   changes.
+
+pub mod chrome;
+pub mod trace;
+
+use crate::coordinator::metrics::Metrics;
+use crate::fft::bfp::Precision;
+use crate::fft::Direction;
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+
+pub use trace::{
+    enabled, now_ns, recorder_constructed, set_enabled, take_events, RawEvent, ThreadEvents,
+};
+
+/// What a span measures. The variants follow the request path top-down:
+/// service front door, batcher, worker, device, kernel phases, then the
+/// sharded 2D orchestration stages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Async: a request's whole life, submit to reply.
+    Request = 0,
+    /// Sync: the client-side submit call (validation + enqueue).
+    Submit = 1,
+    /// Async: time between admission and first tile dispatch.
+    Queue = 2,
+    /// Sync: batcher-thread admission (coalescing + eager dispatch).
+    Admit = 3,
+    /// Sync: one worker executing one tile end to end.
+    WorkerTile = 4,
+    /// Sync: the device thread running one job on the executor.
+    DeviceExec = 5,
+    /// Sync: the native executor serving one job (all lines).
+    NativeExec = 6,
+    /// Sync: four-step column-DFT phase (steps 1–3's column pass).
+    FourStepCols = 7,
+    /// Sync: four-step row-FFT phase.
+    FourStepRows = 8,
+    /// Sync: four-step workspace→output transpose.
+    FourStepTranspose = 9,
+    /// Sync: a blocked corner-turn exchange (`tile::exchange_transpose`).
+    Exchange = 10,
+    /// Sync: BFP16 quantize during a corner turn.
+    Quantize = 11,
+    /// Sync: BFP16 dequantize after a corner turn.
+    Dequantize = 12,
+    /// Sync: sharded front door striping one request across shards.
+    Stripe = 13,
+    /// Sync: 2D row phase striped across shards.
+    RowPhase = 14,
+    /// Sync: 2D column phase striped across shards.
+    ColPhase = 15,
+    /// Sync: collector reassembling shard stripes into the reply.
+    Gather = 16,
+}
+
+/// Every kind, in discriminant order (used by decode and the tests).
+pub const ALL_KINDS: [SpanKind; 17] = [
+    SpanKind::Request,
+    SpanKind::Submit,
+    SpanKind::Queue,
+    SpanKind::Admit,
+    SpanKind::WorkerTile,
+    SpanKind::DeviceExec,
+    SpanKind::NativeExec,
+    SpanKind::FourStepCols,
+    SpanKind::FourStepRows,
+    SpanKind::FourStepTranspose,
+    SpanKind::Exchange,
+    SpanKind::Quantize,
+    SpanKind::Dequantize,
+    SpanKind::Stripe,
+    SpanKind::RowPhase,
+    SpanKind::ColPhase,
+    SpanKind::Gather,
+];
+
+impl SpanKind {
+    /// Stable name used as the Chrome event `name`/`cat`.
+    pub fn tag(self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Submit => "submit",
+            SpanKind::Queue => "queue",
+            SpanKind::Admit => "admit",
+            SpanKind::WorkerTile => "worker_tile",
+            SpanKind::DeviceExec => "device_exec",
+            SpanKind::NativeExec => "native_exec",
+            SpanKind::FourStepCols => "fourstep_cols",
+            SpanKind::FourStepRows => "fourstep_rows",
+            SpanKind::FourStepTranspose => "fourstep_transpose",
+            SpanKind::Exchange => "exchange_transpose",
+            SpanKind::Quantize => "bfp_quantize",
+            SpanKind::Dequantize => "bfp_dequantize",
+            SpanKind::Stripe => "stripe",
+            SpanKind::RowPhase => "row_phase",
+            SpanKind::ColPhase => "col_phase",
+            SpanKind::Gather => "gather",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        ALL_KINDS.get(v as usize).copied()
+    }
+}
+
+/// Which begin/end edge an event is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Chrome `"B"`: same-thread stack begin.
+    SyncBegin = 0,
+    /// Chrome `"E"`: same-thread stack end.
+    SyncEnd = 1,
+    /// Chrome `"b"`: async-nestable begin, keyed by request id.
+    AsyncBegin = 2,
+    /// Chrome `"e"`: async-nestable end.
+    AsyncEnd = 3,
+}
+
+/// Request-operation tag carried on spans (what the request asked for).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpTag {
+    Fwd = 1,
+    Inv = 2,
+    Matched = 3,
+    Fft2d = 4,
+    Image = 5,
+}
+
+impl OpTag {
+    fn tag(self) -> &'static str {
+        match self {
+            OpTag::Fwd => "fwd",
+            OpTag::Inv => "inv",
+            OpTag::Matched => "matched",
+            OpTag::Fft2d => "fft2d",
+            OpTag::Image => "image",
+        }
+    }
+
+    /// The tag of a request kind, reusing the service's wire names.
+    pub fn of(kind: &crate::coordinator::request::RequestKind) -> OpTag {
+        use crate::coordinator::request::RequestKind;
+        match kind {
+            RequestKind::Fft(Direction::Forward) => OpTag::Fwd,
+            RequestKind::Fft(Direction::Inverse) => OpTag::Inv,
+            RequestKind::MatchedFilter(_) => OpTag::Matched,
+            RequestKind::Fft2d(_) => OpTag::Fft2d,
+            RequestKind::FormImage { .. } => OpTag::Image,
+        }
+    }
+}
+
+// Packed `meta` layout (one u64 per event):
+//   bits [0, 6)   span kind
+//   bits [6, 8)   phase (sync/async begin/end)
+//   bits [8, 10)  precision (0 none, 1 f32, 2 bfp16)
+//   bits [10, 13) op tag (0 none, then `OpTag` discriminants)
+//   bits [16, 32) shard slot + 1 (0 = no shard)
+//   bits [32, 64) transform length n (0 = not applicable)
+const KIND_MASK: u64 = 0x3f;
+const PHASE_SHIFT: u32 = 6;
+const PREC_SHIFT: u32 = 8;
+const OP_SHIFT: u32 = 10;
+const SHARD_SHIFT: u32 = 16;
+const N_SHIFT: u32 = 32;
+
+fn pack(kind: SpanKind, phase: Phase, extra: u64) -> u64 {
+    (kind as u64) | ((phase as u64) << PHASE_SHIFT) | extra
+}
+
+/// Decoded view of one packed event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    pub phase: Phase,
+    pub req: u64,
+    pub ts_ns: u64,
+    pub shard: Option<usize>,
+    /// Transform length, 0 when the span carries none.
+    pub n: usize,
+    pub precision: Option<&'static str>,
+    pub op: Option<&'static str>,
+}
+
+/// Decode a raw ring event; `None` for an unknown kind (a newer writer).
+pub fn decode(ev: &RawEvent) -> Option<SpanEvent> {
+    let kind = SpanKind::from_u8((ev.meta & KIND_MASK) as u8)?;
+    let phase = match (ev.meta >> PHASE_SHIFT) & 0x3 {
+        0 => Phase::SyncBegin,
+        1 => Phase::SyncEnd,
+        2 => Phase::AsyncBegin,
+        _ => Phase::AsyncEnd,
+    };
+    let precision = match (ev.meta >> PREC_SHIFT) & 0x3 {
+        1 => Some("f32"),
+        2 => Some("bfp16"),
+        _ => None,
+    };
+    let op = match (ev.meta >> OP_SHIFT) & 0x7 {
+        1 => Some(OpTag::Fwd.tag()),
+        2 => Some(OpTag::Inv.tag()),
+        3 => Some(OpTag::Matched.tag()),
+        4 => Some(OpTag::Fft2d.tag()),
+        5 => Some(OpTag::Image.tag()),
+        _ => None,
+    };
+    let shard_raw = (ev.meta >> SHARD_SHIFT) & 0xffff;
+    let shard = if shard_raw == 0 { None } else { Some(shard_raw as usize - 1) };
+    Some(SpanEvent {
+        kind,
+        phase,
+        req: ev.req,
+        ts_ns: ev.ts_ns,
+        shard,
+        n: (ev.meta >> N_SHIFT) as usize,
+        precision,
+        op,
+    })
+}
+
+/// Start building a span of `kind`. Builders are `Copy` and free to
+/// construct; nothing touches the clock or the recorder until
+/// [`SpanBuilder::start`] (or an async emit).
+pub fn span(kind: SpanKind) -> SpanBuilder {
+    SpanBuilder { kind, req: 0, extra: 0 }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SpanBuilder {
+    kind: SpanKind,
+    req: u64,
+    extra: u64,
+}
+
+impl SpanBuilder {
+    pub fn req(mut self, id: u64) -> Self {
+        self.req = id;
+        self
+    }
+
+    pub fn n(mut self, n: usize) -> Self {
+        self.extra = (self.extra & !(0xffff_ffffu64 << N_SHIFT))
+            | (((n as u64) & 0xffff_ffff) << N_SHIFT);
+        self
+    }
+
+    pub fn shard(mut self, slot: usize) -> Self {
+        self.extra = (self.extra & !(0xffffu64 << SHARD_SHIFT))
+            | (((slot as u64 & 0x7fff) + 1) << SHARD_SHIFT);
+        self
+    }
+
+    pub fn precision(mut self, p: Precision) -> Self {
+        let bits: u64 = match p {
+            Precision::F32 => 1,
+            Precision::Bfp16 => 2,
+        };
+        self.extra = (self.extra & !(0x3u64 << PREC_SHIFT)) | (bits << PREC_SHIFT);
+        self
+    }
+
+    pub fn op(mut self, t: OpTag) -> Self {
+        self.extra = (self.extra & !(0x7u64 << OP_SHIFT)) | ((t as u64) << OP_SHIFT);
+        self
+    }
+
+    pub fn dir(self, d: Direction) -> Self {
+        self.op(match d {
+            Direction::Forward => OpTag::Fwd,
+            Direction::Inverse => OpTag::Inv,
+        })
+    }
+
+    /// Begin a sync span; the returned guard emits the end edge (and
+    /// feeds the metrics sink for exchange/codec kinds) on drop. When
+    /// tracing is off and no sink applies, the guard is inert and the
+    /// clock is never read.
+    pub fn start(self) -> SpanGuard {
+        let traced = trace::enabled();
+        let sink = sink_for(self.kind);
+        if !traced && sink.is_none() {
+            return SpanGuard { state: None };
+        }
+        let t0_ns = trace::now_ns();
+        if traced {
+            trace::emit(t0_ns, self.req, pack(self.kind, Phase::SyncBegin, self.extra));
+        }
+        SpanGuard {
+            state: Some(SpanState {
+                kind: self.kind,
+                req: self.req,
+                extra: self.extra,
+                t0_ns,
+                traced,
+                sink,
+            }),
+        }
+    }
+
+    /// Emit an async-begin edge (keyed by request id), if tracing.
+    pub fn async_begin(self) {
+        if trace::enabled() {
+            trace::emit(trace::now_ns(), self.req, pack(self.kind, Phase::AsyncBegin, self.extra));
+        }
+    }
+
+    /// Emit the matching async-end edge, if tracing.
+    pub fn async_end(self) {
+        if trace::enabled() {
+            trace::emit(trace::now_ns(), self.req, pack(self.kind, Phase::AsyncEnd, self.extra));
+        }
+    }
+
+    /// Packed wire form of this builder at `phase` — the chrome renderer
+    /// tests build events through this instead of duplicating the bit
+    /// layout.
+    #[cfg(test)]
+    pub(crate) fn packed(self, phase: Phase) -> (u64, u64) {
+        (self.req, pack(self.kind, phase, self.extra))
+    }
+}
+
+struct SpanState {
+    kind: SpanKind,
+    req: u64,
+    extra: u64,
+    t0_ns: u64,
+    traced: bool,
+    sink: Option<Arc<Metrics>>,
+}
+
+/// RAII guard for a sync span; see [`SpanBuilder::start`].
+pub struct SpanGuard {
+    state: Option<SpanState>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(s) = self.state.take() else { return };
+        let t1 = trace::now_ns();
+        if s.traced {
+            trace::emit(t1, s.req, pack(s.kind, Phase::SyncEnd, s.extra));
+        }
+        if let Some(m) = s.sink {
+            let d = t1.saturating_sub(s.t0_ns);
+            match s.kind {
+                SpanKind::Exchange => m.exchange_latency.record_ns(d),
+                SpanKind::Quantize | SpanKind::Dequantize => m.codec_latency.record_ns(d),
+                _ => {}
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// The metrics sink the current thread's exchange/codec spans feed.
+    static SINK: RefCell<Option<Arc<Metrics>>> = const { RefCell::new(None) };
+}
+
+/// Install (or clear) the calling thread's metrics sink. Worker,
+/// device, and 2D-orchestrator threads install their service's
+/// [`Metrics`] so corner-turn and BFP-codec spans land in the per-kind
+/// histograms even when tracing is disabled.
+pub fn set_metrics_sink(sink: Option<Arc<Metrics>>) {
+    SINK.with(|s| *s.borrow_mut() = sink);
+}
+
+/// Only the kinds that feed histograms pay the TLS lookup; every other
+/// span's disabled path stays a single relaxed load.
+fn sink_for(kind: SpanKind) -> Option<Arc<Metrics>> {
+    match kind {
+        SpanKind::Exchange | SpanKind::Quantize | SpanKind::Dequantize => {
+            SINK.with(|s| s.borrow().clone())
+        }
+        _ => None,
+    }
+}
+
+/// Process-global request-id counter. Both the single service and the
+/// sharded front door mint from it, so request ids — which key the
+/// async span pairs in the rendered trace — never collide across
+/// coordinators in one process.
+pub fn next_request_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+static TRACE_PATH: OnceLock<Option<PathBuf>> = OnceLock::new();
+
+/// Honour `APPLEFFT_TRACE=<path>`: when set, enable tracing and flush a
+/// Chrome trace file there on every service drain. Called by
+/// `FftService::start`, so any service-owning process opts in with the
+/// env knob alone; the variable is read once per process.
+pub fn init_from_env() {
+    let path =
+        TRACE_PATH.get_or_init(|| std::env::var_os("APPLEFFT_TRACE").map(PathBuf::from));
+    if path.is_some() {
+        set_enabled(true);
+    }
+}
+
+/// Everything drained so far, merged per thread across flushes — each
+/// [`write_chrome`] rewrites the whole file so the last flush wins with
+/// the full history.
+static ACCUM: Mutex<Vec<ThreadEvents>> = Mutex::new(Vec::new());
+
+fn accumulate(groups: Vec<ThreadEvents>) -> Vec<ThreadEvents> {
+    let mut acc = ACCUM.lock().unwrap();
+    for g in groups {
+        match acc.iter_mut().find(|a| a.tid == g.tid) {
+            Some(a) => a.events.extend(g.events),
+            None => acc.push(g),
+        }
+    }
+    acc.clone()
+}
+
+/// Drain the recorder and (re)write the Chrome trace-event file at
+/// `path` with everything accumulated so far. Returns the total event
+/// count behind the file.
+pub fn write_chrome(path: &Path) -> std::io::Result<usize> {
+    let all = accumulate(take_events());
+    let n = all.iter().map(|g| g.events.len()).sum();
+    std::fs::write(path, chrome::render(&all))?;
+    Ok(n)
+}
+
+/// Flush to the `APPLEFFT_TRACE` path if — and only if — the env knob
+/// was set. Called on every service drain; IO errors are reported to
+/// stderr, never fatal to the drain.
+pub fn flush_env_trace() {
+    let Some(Some(path)) = TRACE_PATH.get() else { return };
+    if let Err(e) = write_chrome(path) {
+        eprintln!("APPLEFFT_TRACE: cannot write {}: {e}", path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Pure pack/decode tests only: anything touching the global
+    // recorder lives in `tests/obs_trace.rs` (serialized) and
+    // `tests/obs_disabled.rs` (own binary), because lib tests run in
+    // parallel against process-wide state.
+    use super::*;
+
+    #[test]
+    fn kind_u8_roundtrip_and_unique_tags() {
+        for (i, k) in ALL_KINDS.iter().enumerate() {
+            assert_eq!(SpanKind::from_u8(i as u8), Some(*k));
+            assert_eq!(*k as usize, i);
+        }
+        assert_eq!(SpanKind::from_u8(ALL_KINDS.len() as u8), None);
+        let mut tags: Vec<&str> = ALL_KINDS.iter().map(|k| k.tag()).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), ALL_KINDS.len(), "span tags must be unique");
+    }
+
+    #[test]
+    fn pack_decode_roundtrip_full_fields() {
+        let b = span(SpanKind::Exchange)
+            .req(99)
+            .n(16384)
+            .shard(3)
+            .precision(Precision::Bfp16)
+            .op(OpTag::Image);
+        let (req, meta) = b.packed(Phase::SyncBegin);
+        let ev = RawEvent { ts_ns: 1234, req, meta };
+        let s = decode(&ev).unwrap();
+        assert_eq!(s.kind, SpanKind::Exchange);
+        assert_eq!(s.phase, Phase::SyncBegin);
+        assert_eq!(s.req, 99);
+        assert_eq!(s.ts_ns, 1234);
+        assert_eq!(s.n, 16384);
+        assert_eq!(s.shard, Some(3));
+        assert_eq!(s.precision, Some("bfp16"));
+        assert_eq!(s.op, Some("image"));
+    }
+
+    #[test]
+    fn pack_decode_empty_fields_and_phases() {
+        for phase in [Phase::SyncBegin, Phase::SyncEnd, Phase::AsyncBegin, Phase::AsyncEnd] {
+            let (req, meta) = span(SpanKind::Request).req(7).packed(phase);
+            let s = decode(&RawEvent { ts_ns: 0, req, meta }).unwrap();
+            assert_eq!(s.phase, phase);
+            assert_eq!(s.kind, SpanKind::Request);
+            assert_eq!(s.shard, None);
+            assert_eq!(s.n, 0);
+            assert_eq!(s.precision, None);
+            assert_eq!(s.op, None);
+        }
+        // Shard slot 0 is distinguishable from "no shard".
+        let (req, meta) = span(SpanKind::Stripe).packed(Phase::SyncBegin);
+        assert_eq!(decode(&RawEvent { ts_ns: 0, req, meta }).unwrap().shard, None);
+        let (req, meta) = span(SpanKind::Stripe).shard(0).packed(Phase::SyncBegin);
+        assert_eq!(decode(&RawEvent { ts_ns: 0, req, meta }).unwrap().shard, Some(0));
+        // Unknown kind decodes to None rather than garbage.
+        assert_eq!(decode(&RawEvent { ts_ns: 0, req: 0, meta: 0x3f }), None);
+    }
+
+    #[test]
+    fn dir_and_op_tags_match_request_kinds() {
+        use crate::coordinator::request::RequestKind;
+        assert_eq!(OpTag::of(&RequestKind::Fft(Direction::Forward)), OpTag::Fwd);
+        assert_eq!(OpTag::of(&RequestKind::Fft(Direction::Inverse)), OpTag::Inv);
+        assert_eq!(OpTag::of(&RequestKind::Fft2d(Direction::Forward)), OpTag::Fft2d);
+        let (req, meta) =
+            span(SpanKind::Submit).dir(Direction::Inverse).packed(Phase::SyncBegin);
+        assert_eq!(decode(&RawEvent { ts_ns: 0, req, meta }).unwrap().op, Some("inv"));
+    }
+
+    #[test]
+    fn request_ids_are_unique_and_increasing() {
+        let a = next_request_id();
+        let b = next_request_id();
+        assert!(b > a);
+    }
+}

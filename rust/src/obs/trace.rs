@@ -1,0 +1,272 @@
+//! The lock-free recording tier of [`crate::obs`]: one fixed-capacity
+//! ring buffer per emitting thread, drop-oldest on wrap, zero
+//! steady-state allocation — the same discipline as
+//! [`crate::fft::exec::WorkspacePool`].
+//!
+//! Each ring has exactly one writer (the owning thread), so publication
+//! needs no CAS loop: a seqlock-style slot protocol (`seq = WRITING`,
+//! write the fields, `seq = index + 1`) lets any draining thread detect
+//! and skip torn or lapped slots instead of ever locking the hot path.
+//! The only lock in the module guards the ring *registry*, taken once
+//! per thread (first event) and per drain — never per event.
+//!
+//! The recorder singleton is constructed on the first
+//! [`set_enabled`]`(true)` and never before: a process that leaves
+//! tracing off pays one relaxed atomic load per span and allocates
+//! nothing ([`recorder_constructed`] is the acceptance probe for that).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Events retained per thread. Power of two; older events are
+/// overwritten in place once the ring wraps.
+pub const RING_CAP: usize = 1 << 13;
+
+/// Slot `seq` sentinel: the owning thread is mid-write.
+const WRITING: u64 = u64::MAX;
+
+/// One recorded event: a timestamp on the process-wide trace clock, the
+/// request id it belongs to, and the packed span metadata
+/// ([`crate::obs`] owns the bit layout; this tier treats it opaquely).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RawEvent {
+    pub ts_ns: u64,
+    pub req: u64,
+    pub meta: u64,
+}
+
+#[derive(Default)]
+struct Slot {
+    /// `0` = never written, [`WRITING`] = mid-update, otherwise
+    /// `index + 1` of the event the slot currently holds.
+    seq: AtomicU64,
+    ts_ns: AtomicU64,
+    req: AtomicU64,
+    meta: AtomicU64,
+}
+
+/// A single thread's ring. Only the owning thread writes; any thread
+/// may drain concurrently.
+pub struct ThreadRing {
+    tid: usize,
+    name: String,
+    /// Total events ever pushed (the next event index).
+    head: AtomicU64,
+    /// Every event below this index has been handed out by a drain.
+    taken_below: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl ThreadRing {
+    fn new(tid: usize, name: String) -> ThreadRing {
+        ThreadRing {
+            tid,
+            name,
+            head: AtomicU64::new(0),
+            taken_below: AtomicU64::new(0),
+            slots: (0..RING_CAP).map(|_| Slot::default()).collect(),
+        }
+    }
+
+    /// Owning-thread-only append; overwrites the oldest slot on wrap.
+    fn push(&self, ts_ns: u64, req: u64, meta: u64) {
+        let idx = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(idx as usize) & (RING_CAP - 1)];
+        slot.seq.store(WRITING, Ordering::Release);
+        slot.ts_ns.store(ts_ns, Ordering::Relaxed);
+        slot.req.store(req, Ordering::Relaxed);
+        slot.meta.store(meta, Ordering::Relaxed);
+        slot.seq.store(idx + 1, Ordering::Release);
+        self.head.store(idx + 1, Ordering::Release);
+    }
+
+    /// Hand out the events recorded since the previous drain, skipping
+    /// slots the writer has lapped or is mid-writing (a torn slot is
+    /// dropped, never emitted as garbage).
+    fn drain(&self) -> Vec<RawEvent> {
+        let head = self.head.load(Ordering::Acquire);
+        let floor = head.saturating_sub(RING_CAP as u64);
+        let start = self.taken_below.load(Ordering::Acquire).max(floor);
+        let mut out = Vec::with_capacity((head - start) as usize);
+        for i in start..head {
+            let slot = &self.slots[(i as usize) & (RING_CAP - 1)];
+            if slot.seq.load(Ordering::Acquire) != i + 1 {
+                continue;
+            }
+            let ev = RawEvent {
+                ts_ns: slot.ts_ns.load(Ordering::Relaxed),
+                req: slot.req.load(Ordering::Relaxed),
+                meta: slot.meta.load(Ordering::Relaxed),
+            };
+            // Validate again after the field reads: if the writer
+            // lapped us mid-copy the fields may be torn — drop them.
+            if slot.seq.load(Ordering::Acquire) == i + 1 {
+                out.push(ev);
+            }
+        }
+        self.taken_below.store(head, Ordering::Release);
+        out
+    }
+}
+
+/// One thread's drained slice: its stable ring index (the Chrome `tid`),
+/// its thread name, and the events in push order.
+#[derive(Clone, Debug)]
+pub struct ThreadEvents {
+    pub tid: usize,
+    pub name: String,
+    pub events: Vec<RawEvent>,
+}
+
+/// The process-wide recorder: the registry of per-thread rings.
+/// Constructed at most once, and only when tracing is first enabled.
+pub struct Recorder {
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+}
+
+impl Recorder {
+    /// Register (and return) a fresh ring for the calling thread. The
+    /// ring index doubles as the Chrome trace `tid`; the name is the
+    /// OS thread name when one was set at spawn.
+    fn ring(&self) -> Arc<ThreadRing> {
+        let mut rings = self.rings.lock().unwrap();
+        let tid = rings.len();
+        let name = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("thread-{tid}"));
+        let ring = Arc::new(ThreadRing::new(tid, name));
+        rings.push(ring.clone());
+        ring
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RECORDER: OnceLock<Recorder> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    /// Cached handle to this thread's registered ring — registry lock
+    /// paid once per thread, not per event.
+    static RING: RefCell<Option<Arc<ThreadRing>>> = const { RefCell::new(None) };
+}
+
+/// Nanoseconds since the process-wide trace epoch (lazily pinned on
+/// first use) — one monotonic clock shared by every thread, so spans
+/// from different threads order correctly in the rendered trace.
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Whether span emission is live. One relaxed load: this is the whole
+/// disabled-path cost of a kernel-side span.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on or off. The recorder singleton is constructed on the
+/// first enable and never before.
+pub fn set_enabled(on: bool) {
+    if on {
+        let _ = RECORDER.get_or_init(|| Recorder { rings: Mutex::new(Vec::new()) });
+    }
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Whether the recorder singleton has ever been constructed — `false`
+/// for the lifetime of a process that never enables tracing.
+pub fn recorder_constructed() -> bool {
+    RECORDER.get().is_some()
+}
+
+/// Append one event to the calling thread's ring. No-op until the
+/// recorder exists; callers gate on [`enabled`] first.
+pub(crate) fn emit(ts_ns: u64, req: u64, meta: u64) {
+    let Some(rec) = RECORDER.get() else { return };
+    RING.with(|cell| {
+        let mut cached = cell.borrow_mut();
+        let ring = cached.get_or_insert_with(|| rec.ring());
+        ring.push(ts_ns, req, meta);
+    });
+}
+
+/// Drain every registered ring: the events recorded since the previous
+/// take, grouped per thread (threads with nothing new are omitted).
+pub fn take_events() -> Vec<ThreadEvents> {
+    let Some(rec) = RECORDER.get() else {
+        return Vec::new();
+    };
+    let rings: Vec<Arc<ThreadRing>> = rec.rings.lock().unwrap().clone();
+    rings
+        .iter()
+        .filter_map(|r| {
+            let events = r.drain();
+            if events.is_empty() {
+                None
+            } else {
+                Some(ThreadEvents { tid: r.tid, name: r.name.clone(), events })
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    // Ring-level tests construct their own `ThreadRing` rather than
+    // going through the global recorder: the registry is process-wide
+    // and the lib test binary runs in parallel (end-to-end recorder
+    // behavior lives in `tests/obs_trace.rs`, which serializes).
+    use super::*;
+
+    #[test]
+    fn push_then_drain_roundtrips_in_order() {
+        let r = ThreadRing::new(0, "t".into());
+        for i in 0..10u64 {
+            r.push(i * 100, i, i << 32);
+        }
+        let got = r.drain();
+        assert_eq!(got.len(), 10);
+        for (i, ev) in got.iter().enumerate() {
+            let i = i as u64;
+            assert_eq!(*ev, RawEvent { ts_ns: i * 100, req: i, meta: i << 32 });
+        }
+    }
+
+    #[test]
+    fn drain_watermark_yields_only_new_events() {
+        let r = ThreadRing::new(0, "t".into());
+        r.push(1, 1, 1);
+        assert_eq!(r.drain().len(), 1);
+        assert!(r.drain().is_empty(), "second drain sees nothing new");
+        r.push(2, 2, 2);
+        r.push(3, 3, 3);
+        let got = r.drain();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].ts_ns, 2);
+    }
+
+    #[test]
+    fn wrap_drops_oldest_keeps_newest() {
+        let r = ThreadRing::new(0, "t".into());
+        let total = RING_CAP as u64 + 10;
+        for i in 0..total {
+            r.push(i, i, 0);
+        }
+        let got = r.drain();
+        // The first 10 events were overwritten by the wrap; everything
+        // else survives, in order.
+        assert_eq!(got.len(), RING_CAP);
+        assert_eq!(got.first().unwrap().ts_ns, 10);
+        assert_eq!(got.last().unwrap().ts_ns, total - 1);
+    }
+
+    #[test]
+    fn trace_clock_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

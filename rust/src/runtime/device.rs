@@ -65,13 +65,17 @@ pub enum DeviceBackend {
 /// channel queueing), which is the denominator of the coordinator's
 /// executor-GFLOPS metric — measured here because worker-side wall time
 /// would double-count whenever several workers queue behind this one
-/// serialized thread.
+/// serialized thread. `sink` is the coordinator metrics handle the obs
+/// span guards feed: exchange corner turns and BFP codec passes run on
+/// this thread, so their latency histograms are recorded here.
 pub fn run_device(
     registry: Registry,
     backend: DeviceBackend,
     rx: mpsc::Receiver<Job>,
     busy_ns: Arc<AtomicU64>,
+    sink: Option<Arc<crate::coordinator::metrics::Metrics>>,
 ) {
+    crate::obs::set_metrics_sink(sink);
     match backend {
         DeviceBackend::Pjrt => match PjrtDevice::new(registry) {
             Ok(mut dev) => {
@@ -93,6 +97,12 @@ pub fn run_device(
         DeviceBackend::Native => {
             let dev = NativeExec::new(registry);
             while let Ok(mut job) = rx.recv() {
+                // First input tensor is the data plane, dims (batch, n).
+                let n = job.dims.first().and_then(|d| d.get(1)).copied().unwrap_or(0);
+                let _exec = crate::obs::span(crate::obs::SpanKind::DeviceExec)
+                    .n(n)
+                    .precision(job.precision)
+                    .start();
                 let t0 = Instant::now();
                 let result = dev.execute(&mut job);
                 busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);

@@ -53,10 +53,29 @@ pub struct Engine {
 impl Engine {
     /// Start an engine with the default artifacts directory.
     pub fn start(backend: Backend) -> Result<Engine> {
-        Self::start_with_dir(backend, &artifacts_dir())
+        Self::start_with(backend, None)
+    }
+
+    /// [`Self::start`] with a coordinator metrics handle installed as the
+    /// device thread's span sink: exchange corner turns and BFP codec
+    /// passes execute on the device thread, so their latency histograms
+    /// must be fed from there, not from the submitting worker.
+    pub fn start_with(
+        backend: Backend,
+        sink: Option<Arc<crate::coordinator::metrics::Metrics>>,
+    ) -> Result<Engine> {
+        Self::start_inner(backend, &artifacts_dir(), sink)
     }
 
     pub fn start_with_dir(backend: Backend, dir: &std::path::Path) -> Result<Engine> {
+        Self::start_inner(backend, dir, None)
+    }
+
+    fn start_inner(
+        backend: Backend,
+        dir: &std::path::Path,
+        sink: Option<Arc<crate::coordinator::metrics::Metrics>>,
+    ) -> Result<Engine> {
         let (resolved, registry) = match backend {
             Backend::Pjrt => (Backend::Pjrt, Registry::load(dir)?),
             Backend::Native => (Backend::Native, Registry::default_set(32)),
@@ -78,7 +97,7 @@ impl Engine {
         let busy_clone = busy_ns.clone();
         let handle = std::thread::Builder::new()
             .name("applefft-device".to_string())
-            .spawn(move || run_device(reg_clone, device_backend, rx, busy_clone))
+            .spawn(move || run_device(reg_clone, device_backend, rx, busy_clone, sink))
             .context("spawning device thread")?;
         Ok(Engine {
             tx,

@@ -132,6 +132,10 @@ impl NativeExec {
         // any-N sizes the compiled manifest never lists — the native
         // backend serves them through the same executor paths.
         let meta = self.registry.resolve(&job.artifact)?;
+        let _exec_span = crate::obs::span(crate::obs::SpanKind::NativeExec)
+            .n(meta.n)
+            .precision(job.precision)
+            .start();
         // RangeComp/FormImage jobs carrying shared filter Arcs ship
         // only the two data planes; the flat shapes remain for PJRT
         // parity (and tests).

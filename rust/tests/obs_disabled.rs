@@ -1,0 +1,61 @@
+//! The disabled-path guarantee of the observability tier (ISSUE 9
+//! acceptance): a process that never enables tracing must never
+//! construct the recorder — spans cost one relaxed atomic load and
+//! allocate nothing — while the metrics half of the tier (exchange and
+//! codec histograms fed by the span sink) keeps working.
+//!
+//! This lives in its own test binary on purpose: the recorder is a
+//! process-global singleton, so any test that calls
+//! `obs::set_enabled(true)` (see `tests/obs_trace.rs`) would poison the
+//! "never constructed" assertion for every other test in its process.
+
+use applefft::coordinator::{FftService, ServiceConfig};
+use applefft::fft::bfp::Precision;
+use applefft::fft::Direction;
+use applefft::runtime::Backend;
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use std::time::Duration;
+
+#[test]
+fn recorder_never_constructed_while_histograms_still_fill() {
+    if std::env::var_os("APPLEFFT_TRACE").is_some() {
+        // The env knob legitimately enables tracing at service start;
+        // the disabled-path contract is out of scope for such a run.
+        eprintln!("APPLEFFT_TRACE is set; skipping the disabled-path assertions");
+        return;
+    }
+    let svc = FftService::start(ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_millis(1),
+        workers: 2,
+        warm: false,
+        shards: 1,
+    })
+    .unwrap();
+    let mut rng = Rng::new(0xD15AB1ED);
+    let (rows, cols) = (64usize, 128usize);
+    let x = SplitComplex { re: rng.signal(rows * cols), im: rng.signal(rows * cols) };
+    // 1D traffic plus a 2D request: the 2D path runs a corner-turn
+    // exchange on the device thread, which must feed the exchange
+    // histogram through the span sink even with tracing off.
+    let n = 512usize;
+    let y = SplitComplex { re: rng.signal(n * 3), im: rng.signal(n * 3) };
+    svc.fft(n, Direction::Forward, y, 3).unwrap();
+    svc.fft2d_prec(cols, Direction::Forward, x, rows, Precision::F32).unwrap();
+    svc.drain().unwrap();
+
+    assert!(!applefft::obs::enabled(), "tracing stays off without the knob");
+    assert!(
+        !applefft::obs::recorder_constructed(),
+        "the recorder must never be constructed in a process that never enables tracing"
+    );
+    assert!(applefft::obs::take_events().is_empty(), "nothing was recorded");
+
+    // The always-on half: per-kind histograms filled anyway.
+    let m = svc.metrics();
+    assert!(m.exchange_hist.count > 0, "2D corner turn feeds the exchange histogram");
+    assert!(m.exchange_hist.percentile_us(0.95) > 0.0);
+    assert!(m.queue_hist.count > 0);
+    assert_eq!(m.exchange_hist.counts.iter().sum::<u64>(), m.exchange_hist.count);
+}

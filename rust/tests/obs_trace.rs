@@ -1,0 +1,277 @@
+//! End-to-end recorder tests for the observability tier (ISSUE 9): span
+//! nesting discipline under concurrent sharded traffic, and the sharded
+//! `FormImage` acceptance trace — one coherent Chrome tree that the
+//! repo's own strict JSON parser re-reads.
+//!
+//! The recorder is process-global (one ring registry, one enable flag),
+//! so every test here serializes on a static mutex and clears the event
+//! window before recording. Library unit tests never touch the global
+//! recorder for the same reason; this file is where its end-to-end
+//! behavior lives. The disabled-path guarantee (recorder never
+//! constructed) needs a process that never enables tracing, so it gets
+//! its own binary: `tests/obs_disabled.rs`.
+
+use applefft::coordinator::replay::{replay_collect, Trace, TraceEntry};
+use applefft::coordinator::{ServiceConfig, ShardedFftService};
+use applefft::fft::bfp::Precision;
+use applefft::fft::tune::json;
+use applefft::fft::Direction;
+use applefft::obs::{self, Phase, SpanEvent, SpanKind, ThreadEvents};
+use applefft::runtime::Backend;
+use applefft::util::complex::SplitComplex;
+use applefft::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+/// One test at a time: the recorder's rings and enable flag are
+/// process-wide, and each test starts by draining the window.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn config(shards: usize) -> ServiceConfig {
+    ServiceConfig {
+        backend: Backend::Native,
+        max_wait: Duration::from_millis(1),
+        workers: 2,
+        warm: false,
+        shards,
+    }
+}
+
+/// Decode every recorded event, keeping the per-thread grouping.
+fn decoded(groups: &[ThreadEvents]) -> Vec<(String, Vec<SpanEvent>)> {
+    groups
+        .iter()
+        .map(|g| {
+            let events = g
+                .events
+                .iter()
+                .map(|e| obs::decode(e).expect("every recorded event decodes"))
+                .collect();
+            (g.name.clone(), events)
+        })
+        .collect()
+}
+
+/// Hand-rolled nesting property (no proptest crate offline): replay
+/// random concurrent traces through a 3-shard service with tracing on.
+/// On every emitting thread the recorded events must keep non-decreasing
+/// timestamps and LIFO begin/end discipline — a sync end always closes
+/// the innermost open span, so children sit inside their parents — and
+/// every async begin must pair with exactly one end on its (kind,
+/// request id) key.
+#[test]
+fn prop_span_nesting_holds_under_concurrent_sharded_replay() {
+    let _g = serial();
+    obs::set_enabled(true);
+    let _ = obs::take_events(); // clear whatever earlier tests recorded
+    for seed in 1u64..=3 {
+        let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9));
+        let entries: Vec<TraceEntry> = (0..rng.between(4, 8))
+            .map(|i| TraceEntry {
+                arrival_us: (i as u64) * 150,
+                n: *rng.choose(&[256usize, 512, 1024]),
+                lines: rng.between(1, 8),
+                direction: if rng.below(3) == 0 {
+                    Direction::Inverse
+                } else {
+                    Direction::Forward
+                },
+                precision: if rng.below(3) == 0 { Precision::Bfp16 } else { Precision::F32 },
+            })
+            .collect();
+        let trace = Trace { entries };
+        let svc = ShardedFftService::start(config(3)).unwrap();
+        let got = replay_collect(&svc, &trace, seed).unwrap();
+        assert_eq!(got.len(), trace.entries.len());
+        svc.drain().unwrap();
+        drop(svc);
+        // Give the collector/batcher threads a beat to finish their
+        // closing edges before the drain below.
+        std::thread::sleep(Duration::from_millis(30));
+        let groups = obs::take_events();
+        assert!(!groups.is_empty(), "seed {seed}: replay must record events");
+        let mut sync_begins = 0usize;
+        let mut async_bal: HashMap<(u8, u64), i64> = HashMap::new();
+        for (name, events) in decoded(&groups) {
+            let mut last_ts = 0u64;
+            let mut stack: Vec<SpanKind> = Vec::new();
+            for s in &events {
+                assert!(
+                    s.ts_ns >= last_ts,
+                    "seed {seed} {name}: timestamps must be non-decreasing"
+                );
+                last_ts = s.ts_ns;
+                match s.phase {
+                    Phase::SyncBegin => {
+                        stack.push(s.kind);
+                        sync_begins += 1;
+                    }
+                    Phase::SyncEnd => {
+                        let top = stack
+                            .pop()
+                            .unwrap_or_else(|| panic!("seed {seed} {name}: end with no open span"));
+                        assert_eq!(top, s.kind, "seed {seed} {name}: spans close LIFO");
+                    }
+                    Phase::AsyncBegin => {
+                        *async_bal.entry((s.kind as u8, s.req)).or_default() += 1;
+                    }
+                    Phase::AsyncEnd => {
+                        *async_bal.entry((s.kind as u8, s.req)).or_default() -= 1;
+                    }
+                }
+            }
+            assert!(
+                stack.is_empty(),
+                "seed {seed} {name}: {} spans still open after drain",
+                stack.len()
+            );
+        }
+        assert!(sync_begins > 0, "seed {seed}: no sync spans recorded");
+        for ((kind, req), bal) in &async_bal {
+            assert_eq!(*bal, 0, "seed {seed}: async kind {kind} req {req} unbalanced");
+        }
+    }
+}
+
+/// ISSUE 9 acceptance: a sharded `FormImage` traces as one coherent
+/// tree. On the 2D orchestrator thread the row phase precedes the
+/// corner-turn exchanges which precede the column phase, all under the
+/// client request id with a balanced image-tagged async envelope; the
+/// collector records gathers and the workers record tiles. The rendered
+/// Chrome document must survive the repo's strict JSON parser (the one
+/// that reads tuning caches) with an exact event census.
+#[test]
+fn sharded_form_image_renders_one_chrome_tree() {
+    let _g = serial();
+    obs::set_enabled(true);
+    let _ = obs::take_events();
+    let (rows, cols) = (128usize, 256usize);
+    let mut rng = Rng::new(0x0B5);
+    let x = SplitComplex { re: rng.signal(rows * cols), im: rng.signal(rows * cols) };
+    let hr = SplitComplex { re: rng.signal(cols), im: rng.signal(cols) };
+    let ha = SplitComplex { re: rng.signal(rows), im: rng.signal(rows) };
+    let svc = ShardedFftService::start(config(3)).unwrap();
+    let range = svc.register_filter_prec(cols, hr, Precision::F32).unwrap();
+    let azimuth = svc.register_filter_prec(rows, ha, Precision::F32).unwrap();
+    let image = svc.form_image(&range, &azimuth, x, rows).unwrap();
+    assert_eq!(image.len(), rows * cols);
+    svc.drain().unwrap();
+    drop(svc);
+    std::thread::sleep(Duration::from_millis(30));
+    let groups = obs::take_events();
+    let by_thread = decoded(&groups);
+
+    // The per-request orchestrator thread: row phase, then the corner
+    // turn, then the column phase, one request id throughout.
+    let (_, orch) = by_thread
+        .iter()
+        .find(|(name, evs)| {
+            name == "applefft-shard-2d" && evs.iter().any(|s| s.kind == SpanKind::RowPhase)
+        })
+        .expect("the decomposed 2D path must trace on its orchestrator thread");
+    let row_b = orch
+        .iter()
+        .find(|s| s.kind == SpanKind::RowPhase && s.phase == Phase::SyncBegin)
+        .expect("row phase begin");
+    assert_eq!(row_b.n, cols, "row phase transforms length-cols lines");
+    assert_eq!(row_b.precision, Some("f32"));
+    let req = row_b.req;
+    assert!(req > 0, "phase spans carry the client request id");
+    let col_b = orch
+        .iter()
+        .find(|s| s.kind == SpanKind::ColPhase && s.phase == Phase::SyncBegin)
+        .expect("column phase begin");
+    assert_eq!(col_b.req, req, "both phases belong to one request");
+    assert_eq!(col_b.n, rows, "column phase transforms length-rows lines");
+    let exchanges: Vec<&SpanEvent> = orch
+        .iter()
+        .filter(|s| s.kind == SpanKind::Exchange && s.phase == Phase::SyncBegin)
+        .collect();
+    assert_eq!(exchanges.len(), 2, "corner turn out and corner turn back");
+    assert!(exchanges[0].ts_ns >= row_b.ts_ns, "first exchange follows the row phase");
+    assert!(col_b.ts_ns >= exchanges[0].ts_ns, "column phase follows the corner turn");
+    assert!(exchanges[1].ts_ns >= col_b.ts_ns, "turn-back follows the column phase");
+    assert_eq!(exchanges[0].n, rows * cols, "exchange spans carry the matrix size");
+    // The async request envelope opens and closes on the client id and
+    // is tagged as image formation.
+    let req_b = orch
+        .iter()
+        .find(|s| s.kind == SpanKind::Request && s.phase == Phase::AsyncBegin && s.req == req)
+        .expect("request async begin");
+    assert_eq!(req_b.op, Some("image"));
+    assert!(
+        orch.iter()
+            .any(|s| s.kind == SpanKind::Request && s.phase == Phase::AsyncEnd && s.req == req),
+        "request async end"
+    );
+
+    // Shard-side evidence that the tree has leaves: collector gathers,
+    // worker tiles, device executions.
+    let all: Vec<&SpanEvent> = by_thread.iter().flat_map(|(_, e)| e.iter()).collect();
+    let gathers = all
+        .iter()
+        .filter(|s| s.kind == SpanKind::Gather && s.phase == Phase::SyncBegin)
+        .count();
+    assert!(gathers >= 2, "both phases reassemble through the collector: {gathers}");
+    assert!(all.iter().any(|s| s.kind == SpanKind::WorkerTile && s.phase == Phase::SyncBegin));
+    assert!(all.iter().any(|s| s.kind == SpanKind::DeviceExec && s.phase == Phase::SyncBegin));
+
+    // Render and re-parse with the in-repo strict JSON parser: one "M"
+    // metadata record per thread plus every recorded event, sync and
+    // async edges paired.
+    let doc = obs::chrome::render(&groups);
+    let v = json::parse(&doc).expect("chrome trace must be strict JSON");
+    let events = v.get("traceEvents").and_then(|e| e.arr()).expect("traceEvents array");
+    let recorded: usize = groups.iter().map(|g| g.events.len()).sum();
+    assert_eq!(events.len(), groups.len() + recorded, "exact event census");
+    let ph = |p: &str| {
+        events.iter().filter(|e| e.get("ph").and_then(|v| v.str()) == Some(p)).count()
+    };
+    assert_eq!(ph("M"), groups.len(), "one thread-name record per ring");
+    assert_eq!(ph("B"), ph("E"), "sync begins and ends pair up");
+    assert_eq!(ph("b"), ph("e"), "async begins and ends pair up");
+    assert!(ph("B") > 0 && ph("b") > 0);
+    // The 2D request's envelope is keyed by its id in the document.
+    assert!(
+        events.iter().any(|e| {
+            e.get("ph").and_then(|v| v.str()) == Some("b")
+                && e.get("id").and_then(|v| v.num()) == Some(req as f64)
+                && e.get("cat").and_then(|v| v.str()) == Some("request")
+        }),
+        "async envelope keyed by the client request id"
+    );
+}
+
+/// `write_chrome` drains into the accumulator and rewrites the whole
+/// file, so a second flush after more traffic keeps the first flush's
+/// events — the `APPLEFFT_TRACE` drain hook can fire many times and the
+/// last file still holds the full history.
+#[test]
+fn write_chrome_accumulates_across_flushes() {
+    let _g = serial();
+    obs::set_enabled(true);
+    let _ = obs::take_events();
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("applefft_obs_trace_{}.json", std::process::id()));
+    let svc = ShardedFftService::start(config(2)).unwrap();
+    let mut rng = Rng::new(7);
+    let n = 256usize;
+    let x = SplitComplex { re: rng.signal(n * 2), im: rng.signal(n * 2) };
+    svc.fft(n, Direction::Forward, x.clone(), 2).unwrap();
+    let first = obs::write_chrome(&path).unwrap();
+    assert!(first > 0, "first flush sees the fft's events");
+    svc.fft(n, Direction::Inverse, x, 2).unwrap();
+    svc.drain().unwrap();
+    let second = obs::write_chrome(&path).unwrap();
+    assert!(second > first, "second flush keeps history and adds new events");
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v = json::parse(&text).expect("flushed file is strict JSON");
+    let events = v.get("traceEvents").and_then(|e| e.arr()).unwrap();
+    assert!(events.len() > second, "file carries all events plus thread metadata");
+    let _ = std::fs::remove_file(&path);
+}
