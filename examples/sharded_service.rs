@@ -20,6 +20,7 @@ fn main() -> anyhow::Result<()> {
         workers: 2,
         warm: false,
         shards: 4,
+        ..Default::default()
     };
     // 1. One single-stack service (the reference) and one 4-shard
     //    coordinator (each shard is a full batcher+worker+engine stack).

@@ -41,6 +41,7 @@ fn main() {
                 workers: 2,
                 warm: false,
                 shards,
+                ..Default::default()
             })
             .expect("sharded service");
             let mut rng = Rng::new(shards as u64);

@@ -1,0 +1,91 @@
+//! Traffic-shaping bench: offered-load sweep through the admission +
+//! deadline (EDF) serving tier at shard counts {1, 4}. Each cell drives
+//! [`Trace::traffic`] open-loop against a fixed latency SLO with
+//! `replay_slo` and reports what the shaper did with the load: offered
+//! rate, completion/shed split, goodput, and the client-observed
+//! latency percentiles of the requests that made the deadline. Emits
+//! `BENCH_traffic.json` at the repo root alongside the other
+//! `BENCH_*.json` CI artifacts.
+//!
+//! The expected shape: at low offered load nothing is shed and goodput
+//! tracks the offered rate; past saturation the shed rate climbs while
+//! the served requests' percentiles stay near the SLO instead of
+//! diverging — overload becomes refusals, not unbounded queueing.
+
+use applefft::bench::table::{BenchJson, Table};
+use applefft::coordinator::replay::{replay_closed, replay_slo, ArrivalProfile, Trace};
+use applefft::coordinator::{ServiceConfig, ShardedFftService};
+use applefft::runtime::Backend;
+use std::time::Duration;
+
+fn main() {
+    let quick = std::env::var("APPLEFFT_BENCH_QUICK").ok().as_deref() == Some("1");
+    let rates: &[f64] = if quick { &[400.0, 1600.0] } else { &[200.0, 800.0, 3200.0] };
+    let trace_secs = if quick { 0.08 } else { 0.3 };
+    let slo = Duration::from_millis(25);
+    let mut json = BenchJson::new("traffic");
+
+    for shards in [1usize, 4] {
+        let svc = ShardedFftService::start(ServiceConfig {
+            backend: Backend::Native,
+            max_wait: Duration::from_micros(200),
+            workers: 2,
+            warm: false,
+            shards,
+            ..Default::default()
+        })
+        .expect("sharded service");
+        let title = format!(
+            "Traffic shaping — Poisson offered-load sweep, SLO {} ms, {} shard(s)",
+            slo.as_millis(),
+            shards
+        );
+        let mut t = Table::new(&title, &[
+            "offered rps", "requests", "completed", "shed %", "goodput lines/s",
+            "p50 us", "p95 us", "p99 us",
+        ]);
+        for &rate in rates {
+            let trace = Trace::traffic(
+                ArrivalProfile::Poisson,
+                rate,
+                Duration::from_secs_f64(trace_secs),
+                42,
+            );
+            let r = replay_slo(&svc, &trace, slo, 43).expect("slo replay");
+            assert_eq!(r.failed, 0, "traffic must shed, not fail: {r:?}");
+            t.row(&[
+                format!("{:.0}", r.offered_rps),
+                r.requests.to_string(),
+                r.completed.to_string(),
+                format!("{:.1}", r.shed_rate() * 100.0),
+                format!("{:.0}", r.goodput_lps),
+                format!("{:.0}", r.p50_us),
+                format!("{:.0}", r.p95_us),
+                format!("{:.0}", r.p99_us),
+            ]);
+        }
+        // Closed-loop floor for the same mix: the unloaded latency the
+        // open-loop percentiles are judged against.
+        let base_trace = Trace::traffic(
+            ArrivalProfile::Poisson,
+            rates[0],
+            Duration::from_secs_f64(trace_secs),
+            42,
+        );
+        let base = replay_closed(&svc, &base_trace, 44).expect("closed-loop baseline");
+        assert_eq!(base.failed, 0, "closed loop must not fail: {base:?}");
+        t.note(&format!(
+            "closed-loop floor (same mix): p50 {:.0} us, p95 {:.0} us, {} completed",
+            base.p50_us, base.p95_us, base.completed
+        ));
+        t.print();
+        json.add(&t);
+        svc.drain().expect("drain");
+    }
+
+    match json.write_repo_root() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+    println!("traffic bench OK");
+}

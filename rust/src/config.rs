@@ -146,6 +146,16 @@ pub fn env_knobs() -> &'static [EnvKnob] {
             what: "stage-codelet backend (default: simd when compiled, else scalar)",
         },
         EnvKnob {
+            name: "APPLEFFT_DEADLINE_MS",
+            values: "millis > 0",
+            what: "default per-request deadline; expired requests are shed (default: none)",
+        },
+        EnvKnob {
+            name: "APPLEFFT_MAX_QUEUE_LINES",
+            values: "integer >= 1",
+            what: "admission cap on pending lines per service; over-cap submits are rejected (default: unbounded)",
+        },
+        EnvKnob {
             name: "APPLEFFT_PRECISION",
             values: "f32|bfp16",
             what: "process-default exchange-tier precision (default: f32)",

@@ -15,6 +15,22 @@
 //! coalesce into shared `rangecomp*` tiles, distinct filters never mix,
 //! and f32/bfp16 precision policies never share a tile (each tile
 //! executes at exactly one exchange precision).
+//!
+//! # Traffic shaping
+//!
+//! Admission is bounded, not best-effort. An [`AdmissionConfig`] caps
+//! each queue (max lines, max bytes, max head age) and the total
+//! in-flight line budget across queues; arrivals that would exceed a
+//! cap are answered immediately with a typed [`AdmitError`] rendered
+//! into the error response ("rejected: ..."), never parked. Requests
+//! carry an optional deadline: one that arrives already expired is
+//! **shed** at admit ("shed: ..."), and one whose deadline passes while
+//! queued is shed at dispatch — tile assembly itself is
+//! earliest-deadline-first, so under overload the lines that can still
+//! make their deadline go out first and the rest are failed fast
+//! instead of growing the queue without bound. Sheds and rejections
+//! count separately from engine `failures` in the metrics
+//! (`rejected` / `shed` / `deadline_miss`).
 
 use super::metrics::Metrics;
 use super::request::{FftRequest, FftResponse, RequestKind};
@@ -22,7 +38,7 @@ use crate::fft::bfp::Precision;
 use crate::fft::Direction;
 use crate::runtime::Registry;
 use crate::util::complex::SplitComplex;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -77,6 +93,14 @@ impl Accumulator {
         exec_secs: f64,
     ) {
         let mut a = self.inner.lock().unwrap();
+        if a.responded {
+            // A sibling tile already failed the request: the client was
+            // answered and the output buffer taken by `maybe_respond`.
+            // The late lines have nowhere to land — copying into the
+            // emptied buffers would panic the worker thread and hang
+            // the whole service.
+            return;
+        }
         let n = a.n;
         for l in 0..count {
             let s = (src_line + l) * n;
@@ -100,12 +124,18 @@ impl Accumulator {
         }
     }
 
-    /// Fail the whole request (engine error on any carrying tile).
+    /// Fail the whole request (engine error on any carrying tile, an
+    /// admission rejection, or a shed deadline).
     pub fn fail(&self, message: &str) {
         let mut a = self.inner.lock().unwrap();
         a.failed = Some(message.to_string());
         a.filled_lines = a.total_lines;
         a.maybe_respond();
+    }
+
+    /// Request id (shed-span and EDF-test labelling).
+    pub fn id(&self) -> u64 {
+        self.inner.lock().unwrap().id
     }
 
     pub fn queue_secs(&self) -> f64 {
@@ -141,6 +171,104 @@ impl AccumulatorInner {
             exec_secs: self.exec_secs,
             completed_at: Instant::now(),
         });
+    }
+}
+
+/// Admission caps for the batching queues. Every limit defaults to
+/// unlimited, so an unconfigured service behaves exactly as before;
+/// operators bound it per queue (lines, bytes, head age) and globally
+/// (total in-flight lines) for overload protection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdmissionConfig {
+    /// Max lines one queue may hold (`APPLEFFT_MAX_QUEUE_LINES`).
+    pub max_queue_lines: usize,
+    /// Max payload bytes one queue may hold (re + im f32 planes).
+    pub max_queue_bytes: usize,
+    /// Max age of a queue's oldest fragment before new arrivals are
+    /// rejected (backpressure when tiles stop draining).
+    pub max_queue_age: Duration,
+    /// Total in-flight line budget across all queues.
+    pub max_total_lines: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            max_queue_lines: usize::MAX,
+            max_queue_bytes: usize::MAX,
+            max_queue_age: Duration::MAX,
+            max_total_lines: usize::MAX,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// Environment-derived caps: `APPLEFFT_MAX_QUEUE_LINES` bounds the
+    /// per-queue line count (unset/0/garbage = unlimited).
+    pub fn from_env() -> Self {
+        AdmissionConfig {
+            max_queue_lines: parse_max_queue_lines(
+                std::env::var("APPLEFFT_MAX_QUEUE_LINES").ok().as_deref(),
+            ),
+            ..Default::default()
+        }
+    }
+}
+
+/// Pure parse of the `APPLEFFT_MAX_QUEUE_LINES` value (testable without
+/// touching the process environment): a positive integer caps the
+/// per-queue line count; unset, empty, zero, or garbage = unlimited.
+pub(crate) fn parse_max_queue_lines(v: Option<&str>) -> usize {
+    match v.map(str::trim) {
+        Some(s) if !s.is_empty() => {
+            s.parse::<usize>().ok().filter(|&l| l > 0).unwrap_or(usize::MAX)
+        }
+        _ => usize::MAX,
+    }
+}
+
+/// Why a request was refused at the front door. Rendered into the error
+/// response: cap violations as "rejected: ...", expired deadlines as
+/// "shed: ..." — so clients (and the replay harness) can classify
+/// refusals by prefix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The per-queue line cap would be exceeded.
+    QueueFull { queued_lines: usize, limit_lines: usize },
+    /// The per-queue byte cap would be exceeded.
+    QueueBytesFull { queued_bytes: usize, limit_bytes: usize },
+    /// The queue's oldest fragment exceeds the max-age cap: tiles are
+    /// not draining, so new arrivals are pushed back.
+    QueueTooOld { age: Duration, limit: Duration },
+    /// The total in-flight line budget would be exceeded.
+    OverBudget { inflight_lines: usize, limit_lines: usize },
+    /// The request arrived already past its deadline.
+    Expired,
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull { queued_lines, limit_lines } => write!(
+                f,
+                "rejected: queue full ({queued_lines} lines queued, limit {limit_lines})"
+            ),
+            AdmitError::QueueBytesFull { queued_bytes, limit_bytes } => write!(
+                f,
+                "rejected: queue full ({queued_bytes} bytes queued, limit {limit_bytes})"
+            ),
+            AdmitError::QueueTooOld { age, limit } => write!(
+                f,
+                "rejected: queue head too old ({:.1} ms, limit {:.1} ms)",
+                age.as_secs_f64() * 1e3,
+                limit.as_secs_f64() * 1e3
+            ),
+            AdmitError::OverBudget { inflight_lines, limit_lines } => write!(
+                f,
+                "rejected: over budget ({inflight_lines} lines in flight, limit {limit_lines})"
+            ),
+            AdmitError::Expired => write!(f, "shed: deadline expired before admission"),
+        }
     }
 }
 
@@ -232,6 +360,8 @@ struct Pending {
     cursor: usize,
     lines: usize,
     enqueued_at: Instant,
+    /// Absolute deadline, if the request carries one (EDF basis).
+    deadline: Option<Instant>,
 }
 
 /// Per-[`QueueKey`] line queue with tile assembly.
@@ -243,13 +373,13 @@ pub struct Queue {
     /// Exchange precision of every tile this queue pops (keyed too).
     precision: Precision,
     batch_tile: usize,
-    pending: Vec<Pending>,
+    pending: VecDeque<Pending>,
     queued_lines: usize,
 }
 
 impl Queue {
     pub fn new(n: usize, kind: TileKind, precision: Precision, batch_tile: usize) -> Queue {
-        Queue { n, kind, precision, batch_tile, pending: Vec::new(), queued_lines: 0 }
+        Queue { n, kind, precision, batch_tile, pending: VecDeque::new(), queued_lines: 0 }
     }
 
     /// Whether this queue may accept `req`: same size, and for matched
@@ -270,15 +400,18 @@ impl Queue {
         }
     }
 
-    pub fn push(&mut self, req: &FftRequest, acc: Arc<Accumulator>) {
-        debug_assert!(self.accepts(req), "batcher routed a request to the wrong queue");
+    /// Enqueue by value: the request's payload moves into the fragment
+    /// (the only copy left on the admit path is tile assembly itself).
+    pub fn push(&mut self, req: FftRequest, acc: Arc<Accumulator>) {
+        debug_assert!(self.accepts(&req), "batcher routed a request to the wrong queue");
         self.queued_lines += req.lines;
-        self.pending.push(Pending {
+        self.pending.push_back(Pending {
             acc,
-            data: req.data.clone(),
+            data: req.data,
             cursor: 0,
             lines: req.lines,
             enqueued_at: req.submitted_at,
+            deadline: req.deadline,
         });
     }
 
@@ -286,14 +419,56 @@ impl Queue {
         self.queued_lines
     }
 
-    /// Instant of the oldest queued fragment (deadline basis).
+    /// Instant of the oldest queued fragment (flush-deadline basis).
+    /// A min-scan, not the front: EDF dispatch consumes fragments out
+    /// of arrival order, so the head is not necessarily the oldest.
     pub fn oldest(&self) -> Option<Instant> {
-        self.pending.first().map(|p| p.enqueued_at)
+        self.pending.iter().map(|p| p.enqueued_at).min()
+    }
+
+    /// Fail every fragment whose deadline has passed (load shed at
+    /// dispatch): the lines can no longer be useful, so the client is
+    /// answered immediately and the queue space freed.
+    fn shed_expired(&mut self, now: Instant, metrics: &Metrics) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            let expired = self.pending[i].deadline.map(|d| d <= now).unwrap_or(false);
+            if !expired {
+                i += 1;
+                continue;
+            }
+            let p = self.pending.remove(i).unwrap();
+            self.queued_lines -= p.lines - p.cursor;
+            metrics.deadline_miss.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            crate::obs::span(crate::obs::SpanKind::Shed).req(p.acc.id()).n(self.n).start();
+            p.acc.fail("shed: deadline expired in queue");
+        }
+    }
+
+    /// Index of the fragment to tile next: the earliest concrete
+    /// deadline wins; deadline-less fragments keep FIFO order among
+    /// themselves and go after every deadline-carrying fragment. Strict
+    /// `<` keeps the scan stable, so equal deadlines dispatch FIFO too.
+    fn earliest_deadline_index(&self) -> usize {
+        let mut best = 0;
+        for (i, p) in self.pending.iter().enumerate().skip(1) {
+            let earlier = match (p.deadline, self.pending[best].deadline) {
+                (Some(a), Some(b)) => a < b,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            if earlier {
+                best = i;
+            }
+        }
+        best
     }
 
     /// Build one tile if the policy says so: `force` (deadline expired)
-    /// or a full tile's worth of lines queued.
-    pub fn pop_tile(&mut self, force: bool) -> Option<Tile> {
+    /// or a full tile's worth of lines queued. Expired fragments are
+    /// shed first; assembly is earliest-deadline-first.
+    pub fn pop_tile(&mut self, force: bool, metrics: &Metrics) -> Option<Tile> {
+        self.shed_expired(Instant::now(), metrics);
         if self.queued_lines == 0 {
             return None;
         }
@@ -306,7 +481,8 @@ impl Queue {
         let mut tile_line = 0;
 
         while tile_line < self.batch_tile && !self.pending.is_empty() {
-            let p = &mut self.pending[0];
+            let idx = self.earliest_deadline_index();
+            let p = &mut self.pending[idx];
             let take = (p.lines - p.cursor).min(self.batch_tile - tile_line);
             let src = p.cursor * n;
             let dst = tile_line * n;
@@ -322,7 +498,7 @@ impl Queue {
             tile_line += take;
             self.queued_lines -= take;
             if p.cursor == p.lines {
-                self.pending.remove(0);
+                self.pending.remove(idx);
             }
         }
 
@@ -355,87 +531,160 @@ pub struct Batcher {
     queues: HashMap<(usize, QueueKey), Queue>,
     batch_tile: usize,
     max_wait: Duration,
+    admission: AdmissionConfig,
     metrics: Arc<Metrics>,
 }
 
 impl Batcher {
-    pub fn new(batch_tile: usize, max_wait: Duration, metrics: Arc<Metrics>) -> Batcher {
-        Batcher { queues: HashMap::new(), batch_tile, max_wait, metrics }
+    pub fn new(
+        batch_tile: usize,
+        max_wait: Duration,
+        admission: AdmissionConfig,
+        metrics: Arc<Metrics>,
+    ) -> Batcher {
+        Batcher { queues: HashMap::new(), batch_tile, max_wait, admission, metrics }
+    }
+
+    /// Check `req` against the admission caps without touching queue
+    /// state. Exact fit is admitted: only `queued + lines > cap`
+    /// rejects.
+    fn admission_check(&self, req: &FftRequest, now: Instant) -> Result<(), AdmitError> {
+        if req.deadline.map(|d| d <= now).unwrap_or(false) {
+            return Err(AdmitError::Expired);
+        }
+        let a = &self.admission;
+        let total = self.queued_lines();
+        if total.saturating_add(req.lines) > a.max_total_lines {
+            return Err(AdmitError::OverBudget {
+                inflight_lines: total,
+                limit_lines: a.max_total_lines,
+            });
+        }
+        if req.kind.is_2d() {
+            // 2D requests never occupy a queue — the request is the
+            // tile and dispatches immediately — so only the deadline
+            // and the global budget apply.
+            return Ok(());
+        }
+        let (q_lines, q_oldest) = self
+            .queues
+            .get(&(req.n, req.queue_key()))
+            .map(|q| (q.queued_lines(), q.oldest()))
+            .unwrap_or((0, None));
+        if q_lines.saturating_add(req.lines) > a.max_queue_lines {
+            return Err(AdmitError::QueueFull {
+                queued_lines: q_lines,
+                limit_lines: a.max_queue_lines,
+            });
+        }
+        // Two f32 planes (re + im), 4 bytes per sample per plane.
+        let line_bytes = req.n * 8;
+        if q_lines.saturating_add(req.lines).saturating_mul(line_bytes) > a.max_queue_bytes {
+            return Err(AdmitError::QueueBytesFull {
+                queued_bytes: q_lines * line_bytes,
+                limit_bytes: a.max_queue_bytes,
+            });
+        }
+        if let Some(oldest) = q_oldest {
+            let age = now.duration_since(oldest);
+            if age > a.max_queue_age {
+                return Err(AdmitError::QueueTooOld { age, limit: a.max_queue_age });
+            }
+        }
+        Ok(())
     }
 
     /// Admit a request; returns tiles that became ready (full tiles
-    /// flush eagerly).
-    pub fn admit(&mut self, req: &FftRequest) -> Vec<Tile> {
-        let acc = Accumulator::new(req);
+    /// flush eagerly). Takes the request by value: the payload moves
+    /// into the queue fragment (or the dedicated 2D tile) instead of
+    /// being cloned. Cap violations and expired deadlines answer the
+    /// client immediately with the rendered [`AdmitError`].
+    pub fn admit(&mut self, req: FftRequest) -> Vec<Tile> {
+        use std::sync::atomic::Ordering::Relaxed;
+        // Every arrival counts before any admission branch, so the
+        // lines-per-request telemetry stays consistent for rejected and
+        // shed traffic (`requests` and `lines_in` move together).
+        self.metrics.requests.fetch_add(1, Relaxed);
+        self.metrics.lines_in.fetch_add(req.lines as u64, Relaxed);
+        let acc = Accumulator::new(&req);
+        if let Err(e) = self.admission_check(&req, Instant::now()) {
+            if e == AdmitError::Expired {
+                self.metrics.shed.fetch_add(1, Relaxed);
+                crate::obs::span(crate::obs::SpanKind::Shed).req(req.id).n(req.n).start();
+            } else {
+                self.metrics.rejected.fetch_add(1, Relaxed);
+            }
+            acc.fail(&e.to_string());
+            return Vec::new();
+        }
         // 2D requests bypass coalescing entirely: the request IS the
         // tile (one whole matrix, batch = row count, no padding), and
         // it dispatches eagerly — batching delay buys nothing when a
         // single request already fills both phases.
         if req.kind.is_2d() {
-            self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            self.metrics
-                .lines_in
-                .fetch_add(req.lines as u64, std::sync::atomic::Ordering::Relaxed);
             return vec![Self::tile_2d(req, acc)];
         }
         let key = (req.n, req.queue_key());
         let queue = self.queues.entry(key).or_insert_with(|| {
             Queue::new(req.n, req.kind.tile_kind(), req.precision, self.batch_tile)
         });
-        self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        if !queue.accepts(req) {
+        if !queue.accepts(&req) {
             // Same filter id, different spectrum: only possible with a
             // hand-built FilterSpec (registered ids are process-unique).
             // Fail the request instead of filtering with the wrong
             // spectrum.
-            self.metrics.failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            acc.fail("filter id collision: spectrum does not match the queue's registration");
+            self.metrics.rejected.fetch_add(1, Relaxed);
+            acc.fail(
+                "rejected: filter id collision: spectrum does not match the queue's registration",
+            );
             return Vec::new();
         }
         queue.push(req, acc);
-        self.metrics
-            .lines_in
-            .fetch_add(req.lines as u64, std::sync::atomic::Ordering::Relaxed);
         let mut tiles = Vec::new();
-        while let Some(t) = queue.pop_tile(false) {
+        while let Some(t) = queue.pop_tile(false, &self.metrics) {
             tiles.push(t);
         }
         self.evict_idle_filter_queues();
         tiles
     }
 
-    /// One dedicated tile for a whole-matrix 2D request.
-    fn tile_2d(req: &FftRequest, acc: Arc<Accumulator>) -> Tile {
+    /// One dedicated tile for a whole-matrix 2D request (payload moved,
+    /// not cloned).
+    fn tile_2d(req: FftRequest, acc: Arc<Accumulator>) -> Tile {
         acc.dispatched();
         let artifact = match &req.kind {
             RequestKind::Fft2d(d) => Registry::fft2d_name(req.n, *d),
             RequestKind::FormImage { .. } => Registry::formimage_name(req.n),
             _ => unreachable!("tile_2d called on a 1D request"),
         };
+        let lines = req.lines;
         Tile {
             artifact,
             n: req.n,
             kind: req.kind.tile_kind(),
             precision: req.precision,
-            batch: req.lines,
-            data: req.data.clone(),
-            segments: vec![Segment { acc, tile_line: 0, request_line: 0, count: req.lines }],
+            batch: lines,
+            data: req.data,
+            segments: vec![Segment { acc, tile_line: 0, request_line: 0, count: lines }],
             padded_lines: 0,
         }
     }
 
     /// Flush queues whose oldest entry exceeded `max_wait` (or all, when
-    /// `drain` is set). Returns tiles to dispatch.
+    /// `drain` is set). Returns tiles to dispatch. Expired fragments
+    /// are shed even when nothing flushes, so an overloaded queue never
+    /// accumulates dead lines.
     pub fn flush_expired(&mut self, drain: bool) -> Vec<Tile> {
         let now = Instant::now();
         let mut tiles = Vec::new();
         for queue in self.queues.values_mut() {
+            queue.shed_expired(now, &self.metrics);
             let expired = queue
                 .oldest()
                 .map(|t| now.duration_since(t) >= self.max_wait)
                 .unwrap_or(false);
             if drain || expired {
-                while let Some(t) = queue.pop_tile(true) {
+                while let Some(t) = queue.pop_tile(true, &self.metrics) {
                     tiles.push(t);
                 }
             }
@@ -499,6 +748,7 @@ mod tests {
                 data: SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) },
                 lines,
                 submitted_at: Instant::now(),
+                deadline: None,
                 reply: tx,
             },
             rx,
@@ -522,14 +772,19 @@ mod tests {
     }
 
     fn batcher(tile: usize) -> Batcher {
-        Batcher::new(tile, Duration::from_millis(1), Arc::new(Metrics::default()))
+        batcher_with(tile, AdmissionConfig::default()).0
+    }
+
+    fn batcher_with(tile: usize, admission: AdmissionConfig) -> (Batcher, Arc<Metrics>) {
+        let m = Arc::new(Metrics::default());
+        (Batcher::new(tile, Duration::from_millis(1), admission, m.clone()), m)
     }
 
     #[test]
     fn full_tile_flushes_eagerly() {
         let mut b = batcher(8);
         let (req, _rx) = request(1, 256, 8, 1);
-        let tiles = b.admit(&req);
+        let tiles = b.admit(req);
         assert_eq!(tiles.len(), 1);
         assert_eq!(tiles[0].padded_lines, 0);
         assert_eq!(b.queued_lines(), 0);
@@ -539,7 +794,7 @@ mod tests {
     fn partial_waits_then_pads() {
         let mut b = batcher(8);
         let (req, _rx) = request(1, 256, 5, 2);
-        assert!(b.admit(&req).is_empty());
+        assert!(b.admit(req).is_empty());
         assert_eq!(b.queued_lines(), 5);
         let tiles = b.flush_expired(true);
         assert_eq!(tiles.len(), 1);
@@ -556,7 +811,7 @@ mod tests {
     fn large_request_spans_tiles() {
         let mut b = batcher(8);
         let (req, _rx) = request(1, 256, 20, 3);
-        let tiles = b.admit(&req);
+        let tiles = b.admit(req);
         assert_eq!(tiles.len(), 2, "two full tiles immediately");
         assert_eq!(b.queued_lines(), 4);
         let rest = b.flush_expired(true);
@@ -569,8 +824,9 @@ mod tests {
         let mut b = batcher(8);
         let (r1, _rx1) = request(1, 256, 3, 4);
         let (r2, _rx2) = request(2, 256, 5, 5);
-        assert!(b.admit(&r1).is_empty());
-        let tiles = b.admit(&r2);
+        let (d1, d2) = (r1.data.clone(), r2.data.clone());
+        assert!(b.admit(r1).is_empty());
+        let tiles = b.admit(r2);
         assert_eq!(tiles.len(), 1);
         let t = &tiles[0];
         assert_eq!(t.segments.len(), 2);
@@ -578,8 +834,8 @@ mod tests {
         assert_eq!(t.segments[1].tile_line, 3);
         assert_eq!(t.segments[1].count, 5);
         // Data placed in admission order.
-        assert_eq!(&t.data.re[..3 * 256], &r1.data.re[..]);
-        assert_eq!(&t.data.re[3 * 256..8 * 256], &r2.data.re[..]);
+        assert_eq!(&t.data.re[..3 * 256], &d1.re[..]);
+        assert_eq!(&t.data.re[3 * 256..8 * 256], &d2.re[..]);
     }
 
     #[test]
@@ -587,8 +843,8 @@ mod tests {
         let mut b = batcher(4);
         let (r1, _rx1) = request(1, 256, 2, 6);
         let (r2, _rx2) = request(2, 512, 2, 7);
-        assert!(b.admit(&r1).is_empty());
-        assert!(b.admit(&r2).is_empty());
+        assert!(b.admit(r1).is_empty());
+        assert!(b.admit(r2).is_empty());
         let tiles = b.flush_expired(true);
         assert_eq!(tiles.len(), 2);
         let arts: Vec<_> = tiles.iter().map(|t| t.artifact.as_str()).collect();
@@ -602,8 +858,8 @@ mod tests {
         // Same filter id: coalesces into one tile.
         let (r1, _rx1) = request_kind(1, 256, 2, 20, matched_kind(7, 256));
         let (r2, _rx2) = request_kind(2, 256, 2, 21, matched_kind(7, 256));
-        assert!(b.admit(&r1).is_empty());
-        let tiles = b.admit(&r2);
+        assert!(b.admit(r1).is_empty());
+        let tiles = b.admit(r2);
         assert_eq!(tiles.len(), 1, "same filter id must coalesce");
         assert_eq!(tiles[0].artifact, "rangecomp256");
         assert!(matches!(tiles[0].kind, TileKind::MatchedFilter(_)));
@@ -612,8 +868,8 @@ mod tests {
         // Different filter ids (and plain FFTs) never mix.
         let (r3, _rx3) = request_kind(3, 256, 2, 22, matched_kind(8, 256));
         let (r4, _rx4) = request(4, 256, 2, 23);
-        assert!(b.admit(&r3).is_empty());
-        assert!(b.admit(&r4).is_empty(), "fft and filter queues are distinct");
+        assert!(b.admit(r3).is_empty());
+        assert!(b.admit(r4).is_empty(), "fft and filter queues are distinct");
         let tiles = b.flush_expired(true);
         assert_eq!(tiles.len(), 2);
         let arts: Vec<_> = tiles.iter().map(|t| t.artifact.as_str()).collect();
@@ -626,20 +882,26 @@ mod tests {
         // Two hand-built FilterSpecs sharing an id but not a spectrum:
         // the second request must be failed, not filtered with the
         // first spectrum.
-        let mut b = batcher(8);
+        let (mut b, m) = batcher_with(8, AdmissionConfig::default());
         let (r1, _rx1) = request_kind(1, 256, 2, 40, matched_kind(5, 256));
-        assert!(b.admit(&r1).is_empty());
+        assert!(b.admit(r1).is_empty());
         let kind2 = RequestKind::MatchedFilter(FilterSpec {
             id: 5, // same id...
             spectrum: Arc::new(SplitComplex::zeros(256)), // ...different Arc
         });
         let (r2, rx2) = request_kind(2, 256, 2, 41, kind2);
-        assert!(b.admit(&r2).is_empty());
+        assert!(b.admit(r2).is_empty());
         let resp = rx2.try_recv().expect("collision must be answered immediately");
         assert!(resp.result.is_err());
         assert!(resp.result.unwrap_err().contains("collision"));
         // The original queue is untouched (still 2 pending lines).
         assert_eq!(b.queued_lines(), 2);
+        // Telemetry counts the rejected arrival consistently: requests
+        // and lines_in move together, and the refusal is `rejected`,
+        // not an engine failure.
+        let s = m.snapshot(0);
+        assert_eq!((s.requests, s.lines_in), (2, 4));
+        assert_eq!((s.rejected, s.failures), (1, 0));
     }
 
     #[test]
@@ -649,20 +911,20 @@ mod tests {
         let mut b = batcher(2);
         for id in 0..50u64 {
             let (r, _rx) = request_kind(id, 256, 2, 30 + id, matched_kind(id, 256));
-            let tiles = b.admit(&r);
+            let tiles = b.admit(r);
             assert_eq!(tiles.len(), 1, "full tile flushes");
         }
         assert_eq!(b.queue_count(), 0, "drained filter queues must not accumulate");
         // Partial matched request: queue lives while lines are pending...
         let (r, _rx) = request_kind(99, 256, 1, 99, matched_kind(99, 256));
-        assert!(b.admit(&r).is_empty());
+        assert!(b.admit(r).is_empty());
         assert_eq!(b.queue_count(), 1);
         // ...and is evicted once force-flushed.
         assert_eq!(b.flush_expired(true).len(), 1);
         assert_eq!(b.queue_count(), 0);
         // Plain FFT queues stay resident (bounded key space).
         let (r, _rx) = request(100, 256, 1, 100);
-        assert!(b.admit(&r).is_empty());
+        assert!(b.admit(r).is_empty());
         b.flush_expired(true);
         assert_eq!(b.queue_count(), 1, "fft queues are kept");
     }
@@ -676,8 +938,8 @@ mod tests {
         r1.precision = Precision::F32;
         let (mut r2, _rx2) = request(2, 256, 2, 51);
         r2.precision = Precision::Bfp16;
-        assert!(b.admit(&r1).is_empty());
-        assert!(b.admit(&r2).is_empty(), "bfp16 lines must not top up the f32 tile");
+        assert!(b.admit(r1).is_empty());
+        assert!(b.admit(r2).is_empty(), "bfp16 lines must not top up the f32 tile");
         assert_eq!(b.queue_count(), 2);
         let tiles = b.flush_expired(true);
         assert_eq!(tiles.len(), 2);
@@ -689,8 +951,8 @@ mod tests {
         r3.precision = Precision::Bfp16;
         let (mut r4, _rx4) = request(4, 256, 2, 53);
         r4.precision = Precision::Bfp16;
-        assert!(b.admit(&r3).is_empty());
-        let tiles = b.admit(&r4);
+        assert!(b.admit(r3).is_empty());
+        let tiles = b.admit(r4);
         assert_eq!(tiles.len(), 1, "same precision coalesces");
         assert_eq!(tiles[0].precision, Precision::Bfp16);
         assert_eq!(tiles[0].segments.len(), 2);
@@ -702,7 +964,7 @@ mod tests {
         let spec = Arc::new(SplitComplex { re: vec![2.0; 256], im: vec![0.5; 256] });
         let kind = RequestKind::MatchedFilter(FilterSpec { id: 9, spectrum: spec.clone() });
         let (r, _rx) = request_kind(1, 256, 2, 24, kind);
-        let tiles = b.admit(&r);
+        let tiles = b.admit(r);
         assert_eq!(tiles.len(), 1);
         let TileKind::MatchedFilter(h) = &tiles[0].kind else {
             panic!("expected matched-filter tile");
@@ -717,7 +979,7 @@ mod tests {
         let mut b = batcher(8);
         let (r, _rx) =
             request_kind(1, 256, 3, 60, RequestKind::Fft2d(Direction::Forward));
-        let tiles = b.admit(&r);
+        let tiles = b.admit(r);
         assert_eq!(tiles.len(), 1);
         let t = &tiles[0];
         assert_eq!(t.artifact, "fft2d256");
@@ -735,7 +997,7 @@ mod tests {
             azimuth: FilterSpec { id: 2, spectrum: azimuth.clone() },
         };
         let (r2, _rx2) = request_kind(2, 256, 4, 61, kind);
-        let tiles = b.admit(&r2);
+        let tiles = b.admit(r2);
         assert_eq!(tiles.len(), 1);
         assert_eq!(tiles[0].artifact, "formimage256");
         let TileKind::FormImage { range: tr, azimuth: ta } = &tiles[0].kind else {
@@ -771,11 +1033,172 @@ mod tests {
     }
 
     #[test]
+    fn fill_after_fail_is_ignored_not_a_panic() {
+        // Two tiles carry one request; the first tile's engine run
+        // fails, answering the client with the error and taking the
+        // output buffer. The sibling tile's later successful fill must
+        // be a no-op — before the responded guard it copied into the
+        // emptied buffers, panicked the worker thread, and hung the
+        // service.
+        let mut b = batcher(2);
+        let (req, rx) = request(1, 256, 4, 70);
+        let tiles = b.admit(req);
+        assert_eq!(tiles.len(), 2, "two full tiles");
+        tiles[0].segments[0].acc.fail("engine exploded");
+        let resp = rx.try_recv().expect("failure answers immediately");
+        assert!(resp.result.is_err());
+        // The sibling tile completes afterwards: no panic, no second
+        // response.
+        let out = SplitComplex { re: vec![1.0; 2 * 256], im: vec![1.0; 2 * 256] };
+        tiles[1].segments[0].acc.fill(&out, 0, 2, 2, 0.001);
+        assert!(rx.try_recv().is_err(), "reply-once: no second response");
+    }
+
+    #[test]
+    fn admission_cap_exact_fit_admits_over_rejects() {
+        let (mut b, m) = batcher_with(
+            8,
+            AdmissionConfig { max_queue_lines: 4, ..Default::default() },
+        );
+        // Exact fit is admitted...
+        let (r1, _rx1) = request(1, 256, 4, 80);
+        assert!(b.admit(r1).is_empty());
+        assert_eq!(b.queued_lines(), 4);
+        // ...one more line is a typed QueueFull rejection, answered
+        // immediately, leaving the queue untouched.
+        let (r2, rx2) = request(2, 256, 1, 81);
+        assert!(b.admit(r2).is_empty());
+        let msg = rx2.try_recv().expect("rejection answers immediately").result.unwrap_err();
+        assert!(msg.starts_with("rejected"), "{msg}");
+        assert!(msg.contains("queue full"), "{msg}");
+        assert_eq!(b.queued_lines(), 4);
+        let s = m.snapshot(0);
+        assert_eq!((s.requests, s.rejected, s.shed), (2, 1, 0));
+        // The rejected arrival's lines count too (telemetry satellite).
+        assert_eq!(s.lines_in, 5);
+    }
+
+    #[test]
+    fn total_budget_bounds_inflight_lines() {
+        let (mut b, _m) = batcher_with(
+            8,
+            AdmissionConfig { max_total_lines: 6, ..Default::default() },
+        );
+        let (r1, _rx1) = request(1, 256, 4, 82);
+        assert!(b.admit(r1).is_empty());
+        // A different queue draws on the same budget.
+        let (r2, _rx2) = request(2, 512, 2, 83);
+        assert!(b.admit(r2).is_empty());
+        let (r3, rx3) = request(3, 256, 1, 84);
+        assert!(b.admit(r3).is_empty());
+        let msg = rx3.try_recv().unwrap().result.unwrap_err();
+        assert!(msg.contains("over budget"), "{msg}");
+        // Draining frees the budget.
+        assert_eq!(b.flush_expired(true).len(), 2);
+        let (r4, _rx4) = request(4, 256, 1, 85);
+        assert!(b.admit(r4).is_empty());
+        assert_eq!(b.queued_lines(), 1);
+    }
+
+    #[test]
+    fn queue_byte_cap_rejects() {
+        // 256 samples * 8 bytes = 2048 bytes/line: cap at 3 lines'
+        // worth and the 4th line is refused.
+        let (mut b, _m) = batcher_with(
+            8,
+            AdmissionConfig { max_queue_bytes: 3 * 2048, ..Default::default() },
+        );
+        let (r1, _rx1) = request(1, 256, 3, 86);
+        assert!(b.admit(r1).is_empty());
+        let (r2, rx2) = request(2, 256, 1, 87);
+        assert!(b.admit(r2).is_empty());
+        let msg = rx2.try_recv().unwrap().result.unwrap_err();
+        assert!(msg.starts_with("rejected") && msg.contains("bytes"), "{msg}");
+    }
+
+    #[test]
+    fn expired_request_is_shed_at_admit() {
+        let (mut b, m) = batcher_with(8, AdmissionConfig::default());
+        let (mut req, rx) = request(1, 256, 2, 88);
+        // Zero-deadline boundary: `deadline <= now` sheds, so a
+        // deadline minted "now" is deterministically expired by the
+        // time admit checks it.
+        req.deadline = Some(Instant::now());
+        assert!(b.admit(req).is_empty());
+        let msg = rx.try_recv().unwrap().result.unwrap_err();
+        assert!(msg.starts_with("shed"), "{msg}");
+        assert_eq!(b.queued_lines(), 0);
+        let s = m.snapshot(0);
+        assert_eq!((s.shed, s.rejected, s.deadline_miss), (1, 0, 0));
+        assert_eq!((s.requests, s.lines_in), (1, 2));
+    }
+
+    #[test]
+    fn expired_fragment_is_shed_at_dispatch() {
+        let (mut b, m) = batcher_with(4, AdmissionConfig::default());
+        let (mut r1, rx1) = request(1, 256, 2, 89);
+        r1.deadline = Some(Instant::now() + Duration::from_millis(2));
+        let (r2, _rx2) = request(2, 256, 2, 90);
+        assert!(b.admit(r1).is_empty());
+        assert!(b.admit(r2).is_empty());
+        std::thread::sleep(Duration::from_millis(3));
+        // r1's deadline passed while queued: the flush sheds it and
+        // the tile carries only r2, padded.
+        let tiles = b.flush_expired(true);
+        assert_eq!(tiles.len(), 1);
+        assert_eq!(tiles[0].segments.len(), 1);
+        assert_eq!(tiles[0].segments[0].acc.id(), 2);
+        assert_eq!(tiles[0].padded_lines, 2);
+        let msg = rx1.try_recv().unwrap().result.unwrap_err();
+        assert!(msg.starts_with("shed"), "{msg}");
+        assert_eq!(m.snapshot(0).deadline_miss, 1);
+    }
+
+    #[test]
+    fn edf_orders_tile_assembly_before_fifo() {
+        let mut b = batcher(3);
+        let (r1, _rx1) = request(1, 256, 1, 91); // FIFO head, no deadline
+        let (mut r2, _rx2) = request(2, 256, 1, 92);
+        r2.deadline = Some(Instant::now() + Duration::from_secs(60));
+        let (mut r3, _rx3) = request(3, 256, 1, 93);
+        r3.deadline = Some(Instant::now() + Duration::from_secs(30));
+        assert!(b.admit(r1).is_empty());
+        assert!(b.admit(r2).is_empty());
+        let tiles = b.admit(r3);
+        assert_eq!(tiles.len(), 1);
+        let ids: Vec<u64> = tiles[0].segments.iter().map(|s| s.acc.id()).collect();
+        assert_eq!(ids, vec![3, 2, 1], "earliest deadline first, deadline-less last");
+
+        // Equal deadlines and deadline-less fragments keep FIFO order.
+        let d = Instant::now() + Duration::from_secs(60);
+        let (mut r4, _rx4) = request(4, 256, 1, 94);
+        r4.deadline = Some(d);
+        let (mut r5, _rx5) = request(5, 256, 1, 95);
+        r5.deadline = Some(d);
+        let (r6, _rx6) = request(6, 256, 1, 96);
+        assert!(b.admit(r4).is_empty());
+        assert!(b.admit(r5).is_empty());
+        let tiles = b.admit(r6);
+        assert_eq!(tiles.len(), 1);
+        let ids: Vec<u64> = tiles[0].segments.iter().map(|s| s.acc.id()).collect();
+        assert_eq!(ids, vec![4, 5, 6], "ties dispatch FIFO");
+    }
+
+    #[test]
+    fn max_queue_lines_parsing() {
+        assert_eq!(parse_max_queue_lines(None), usize::MAX);
+        assert_eq!(parse_max_queue_lines(Some("")), usize::MAX);
+        assert_eq!(parse_max_queue_lines(Some(" 64 ")), 64);
+        assert_eq!(parse_max_queue_lines(Some("0")), usize::MAX);
+        assert_eq!(parse_max_queue_lines(Some("nope")), usize::MAX);
+    }
+
+    #[test]
     fn deadline_bookkeeping() {
         let mut b = batcher(8);
         assert!(b.next_deadline().is_none());
         let (req, _rx) = request(1, 256, 1, 10);
-        b.admit(&req);
+        b.admit(req);
         let d = b.next_deadline().unwrap();
         assert!(d > Instant::now() - Duration::from_millis(1));
         // Nothing expires immediately with a 1 ms window...

@@ -132,6 +132,16 @@ pub struct Metrics {
     pub tiles_dispatched: AtomicU64,
     pub lines_padded: AtomicU64,
     pub failures: AtomicU64,
+    /// Requests refused by an admission cap (queue full / over budget /
+    /// queue too old, plus filter-id collisions) — typed rejections,
+    /// kept apart from engine `failures`.
+    pub rejected: AtomicU64,
+    /// Requests shed at admit because they arrived already past their
+    /// deadline.
+    pub shed: AtomicU64,
+    /// Requests shed at dispatch because their deadline expired while
+    /// queued.
+    pub deadline_miss: AtomicU64,
     /// Nominal FLOPs executed (5·N·log2 N per plain FFT tile line, the
     /// pipeline count for matched-filter lines; padding included — the
     /// executor transforms padded lines too).
@@ -197,6 +207,9 @@ impl Metrics {
             tiles_dispatched: self.tiles_dispatched.load(Ordering::Relaxed),
             lines_padded: self.lines_padded.load(Ordering::Relaxed),
             failures: self.failures.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_miss: self.deadline_miss.load(Ordering::Relaxed),
             nominal_flops: self.flops.load(Ordering::Relaxed),
             mf_tiles: self.mf_tiles.load(Ordering::Relaxed),
             mf_nominal_flops: self.mf_flops.load(Ordering::Relaxed),
@@ -236,6 +249,13 @@ pub struct MetricsSnapshot {
     pub tiles_dispatched: u64,
     pub lines_padded: u64,
     pub failures: u64,
+    /// Admission-cap rejections (queue full / over budget / queue too
+    /// old / filter-id collision), answered as typed errors.
+    pub rejected: u64,
+    /// Requests shed at admit (arrived already past deadline).
+    pub shed: u64,
+    /// Requests shed at dispatch (deadline expired while queued).
+    pub deadline_miss: u64,
     /// Nominal FLOPs executed across all dispatched tiles.
     pub nominal_flops: u64,
     /// Matched-filter (fused pipeline) tiles dispatched.
@@ -300,6 +320,9 @@ impl MetricsSnapshot {
             m.tiles_dispatched += p.tiles_dispatched;
             m.lines_padded += p.lines_padded;
             m.failures += p.failures;
+            m.rejected += p.rejected;
+            m.shed += p.shed;
+            m.deadline_miss += p.deadline_miss;
             m.nominal_flops += p.nominal_flops;
             m.mf_tiles += p.mf_tiles;
             m.mf_nominal_flops += p.mf_nominal_flops;
@@ -362,7 +385,8 @@ impl MetricsSnapshot {
 
     pub fn render(&self) -> String {
         format!(
-            "requests={} lines={} tiles={} padded={} ({:.1}%) failures={} shards={} \
+            "requests={} lines={} tiles={} padded={} ({:.1}%) failures={} rejected={} \
+             shed={} deadline_miss={} shards={} \
              image_tiles={} ({:.1}% of flops)\n\
              queue: mean {:.1} us, p50 {:.1} us, p95 {:.1} us | \
              exec: mean {:.1} us, p50 {:.1} us, p95 {:.1} us\n\
@@ -377,6 +401,9 @@ impl MetricsSnapshot {
             self.lines_padded,
             self.padding_ratio() * 100.0,
             self.failures,
+            self.rejected,
+            self.shed,
+            self.deadline_miss,
             self.shards,
             self.image_tiles,
             self.image_share() * 100.0,
@@ -436,6 +463,9 @@ impl MetricsSnapshot {
         counter(&mut out, "applefft_tiles_total", self.tiles_dispatched);
         counter(&mut out, "applefft_lines_padded_total", self.lines_padded);
         counter(&mut out, "applefft_failures_total", self.failures);
+        counter(&mut out, "applefft_rejected_total", self.rejected);
+        counter(&mut out, "applefft_shed_total", self.shed);
+        counter(&mut out, "applefft_deadline_miss_total", self.deadline_miss);
         counter(&mut out, "applefft_nominal_flops_total", self.nominal_flops);
         counter(&mut out, "applefft_mf_tiles_total", self.mf_tiles);
         counter(&mut out, "applefft_image_tiles_total", self.image_tiles);
@@ -618,6 +648,9 @@ mod tests {
             tiles_dispatched: 4,
             lines_padded: 8,
             failures: 1,
+            rejected: 2,
+            shed: 1,
+            deadline_miss: 3,
             nominal_flops: 1_000,
             mf_tiles: 1,
             mf_nominal_flops: 250,
@@ -647,6 +680,9 @@ mod tests {
         assert_eq!(m.tiles_dispatched, 16);
         assert_eq!(m.lines_padded, 16);
         assert_eq!(m.failures, 2);
+        // Traffic-shaping counters merge like every other counter, so
+        // cluster shed rate is the per-shard sum.
+        assert_eq!((m.rejected, m.shed, m.deadline_miss), (4, 2, 6));
         assert_eq!(m.nominal_flops, 4_000, "merged flops are the per-shard sum");
         assert_eq!(m.mf_tiles, 2);
         assert_eq!(m.mf_nominal_flops, 500);
@@ -730,5 +766,23 @@ mod tests {
         assert!(text.contains("applefft_queue_latency_us_bucket{le=\"256\"} 2"), "{text}");
         // Sum is µs-denominated and nanosecond-accurate.
         assert!(text.contains("applefft_queue_latency_us_sum 110"), "{text}");
+    }
+
+    #[test]
+    fn traffic_shaping_counters_snapshot_and_render() {
+        let m = Metrics::default();
+        m.rejected.fetch_add(5, Ordering::Relaxed);
+        m.shed.fetch_add(2, Ordering::Relaxed);
+        m.deadline_miss.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot(0);
+        assert_eq!((s.rejected, s.shed, s.deadline_miss), (5, 2, 1));
+        let r = s.render();
+        assert!(r.contains("rejected=5"), "{r}");
+        assert!(r.contains("shed=2"), "{r}");
+        assert!(r.contains("deadline_miss=1"), "{r}");
+        let text = s.render_prometheus();
+        assert!(text.contains("applefft_rejected_total 5\n"), "{text}");
+        assert!(text.contains("applefft_shed_total 2\n"), "{text}");
+        assert!(text.contains("applefft_deadline_miss_total 1\n"), "{text}");
     }
 }

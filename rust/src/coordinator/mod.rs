@@ -27,7 +27,9 @@
 //!   the serving policy), padding the final partial tile. Plain FFT
 //!   queues key on (n, direction); matched-filter queues key on the
 //!   registered filter id, so convolution traffic sharing a spectrum
-//!   coalesces into fused `rangecomp*` tiles.
+//!   coalesces into fused `rangecomp*` tiles. Admission control and
+//!   earliest-deadline-first tile assembly live here too (see *Traffic
+//!   shaping* below).
 //! * [`worker`] — a small pool draining tiles into the engine, recording
 //!   per-tile latency and nominal FLOPs (5·N·log2 N per FFT line, the
 //!   pipeline count — 2 FFTs + 6N — per matched-filter line).
@@ -41,8 +43,12 @@
 //!   union of the traffic would report, not a worst-shard bound.
 //! * [`shard`] — the scale-out tier: a [`shard::ShardedFftService`]
 //!   owns N full service stacks and stripes every request across them.
-//! * [`replay`] — trace-driven workload replay (open-loop latency
-//!   percentiles; `replay_sharded` adds the per-shard breakdown).
+//! * [`replay`] — trace-driven workload replay: open-loop latency
+//!   percentiles (`replay`, `replay_sharded` adds the per-shard
+//!   breakdown), SLO-graded open-loop runs (`replay_slo`), the
+//!   closed-loop latency floor (`replay_closed`), and
+//!   [`replay::Trace::traffic`] — a Poisson/diurnal/bursty generator
+//!   over the mixed FFT/matched/2D × f32/bfp16 population.
 //!
 //! # Sharding rules (the scale-out contract)
 //!
@@ -78,6 +84,35 @@
 //!   precisions; with one shard alive the whole matrix delegates to the
 //!   engine's fused 2D tile directly.
 //!
+//! # Traffic shaping
+//!
+//! Under overload an unbounded batcher queue turns into unbounded
+//! latency for everyone; the serving tier instead refuses work it
+//! cannot serve in time, at two doors:
+//!
+//! * **Admission control** — [`batcher::AdmissionConfig`] caps pending
+//!   lines per queue and in total (`APPLEFFT_MAX_QUEUE_LINES`, or
+//!   [`ServiceConfig::admission`]); over-cap submits are answered
+//!   immediately with a `rejected: ...` reply and counted in
+//!   [`MetricsSnapshot::rejected`] — never as failures.
+//! * **Deadlines** — every request may carry an absolute deadline
+//!   (explicit via the `*_deadline` submit variants, or defaulted from
+//!   `APPLEFFT_DEADLINE_MS`). The deadline is resolved **once at the
+//!   front door** a request enters through — sharded sub-requests
+//!   inherit their parent's instant verbatim — so shed decisions are
+//!   identical at every shard count. An expired request is shed at
+//!   admit (`shed` counter) or at dispatch (`deadline_miss`), answered
+//!   `shed: ...`, and tile assembly pops the earliest deadline first
+//!   (EDF) so a feasible request is never displaced by a hopeless one.
+//!
+//! Sheds and rejections are deterministic functions of (queue state,
+//! deadline, now), so the bitwise sharded==single contract holds for
+//! all *admitted* traffic. `applefft serve --slo-ms <ms> --load
+//! poisson|diurnal|bursty` drives the shaper with
+//! [`replay::Trace::traffic`] and reports offered load, shed rate,
+//! goodput, and latency percentiles; `benches/traffic.rs` sweeps
+//! offered load at shard counts {1, 4} into `BENCH_traffic.json`.
+//!
 //! # Observability
 //!
 //! The request path is instrumented end to end with the always-compiled
@@ -104,8 +139,10 @@ pub mod service;
 pub mod shard;
 pub mod worker;
 
+pub use batcher::{AdmissionConfig, AdmitError};
 pub use metrics::MetricsSnapshot;
 pub use planner::{Decomposition, Plan, Planner};
+pub use replay::{ArrivalProfile, EntryKind, SloReport};
 pub use request::{FftRequest, FftResponse, FilterSpec, RequestId, RequestKind};
 pub use service::{FftService, FilterHandle, ServiceConfig};
 pub use shard::{ShardFilterHandle, ShardedFftService};

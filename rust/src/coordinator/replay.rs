@@ -1,6 +1,6 @@
 //! Trace-driven workload replay: generate or load a request trace
-//! (arrival time, size, lines, direction, precision) and replay it
-//! against the service — single or sharded, via [`ReplayTarget`] — with
+//! (arrival time, size, lines, kind, precision) and replay it against
+//! the service — single or sharded, via [`ReplayTarget`] — with
 //! open-loop timing, reporting latency percentiles and throughput; the
 //! standard serving-system evaluation the coordinator deserves (and
 //! `applefft serve --trace` exposes). [`replay_sharded`] adds the
@@ -8,11 +8,20 @@
 //! responses so the shard harness can assert that the same trace is
 //! bitwise identical at every shard count.
 //!
+//! The traffic-shaping tier is driven from here too:
+//! [`Trace::traffic`] generates Poisson / diurnal / bursty arrival
+//! processes over a mixed kind-size-precision request population, and
+//! [`replay_slo`] (open-loop, per-request deadlines = send + SLO) /
+//! [`replay_closed`] (one request in flight at a time) grade the
+//! service against a latency SLO — completed vs shed vs failed,
+//! goodput, and the achieved percentiles (`benches/traffic.rs` sweeps
+//! offered load through these into `BENCH_traffic.json`).
+//!
 //! Trace file format (one request per line; the trailing precision
 //! token is optional and defaults to `f32`):
-//! `<arrival_us> <n> <lines> <fwd|inv> [f32|bfp16]`
+//! `<arrival_us> <n> <lines> <fwd|inv|matched|2d> [f32|bfp16]`
 
-use super::metrics::MetricsSnapshot;
+use super::metrics::{Histogram, MetricsSnapshot};
 use super::request::{FftResponse, RequestId};
 use super::service::FftService;
 use super::shard::ShardedFftService;
@@ -23,6 +32,21 @@ use crate::util::rng::Rng;
 use anyhow::{Context, Result};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+/// What a trace entry asks of the service. Matched-filter and 2D
+/// entries imply [`Direction::Forward`] (their text tokens carry no
+/// direction of their own).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntryKind {
+    /// Plain batched FFT (`fwd`/`inv` tokens).
+    Fft,
+    /// Matched filtering against the deterministic per-size spectrum
+    /// ([`filter_spectrum`]) every replay target registers identically.
+    Matched,
+    /// Whole-matrix 2D FFT (`lines` is the row count and must itself be
+    /// a supported transform length).
+    Fft2d,
+}
 
 /// One trace entry.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -35,6 +59,33 @@ pub struct TraceEntry {
     /// Exchange precision the request pins (f32 unless the trace says
     /// otherwise) — precision policies must survive sharding unchanged.
     pub precision: Precision,
+    pub kind: EntryKind,
+}
+
+/// Shape of the arrival process [`Trace::traffic`] generates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalProfile {
+    /// Memoryless arrivals at the nominal rate.
+    Poisson,
+    /// One sinusoidal "day" compressed into the trace: the local rate
+    /// swings between 25% and 175% of nominal.
+    Diurnal,
+    /// On/off bursts: ten cycles over the trace, 4x nominal while on,
+    /// a 10% trickle between — the SAR collection-pass shape.
+    Bursty,
+}
+
+impl std::str::FromStr for ArrivalProfile {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<ArrivalProfile> {
+        match s {
+            "poisson" => Ok(ArrivalProfile::Poisson),
+            "diurnal" => Ok(ArrivalProfile::Diurnal),
+            "bursty" => Ok(ArrivalProfile::Bursty),
+            other => anyhow::bail!("unknown load profile {other:?} (poisson|diurnal|bursty)"),
+        }
+    }
 }
 
 /// A workload trace.
@@ -72,7 +123,100 @@ impl Trace {
             // A quarter of the traffic pins the half-precision exchange
             // tier, like a bandwidth-constrained client population.
             let precision = if rng.below(4) == 0 { Precision::Bfp16 } else { Precision::F32 };
-            entries.push(TraceEntry { arrival_us: t_us as u64, n, lines, direction, precision });
+            entries.push(TraceEntry {
+                arrival_us: t_us as u64,
+                n,
+                lines,
+                direction,
+                precision,
+                kind: EntryKind::Fft,
+            });
+        }
+        Trace { entries }
+    }
+
+    /// Traffic-shaped arrivals: a non-homogeneous arrival process (the
+    /// profile modulates the local rate; inter-arrivals are drawn
+    /// exponentially against it) over a mixed request population —
+    /// every 16th entry is a matched filter, every 32nd a 2D FFT, a
+    /// quarter of the traffic pins bfp16, sizes follow the SAR mix.
+    /// Deterministic in `(profile, rate_hz, duration, seed)`, so the
+    /// same trace drives every target of a comparison identically.
+    pub fn traffic(
+        profile: ArrivalProfile,
+        rate_hz: f64,
+        duration: Duration,
+        seed: u64,
+    ) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut entries = Vec::new();
+        let end_us = duration.as_micros() as f64;
+        let mut t_us = 0.0f64;
+        let mut idx = 0u64;
+        while t_us < end_us {
+            let phase = t_us / end_us;
+            let local = match profile {
+                ArrivalProfile::Poisson => rate_hz,
+                ArrivalProfile::Diurnal => {
+                    rate_hz * (1.0 + 0.75 * (std::f64::consts::TAU * phase).sin())
+                }
+                ArrivalProfile::Bursty => {
+                    if (phase * 10.0).fract() < 0.3 {
+                        rate_hz * 4.0
+                    } else {
+                        rate_hz * 0.1
+                    }
+                }
+            };
+            let u = rng.f32().max(1e-6) as f64;
+            t_us += -u.ln() * 1e6 / local.max(1e-3);
+            if t_us >= end_us {
+                break;
+            }
+            // Disjoint residues keep the mix deterministic: 11 mod 32
+            // never collides with 5 mod 16.
+            let kind = if idx % 32 == 11 {
+                EntryKind::Fft2d
+            } else if idx % 16 == 5 {
+                EntryKind::Matched
+            } else {
+                EntryKind::Fft
+            };
+            let (n, lines, direction) = match kind {
+                // Both matrix dimensions must be transform lengths.
+                EntryKind::Fft2d => {
+                    (*rng.choose(&[256usize, 512, 1024]), *rng.choose(&[16usize, 64]),
+                     Direction::Forward)
+                }
+                EntryKind::Matched => {
+                    (*rng.choose(&[512usize, 1024, 4096]), rng.between(1, 8),
+                     Direction::Forward)
+                }
+                EntryKind::Fft => {
+                    let n = match rng.below(10) {
+                        0 => 256,
+                        1 => 512,
+                        2 => 1024,
+                        3 => 2048,
+                        4..=7 => 4096, // range-compression dominates
+                        8 => 8192,
+                        _ => 16384,
+                    };
+                    let direction =
+                        if rng.below(3) == 0 { Direction::Inverse } else { Direction::Forward };
+                    (n, rng.between(1, 8), direction)
+                }
+            };
+            let precision = if rng.below(4) == 0 { Precision::Bfp16 } else { Precision::F32 };
+            entries.push(TraceEntry {
+                arrival_us: t_us as u64,
+                n,
+                lines,
+                direction,
+                precision,
+                kind,
+            });
+            idx += 1;
         }
         Trace { entries }
     }
@@ -90,25 +234,35 @@ impl Trace {
             let arrival_us: u64 = it.next().with_context(ctx)?.parse().with_context(ctx)?;
             let n: usize = it.next().with_context(ctx)?.parse().with_context(ctx)?;
             let lines: usize = it.next().with_context(ctx)?.parse().with_context(ctx)?;
-            let direction: Direction = it.next().with_context(ctx)?.parse()?;
+            let tok = it.next().with_context(ctx)?;
+            let (kind, direction) = match tok {
+                "matched" => (EntryKind::Matched, Direction::Forward),
+                "2d" => (EntryKind::Fft2d, Direction::Forward),
+                _ => (EntryKind::Fft, tok.parse()?),
+            };
             let precision: Precision = match it.next() {
                 Some(tok) => tok.parse().with_context(ctx)?,
                 None => Precision::F32,
             };
-            entries.push(TraceEntry { arrival_us, n, lines, direction, precision });
+            entries.push(TraceEntry { arrival_us, n, lines, direction, precision, kind });
         }
         Ok(Trace { entries })
     }
 
     pub fn to_text(&self) -> String {
-        let mut out = String::from("# arrival_us n lines direction precision\n");
+        let mut out = String::from("# arrival_us n lines kind precision\n");
         for e in &self.entries {
+            let tok = match e.kind {
+                EntryKind::Fft => e.direction.tag(),
+                EntryKind::Matched => "matched",
+                EntryKind::Fft2d => "2d",
+            };
             out.push_str(&format!(
                 "{} {} {} {} {}\n",
                 e.arrival_us,
                 e.n,
                 e.lines,
-                e.direction.tag(),
+                tok,
                 e.precision.tag()
             ));
         }
@@ -116,15 +270,25 @@ impl Trace {
     }
 }
 
+/// Deterministic filter spectrum for matched trace entries: every
+/// replay target registers the same bits for the same `n`, which keeps
+/// matched traffic inside the bitwise sharded==single contract.
+pub fn filter_spectrum(n: usize) -> SplitComplex {
+    let mut rng = Rng::new(0xF11 + n as u64);
+    SplitComplex { re: rng.signal(n), im: rng.signal(n) }
+}
+
 /// Anything a trace can replay against: the single service or the
 /// sharded coordinator. `submit_entry` must be asynchronous (the
-/// open-loop driver never blocks on completion); `drain_now`
+/// open-loop driver never blocks on completion) and must honor the
+/// entry's kind and the caller's absolute deadline; `drain_now`
 /// force-flushes partial tiles and returns the (merged) snapshot.
 pub trait ReplayTarget {
     fn submit_entry(
         &self,
         e: &TraceEntry,
         x: SplitComplex,
+        deadline: Option<Instant>,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)>;
     fn drain_now(&self) -> Result<MetricsSnapshot>;
 }
@@ -134,8 +298,20 @@ impl ReplayTarget for FftService {
         &self,
         e: &TraceEntry,
         x: SplitComplex,
+        deadline: Option<Instant>,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
-        self.submit_prec(e.n, e.direction, x, e.lines, e.precision)
+        match e.kind {
+            EntryKind::Fft => {
+                self.submit_prec_deadline(e.n, e.direction, x, e.lines, e.precision, deadline)
+            }
+            EntryKind::Matched => {
+                let h = self.register_filter_prec(e.n, filter_spectrum(e.n), e.precision)?;
+                self.submit_matched_deadline(&h, x, e.lines, deadline)
+            }
+            EntryKind::Fft2d => {
+                self.submit_fft2d_deadline(e.n, e.direction, x, e.lines, e.precision, deadline)
+            }
+        }
     }
 
     fn drain_now(&self) -> Result<MetricsSnapshot> {
@@ -148,8 +324,20 @@ impl ReplayTarget for ShardedFftService {
         &self,
         e: &TraceEntry,
         x: SplitComplex,
+        deadline: Option<Instant>,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
-        self.submit_prec(e.n, e.direction, x, e.lines, e.precision)
+        match e.kind {
+            EntryKind::Fft => {
+                self.submit_prec_deadline(e.n, e.direction, x, e.lines, e.precision, deadline)
+            }
+            EntryKind::Matched => {
+                let h = self.register_filter_prec(e.n, filter_spectrum(e.n), e.precision)?;
+                self.submit_matched_deadline(&h, x, e.lines, deadline)
+            }
+            EntryKind::Fft2d => {
+                self.submit_fft2d_deadline(e.n, e.direction, x, e.lines, e.precision, deadline)
+            }
+        }
     }
 
     fn drain_now(&self) -> Result<MetricsSnapshot> {
@@ -194,10 +382,14 @@ pub fn replay<T: ReplayTarget>(svc: &T, trace: &Trace, seed: u64) -> Result<Repl
             im: rng.signal(e.n * e.lines),
         };
         let sent = Instant::now();
-        let (_, rx) = svc.submit_entry(e, x)?;
+        let (_, rx) = svc.submit_entry(e, x, None)?;
         inflight.push((sent, rx));
         lines += e.lines;
-        flops += crate::util::fft_flops(e.n) * e.lines as f64;
+        flops += match e.kind {
+            EntryKind::Fft => crate::util::fft_flops(e.n) * e.lines as f64,
+            EntryKind::Matched => crate::util::pipeline_flops(e.n) * e.lines as f64,
+            EntryKind::Fft2d => crate::util::fft2d_flops(e.lines, e.n),
+        };
     }
 
     // Collect. Latency is measured submit -> response assembly
@@ -258,7 +450,7 @@ pub fn replay_collect<T: ReplayTarget>(
             re: rng.signal(e.n * e.lines),
             im: rng.signal(e.n * e.lines),
         };
-        pending.push(svc.submit_entry(e, x)?.1);
+        pending.push(svc.submit_entry(e, x, None)?.1);
     }
     svc.drain_now()?;
     let mut out = Vec::with_capacity(pending.len());
@@ -269,6 +461,169 @@ pub fn replay_collect<T: ReplayTarget>(
         out.push(resp.result.map_err(|m| anyhow::anyhow!("trace entry {i}: {m}"))?);
     }
     Ok(out)
+}
+
+/// Outcome of a traffic run against a latency SLO: what was offered,
+/// what was served in time, what was shed, and the client-observed
+/// latency percentiles of the successful requests — recorded through
+/// the same exact log-scale [`Histogram`] the service's own telemetry
+/// merges across shards.
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    /// Arrival rate actually generated (requests / injection span).
+    pub offered_rps: f64,
+    pub requests: usize,
+    /// Requests answered successfully.
+    pub completed: usize,
+    /// Requests refused by traffic shaping — deadline sheds and
+    /// admission rejections (`shed: ...` / `rejected: ...` replies).
+    pub shed: usize,
+    /// Hard failures (engine errors, dropped replies) — never sheds.
+    pub failed: usize,
+    /// Successfully served lines per second of wall time.
+    pub goodput_lps: f64,
+    /// End-to-end latency percentiles of completed requests, µs.
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+}
+
+impl SloReport {
+    /// Fraction of offered requests refused by traffic shaping.
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.requests as f64
+        }
+    }
+}
+
+/// Classify one reply into the (completed, shed, failed) buckets and
+/// record completed latency; returns the successfully served lines.
+fn grade_response(
+    received: Result<FftResponse, mpsc::RecvTimeoutError>,
+    sent: Instant,
+    lines: usize,
+    hist: &Histogram,
+    completed: &mut usize,
+    shed: &mut usize,
+    failed: &mut usize,
+) -> usize {
+    match received {
+        Ok(resp) => match &resp.result {
+            Ok(_) => {
+                *completed += 1;
+                let e2e = resp.completed_at.saturating_duration_since(sent);
+                hist.record_secs(e2e.as_secs_f64());
+                lines
+            }
+            // The admission tier's message-prefix protocol: deadline
+            // sheds reply "shed: ...", capacity rejections reply
+            // "rejected: ..." — both are the shaper working as
+            // designed, not service failures.
+            Err(msg) if msg.starts_with("shed") || msg.starts_with("rejected") => {
+                *shed += 1;
+                0
+            }
+            Err(_) => {
+                *failed += 1;
+                0
+            }
+        },
+        Err(_) => {
+            *failed += 1;
+            0
+        }
+    }
+}
+
+/// Open-loop SLO run: requests are injected at their trace arrival
+/// times, each carrying the absolute deadline `send + slo`. Overload
+/// therefore surfaces as shed rate, not as an unboundedly growing
+/// queue — the batcher fails expired requests at admit and dispatch.
+pub fn replay_slo<T: ReplayTarget>(
+    svc: &T,
+    trace: &Trace,
+    slo: Duration,
+    seed: u64,
+) -> Result<SloReport> {
+    let mut rng = Rng::new(seed);
+    let start = Instant::now();
+    let mut inflight = Vec::with_capacity(trace.entries.len());
+    for e in &trace.entries {
+        let target = Duration::from_micros(e.arrival_us);
+        let now = start.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let x = SplitComplex {
+            re: rng.signal(e.n * e.lines),
+            im: rng.signal(e.n * e.lines),
+        };
+        let sent = Instant::now();
+        let (_, rx) = svc.submit_entry(e, x, Some(sent + slo))?;
+        inflight.push((sent, e.lines, rx));
+    }
+    let offered_secs = start.elapsed().as_secs_f64().max(1e-9);
+    // Flush partial tiles so every verdict (served or shed) lands.
+    svc.drain_now()?;
+    let hist = Histogram::default();
+    let (mut completed, mut shed, mut failed) = (0usize, 0usize, 0usize);
+    let mut good_lines = 0usize;
+    for (sent, lines, rx) in inflight {
+        let received = rx.recv_timeout(Duration::from_secs(60));
+        good_lines +=
+            grade_response(received, sent, lines, &hist, &mut completed, &mut shed, &mut failed);
+    }
+    let wall = start.elapsed().as_secs_f64().max(1e-9);
+    Ok(SloReport {
+        offered_rps: trace.entries.len() as f64 / offered_secs,
+        requests: trace.entries.len(),
+        completed,
+        shed,
+        failed,
+        goodput_lps: good_lines as f64 / wall,
+        p50_us: hist.percentile_us(0.50),
+        p95_us: hist.percentile_us(0.95),
+        p99_us: hist.percentile_us(0.99),
+    })
+}
+
+/// Closed-loop run: one request in flight at a time (the next is
+/// submitted only after the previous reply), no deadlines, no pacing —
+/// the service's unloaded latency floor for the same mixed trace, the
+/// baseline an open-loop sweep is judged against.
+pub fn replay_closed<T: ReplayTarget>(svc: &T, trace: &Trace, seed: u64) -> Result<SloReport> {
+    let mut rng = Rng::new(seed);
+    let start = Instant::now();
+    let hist = Histogram::default();
+    let (mut completed, mut shed, mut failed) = (0usize, 0usize, 0usize);
+    let mut good_lines = 0usize;
+    for e in &trace.entries {
+        let x = SplitComplex {
+            re: rng.signal(e.n * e.lines),
+            im: rng.signal(e.n * e.lines),
+        };
+        let sent = Instant::now();
+        let (_, rx) = svc.submit_entry(e, x, None)?;
+        let received = rx.recv_timeout(Duration::from_secs(60));
+        good_lines += grade_response(
+            received, sent, e.lines, &hist, &mut completed, &mut shed, &mut failed,
+        );
+    }
+    let wall = start.elapsed().as_secs_f64().max(1e-9);
+    Ok(SloReport {
+        offered_rps: trace.entries.len() as f64 / wall,
+        requests: trace.entries.len(),
+        completed,
+        shed,
+        failed,
+        goodput_lps: good_lines as f64 / wall,
+        p50_us: hist.percentile_us(0.50),
+        p95_us: hist.percentile_us(0.95),
+        p99_us: hist.percentile_us(0.99),
+    })
 }
 
 /// One shard's slice of a sharded replay (from its post-drain metrics
@@ -366,27 +721,121 @@ mod tests {
                     lines,
                     direction: Direction::Forward,
                     precision: Precision::F32,
+                    kind: EntryKind::Fft,
                 })
                 .collect(),
         }
     }
 
-    #[test]
-    fn replay_completes_with_latency_stats() {
-        let svc = FftService::start(ServiceConfig {
+    fn native_service() -> FftService {
+        FftService::start(ServiceConfig {
             backend: Backend::Native,
             max_wait: Duration::from_millis(1),
             workers: 2,
             warm: false,
             shards: 1,
+            ..Default::default()
         })
-        .unwrap();
+        .unwrap()
+    }
+
+    #[test]
+    fn replay_completes_with_latency_stats() {
+        let svc = native_service();
         let report = replay(&svc, &fwd_trace(20, 256, 3), 3).unwrap();
         assert_eq!(report.requests, 20);
         assert_eq!(report.failures, 0);
         assert_eq!(report.lines, 60);
         assert!(report.p50_us > 0.0);
         assert!(report.p99_us >= report.p50_us);
+    }
+
+    #[test]
+    fn traffic_profiles_generate_mixed_ordered_arrivals() {
+        for profile in
+            [ArrivalProfile::Poisson, ArrivalProfile::Diurnal, ArrivalProfile::Bursty]
+        {
+            let t = Trace::traffic(profile, 2000.0, Duration::from_millis(100), 7);
+            assert!(t.entries.len() > 30, "{profile:?}: only {}", t.entries.len());
+            assert!(t.entries.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us));
+            assert!(
+                t.entries.iter().any(|e| e.kind == EntryKind::Matched),
+                "{profile:?} must mix in matched traffic"
+            );
+            assert!(
+                t.entries.iter().any(|e| e.kind == EntryKind::Fft2d),
+                "{profile:?} must mix in 2D traffic"
+            );
+            assert!(t.entries.iter().any(|e| e.precision == Precision::Bfp16));
+            // 2D entries keep both matrix dimensions in the serving
+            // range (lines is the column transform length).
+            assert!(t
+                .entries
+                .iter()
+                .filter(|e| e.kind == EntryKind::Fft2d)
+                .all(|e| matches!(e.lines, 16 | 64)));
+            // Determinism: the same inputs give the same trace.
+            let again = Trace::traffic(profile, 2000.0, Duration::from_millis(100), 7);
+            assert_eq!(again.entries, t.entries);
+        }
+        // Load profile tokens parse (the `serve --load` surface).
+        assert_eq!("bursty".parse::<ArrivalProfile>().unwrap(), ArrivalProfile::Bursty);
+        assert!("steady".parse::<ArrivalProfile>().is_err());
+    }
+
+    #[test]
+    fn traffic_text_roundtrip_covers_all_kinds() {
+        let t = Trace::traffic(ArrivalProfile::Bursty, 4000.0, Duration::from_millis(50), 8);
+        let parsed = Trace::parse(&t.to_text()).unwrap();
+        assert_eq!(parsed.entries, t.entries);
+        assert!(t.to_text().contains(" matched "), "{}", t.to_text());
+        assert!(t.to_text().contains(" 2d "), "{}", t.to_text());
+    }
+
+    #[test]
+    fn slo_replay_grades_sheds_and_completions() {
+        let svc = native_service();
+        let t = fwd_trace(8, 256, 2);
+        // Zero SLO: every request's deadline is its send instant, so
+        // the batcher sheds all of them deterministically at admission.
+        let r = replay_slo(&svc, &t, Duration::ZERO, 11).unwrap();
+        assert_eq!(r.requests, 8);
+        assert_eq!(r.shed, 8, "zero SLO must shed everything: {r:?}");
+        assert_eq!((r.completed, r.failed), (0, 0), "sheds are not failures: {r:?}");
+        assert_eq!(r.shed_rate(), 1.0);
+        assert_eq!(r.goodput_lps, 0.0);
+        // A generous SLO completes everything.
+        let r2 = replay_slo(&svc, &t, Duration::from_secs(30), 12).unwrap();
+        assert_eq!(r2.completed, 8, "{r2:?}");
+        assert_eq!((r2.shed, r2.failed), (0, 0));
+        assert!(r2.goodput_lps > 0.0);
+        assert!(r2.p99_us >= r2.p50_us);
+        // Closed loop serves the same trace with one request in flight.
+        let r3 = replay_closed(&svc, &t, 13).unwrap();
+        assert_eq!(r3.completed, 8, "{r3:?}");
+        assert!(r3.offered_rps > 0.0);
+    }
+
+    #[test]
+    fn bursty_traffic_is_bitwise_shard_invariant() {
+        // The PR 5 contract over the full traffic mix: every admitted
+        // kind × precision must reassemble to identical bits at every
+        // shard count. No deadlines or caps here, so everything is
+        // admitted and `replay_collect` sees every response.
+        let single = crate::coordinator::shard::ShardedFftService::start_native(1).unwrap();
+        let sharded = crate::coordinator::shard::ShardedFftService::start_native(3).unwrap();
+        let mut t = Trace::traffic(ArrivalProfile::Bursty, 4000.0, Duration::from_millis(30), 9);
+        t.entries.truncate(40);
+        assert!(t.entries.iter().any(|e| e.kind == EntryKind::Matched));
+        assert!(t.entries.iter().any(|e| e.kind == EntryKind::Fft2d));
+        assert!(t.entries.iter().any(|e| e.precision == Precision::Bfp16));
+        let want = replay_collect(&single, &t, 10).unwrap();
+        let got = replay_collect(&sharded, &t, 10).unwrap();
+        assert_eq!(want.len(), got.len());
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a.re, b.re, "entry {i} ({:?}) re", t.entries[i]);
+            assert_eq!(a.im, b.im, "entry {i} ({:?}) im", t.entries[i]);
+        }
     }
 
     #[test]

@@ -93,6 +93,12 @@ pub struct FftRequest {
     pub lines: usize,
     /// Set by the service at admission; used for queue-latency metrics.
     pub submitted_at: Instant,
+    /// Absolute deadline, resolved once at the service front door
+    /// (explicit per-request value, else the configured
+    /// `APPLEFFT_DEADLINE_MS` default). A request past its deadline is
+    /// shed — at admit if it arrives expired, at dispatch if it expires
+    /// queued — and tile assembly is earliest-deadline-first.
+    pub deadline: Option<Instant>,
     /// Where the response goes.
     pub reply: mpsc::Sender<FftResponse>,
 }
@@ -188,6 +194,7 @@ mod tests {
                 data: SplitComplex::zeros(payload),
                 lines,
                 submitted_at: Instant::now(),
+                deadline: None,
                 reply: tx,
             },
             rx,

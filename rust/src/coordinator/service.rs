@@ -4,7 +4,7 @@
 //! the worker pool; workers execute on the engine's device thread and
 //! reply through per-request channels.
 
-use super::batcher::Batcher;
+use super::batcher::{AdmissionConfig, Batcher};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::planner::Planner;
 use super::request::{FftRequest, FftResponse, FilterSpec, RequestId, RequestKind};
@@ -71,6 +71,15 @@ pub struct ServiceConfig {
     /// is always exactly one such stack and ignores this knob. Defaults
     /// to `APPLEFFT_SHARDS` (clamped to >= 1), else 1.
     pub shards: usize,
+    /// Traffic-shaping caps the batcher enforces at admission: per-queue
+    /// line/byte/age limits and the total in-flight line budget.
+    /// Defaults from `APPLEFFT_MAX_QUEUE_LINES` (unset = unlimited).
+    pub admission: AdmissionConfig,
+    /// Deadline budget for requests that don't carry an explicit one:
+    /// resolved **once** at the service front door (`now + budget`), so
+    /// every sharded sub-request inherits the same absolute instant.
+    /// Defaults to `APPLEFFT_DEADLINE_MS` (unset = no deadline).
+    pub default_deadline: Option<Duration>,
 }
 
 impl ServiceConfig {
@@ -89,6 +98,22 @@ impl ServiceConfig {
             .filter(|&s| s >= 1)
             .unwrap_or(1)
     }
+
+    /// The `APPLEFFT_DEADLINE_MS` default deadline budget: read fresh
+    /// on every call; unset, empty, zero, negative, or unparsable all
+    /// mean "no default deadline".
+    pub fn default_deadline() -> Option<Duration> {
+        Self::parse_deadline_ms(std::env::var("APPLEFFT_DEADLINE_MS").ok().as_deref())
+    }
+
+    /// Pure core of [`Self::default_deadline`] (same no-env-mutation
+    /// testing rationale as [`Self::parse_shards`]).
+    fn parse_deadline_ms(value: Option<&str>) -> Option<Duration> {
+        value
+            .and_then(|s| s.trim().parse::<f64>().ok())
+            .filter(|&ms| ms.is_finite() && ms > 0.0)
+            .map(|ms| Duration::from_secs_f64(ms / 1_000.0))
+    }
 }
 
 impl Default for ServiceConfig {
@@ -99,6 +124,8 @@ impl Default for ServiceConfig {
             workers: 2,
             warm: false,
             shards: ServiceConfig::default_shards(),
+            admission: AdmissionConfig::from_env(),
+            default_deadline: ServiceConfig::default_deadline(),
         }
     }
 }
@@ -115,6 +142,7 @@ pub struct FftService {
     engine: Engine,
     metrics: Arc<Metrics>,
     planner: Planner,
+    default_deadline: Option<Duration>,
 }
 
 /// Filter ids are **process-global**, not per-service: a handle
@@ -143,11 +171,12 @@ impl FftService {
 
         let batch_tile = engine.batch_tile();
         let max_wait = config.max_wait;
+        let admission = config.admission;
         let metrics_b = metrics.clone();
         std::thread::Builder::new()
             .name("applefft-batcher".to_string())
             .spawn(move || {
-                let mut batcher = Batcher::new(batch_tile, max_wait, metrics_b);
+                let mut batcher = Batcher::new(batch_tile, max_wait, admission, metrics_b);
                 loop {
                     // Sleep until the next deadline (or idle-block).
                     let op = match batcher.next_deadline() {
@@ -167,12 +196,14 @@ impl FftService {
                     };
                     match op {
                         Some(Op::Submit(req)) => {
+                            // `admit` takes the request by value (the
+                            // payload moves into the queue), so the span
+                            // fields are captured first.
+                            let (id, n) = (req.id, req.n);
                             let tiles = {
-                                let _admit = obs::span(obs::SpanKind::Admit)
-                                    .req(req.id)
-                                    .n(req.n)
-                                    .start();
-                                batcher.admit(&req)
+                                let _admit =
+                                    obs::span(obs::SpanKind::Admit).req(id).n(n).start();
+                                batcher.admit(req)
                             };
                             for tile in tiles {
                                 let _ = pool.submit(tile);
@@ -198,9 +229,16 @@ impl FftService {
             })
             .context("spawning batcher thread")?;
 
-        Ok(FftService { admit_tx, engine, metrics, planner })
+        Ok(FftService {
+            admit_tx,
+            engine,
+            metrics,
+            planner,
+            default_deadline: config.default_deadline,
+        })
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn submit_request(
         &self,
         n: usize,
@@ -208,13 +246,26 @@ impl FftService {
         precision: Precision,
         data: SplitComplex,
         lines: usize,
+        deadline: Option<Instant>,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
         // Process-global ids: they key the async trace spans, so two
         // coordinators in one process must never mint the same id.
         let id = obs::next_request_id();
         let (tx, rx) = mpsc::channel();
-        self.submit_routed(n, kind, precision, data, lines, id, tx)?;
+        // Resolve the deadline once, here at the front door: an explicit
+        // per-request instant wins; otherwise the configured default
+        // budget anchors at now. `submit_routed` takes the resolved
+        // value verbatim so sharded sub-requests inherit their parent's
+        // instant instead of re-anchoring per shard.
+        let deadline = self.resolve_deadline(deadline);
+        self.submit_routed(n, kind, precision, data, lines, id, deadline, tx)?;
         Ok((id, rx))
+    }
+
+    /// Apply the front-door deadline policy: explicit wins, else the
+    /// configured default budget from now, else none.
+    pub(crate) fn resolve_deadline(&self, explicit: Option<Instant>) -> Option<Instant> {
+        explicit.or_else(|| self.default_deadline.map(|d| Instant::now() + d))
     }
 
     /// Submission with a caller-minted request id and a caller-owned
@@ -223,6 +274,10 @@ impl FftService {
     /// into one collector channel and the id keys the reassembly table.
     /// Ids only have to be unique per reply channel — a shard's own
     /// counter and a parent's sub-request counter never meet.
+    ///
+    /// `deadline` is already resolved (see [`Self::resolve_deadline`]):
+    /// this path never applies the default, which keeps sheds
+    /// deterministic across the sharded==single contract.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn submit_routed(
         &self,
@@ -232,6 +287,7 @@ impl FftService {
         data: SplitComplex,
         lines: usize,
         id: RequestId,
+        deadline: Option<Instant>,
         reply: mpsc::Sender<FftResponse>,
     ) -> Result<()> {
         let tag = obs::OpTag::of(&kind);
@@ -249,6 +305,7 @@ impl FftService {
             data,
             lines,
             submitted_at: Instant::now(),
+            deadline,
             reply,
         };
         req.validate()?;
@@ -285,9 +342,25 @@ impl FftService {
         lines: usize,
         precision: Precision,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.submit_prec_deadline(n, direction, data, lines, precision, None)
+    }
+
+    /// [`Self::submit_prec`] with an explicit absolute deadline: if it
+    /// passes before the request's tiles dispatch, the request is shed
+    /// (its reply carries a `shed: ...` error). `None` falls back to
+    /// the configured `APPLEFFT_DEADLINE_MS` default budget.
+    pub fn submit_prec_deadline(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+        precision: Precision,
+        deadline: Option<Instant>,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
         // Planner enforces the synthesis rules (supported sizes).
         self.planner.plan(n, direction)?;
-        self.submit_request(n, RequestKind::Fft(direction), precision, data, lines)
+        self.submit_request(n, RequestKind::Fft(direction), precision, data, lines, deadline)
     }
 
     /// Blocking convenience: submit and wait.
@@ -355,12 +428,25 @@ impl FftService {
         data: SplitComplex,
         lines: usize,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.submit_matched_deadline(filter, data, lines, None)
+    }
+
+    /// [`Self::submit_matched`] with an explicit absolute deadline
+    /// (same shed semantics as [`Self::submit_prec_deadline`]).
+    pub fn submit_matched_deadline(
+        &self,
+        filter: &FilterHandle,
+        data: SplitComplex,
+        lines: usize,
+        deadline: Option<Instant>,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
         self.submit_request(
             filter.n,
             RequestKind::MatchedFilter(filter.spec.clone()),
             filter.precision,
             data,
             lines,
+            deadline,
         )
     }
 
@@ -387,12 +473,26 @@ impl FftService {
         lines: usize,
         precision: Precision,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.submit_fft2d_deadline(n, direction, data, lines, precision, None)
+    }
+
+    /// [`Self::submit_fft2d_prec`] with an explicit absolute deadline
+    /// (same shed semantics as [`Self::submit_prec_deadline`]).
+    pub fn submit_fft2d_deadline(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+        precision: Precision,
+        deadline: Option<Instant>,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
         // Both dimensions are transform lengths: the planner must
         // support each (the request validates this too, but failing
         // here keeps the error synchronous like submit_prec).
         self.planner.plan(n, direction)?;
         self.planner.plan(lines, direction)?;
-        self.submit_request(n, RequestKind::Fft2d(direction), precision, data, lines)
+        self.submit_request(n, RequestKind::Fft2d(direction), precision, data, lines, deadline)
     }
 
     /// Blocking 2D FFT at the process-default precision.
@@ -454,6 +554,7 @@ impl FftService {
             range.precision,
             data,
             lines,
+            None,
         )
     }
 
@@ -536,6 +637,7 @@ mod tests {
             workers: 2,
             warm: false,
             shards: 1,
+            ..Default::default()
         })
         .unwrap()
     }
@@ -557,6 +659,57 @@ mod tests {
             ServiceConfig::default_shards(),
             ServiceConfig::parse_shards(current.as_deref())
         );
+    }
+
+    #[test]
+    fn deadline_ms_parsing() {
+        // Pure-function test, same rationale as shard_count_parsing.
+        assert_eq!(ServiceConfig::parse_deadline_ms(None), None);
+        assert_eq!(
+            ServiceConfig::parse_deadline_ms(Some("250")),
+            Some(Duration::from_millis(250))
+        );
+        assert_eq!(
+            ServiceConfig::parse_deadline_ms(Some(" 1.5 ")),
+            Some(Duration::from_micros(1_500)),
+            "fractional milliseconds and whitespace tolerated"
+        );
+        assert_eq!(ServiceConfig::parse_deadline_ms(Some("0")), None, "zero = no deadline");
+        assert_eq!(ServiceConfig::parse_deadline_ms(Some("-5")), None);
+        assert_eq!(ServiceConfig::parse_deadline_ms(Some("inf")), None);
+        assert_eq!(ServiceConfig::parse_deadline_ms(Some("garbage")), None);
+        assert_eq!(ServiceConfig::parse_deadline_ms(Some("")), None);
+        let current = std::env::var("APPLEFFT_DEADLINE_MS").ok();
+        assert_eq!(
+            ServiceConfig::default_deadline(),
+            ServiceConfig::parse_deadline_ms(current.as_deref())
+        );
+    }
+
+    #[test]
+    fn explicit_deadline_sheds_expired_request() {
+        // A request that arrives already expired is shed at admission:
+        // the reply is the shed error, and the shed/deadline-miss
+        // counters move while `failures` stays untouched.
+        let svc = native_service();
+        let x = SplitComplex::zeros(256 * 2);
+        let (_, rx) = svc
+            .submit_prec_deadline(
+                256,
+                Direction::Forward,
+                x,
+                2,
+                Precision::F32,
+                Some(Instant::now()),
+            )
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        let err = resp.result.unwrap_err();
+        assert!(err.starts_with("shed"), "shed error expected, got: {err}");
+        let m = svc.drain().unwrap();
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.failures, 0, "sheds are not failures");
+        assert_eq!((m.requests, m.lines_in), (1, 2), "shed traffic still counts");
     }
 
     #[test]

@@ -58,7 +58,7 @@ use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Round-robin line striping: parent line `l` is assigned to lane
 /// `l % lanes`. Returns one (possibly empty) parent-line-index list per
@@ -198,6 +198,11 @@ struct SubEntry {
     kind: RequestKind,
     precision: Precision,
     data: SplitComplex,
+    /// Parent's absolute deadline, resolved once at the sharded front
+    /// door — every sub-request (and any shard-death requeue of it)
+    /// carries the same instant, so sheds are deterministic across
+    /// shard counts.
+    deadline: Option<Instant>,
     /// True once a shard death has requeued this entry: its next
     /// admission is a re-admission, compensated in the merged metrics.
     requeued: bool,
@@ -232,6 +237,11 @@ struct Inner {
     requeued_requests: AtomicU64,
     requeued_lines: AtomicU64,
     backend_used: Backend,
+    /// Deadline budget applied at THIS front door to requests without an
+    /// explicit one. The per-shard services never apply their own
+    /// default (sub-requests enter through `submit_routed`), so the
+    /// resolved instant is decided exactly once.
+    default_deadline: Option<Duration>,
 }
 
 /// A filter registered on every shard of a [`ShardedFftService`]. The
@@ -358,6 +368,7 @@ impl ShardedFftService {
                 requeued_requests: AtomicU64::new(0),
                 requeued_lines: AtomicU64::new(0),
                 backend_used,
+                default_deadline: config.default_deadline,
             }),
         })
     }
@@ -437,9 +448,10 @@ impl ShardedFftService {
             } else {
                 entry.data.clone()
             };
+            let deadline = entry.deadline;
             let was_requeued = entry.requeued;
             self.inner.inflight.lock().unwrap().insert(sub_id, entry);
-            match svc.submit_routed(n, kind, precision, payload, lines, sub_id, reply) {
+            match svc.submit_routed(n, kind, precision, payload, lines, sub_id, deadline, reply) {
                 Ok(()) => {
                     if was_requeued {
                         // The dead shard's final snapshot already
@@ -481,6 +493,14 @@ impl ShardedFftService {
         super::request::validate_shape(n, lines, data.len())
     }
 
+    /// Front-door deadline policy (mirrors
+    /// [`FftService::resolve_deadline`]): explicit wins, else the
+    /// configured default budget anchors at now. Resolved exactly once
+    /// per client request — every sub-request inherits the instant.
+    fn resolve_deadline(&self, explicit: Option<Instant>) -> Option<Instant> {
+        explicit.or_else(|| self.inner.default_deadline.map(|d| Instant::now() + d))
+    }
+
     /// Async submission at the process-default precision.
     pub fn submit(
         &self,
@@ -503,7 +523,23 @@ impl ShardedFftService {
         lines: usize,
         precision: Precision,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.submit_prec_deadline(n, direction, data, lines, precision, None)
+    }
+
+    /// [`Self::submit_prec`] with an explicit absolute deadline (shed
+    /// semantics of [`FftService::submit_prec_deadline`]; every striped
+    /// sub-request carries the same resolved instant).
+    pub fn submit_prec_deadline(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+        precision: Precision,
+        deadline: Option<Instant>,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
         self.validate_shape(n, &data, lines)?;
+        let deadline = self.resolve_deadline(deadline);
         let alive = self.alive();
         anyhow::ensure!(!alive.is_empty(), "all shards dead");
         // Ids come from the process-global sequence so async trace spans
@@ -528,6 +564,7 @@ impl ShardedFftService {
                 kind: RequestKind::Fft(direction),
                 precision,
                 data,
+                deadline,
                 requeued: false,
             });
             return Ok((id, rx));
@@ -545,6 +582,7 @@ impl ShardedFftService {
                 kind: RequestKind::Fft(direction),
                 precision,
                 data: payload,
+                deadline,
                 requeued: false,
             });
         }
@@ -617,7 +655,19 @@ impl ShardedFftService {
         data: SplitComplex,
         lines: usize,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.submit_matched_deadline(filter, data, lines, None)
+    }
+
+    /// [`Self::submit_matched`] with an explicit absolute deadline.
+    pub fn submit_matched_deadline(
+        &self,
+        filter: &ShardFilterHandle,
+        data: SplitComplex,
+        lines: usize,
+        deadline: Option<Instant>,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
         self.validate_shape(filter.n, &data, lines)?;
+        let deadline = self.resolve_deadline(deadline);
         let (home, handle) = filter.resolve(self)?;
         let id = crate::obs::next_request_id();
         let (tx, rx) = mpsc::channel();
@@ -630,6 +680,7 @@ impl ShardedFftService {
             kind: RequestKind::MatchedFilter(handle.spec().clone()),
             precision: filter.precision,
             data,
+            deadline,
             requeued: false,
         });
         Ok((id, rx))
@@ -708,6 +759,7 @@ impl ShardedFftService {
     /// reassembled by line index (exactly the plain-FFT striping rule).
     /// Blocks until every line is home; returns the reassembled phase
     /// output plus the lane-max queue/exec times.
+    #[allow(clippy::too_many_arguments)]
     fn run_phase_striped(
         &self,
         n: usize,
@@ -715,6 +767,7 @@ impl ShardedFftService {
         data: SplitComplex,
         precision: Precision,
         kind: &PhaseKind,
+        deadline: Option<Instant>,
     ) -> Result<(SplitComplex, f64, f64)> {
         let alive = self.alive();
         anyhow::ensure!(!alive.is_empty(), "all shards dead");
@@ -730,6 +783,7 @@ impl ShardedFftService {
                 kind: kind.for_slot(alive[0]),
                 precision,
                 data,
+                deadline,
                 requeued: false,
             });
         } else {
@@ -746,6 +800,7 @@ impl ShardedFftService {
                     kind: kind.for_slot(alive[lane]),
                     precision,
                     data: payload,
+                    deadline,
                     requeued: false,
                 });
             }
@@ -771,6 +826,7 @@ impl ShardedFftService {
         precision: Precision,
         row_kind: PhaseKind,
         col_kind: PhaseKind,
+        deadline: Option<Instant>,
         reply: mpsc::Sender<FftResponse>,
     ) {
         // The corner turns below run on THIS orchestrator thread, so the
@@ -794,7 +850,7 @@ impl ShardedFftService {
                     .n(cols)
                     .precision(precision)
                     .start();
-                self.run_phase_striped(cols, rows, data, precision, &row_kind)?
+                self.run_phase_striped(cols, rows, data, precision, &row_kind, deadline)?
             };
             let rowbuf = rows.max(cols);
             let (mut bre, mut bim) = (BfpVec::new(), BfpVec::new());
@@ -822,7 +878,7 @@ impl ShardedFftService {
                     .n(rows)
                     .precision(precision)
                     .start();
-                self.run_phase_striped(rows, cols, turned, precision, &col_kind)?
+                self.run_phase_striped(rows, cols, turned, precision, &col_kind, deadline)?
             };
             // Exchange back: (cols x rows) -> (rows x cols).
             let mut out = SplitComplex::zeros(rows * cols);
@@ -885,7 +941,22 @@ impl ShardedFftService {
         lines: usize,
         precision: Precision,
     ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
+        self.submit_fft2d_deadline(n, direction, data, lines, precision, None)
+    }
+
+    /// [`Self::submit_fft2d_prec`] with an explicit absolute deadline
+    /// (both decomposed phases' sub-requests carry the same instant).
+    pub fn submit_fft2d_deadline(
+        &self,
+        n: usize,
+        direction: Direction,
+        data: SplitComplex,
+        lines: usize,
+        precision: Precision,
+        deadline: Option<Instant>,
+    ) -> Result<(RequestId, mpsc::Receiver<FftResponse>)> {
         self.validate_2d(n, &data, lines)?;
+        let deadline = self.resolve_deadline(deadline);
         let alive = self.alive();
         anyhow::ensure!(!alive.is_empty(), "all shards dead");
         let id = crate::obs::next_request_id();
@@ -902,6 +973,7 @@ impl ShardedFftService {
                 kind: RequestKind::Fft2d(direction),
                 precision,
                 data,
+                deadline,
                 requeued: false,
             });
             return Ok((id, rx));
@@ -919,6 +991,7 @@ impl ShardedFftService {
                     precision,
                     PhaseKind::Uniform(kind.clone()),
                     PhaseKind::Uniform(kind),
+                    deadline,
                     tx,
                 )
             })
@@ -985,6 +1058,7 @@ impl ShardedFftService {
         let alive = self.alive();
         anyhow::ensure!(!alive.is_empty(), "all shards dead");
         let precision = range.precision;
+        let deadline = self.resolve_deadline(None);
         let id = crate::obs::next_request_id();
         let (tx, rx) = mpsc::channel();
         if alive.len() == 1 {
@@ -1002,6 +1076,7 @@ impl ShardedFftService {
                 kind,
                 precision,
                 data,
+                deadline,
                 requeued: false,
             });
             return Ok((id, rx));
@@ -1020,6 +1095,7 @@ impl ShardedFftService {
                     precision,
                     PhaseKind::PerShard(row_specs),
                     PhaseKind::PerShard(col_specs),
+                    deadline,
                     tx,
                 )
             })
@@ -1168,6 +1244,7 @@ impl ShardedFftService {
             workers: 2,
             warm: false,
             shards,
+            ..Default::default()
         })
     }
 }
@@ -1210,6 +1287,7 @@ mod tests {
             workers: 2,
             warm: false,
             shards: 1,
+            ..Default::default()
         })
         .unwrap();
         let sharded = ShardedFftService::start_native(3).unwrap();
@@ -1275,6 +1353,34 @@ mod tests {
     }
 
     #[test]
+    fn shed_counters_merge_across_shards() {
+        let sharded = ShardedFftService::start_native(2).unwrap();
+        let mut rng = Rng::new(0x5D);
+        let (n, lines) = (256usize, 4usize);
+        let x = SplitComplex { re: rng.signal(n * lines), im: rng.signal(n * lines) };
+        // Arrives already expired: both striped sub-requests (two lines
+        // on each shard) are shed at their shard's admission, and the
+        // client sees exactly one shed reply.
+        let (_, rx) = sharded
+            .submit_prec_deadline(
+                n,
+                Direction::Forward,
+                x,
+                lines,
+                Precision::F32,
+                Some(Instant::now()),
+            )
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        let err = resp.result.unwrap_err();
+        assert!(err.starts_with("shed"), "shed error expected, got: {err}");
+        let m = sharded.drain().unwrap();
+        assert_eq!(m.shed, 2, "one shed per shard, summed by the merged snapshot");
+        assert_eq!(m.failures, 0, "sheds are not failures");
+        assert_eq!(m.lines_in, 4, "shed traffic still counts in lines telemetry");
+    }
+
+    #[test]
     fn sharded_fft2d_is_bitwise_single_service() {
         let single = FftService::start(ServiceConfig {
             backend: Backend::Native,
@@ -1282,6 +1388,7 @@ mod tests {
             workers: 2,
             warm: false,
             shards: 1,
+            ..Default::default()
         })
         .unwrap();
         let sharded = ShardedFftService::start_native(3).unwrap();
@@ -1312,6 +1419,7 @@ mod tests {
             workers: 2,
             warm: false,
             shards: 1,
+            ..Default::default()
         })
         .unwrap();
         let sharded = ShardedFftService::start_native(2).unwrap();
@@ -1348,6 +1456,7 @@ mod tests {
             workers: 2,
             warm: false,
             shards: 1,
+            ..Default::default()
         })
         .unwrap();
         let sharded = ShardedFftService::start_native(1).unwrap();

@@ -250,6 +250,7 @@ mod tests {
             data: data.clone(),
             lines,
             submitted_at: Instant::now(),
+            deadline: None,
             reply: tx,
         };
         let acc = Accumulator::new(&req);

@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
                  usage: applefft <subcommand> [options]\n\n\
                  subcommands:\n\
                  \x20 serve       [--requests 200] [--workers 2] [--max-wait-ms 2] [--shards 1]\n\
+                 \x20             [--slo-ms 50 [--load poisson|diurnal|bursty]]\n\
                  \x20 validate    [--backend auto|pjrt|native]\n\
                  \x20 plan        [--n 4096]\n\
                  \x20 sim-params\n\
@@ -73,13 +74,17 @@ fn backend_from(args: &Args) -> Backend {
 /// striped across `--shards` worker shards (default `APPLEFFT_SHARDS`).
 /// With `--trace <file>` (or `--trace synthetic --rate <hz>`), runs an
 /// open-loop trace replay and reports latency percentiles — overall and
-/// per shard — instead.
+/// per shard — instead. With `--slo-ms` (optionally `--load
+/// poisson|diurnal|bursty`), drives the traffic shaper against a latency
+/// SLO and reports shed rate and goodput.
 fn serve(args: &Args) -> anyhow::Result<()> {
     if args.flag("help") {
         println!(
             "applefft serve — batched FFT service\n\n\
              options: [--requests 200] [--workers 2] [--max-wait-ms 2] [--shards N]\n\
              \x20        [--clients 4] [--warm] [--trace <file>|synthetic [--rate hz]]\n\
+             \x20        [--slo-ms <ms> [--load poisson|diurnal|bursty] [--rate hz]]\n\
+             \x20          (open-loop traffic run against an SLO: shed rate + goodput)\n\
              \x20        [--stats-text]  (append the Prometheus-style exposition)\n"
         );
         print!("{}", applefft::config::env_knobs_help());
@@ -96,7 +101,43 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         workers,
         warm: args.flag("warm"),
         shards,
+        ..Default::default()
     })?;
+
+    if args.get("slo-ms").is_some() || args.get("load").is_some() {
+        use applefft::coordinator::replay::{replay_slo, ArrivalProfile, Trace};
+        let profile: ArrivalProfile = args.get_str("load", "poisson").parse()?;
+        let slo_ms = args.get_f64("slo-ms", 50.0)?;
+        let rate = args.get_f64("rate", 500.0)?;
+        let secs = args.get_f64("duration-s", 2.0)?;
+        let trace = Trace::traffic(profile, rate, std::time::Duration::from_secs_f64(secs), 42);
+        println!(
+            "traffic run: {profile:?} at {rate:.0} rps nominal for {secs:.1}s, \
+             SLO {slo_ms} ms, {} requests, {} shard(s)",
+            trace.entries.len(),
+            svc.shard_count()
+        );
+        let r =
+            replay_slo(&svc, &trace, std::time::Duration::from_secs_f64(slo_ms / 1e3), 43)?;
+        println!(
+            "\noffered {:.0} rps: {} completed, {} shed ({:.1}%), {} failed",
+            r.offered_rps,
+            r.completed,
+            r.shed,
+            r.shed_rate() * 100.0,
+        );
+        println!(
+            "goodput {:.0} lines/s; latency p50 {:.0} us, p95 {:.0} us, p99 {:.0} us",
+            r.goodput_lps, r.p50_us, r.p95_us, r.p99_us
+        );
+        anyhow::ensure!(r.failed == 0, "{} requests failed outright", r.failed);
+        let m = svc.drain()?;
+        println!("\nmetrics:\n{}", m.render());
+        if args.flag("stats-text") {
+            println!("\n{}", m.render_prometheus());
+        }
+        return Ok(());
+    }
 
     if let Some(trace_arg) = args.get("trace") {
         use applefft::coordinator::replay::{replay_sharded, Trace};

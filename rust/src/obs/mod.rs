@@ -82,10 +82,15 @@ pub enum SpanKind {
     ColPhase = 15,
     /// Sync: collector reassembling shard stripes into the reply.
     Gather = 16,
+    /// Sync (instantaneous): a request shed by traffic shaping — at
+    /// admit (arrived expired) or at dispatch (deadline passed while
+    /// queued) — so load shedding shows up in traces next to the
+    /// requests it displaced.
+    Shed = 17,
 }
 
 /// Every kind, in discriminant order (used by decode and the tests).
-pub const ALL_KINDS: [SpanKind; 17] = [
+pub const ALL_KINDS: [SpanKind; 18] = [
     SpanKind::Request,
     SpanKind::Submit,
     SpanKind::Queue,
@@ -103,6 +108,7 @@ pub const ALL_KINDS: [SpanKind; 17] = [
     SpanKind::RowPhase,
     SpanKind::ColPhase,
     SpanKind::Gather,
+    SpanKind::Shed,
 ];
 
 impl SpanKind {
@@ -126,6 +132,7 @@ impl SpanKind {
             SpanKind::RowPhase => "row_phase",
             SpanKind::ColPhase => "col_phase",
             SpanKind::Gather => "gather",
+            SpanKind::Shed => "shed",
         }
     }
 

@@ -98,6 +98,7 @@ mod tests {
             workers: 2,
             warm: false,
             shards: 1,
+            ..Default::default()
         })
         .unwrap()
     }

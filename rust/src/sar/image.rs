@@ -213,6 +213,7 @@ mod tests {
             workers: 2,
             warm: false,
             shards: 1,
+            ..Default::default()
         })
         .unwrap();
         let mut rng = Rng::new(500);
@@ -241,6 +242,7 @@ mod tests {
             workers: 2,
             warm: false,
             shards: 1,
+            ..Default::default()
         })
         .unwrap();
         let mut rng = Rng::new(501);

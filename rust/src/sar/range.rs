@@ -292,6 +292,7 @@ mod tests {
             workers: 2,
             warm: false,
             shards: 1,
+            ..Default::default()
         })
         .unwrap()
     }

@@ -78,6 +78,7 @@ fn nan_and_inf_inputs_do_not_crash() {
         workers: 1,
         warm: false,
         shards: 1,
+        ..Default::default()
     })
     .unwrap();
     let n = 256;
@@ -100,6 +101,7 @@ fn zero_input_gives_zero_spectrum() {
         workers: 1,
         warm: false,
         shards: 1,
+        ..Default::default()
     })
     .unwrap();
     let y = svc.fft(512, Direction::Forward, SplitComplex::zeros(512), 1).unwrap();
@@ -114,6 +116,7 @@ fn drain_on_idle_service_is_noop() {
         workers: 1,
         warm: false,
         shards: 1,
+        ..Default::default()
     })
     .unwrap();
     svc.drain().unwrap();
@@ -131,6 +134,7 @@ fn responses_survive_dropped_receivers() {
         workers: 1,
         warm: false,
         shards: 1,
+        ..Default::default()
     })
     .unwrap();
     let mut rng = Rng::new(600);
@@ -172,6 +176,7 @@ fn oversize_line_count_still_correct() {
         workers: 2,
         warm: false,
         shards: 1,
+        ..Default::default()
     })
     .unwrap();
     let planner = applefft::fft::plan::NativePlanner::new();

@@ -31,6 +31,7 @@ fn recorder_never_constructed_while_histograms_still_fill() {
         workers: 2,
         warm: false,
         shards: 1,
+        ..Default::default()
     })
     .unwrap();
     let mut rng = Rng::new(0xD15AB1ED);

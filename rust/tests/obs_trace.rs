@@ -39,6 +39,7 @@ fn config(shards: usize) -> ServiceConfig {
         workers: 2,
         warm: false,
         shards,
+        ..Default::default()
     }
 }
 

@@ -533,6 +533,7 @@ fn prop_service_never_drops_or_corrupts() {
         workers: 3,
         warm: false,
         shards: 1,
+        ..Default::default()
     })
     .unwrap();
     let planner = NativePlanner::new();
@@ -571,6 +572,7 @@ fn prop_padding_is_invisible() {
         workers: 2,
         warm: false,
         shards: 1,
+        ..Default::default()
     })
     .unwrap();
     let planner = NativePlanner::new();

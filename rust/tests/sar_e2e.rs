@@ -18,6 +18,7 @@ fn service(backend: Backend) -> FftService {
         workers: 2,
         warm: false,
         shards: 1,
+        ..Default::default()
     })
     .unwrap()
 }

@@ -17,6 +17,7 @@ fn service(backend: Backend) -> FftService {
         workers: 2,
         warm: false,
         shards: 1,
+        ..Default::default()
     })
     .unwrap()
 }
@@ -53,6 +54,7 @@ fn async_submissions_coalesce_into_tiles() {
         workers: 2,
         warm: false,
         shards: 1,
+        ..Default::default()
     })
     .unwrap();
     let mut rng = Rng::new(201);
@@ -99,6 +101,7 @@ fn drain_flushes_partials_immediately() {
         workers: 1,
         warm: false,
         shards: 1,
+        ..Default::default()
     })
     .unwrap();
     let mut rng = Rng::new(203);
@@ -186,6 +189,7 @@ fn arbitrary_sizes_through_sharded_front_door() {
         workers: 2,
         warm: false,
         shards: 3,
+        ..Default::default()
     })
     .unwrap();
     let planner = NativePlanner::new();
